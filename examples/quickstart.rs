@@ -1,0 +1,73 @@
+//! Quickstart: one private CipherPrune inference end-to-end, validated
+//! against (a) the Rust plaintext reference and (b) the AOT XLA oracle
+//! artifact produced by `make artifacts` — all three layers composing.
+//!
+//!     cargo run --release --example quickstart
+
+use cipherprune::coordinator::{run_inference, EngineConfig, EngineKind};
+use cipherprune::nn::{forward, ForwardOptions, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
+use cipherprune::util::bench::{fmt_bytes, fmt_duration};
+
+fn main() {
+    // 1. model + input — trained artifacts when present, salient init otherwise
+    let weights = ModelWeights::load(&artifact("weights.bin")).unwrap_or_else(|_| {
+        ModelWeights::salient(&cipherprune::nn::ModelConfig::tiny(), 42)
+    });
+    let cfg = weights.config.clone();
+    let schedule = ThresholdSchedule::load(&artifact("thresholds.json"))
+        .unwrap_or_else(|| ThresholdSchedule::default_for(cfg.n_layers))
+        .fit_layers(cfg.n_layers);
+    let sample = &Workload::qnli_like(&cfg, 16).batch(1, 3)[0];
+    println!("model {} | {} tokens ({} real)", cfg.name, sample.ids.len(), sample.real_len);
+
+    // 2. private inference: server P0 holds weights, client P1 holds tokens;
+    //    both parties run in-process over a byte-counted channel.
+    let mut ec = EngineConfig::new(EngineKind::CipherPrune, cfg.n_layers);
+    ec.he_n = 4096;
+    ec.schedule = schedule.clone();
+    let private = run_inference(&ec, &weights, &sample.ids);
+    println!(
+        "\n[private]   logits {:?}  pred {}  ({}, {} traffic)",
+        private.logits,
+        private.predicted(),
+        fmt_duration(private.wall_s),
+        fmt_bytes(private.total_stats().bytes as f64),
+    );
+    for (i, s) in private.layer_stats.iter().enumerate() {
+        println!("  layer {i}: {} → {} tokens ({} high-degree)", s.n_in, s.n_kept, s.n_high);
+    }
+
+    // 3. plaintext reference (same pruning semantics, f64)
+    let reference = forward(&weights, &sample.ids, &ForwardOptions::cipherprune(schedule, true));
+    println!("[reference] logits {:?}  pred {}", reference.logits, reference.predicted());
+    let max_err = private
+        .logits
+        .iter()
+        .zip(&reference.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("  max |Δ| vs reference: {max_err:.4} (fixed-point noise)");
+    assert!(max_err < 0.3, "protocol must track the reference");
+
+    // 4. XLA oracle (Layer 1+2 lowered to HLO, executed via PJRT)
+    let hlo = artifact("model.hlo.txt");
+    if hlo.exists() {
+        let meta = std::fs::read_to_string(artifact("meta.json")).unwrap();
+        let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
+        let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(16);
+        let n = seq.min(sample.ids.len());
+        let mut onehot = vec![0f32; seq * cfg.vocab];
+        for (i, &id) in sample.ids.iter().take(n).enumerate() {
+            onehot[i * cfg.vocab + id] = 1.0;
+        }
+        let mut rt = XlaRuntime::cpu().expect("PJRT");
+        let out = rt
+            .run_f32(&hlo, &[TensorF32::new(onehot, vec![seq as i64, cfg.vocab as i64])])
+            .expect("oracle");
+        println!("[xla oracle] logits {:?} (unpruned polynomial forward)", out[0].data);
+    } else {
+        println!("[xla oracle] skipped — run `make artifacts`");
+    }
+    println!("\nquickstart OK");
+}

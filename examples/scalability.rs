@@ -1,0 +1,47 @@
+//! Scalability demo (mini Fig. 9): runtime and traffic of BOLT w/o W.E.,
+//! BOLT, and CipherPrune as the input length grows. The quadratic SoftMax
+//! cost dominates the unpruned engines; CipherPrune's progressive pruning
+//! flattens the curve.
+//!
+//!     cargo run --release --example scalability
+//!     SCALE_SEQS="16,32,64" cargo run --release --example scalability
+
+use cipherprune::coordinator::{run_inference, EngineConfig, EngineKind};
+use cipherprune::net::NetModel;
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::util::bench::{fmt_bytes, fmt_duration, Table};
+
+fn main() {
+    let seqs: Vec<usize> = std::env::var("SCALE_SEQS")
+        .unwrap_or_else(|_| "8,16,32".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::salient(&cfg, 42);
+
+    let engines = [EngineKind::BoltNoWe, EngineKind::Bolt, EngineKind::CipherPrune];
+    let mut table = Table::new(
+        "runtime vs input length (tiny model, LAN-modeled)",
+        &["tokens", "engine", "compute", "traffic", "LAN total", "kept@last"],
+    );
+    for &seq in &seqs {
+        let sample = &Workload::qnli_like(&cfg, seq).batch(1, 5)[0];
+        for kind in engines {
+            let mut ec = EngineConfig::new(kind, cfg.n_layers);
+            ec.he_n = 2048;
+            let r = run_inference(&ec, &weights, &sample.ids);
+            let t = r.total_stats();
+            table.row(vec![
+                seq.to_string(),
+                kind.name().to_string(),
+                fmt_duration(r.wall_s),
+                fmt_bytes(t.bytes as f64),
+                fmt_duration(r.wall_s + NetModel::LAN.time(&t)),
+                r.layer_stats.last().map(|s| s.n_kept).unwrap_or(0).to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nCipherPrune's curve flattens as pruning removes quadratic SoftMax work.");
+}

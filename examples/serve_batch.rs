@@ -1,0 +1,94 @@
+//! End-to-end serving driver (the repo's headline validation workload):
+//! a router with a length-bucketed dynamic batcher serves a mixed stream of
+//! private-inference requests against trained-or-salient weights, reporting
+//! per-request latency, throughput, accuracy vs ground truth, and the
+//! per-engine metrics registry.
+//!
+//!     cargo run --release --example serve_batch            # quick
+//!     SERVE_REQS=16 SERVE_SEQ=32 cargo run --release --example serve_batch
+
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    BatchPolicy, EngineKind, InferenceRequest, Router, RouterConfig,
+};
+use cipherprune::nn::{ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::runtime::artifact;
+use cipherprune::util::bench::fmt_duration;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n_req = env_usize("SERVE_REQS", 8);
+    let seq = env_usize("SERVE_SEQ", 16);
+    let weights = Arc::new(ModelWeights::load(&artifact("weights.bin")).unwrap_or_else(
+        |_| ModelWeights::salient(&cipherprune::nn::ModelConfig::tiny(), 42),
+    ));
+    let cfg = weights.config.clone();
+    let schedule = ThresholdSchedule::load(&artifact("thresholds.json"))
+        .unwrap_or_else(|| ThresholdSchedule::default_for(cfg.n_layers))
+        .fit_layers(cfg.n_layers);
+
+    let mut router = Router::new(
+        weights,
+        RouterConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                linger: std::time::Duration::from_millis(10),
+                min_bucket: 8,
+                max_tokens: cfg.max_seq,
+            },
+            workers: 4,
+            he_n: 4096,
+            schedule: Some(schedule),
+        },
+    );
+
+    // mixed stream: short and long requests, two engines
+    let wl_short = Workload::qnli_like(&cfg, seq);
+    let wl_long = Workload::qnli_like(&cfg, (seq * 2).min(cfg.max_seq));
+    let mut reqs = Vec::new();
+    let mut truth = Vec::new();
+    for (i, s) in wl_short.batch(n_req / 2, 21).into_iter().enumerate() {
+        truth.push(s.label);
+        reqs.push(InferenceRequest { id: i as u64, ids: s.ids, engine: EngineKind::CipherPrune });
+    }
+    for (j, s) in wl_long.batch(n_req - n_req / 2, 22).into_iter().enumerate() {
+        truth.push(s.label);
+        reqs.push(InferenceRequest {
+            id: (n_req / 2 + j) as u64,
+            ids: s.ids,
+            engine: if j % 2 == 0 { EngineKind::CipherPrune } else { EngineKind::Bolt },
+        });
+    }
+
+    println!("serving {n_req} mixed-length private requests…");
+    let t0 = std::time::Instant::now();
+    let resp = router.process(reqs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut correct = 0usize;
+    for r in &resp {
+        let ok = r.result.predicted() == truth[r.id as usize];
+        correct += ok as usize;
+        println!(
+            "  req {:>2}  bucket {:>3}  latency {:>9}  pred {} {}",
+            r.id,
+            r.bucket,
+            fmt_duration(r.latency_s),
+            r.result.predicted(),
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!(
+        "\nthroughput {:.2} req/s | accuracy {}/{} | wall {}",
+        resp.len() as f64 / wall,
+        correct,
+        resp.len(),
+        fmt_duration(wall)
+    );
+    println!("\n{}", router.metrics.report());
+    assert_eq!(resp.len(), n_req);
+}

@@ -1,0 +1,124 @@
+"""AOT entry point: lower the Layer-2 model (with Layer-1 Pallas kernels
+inlined) to HLO **text** and emit every artifact the Rust side consumes.
+
+Artifacts (under --out-dir, default ../artifacts):
+
+- ``model.hlo.txt``      -- plain-mode polynomial forward, weights embedded
+                            as constants; the Rust plaintext-oracle path.
+- ``importance.hlo.txt`` -- standalone Eq. 1 Pallas kernel (demo/validation).
+- ``weights.bin``        -- CPW1 weights for the Rust protocol engines.
+- ``thresholds.json``    -- theta/beta schedule (default ramp unless
+                            ``compile.train`` has written a learned one).
+
+HLO *text*, never ``.serialize()``: jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--model tiny] [--seq-len 16] [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import export
+from .kernels import pallas_kernels as pk
+from .model import Config, forward, init_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(params, cfg: Config, seq_len: int) -> str:
+    """Lower forward(onehot) -> (logits,) with weights baked in."""
+
+    def fn(onehot):
+        logits, _ = forward(params, onehot, cfg, mode="plain",
+                            use_kernels=True)
+        return (logits,)
+
+    spec = jax.ShapeDtypeStruct((seq_len, cfg.vocab), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_importance(heads: int, seq_len: int) -> str:
+    def fn(att):
+        return (pk.importance_scores(att),)
+
+    spec = jax.ShapeDtypeStruct((heads, seq_len, seq_len), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="tiny")
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="explicit path for model.hlo.txt (Makefile hook)")
+    args = ap.parse_args()
+
+    cfg = Config.by_name(args.model)
+    out_dir = Path(args.out).parent if args.out else Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # trained weights (compile.train output) win over fresh init, so the
+    # lowered oracle and the Rust protocol engines share one set of weights
+    wpath = out_dir / "weights.bin"
+    params = None
+    if wpath.exists():
+        try:
+            import jax.numpy as _jnp
+            loaded, lcfg = export.load_weights(wpath)
+            if lcfg["name"] == cfg.name:
+                params = jax.tree.map(
+                    lambda a: _jnp.asarray(a, _jnp.float32), loaded)
+                print(f"re-lowering trained weights from {wpath}")
+        except Exception as e:  # fall back to fresh init
+            print(f"ignoring {wpath}: {e}")
+    if params is None:
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    model_path = Path(args.out) if args.out else out_dir / "model.hlo.txt"
+    text = lower_model(params, cfg, args.seq_len)
+    model_path.write_text(text)
+    print(f"wrote {model_path} ({len(text)} chars, model={cfg.name}, "
+          f"seq={args.seq_len})")
+
+    imp_path = out_dir / "importance.hlo.txt"
+    imp_path.write_text(lower_importance(cfg.heads, args.seq_len))
+    print(f"wrote {imp_path}")
+
+    export.save_weights(wpath, params, cfg)
+    print(f"wrote {wpath}")
+
+    tpath = out_dir / "thresholds.json"
+    if not tpath.exists():
+        # default progressive ramp (same shape as rust ThresholdSchedule);
+        # compile.train overwrites this with the learned schedule.
+        L = cfg.n_layers
+        theta = [0.35 + 0.55 * i / max(L - 1, 1) for i in range(L)]
+        beta = [t * (2.0 + i / max(L - 1, 1)) for i, t in enumerate(theta)]
+        tpath.write_text(json.dumps(
+            {"relative": True, "theta": theta, "beta": beta}, indent=1))
+        print(f"wrote {tpath} (default ramp)")
+    else:
+        print(f"kept existing {tpath}")
+
+    meta = dict(model=cfg.name, seq_len=args.seq_len, seed=args.seed,
+                vocab=cfg.vocab, n_classes=cfg.n_classes)
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Synthetic GLUE-like workloads (mirrors ``rust/src/nn/workload.rs``).
+
+Substitution for MNLI/QNLI/SST2/MRPC (DESIGN.md): controllable-redundancy
+token classification. Content ids occupy the upper half of the vocabulary
+and carry the label signal (sum of content ids mod n_classes); filler ids
+and PAD provide the redundancy the pruning protocols exploit.
+"""
+
+import numpy as np
+
+PAD_ID = 0
+
+# per-task generation parameters: (mean_len / seq_len ratio, redundancy)
+TASKS = {
+    "mnli": (0.55, 0.50),
+    "qnli": (0.38, 0.60),   # App. F: mean 48.5 real tokens at seq 128
+    "sst2": (0.30, 0.70),   # short, highly redundant reviews
+    "mrpc": (0.60, 0.55),
+}
+
+
+def is_content(vocab, tok):
+    return tok >= vocab // 2
+
+
+def sample_batch(rng, n, seq_len, vocab, n_classes, task="qnli"):
+    """Returns (ids [n, seq_len] int32, labels [n] int32, real_lens [n]).
+
+    The label is the majority content *class*: content ids are split into
+    n_classes contiguous bands in the upper half of the vocabulary and each
+    sample draws most of its content tokens from its label's band. This is
+    linearly separable from mean-pooled embeddings (so small models learn it
+    quickly) while still requiring the content tokens -- prune them and the
+    signal is gone, which is exactly the redundancy structure the pruning
+    experiments need.
+    """
+    ratio, redundancy = TASKS[task]
+    mean_len = max(int(seq_len * ratio), 6)
+    spread = max(mean_len // 4, 1)
+    half = vocab // 2
+    band = half // n_classes
+    ids = np.zeros((n, seq_len), dtype=np.int32)
+    labels = np.zeros(n, dtype=np.int32)
+    real_lens = np.zeros(n, dtype=np.int32)
+    for b in range(n):
+        real = int(np.clip(mean_len + rng.integers(-spread, spread + 1),
+                           4, seq_len))
+        n_content = int(np.clip(round(real * (1.0 - redundancy)), 1, real))
+        y = int(rng.integers(n_classes))
+        counts = np.zeros(n_classes, dtype=np.int64)
+        for i in range(real):
+            take_content = (i * n_content) // real != ((i + 1) * n_content) // real
+            if take_content:
+                cls = y if rng.random() < 0.75 else int(rng.integers(n_classes))
+                t = half + cls * band + int(rng.integers(band))
+                counts[cls] += 1
+                ids[b, i] = t
+            else:
+                ids[b, i] = int(rng.integers(1, half))
+        labels[b] = int(counts.argmax())
+        real_lens[b] = real
+    return ids, labels, real_lens

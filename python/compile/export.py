@@ -1,0 +1,108 @@
+"""Binary weight export (CPW1) and thresholds.json -- the artifact formats
+``rust/src/nn/weights.rs`` / ``thresholds.rs`` load.
+
+Matrix order must match ``ModelWeights::mats``: embedding, positional, then
+per layer [wq bq wk bk wv bv wo bo ln1g ln1b wf1 bf1 wf2 bf2 ln2g ln2b],
+then w_cls, b_cls. Vectors are stored as 1 x len matrices, f64 LE.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+
+def _write_mat(f, m):
+    m = np.asarray(m, dtype=np.float64)
+    if m.ndim == 1:
+        m = m[None, :]
+    rows, cols = m.shape
+    f.write(struct.pack("<II", rows, cols))
+    f.write(m.tobytes(order="C"))
+
+
+def save_weights(path, params, cfg):
+    """Write params (from ``model.init_params``) in CPW1 format."""
+    with open(path, "wb") as f:
+        f.write(b"CPW1")
+        name = cfg.name.encode()
+        f.write(struct.pack("<I", len(name)))
+        f.write(name)
+        for v in (cfg.n_layers, cfg.dim, cfg.heads, cfg.ffn_dim, cfg.vocab,
+                  cfg.max_seq, cfg.n_classes, int(cfg.causal)):
+            f.write(struct.pack("<I", v))
+        _write_mat(f, params["emb"])
+        _write_mat(f, params["pos"])
+        for lp in params["layers"]:
+            for key in ("wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+                        "ln1g", "ln1b", "wf1", "bf1", "wf2", "bf2",
+                        "ln2g", "ln2b"):
+                _write_mat(f, lp[key])
+        _write_mat(f, params["w_cls"])
+        _write_mat(f, params["b_cls"])
+
+
+def save_thresholds(path, theta_abs, beta_abs, seq_len):
+    """Export learned absolute thresholds as the *relative* schedule Rust
+    consumes: rel = abs * n (uniform-score units, transfers across lengths).
+    """
+    data = {
+        "relative": True,
+        "trained_seq_len": seq_len,
+        "theta": [float(t) * seq_len for t in theta_abs],
+        "beta": [float(b) * seq_len for b in beta_abs],
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return data
+
+
+def load_weights(path):
+    """Read a CPW1 file back into (params, config_dict) — used by aot.py to
+    re-lower the *trained* model after ``compile.train`` has run."""
+    import numpy as np
+
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw[:4] == b"CPW1", "bad magic"
+    off = 4
+    (nlen,) = struct.unpack_from("<I", raw, off)
+    off += 4
+    name = raw[off:off + nlen].decode()
+    off += nlen
+    hdr = struct.unpack_from("<8I", raw, off)
+    off += 32
+    n_layers, dim, heads, ffn_dim, vocab, max_seq, n_classes, causal = hdr
+
+    def mat(off):
+        rows, cols = struct.unpack_from("<II", raw, off)
+        off += 8
+        m = np.frombuffer(raw, dtype="<f8", count=rows * cols, offset=off)
+        off += rows * cols * 8
+        return m.reshape(rows, cols), off
+
+    def vec(off):
+        m, off = mat(off)
+        return m[0], off
+
+    emb, off = mat(off)
+    pos, off = mat(off)
+    layers = []
+    for _ in range(n_layers):
+        lp = {}
+        for key, is_mat in (("wq", 1), ("bq", 0), ("wk", 1), ("bk", 0),
+                            ("wv", 1), ("bv", 0), ("wo", 1), ("bo", 0),
+                            ("ln1g", 0), ("ln1b", 0), ("wf1", 1), ("bf1", 0),
+                            ("wf2", 1), ("bf2", 0), ("ln2g", 0), ("ln2b", 0)):
+            if is_mat:
+                lp[key], off = mat(off)
+            else:
+                lp[key], off = vec(off)
+        layers.append(lp)
+    w_cls, off = mat(off)
+    b_cls, off = vec(off)
+    params = dict(emb=emb, pos=pos, layers=layers, w_cls=w_cls, b_cls=b_cls)
+    cfg = dict(name=name, n_layers=n_layers, dim=dim, heads=heads,
+               ffn_dim=ffn_dim, vocab=vocab, max_seq=max_seq,
+               n_classes=n_classes, causal=bool(causal))
+    return params, cfg

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels + their pure-jnp oracles."""
+
+from . import ref
+from .pallas_kernels import (
+    approx_exp,
+    gelu_poly,
+    importance_scores,
+    prune_gate,
+    softmax_taylor,
+)
+
+__all__ = [
+    "ref",
+    "approx_exp",
+    "gelu_poly",
+    "importance_scores",
+    "prune_gate",
+    "softmax_taylor",
+]

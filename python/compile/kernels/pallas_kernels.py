@@ -1,0 +1,216 @@
+"""Layer-1 Pallas kernels (CPU ``interpret=True``; see DESIGN.md
+section Hardware-Adaptation for the TPU mapping).
+
+Kernels:
+
+- ``importance_scores`` -- Eq. 1 token-importance accumulation over the
+  [H, n, n] attention maps. Tiled (head, row-tile) with a VMEM accumulator:
+  the TPU analogue of the row-parallel reduction the protocol layer runs on
+  additive shares.
+- ``gelu_poly`` -- piecewise-polynomial GELU (Eq. 7 high / Eq. 8 BOLT /
+  degree-2 reduced), Horner + predication over (token, feature) tiles.
+- ``approx_exp`` -- Eq. 6 Taylor exponential (1 + x/2^n)^(2^n), clip at T.
+- ``softmax_taylor`` -- fused row softmax (max-scan, Taylor exp, normalize)
+  over row tiles holding full key rows in VMEM.
+- ``prune_gate`` -- fused threshold gate: soft sigmoid masks for Algorithm 1
+  training, hard 0/1 masks for inference.
+
+Every kernel is checked against ``ref.py`` by ``python/tests``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True  # CPU correctness path; real-TPU lowering is compile-only.
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --------------------------------------------------------------------------
+# importance scores (Eq. 1)
+# --------------------------------------------------------------------------
+
+
+def _importance_kernel(att_ref, out_ref, *, scale):
+    h = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when((h == 0) & (r == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk = att_ref[...]  # (1, Tr, n)
+    out_ref[...] += blk.sum(axis=(0, 1)) * scale
+
+
+def importance_scores(att, row_tile=128):
+    """Eq. 1 scores from attention maps ``att`` of shape [H, n, n]."""
+    h, n, n2 = att.shape
+    assert n == n2, "attention maps are square"
+    tr = min(row_tile, n)
+    att_p = _pad_to(att, 1, tr)
+    rows = att_p.shape[1]
+    grid = (h, rows // tr)
+    out = pl.pallas_call(
+        functools.partial(_importance_kernel, scale=1.0 / (h * n)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tr, n), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((n,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), att.dtype),
+        interpret=INTERPRET,
+    )(att_p)
+    return out
+
+
+# --------------------------------------------------------------------------
+# piecewise-polynomial GELU
+# --------------------------------------------------------------------------
+
+_GELU_SPECS = {
+    # kind: (breakpoints, polys) evaluated left-to-right; rightmost is x.
+    "high": ((-5.0, -1.97, 3.0), (None, ref.P3, ref.P6)),
+    "bolt": ((-2.7, 2.7), (None, ref.P4)),
+    "low": ((-1.7626, 1.7626), (None, ref.P2)),
+}
+
+
+def _horner(coeffs, x):
+    acc = jnp.full_like(x, coeffs[-1])
+    for c in reversed(coeffs[:-1]):
+        acc = acc * x + c
+    return acc
+
+
+def _gelu_kernel(x_ref, o_ref, *, kind):
+    x = x_ref[...]
+    breaks, polys = _GELU_SPECS[kind]
+    # start from the identity tail and predicate downwards
+    y = x
+    for b, p in zip(reversed(breaks), reversed(polys)):
+        seg = jnp.zeros_like(x) if p is None else _horner(p, x)
+        y = jnp.where(x <= b, seg, y)
+    o_ref[...] = y
+
+
+def gelu_poly(x, kind="high", tile=(128, 128)):
+    """Piecewise-polynomial GELU over a 2-D tensor (tokens x features)."""
+    assert kind in _GELU_SPECS, kind
+    r, c = x.shape
+    tr, tc = min(tile[0], r), min(tile[1], c)
+    xp = _pad_to(_pad_to(x, 0, tr), 1, tc)
+    grid = (xp.shape[0] // tr, xp.shape[1] // tc)
+    out = pl.pallas_call(
+        functools.partial(_gelu_kernel, kind=kind),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=INTERPRET,
+    )(xp)
+    return out[:r, :c]
+
+
+# --------------------------------------------------------------------------
+# Taylor exponential + fused row softmax
+# --------------------------------------------------------------------------
+
+
+def _exp_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]
+    base = 1.0 + x / (2.0**n)
+    # 2^n-th power by n squarings (MXU-free, VPU friendly)
+    y = base
+    for _ in range(n):
+        y = y * y
+    o_ref[...] = jnp.where(x <= ref.EXP_CLIP_T, 0.0, y)
+
+
+def approx_exp(x, n=6, tile=(128, 128)):
+    """Eq. 6 ApproxExp over a 2-D tensor."""
+    r, c = x.shape
+    tr, tc = min(tile[0], r), min(tile[1], c)
+    xp = _pad_to(_pad_to(x, 0, tr), 1, tc)
+    grid = (xp.shape[0] // tr, xp.shape[1] // tc)
+    out = pl.pallas_call(
+        functools.partial(_exp_kernel, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=INTERPRET,
+    )(xp)
+    return out[:r, :c]
+
+
+def _softmax_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]  # (Tr, keys) -- full rows in VMEM
+    m = jnp.max(x, axis=-1, keepdims=True)
+    c = x - m
+    base = 1.0 + c / (2.0**n)
+    y = base
+    for _ in range(n):
+        y = y * y
+    e = jnp.where(c <= ref.EXP_CLIP_T, 0.0, y)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_taylor(x, n=6, row_tile=8):
+    """Fused Taylor-softmax over the last axis of a 2-D tensor."""
+    r, c = x.shape
+    tr = min(row_tile, r)
+    xp = _pad_to(x, 0, tr)
+    grid = (xp.shape[0] // tr,)
+    out = pl.pallas_call(
+        functools.partial(_softmax_kernel, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=INTERPRET,
+    )(xp)
+    return out[:r]
+
+
+# --------------------------------------------------------------------------
+# threshold gate (Algorithm 1 masks)
+# --------------------------------------------------------------------------
+
+
+def _gate_kernel(s_ref, o_ref, *, theta, temp, hard):
+    s = s_ref[...]
+    if hard:
+        o_ref[...] = (s > theta).astype(s.dtype)
+    else:
+        o_ref[...] = jax.nn.sigmoid((s - theta) / temp)
+
+
+def prune_gate(scores, theta, temp=0.01, hard=False, tile=128):
+    """Soft (sigmoid) or hard (0/1) threshold mask over a score vector."""
+    (n,) = scores.shape
+    t = min(tile, n)
+    sp = _pad_to(scores, 0, t)
+    grid = (sp.shape[0] // t,)
+    out = pl.pallas_call(
+        functools.partial(
+            _gate_kernel, theta=float(theta), temp=float(temp), hard=hard
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(sp.shape, scores.dtype),
+        interpret=INTERPRET,
+    )(sp)
+    return out[:n]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Coefficients match the Rust protocol layer exactly
+(``rust/src/protocols/gelu.rs``, ``softmax.rs``) so the three layers agree:
+Pallas kernel = this oracle = the fixed-point protocol references.
+"""
+
+import jax.numpy as jnp
+
+# --- polynomial coefficients (Appendix C / rust/src/protocols/gelu.rs) ---
+
+# Eq. 7 high-degree piecewise GELU
+P3 = (-0.50540312, -0.42226581, -0.11807613, -0.01103413)
+P6 = (0.00852632, 0.5, 0.36032927, 0.0, -0.03768820, 0.0, 0.00180675)
+# Eq. 8 BOLT baseline polynomial
+P4 = (0.02499238, 0.5, 0.31471404, 0.0, -0.01939584)
+# Reduced degree-2 polynomial (Kim et al.)
+P2 = (0.0, 0.5, 0.28367)
+
+EXP_CLIP_T = -13.0
+
+
+def poly(coeffs, x):
+    """Horner evaluation of sum_i coeffs[i] x^i."""
+    acc = jnp.full_like(x, coeffs[-1])
+    for c in reversed(coeffs[:-1]):
+        acc = acc * x + c
+    return acc
+
+
+def gelu_high_ref(x):
+    """Eq. 7: 0 | P3 | P6 | x over (-inf,-5], (-5,-1.97], (-1.97,3], (3,inf)."""
+    return jnp.where(
+        x <= -5.0,
+        0.0,
+        jnp.where(
+            x <= -1.97,
+            poly(P3, x),
+            jnp.where(x <= 3.0, poly(P6, x), x),
+        ),
+    )
+
+
+def gelu_bolt_ref(x):
+    """Eq. 8: 0 | P4 | x with breakpoints at +/-2.7."""
+    return jnp.where(x <= -2.7, 0.0, jnp.where(x <= 2.7, poly(P4, x), x))
+
+
+def gelu_low_ref(x):
+    """Reduced degree-2 GELU with breakpoints at +/-1.7626."""
+    return jnp.where(
+        x <= -1.7626, 0.0, jnp.where(x <= 1.7626, poly(P2, x), x)
+    )
+
+
+def approx_exp_ref(x, n):
+    """Eq. 6: (1 + x/2^n)^(2^n) on (T, 0], 0 below T (n = 6 high / 3 low)."""
+    base = 1.0 + x / (2.0**n)
+    y = base ** (2**n)
+    return jnp.where(x <= EXP_CLIP_T, 0.0, y)
+
+
+def softmax_taylor_ref(x, n, axis=-1):
+    """Row softmax with the Taylor exponential: exp((x - max))/sum."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = approx_exp_ref(x - m, n)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def importance_ref(att):
+    """Eq. 1: S[i] = 1/(H n) sum_h sum_j Att^h[j, i] for att [H, n, n]."""
+    h, n, _ = att.shape
+    return att.sum(axis=(0, 1)) / (h * n)

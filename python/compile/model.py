@@ -1,0 +1,223 @@
+"""Layer-2 JAX model: the paper's Transformer with crypto-aware masks.
+
+One forward-pass implementation serves three roles:
+
+- ``mode="plain"`` -- polynomial-activation forward with no pruning: the
+  AOT oracle artifact the Rust runtime executes (matches the Rust
+  ``nn::reference`` with ``Activations::Polynomial``).
+- ``mode="soft"`` -- Algorithm 1 step 2: differentiable sigmoid masks
+  M_theta / M_beta gate token outputs and blend high/low-degree activations,
+  so theta and beta receive gradients.
+- ``mode="hard"`` -- Algorithm 1 step 3: binarized masks (still *masking*
+  rather than removing tokens -- the lowered graph has static shapes; the
+  Rust protocol layer performs the actual removal).
+
+``use_kernels=True`` routes GELU / SoftMax / importance through the Pallas
+kernels (the path that is AOT-lowered); ``False`` uses the jnp oracles
+(faster under vmap for training). Both are tested identical.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import pallas_kernels as pk
+
+LN_EPS = 1e-3  # matches rust/src/protocols/layernorm.rs
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str = "tiny"
+    n_layers: int = 2
+    dim: int = 32
+    heads: int = 2
+    ffn_dim: int = 64
+    vocab: int = 64
+    max_seq: int = 64
+    n_classes: int = 2
+    causal: bool = False
+
+    @property
+    def head_dim(self):
+        return self.dim // self.heads
+
+    @staticmethod
+    def by_name(name):
+        presets = {
+            "tiny": Config(),
+            "bert-mini": Config("bert-mini", 4, 128, 4, 512, 512, 128),
+            "bert-medium": Config("bert-medium", 8, 512, 8, 2048, 512, 512),
+            "bert-base": Config("bert-base", 12, 768, 12, 3072, 512, 512),
+            "bert-large": Config("bert-large", 24, 1024, 16, 4096, 512, 512),
+            "gpt2-base": Config("gpt2-base", 12, 768, 12, 3072, 512, 512,
+                                causal=True),
+        }
+        return presets[name]
+
+
+def init_params(key, cfg: Config):
+    """BERT-style truncated-normal init (sigma chosen for fixed-point headroom)."""
+    std = 0.08
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+
+    def tn(k, shape, s=std):
+        return jax.random.truncated_normal(k, -2.0, 2.0, shape) * s
+
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + i], 6)
+        d, f = cfg.dim, cfg.ffn_dim
+        layers.append(dict(
+            wq=tn(lk[0], (d, d)), bq=jnp.zeros(d),
+            wk=tn(lk[1], (d, d)), bk=jnp.zeros(d),
+            wv=tn(lk[2], (d, d)), bv=jnp.zeros(d),
+            wo=tn(lk[3], (d, d)), bo=jnp.zeros(d),
+            ln1g=jnp.ones(d), ln1b=jnp.zeros(d),
+            wf1=tn(lk[4], (d, f)), bf1=jnp.zeros(f),
+            wf2=tn(lk[5], (f, d)), bf2=jnp.zeros(d),
+            ln2g=jnp.ones(d), ln2b=jnp.zeros(d),
+        ))
+    return dict(
+        emb=tn(ks[0], (cfg.vocab, cfg.dim), 0.5),
+        pos=tn(ks[1], (cfg.max_seq, cfg.dim), 0.05),
+        layers=layers,
+        w_cls=tn(ks[2], (cfg.dim, cfg.n_classes)),
+        b_cls=jnp.zeros(cfg.n_classes),
+    )
+
+
+def init_thresholds(cfg: Config, seq_len: int):
+    """Initial absolute theta/beta at the training length (Alg. 1 input)."""
+    u = 1.0 / seq_len
+    theta = jnp.full(cfg.n_layers, 0.3 * u)
+    beta = jnp.full(cfg.n_layers, 0.9 * u)
+    return dict(theta=theta, beta=beta)
+
+
+def _layernorm(x, g, b):
+    m = x.mean(axis=-1, keepdims=True)
+    v = ((x - m) ** 2).mean(axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + LN_EPS) * g + b
+
+
+def _gelu(x, kind, use_kernels):
+    if use_kernels:
+        return pk.gelu_poly(x, kind)
+    return {"high": ref.gelu_high_ref,
+            "bolt": ref.gelu_bolt_ref,
+            "low": ref.gelu_low_ref}[kind](x)
+
+
+def _softmax(x, n, use_kernels):
+    if use_kernels:
+        return pk.softmax_taylor(x, n)
+    return ref.softmax_taylor_ref(x, n)
+
+
+def forward(params, onehot, cfg: Config, thresholds=None, mode="plain",
+            temp=0.02, gelu_kind="high", use_kernels=False):
+    """Forward pass over a single sequence.
+
+    ``onehot``: f32[n, vocab]. Returns (logits, aux) where aux carries the
+    Algorithm 1 regularizer terms and per-layer mask activations.
+    """
+    n = onehot.shape[0]
+    d, hd, h = cfg.dim, cfg.head_dim, cfg.heads
+    x = onehot @ params["emb"] + params["pos"][:n]
+    l_prune = 0.0
+    l_approx = 0.0
+    kept = []
+    m_theta_cum = jnp.ones(n)     # cumulative soft "alive" weight
+    m_beta_prev = jnp.ones(n)     # previous layer's reduction mask (rows)
+
+    for li, lp in enumerate(params["layers"]):
+        q = x @ lp["wq"] + lp["bq"]
+        k = x @ lp["wk"] + lp["bk"]
+        v = x @ lp["wv"] + lp["bv"]
+        qh = q.reshape(n, h, hd).transpose(1, 0, 2)
+        kh = k.reshape(n, h, hd).transpose(1, 0, 2)
+        vh = v.reshape(n, h, hd).transpose(1, 0, 2)
+        logits = jnp.einsum("hik,hjk->hij", qh, kh) / jnp.sqrt(float(hd))
+        if cfg.causal:
+            mask = jnp.tril(jnp.ones((n, n), bool))
+            logits = jnp.where(mask[None], logits, -30.0)
+        if mode == "plain" or thresholds is None:
+            att = jnp.stack([_softmax(logits[i], 6, use_kernels)
+                             for i in range(h)])
+        else:
+            # Alg. 1 step 2(b): blend high/low SoftMax by last layer's M_beta
+            hi = jnp.stack([_softmax(logits[i], 6, use_kernels)
+                            for i in range(h)])
+            lo = jnp.stack([_softmax(logits[i], 3, use_kernels)
+                            for i in range(h)])
+            att = m_beta_prev[None, :, None] * hi \
+                + (1.0 - m_beta_prev[None, :, None]) * lo
+        ctx = jnp.einsum("hij,hjd->hid", att, vh)
+        ctx = ctx.transpose(1, 0, 2).reshape(n, d)
+        x = _layernorm(x + ctx @ lp["wo"] + lp["bo"], lp["ln1g"], lp["ln1b"])
+
+        # ---- Eq. 1 importance + Alg. 1 masks ----
+        if mode == "plain" or thresholds is None:
+            m_theta = jnp.ones(n)
+            m_beta = jnp.ones(n)
+        else:
+            if use_kernels:
+                s = pk.importance_scores(att)
+            else:
+                s = ref.importance_ref(att)
+            if mode == "soft":
+                m_theta = pk.prune_gate(s, thresholds["theta"][li], temp,
+                                        hard=False) if use_kernels else \
+                    jax.nn.sigmoid((s - thresholds["theta"][li]) / temp)
+                m_beta = pk.prune_gate(s, thresholds["beta"][li], temp,
+                                       hard=False) if use_kernels else \
+                    jax.nn.sigmoid((s - thresholds["beta"][li]) / temp)
+            else:  # hard
+                m_theta = (s > thresholds["theta"][li]).astype(x.dtype)
+                m_beta = (s > thresholds["beta"][li]).astype(x.dtype)
+        m_theta_cum = m_theta_cum * m_theta
+        m_beta_eff = m_beta * m_theta_cum
+        l_prune = l_prune + m_theta_cum.mean()
+        l_approx = l_approx + m_beta_eff.mean()
+        kept.append(m_theta_cum.sum())
+
+        # ---- FFN with mixed-degree GELU ----
+        h1 = x @ lp["wf1"] + lp["bf1"]
+        g_hi = _gelu(h1, gelu_kind, use_kernels)
+        if mode == "plain" or thresholds is None:
+            g = g_hi
+        else:
+            g_lo = _gelu(h1, "low", use_kernels)
+            g = m_beta_eff[:, None] * g_hi + (1.0 - m_beta_eff[:, None]) * g_lo
+        x = _layernorm(x + g @ lp["wf2"] + lp["bf2"], lp["ln2g"], lp["ln2b"])
+        # Alg. 1 step 2(b): gate layer output by the (cumulative) prune mask
+        if mode != "plain" and thresholds is not None:
+            x = x * m_theta_cum[:, None]
+        m_beta_prev = m_beta_eff
+
+    # mean-pool over alive tokens
+    if mode == "plain" or thresholds is None:
+        pooled = x.mean(axis=0)
+    else:
+        w = m_theta_cum
+        pooled = (x * w[:, None]).sum(axis=0) / jnp.maximum(w.sum(), 1e-6)
+    logits = pooled @ params["w_cls"] + params["b_cls"]
+    nl = max(cfg.n_layers, 1)
+    aux = dict(l_prune=l_prune / nl, l_approx=l_approx / nl,
+               kept=jnp.stack(kept))
+    return logits, aux
+
+
+def forward_batch(params, onehots, cfg, thresholds=None, mode="plain",
+                  temp=0.02, gelu_kind="high"):
+    """vmap over a batch (oracle/non-kernel path for training)."""
+    f = lambda oh: forward(params, oh, cfg, thresholds, mode, temp,
+                           gelu_kind, use_kernels=False)
+    return jax.vmap(f)(onehots)
+
+
+def onehot_ids(ids, vocab):
+    return jax.nn.one_hot(jnp.asarray(ids), vocab, dtype=jnp.float32)

@@ -1,0 +1,80 @@
+"""Fig. 12 at the training level: run Algorithm 1 once per (lambda, alpha)
+point — the paper's actual ablation — and record accuracy plus the
+efficiency proxies (kept tokens, high-degree fraction) per point.
+
+    python -m compile.sweep --out ../artifacts [--quick]
+
+Writes artifacts/fig12_sweep.json; `cargo bench --bench paper_figures --
+fig12` complements this with the measured-latency axis.
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .model import Config, forward_batch, onehot_ids
+from .train import train
+
+
+def eval_point(params, thresholds, cfg, seq_len, seed=123):
+    rng = np.random.default_rng(seed)
+    ids, labels, _ = D.sample_batch(rng, 128, seq_len, cfg.vocab,
+                                    cfg.n_classes, "qnli")
+    import jax
+    oh = jax.vmap(lambda i: onehot_ids(i, cfg.vocab))(jnp.asarray(ids))
+    logits, aux = forward_batch(params, oh, cfg, thresholds, mode="hard")
+    acc = float((logits.argmax(-1) == jnp.asarray(labels)).mean())
+    kept = np.asarray(aux["kept"]).mean(axis=0)
+    return acc, kept
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps per point")
+    args = ap.parse_args()
+    cfg = Config.by_name("tiny")
+    steps2 = 60 if args.quick else 120
+    steps3 = 30 if args.quick else 60
+    # the paper sweeps lambda (pruning pressure) and alpha (reduction share)
+    grid = [
+        (0.002, 0.3),
+        (0.01, 0.3),
+        (0.05, 0.3),
+        (0.01, 0.05),
+        (0.01, 1.0),
+    ]
+    points = []
+    for lam, alpha in grid:
+        print(f"=== Algorithm 1 @ lambda={lam} alpha={alpha} ===")
+        params, thresholds, report = train(
+            cfg, task="qnli", seq_len=args.seq_len, steps2=steps2,
+            steps3=steps3, lam=lam, alpha=alpha, seed=3, acc_target=0.0,
+            max_rounds=1, log=lambda *_: None)
+        acc, kept = eval_point(params, thresholds, cfg, args.seq_len)
+        point = dict(
+            lam=lam, alpha=alpha, accuracy=acc,
+            kept_per_layer=kept.tolist(),
+            theta=[float(t) for t in thresholds["theta"]],
+            beta=[float(b) for b in thresholds["beta"]],
+            train_s=report["train_s"],
+        )
+        print(f"    accuracy={acc:.3f} kept={np.round(kept, 1).tolist()}")
+        points.append(point)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig12_sweep.json").write_text(json.dumps(points, indent=1))
+    print(f"wrote {out / 'fig12_sweep.json'}")
+    # shape summary: larger lambda should keep fewer tokens
+    kept_last = [p["kept_per_layer"][-1] for p in points[:3]]
+    print("kept@last across lambda 0.002→0.05:", np.round(kept_last, 1).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Algorithm 1 -- crypto-aware threshold learning.
+
+Step 2: jointly optimize weights w and per-layer thresholds (theta, beta)
+with soft sigmoid masks: L = L_task + lambda (L_prune + alpha L_approx).
+Step 3: freeze and binarize the masks, fine-tune w on L_task alone.
+Step 4: accept if accuracy >= target, else loosen lambda and retry.
+
+Self-contained Adam (no optax dependency). Run as
+
+    python -m compile.train --model tiny --task qnli --out ../artifacts
+"""
+
+import argparse
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import export
+from .model import (Config, forward_batch, init_params, init_thresholds,
+                    onehot_ids)
+
+
+# ----------------------------- optimizer ---------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return dict(m=z, v=jax.tree.map(jnp.zeros_like, params), t=0)
+
+
+def adam_step(state, grads, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mh, vh)
+    return dict(m=m, v=v, t=t), new
+
+
+# ----------------------------- losses -------------------------------------
+
+
+def ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def make_loss(cfg, mode, lam, alpha, temp):
+    def loss_fn(trainable, onehots, labels):
+        params, thresholds = trainable["params"], trainable["thresholds"]
+        logits, aux = forward_batch(params, onehots, cfg, thresholds,
+                                    mode=mode, temp=temp)
+        task = ce_loss(logits, labels)
+        reg = lam * (aux["l_prune"].mean() + alpha * aux["l_approx"].mean())
+        return task + reg, (task, aux)
+    return loss_fn
+
+
+# ----------------------------- training loop ------------------------------
+
+
+def evaluate(params, thresholds, cfg, ids, labels, mode="hard"):
+    oh = jax.vmap(lambda i: onehot_ids(i, cfg.vocab))(jnp.asarray(ids))
+    logits, aux = forward_batch(params, oh, cfg, thresholds, mode=mode)
+    acc = (logits.argmax(-1) == jnp.asarray(labels)).mean()
+    kept = aux["kept"].mean(axis=0)  # mean kept tokens per layer
+    return float(acc), np.asarray(kept)
+
+
+def train(cfg: Config, task="qnli", seq_len=32, steps2=120, steps3=60,
+          batch=16, lam=0.02, alpha=0.3, temp=None, lr=2e-3, seed=0,
+          acc_target=0.72, max_rounds=3, log=print):
+    """Run Algorithm 1. Returns (params, thresholds, report dict)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    thresholds = init_thresholds(cfg, seq_len)
+    temp = temp if temp is not None else 0.25 / seq_len
+
+    def batch_onehot(ids):
+        return jax.vmap(lambda i: onehot_ids(i, cfg.vocab))(jnp.asarray(ids))
+
+    report = dict(task=task, seq_len=seq_len, rounds=[])
+    t0 = time.time()
+    for rnd in range(max_rounds):
+        # ---- step 2: joint soft-mask search ----
+        loss_fn = make_loss(cfg, "soft", lam, alpha, temp)
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        trainable = dict(params=params, thresholds=thresholds)
+        opt = adam_init(trainable)
+        for step in range(steps2):
+            ids, labels, _ = D.sample_batch(rng, batch, seq_len, cfg.vocab,
+                                            cfg.n_classes, task)
+            (l, (task_l, aux)), g = grad_fn(trainable, batch_onehot(ids),
+                                            jnp.asarray(labels))
+            opt, trainable = adam_step(opt, g, trainable, lr)
+            # clamp: beta > theta >= 0 (paper invariant)
+            th = jnp.maximum(trainable["thresholds"]["theta"], 0.0)
+            be = jnp.maximum(trainable["thresholds"]["beta"], th * 1.05 + 1e-6)
+            trainable["thresholds"] = dict(theta=th, beta=be)
+            if step % 40 == 0:
+                log(f"  [round {rnd} step2 {step}] loss={float(l):.4f} "
+                    f"task={float(task_l):.4f} "
+                    f"keep={float(aux['l_prune'].mean()):.3f}")
+        params, thresholds = trainable["params"], trainable["thresholds"]
+
+        # ---- step 3: binarize + fine-tune w only ----
+        loss3 = make_loss(cfg, "hard", 0.0, 0.0, temp)
+        grad3 = jax.jit(jax.value_and_grad(
+            lambda p, oh, lb: loss3(dict(params=p, thresholds=thresholds),
+                                    oh, lb)[0]))
+        opt3 = adam_init(params)
+        for step in range(steps3):
+            ids, labels, _ = D.sample_batch(rng, batch, seq_len, cfg.vocab,
+                                            cfg.n_classes, task)
+            l, g = grad3(params, batch_onehot(ids), jnp.asarray(labels))
+            opt3, params = adam_step(opt3, g, params, lr)
+            if step % 30 == 0:
+                log(f"  [round {rnd} step3 {step}] task={float(l):.4f}")
+
+        # ---- step 4: accept or loosen ----
+        ids, labels, _ = D.sample_batch(rng, 128, seq_len, cfg.vocab,
+                                        cfg.n_classes, task)
+        acc, kept = evaluate(params, thresholds, cfg, ids, labels)
+        report["rounds"].append(dict(round=rnd, accuracy=acc,
+                                     kept_per_layer=kept.tolist(),
+                                     lam=lam))
+        log(f"  [round {rnd}] hard-mask accuracy={acc:.3f} "
+            f"kept={np.round(kept, 1).tolist()}")
+        if acc >= acc_target:
+            break
+        lam *= 0.5  # prune less aggressively and retry
+
+    report["train_s"] = time.time() - t0
+    report["accuracy"] = report["rounds"][-1]["accuracy"]
+    return params, thresholds, report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="tiny")
+    ap.add_argument("--task", default="qnli", choices=list(D.TASKS))
+    ap.add_argument("--all-tasks", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--steps2", type=int, default=120)
+    ap.add_argument("--steps3", type=int, default=60)
+    ap.add_argument("--lam", type=float, default=0.02)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = Config.by_name(args.model)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    tasks = list(D.TASKS) if args.all_tasks else [args.task]
+    summary = {}
+    for task in tasks:
+        print(f"=== Algorithm 1 on {args.model}/{task} ===")
+        params, thresholds, report = train(
+            cfg, task=task, seq_len=args.seq_len, steps2=args.steps2,
+            steps3=args.steps3, lam=args.lam, alpha=args.alpha,
+            seed=args.seed)
+        summary[task] = report
+        if task == tasks[0]:
+            export.save_weights(out / "weights.bin", params, cfg)
+            export.save_thresholds(out / "thresholds.json",
+                                   thresholds["theta"], thresholds["beta"],
+                                   args.seq_len)
+    with open(out / "train_report.json", "w") as f:
+        json.dump(summary, f, indent=1)
+    print("accuracy by task:")
+    for t in summary:
+        print(f"  {t}: {summary[t]['accuracy']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

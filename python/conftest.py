@@ -1,0 +1,7 @@
+"""Allow `pytest python/tests/` from the repo root: put the package dir on
+sys.path so `from compile...` imports resolve."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

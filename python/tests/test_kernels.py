@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; every kernel must match ref.py to
+float32 tolerance across tilings (including non-divisible shapes that
+exercise the padding paths).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (approx_exp, gelu_poly, importance_scores,
+                             prune_gate, softmax_taylor)
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, scale=3.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+# ----------------------------- importance ---------------------------------
+
+
+@given(h=st.integers(1, 4), n=st.integers(2, 70), seed=st.integers(0, 99))
+def test_importance_matches_eq1(h, n, seed):
+    rs = np.random.RandomState(seed)
+    att = rs.rand(h, n, n).astype(np.float32)
+    att /= att.sum(axis=-1, keepdims=True)  # row-stochastic like softmax
+    got = importance_scores(jnp.array(att))
+    want = ref.importance_ref(jnp.array(att))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_importance_row_tiling_invariance():
+    att = np.random.RandomState(3).rand(2, 100, 100).astype(np.float32)
+    a = importance_scores(jnp.array(att), row_tile=32)
+    b = importance_scores(jnp.array(att), row_tile=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_importance_scores_sum_to_one():
+    att = np.random.RandomState(4).rand(3, 24, 24).astype(np.float32)
+    att /= att.sum(axis=-1, keepdims=True)
+    s = importance_scores(jnp.array(att))
+    assert abs(float(jnp.sum(s)) - 1.0) < 1e-5
+
+
+# ----------------------------- GELU ----------------------------------------
+
+
+@pytest.mark.parametrize("kind,fn", [("high", ref.gelu_high_ref),
+                                     ("bolt", ref.gelu_bolt_ref),
+                                     ("low", ref.gelu_low_ref)])
+@given(r=st.integers(1, 50), c=st.integers(1, 50), seed=st.integers(0, 99))
+def test_gelu_matches_ref(kind, fn, r, c, seed):
+    x = rand((r, c), seed)
+    got = gelu_poly(jnp.array(x), kind)
+    want = fn(jnp.array(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["high", "bolt", "low"])
+def test_gelu_breakpoint_continuity(kind):
+    # values straddling every breakpoint
+    breaks = {"high": (-5.0, -1.97, 3.0), "bolt": (-2.7, 2.7),
+              "low": (-1.7626, 1.7626)}[kind]
+    xs = np.array([[b + d for b in breaks for d in (-1e-3, 0.0, 1e-3)]],
+                  np.float32)
+    got = np.asarray(gelu_poly(jnp.array(xs), kind))[0]
+    # The paper's published coefficients leave small seams at the
+    # breakpoints (Eq. 7: P6(3) = 3.016; Eq. 8: P4(2.7) = 2.638 vs 2.7) -- assert the
+    # seams stay small rather than exactly zero.
+    for i in range(0, len(got), 3):
+        assert abs(got[i] - got[i + 2]) < 0.08
+
+
+def test_gelu_tracks_exact_gelu():
+    # Eq. 7 must track GELU itself (tanh form, max err well under 5e-2)
+    x = np.linspace(-4, 4, 101, dtype=np.float32)[None]
+    got = np.asarray(gelu_poly(jnp.array(x), "high"))[0]
+    approx = 0.5 * x[0] * (1 + np.tanh(np.sqrt(2 / np.pi)
+                                       * (x[0] + 0.044715 * x[0] ** 3)))
+    assert np.max(np.abs(got - approx)) < 0.05
+
+
+# ----------------------------- exp / softmax -------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 6])
+@given(r=st.integers(1, 40), c=st.integers(1, 40), seed=st.integers(0, 99))
+def test_approx_exp_matches_ref(n, r, c, seed):
+    x = -np.abs(rand((r, c), seed, scale=5.0))  # softmax inputs are <= 0
+    got = approx_exp(jnp.array(x), n)
+    want = ref.approx_exp_ref(jnp.array(x), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_approx_exp_accuracy_vs_true_exp():
+    # paper: n=6, T=-13 gives average error within 2^-10 (Lu et al.)
+    x = np.linspace(-8, 0, 200, dtype=np.float32)[None]
+    got = np.asarray(approx_exp(jnp.array(x), 6))[0]
+    err = np.abs(got - np.exp(x[0]))
+    assert err.mean() < 2**-10 * 4, err.mean()
+
+
+@pytest.mark.parametrize("n", [3, 6])
+@given(r=st.integers(1, 30), c=st.integers(2, 60), seed=st.integers(0, 99))
+def test_softmax_matches_ref(n, r, c, seed):
+    x = rand((r, c), seed)
+    got = softmax_taylor(jnp.array(x), n)
+    want = ref.softmax_taylor_ref(jnp.array(x), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = rand((17, 33), 7)
+    got = np.asarray(softmax_taylor(jnp.array(x), 6))
+    np.testing.assert_allclose(got.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+# ----------------------------- gate ----------------------------------------
+
+
+@given(n=st.integers(1, 100), seed=st.integers(0, 99))
+def test_hard_gate_is_threshold(n, seed):
+    s = np.random.RandomState(seed).rand(n).astype(np.float32)
+    got = np.asarray(prune_gate(jnp.array(s), 0.5, hard=True))
+    np.testing.assert_array_equal(got, (s > 0.5).astype(np.float32))
+
+
+def test_soft_gate_is_sigmoid_and_monotone():
+    s = np.linspace(0, 1, 50, dtype=np.float32)
+    got = np.asarray(prune_gate(jnp.array(s), 0.5, temp=0.05, hard=False))
+    want = 1.0 / (1.0 + np.exp(-(s - 0.5) / 0.05))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert np.all(np.diff(got) >= 0)

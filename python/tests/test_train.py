@@ -1,0 +1,44 @@
+"""Algorithm 1 smoke tests: the crypto-aware search must learn the task,
+prune progressively, and keep the beta > theta invariant."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile.model import Config
+from compile.train import adam_init, adam_step, ce_loss, evaluate, train
+
+CFG = Config.by_name("tiny")
+
+
+def test_adam_descends_quadratic():
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = adam_init(params)
+    for _ in range(300):
+        g = {"x": 2 * params["x"]}
+        opt, params = adam_step(opt, g, params, lr=0.05)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_ce_loss_prefers_correct_class():
+    good = ce_loss(jnp.array([[4.0, -4.0]]), jnp.array([0]))
+    bad = ce_loss(jnp.array([[4.0, -4.0]]), jnp.array([1]))
+    assert float(good) < float(bad)
+
+
+def test_algorithm1_learns_and_prunes():
+    params, thresholds, report = train(
+        CFG, task="qnli", seq_len=16, steps2=80, steps3=40, batch=16,
+        lam=0.01, seed=1, acc_target=0.7, max_rounds=2, log=lambda *_: None)
+    assert report["accuracy"] >= 0.7, report
+    # beta > theta invariant (paper section 3.3)
+    th = np.asarray(thresholds["theta"])
+    be = np.asarray(thresholds["beta"])
+    assert np.all(be > th)
+    # the learned schedule prunes something on a fresh batch
+    rng = np.random.default_rng(9)
+    ids, labels, _ = D.sample_batch(rng, 32, 16, CFG.vocab, CFG.n_classes,
+                                    "qnli")
+    acc, kept = evaluate(params, thresholds, CFG, ids, labels)
+    assert acc >= 0.65
+    assert kept[-1] < 16.0, f"expected pruning, kept={kept}"

@@ -1,0 +1,382 @@
+//! Regenerates the paper's figures (as printed series).
+//!
+//!   cargo bench --bench paper_figures            # all figures
+//!   cargo bench --bench paper_figures -- fig11   # one figure
+//!
+//! Fig. 9   — runtime vs input length on GPT2 (BOLT w/o W.E. / BOLT /
+//!            CipherPrune†; polynomial reduction disabled per the paper).
+//! Fig. 10  — per-protocol runtime breakdown, LAN vs WAN.
+//! Fig. 11  — pruning-protocol comparison: bitonic sort vs separate swaps
+//!            vs MSB-bind, over n.
+//! Fig. 12  — λ/α ablation: accuracy-latency trade-off via threshold sweeps.
+//! Fig. 15  — BumbleBee/IRON/BOLT comparison (1 Gbps LAN), published-anchor
+//!            calibrated.
+//! Fig. 16/17 — 3PC comparison (MPCFormer, PUMA) on BERT and GPT2.
+//! Fig. 19  — per-layer pruned tokens + pruning-protocol runtime.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use cipherprune::baselines::bitonic::bitonic_sort_prune;
+use cipherprune::baselines::Framework;
+use cipherprune::coordinator::{run_inference, EngineKind};
+use cipherprune::fixed::{F64Mat, Fix};
+use cipherprune::net::NetModel;
+use cipherprune::nn::{forward, ForwardOptions, ThresholdSchedule, Workload};
+use cipherprune::party::run2_owned_sym;
+use cipherprune::protocols::mask::{pi_mask_strategy, MaskStrategy};
+use cipherprune::protocols::Engine2P;
+use cipherprune::util::bench::{fmt_duration, Table};
+use cipherprune::util::Xoshiro256;
+use common::*;
+
+fn fig9() {
+    println!("\n== Fig. 9: runtime vs input length (GPT2 proxy, LAN-modeled) ==");
+    let cfg = proxy_config("gpt2-base");
+    let w = proxy_weights(&cfg);
+    let seqs: Vec<usize> = std::env::var("CP_FIG9_SEQS")
+        .unwrap_or_else(|_| "16,32,64".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let mut t = Table::new(
+        "LAN-modeled seconds",
+        &["tokens", "BOLT w/o W.E.", "BOLT", "CipherPrune†", "speedup"],
+    );
+    for &seq in &seqs {
+        let a = run_once(EngineKind::BoltNoWe, &cfg, &w, seq, 9);
+        let b = run_once(EngineKind::Bolt, &cfg, &w, seq, 9);
+        let c = run_once(EngineKind::CipherPrunePruneOnly, &cfg, &w, seq, 9);
+        let (la, lb, lc) = (
+            modeled_s(&a, &NetModel::LAN),
+            modeled_s(&b, &NetModel::LAN),
+            modeled_s(&c, &NetModel::LAN),
+        );
+        t.row(vec![
+            seq.to_string(),
+            format!("{la:.2}"),
+            format!("{lb:.2}"),
+            format!("{lc:.2}"),
+            format!("{:.2}x", la / lc),
+        ]);
+    }
+    t.print();
+    println!("(paper: speedup grows with length — 1.9x @32 to 10.6x @512 tokens)");
+}
+
+fn fig10() {
+    let seq = bench_seq();
+    let cfg = proxy_config("bert-base");
+    let w = proxy_weights(&cfg);
+    println!("\n== Fig. 10: runtime breakdown by protocol ({} @ {seq} tokens) ==", cfg.name);
+    for kind in [EngineKind::BoltNoWe, EngineKind::CipherPrune] {
+        let r = run_once(kind, &cfg, &w, seq, 10);
+        let mut t = Table::new(
+            &format!("{}", kind.name()),
+            &["protocol", "compute", "comm MB", "LAN net", "WAN net", "% of LAN total"],
+        );
+        let protos = ["matmul", "softmax", "gelu", "layernorm", "prune", "mask", "reduce", "embed"];
+        let lan_total: f64 = modeled_s(&r, &NetModel::LAN);
+        for p in protos {
+            let s = r.stats_by_prefix(p);
+            if s.bytes == 0 && r.wall_by_prefix(p) == 0.0 {
+                continue;
+            }
+            let wall = r.wall_by_prefix(p);
+            let lan = NetModel::LAN.time(&s);
+            let wan = NetModel::WAN.time(&s);
+            t.row(vec![
+                p.to_string(),
+                fmt_duration(wall),
+                format!("{:.1}", s.bytes as f64 / 1e6),
+                fmt_duration(lan),
+                fmt_duration(wan),
+                format!("{:.1}%", (wall + lan) / lan_total * 100.0),
+            ]);
+        }
+        t.print();
+        let prune_frac = (r.wall_by_prefix("prune")
+            + r.wall_by_prefix("mask")
+            + r.wall_by_prefix("reduce"))
+            / r.wall_s
+            * 100.0;
+        println!("pruning protocols: {prune_frac:.1}% of compute (paper: 1.6% of total)\n");
+    }
+}
+
+fn fig11() {
+    println!("\n== Fig. 11: pruning-protocol comparison ==");
+    // Progressive pruning removes a small, roughly constant number of
+    // tokens per layer (m=8 here), so Π_mask costs O(mn) swaps while
+    // W.E.'s bitonic network is O(n log² n) regardless of m. Compute is
+    // measured; network time is modeled from the recorded flights —
+    // Π_mask's bubble swaps are sequential (each pays a round trip),
+    // whereas our bitonic implementation batches per network stage, so
+    // the in-memory compute column *under*-states the sort's deployed cost
+    // relative to the paper (which reports both unbatched).
+    let fix = Fix::default();
+    let d = 64;
+    let mut t = Table::new(
+        "prune m=8 tokens out of n",
+        &["n", "protocol", "compute", "swaps", "flights", "LAN total", "WAN total"],
+    );
+    for n in [32usize, 64, 128, 256] {
+        let m = 8.min(n / 4);
+        let keep = n - m;
+        // shared inputs: scores make the last m tokens the least important
+        let x = F64Mat::from_vec(n, d, (0..n * d).map(|i| (i % 17) as f64 * 0.1).collect());
+        let scores: Vec<f64> = (0..n).map(|i| if i < keep { 0.5 + (i % 7) as f64 * 0.01 } else { 0.01 }).collect();
+        let mask: Vec<u8> = (0..n).map(|i| (i < keep) as u8).collect();
+        for variant in 0..4 {
+            let x2 = x.clone();
+            let scores2 = scores.clone();
+            let mask2 = mask.clone();
+            let t0 = std::time::Instant::now();
+            let ((swaps, stats), _, _) = run2_owned_sym(77 + n as u64 + variant, move |ctx| {
+                let mut e = Engine2P::new(ctx, cipherprune::gates::TripleMode::Ot, 128, fix);
+                // share inputs deterministically
+                let mut rng = Xoshiro256::seed_from_u64(5);
+                let ring = x2.to_ring(fix);
+                let r: Vec<u64> = (0..ring.data.len()).map(|_| rng.next_u64()).collect();
+                let xs = if e.is_p0() {
+                    cipherprune::fixed::RingMat::from_vec(
+                        n, d,
+                        ring.data.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect())
+                } else {
+                    cipherprune::fixed::RingMat::from_vec(n, d, r)
+                };
+                let sc: Vec<u64> = if e.is_p0() {
+                    scores2.iter().map(|&v| fix.enc(v)).collect()
+                } else {
+                    vec![0u64; n]
+                };
+                let swaps = match variant {
+                    0 => bitonic_sort_prune(&mut e, &xs, &sc, keep).swaps,
+                    v => {
+                        let mut prg = e.mpc.ctx.dealer_prg("fig11-mask");
+                        let rb: Vec<u8> =
+                            (0..n).map(|_| (prg.next_u64() & 1) as u8).collect();
+                        let ms: Vec<u8> = if e.is_p0() {
+                            mask2.iter().zip(&rb).map(|(m, x)| m ^ x).collect()
+                        } else {
+                            rb
+                        };
+                        let strat = match v {
+                            1 => MaskStrategy::SeparateSwap,
+                            2 => MaskStrategy::MsbBind,
+                            _ => MaskStrategy::BatchedPrefix,
+                        };
+                        pi_mask_strategy(&mut e, &xs, &sc, &ms, strat).swaps
+                    }
+                };
+                (swaps, e.mpc.ctx.ch.total_stats())
+            });
+            let el = t0.elapsed().as_secs_f64();
+            let name = ["bitonic sort", "separate swap", "MSB-bind", "batched prefix (ours)"]
+                [variant as usize];
+            t.row(vec![
+                n.to_string(),
+                name.to_string(),
+                fmt_duration(el),
+                swaps.to_string(),
+                stats.flights.to_string(),
+                fmt_duration(el + NetModel::LAN.time(&stats)),
+                fmt_duration(el + NetModel::WAN.time(&stats)),
+            ]);
+        }
+    }
+    t.print();
+    println!("(paper: MSB-bind beats bitonic sort by 2.2–20.3x, growing with n — the");
+    println!(" asymptotic O(mn) vs O(n log² n) separation shows in the swap counts)");
+}
+
+fn fig12() {
+    println!("\n== Fig. 12: λ/α ablation — accuracy vs latency via threshold sweeps ==");
+    // λ ↔ pruning threshold scale; α ↔ reduction threshold scale. Larger
+    // values prune/reduce more: latency falls, accuracy eventually drops.
+    // Accuracy requires a *trained* model: use the Algorithm 1 artifacts
+    // (tiny config) when present, salient weights otherwise.
+    let (cfg, w) = match cipherprune::nn::ModelWeights::load(
+        &cipherprune::runtime::artifact("weights.bin"),
+    ) {
+        Ok(w) => (w.config.clone(), w),
+        Err(_) => {
+            let cfg = proxy_config("bert-base");
+            let w = proxy_weights(&cfg);
+            (cfg, w)
+        }
+    };
+    let seq = bench_seq().min(cfg.max_seq);
+    let wl = Workload::qnli_like(&cfg, seq);
+    let eval_batch = wl.batch(64, 120);
+    let mut t = Table::new(
+        "threshold sweep around the learned schedule (proxy for λ/α)",
+        &["θ scale", "β scale", "accuracy", "latency (LAN)", "kept@last", "high@last"],
+    );
+    // base = the Algorithm 1 schedule when it matches this architecture
+    let base = cipherprune::nn::ThresholdSchedule::load(
+        &cipherprune::runtime::artifact("thresholds.json"),
+    )
+    .filter(|s| s.theta.len() == cfg.n_layers)
+    .unwrap_or_else(|| ThresholdSchedule::default_for(cfg.n_layers));
+    for &(ts, bs) in &[(0.0, 1.0), (0.25, 1.0), (1.0, 1.0), (1.0, 0.25), (2.0, 1.0), (4.0, 1.0)] {
+        let mut sched = base.clone();
+        sched.theta.iter_mut().for_each(|v| *v *= ts);
+        sched.beta.iter_mut().for_each(|v| *v *= bs);
+        // keep the β > θ invariant
+        for (b, &th) in sched.beta.iter_mut().zip(&sched.theta) {
+            *b = b.max(th * 1.05);
+        }
+        // accuracy via the plaintext reference over the eval batch
+        let opts = ForwardOptions::cipherprune(sched.clone(), true);
+        let correct = eval_batch
+            .iter()
+            .filter(|s| forward(&w, &s.ids, &opts).predicted() == s.label)
+            .count();
+        // latency via one private run on the 12-layer proxy (tiny models
+        // are overhead-dominated; the proxy shows the real latency axis)
+        let pcfg = proxy_config("bert-base");
+        let pw = proxy_weights(&pcfg);
+        let mut psched = ThresholdSchedule::default_for(pcfg.n_layers);
+        psched.theta.iter_mut().for_each(|v| *v *= ts);
+        psched.beta.iter_mut().for_each(|v| *v *= bs);
+        for (b, &th) in psched.beta.iter_mut().zip(&psched.theta) {
+            *b = b.max(th * 1.05);
+        }
+        let mut ec = bench_engine(EngineKind::CipherPrune, &pcfg);
+        ec.schedule = psched;
+        let r = run_inference(
+            &ec,
+            &pw,
+            &Workload::qnli_like(&pcfg, bench_seq()).batch(1, 121)[0].ids,
+        );
+        t.row(vec![
+            format!("{ts}"),
+            format!("{bs}"),
+            format!("{:.3}", correct as f64 / eval_batch.len() as f64),
+            fmt_duration(modeled_s(&r, &NetModel::LAN)),
+            r.layer_stats.last().map(|s| s.n_kept).unwrap_or(0).to_string(),
+            r.layer_stats.last().map(|s| s.n_high).unwrap_or(0).to_string(),
+        ]);
+    }
+    t.print();
+    println!("(paper: larger λ/α → faster but eventually less accurate; reduction is gentler than pruning)");
+}
+
+fn fig15_16_17() {
+    let seq = bench_seq();
+    println!("\n== Figs. 15–17: cross-framework comparison ==");
+    // Appendix D ports CipherPrune's protocols ONTO each framework (its
+    // pruning composes with any 2PC/3PC backend built on comparison + B2A),
+    // so the reproduced quantity is the *pruning speedup factor* applied to
+    // each framework's published time: we measure
+    //   speedup = t(BOLT w/o W.E.) / t(CipherPrune)     (same workload)
+    // on our substrate and report published(F) / speedup as the
+    // "CipherPrune-on-F" bar, next to published(F) transported by κ for
+    // scale context.
+    let mut t = Table::new(
+        "published baseline vs CipherPrune-on-framework (seconds)",
+        &[
+            "model", "speedup (ours)", "BumbleBee", "CP-on-BB", "MPCFormer", "CP-on-MF",
+            "PUMA", "CP-on-PUMA",
+        ],
+    );
+    for model in ["bert-medium", "bert-base", "bert-large", "gpt2-base"] {
+        let cfg = proxy_config(model);
+        let w = proxy_weights(&cfg);
+        let anchor = run_once(EngineKind::BoltNoWe, &cfg, &w, seq, 15);
+        let kind = if model.starts_with("gpt2") {
+            EngineKind::CipherPrunePruneOnly // Fig. 17: no polynomial reduction
+        } else {
+            EngineKind::CipherPrune
+        };
+        let ours = run_once(kind, &cfg, &w, seq, 15);
+        let speedup = modeled_s(&anchor, &NetModel::LAN) / modeled_s(&ours, &NetModel::LAN);
+        let cell = |f: Framework| -> (String, String) {
+            match cipherprune::baselines::published(f, model) {
+                Some((s, _)) => (format!("{s:.1}"), format!("{:.1}", s / speedup)),
+                None => ("—".into(), "—".into()),
+            }
+        };
+        let bb = cell(Framework::BumbleBee);
+        let mf = cell(Framework::MpcFormer);
+        let pu = cell(Framework::Puma);
+        t.row(vec![
+            model.to_string(),
+            format!("{speedup:.2}x"),
+            bb.0,
+            bb.1,
+            mf.0,
+            mf.1,
+            pu.0,
+            pu.1,
+        ]);
+    }
+    t.print();
+    println!("(baseline columns are published seconds in each paper's own setting; CP-on-F");
+    println!(" divides by our measured pruning speedup. Paper's claims — ≥4.3x vs BumbleBee,");
+    println!(" 6.6–9.4x vs MPCFormer, 2.8–4.6x vs PUMA — correspond to the speedup column");
+    println!(" at 128–512-token inputs; it grows with CP_BENCH_SEQ.)");
+}
+
+fn fig19() {
+    let seq = bench_seq().max(32);
+    let cfg = proxy_config("bert-base");
+    let w = proxy_weights(&cfg);
+    let n_samples = env_usize("CP_FIG19_SAMPLES", 4);
+    println!(
+        "\n== Fig. 19: per-layer pruning profile ({} @ {seq} tokens, {n_samples} QNLI-like samples) ==",
+        cfg.name
+    );
+    let wl = Workload::qnli_like(&cfg, seq);
+    let mut pruned = vec![0.0f64; cfg.n_layers];
+    let mut times = vec![0.0f64; cfg.n_layers];
+    for (i, s) in wl.batch(n_samples, 190).iter().enumerate() {
+        let ec = bench_engine(EngineKind::CipherPrune, &cfg);
+        let r = run_inference(&ec, &w, &s.ids);
+        for (li, st) in r.layer_stats.iter().enumerate() {
+            pruned[li] += (st.n_in - st.n_kept) as f64;
+            times[li] += st.prune_wall_s;
+        }
+        let _ = i;
+    }
+    let mut t = Table::new(
+        "mean per-layer pruning",
+        &["layer", "pruned tokens", "prune-protocol time"],
+    );
+    for li in 0..cfg.n_layers {
+        t.row(vec![
+            li.to_string(),
+            format!("{:.1}", pruned[li] / n_samples as f64),
+            fmt_duration(times[li] / n_samples as f64),
+        ]);
+    }
+    t.print();
+    println!("(paper: padding dominates layer-0 pruning; later layers prune fewer tokens, faster)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--")) // cargo bench passes --bench
+        .collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    if want("fig9") {
+        fig9();
+    }
+    if want("fig10") {
+        fig10();
+    }
+    if want("fig11") {
+        fig11();
+    }
+    if want("fig12") {
+        fig12();
+    }
+    if want("fig15") || want("fig16") || want("fig17") {
+        fig15_16_17();
+    }
+    if want("fig19") {
+        fig19();
+    }
+}

@@ -1,0 +1,159 @@
+//! Regenerates the paper's tables.
+//!
+//!   cargo bench --bench paper_tables            # all tables
+//!   cargo bench --bench paper_tables -- table1  # one table
+//!
+//! Table 1  — end-to-end time/comm for IRON / BOLT w/o W.E. / BOLT /
+//!            CipherPrune on BERT-{Medium,Base,Large} proxies @ 128-token
+//!            workloads (CP_BENCH_SEQ tokens by default; see bench_common).
+//! Table 2  — per-task accuracy (from Algorithm 1's train_report.json) +
+//!            measured time of the four methods.
+//! Table 3  — per-layer SoftMax/GELU communication, pruned vs unpruned.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use cipherprune::coordinator::EngineKind;
+use cipherprune::net::NetModel;
+use cipherprune::runtime::artifact;
+use cipherprune::util::bench::{fmt_duration, Table};
+use cipherprune::util::json::Json;
+use common::*;
+
+fn table1() {
+    let seq = bench_seq();
+    println!("\n== Table 1: end-to-end comparison (proxy width, {seq} tokens, LAN-modeled) ==");
+    let engines = [
+        EngineKind::Iron,
+        EngineKind::BoltNoWe,
+        EngineKind::Bolt,
+        EngineKind::CipherPrune,
+    ];
+    for model in ["bert-medium", "bert-base", "bert-large"] {
+        let cfg = proxy_config(model);
+        let w = proxy_weights(&cfg);
+        let mut t = Table::new(
+            &format!("{model} (proxy {})", cfg.name),
+            &["method", "time", "comm MB", "LAN total", "speedup", "paper speedup"],
+        );
+        let mut base: Option<f64> = None; // BOLT w/o W.E. anchor
+        let paper_base = paper_table1(EngineKind::BoltNoWe, model).map(|(s, _)| s);
+        for kind in engines {
+            let r = run_once(kind, &cfg, &w, seq, 1);
+            let lan = modeled_s(&r, &NetModel::LAN);
+            if kind == EngineKind::BoltNoWe {
+                base = Some(lan);
+            }
+            let speedup = base.map(|b| format!("{:.2}x", b / lan)).unwrap_or_default();
+            let paper = match (paper_table1(kind, model), paper_base) {
+                (Some((ps, _)), Some(pb)) => format!("{:.2}x", pb / ps),
+                _ => String::new(),
+            };
+            t.row(vec![
+                kind.name().to_string(),
+                fmt_duration(r.wall_s),
+                format!("{:.1}", r.total_stats().bytes as f64 / 1e6),
+                fmt_duration(lan),
+                speedup,
+                paper,
+            ]);
+        }
+        t.print();
+    }
+    println!("(speedups are relative to BOLT w/o W.E.; paper column from Table 1 of the paper)");
+}
+
+fn table2() {
+    println!("\n== Table 2: accuracy (Algorithm 1) and method time ==");
+    // accuracy from the python training report
+    let report = std::fs::read_to_string(artifact("train_report.json")).ok();
+    match report.and_then(|s| Json::parse(&s).ok()) {
+        Some(j) => {
+            let mut t = Table::new("accuracy per task (synthetic GLUE substitutes)",
+                                   &["task", "accuracy", "kept/layer (last round)"]);
+            for task in ["mnli", "qnli", "sst2", "mrpc"] {
+                if let Some(r) = j.get(task) {
+                    let acc = r.get("accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let kept = r
+                        .get("rounds")
+                        .and_then(|v| v.as_arr())
+                        .and_then(|a| a.last())
+                        .and_then(|r| r.get("kept_per_layer"))
+                        .and_then(|v| v.as_f64_vec())
+                        .map(|v| format!("{v:.1?}"))
+                        .unwrap_or_default();
+                    t.row(vec![task.to_string(), format!("{:.3}", acc), kept]);
+                }
+            }
+            t.print();
+        }
+        None => println!("  (no artifacts/train_report.json — run `make train` for accuracy rows)"),
+    }
+    // method time on the BERT-Base proxy
+    let seq = bench_seq();
+    let cfg = proxy_config("bert-base");
+    let w = proxy_weights(&cfg);
+    let mut t = Table::new(
+        &format!("method time ({} @ {seq} tokens, LAN-modeled)", cfg.name),
+        &["method", "time", "LAN total", "kept@last"],
+    );
+    for kind in [
+        EngineKind::BoltNoWe,
+        EngineKind::Bolt,
+        EngineKind::CipherPrunePruneOnly,
+        EngineKind::CipherPrune,
+    ] {
+        let r = run_once(kind, &cfg, &w, seq, 2);
+        t.row(vec![
+            kind.name().to_string(),
+            fmt_duration(r.wall_s),
+            fmt_duration(modeled_s(&r, &NetModel::LAN)),
+            r.layer_stats.last().map(|s| s.n_kept).unwrap_or(0).to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn table3() {
+    let seq = bench_seq();
+    let cfg = proxy_config("bert-base");
+    let w = proxy_weights(&cfg);
+    println!("\n== Table 3: per-layer SoftMax/GELU comm (MB), {} @ {seq} tokens ==", cfg.name);
+    let unpruned = run_once(EngineKind::BoltNoWe, &cfg, &w, seq, 3);
+    let pruned = run_once(EngineKind::CipherPrune, &cfg, &w, seq, 3);
+    let mut t = Table::new(
+        "communication per layer",
+        &["layer", "softmax", "pruned softmax", "gelu", "pruned gelu", "tokens kept"],
+    );
+    for li in 0..cfg.n_layers {
+        let u = &unpruned.layer_stats[li];
+        let p = &pruned.layer_stats[li];
+        t.row(vec![
+            li.to_string(),
+            format!("{:.2}", u.softmax_bytes as f64 / 1e6),
+            format!("{:.2}", p.softmax_bytes as f64 / 1e6),
+            format!("{:.2}", u.gelu_bytes as f64 / 1e6),
+            format!("{:.2}", p.gelu_bytes as f64 / 1e6),
+            p.n_kept.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(paper Table 3 shape: pruned columns decay layer-by-layer; unpruned stay flat)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--")) // cargo bench passes --bench
+        .collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    if want("table1") {
+        table1();
+    }
+    if want("table2") {
+        table2();
+    }
+    if want("table3") {
+        table3();
+    }
+}

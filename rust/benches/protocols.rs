@@ -1,0 +1,237 @@
+//! Protocol micro-benches — the paper's §3.2/Appendix A runtime claims and
+//! the design-choice ablations DESIGN.md calls out.
+//!
+//!   cargo bench --bench protocols              # everything
+//!   cargo bench --bench protocols -- mask      # one group
+//!
+//! Groups: score (importance-score ASS compute), cmp (Π_CMP amortized),
+//! mask (Π_mask per-layer vs bitonic sort), triples (dealer vs OT),
+//! fixedpoint (scale sweep accuracy).
+
+#[path = "bench_common.rs"]
+mod common;
+
+use cipherprune::baselines::bitonic::bitonic_sort_prune;
+use cipherprune::fixed::{F64Mat, Fix, RingMat};
+use cipherprune::gates::TripleMode;
+use cipherprune::party::run2_owned_sym;
+use cipherprune::protocols::gelu::{gelu_ref, pi_gelu, GeluKind};
+use cipherprune::protocols::mask::{pi_mask_strategy, MaskStrategy};
+use cipherprune::protocols::softmax::importance_scores;
+use cipherprune::protocols::Engine2P;
+use cipherprune::util::bench::{bench, fmt_duration, Table};
+use cipherprune::util::Xoshiro256;
+use common::env_usize;
+
+fn share_mat_det(x: &F64Mat, fix: Fix, p0: bool, seed: u64) -> RingMat {
+    let ring = x.to_ring(fix);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let r: Vec<u64> = (0..ring.data.len()).map(|_| rng.next_u64()).collect();
+    if p0 {
+        RingMat::from_vec(
+            x.rows,
+            x.cols,
+            ring.data.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect(),
+        )
+    } else {
+        RingMat::from_vec(x.rows, x.cols, r)
+    }
+}
+
+/// §3.2: "importance score … only 0.1 ms per attention module" — pure
+/// local ASS arithmetic, no traffic.
+fn bench_score() {
+    println!("\n== importance score (Eq. 1, local ASS) ==");
+    let fix = Fix::default();
+    let mut t = Table::new("per attention module", &["n", "heads", "time"]);
+    for (n, h) in [(128usize, 12usize), (128, 24), (512, 12)] {
+        let atts: Vec<RingMat> = (0..h)
+            .map(|i| {
+                let m = F64Mat::from_vec(
+                    n,
+                    n,
+                    (0..n * n).map(|j| ((i + j) % 13) as f64 / 13.0 / n as f64).collect(),
+                );
+                share_mat_det(&m, fix, true, i as u64)
+            })
+            .collect();
+        // local computation only: run on a single engine-free path by
+        // measuring inside one party of a 2P session
+        let atts2 = atts.clone();
+        let (el, _, _) = run2_owned_sym(40, move |ctx| {
+            let mut e = Engine2P::new(ctx, TripleMode::Dealer, 128, fix);
+            let t0 = std::time::Instant::now();
+            let s = importance_scores(&mut e, &atts2);
+            std::hint::black_box(s);
+            t0.elapsed().as_secs_f64()
+        });
+        t.row(vec![n.to_string(), h.to_string(), fmt_duration(el)]);
+    }
+    t.print();
+    println!("(paper: ~0.1 ms per module — ours is local share arithmetic plus one trunc)");
+}
+
+/// §3.2: "n invocations of Π_CMP, each within 5 ms" — ours batches, so we
+/// report amortized per-comparison cost.
+fn bench_cmp() {
+    println!("\n== Π_CMP (batched millionaires) ==");
+    let fix = Fix::default();
+    let mut t = Table::new("batch compare vs threshold", &["batch n", "total", "per cmp"]);
+    for n in [128usize, 512, 2048] {
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64) / n as f64 - 0.3).collect();
+        let (el, _, _) = run2_owned_sym(41, move |ctx| {
+            let mut e = Engine2P::new(ctx, TripleMode::Ot, 128, fix);
+            let shares: Vec<u64> = if e.is_p0() {
+                xs.iter().map(|&v| e.fix.enc(v)).collect()
+            } else {
+                vec![0u64; xs.len()]
+            };
+            let t0 = std::time::Instant::now();
+            let m = e.mpc.cmp_gt_const(&shares, e.fix.enc(0.1));
+            std::hint::black_box(m);
+            t0.elapsed().as_secs_f64()
+        });
+        t.row(vec![
+            n.to_string(),
+            fmt_duration(el),
+            fmt_duration(el / n as f64),
+        ]);
+    }
+    t.print();
+    println!("(paper: ≤5 ms per invocation, unbatched; batching amortizes far below that)");
+}
+
+/// Appendix A: Π_mask swap strategy vs oblivious sort per layer
+/// (paper: swap ≈0.5 s, sort 3.8–4.5 s at BERT-Base/128).
+fn bench_mask() {
+    println!("\n== Π_mask per layer: swap strategies vs bitonic sort ==");
+    let fix = Fix::default();
+    let n = env_usize("CP_MASK_N", 128);
+    let d = env_usize("CP_MASK_D", 64);
+    let m = n / 16; // progressive pruning removes few tokens per layer
+    let keep = n - m;
+    let x = F64Mat::from_vec(n, d, (0..n * d).map(|i| (i % 23) as f64 * 0.05).collect());
+    let mask: Vec<u8> = (0..n).map(|i| (i < keep) as u8).collect();
+    let mut t = Table::new(
+        &format!("prune {m}/{n} tokens (d={d})"),
+        &["protocol", "time", "swaps"],
+    );
+    for variant in ["msb-bind", "separate", "bitonic"] {
+        let x2 = x.clone();
+        let mask2 = mask.clone();
+        let v = variant;
+        let t0 = std::time::Instant::now();
+        let (swaps, _, _) = run2_owned_sym(42, move |ctx| {
+            let mut e = Engine2P::new(ctx, TripleMode::Ot, 128, fix);
+            let xs = share_mat_det(&x2, fix, e.is_p0(), 7);
+            let sc: Vec<u64> = if e.is_p0() {
+                (0..n).map(|i| e.fix.enc(if mask2[i] == 1 { 0.5 } else { 0.01 })).collect()
+            } else {
+                vec![0u64; n]
+            };
+            match v {
+                "bitonic" => bitonic_sort_prune(&mut e, &xs, &sc, keep).swaps,
+                _ => {
+                    let mut prg = e.mpc.ctx.dealer_prg("bench-mask");
+                    let rb: Vec<u8> = (0..n).map(|_| (prg.next_u64() & 1) as u8).collect();
+                    let ms: Vec<u8> = if e.is_p0() {
+                        mask2.iter().zip(&rb).map(|(m, x)| m ^ x).collect()
+                    } else {
+                        rb
+                    };
+                    let strat = if v == "separate" {
+                        MaskStrategy::SeparateSwap
+                    } else {
+                        MaskStrategy::MsbBind
+                    };
+                    pi_mask_strategy(&mut e, &xs, &sc, &ms, strat).swaps
+                }
+            }
+        });
+        t.row(vec![variant.to_string(), fmt_duration(t0.elapsed().as_secs_f64()), swaps.to_string()]);
+    }
+    t.print();
+    println!("(paper: swap 0.5 s vs sort 3.8–4.5 s per BERT-Base layer; ratios are the claim)");
+}
+
+/// DESIGN.md ablation: dealer-provided vs OT-generated Beaver triples.
+fn bench_triples() {
+    println!("\n== Beaver triples: dealer vs OT generation ==");
+    let fix = Fix::default();
+    let n = 10_000usize;
+    let mut t = Table::new(&format!("{n} triples"), &["mode", "time", "traffic MB"]);
+    for mode in [TripleMode::Dealer, TripleMode::Ot] {
+        let t0 = std::time::Instant::now();
+        let (bytes, _, _) = run2_owned_sym(43, move |ctx| {
+            let mut e = Engine2P::new(ctx, mode, 128, fix);
+            let before = e.mpc.ctx.ch.total_stats().bytes;
+            let tr = e.mpc.triples(n);
+            std::hint::black_box(tr);
+            e.mpc.ctx.ch.total_stats().bytes - before
+        });
+        t.row(vec![
+            format!("{mode:?}"),
+            fmt_duration(t0.elapsed().as_secs_f64()),
+            format!("{:.2}", bytes as f64 / 1e6),
+        ]);
+    }
+    t.print();
+}
+
+/// DESIGN.md ablation: fixed-point fraction bits vs protocol accuracy.
+fn bench_fixedpoint() {
+    println!("\n== fixed-point scale sweep: Π_GELU accuracy vs f ==");
+    let mut t = Table::new("max |err| vs f64 reference", &["frac bits", "max err", "mean err"]);
+    for f in [8u32, 12, 16] {
+        let fix = Fix { frac_bits: f };
+        let xs: Vec<f64> = (0..256).map(|i| -6.0 + 12.0 * i as f64 / 255.0).collect();
+        let xs2 = xs.clone();
+        let (out, _, _) = run2_owned_sym(44 + f as u64, move |ctx| {
+            let mut e = Engine2P::new(ctx, TripleMode::Ot, 128, fix);
+            let shares: Vec<u64> = if e.is_p0() {
+                xs2.iter().map(|&v| e.fix.enc(v)).collect()
+            } else {
+                vec![0u64; xs2.len()]
+            };
+            let y = pi_gelu(&mut e, &shares, GeluKind::High);
+            e.mpc.open(&y).iter().map(|&v| e.fix.dec(v)).collect::<Vec<f64>>()
+        });
+        let (mut mx, mut sum) = (0.0f64, 0.0f64);
+        for (i, &x) in xs.iter().enumerate() {
+            let err = (out[i] - gelu_ref(x, GeluKind::High)).abs();
+            mx = mx.max(err);
+            sum += err;
+        }
+        t.row(vec![
+            f.to_string(),
+            format!("{mx:.5}"),
+            format!("{:.5}", sum / xs.len() as f64),
+        ]);
+    }
+    t.print();
+    println!("(f=12 is the default: error well below the approximation error of Eq. 7 itself)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--")) // cargo bench passes --bench
+        .collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    let _ = bench("noop", 0, 1, || {}); // keep util::bench linked/used
+    if want("score") {
+        bench_score();
+    }
+    if want("cmp") {
+        bench_cmp();
+    }
+    if want("mask") {
+        bench_mask();
+    }
+    if want("triples") {
+        bench_triples();
+    }
+    if want("fixedpoint") {
+        bench_fixedpoint();
+    }
+}

@@ -1,0 +1,225 @@
+//! Oblivious bitonic sort — the pruning substrate of BOLT's word elimination
+//! (Pang et al. 2024; Bogdanov et al. 2014).
+//!
+//! BOLT's W.E. sorts the *whole* token sequence by importance score with a
+//! bitonic network of oblivious compare-exchanges, then keeps the top half.
+//! The network size is fixed by n alone — O(n log² n) compare-exchanges
+//! regardless of how many tokens actually need to move — which is exactly the
+//! asymptotic disadvantage Fig. 11 measures against CipherPrune's O(mn)
+//! targeted swaps.
+//!
+//! Each compare-exchange is one Π_CMP on the score lane plus one wide MUX
+//! over the bound row (score ‖ token), batched per network stage so the round
+//! count is the network depth, not the swap count.
+
+use crate::fixed::RingMat;
+use crate::protocols::Engine2P;
+
+/// Result of the W.E.-style sort-and-keep.
+pub struct SortPruneOutput {
+    /// Kept token shares (keep × D), sorted by descending importance.
+    pub tokens: RingMat,
+    /// Score shares travelling with the kept tokens.
+    pub scores: Vec<u64>,
+    /// Compare-exchange count (Fig. 11's x-axis quantity).
+    pub swaps: usize,
+    /// Network depth = interactive stage count.
+    pub stages: usize,
+}
+
+/// Sort rows by descending score with an oblivious bitonic network and keep
+/// the first `keep` rows. Equivalent privacy contract to Π_mask: neither
+/// party learns which original positions survive.
+pub fn bitonic_sort_prune(
+    e: &mut Engine2P,
+    x: &RingMat,
+    scores: &[u64],
+    keep: usize,
+) -> SortPruneOutput {
+    e.phase("bitonic");
+    let n = x.rows;
+    let d = x.cols;
+    assert_eq!(scores.len(), n);
+    assert!(keep <= n && keep >= 1);
+    let p2 = n.next_power_of_two();
+    let w = d + 1;
+    // rows: [score | token…]; padding rows carry the minimum possible score
+    // (shared as P0 = MIN, P1 = 0) so they sink to the tail.
+    let mut rows: Vec<Vec<u64>> = (0..p2)
+        .map(|i| {
+            let mut r = Vec::with_capacity(w);
+            if i < n {
+                r.push(scores[i]);
+                r.extend_from_slice(x.row(i));
+            } else {
+                // Sentinel far below any real importance score (scores live
+                // in [0, 1]) but inside the CMP_BITS comparison domain
+                // (|x − y| must stay below 2^(CMP_BITS−1)).
+                r.push(if e.is_p0() { e.fix.enc(-1e4) } else { 0 });
+                r.extend(std::iter::repeat(0).take(d));
+            }
+            r
+        })
+        .collect();
+
+    let mut swaps = 0usize;
+    let mut stages = 0usize;
+    let mut k = 2;
+    while k <= p2 {
+        let mut j = k / 2;
+        while j >= 1 {
+            // one network stage: all disjoint pairs batched
+            let mut pairs: Vec<(usize, usize, bool)> = Vec::new();
+            for i in 0..p2 {
+                let l = i ^ j;
+                if l > i {
+                    // descending overall: invert the classic ascending rule
+                    let asc = (i & k) != 0;
+                    pairs.push((i, l, asc));
+                }
+            }
+            // batched compare: b = [s_hi > s_lo] where (hi, lo) ordered so a
+            // swap is needed when b == 0
+            let (a_scores, b_scores): (Vec<u64>, Vec<u64>) = pairs
+                .iter()
+                .map(|&(i, l, asc)| {
+                    if asc {
+                        (rows[l][0], rows[i][0])
+                    } else {
+                        (rows[i][0], rows[l][0])
+                    }
+                })
+                .unzip();
+            let b = e.mpc.cmp_gt(&a_scores, &b_scores);
+            // want-swap bit = ¬b (first of the oriented pair is NOT larger)
+            let want = e.mpc.not_bits(&b);
+            // conditional swap via wide MUX on (row_i − row_l)
+            let diffs: Vec<Vec<u64>> = pairs
+                .iter()
+                .map(|&(i, l, _)| {
+                    rows[i]
+                        .iter()
+                        .zip(&rows[l])
+                        .map(|(a, c)| a.wrapping_sub(*c))
+                        .collect()
+                })
+                .collect();
+            let bd = e.mpc.mux_wide(&want, &diffs, w);
+            for (pi, &(i, l, _)) in pairs.iter().enumerate() {
+                let new_i: Vec<u64> = rows[i]
+                    .iter()
+                    .zip(&bd[pi])
+                    .map(|(a, c)| a.wrapping_sub(*c))
+                    .collect();
+                let new_l: Vec<u64> = rows[l]
+                    .iter()
+                    .zip(&bd[pi])
+                    .map(|(a, c)| a.wrapping_add(*c))
+                    .collect();
+                rows[i] = new_i;
+                rows[l] = new_l;
+            }
+            swaps += pairs.len();
+            stages += 1;
+            j /= 2;
+        }
+        k *= 2;
+    }
+
+    let mut tokens = RingMat::zeros(keep, d);
+    let mut out_scores = Vec::with_capacity(keep);
+    for (i, row) in rows.iter().take(keep).enumerate() {
+        out_scores.push(row[0]);
+        tokens.row_mut(i).copy_from_slice(&row[1..]);
+    }
+    SortPruneOutput { tokens, scores: out_scores, swaps, stages }
+}
+
+/// Compare-exchange count of a bitonic network on n elements (analysis
+/// helper for Fig. 11 — matches what [`bitonic_sort_prune`] performs).
+pub fn bitonic_swap_count(n: usize) -> usize {
+    let p2 = n.next_power_of_two();
+    if p2 < 2 {
+        return 0;
+    }
+    let stages_k = p2.trailing_zeros() as usize;
+    // Σ_{k=1..log p2} k stages of p2/2 compare-exchanges
+    (stages_k * (stages_k + 1) / 2) * (p2 / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{F64Mat, Fix};
+    use crate::protocols::testutil::{recon, recon_vec, run_engine, share_mat, share_vec};
+
+    fn run_sort(scores: Vec<f64>, keep: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let fx = Fix::default();
+        let n = scores.len();
+        let d = 2;
+        // token row i = [i, i]
+        let x = F64Mat::from_vec(n, d, (0..n).flat_map(|i| vec![i as f64; d]).collect());
+        let (x0, x1) = share_mat(&x, fx, seed);
+        let (s0, s1) = share_vec(&scores, fx, seed + 1);
+        let ((t0, o0), (t1, o1)) = run_engine(seed + 2, 128, move |e| {
+            let xs = if e.is_p0() { x0.clone() } else { x1.clone() };
+            let ss = if e.is_p0() { s0.clone() } else { s1.clone() };
+            let out = bitonic_sort_prune(e, &xs, &ss, keep);
+            (out.tokens, out.scores)
+        });
+        let toks = recon(&t0, &t1, fx);
+        let scs = recon_vec(&o0, &o1, fx);
+        ((0..keep).map(|r| toks.at(r, 0)).collect(), scs)
+    }
+
+    #[test]
+    fn sorts_descending_and_keeps_top() {
+        let scores = vec![0.1, 0.9, 0.5, 0.7, 0.2, 0.8];
+        let (tok_ids, kept_scores) = run_sort(scores.clone(), 3, 200);
+        // top-3 scores: indices 1 (0.9), 5 (0.8), 3 (0.7)
+        assert_eq!(tok_ids, vec![1.0, 5.0, 3.0]);
+        for w in kept_scores.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6, "descending order");
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_padding_sinks() {
+        let scores = vec![0.3, 0.6, 0.1, 0.9, 0.5]; // n = 5 → pad to 8
+        let (tok_ids, _) = run_sort(scores, 5, 210);
+        assert_eq!(tok_ids, vec![3.0, 1.0, 4.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn negative_scores_ordering() {
+        let scores = vec![-0.5, 0.2, -0.1];
+        let (tok_ids, _) = run_sort(scores, 3, 220);
+        assert_eq!(tok_ids, vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn swap_count_matches_analysis() {
+        let fx = Fix::default();
+        for n in [4usize, 7, 16] {
+            let scores: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+            let x = F64Mat::zeros(n, 1);
+            let (x0, x1) = share_mat(&x, fx, 300 + n as u64);
+            let (s0, s1) = share_vec(&scores, fx, 301 + n as u64);
+            let (sw, _) = run_engine(302 + n as u64, 128, move |e| {
+                let xs = if e.is_p0() { x0.clone() } else { x1.clone() };
+                let ss = if e.is_p0() { s0.clone() } else { s1.clone() };
+                bitonic_sort_prune(e, &xs, &ss, 1).swaps
+            });
+            assert_eq!(sw, bitonic_swap_count(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn swap_count_asymptotics() {
+        // O(n log² n): doubling n slightly more than doubles the count
+        let a = bitonic_swap_count(128);
+        let b = bitonic_swap_count(256);
+        assert!(b > 2 * a);
+        assert_eq!(bitonic_swap_count(128), 28 * 64);
+    }
+}

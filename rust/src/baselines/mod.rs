@@ -1,0 +1,17 @@
+//! Baseline systems the paper compares against.
+//!
+//! - [`bitonic`] — oblivious bitonic sort, the substrate of BOLT's word
+//!   elimination (one-time 50% pruning) and the Fig. 11 comparison.
+//! - [`costmodel`] — published-anchor cost models for BumbleBee / MPCFormer /
+//!   PUMA (Appendix D, Figs. 15–17).
+//!
+//! The IRON baseline's LUT-style non-linear protocol lives in
+//! [`crate::protocols::lut`] (it is a protocol, not a separate system); the
+//! IRON / BOLT / BOLT-w/o-W.E. *engines* are assembled in
+//! [`crate::coordinator::engine`].
+
+pub mod bitonic;
+pub mod costmodel;
+
+pub use bitonic::{bitonic_sort_prune, bitonic_swap_count, SortPruneOutput};
+pub use costmodel::{published, Calibration, Framework};

@@ -1,0 +1,223 @@
+//! Length-bucketed dynamic batcher.
+//!
+//! Private inference cost is super-linear in the padded token count (the
+//! SoftMax protocol is O(n²)), so batching a 20-token request with a
+//! 500-token request wastes quadratic work on padding. The batcher groups
+//! pending requests into power-of-two length buckets and releases a batch
+//! when it is full or its oldest request exceeds the linger deadline —
+//! the standard continuous-batching compromise between latency and
+//! amortization of the per-session setup (base OTs, HE keygen).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::types::InferenceRequest;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before forced release.
+    pub linger: Duration,
+    /// Smallest bucket (token lengths are rounded up to ≥ this).
+    pub min_bucket: usize,
+    /// Largest admissible padded length.
+    pub max_tokens: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            linger: Duration::from_millis(50),
+            min_bucket: 16,
+            max_tokens: 512,
+        }
+    }
+}
+
+/// Round a raw length up to its bucket (next power of two ≥ min_bucket).
+pub fn bucket_for(len: usize, policy: &BatchPolicy) -> usize {
+    len.next_power_of_two().max(policy.min_bucket).min(policy.max_tokens)
+}
+
+struct Pending {
+    req: InferenceRequest,
+    arrived: Instant,
+}
+
+/// A batch released for execution: all requests share one padded length.
+#[derive(Debug)]
+pub struct Batch {
+    pub bucket: usize,
+    pub requests: Vec<InferenceRequest>,
+}
+
+/// Length-bucketed batcher. Not thread-safe by itself — the router owns it
+/// behind its own synchronization.
+pub struct Batcher {
+    policy: BatchPolicy,
+    /// bucket length → FIFO of pending requests
+    queues: Vec<(usize, VecDeque<Pending>)>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queues: Vec::new() }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request. Returns its bucket, or Err if it exceeds
+    /// `max_tokens`.
+    pub fn push(&mut self, req: InferenceRequest) -> Result<usize, InferenceRequest> {
+        if req.ids.len() > self.policy.max_tokens {
+            return Err(req);
+        }
+        let b = bucket_for(req.ids.len(), &self.policy);
+        let q = match self.queues.iter_mut().find(|(len, _)| *len == b) {
+            Some((_, q)) => q,
+            None => {
+                self.queues.push((b, VecDeque::new()));
+                self.queues.sort_by_key(|(len, _)| *len);
+                &mut self.queues.iter_mut().find(|(len, _)| *len == b).unwrap().1
+            }
+        };
+        q.push_back(Pending { req, arrived: Instant::now() });
+        Ok(b)
+    }
+
+    /// Number of pending requests across all buckets.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Release the next ready batch, if any: a full bucket, or — past the
+    /// linger deadline — the bucket with the oldest waiting request.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
+        // full bucket first (best amortization)
+        if let Some((b, q)) = self
+            .queues
+            .iter_mut()
+            .find(|(_, q)| q.len() >= self.policy.max_batch)
+        {
+            let reqs = q.drain(..self.policy.max_batch.min(q.len()))
+                .map(|p| p.req)
+                .collect();
+            return Some(Batch { bucket: *b, requests: reqs });
+        }
+        // otherwise: oldest request past its linger deadline
+        let deadline = self.policy.linger;
+        let expired = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, q))| {
+                q.front().is_some_and(|p| now.duration_since(p.arrived) >= deadline)
+            })
+            .min_by_key(|(_, (_, q))| q.front().map(|p| p.arrived).unwrap());
+        if let Some((idx, _)) = expired {
+            let (b, q) = &mut self.queues[idx];
+            let take = q.len().min(self.policy.max_batch);
+            let reqs = q.drain(..take).map(|p| p.req).collect();
+            return Some(Batch { bucket: *b, requests: reqs });
+        }
+        None
+    }
+
+    /// Drain everything immediately (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (b, q) in &mut self.queues {
+            while !q.is_empty() {
+                let take = q.len().min(self.policy.max_batch);
+                out.push(Batch {
+                    bucket: *b,
+                    requests: q.drain(..take).map(|p| p.req).collect(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::types::EngineKind;
+
+    fn req(id: u64, len: usize) -> InferenceRequest {
+        InferenceRequest { id, ids: vec![1; len], engine: EngineKind::CipherPrune }
+    }
+
+    #[test]
+    fn buckets_round_up_pow2() {
+        let p = BatchPolicy::default();
+        assert_eq!(bucket_for(1, &p), 16);
+        assert_eq!(bucket_for(17, &p), 32);
+        assert_eq!(bucket_for(128, &p), 128);
+        assert_eq!(bucket_for(300, &p), 512);
+    }
+
+    #[test]
+    fn rejects_overlong() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.push(req(1, 600)).is_err());
+        assert!(b.push(req(2, 512)).is_ok());
+    }
+
+    #[test]
+    fn releases_full_bucket_immediately() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, ..Default::default() });
+        b.push(req(1, 20)).unwrap();
+        assert!(b.next_batch(Instant::now()).is_none(), "not full, not expired");
+        b.push(req(2, 30)).unwrap(); // same 32-bucket
+        let batch = b.next_batch(Instant::now()).expect("bucket full");
+        assert_eq!(batch.bucket, 32);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn linger_releases_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            linger: Duration::from_millis(0),
+            ..Default::default()
+        });
+        b.push(req(1, 20)).unwrap();
+        let batch = b.next_batch(Instant::now()).expect("linger 0 → immediate");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn different_lengths_do_not_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            linger: Duration::from_secs(100),
+            ..Default::default()
+        });
+        b.push(req(1, 20)).unwrap(); // bucket 32
+        b.push(req(2, 100)).unwrap(); // bucket 128
+        assert!(b.next_batch(Instant::now()).is_none());
+        b.push(req(3, 25)).unwrap(); // fills bucket 32
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.bucket, 32);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..5 {
+            b.push(req(i, 10 + i as usize * 30)).unwrap();
+        }
+        let total: usize = b.drain_all().iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(b.pending(), 0);
+    }
+}

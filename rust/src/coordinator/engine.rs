@@ -1,0 +1,565 @@
+//! The private-inference engines: full Transformer forward passes assembled
+//! from the two-party protocols, one variant per compared system (Table 1).
+//!
+//! Layer pipeline (Fig. 4): Π_MatMul embedding → per layer {Π_MatMul QKV,
+//! per-head Π_MatMul + Π_SoftMax attention, Π_MatMul output projection,
+//! residual, Π_LayerNorm, **Π_prune + Π_mask**, **Π_reduce**, Π_MatMul FFN
+//! with mixed-degree Π_GELU, residual, Π_LayerNorm} → mean-pool →
+//! classifier → open logits.
+//!
+//! Engine differences:
+//! - **IRON** — Π_LUT SoftMax/GELU (LUT precision), no pruning.
+//! - **BOLT w/o W.E.** — polynomial SoftMax (n=6 Taylor) + Eq. 8 GELU.
+//! - **BOLT** — ditto + one-time 50% word elimination via oblivious bitonic
+//!   sort at layer 0.
+//! - **CipherPrune†** — progressive Π_prune/Π_mask with the learned θ
+//!   schedule, high-degree non-linears everywhere.
+//! - **CipherPrune** — ditto + Π_reduce with β: reduced tokens get n=3
+//!   Taylor SoftMax rows and degree-2 GELU.
+
+use std::time::Instant;
+
+use crate::baselines::bitonic::bitonic_sort_prune;
+use crate::fixed::{Fix, RingMat};
+use crate::gates::TripleMode;
+use crate::nn::{ModelWeights, ThresholdSchedule};
+use crate::party::run2_owned_sym;
+use crate::protocols::gelu::{pi_gelu_tokens, GeluKind};
+use crate::protocols::layernorm::pi_layernorm;
+use crate::protocols::lut::{exp_table_k, gelu_table_k, pi_pwl, pi_softmax_lut};
+use crate::protocols::matmul::{linear_layer, pi_matmul_shared};
+use crate::protocols::prune::pi_prune;
+use crate::protocols::reduce::pi_reduce;
+use crate::protocols::softmax::{importance_scores, pi_softmax};
+use crate::protocols::Engine2P;
+
+use super::types::{EngineKind, LayerStat, RunResult};
+
+/// Configuration of one engine instance.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    /// θ/β schedule (used by the CipherPrune kinds).
+    pub schedule: ThresholdSchedule,
+    /// BFV ring degree (8192 for deployment parameters; tests use 128–256).
+    pub he_n: usize,
+    /// Beaver-triple generation mode.
+    pub triple_mode: TripleMode,
+    /// Session seed (shares, keys, base OTs).
+    pub seed: u64,
+    /// PWL segment count for the IRON engine's LUT non-linears. 128 is
+    /// LUT-precision-faithful; benches use 16 so the end-to-end cost ratio
+    /// vs BOLT lands near IRON's published one (DESIGN.md §Substitutions).
+    pub iron_segments: usize,
+}
+
+impl EngineConfig {
+    pub fn new(kind: EngineKind, n_layers: usize) -> Self {
+        let schedule = match kind {
+            EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly => {
+                ThresholdSchedule::default_for(n_layers)
+            }
+            _ => ThresholdSchedule::disabled(n_layers),
+        };
+        EngineConfig {
+            kind,
+            schedule,
+            he_n: crate::he::params::N,
+            triple_mode: TripleMode::Ot,
+            seed: 0xC1F4E9,
+            iron_segments: 128,
+        }
+    }
+
+    /// Test-sized HE ring (fast; keeps all protocol structure).
+    pub fn for_tests(kind: EngineKind, n_layers: usize) -> Self {
+        EngineConfig { he_n: 128, ..Self::new(kind, n_layers) }
+    }
+}
+
+/// Column-range slice of a row-major share matrix (head extraction).
+fn cols(m: &RingMat, lo: usize, hi: usize) -> RingMat {
+    let w = hi - lo;
+    let mut out = RingMat::zeros(m.rows, w);
+    for r in 0..m.rows {
+        out.row_mut(r).copy_from_slice(&m.row(r)[lo..hi]);
+    }
+    out
+}
+
+/// Ring-encoded weights (server side), precomputed once per model.
+pub struct RingWeights {
+    pub emb: RingMat,
+    pub pos: RingMat,
+    pub layers: Vec<RingLayer>,
+    pub w_cls: RingMat,
+    pub b_cls: Vec<u64>,
+}
+
+pub struct RingLayer {
+    pub wq: RingMat,
+    pub bq: Vec<u64>,
+    pub wk: RingMat,
+    pub bk: Vec<u64>,
+    pub wv: RingMat,
+    pub bv: Vec<u64>,
+    pub wo: RingMat,
+    pub bo: Vec<u64>,
+    pub ln1_gamma: Vec<u64>,
+    pub ln1_beta: Vec<u64>,
+    pub w_ff1: RingMat,
+    pub b_ff1: Vec<u64>,
+    pub w_ff2: RingMat,
+    pub b_ff2: Vec<u64>,
+    pub ln2_gamma: Vec<u64>,
+    pub ln2_beta: Vec<u64>,
+}
+
+impl RingWeights {
+    pub fn encode(w: &ModelWeights, fix: Fix) -> Self {
+        let ev = |v: &[f64]| fix.enc_vec(v);
+        RingWeights {
+            emb: w.embedding.to_ring(fix),
+            pos: w.positional.to_ring(fix),
+            layers: w
+                .layers
+                .iter()
+                .map(|l| RingLayer {
+                    wq: l.wq.to_ring(fix),
+                    bq: ev(&l.bq),
+                    wk: l.wk.to_ring(fix),
+                    bk: ev(&l.bk),
+                    wv: l.wv.to_ring(fix),
+                    bv: ev(&l.bv),
+                    wo: l.wo.to_ring(fix),
+                    bo: ev(&l.bo),
+                    ln1_gamma: ev(&l.ln1_gamma),
+                    ln1_beta: ev(&l.ln1_beta),
+                    w_ff1: l.w_ff1.to_ring(fix),
+                    b_ff1: ev(&l.b_ff1),
+                    w_ff2: l.w_ff2.to_ring(fix),
+                    b_ff2: ev(&l.b_ff2),
+                    ln2_gamma: ev(&l.ln2_gamma),
+                    ln2_beta: ev(&l.ln2_beta),
+                })
+                .collect(),
+            w_cls: w.w_cls.to_ring(fix),
+            b_cls: ev(&w.b_cls),
+        }
+    }
+}
+
+/// Simple section clock for per-phase wall accounting (kept on P0 only).
+struct PhaseClock {
+    t: Instant,
+    acc: Vec<(String, f64)>,
+    active: bool,
+}
+
+impl PhaseClock {
+    fn new(active: bool) -> Self {
+        PhaseClock { t: Instant::now(), acc: Vec::new(), active }
+    }
+
+    fn mark(&mut self, label: String) {
+        if self.active {
+            self.acc.push((label, self.t.elapsed().as_secs_f64()));
+        }
+        self.t = Instant::now();
+    }
+}
+
+struct PartyOut {
+    logits: Vec<f64>,
+    layer_stats: Vec<LayerStat>,
+    phase_wall: Vec<(String, f64)>,
+}
+
+/// Run one private inference end-to-end (spawns both parties in-process).
+pub fn run_inference(
+    cfg: &EngineConfig,
+    weights: &ModelWeights,
+    ids: &[usize],
+) -> RunResult {
+    if cfg.kind == EngineKind::Plaintext {
+        return run_plaintext(weights, ids);
+    }
+    let fix = Fix::default();
+    let ring_w = RingWeights::encode(weights, fix);
+    let t0 = Instant::now();
+    let (p0, _p1, transcript) = run2_owned_sym(cfg.seed, |ctx| {
+        let mut e = Engine2P::new(ctx, cfg.triple_mode, cfg.he_n, fix);
+        run_party(&mut e, cfg, weights, &ring_w, ids)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let phases: Vec<_> = {
+        let t = transcript.lock().unwrap();
+        t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    };
+    let mut layer_stats = p0.layer_stats;
+    // harvest per-layer softmax/gelu traffic from the transcript labels
+    for (li, st) in layer_stats.iter_mut().enumerate() {
+        let sm = format!("softmax#{li}");
+        let ge = format!("gelu#{li}");
+        for (name, s) in &phases {
+            if *name == sm {
+                st.softmax_bytes = s.bytes;
+            } else if *name == ge {
+                st.gelu_bytes = s.bytes;
+            }
+        }
+    }
+    RunResult {
+        logits: p0.logits,
+        layer_stats,
+        phases,
+        phase_wall: p0.phase_wall,
+        wall_s,
+    }
+}
+
+fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult {
+    let t0 = Instant::now();
+    let out = crate::nn::forward(weights, ids, &crate::nn::ForwardOptions::plain());
+    RunResult {
+        logits: out.logits,
+        layer_stats: out
+            .traces
+            .iter()
+            .map(|t| LayerStat {
+                n_in: t.n_in,
+                n_kept: t.n_kept,
+                n_high: t.n_high,
+                ..Default::default()
+            })
+            .collect(),
+        phases: vec![],
+        phase_wall: vec![],
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// The symmetric party program. `weights`/`ring_w` are touched only on P0;
+/// `ids` only on P1 (the harness hands both to both threads — the *channel*
+/// is the only communication path, so the security-relevant dataflow is
+/// exactly the protocols').
+fn run_party(
+    e: &mut Engine2P,
+    cfg: &EngineConfig,
+    weights: &ModelWeights,
+    ring_w: &RingWeights,
+    ids: &[usize],
+) -> PartyOut {
+    let mcfg = &weights.config;
+    let fix = e.fix;
+    let d = mcfg.dim;
+    let hd = mcfg.head_dim();
+    let heads = mcfg.heads;
+    let mut n = ids.len();
+    let mut clock = PhaseClock::new(e.is_p0());
+
+    // ---- embedding: one-hot(ids) · E  (Π_MatMul), then + positional ----
+    e.set_phase_ctx("");
+    e.phase("embed");
+    let onehot = {
+        let mut m = RingMat::zeros(n, mcfg.vocab);
+        if !e.is_p0() {
+            for (i, &id) in ids.iter().enumerate() {
+                *m.at_mut(i, id) = fix.enc(1.0);
+            }
+        }
+        m
+    };
+    let w_emb = if e.is_p0() { Some(&ring_w.emb) } else { None };
+    let mut x = linear_layer(e, &onehot, w_emb, None, d);
+    if e.is_p0() {
+        for i in 0..n {
+            for c in 0..d {
+                let v = x.at(i, c).wrapping_add(ring_w.pos.at(i, c));
+                *x.at_mut(i, c) = v;
+            }
+        }
+    }
+    clock.mark("embed".into());
+
+    let mut layer_stats: Vec<LayerStat> = Vec::with_capacity(mcfg.n_layers);
+    // public per-row reduction mask carried into the next layer's SoftMax
+    let mut row_high: Vec<bool> = vec![];
+
+    for li in 0..mcfg.n_layers {
+        e.set_phase_ctx(&format!("#{li}"));
+        let lw = ring_w.layers.get(li);
+        let mut st = LayerStat { n_in: n, n_kept: n, ..Default::default() };
+
+        // ---- QKV projections ----
+        e.phase("matmul");
+        let p0w = |f: fn(&RingLayer) -> &RingMat| lw.map(f);
+        let p0b = |f: fn(&RingLayer) -> &Vec<u64>| lw.map(|l| f(l).as_slice());
+        let q = linear_layer(e, &x, p0w(|l| &l.wq), p0b(|l| &l.bq), d);
+        let k = linear_layer(e, &x, p0w(|l| &l.wk), p0b(|l| &l.bk), d);
+        let v = linear_layer(e, &x, p0w(|l| &l.wv), p0b(|l| &l.bv), d);
+        clock.mark(format!("matmul#{li}"));
+
+        // ---- per-head attention ----
+        let inv_sqrt = fix.enc(1.0 / (hd as f64).sqrt());
+        let mut ctx_mat = RingMat::zeros(n, d);
+        let mut atts: Vec<RingMat> = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let (lo, hi) = (h * hd, (h + 1) * hd);
+            let qh = cols(&q, lo, hi);
+            let kh = cols(&k, lo, hi);
+            let vh = cols(&v, lo, hi);
+            e.phase("matmul");
+            let prod = pi_matmul_shared(e, &qh, &kh.transpose()); // scale 2f
+            let logits_v =
+                e.mpc.scale_const_trunc(&prod.data, inv_sqrt, 2 * fix.frac_bits);
+            let mut logits = RingMat::from_vec(n, n, logits_v);
+            if mcfg.causal && e.is_p0() {
+                // public causal structure: mask j > i far below the clip
+                let neg = fix.enc(-30.0);
+                for i in 0..n {
+                    for j in i + 1..n {
+                        let nv = logits.at(i, j).wrapping_add(neg);
+                        *logits.at_mut(i, j) = nv;
+                    }
+                }
+            }
+            clock.mark(format!("matmul#{li}"));
+            let att = match cfg.kind {
+                EngineKind::Iron => {
+                    let t = exp_table_k(cfg.iron_segments);
+                    pi_softmax_lut(e, &logits, &t)
+                }
+                _ => pi_softmax(e, &logits, &row_high),
+            };
+            clock.mark(format!("softmax#{li}"));
+            e.phase("matmul");
+            let ch = pi_matmul_shared(e, &att, &vh); // scale 2f
+            let ch_t = e.mpc.trunc_vec(&ch.data, fix.frac_bits);
+            for r in 0..n {
+                ctx_mat.row_mut(r)[lo..hi]
+                    .copy_from_slice(&ch_t[r * hd..(r + 1) * hd]);
+            }
+            clock.mark(format!("matmul#{li}"));
+            atts.push(att);
+        }
+
+        // ---- output projection + residual + LN1 ----
+        e.phase("matmul");
+        let attn_out = linear_layer(e, &ctx_mat, p0w(|l| &l.wo), p0b(|l| &l.bo), d);
+        let xr = x.add(&attn_out);
+        clock.mark(format!("matmul#{li}"));
+        let x_ln = pi_layernorm(
+            e,
+            &xr,
+            p0b(|l| &l.ln1_gamma).map(|g| g),
+            p0b(|l| &l.ln1_beta).map(|b| b),
+        );
+        clock.mark(format!("layernorm#{li}"));
+
+        // ---- encrypted token pruning ----
+        let tprune = Instant::now();
+        let (mut xp, pruned_scores) = match cfg.kind {
+            EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly => {
+                let theta = cfg.schedule.theta_abs(li, n);
+                let out = pi_prune(e, &atts, &x_ln, theta);
+                st.swaps = out.swaps;
+                st.n_kept = out.n_kept;
+                (out.tokens, Some(out.scores))
+            }
+            EngineKind::Bolt if li == 0 => {
+                // W.E.: sort all tokens by importance, keep the top half
+                e.phase("prune");
+                let scores = importance_scores(e, &atts);
+                let keep = n.div_ceil(2);
+                let out = bitonic_sort_prune(e, &x_ln, &scores, keep);
+                st.swaps = out.swaps;
+                st.n_kept = keep;
+                (out.tokens, Some(out.scores))
+            }
+            _ => (x_ln, None),
+        };
+        st.prune_wall_s = tprune.elapsed().as_secs_f64();
+        clock.mark(format!("prune#{li}"));
+        let n_kept = st.n_kept;
+
+        // ---- encrypted polynomial reduction ----
+        let high_mask: Vec<bool> = match (&cfg.kind, &pruned_scores) {
+            (EngineKind::CipherPrune, Some(scores)) => {
+                let beta = cfg.schedule.beta_abs(li, n);
+                pi_reduce(e, scores, beta)
+            }
+            _ => vec![true; n_kept],
+        };
+        st.n_high = high_mask.iter().filter(|&&b| b).count();
+        clock.mark(format!("reduce#{li}"));
+
+        // ---- FFN with mixed-degree GELU ----
+        e.phase("matmul");
+        let h1 = linear_layer(e, &xp, p0w(|l| &l.w_ff1), p0b(|l| &l.b_ff1), mcfg.ffn_dim);
+        clock.mark(format!("matmul#{li}"));
+        let h_act = match cfg.kind {
+            EngineKind::Iron => {
+                e.phase("gelu");
+                let out = pi_pwl(e, &h1.data, &gelu_table_k(cfg.iron_segments));
+                RingMat::from_vec(h1.rows, h1.cols, out)
+            }
+            EngineKind::BoltNoWe | EngineKind::Bolt => {
+                pi_gelu_tokens(e, &h1, &high_mask, GeluKind::Bolt)
+            }
+            _ => pi_gelu_tokens(e, &h1, &high_mask, GeluKind::High),
+        };
+        clock.mark(format!("gelu#{li}"));
+        e.phase("matmul");
+        let h2 = linear_layer(e, &h_act, p0w(|l| &l.w_ff2), p0b(|l| &l.b_ff2), d);
+        let xr2 = xp.add(&h2);
+        clock.mark(format!("matmul#{li}"));
+        xp = pi_layernorm(
+            e,
+            &xr2,
+            p0b(|l| &l.ln2_gamma).map(|g| g),
+            p0b(|l| &l.ln2_beta).map(|b| b),
+        );
+        clock.mark(format!("layernorm#{li}"));
+
+        x = xp;
+        n = n_kept;
+        row_high = high_mask;
+        layer_stats.push(st);
+    }
+
+    // ---- mean-pool + classifier + open ----
+    e.set_phase_ctx("");
+    e.phase("classify");
+    let mut pooled = vec![0u64; d];
+    for r in 0..n {
+        for (p, &v) in pooled.iter_mut().zip(x.row(r)) {
+            *p = p.wrapping_add(v);
+        }
+    }
+    let inv_n = fix.enc(1.0 / n as f64);
+    let pooled = e.mpc.scale_const_trunc(&pooled, inv_n, fix.frac_bits);
+    let pooled_m = RingMat::from_vec(1, d, pooled);
+    let w_cls = if e.is_p0() { Some(&ring_w.w_cls) } else { None };
+    let b_cls = if e.is_p0() { Some(ring_w.b_cls.as_slice()) } else { None };
+    let logits_share = linear_layer(e, &pooled_m, w_cls, b_cls, mcfg.n_classes);
+    let opened = e.mpc.open(&logits_share.data);
+    let logits: Vec<f64> = opened.iter().map(|&v| fix.dec(v)).collect();
+    clock.mark("classify".into());
+
+    PartyOut { logits, layer_stats, phase_wall: clock.acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ForwardOptions, ModelConfig, Workload};
+
+    fn tiny_setup() -> (ModelWeights, Vec<usize>) {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::salient(&cfg, 42);
+        let wl = Workload::qnli_like(&cfg, 8);
+        (w, wl.batch(1, 17)[0].ids.clone())
+    }
+
+    /// Engine output must track the plaintext reference (fixed-point noise
+    /// accumulates over layers; the logit *ordering* and coarse values are
+    /// the contract).
+    fn assert_close_to_ref(kind: EngineKind, opts: ForwardOptions, tol: f64) {
+        let (w, ids) = tiny_setup();
+        let cfg = EngineConfig::for_tests(kind, w.config.n_layers);
+        let got = run_inference(&cfg, &w, &ids);
+        let want = crate::nn::forward(&w, &ids, &opts);
+        assert_eq!(got.logits.len(), want.logits.len());
+        for (g, r) in got.logits.iter().zip(&want.logits) {
+            assert!(
+                (g - r).abs() < tol,
+                "{kind:?}: got {:?} want {:?}",
+                got.logits,
+                want.logits
+            );
+        }
+        // pruning decisions must agree exactly (they are public)
+        for (ls, tr) in got.layer_stats.iter().zip(&want.traces) {
+            assert_eq!(ls.n_in, tr.n_in, "{kind:?} n_in");
+            assert_eq!(ls.n_kept, tr.n_kept, "{kind:?} n_kept");
+        }
+    }
+
+    #[test]
+    fn bolt_no_we_matches_reference() {
+        assert_close_to_ref(EngineKind::BoltNoWe, ForwardOptions::bolt(false), 0.25);
+    }
+
+    #[test]
+    fn bolt_we_matches_reference() {
+        assert_close_to_ref(EngineKind::Bolt, ForwardOptions::bolt(true), 0.25);
+    }
+
+    #[test]
+    fn cipherprune_matches_reference() {
+        let sched = ThresholdSchedule::default_for(2);
+        let mut cfg = EngineConfig::for_tests(EngineKind::CipherPrune, 2);
+        cfg.schedule = sched.clone();
+        let (w, ids) = tiny_setup();
+        let got = run_inference(&cfg, &w, &ids);
+        let want = crate::nn::forward(&w, &ids, &ForwardOptions::cipherprune(sched, true));
+        for (g, r) in got.logits.iter().zip(&want.logits) {
+            assert!((g - r).abs() < 0.25, "got {:?} want {:?}", got.logits, want.logits);
+        }
+        for (ls, tr) in got.layer_stats.iter().zip(&want.traces) {
+            assert_eq!(ls.n_kept, tr.n_kept);
+            assert_eq!(ls.n_high, tr.n_high);
+        }
+    }
+
+    #[test]
+    fn iron_matches_precise_reference() {
+        assert_close_to_ref(EngineKind::Iron, ForwardOptions::plain(), 0.25);
+    }
+
+    #[test]
+    fn plaintext_engine_is_reference() {
+        let (w, ids) = tiny_setup();
+        let cfg = EngineConfig::for_tests(EngineKind::Plaintext, 2);
+        let got = run_inference(&cfg, &w, &ids);
+        let want = crate::nn::forward(&w, &ids, &ForwardOptions::plain());
+        assert_eq!(got.logits, want.logits);
+    }
+
+    #[test]
+    fn cipherprune_produces_layer_phases() {
+        let (w, ids) = tiny_setup();
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune, 2);
+        let got = run_inference(&cfg, &w, &ids);
+        assert!(got.stats_by_prefix("softmax#0").bytes > 0);
+        assert!(got.stats_by_prefix("softmax#1").bytes > 0);
+        assert!(got.stats_by_prefix("prune").bytes > 0);
+        assert!(got.stats_by_prefix("mask").bytes > 0);
+        assert!(got.total_stats().bytes > 0);
+        // per-layer harvested traffic present
+        assert!(got.layer_stats[0].softmax_bytes > 0);
+        assert!(got.layer_stats[0].gelu_bytes > 0);
+    }
+
+    #[test]
+    fn pruning_reduces_downstream_traffic() {
+        let (w, ids) = tiny_setup();
+        let none = run_inference(
+            &EngineConfig::for_tests(EngineKind::BoltNoWe, 2),
+            &w,
+            &ids,
+        );
+        let pruned = run_inference(
+            &EngineConfig::for_tests(EngineKind::CipherPrune, 2),
+            &w,
+            &ids,
+        );
+        // CipherPrune must prune something on this workload…
+        assert!(pruned.layer_stats[0].n_kept < pruned.layer_stats[0].n_in);
+        // …and its layer-1 softmax traffic must be below the unpruned engine's
+        let a = pruned.layer_stats[1].softmax_bytes;
+        let b = none.layer_stats[1].softmax_bytes;
+        assert!(a < b, "pruned softmax#1 {a} !< unpruned {b}");
+    }
+}

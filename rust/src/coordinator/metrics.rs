@@ -1,0 +1,152 @@
+//! Per-protocol / per-engine metrics aggregation.
+
+use std::collections::BTreeMap;
+
+use crate::net::{NetModel, PhaseStats};
+
+use super::types::RunResult;
+
+/// Latency/traffic summary of a set of runs.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub runs: u64,
+    pub wall_s_total: f64,
+    pub bytes_total: u64,
+    pub flights_total: u64,
+    /// Wall times of individual runs (for percentiles).
+    pub walls: Vec<f64>,
+    /// Traffic grouped by protocol prefix ("softmax", "gelu", …).
+    pub by_protocol: BTreeMap<String, PhaseStats>,
+}
+
+impl EngineMetrics {
+    pub fn record(&mut self, r: &RunResult) {
+        self.runs += 1;
+        self.wall_s_total += r.wall_s;
+        self.walls.push(r.wall_s);
+        let t = r.total_stats();
+        self.bytes_total += t.bytes;
+        self.flights_total += t.flights;
+        for (name, s) in &r.phases {
+            let proto = name.split('#').next().unwrap_or(name).to_string();
+            self.by_protocol.entry(proto).or_default().add(s);
+        }
+    }
+
+    pub fn mean_wall_s(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.wall_s_total / self.runs as f64
+        }
+    }
+
+    pub fn percentile_wall_s(&self, p: f64) -> f64 {
+        if self.walls.is_empty() {
+            return 0.0;
+        }
+        let mut w = self.walls.clone();
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((w.len() - 1) as f64 * p).round() as usize;
+        w[idx]
+    }
+
+    /// Total end-to-end time under a modeled network: measured compute +
+    /// modeled transfer/latency.
+    pub fn modeled_total_s(&self, net: &NetModel) -> f64 {
+        let s = PhaseStats {
+            bytes: self.bytes_total,
+            msgs: 0,
+            flights: self.flights_total,
+        };
+        self.wall_s_total + net.time(&s)
+    }
+}
+
+/// Registry keyed by engine name.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    pub engines: BTreeMap<String, EngineMetrics>,
+}
+
+impl MetricsRegistry {
+    pub fn record(&mut self, engine: &str, r: &RunResult) {
+        self.engines.entry(engine.to_string()).or_default().record(r);
+    }
+
+    pub fn get(&self, engine: &str) -> Option<&EngineMetrics> {
+        self.engines.get(engine)
+    }
+
+    /// Render a compact text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.engines {
+            out.push_str(&format!(
+                "{name}: runs={} mean={:.3}s p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",
+                m.runs,
+                m.mean_wall_s(),
+                m.percentile_wall_s(0.95),
+                m.bytes_total as f64 / 1e6,
+                m.modeled_total_s(&NetModel::LAN),
+                m.modeled_total_s(&NetModel::WAN),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_run(wall: f64, bytes: u64) -> RunResult {
+        RunResult {
+            logits: vec![0.0, 1.0],
+            layer_stats: vec![],
+            phases: vec![(
+                "softmax#0".into(),
+                PhaseStats { bytes, msgs: 1, flights: 2 },
+            )],
+            phase_wall: vec![],
+            wall_s: wall,
+        }
+    }
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut reg = MetricsRegistry::default();
+        reg.record("cipherprune", &fake_run(1.0, 100));
+        reg.record("cipherprune", &fake_run(3.0, 200));
+        let m = reg.get("cipherprune").unwrap();
+        assert_eq!(m.runs, 2);
+        assert!((m.mean_wall_s() - 2.0).abs() < 1e-12);
+        assert_eq!(m.bytes_total, 300);
+        assert_eq!(m.by_protocol["softmax"].bytes, 300);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut m = EngineMetrics::default();
+        for i in 1..=10 {
+            m.record(&fake_run(i as f64, 0));
+        }
+        assert!((m.percentile_wall_s(0.0) - 1.0).abs() < 1e-12);
+        assert!((m.percentile_wall_s(1.0) - 10.0).abs() < 1e-12);
+        assert!(m.percentile_wall_s(0.5) >= 5.0);
+    }
+
+    #[test]
+    fn wan_slower_than_lan() {
+        let mut m = EngineMetrics::default();
+        m.record(&fake_run(1.0, 1_000_000));
+        assert!(m.modeled_total_s(&NetModel::WAN) > m.modeled_total_s(&NetModel::LAN));
+    }
+
+    #[test]
+    fn report_mentions_engines() {
+        let mut reg = MetricsRegistry::default();
+        reg.record("iron", &fake_run(1.0, 10));
+        assert!(reg.report().contains("iron"));
+    }
+}

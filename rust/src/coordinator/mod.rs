@@ -1,0 +1,20 @@
+//! Layer-3 serving coordinator: request routing, dynamic batching, engine
+//! dispatch, threshold schedules, and metrics.
+//!
+//! The paper's system contribution is the protocol stack; the coordinator is
+//! the deployment shell around it — a leader loop that admits requests,
+//! buckets them by length (private-inference cost is quadratic in padded
+//! length), dispatches batches to engine workers, and aggregates per-protocol
+//! metrics. `rust/src/main.rs` exposes it as the `serve` subcommand.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod types;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use engine::{run_inference, EngineConfig, RingWeights};
+pub use metrics::MetricsRegistry;
+pub use router::{Router, RouterConfig};
+pub use types::{EngineKind, InferenceRequest, LayerStat, RunResult};

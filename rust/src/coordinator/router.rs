@@ -1,0 +1,251 @@
+//! Request router: admits requests, drives the length-bucketed batcher, pads
+//! each batch to its bucket, executes batch members on parallel engine
+//! workers (each private inference is its own P0/P1 thread pair), and
+//! records metrics.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::nn::{workload::PAD_ID, ModelWeights, ThresholdSchedule};
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::engine::{run_inference, EngineConfig};
+use super::metrics::MetricsRegistry;
+use super::types::{EngineKind, InferenceRequest, RunResult};
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub policy: BatchPolicy,
+    /// Max concurrent engine executions within a batch.
+    pub workers: usize,
+    /// BFV ring degree handed to engines.
+    pub he_n: usize,
+    /// θ/β schedule for the CipherPrune engines.
+    pub schedule: Option<ThresholdSchedule>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: BatchPolicy::default(),
+            workers: 4,
+            he_n: crate::he::params::N,
+            schedule: None,
+        }
+    }
+}
+
+/// Response to one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: RunResult,
+    /// Padded length the request was executed at.
+    pub bucket: usize,
+    /// Queueing + execution latency.
+    pub latency_s: f64,
+}
+
+/// The leader: owns the batcher, model weights, and metrics.
+pub struct Router {
+    weights: Arc<ModelWeights>,
+    cfg: RouterConfig,
+    batcher: Batcher,
+    pub metrics: MetricsRegistry,
+    submitted: Vec<(u64, Instant)>,
+}
+
+impl Router {
+    pub fn new(weights: Arc<ModelWeights>, cfg: RouterConfig) -> Self {
+        let batcher = Batcher::new(cfg.policy);
+        Router { weights, cfg, batcher, metrics: MetricsRegistry::default(), submitted: Vec::new() }
+    }
+
+    fn engine_config(&self, kind: EngineKind, seed: u64) -> EngineConfig {
+        let n_layers = self.weights.config.n_layers;
+        let mut ec = EngineConfig::new(kind, n_layers);
+        ec.he_n = self.cfg.he_n;
+        ec.seed = seed;
+        if let Some(s) = &self.cfg.schedule {
+            if matches!(kind, EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly) {
+                ec.schedule = s.clone().fit_layers(n_layers);
+            }
+        }
+        ec
+    }
+
+    /// Submit a request (queued until a batch releases).
+    /// Err = rejected (too long for the policy).
+    pub fn submit(&mut self, req: InferenceRequest) -> Result<(), InferenceRequest> {
+        let id = req.id;
+        self.batcher.push(req)?;
+        self.submitted.push((id, Instant::now()));
+        Ok(())
+    }
+
+    fn run_batch(&mut self, batch: Batch) -> Vec<Response> {
+        let bucket = batch.bucket;
+        let weights = self.weights.clone();
+        let workers = self.cfg.workers.max(1);
+        // pad all requests to the bucket length
+        let jobs: Vec<(u64, EngineKind, Vec<usize>)> = batch
+            .requests
+            .into_iter()
+            .map(|mut r| {
+                r.ids.resize(bucket, PAD_ID);
+                (r.id, r.engine, r.ids)
+            })
+            .collect();
+        let cfgs: Vec<EngineConfig> = jobs
+            .iter()
+            .map(|(id, kind, _)| self.engine_config(*kind, 0xBA7C * (*id + 1)))
+            .collect();
+        // execute with bounded parallelism
+        let results: Vec<(u64, EngineKind, RunResult)> = std::thread::scope(|s| {
+            let mut out = Vec::with_capacity(jobs.len());
+            for base in (0..jobs.len()).step_by(workers) {
+                let end = (base + workers).min(jobs.len());
+                let handles: Vec<_> = (base..end)
+                    .map(|i| {
+                        let weights = weights.clone();
+                        let job = &jobs[i];
+                        let cfg = &cfgs[i];
+                        s.spawn(move || {
+                            let r = run_inference(cfg, &weights, &job.2);
+                            (job.0, job.1, r)
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    out.push(h.join().expect("engine worker panicked"));
+                }
+            }
+            out
+        });
+        let now = Instant::now();
+        results
+            .into_iter()
+            .map(|(id, kind, result)| {
+                self.metrics.record(kind.name(), &result);
+                let latency_s = self
+                    .submitted
+                    .iter()
+                    .find(|(i, _)| *i == id)
+                    .map(|(_, t)| now.duration_since(*t).as_secs_f64())
+                    .unwrap_or(result.wall_s);
+                self.submitted.retain(|(i, _)| *i != id);
+                Response { id, result, bucket, latency_s }
+            })
+            .collect()
+    }
+
+    /// Release and execute at most one ready batch.
+    pub fn step(&mut self) -> Vec<Response> {
+        match self.batcher.next_batch(Instant::now()) {
+            Some(b) => self.run_batch(b),
+            None => vec![],
+        }
+    }
+
+    /// Flush everything that is still queued.
+    pub fn flush(&mut self) -> Vec<Response> {
+        let batches = self.batcher.drain_all();
+        batches.into_iter().flat_map(|b| self.run_batch(b)).collect()
+    }
+
+    /// Convenience: submit all, then drain to completion.
+    pub fn process(&mut self, reqs: Vec<InferenceRequest>) -> Vec<Response> {
+        let mut out = Vec::new();
+        for r in reqs {
+            if self.submit(r).is_err() {
+                continue; // rejected: caller inspects `out` length
+            }
+            out.extend(self.step());
+        }
+        out.extend(self.flush());
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ModelConfig, Workload};
+
+    fn mk_router(max_batch: usize) -> Router {
+        let cfg = ModelConfig::tiny();
+        let weights = Arc::new(ModelWeights::salient(&cfg, 42));
+        Router::new(
+            weights,
+            RouterConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    linger: std::time::Duration::from_millis(0),
+                    min_bucket: 8,
+                    max_tokens: 64,
+                },
+                workers: 2,
+                he_n: 128,
+                schedule: None,
+            },
+        )
+    }
+
+    fn mk_reqs(n: usize, engine: EngineKind) -> Vec<InferenceRequest> {
+        let cfg = ModelConfig::tiny();
+        let wl = Workload::qnli_like(&cfg, 8);
+        wl.batch(n, 99)
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| InferenceRequest { id: i as u64, ids: s.ids, engine })
+            .collect()
+    }
+
+    #[test]
+    fn processes_all_requests() {
+        let mut r = mk_router(2);
+        let reqs = mk_reqs(3, EngineKind::CipherPrune);
+        let resp = r.process(reqs);
+        assert_eq!(resp.len(), 3);
+        assert_eq!(r.pending(), 0);
+        for (i, rsp) in resp.iter().enumerate() {
+            assert_eq!(rsp.id, i as u64);
+            assert_eq!(rsp.result.logits.len(), 2);
+            assert_eq!(rsp.bucket, 8);
+        }
+        let m = r.metrics.get("cipherprune").unwrap();
+        assert_eq!(m.runs, 3);
+    }
+
+    #[test]
+    fn rejects_overlong_requests() {
+        let mut r = mk_router(2);
+        let bad = InferenceRequest {
+            id: 7,
+            ids: vec![1; 100],
+            engine: EngineKind::CipherPrune,
+        };
+        assert!(r.submit(bad).is_err());
+    }
+
+    #[test]
+    fn mixed_engines_recorded_separately() {
+        let mut r = mk_router(4);
+        let mut reqs = mk_reqs(2, EngineKind::CipherPrune);
+        let mut reqs2 = mk_reqs(2, EngineKind::BoltNoWe);
+        for q in &mut reqs2 {
+            q.id += 10;
+        }
+        reqs.append(&mut reqs2);
+        let resp = r.process(reqs);
+        assert_eq!(resp.len(), 4);
+        assert_eq!(r.metrics.get("cipherprune").unwrap().runs, 2);
+        assert_eq!(r.metrics.get("bolt-no-we").unwrap().runs, 2);
+    }
+}

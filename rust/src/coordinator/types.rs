@@ -1,0 +1,170 @@
+//! Request/response and result types of the serving coordinator.
+
+use crate::net::PhaseStats;
+
+/// The engine variants the coordinator can dispatch to — the paper's
+/// comparison set (Tables 1–2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Plaintext oracle (no crypto; reference + XLA runtime path).
+    Plaintext,
+    /// IRON (Hao et al. 2022): LUT-precision non-linears, no pruning.
+    Iron,
+    /// BOLT without word elimination: polynomial non-linears, no pruning.
+    BoltNoWe,
+    /// BOLT: polynomial non-linears + one-time 50% W.E. (bitonic sort).
+    Bolt,
+    /// CipherPrune†: progressive encrypted token pruning only.
+    CipherPrunePruneOnly,
+    /// CipherPrune: pruning + encrypted polynomial reduction.
+    CipherPrune,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Plaintext => "plaintext",
+            EngineKind::Iron => "iron",
+            EngineKind::BoltNoWe => "bolt-no-we",
+            EngineKind::Bolt => "bolt",
+            EngineKind::CipherPrunePruneOnly => "cipherprune-prune-only",
+            EngineKind::CipherPrune => "cipherprune",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "plaintext" => EngineKind::Plaintext,
+            "iron" => EngineKind::Iron,
+            "bolt-no-we" => EngineKind::BoltNoWe,
+            "bolt" => EngineKind::Bolt,
+            "cipherprune-prune-only" | "cipherprune+" => EngineKind::CipherPrunePruneOnly,
+            "cipherprune" => EngineKind::CipherPrune,
+            _ => return None,
+        })
+    }
+
+    /// All private (non-oracle) engines.
+    pub fn private_engines() -> [EngineKind; 5] {
+        [
+            EngineKind::Iron,
+            EngineKind::BoltNoWe,
+            EngineKind::Bolt,
+            EngineKind::CipherPrunePruneOnly,
+            EngineKind::CipherPrune,
+        ]
+    }
+}
+
+/// One inference request (client side).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub ids: Vec<usize>,
+    pub engine: EngineKind,
+}
+
+/// Per-layer decision statistics (Fig. 19, Table 3).
+#[derive(Clone, Debug, Default)]
+pub struct LayerStat {
+    pub n_in: usize,
+    pub n_kept: usize,
+    /// Kept tokens on the high-degree path.
+    pub n_high: usize,
+    /// Oblivious swaps performed by Π_mask / bitonic sort.
+    pub swaps: usize,
+    /// Wall time of the pruning protocol in this layer (s).
+    pub prune_wall_s: f64,
+    /// SoftMax protocol traffic this layer (bytes).
+    pub softmax_bytes: u64,
+    /// GELU protocol traffic this layer (bytes).
+    pub gelu_bytes: u64,
+}
+
+/// Result of one private inference run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub logits: Vec<f64>,
+    pub layer_stats: Vec<LayerStat>,
+    /// Per-phase traffic, keyed by "protocol#layer" labels.
+    pub phases: Vec<(String, PhaseStats)>,
+    /// Per-phase P0 wall time (s), same keys.
+    pub phase_wall: Vec<(String, f64)>,
+    /// End-to-end wall time (s), both parties in-process.
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    pub fn predicted(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Total traffic over all phases.
+    pub fn total_stats(&self) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for (_, s) in &self.phases {
+            t.add(s);
+        }
+        t
+    }
+
+    /// Aggregate traffic for phases whose label starts with `prefix`.
+    pub fn stats_by_prefix(&self, prefix: &str) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for (name, s) in &self.phases {
+            if name.starts_with(prefix) {
+                t.add(s);
+            }
+        }
+        t
+    }
+
+    /// Aggregate wall time for phases whose label starts with `prefix`.
+    pub fn wall_by_prefix(&self, prefix: &str) -> f64 {
+        self.phase_wall
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, w)| w)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for e in EngineKind::private_engines() {
+            assert_eq!(EngineKind::by_name(e.name()), Some(e));
+        }
+        assert_eq!(EngineKind::by_name("plaintext"), Some(EngineKind::Plaintext));
+        assert!(EngineKind::by_name("x").is_none());
+    }
+
+    #[test]
+    fn prefix_aggregation() {
+        let mk = |b: u64| PhaseStats { bytes: b, ..Default::default() };
+        let r = RunResult {
+            logits: vec![0.1, 0.9],
+            layer_stats: vec![],
+            phases: vec![
+                ("softmax#0".into(), mk(10)),
+                ("softmax#1".into(), mk(20)),
+                ("gelu#0".into(), mk(5)),
+            ],
+            phase_wall: vec![("softmax#0".into(), 1.0), ("softmax#1".into(), 2.0)],
+            wall_s: 3.0,
+        };
+        assert_eq!(r.stats_by_prefix("softmax").bytes, 30);
+        assert_eq!(r.stats_by_prefix("gelu").bytes, 5);
+        assert_eq!(r.total_stats().bytes, 35);
+        assert!((r.wall_by_prefix("softmax") - 3.0).abs() < 1e-12);
+        assert_eq!(r.predicted(), 1);
+    }
+}

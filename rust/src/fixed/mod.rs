@@ -1,0 +1,346 @@
+//! Fixed-point arithmetic over the ring Z_2^64 and dense tensor helpers.
+//!
+//! All MPC protocols in this framework operate on additively secret-shared values
+//! in Z_2^64 (natural `u64` wrapping arithmetic). Real values are embedded as
+//! two's-complement fixed-point numbers with `FRAC_BITS` fractional bits
+//! (the paper follows IRON/BOLT and uses scale ~2^12).
+
+pub type Ring = u64;
+
+/// Default fractional bits (scale = 2^12 = 4096), matching prior private
+/// Transformer inference systems.
+pub const FRAC_BITS: u32 = 12;
+
+/// Fixed-point codec with a configurable scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fix {
+    pub frac_bits: u32,
+}
+
+impl Default for Fix {
+    fn default() -> Self {
+        Fix { frac_bits: FRAC_BITS }
+    }
+}
+
+impl Fix {
+    pub const fn new(frac_bits: u32) -> Self {
+        Fix { frac_bits }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Encode a float into the ring (two's complement fixed point).
+    #[inline]
+    pub fn enc(&self, x: f64) -> Ring {
+        let v = (x * self.scale()).round();
+        (v as i64) as u64
+    }
+
+    /// Decode a ring element into a float (signed interpretation).
+    #[inline]
+    pub fn dec(&self, v: Ring) -> f64 {
+        (v as i64) as f64 / self.scale()
+    }
+
+    pub fn enc_vec(&self, xs: &[f64]) -> Vec<Ring> {
+        xs.iter().map(|&x| self.enc(x)).collect()
+    }
+
+    pub fn dec_vec(&self, vs: &[Ring]) -> Vec<f64> {
+        vs.iter().map(|&v| self.dec(v)).collect()
+    }
+
+    /// Truncate a plaintext fixed-point product back to scale (arithmetic shift).
+    #[inline]
+    pub fn trunc(&self, v: Ring) -> Ring {
+        (((v as i64) >> self.frac_bits) as i64) as u64
+    }
+}
+
+/// Signed value of a ring element.
+#[inline]
+pub fn to_i64(v: Ring) -> i64 {
+    v as i64
+}
+
+/// Dense row-major matrix over the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Ring>,
+}
+
+impl RingMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Ring>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> Ring {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut Ring {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[Ring] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [Ring] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Wrapping matrix product (Z_2^64).
+    pub fn matmul(&self, other: &RingMat) -> RingMat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = RingMat::zeros(self.rows, other.cols);
+        // i-k-j loop order for cache-friendly access to `other`.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let orow_out = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow_out.iter_mut().zip(orow.iter()) {
+                    *o = o.wrapping_add(a.wrapping_mul(b));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> RingMat {
+        let mut out = RingMat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &RingMat) -> RingMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a.wrapping_add(*b))
+            .collect();
+        RingMat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &RingMat) -> RingMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a.wrapping_sub(*b))
+            .collect();
+        RingMat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Keep only the first `n` rows.
+    pub fn truncate_rows(&mut self, n: usize) {
+        assert!(n <= self.rows);
+        self.rows = n;
+        self.data.truncate(n * self.cols);
+    }
+
+    pub fn map(&self, f: impl Fn(Ring) -> Ring) -> RingMat {
+        RingMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+/// Element-wise wrapping ops on slices (used heavily on shares).
+pub fn add_vec(a: &[Ring], b: &[Ring]) -> Vec<Ring> {
+    a.iter().zip(b).map(|(x, y)| x.wrapping_add(*y)).collect()
+}
+
+pub fn sub_vec(a: &[Ring], b: &[Ring]) -> Vec<Ring> {
+    a.iter().zip(b).map(|(x, y)| x.wrapping_sub(*y)).collect()
+}
+
+pub fn neg_vec(a: &[Ring]) -> Vec<Ring> {
+    a.iter().map(|x| x.wrapping_neg()).collect()
+}
+
+pub fn scale_vec(a: &[Ring], k: Ring) -> Vec<Ring> {
+    a.iter().map(|x| x.wrapping_mul(k)).collect()
+}
+
+pub fn add_assign_vec(a: &mut [Ring], b: &[Ring]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = x.wrapping_add(*y);
+    }
+}
+
+/// Float matrix (plaintext reference / weights source).
+#[derive(Clone, Debug)]
+pub struct F64Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl F64Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn to_ring(&self, fix: Fix) -> RingMat {
+        RingMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| fix.enc(x)).collect(),
+        }
+    }
+
+    pub fn matmul(&self, other: &F64Mat) -> F64Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = F64Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                let orow = other.row(k);
+                let orow_out = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow_out.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl RingMat {
+    pub fn to_f64(&self, fix: Fix) -> F64Mat {
+        F64Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| fix.dec(v)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fix_roundtrip() {
+        let f = Fix::default();
+        for x in [-3.75f64, 0.0, 0.5, 100.25, -0.000244140625] {
+            let v = f.enc(x);
+            assert!((f.dec(v) - x).abs() < 1.0 / f.scale(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn fix_negative_encoding_wraps() {
+        let f = Fix::default();
+        let v = f.enc(-1.0);
+        assert_eq!(v, (-(4096i64)) as u64);
+        assert_eq!(f.dec(v), -1.0);
+    }
+
+    #[test]
+    fn fix_trunc_matches_float_product() {
+        let f = Fix::default();
+        for (a, b) in [(1.5, 2.25), (-1.5, 2.25), (3.0, -0.125), (-2.0, -2.0)] {
+            let p = f.enc(a).wrapping_mul(f.enc(b));
+            let t = f.trunc(p);
+            assert!((f.dec(t) - a * b).abs() < 2.0 / f.scale(), "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn ring_matmul_matches_float() {
+        let fx = Fix::default();
+        let a = F64Mat::from_vec(2, 3, vec![1.0, 2.0, -0.5, 0.25, -1.0, 3.0]);
+        let b = F64Mat::from_vec(3, 2, vec![0.5, 1.0, -2.0, 0.75, 1.5, -1.0]);
+        let cf = a.matmul(&b);
+        let cr = a.to_ring(fx).matmul(&b.to_ring(fx));
+        // ring product has scale 2^(2f); truncate once to compare
+        for i in 0..2 {
+            for j in 0..2 {
+                let got = fx.dec(fx.trunc(cr.at(i, j)));
+                assert!((got - cf.at(i, j)).abs() < 1e-2, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut id = RingMat::zeros(3, 3);
+        for i in 0..3 {
+            *id.at_mut(i, i) = 1;
+        }
+        let m = RingMat::from_vec(3, 3, (1..=9).collect());
+        assert_eq!(m.matmul(&id), m);
+        assert_eq!(id.matmul(&m), m);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = RingMat::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(2, 1), m.at(1, 2));
+    }
+
+    #[test]
+    fn vec_ops_wrap() {
+        let a = vec![u64::MAX, 1];
+        let b = vec![1u64, 2];
+        assert_eq!(add_vec(&a, &b), vec![0, 3]);
+        assert_eq!(sub_vec(&b, &a), vec![2, 1]);
+        assert_eq!(neg_vec(&[1]), vec![u64::MAX]);
+    }
+
+    #[test]
+    fn truncate_rows_works() {
+        let mut m = RingMat::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]);
+        m.truncate_rows(2);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.data, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Secure comparison: the millionaires protocol (CrypTFlow2-style) and the
+//! derived Π_MSB / Π_CMP used by the paper's pruning protocol (Fig. 13, step 3)
+//! and by the piecewise-polynomial activations.
+//!
+//! Millionaires: P0 holds α, P1 holds β (both < 2^64 private inputs); the
+//! parties learn boolean shares of [α > β]. Inputs are split into 16 leaves of
+//! 4 bits; one 1-of-16 OT per leaf delivers shares of per-leaf (gt, eq) bits,
+//! which a log-depth tree combines with batched AND gates:
+//!     (gt, eq) ∘ (gt', eq') = (gt ⊕ eq∧gt', eq∧eq').
+//!
+//! Π_MSB: for x = x0 + x1 mod 2^64,
+//!     msb(x) = msb(x0) ⊕ msb(x1) ⊕ carry, with
+//!     carry = [ (x0 mod 2^63) + (x1 mod 2^63) ≥ 2^63 ]
+//!           = millionaires( x0 mod 2^63  >  2^63 − 1 − (x1 mod 2^63) ).
+
+use super::Mpc;
+use crate::fixed::Ring;
+
+/// Bits per leaf (k = 2^M = 16-message OTs).
+const M: usize = 4;
+const K: usize = 1 << M;
+
+/// Comparison domain for fixed-point activations. All values fed to Π_CMP
+/// are bounded well below 2^31 at the default scale (f = 12), so comparing
+/// in a 2^32 ring halves the leaf count and drops one combine level versus
+/// the full 64-bit lane (§Perf).
+pub const CMP_BITS: u32 = 32;
+
+impl Mpc {
+    /// Millionaires: P0 inputs `alpha`, P1 inputs `beta` (same length; the
+    /// other party's slice is ignored). Returns boolean shares of [α > β].
+    pub fn millionaires(&mut self, inputs: &[u64]) -> Vec<u8> {
+        self.millionaires_bits(inputs, 64)
+    }
+
+    /// Millionaires over the low `nbits` of the inputs.
+    pub fn millionaires_bits(&mut self, inputs: &[u64], nbits: u32) -> Vec<u8> {
+        let n = inputs.len();
+        if n == 0 {
+            return vec![];
+        }
+        let leaves = (nbits as usize).div_ceil(M);
+        // --- leaf phase: per element, per leaf, shares of (gt, eq) ---
+        // P0 = OT sender. Message for receiver leaf value u packs two bits:
+        // bit0 = [α_leaf > u] ^ r_gt, bit1 = [α_leaf == u] ^ r_eq.
+        let (mut gt, mut eq): (Vec<Vec<u8>>, Vec<Vec<u8>>) = if self.is_p0() {
+            let mut r_gt = vec![vec![0u8; n]; leaves];
+            let mut r_eq = vec![vec![0u8; n]; leaves];
+            let mut msgs = vec![0u8; n * leaves * K];
+            for (i, &alpha) in inputs.iter().enumerate() {
+                for l in 0..leaves {
+                    let a_leaf = ((alpha >> (l * M)) & (K as u64 - 1)) as usize;
+                    let rg = (self.ctx.rng.next_u64() & 1) as u8;
+                    let re = (self.ctx.rng.next_u64() & 1) as u8;
+                    r_gt[l][i] = rg;
+                    r_eq[l][i] = re;
+                    let base = (i * leaves + l) * K;
+                    for u in 0..K {
+                        let g = ((a_leaf > u) as u8) ^ rg;
+                        let e = ((a_leaf == u) as u8) ^ re;
+                        msgs[base + u] = g | (e << 1);
+                    }
+                }
+            }
+            self.ot.otk_send_flat(&mut self.ctx.ch, &msgs, n * leaves, K, 1);
+            (r_gt, r_eq)
+        } else {
+            let mut indices = Vec::with_capacity(n * leaves);
+            for &beta in inputs.iter() {
+                for l in 0..leaves {
+                    indices.push(((beta >> (l * M)) & (K as u64 - 1)) as usize);
+                }
+            }
+            let got = self.ot.otk_recv_flat(&mut self.ctx.ch, &indices, K, 1);
+            let mut gt = vec![vec![0u8; n]; leaves];
+            let mut eq = vec![vec![0u8; n]; leaves];
+            for i in 0..n {
+                for l in 0..leaves {
+                    let b = got[i * leaves + l];
+                    gt[l][i] = b & 1;
+                    eq[l][i] = (b >> 1) & 1;
+                }
+            }
+            (gt, eq)
+        };
+
+        // --- combine phase: fold leaves pairwise, MSB side absorbs LSB side ---
+        // level t: width w -> w/2 with (hi, lo): gt = gt_hi ^ (eq_hi & gt_lo),
+        // eq = eq_hi & eq_lo. Both ANDs of a pair are batched into one call.
+        assert!(leaves.is_power_of_two(), "leaf count must fold pairwise");
+        let mut width = leaves;
+        while width > 1 {
+            let half = width / 2;
+            // batch: for each element and each pair, AND inputs
+            let mut and_x = Vec::with_capacity(n * half * 2);
+            let mut and_y = Vec::with_capacity(n * half * 2);
+            for p in 0..half {
+                let hi = 2 * p + 1;
+                let lo = 2 * p;
+                for i in 0..n {
+                    and_x.push(eq[hi][i]);
+                    and_y.push(gt[lo][i]);
+                }
+                for i in 0..n {
+                    and_x.push(eq[hi][i]);
+                    and_y.push(eq[lo][i]);
+                }
+            }
+            let z = self.and_bits(&and_x, &and_y);
+            let mut gt2 = vec![vec![0u8; n]; half];
+            let mut eq2 = vec![vec![0u8; n]; half];
+            for p in 0..half {
+                let hi = 2 * p + 1;
+                let base = p * 2 * n;
+                for i in 0..n {
+                    gt2[p][i] = gt[hi][i] ^ z[base + i];
+                    eq2[p][i] = z[base + n + i];
+                }
+            }
+            gt = gt2;
+            eq = eq2;
+            width = half;
+        }
+        gt.swap_remove(0)
+    }
+
+    /// Π_MSB: boolean shares of the most significant bit of shared x.
+    pub fn msb(&mut self, x: &[Ring]) -> Vec<u8> {
+        self.msb_bits(x, 64)
+    }
+
+    /// Π_MSB in a reduced 2^`bits` ring: the sign bit of x viewed as a
+    /// `bits`-bit two's-complement value. Sound whenever |x| < 2^(bits−1);
+    /// fixed-point activations at f = 12 satisfy this for bits = 32 with
+    /// ~2^11 headroom. The millionaires carry runs over bits−1 bits, so
+    /// bits = 32 costs 8 OT leaves / 3 combine levels instead of 16 / 4.
+    pub fn msb_bits(&mut self, x: &[Ring], bits: u32) -> Vec<u8> {
+        let n = x.len();
+        if n == 0 {
+            return vec![];
+        }
+        let top = bits - 1;
+        let lowmask = (1u64 << top) - 1;
+        let low: Vec<u64> = x.iter().map(|&v| v & lowmask).collect();
+        let mil_in: Vec<u64> = if self.is_p0() {
+            low.clone()
+        } else {
+            low.iter().map(|&v| lowmask - v).collect()
+        };
+        let carry = self.millionaires_bits(&mil_in, top);
+        (0..n)
+            .map(|i| carry[i] ^ ((x[i] >> top) & 1) as u8)
+            .collect()
+    }
+
+    /// Π_CMP with a threshold known to P0 (the server owns learned θ/β):
+    /// boolean shares of [x > θ]. Assumes |x − θ| < 2^(CMP_BITS−1) (always
+    /// true for fixed-point activations at the default scale).
+    pub fn cmp_gt_const(&mut self, x: &[Ring], theta: Ring) -> Vec<u8> {
+        // [x > θ] ⇔ [x − θ − 1 ≥ 0] ⇔ msb(x − θ − 1) == 0
+        let d: Vec<Ring> = if self.is_p0() {
+            x.iter().map(|&v| v.wrapping_sub(theta).wrapping_sub(1)).collect()
+        } else {
+            x.to_vec()
+        };
+        let m = self.msb_bits(&d, CMP_BITS);
+        self.not_bits(&m)
+    }
+
+    /// Π_CMP with per-element thresholds known to P0.
+    pub fn cmp_gt_consts(&mut self, x: &[Ring], thetas: &[Ring]) -> Vec<u8> {
+        assert_eq!(x.len(), thetas.len());
+        let d: Vec<Ring> = if self.is_p0() {
+            x.iter()
+                .zip(thetas)
+                .map(|(&v, &t)| v.wrapping_sub(t).wrapping_sub(1))
+                .collect()
+        } else {
+            x.to_vec()
+        };
+        let m = self.msb_bits(&d, CMP_BITS);
+        self.not_bits(&m)
+    }
+
+    /// [x > y] for two shared vectors: compare the shared difference with 0.
+    pub fn cmp_gt(&mut self, x: &[Ring], y: &[Ring]) -> Vec<u8> {
+        let d: Vec<Ring> = x
+            .iter()
+            .zip(y)
+            .map(|(&a, &b)| a.wrapping_sub(b).wrapping_sub(if self.is_p0() { 1 } else { 0 }))
+            .collect();
+        let m = self.msb_bits(&d, CMP_BITS);
+        self.not_bits(&m)
+    }
+
+    /// ReLU-style positivity test: boolean shares of [x ≥ 0] = NOT msb(x).
+    pub fn is_nonneg(&mut self, x: &[Ring]) -> Vec<u8> {
+        let m = self.msb_bits(x, CMP_BITS);
+        self.not_bits(&m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::run_mpc;
+    use super::super::TripleMode;
+    use crate::fixed::Fix;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn millionaires_exhaustive_small() {
+        // compare all pairs from an interesting set
+        let vals: Vec<u64> = vec![0, 1, 15, 16, 255, 256, (1 << 62), u64::MAX >> 1];
+        let pairs: Vec<(u64, u64)> = vals
+            .iter()
+            .flat_map(|&a| vals.iter().map(move |&b| (a, b)))
+            .collect();
+        let alphas: Vec<u64> = pairs.iter().map(|p| p.0).collect();
+        let betas: Vec<u64> = pairs.iter().map(|p| p.1).collect();
+        let a2 = alphas.clone();
+        let b2 = betas.clone();
+        let (s0, s1) = run_mpc(11, TripleMode::Ot, move |m| {
+            let input = if m.is_p0() { a2.clone() } else { b2.clone() };
+            m.millionaires(&input)
+        });
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            let got = s0[i] ^ s1[i];
+            assert_eq!(got == 1, a > b, "({a},{b})");
+        }
+    }
+
+    #[test]
+    fn millionaires_random() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let n = 200;
+        let alphas: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 1).collect();
+        let betas: Vec<u64> = (0..n).map(|_| rng.next_u64() >> 1).collect();
+        let a2 = alphas.clone();
+        let b2 = betas.clone();
+        let (s0, s1) = run_mpc(12, TripleMode::Ot, move |m| {
+            let input = if m.is_p0() { a2.clone() } else { b2.clone() };
+            m.millionaires(&input)
+        });
+        for i in 0..n {
+            assert_eq!((s0[i] ^ s1[i]) == 1, alphas[i] > betas[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn msb_on_shared_values() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut vals: Vec<u64> = (0..100).map(|_| rng.next_u64()).collect();
+        vals.extend_from_slice(&[0, 1, u64::MAX, 1 << 63, (1 << 63) - 1]);
+        let v2 = vals.clone();
+        let (s0, s1) = run_mpc(14, TripleMode::Ot, move |m| {
+            let mut prg = m.ctx.dealer_prg("test-msb");
+            let r: Vec<u64> = (0..v2.len()).map(|_| prg.next_u64()).collect();
+            let mine: Vec<u64> = if m.is_p0() {
+                v2.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect()
+            } else {
+                r.clone()
+            };
+            m.msb(&mine)
+        });
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!((s0[i] ^ s1[i]) as u64, v >> 63, "i={i} v={v:#x}");
+        }
+    }
+
+    #[test]
+    fn cmp_gt_const_fixed_point() {
+        let fx = Fix::default();
+        let xs = [-5.0f64, -0.01, 0.0, 0.01, 0.49, 0.5, 0.51, 3.0];
+        let theta = fx.enc(0.5);
+        let enc: Vec<u64> = xs.iter().map(|&x| fx.enc(x)).collect();
+        let e2 = enc.clone();
+        let (s0, s1) = run_mpc(15, TripleMode::Ot, move |m| {
+            let mut prg = m.ctx.dealer_prg("test-cmp");
+            let r: Vec<u64> = (0..e2.len()).map(|_| prg.next_u64()).collect();
+            let mine: Vec<u64> = if m.is_p0() {
+                e2.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect()
+            } else {
+                r.clone()
+            };
+            m.cmp_gt_const(&mine, theta)
+        });
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!((s0[i] ^ s1[i]) == 1, x > 0.5, "x={x}");
+        }
+    }
+
+    #[test]
+    fn cmp_gt_between_shared() {
+        let fx = Fix::default();
+        let xs = [1.0f64, -2.0, 0.5, 0.5];
+        let ys = [0.5f64, -1.0, 0.5, -0.5];
+        let ex: Vec<u64> = xs.iter().map(|&x| fx.enc(x)).collect();
+        let ey: Vec<u64> = ys.iter().map(|&y| fx.enc(y)).collect();
+        let (ex2, ey2) = (ex.clone(), ey.clone());
+        let (s0, s1) = run_mpc(16, TripleMode::Ot, move |m| {
+            let mut prg = m.ctx.dealer_prg("test-cmp2");
+            let rx: Vec<u64> = (0..ex2.len()).map(|_| prg.next_u64()).collect();
+            let ry: Vec<u64> = (0..ey2.len()).map(|_| prg.next_u64()).collect();
+            let (mx, my): (Vec<u64>, Vec<u64>) = if m.is_p0() {
+                (
+                    ex2.iter().zip(&rx).map(|(a, b)| a.wrapping_sub(*b)).collect(),
+                    ey2.iter().zip(&ry).map(|(a, b)| a.wrapping_sub(*b)).collect(),
+                )
+            } else {
+                (rx.clone(), ry.clone())
+            };
+            m.cmp_gt(&mx, &my)
+        });
+        for i in 0..xs.len() {
+            assert_eq!((s0[i] ^ s1[i]) == 1, xs[i] > ys[i], "i={i}");
+        }
+    }
+}

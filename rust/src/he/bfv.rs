@@ -1,0 +1,667 @@
+//! BFV homomorphic encryption over R_q = Z_q[X]/(X^N+1), RNS form.
+//!
+//! Implements exactly what the linear-layer protocol needs:
+//! symmetric-key RLWE encryption (the decryptor is always the encryptor — the
+//! other party only evaluates), ciphertext⊕ciphertext addition, and
+//! ciphertext⊗plaintext multiply-accumulate with NTT-cached plaintext
+//! operands. Fresh ciphertexts are seed-compressed (c1 is regenerated from a
+//! PRG seed), halving upstream traffic.
+
+use super::bigint::{
+    divround_shift64, mul_u128_u64, u192_mod_small, U192,
+};
+use super::ntt::{add_mod, mul_mod, mul_mod_shoup, shoup, sub_mod, NttTable};
+use super::params::{CBD_K, NPRIMES, PRIMES, PSI_16384};
+use crate::util::{AesPrg, Xoshiro256};
+use std::sync::Arc;
+
+/// Shared immutable BFV context: NTT tables and CRT constants.
+pub struct BfvContext {
+    pub n: usize,
+    pub tables: Vec<NttTable>,
+    /// q = Π q_i as U192, and q/2 for rounding.
+    pub q_big: U192,
+    q_half: U192,
+    /// Δ = floor(q / 2^64) (fits u128 for 180-bit q).
+    pub delta: u128,
+    /// Δ mod q_i (for plaintext scaling in RNS).
+    delta_mod: [u64; NPRIMES],
+    /// CRT lift constants: M_i = q / q_i (u128) and y_i = M_i^{-1} mod q_i.
+    crt_m: [u128; NPRIMES],
+    crt_y: [u64; NPRIMES],
+}
+
+pub type Ctx = Arc<BfvContext>;
+
+impl BfvContext {
+    pub fn new(n: usize) -> Ctx {
+        assert!(n.is_power_of_two() && n <= 8192);
+        let tables: Vec<NttTable> = (0..NPRIMES)
+            .map(|i| {
+                let q = PRIMES[i];
+                // derive primitive 2n-th root from the 16384-th root
+                let mut psi = PSI_16384[i];
+                let mut order = 16384usize;
+                while order > 2 * n {
+                    psi = mul_mod(psi, psi, q);
+                    order /= 2;
+                }
+                NttTable::new(q, n, psi)
+            })
+            .collect();
+        // q as U192
+        let q01 = PRIMES[0] as u128 * PRIMES[1] as u128;
+        let q_big_full = mul_u128_u64(q01, PRIMES[2]);
+        // Δ = q >> 64
+        let delta = ((q_big_full[2] as u128) << 64) | q_big_full[1] as u128;
+        let delta_mod = std::array::from_fn(|i| (delta % PRIMES[i] as u128) as u64);
+        // q/2
+        let mut q_half = q_big_full;
+        let mut carry = 0u64;
+        for limb in q_half.iter_mut().rev() {
+            let v = ((carry as u128) << 64) | *limb as u128;
+            *limb = (v >> 1) as u64;
+            carry = (v & 1) as u64;
+        }
+        // CRT constants
+        let mut crt_m = [0u128; NPRIMES];
+        let mut crt_y = [0u64; NPRIMES];
+        for i in 0..NPRIMES {
+            let others: Vec<u64> =
+                (0..NPRIMES).filter(|&j| j != i).map(|j| PRIMES[j]).collect();
+            let m = others[0] as u128 * others[1] as u128;
+            crt_m[i] = m;
+            let m_mod = (m % PRIMES[i] as u128) as u64;
+            crt_y[i] = super::ntt::inv_mod(m_mod, PRIMES[i]);
+        }
+        Arc::new(BfvContext {
+            n,
+            tables,
+            q_big: q_big_full,
+            q_half,
+            delta,
+            delta_mod,
+            crt_m,
+            crt_y,
+        })
+    }
+
+    /// Total bytes of one full (uncompressed) ciphertext on the wire.
+    pub fn ct_bytes(&self) -> usize {
+        2 * NPRIMES * self.n * 8
+    }
+
+    /// Bytes of a seed-compressed fresh ciphertext.
+    pub fn fresh_ct_bytes(&self) -> usize {
+        NPRIMES * self.n * 8 + 8
+    }
+}
+
+/// RNS polynomial: one residue vector per prime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RnsPoly {
+    pub res: Vec<Vec<u64>>, // [prime][coeff]
+    pub ntt: bool,
+}
+
+impl RnsPoly {
+    pub fn zero(ctx: &BfvContext, ntt: bool) -> Self {
+        RnsPoly { res: vec![vec![0u64; ctx.n]; NPRIMES], ntt }
+    }
+
+    /// Lift u64 plaintext coefficients (mod 2^64 values) into RNS residues.
+    pub fn from_u64_coeffs(ctx: &BfvContext, coeffs: &[u64]) -> Self {
+        assert_eq!(coeffs.len(), ctx.n);
+        let res = (0..NPRIMES)
+            .map(|i| {
+                let q = PRIMES[i];
+                coeffs.iter().map(|&c| c % q).collect()
+            })
+            .collect();
+        RnsPoly { res, ntt: false }
+    }
+
+    pub fn forward_ntt(&mut self, ctx: &BfvContext) {
+        assert!(!self.ntt);
+        for (i, r) in self.res.iter_mut().enumerate() {
+            ctx.tables[i].forward(r);
+        }
+        self.ntt = true;
+    }
+
+    pub fn inverse_ntt(&mut self, ctx: &BfvContext) {
+        assert!(self.ntt);
+        for (i, r) in self.res.iter_mut().enumerate() {
+            ctx.tables[i].inverse(r);
+        }
+        self.ntt = false;
+    }
+
+    pub fn add_assign(&mut self, other: &RnsPoly) {
+        assert_eq!(self.ntt, other.ntt);
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            for (a, &b) in self.res[i].iter_mut().zip(&other.res[i]) {
+                *a = add_mod(*a, b, q);
+            }
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &RnsPoly) {
+        assert_eq!(self.ntt, other.ntt);
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            for (a, &b) in self.res[i].iter_mut().zip(&other.res[i]) {
+                *a = sub_mod(*a, b, q);
+            }
+        }
+    }
+
+    /// Serialize residues to a flat u64 vector (for channel transport).
+    pub fn to_u64s(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(NPRIMES * self.res[0].len());
+        for r in &self.res {
+            out.extend_from_slice(r);
+        }
+        out
+    }
+
+    pub fn from_u64s(ctx: &BfvContext, flat: &[u64], ntt: bool) -> Self {
+        assert_eq!(flat.len(), NPRIMES * ctx.n);
+        let res = (0..NPRIMES)
+            .map(|i| flat[i * ctx.n..(i + 1) * ctx.n].to_vec())
+            .collect();
+        RnsPoly { res, ntt }
+    }
+}
+
+/// Plaintext operand cached in NTT form with Shoup companions — a ct⊗pt
+/// multiply against this is two integer multiplies per coefficient.
+pub struct PtNtt {
+    pub vals: Vec<Vec<u64>>,  // [prime][coeff], NTT domain
+    pub shoup: Vec<Vec<u64>>, // Shoup quotients
+}
+
+impl PtNtt {
+    /// Encode signed-magnitude plaintext coefficients (two's-complement u64,
+    /// e.g. fixed-point weights) into cached NTT form. The value is reduced
+    /// *as a signed integer* into each prime field so small negative weights
+    /// stay small.
+    pub fn encode(ctx: &BfvContext, coeffs: &[u64]) -> Self {
+        assert_eq!(coeffs.len(), ctx.n);
+        let mut vals: Vec<Vec<u64>> = (0..NPRIMES)
+            .map(|i| {
+                let q = PRIMES[i];
+                coeffs
+                    .iter()
+                    .map(|&c| {
+                        let s = c as i64;
+                        if s < 0 {
+                            q - ((s.unsigned_abs()) % q)
+                        } else {
+                            (s as u64) % q
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        for (i, v) in vals.iter_mut().enumerate() {
+            ctx.tables[i].forward(v);
+        }
+        let shoup_q = vals
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v.iter().map(|&w| shoup(w, PRIMES[i])).collect())
+            .collect();
+        PtNtt { vals, shoup: shoup_q }
+    }
+}
+
+/// Ternary secret key, stored in NTT form per prime for fast c1·s.
+pub struct SecretKey {
+    s_ntt: RnsPoly,
+}
+
+impl SecretKey {
+    pub fn gen(ctx: &BfvContext, rng: &mut Xoshiro256) -> Self {
+        let mut coeffs = vec![0u64; ctx.n];
+        for c in coeffs.iter_mut() {
+            *c = match rng.below(3) {
+                0 => 0,
+                1 => 1,
+                _ => u64::MAX, // -1
+            };
+        }
+        let mut s = RnsPoly::from_u64_coeffs_signed(ctx, &coeffs);
+        s.forward_ntt(ctx);
+        SecretKey { s_ntt: s }
+    }
+}
+
+impl RnsPoly {
+    /// Lift signed two's-complement u64 coefficients into RNS (centered).
+    pub fn from_u64_coeffs_signed(_ctx: &BfvContext, coeffs: &[u64]) -> Self {
+        let res = (0..NPRIMES)
+            .map(|i| {
+                let q = PRIMES[i];
+                coeffs
+                    .iter()
+                    .map(|&c| {
+                        let s = c as i64;
+                        if s < 0 {
+                            q - (s.unsigned_abs() % q)
+                        } else {
+                            s as u64 % q
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        RnsPoly { res, ntt: false }
+    }
+}
+
+/// A BFV ciphertext (c0, c1) with Dec(c) = round(t·(c0 + c1·s)/q) mod t.
+/// `c1_seed` is set for fresh seed-compressed ciphertexts.
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    pub c1_seed: Option<u64>,
+}
+
+fn expand_seed_poly(ctx: &BfvContext, seed: u64) -> RnsPoly {
+    // uniform polynomial per prime from an AES-CTR stream (NTT domain);
+    // bulk-filled so AES-NI pipelines the CTR blocks (§Perf).
+    let mut prg = AesPrg::from_u64_seed(seed);
+    let mut buf = vec![0u64; ctx.n];
+    let res = (0..NPRIMES)
+        .map(|i| {
+            let q = PRIMES[i];
+            prg.fill_u64(&mut buf);
+            // rejection-free: modulo bias < 2^-4 is irrelevant here
+            buf.iter().map(|&v| v % q).collect()
+        })
+        .collect();
+    RnsPoly { res, ntt: true }
+}
+
+fn sample_cbd(ctx: &BfvContext, rng: &mut Xoshiro256) -> RnsPoly {
+    let mut coeffs = vec![0u64; ctx.n];
+    for c in coeffs.iter_mut() {
+        let bits = rng.next_u64();
+        let a = (bits & ((1 << CBD_K) - 1)).count_ones() as i64;
+        let b = ((bits >> CBD_K) & ((1 << CBD_K) - 1)).count_ones() as i64;
+        *c = (a - b) as u64;
+    }
+    RnsPoly::from_u64_coeffs_signed(ctx, &coeffs)
+}
+
+/// Symmetric encryption of plaintext coefficients m ∈ (Z_2^64)^N.
+/// Output is in NTT form, ready for evaluation; c1 is seed-compressed.
+pub fn encrypt(
+    ctx: &BfvContext,
+    sk: &SecretKey,
+    m: &[u64],
+    rng: &mut Xoshiro256,
+) -> Ciphertext {
+    let seed = rng.next_u64();
+    let a = expand_seed_poly(ctx, seed); // NTT domain
+    // c0 = Δ·m + e − a·s  (all in NTT domain)
+    let mut dm = RnsPoly::zero(ctx, false);
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        let dq = ctx.delta_mod[i];
+        for (j, &mj) in m.iter().enumerate() {
+            dm.res[i][j] = mul_mod(dq, mj % q, q);
+        }
+    }
+    let mut e = sample_cbd(ctx, rng);
+    e.add_assign(&dm);
+    e.forward_ntt(ctx); // now Δm+e in NTT
+    let mut c0 = e;
+    // subtract a·s
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        for j in 0..ctx.n {
+            let as_ = mul_mod(a.res[i][j], sk.s_ntt.res[i][j], q);
+            c0.res[i][j] = sub_mod(c0.res[i][j], as_, q);
+        }
+    }
+    Ciphertext { c0, c1: a, c1_seed: Some(seed) }
+}
+
+/// Decrypt to plaintext coefficients mod 2^64.
+pub fn decrypt(ctx: &BfvContext, sk: &SecretKey, ct: &Ciphertext) -> Vec<u64> {
+    assert!(ct.c0.ntt && ct.c1.ntt);
+    // x = c0 + c1·s per prime, then inverse NTT
+    let mut x = ct.c0.clone();
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        for j in 0..ctx.n {
+            let cs = mul_mod(ct.c1.res[i][j], sk.s_ntt.res[i][j], q);
+            x.res[i][j] = add_mod(x.res[i][j], cs, q);
+        }
+    }
+    x.inverse_ntt(ctx);
+    // CRT-lift each coefficient and round: m = round(x·2^64 / q) mod 2^64
+    (0..ctx.n)
+        .map(|j| {
+            let mut acc: U192 = [0, 0, 0];
+            for i in 0..NPRIMES {
+                let xi = x.res[i][j];
+                let term = mul_mod(xi, ctx.crt_y[i], PRIMES[i]);
+                let prod = mul_u128_u64(ctx.crt_m[i], term);
+                acc = super::bigint::u192_add(acc, prod);
+            }
+            let lifted = u192_mod_small(acc, ctx.q_big);
+            divround_shift64(lifted, ctx.q_half, ctx.q_big)
+        })
+        .collect()
+}
+
+impl Ciphertext {
+    /// Homomorphic c += ct ⊗ pt (NTT-domain multiply-accumulate).
+    pub fn mul_pt_accumulate(&mut self, ct: &Ciphertext, pt: &PtNtt) {
+        assert!(self.c0.ntt && ct.c0.ntt);
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            let (pv, ps) = (&pt.vals[i], &pt.shoup[i]);
+            let dst0 = &mut self.c0.res[i];
+            let src0 = &ct.c0.res[i];
+            for j in 0..dst0.len() {
+                let p = mul_mod_shoup(src0[j], pv[j], ps[j], q);
+                dst0[j] = add_mod(dst0[j], p, q);
+            }
+            let dst1 = &mut self.c1.res[i];
+            let src1 = &ct.c1.res[i];
+            for j in 0..dst1.len() {
+                let p = mul_mod_shoup(src1[j], pv[j], ps[j], q);
+                dst1[j] = add_mod(dst1[j], p, q);
+            }
+        }
+    }
+
+    /// Homomorphic addition of a plaintext vector (Δ-scaled): used by the
+    /// evaluator to add its output mask −r before returning the ciphertext.
+    pub fn add_plain(&mut self, ctx: &BfvContext, m: &[u64]) {
+        assert!(self.c0.ntt);
+        let mut dm = RnsPoly::zero(ctx, false);
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            let dq = ctx.delta_mod[i];
+            for (j, &mj) in m.iter().enumerate() {
+                dm.res[i][j] = mul_mod(dq, mj % q, q);
+            }
+        }
+        dm.forward_ntt(ctx);
+        self.c0.add_assign(&dm);
+    }
+
+    pub fn zero_like(ctx: &BfvContext) -> Ciphertext {
+        Ciphertext {
+            c0: RnsPoly::zero(ctx, true),
+            c1: RnsPoly::zero(ctx, true),
+            c1_seed: None,
+        }
+    }
+
+    /// Wire format: fresh compressed (seed + c0) or full (c0 ‖ c1).
+    pub fn to_wire(&self) -> Vec<u64> {
+        match self.c1_seed {
+            Some(seed) => {
+                let mut v = vec![1u64, seed];
+                v.extend(self.c0.to_u64s());
+                v
+            }
+            None => {
+                let mut v = vec![0u64, 0u64];
+                v.extend(self.c0.to_u64s());
+                v.extend(self.c1.to_u64s());
+                v
+            }
+        }
+    }
+
+    pub fn from_wire(ctx: &BfvContext, flat: &[u64]) -> Ciphertext {
+        let tag = flat[0];
+        let seed = flat[1];
+        let body = &flat[2..];
+        if tag == 1 {
+            let c0 = RnsPoly::from_u64s(ctx, &body[..NPRIMES * ctx.n], true);
+            let c1 = expand_seed_poly(ctx, seed);
+            Ciphertext { c0, c1, c1_seed: Some(seed) }
+        } else {
+            let c0 = RnsPoly::from_u64s(ctx, &body[..NPRIMES * ctx.n], true);
+            let c1 = RnsPoly::from_u64s(ctx, &body[NPRIMES * ctx.n..], true);
+            Ciphertext { c0, c1, c1_seed: None }
+        }
+    }
+}
+
+/// Invariant-noise budget in bits (for tests/diagnostics): measures
+/// log2(q / (2·|q·frac(t·x/q)|_∞)) — how many doublings of noise remain.
+pub fn noise_budget(
+    ctx: &BfvContext,
+    sk: &SecretKey,
+    ct: &Ciphertext,
+    expected_m: &[u64],
+) -> f64 {
+    // decrypt and compare Δ·m to x — the residual is the noise
+    let mut x = ct.c0.clone();
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        for j in 0..ctx.n {
+            let cs = mul_mod(ct.c1.res[i][j], sk.s_ntt.res[i][j], q);
+            x.res[i][j] = add_mod(x.res[i][j], cs, q);
+        }
+    }
+    x.inverse_ntt(ctx);
+    let mut max_noise_bits: f64 = 0.0;
+    for j in 0..ctx.n {
+        // noise = x − Δ·m (mod q), centered
+        let mut acc: U192 = [0, 0, 0];
+        for i in 0..NPRIMES {
+            let xi = x.res[i][j];
+            let term = mul_mod(xi, ctx.crt_y[i], PRIMES[i]);
+            acc = super::bigint::u192_add(acc, mul_u128_u64(ctx.crt_m[i], term));
+        }
+        let lifted = u192_mod_small(acc, ctx.q_big);
+        let dm = mul_u128_u64(ctx.delta, expected_m[j]);
+        // noise = lifted − Δm mod q, take min(v, q−v)
+        let diff = if super::bigint::u192_geq(lifted, dm) {
+            super::bigint::u192_sub(lifted, dm)
+        } else {
+            super::bigint::u192_sub(super::bigint::u192_add(lifted, ctx.q_big), dm)
+        };
+        let diff_c = if super::bigint::u192_geq(diff, ctx.q_half) {
+            super::bigint::u192_sub(ctx.q_big, diff)
+        } else {
+            diff
+        };
+        let bits = if diff_c[2] != 0 {
+            192 - diff_c[2].leading_zeros() as i64
+        } else if diff_c[1] != 0 {
+            128 - diff_c[1].leading_zeros() as i64
+        } else if diff_c[0] != 0 {
+            64 - diff_c[0].leading_zeros() as i64
+        } else {
+            0
+        };
+        max_noise_bits = max_noise_bits.max(bits as f64);
+    }
+    // budget = log2(q) − noise_bits − 1
+    180.0 - max_noise_bits - 1.0
+}
+
+pub fn q_mod_t_is_small(_ctx: &BfvContext) -> bool {
+    true // see params.rs: q/t ≈ 2^116 makes ρ irrelevant for our magnitudes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize) -> (Ctx, SecretKey, Xoshiro256) {
+        let ctx = BfvContext::new(n);
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let sk = SecretKey::gen(&ctx, &mut rng);
+        (ctx, sk, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, sk, mut rng) = setup(1024);
+        let m: Vec<u64> = (0..ctx.n as u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let got = decrypt(&ctx, &sk, &ct);
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn decrypt_full_range_values() {
+        let (ctx, sk, mut rng) = setup(256);
+        let mut m = vec![0u64; ctx.n];
+        m[0] = u64::MAX;
+        m[1] = 1 << 63;
+        m[2] = (1 << 63) - 1;
+        m[3] = (-5i64) as u64;
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        assert_eq!(decrypt(&ctx, &sk, &ct), m);
+    }
+
+    #[test]
+    fn homomorphic_add_plain() {
+        let (ctx, sk, mut rng) = setup(256);
+        let m: Vec<u64> = (0..ctx.n as u64).collect();
+        let r: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let mut ct = encrypt(&ctx, &sk, &m, &mut rng);
+        ct.add_plain(&ctx, &r);
+        let got = decrypt(&ctx, &sk, &ct);
+        for j in 0..ctx.n {
+            assert_eq!(got[j], m[j].wrapping_add(r[j]), "j={j}");
+        }
+    }
+
+    #[test]
+    fn ct_pt_multiply_is_negacyclic_convolution() {
+        let (ctx, sk, mut rng) = setup(256);
+        // message: small mixed-sign values; pt: small signed weights
+        let m: Vec<u64> = (0..ctx.n)
+            .map(|j| ((j as i64 % 17) - 8) as u64)
+            .collect();
+        let mut w = vec![0u64; ctx.n];
+        w[0] = 3;
+        w[1] = (-2i64) as u64;
+        w[5] = 7;
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let pt = PtNtt::encode(&ctx, &w);
+        let mut acc = Ciphertext::zero_like(&ctx);
+        acc.mul_pt_accumulate(&ct, &pt);
+        let got = decrypt(&ctx, &sk, &acc);
+        // reference negacyclic convolution mod 2^64
+        let mut expect = vec![0u64; ctx.n];
+        for i in 0..ctx.n {
+            if w[i] == 0 {
+                continue;
+            }
+            for j in 0..ctx.n {
+                let p = m[j].wrapping_mul(w[i]);
+                let k = i + j;
+                if k < ctx.n {
+                    expect[k] = expect[k].wrapping_add(p);
+                } else {
+                    expect[k - ctx.n] = expect[k - ctx.n].wrapping_sub(p);
+                }
+            }
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn ct_pt_multiply_uniform_shares() {
+        // the critical case for the matmul protocol: message coefficients are
+        // *uniform* ring elements (secret shares)
+        let (ctx, sk, mut rng) = setup(256);
+        let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let mut w = vec![0u64; ctx.n];
+        for i in 0..16 {
+            w[i] = ((rng.next_u64() % 16384) as i64 - 8192) as u64; // |w| < 2^13
+        }
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let pt = PtNtt::encode(&ctx, &w);
+        let mut acc = Ciphertext::zero_like(&ctx);
+        acc.mul_pt_accumulate(&ct, &pt);
+        let got = decrypt(&ctx, &sk, &acc);
+        let mut expect = vec![0u64; ctx.n];
+        for i in 0..ctx.n {
+            if w[i] == 0 {
+                continue;
+            }
+            for j in 0..ctx.n {
+                let p = m[j].wrapping_mul(w[i]);
+                let k = i + j;
+                if k < ctx.n {
+                    expect[k] = expect[k].wrapping_add(p);
+                } else {
+                    expect[k - ctx.n] = expect[k - ctx.n].wrapping_sub(p);
+                }
+            }
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn accumulate_many_products_stays_correct() {
+        let (ctx, sk, mut rng) = setup(256);
+        let mut acc = Ciphertext::zero_like(&ctx);
+        let mut expect = vec![0u64; ctx.n];
+        for round in 0..8 {
+            let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+            let mut w = vec![0u64; ctx.n];
+            w[round] = (round as u64) + 2;
+            let ct = encrypt(&ctx, &sk, &m, &mut rng);
+            let pt = PtNtt::encode(&ctx, &w);
+            acc.mul_pt_accumulate(&ct, &pt);
+            for j in 0..ctx.n {
+                let k = round + j;
+                let p = m[j].wrapping_mul(w[round]);
+                if k < ctx.n {
+                    expect[k] = expect[k].wrapping_add(p);
+                } else {
+                    expect[k - ctx.n] = expect[k - ctx.n].wrapping_sub(p);
+                }
+            }
+        }
+        assert_eq!(decrypt(&ctx, &sk, &acc), expect);
+    }
+
+    #[test]
+    fn wire_roundtrip_fresh_and_full() {
+        let (ctx, sk, mut rng) = setup(256);
+        let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        // fresh compressed
+        let wire = ct.to_wire();
+        assert_eq!(wire.len(), 2 + NPRIMES * ctx.n);
+        let ct2 = Ciphertext::from_wire(&ctx, &wire);
+        assert_eq!(decrypt(&ctx, &sk, &ct2), m);
+        // full
+        let mut acc = Ciphertext::zero_like(&ctx);
+        let mut w = vec![0u64; ctx.n];
+        w[0] = 1;
+        acc.mul_pt_accumulate(&ct2, &PtNtt::encode(&ctx, &w));
+        let wire2 = acc.to_wire();
+        assert_eq!(wire2.len(), 2 + 2 * NPRIMES * ctx.n);
+        let ct3 = Ciphertext::from_wire(&ctx, &wire2);
+        assert_eq!(decrypt(&ctx, &sk, &ct3), m);
+    }
+
+    #[test]
+    fn noise_budget_is_large_for_fresh() {
+        let (ctx, sk, mut rng) = setup(256);
+        let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let nb = noise_budget(&ctx, &sk, &ct, &m);
+        assert!(nb > 100.0, "budget={nb}");
+    }
+}

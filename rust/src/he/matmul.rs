@@ -1,0 +1,300 @@
+//! Coefficient-packed homomorphic matrix multiplication (IRON-style).
+//!
+//! Computes X·W where X (rows×k) is encrypted row-blocks and W (k×m) is known
+//! to the evaluator. Matrices are tiled into sub-blocks of shape
+//! (n_w × k_w)·(k_w × m_w) with n_w·k_w·m_w ≤ N; one polynomial product per
+//! tile-pair yields a full (n_w × m_w) output sub-block at stride-separated
+//! coefficients, and tiles along k accumulate homomorphically (ciphertext
+//! additions are free-ish).
+//!
+//! Encoding (all indices within a tile):
+//!   px[i·k_w·m_w + j]            = X[i][j]
+//!   pw[(k_w−1−j) + c·k_w]        = W[j][c]
+//!   out[i·k_w·m_w + c·k_w + k_w−1] = Σ_j X[i][j]·W[j][c]
+//!
+//! Uniqueness: contributions to position i·k_w·m_w + c·k_w + (k_w−1) require
+//! a-index i'·k_w·m_w + j and b-index (k_w−1−j') + c'·k_w with matching sum;
+//! since 0 ≤ j, j' < k_w and 0 ≤ c' < m_w, only (i', c', j') = (i, c, j)
+//! lands there, and no wrap-around reaches the extraction positions.
+
+use super::bfv::{BfvContext, PtNtt};
+use crate::fixed::RingMat;
+
+/// Tiling plan for an (n × k) · (k × m) product in ring degree N.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatmulPlan {
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+    pub nw: usize,
+    pub kw: usize,
+    pub mw: usize,
+    /// ring degree
+    pub big_n: usize,
+}
+
+impl MatmulPlan {
+    /// Choose tile shape minimizing input + output ciphertext count subject
+    /// to nw·kw·mw ≤ N (powers of two for clean strides).
+    pub fn choose(n: usize, k: usize, m: usize, big_n: usize) -> MatmulPlan {
+        let mut best: Option<(usize, MatmulPlan)> = None;
+        let pow2 = |limit: usize| {
+            let mut v = vec![];
+            let mut p = 1;
+            while p <= limit {
+                v.push(p);
+                p *= 2;
+            }
+            v
+        };
+        for &kw in pow2(k.min(big_n)).iter() {
+            for &nw in pow2(n.min(big_n / kw)).iter() {
+                let mw_cap = big_n / (nw * kw);
+                if mw_cap == 0 {
+                    continue;
+                }
+                let mw = mw_cap.min(m.next_power_of_two()).max(1);
+                let plan = MatmulPlan { n, k, m, nw, kw, mw, big_n };
+                let cost = plan.input_cts() + plan.output_cts();
+                if best.map_or(true, |(c, _)| cost < c) {
+                    best = Some((cost, plan));
+                }
+            }
+        }
+        best.expect("no valid plan").1
+    }
+
+    pub fn tiles_n(&self) -> usize {
+        self.n.div_ceil(self.nw)
+    }
+    pub fn tiles_k(&self) -> usize {
+        self.k.div_ceil(self.kw)
+    }
+    pub fn tiles_m(&self) -> usize {
+        self.m.div_ceil(self.mw)
+    }
+
+    /// Ciphertexts the input owner must send.
+    pub fn input_cts(&self) -> usize {
+        self.tiles_n() * self.tiles_k()
+    }
+
+    /// Ciphertexts the evaluator returns.
+    pub fn output_cts(&self) -> usize {
+        self.tiles_n() * self.tiles_m()
+    }
+
+    /// Plaintext tile polynomials the evaluator caches.
+    pub fn weight_pts(&self) -> usize {
+        self.tiles_k() * self.tiles_m()
+    }
+
+    /// ct⊗pt multiply count.
+    pub fn mults(&self) -> usize {
+        self.tiles_n() * self.tiles_k() * self.tiles_m()
+    }
+
+    /// Encode one X tile (rows [r0, r0+nw) × cols [k0, k0+kw)) into plaintext
+    /// coefficients (mod-2^64 values, zero padded).
+    pub fn encode_x_tile(&self, x: &RingMat, rt: usize, kt: usize) -> Vec<u64> {
+        let mut out = vec![0u64; self.big_n];
+        let r0 = rt * self.nw;
+        let k0 = kt * self.kw;
+        for i in 0..self.nw {
+            let r = r0 + i;
+            if r >= x.rows {
+                break;
+            }
+            for j in 0..self.kw {
+                let c = k0 + j;
+                if c >= x.cols {
+                    break;
+                }
+                out[i * self.kw * self.mw + j] = x.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Encode one W tile (rows [k0, k0+kw) × cols [m0, m0+mw)).
+    pub fn encode_w_tile(&self, w: &RingMat, kt: usize, mt: usize) -> Vec<u64> {
+        let mut out = vec![0u64; self.big_n];
+        let k0 = kt * self.kw;
+        let m0 = mt * self.mw;
+        for j in 0..self.kw {
+            let r = k0 + j;
+            if r >= w.rows {
+                break;
+            }
+            for c in 0..self.mw {
+                let cc = m0 + c;
+                if cc >= w.cols {
+                    break;
+                }
+                out[(self.kw - 1 - j) + c * self.kw] = w.at(r, cc);
+            }
+        }
+        out
+    }
+
+    /// Encode and NTT-cache all weight tiles.
+    pub fn encode_weights(&self, ctx: &BfvContext, w: &RingMat) -> Vec<Vec<PtNtt>> {
+        assert_eq!(w.rows, self.k);
+        assert_eq!(w.cols, self.m);
+        (0..self.tiles_k())
+            .map(|kt| {
+                (0..self.tiles_m())
+                    .map(|mt| PtNtt::encode(ctx, &self.encode_w_tile(w, kt, mt)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Extract an output tile from decrypted coefficients into `out`
+    /// (accumulating with wrapping add).
+    pub fn extract_out_tile(
+        &self,
+        coeffs: &[u64],
+        rt: usize,
+        mt: usize,
+        out: &mut RingMat,
+    ) {
+        let r0 = rt * self.nw;
+        let m0 = mt * self.mw;
+        for i in 0..self.nw {
+            let r = r0 + i;
+            if r >= out.rows {
+                break;
+            }
+            for c in 0..self.mw {
+                let cc = m0 + c;
+                if cc >= out.cols {
+                    break;
+                }
+                let pos = i * self.kw * self.mw + c * self.kw + self.kw - 1;
+                *out.at_mut(r, cc) = out.at(r, cc).wrapping_add(coeffs[pos]);
+            }
+        }
+    }
+
+    /// Plaintext reference of the tiled computation (for tests): multiply the
+    /// encoded tiles as negacyclic polynomials mod 2^64 and extract.
+    pub fn reference_tile_product(px: &[u64], pw: &[u64]) -> Vec<u64> {
+        let n = px.len();
+        let mut out = vec![0u64; n];
+        for i in 0..n {
+            if px[i] == 0 {
+                continue;
+            }
+            for j in 0..n {
+                if pw[j] == 0 {
+                    continue;
+                }
+                let p = px[i].wrapping_mul(pw[j]);
+                let k = i + j;
+                if k < n {
+                    out[k] = out[k].wrapping_add(p);
+                } else {
+                    out[k - n] = out[k - n].wrapping_sub(p);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn rand_mat(rows: usize, cols: usize, bound: u64, seed: u64) -> RingMat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        RingMat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.below(2 * bound) as i64 - bound as i64) as u64)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn plan_respects_capacity() {
+        for (n, k, m) in [(128, 768, 768), (128, 64, 128), (4, 4, 4), (128, 768, 3072)] {
+            let p = MatmulPlan::choose(n, k, m, 8192);
+            assert!(p.nw * p.kw * p.mw <= 8192, "{p:?}");
+            assert!(p.nw >= 1 && p.kw >= 1 && p.mw >= 1);
+        }
+    }
+
+    #[test]
+    fn plan_costs_reasonable() {
+        let p = MatmulPlan::choose(128, 768, 768, 8192);
+        // must beat the naive row-per-ct (128 in, 9856 out) by a wide margin
+        assert!(p.input_cts() + p.output_cts() < 2000, "{p:?}");
+    }
+
+    #[test]
+    fn tiled_product_matches_matmul_mod_2_64() {
+        // pure coefficient-domain check (no HE): encode, polymul, extract
+        for (n, k, m, big_n) in [(6, 8, 10, 64), (4, 16, 4, 128), (3, 5, 7, 64)] {
+            let x = rand_mat(n, k, 1 << 20, 1);
+            let w = rand_mat(k, m, 1 << 13, 2);
+            let plan = MatmulPlan::choose(n, k, m, big_n);
+            let mut out = RingMat::zeros(n, m);
+            for rt in 0..plan.tiles_n() {
+                for mt in 0..plan.tiles_m() {
+                    let mut acc = vec![0u64; big_n];
+                    for kt in 0..plan.tiles_k() {
+                        let px = plan.encode_x_tile(&x, rt, kt);
+                        let pw = plan.encode_w_tile(&w, kt, mt);
+                        let prod = MatmulPlan::reference_tile_product(&px, &pw);
+                        for (a, b) in acc.iter_mut().zip(prod) {
+                            *a = a.wrapping_add(b);
+                        }
+                    }
+                    plan.extract_out_tile(&acc, rt, mt, &mut out);
+                }
+            }
+            let expect = x.matmul(&w);
+            assert_eq!(out, expect, "shape ({n},{k},{m}) big_n={big_n} plan={plan:?}");
+        }
+    }
+
+    #[test]
+    fn he_tiled_matmul_end_to_end() {
+        use crate::he::bfv::{decrypt, encrypt, BfvContext, Ciphertext, SecretKey};
+        let big_n = 256;
+        let (n, k, m) = (5, 12, 9);
+        let ctx = BfvContext::new(big_n);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let sk = SecretKey::gen(&ctx, &mut rng);
+        // X coefficients are uniform ring elements (they are *shares*)
+        let x = RingMat::from_vec(n, k, (0..n * k).map(|_| rng.next_u64()).collect());
+        let w = rand_mat(k, m, 1 << 13, 3);
+        let plan = MatmulPlan::choose(n, k, m, big_n);
+        let wt = plan.encode_weights(&ctx, &w);
+        // encrypt X tiles
+        let xct: Vec<Vec<_>> = (0..plan.tiles_n())
+            .map(|rt| {
+                (0..plan.tiles_k())
+                    .map(|kt| encrypt(&ctx, &sk, &plan.encode_x_tile(&x, rt, kt), &mut rng))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        // evaluate
+        let mut out = RingMat::zeros(n, m);
+        for rt in 0..plan.tiles_n() {
+            for mt in 0..plan.tiles_m() {
+                let mut acc = Ciphertext::zero_like(&ctx);
+                for kt in 0..plan.tiles_k() {
+                    acc.mul_pt_accumulate(&xct[rt][kt], &wt[kt][mt]);
+                }
+                let coeffs = decrypt(&ctx, &sk, &acc);
+                plan.extract_out_tile(&coeffs, rt, mt, &mut out);
+            }
+        }
+        assert_eq!(out, x.matmul(&w));
+    }
+}

@@ -1,0 +1,12 @@
+//! Homomorphic-encryption substrate: BFV over RNS with negacyclic NTT, plus
+//! the coefficient-packed matrix-multiplication encoding used by the linear
+//! layers (IRON-style; see DESIGN.md for the BOLT BSGS substitution note).
+
+pub mod bfv;
+pub mod bigint;
+pub mod matmul;
+pub mod ntt;
+pub mod params;
+
+pub use bfv::{decrypt, encrypt, BfvContext, Ciphertext, Ctx, PtNtt, SecretKey};
+pub use matmul::MatmulPlan;

@@ -1,0 +1,327 @@
+//! Negacyclic number-theoretic transform over NTT-friendly 60-bit primes.
+//!
+//! Polynomials live in R_q = Z_q[X]/(X^N + 1). The forward/inverse transforms
+//! use the merged-twiddle formulation (Longa–Naehrig / SEAL): the powers of the
+//! primitive 2N-th root ψ are folded into the butterfly tables, so no separate
+//! pre/post scaling pass is needed. Twiddle multiplications use Shoup's
+//! precomputed-quotient trick (two integer multiplies, no division).
+
+/// Modular exponentiation.
+pub fn pow_mod(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    let mut acc: u64 = 1;
+    base %= q;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = ((acc as u128 * base as u128) % q as u128) as u64;
+        }
+        base = ((base as u128 * base as u128) % q as u128) as u64;
+        exp >>= 1;
+    }
+    acc
+}
+
+pub fn inv_mod(a: u64, q: u64) -> u64 {
+    // q prime: Fermat
+    pow_mod(a, q - 2, q)
+}
+
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, q: u64) -> u64 {
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+/// Shoup multiplication: returns a·w mod q given wp = floor(w·2^64 / q).
+/// Requires q < 2^63.
+#[inline(always)]
+pub fn mul_mod_shoup(a: u64, w: u64, wp: u64, q: u64) -> u64 {
+    let r = mul_mod_shoup_lazy(a, w, wp, q);
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
+/// Lazy Shoup multiplication: result in [0, 2q), valid for any 64-bit `a`
+/// (hi is off floor(a·w/q) by at most one). Harvey-style butterflies keep
+/// operands ≤ 4q and skip the per-twiddle reduction (§Perf).
+#[inline(always)]
+pub fn mul_mod_shoup_lazy(a: u64, w: u64, wp: u64, q: u64) -> u64 {
+    let hi = ((a as u128 * wp as u128) >> 64) as u64;
+    a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q))
+}
+
+/// Precompute Shoup quotient for twiddle w.
+#[inline]
+pub fn shoup(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+/// NTT context for one prime modulus and ring degree N (power of two).
+pub struct NttTable {
+    pub q: u64,
+    pub n: usize,
+    log_n: u32,
+    /// ψ^bitrev(i) and Shoup companions (forward).
+    psi_rev: Vec<u64>,
+    psi_rev_shoup: Vec<u64>,
+    /// ψ^{-bitrev(i)} and companions (inverse).
+    ipsi_rev: Vec<u64>,
+    ipsi_rev_shoup: Vec<u64>,
+    n_inv: u64,
+    n_inv_shoup: u64,
+}
+
+impl NttTable {
+    /// Build tables given a primitive 2N-th root of unity ψ mod q.
+    pub fn new(q: u64, n: usize, psi: u64) -> Self {
+        assert!(n.is_power_of_two());
+        let log_n = n.trailing_zeros();
+        // sanity: ψ^(2N) = 1, ψ^N = -1
+        debug_assert_eq!(pow_mod(psi, 2 * n as u64, q), 1);
+        debug_assert_eq!(pow_mod(psi, n as u64, q), q - 1);
+        let ipsi = inv_mod(psi, q);
+        let mut psi_rev = vec![0u64; n];
+        let mut ipsi_rev = vec![0u64; n];
+        let mut p = 1u64;
+        let mut ip = 1u64;
+        let mut psi_pows = vec![0u64; n];
+        let mut ipsi_pows = vec![0u64; n];
+        for i in 0..n {
+            psi_pows[i] = p;
+            ipsi_pows[i] = ip;
+            p = mul_mod(p, psi, q);
+            ip = mul_mod(ip, ipsi, q);
+        }
+        for i in 0..n {
+            let r = bit_reverse(i, log_n);
+            psi_rev[i] = psi_pows[r];
+            ipsi_rev[i] = ipsi_pows[r];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, q)).collect();
+        let ipsi_rev_shoup = ipsi_rev.iter().map(|&w| shoup(w, q)).collect();
+        let n_inv = inv_mod(n as u64, q);
+        NttTable {
+            q,
+            n,
+            log_n,
+            psi_rev,
+            psi_rev_shoup,
+            ipsi_rev,
+            ipsi_rev_shoup,
+            n_inv,
+            n_inv_shoup: shoup(n_inv, q),
+        }
+    }
+
+    /// In-place forward negacyclic NTT (coefficient → evaluation order).
+    /// Harvey lazy-reduction form: intermediate values live in [0, 4q);
+    /// one reduction pass at the end brings them back below q.
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let wp = self.psi_rev_shoup[m + i];
+                let j1 = 2 * i * t;
+                for j in j1..j1 + t {
+                    let mut u = a[j]; // < 4q
+                    if u >= two_q {
+                        u -= two_q; // < 2q
+                    }
+                    let v = mul_mod_shoup_lazy(a[j + t], w, wp, q); // < 2q
+                    a[j] = u + v; // < 4q
+                    a[j + t] = u + two_q - v; // < 4q
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+        let _ = self.log_n;
+    }
+
+    /// In-place inverse negacyclic NTT (Harvey lazy form: sums reduced to
+    /// [0, 2q) per level; the final n⁻¹ Shoup multiply restores < q).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = self.ipsi_rev[h + i];
+                let wp = self.ipsi_rev_shoup[h + i];
+                for j in j1..j1 + t {
+                    let u = a[j]; // < 2q
+                    let v = a[j + t]; // < 2q
+                    let mut s = u + v; // < 4q
+                    if s >= two_q {
+                        s -= two_q; // < 2q
+                    }
+                    a[j] = s;
+                    // u − v + 2q < 4q; lazy twiddle multiply → < 2q
+                    a[j + t] = mul_mod_shoup_lazy(u + two_q - v, w, wp, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_mod_shoup(*x, self.n_inv, self.n_inv_shoup, q);
+        }
+    }
+}
+
+/// Reference negacyclic convolution (schoolbook), for tests.
+pub fn negacyclic_mul_ref(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        if a[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let p = mul_mod(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = add_mod(out[k], p, q);
+            } else {
+                out[k - n] = sub_mod(out[k - n], p, q);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::params::{PRIMES, PSI_16384};
+    use crate::util::Xoshiro256;
+
+    fn table(n: usize) -> NttTable {
+        // derive primitive 2n-th root from the 16384-th root by squaring
+        let q = PRIMES[0];
+        let mut psi = PSI_16384[0];
+        let mut order = 16384usize;
+        while order > 2 * n {
+            psi = mul_mod(psi, psi, q);
+            order /= 2;
+        }
+        NttTable::new(q, n, psi)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = table(256);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let orig: Vec<u64> = (0..256).map(|_| rng.below(t.q)).collect();
+        let mut a = orig.clone();
+        t.forward(&mut a);
+        assert_ne!(a, orig);
+        t.inverse(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn convolution_matches_schoolbook() {
+        let n = 64;
+        let t = table(n);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a: Vec<u64> = (0..n).map(|_| rng.below(t.q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.below(t.q)).collect();
+        let expect = negacyclic_mul_ref(&a, &b, t.q);
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        let mut fc: Vec<u64> =
+            fa.iter().zip(&fb).map(|(&x, &y)| mul_mod(x, y, t.q)).collect();
+        t.inverse(&mut fc);
+        assert_eq!(fc, expect);
+    }
+
+    #[test]
+    fn negacyclic_wraparound_sign() {
+        // X^(n-1) · X = X^n = -1
+        let n = 32;
+        let t = table(n);
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        a[n - 1] = 1;
+        b[1] = 1;
+        let c = negacyclic_mul_ref(&a, &b, t.q);
+        assert_eq!(c[0], t.q - 1); // -1 mod q
+    }
+
+    #[test]
+    fn shoup_matches_plain() {
+        let q = PRIMES[0];
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..200 {
+            let a = rng.below(q);
+            let w = rng.below(q);
+            let wp = shoup(w, q);
+            assert_eq!(mul_mod_shoup(a, w, wp, q), mul_mod(a, w, q));
+        }
+    }
+
+    #[test]
+    fn pow_and_inv() {
+        let q = PRIMES[1];
+        assert_eq!(pow_mod(2, 10, q), 1024);
+        let a = 123456789u64;
+        assert_eq!(mul_mod(a, inv_mod(a, q), q), 1);
+    }
+
+    #[test]
+    fn primes_are_ntt_friendly() {
+        for (i, &q) in PRIMES.iter().enumerate() {
+            assert_eq!((q - 1) % 16384, 0, "prime {i}");
+            // ψ is a primitive 16384-th root
+            assert_eq!(pow_mod(PSI_16384[i], 16384, q), 1);
+            assert_eq!(pow_mod(PSI_16384[i], 8192, q), q - 1);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! BFV parameter set.
+//!
+//! - Ring degree N = 8192, ciphertext modulus q = q0·q1·q2 (three ~60-bit
+//!   NTT-friendly primes, log q ≈ 180) — ≥128-bit RLWE security at this
+//!   (N, log q) point (cf. the HE standard tables; IRON/Cheetah use comparable
+//!   margins).
+//! - Plaintext modulus t = 2^64 — *exactly the secret-sharing ring* Z_2^64, so
+//!   homomorphic results drop directly into additive shares with no ring
+//!   conversion. Correctness of Δ-scaling with t ∤ q holds because
+//!   q/t ≈ 2^116 dwarfs the worst-case message·weight magnitude (~2^90):
+//!   the rounding error term m·w·(q mod t)/q ≤ 2^(90+64−180) « 1/2.
+//! - Secret key ternary; noise from a centered binomial (σ ≈ 3.2).
+
+/// Ring degree.
+pub const N: usize = 8192;
+
+/// Number of RNS primes.
+pub const NPRIMES: usize = 3;
+
+/// NTT-friendly primes ≡ 1 (mod 16384), just below 2^60.
+pub const PRIMES: [u64; NPRIMES] =
+    [1152921504606830593, 1152921504606748673, 1152921504606683137];
+
+/// Primitive 16384-th roots of unity for each prime (ψ with ψ^8192 = −1).
+pub const PSI_16384: [u64; NPRIMES] =
+    [330791804103690911, 609248293264176271, 353405849166470586];
+
+/// Centered-binomial parameter: e = Σ_{i<CBD_K} b_i − Σ_{i<CBD_K} b'_i,
+/// variance CBD_K/2 (σ ≈ 3.2 for K = 20).
+pub const CBD_K: usize = 20;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::ntt::pow_mod;
+
+    #[test]
+    fn modulus_magnitudes() {
+        for &q in &PRIMES {
+            assert!(q < 1u64 << 60);
+            assert!(q > 1u64 << 59);
+            assert_eq!((q - 1) % (2 * N as u64), 0);
+        }
+    }
+
+    #[test]
+    fn roots_have_exact_order() {
+        for i in 0..NPRIMES {
+            let (q, psi) = (PRIMES[i], PSI_16384[i]);
+            assert_eq!(pow_mod(psi, 16384, q), 1);
+            assert_ne!(pow_mod(psi, 8192, q), 1);
+            assert_eq!(pow_mod(psi, 8192, q), q - 1);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # CipherPrune — efficient and scalable private Transformer inference
+//!
+//! Full-system reproduction of *CipherPrune* (ICLR 2025): a hybrid HE/MPC
+//! private-inference framework with encrypted token pruning, encrypted
+//! polynomial reduction, and crypto-aware threshold learning.
+//!
+//! Layer map (see DESIGN.md):
+//! - substrates: [`util`], [`fixed`], [`net`], [`party`], [`ot`], [`gates`], [`he`]
+//! - the paper's protocols: [`protocols`] (Π_prune, Π_mask, Π_reduce, Π_SoftMax, …)
+//! - baselines: [`baselines`] (BOLT W.E. bitonic sort, IRON, 3PC cost models)
+//! - model + serving: [`nn`], [`coordinator`]
+//! - AOT XLA execution: [`runtime`] (PJRT CPU client over `artifacts/*.hlo.txt`)
+
+pub mod baselines;
+pub mod coordinator;
+pub mod fixed;
+pub mod gates;
+pub mod he;
+pub mod net;
+pub mod nn;
+pub mod ot;
+pub mod party;
+pub mod protocols;
+pub mod runtime;
+pub mod util;
+
+pub use fixed::{Fix, Ring};

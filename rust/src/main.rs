@@ -1,0 +1,295 @@
+//! CipherPrune leader binary.
+//!
+//! Subcommands:
+//! - `run`    — one private inference; prints logits, per-layer pruning
+//!              decisions, per-protocol traffic, and modeled LAN/WAN time.
+//! - `serve`  — serving demo: router + length-bucketed dynamic batcher over
+//!              a synthetic workload; prints the metrics report.
+//! - `oracle` — execute the AOT XLA artifact (plaintext path) on an input.
+//! - `info`   — model presets and artifact status.
+//!
+//! Examples:
+//!   cipherprune run --model tiny --engine cipherprune --seq 16
+//!   cipherprune run --model bert-base --scale 8 --engine bolt --seq 128
+//!   cipherprune serve --model tiny --requests 8 --engine cipherprune
+//!   cipherprune oracle
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    run_inference, BatchPolicy, EngineConfig, EngineKind, InferenceRequest, Router,
+    RouterConfig,
+};
+use cipherprune::net::NetModel;
+use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
+use cipherprune::util::bench::{fmt_bytes, fmt_duration, Table};
+
+fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut kv = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap().clone()
+            } else {
+                "true".to_string()
+            };
+            kv.insert(key.to_string(), val);
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    (pos, kv)
+}
+
+fn opt_usize(kv: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_model(kv: &HashMap<String, String>) -> (ModelConfig, ModelWeights) {
+    let name = kv.get("model").map(String::as_str).unwrap_or("tiny");
+    let scale = opt_usize(kv, "scale", 1);
+    // trained weights from artifacts win when the requested model matches
+    let wpath = artifact("weights.bin");
+    if scale == 1 && wpath.exists() {
+        if let Ok(w) = ModelWeights::load(&wpath) {
+            if w.config.name == name {
+                println!("using trained weights from {}", wpath.display());
+                return (w.config.clone(), w);
+            }
+        }
+    }
+    let cfg = ModelConfig::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' — use tiny|bert-medium|bert-base|bert-large|gpt2-base");
+        std::process::exit(2);
+    });
+    let cfg = if scale > 1 { cfg.scaled(scale) } else { cfg };
+    let w = ModelWeights::salient(&cfg, 42);
+    (cfg, w)
+}
+
+fn schedule_for(cfg: &ModelConfig) -> ThresholdSchedule {
+    ThresholdSchedule::load(&artifact("thresholds.json"))
+        .map(|s| s.fit_layers(cfg.n_layers))
+        .unwrap_or_else(|| ThresholdSchedule::default_for(cfg.n_layers))
+}
+
+fn cmd_run(kv: HashMap<String, String>) {
+    let (cfg, weights) = load_model(&kv);
+    let engine = kv
+        .get("engine")
+        .and_then(|e| EngineKind::by_name(e))
+        .unwrap_or(EngineKind::CipherPrune);
+    let seq = opt_usize(&kv, "seq", 16.min(cfg.max_seq));
+    let he_n = opt_usize(&kv, "he-n", cipherprune::he::params::N);
+    let seed = opt_usize(&kv, "seed", 7) as u64;
+
+    let wl = Workload::qnli_like(&cfg, seq);
+    let sample = &wl.batch(1, seed)[0];
+    println!(
+        "model={} ({} layers, dim {}, {} heads) engine={} seq={} (real {})",
+        cfg.name,
+        cfg.n_layers,
+        cfg.dim,
+        cfg.heads,
+        engine.name(),
+        seq,
+        sample.real_len
+    );
+
+    let mut ec = EngineConfig::new(engine, cfg.n_layers);
+    ec.he_n = he_n;
+    ec.schedule = schedule_for(&cfg);
+    let r = run_inference(&ec, &weights, &sample.ids);
+
+    println!("\nlogits: {:?}  (predicted class {})", r.logits, r.predicted());
+    let mut t = Table::new(
+        "per-layer decisions",
+        &["layer", "n_in", "kept", "high-degree", "swaps"],
+    );
+    for (i, s) in r.layer_stats.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            s.n_in.to_string(),
+            s.n_kept.to_string(),
+            s.n_high.to_string(),
+            s.swaps.to_string(),
+        ]);
+    }
+    t.print();
+
+    let total = r.total_stats();
+    println!(
+        "\ncompute wall {}   traffic {}   flights {}",
+        fmt_duration(r.wall_s),
+        fmt_bytes(total.bytes as f64),
+        total.flights
+    );
+    for net in [NetModel::LAN, NetModel::WAN] {
+        println!(
+            "  modeled end-to-end [{}]: {}",
+            net.name,
+            fmt_duration(r.wall_s + net.time(&total))
+        );
+    }
+    let mut protos: Vec<(String, u64)> = {
+        let mut m: HashMap<String, u64> = HashMap::new();
+        for (name, s) in &r.phases {
+            let p = name.split('#').next().unwrap_or(name).to_string();
+            *m.entry(p).or_default() += s.bytes;
+        }
+        m.into_iter().collect()
+    };
+    protos.sort_by(|a, b| b.1.cmp(&a.1));
+    println!("\ntraffic by protocol:");
+    for (p, b) in protos {
+        println!("  {p:<12} {}", fmt_bytes(b as f64));
+    }
+    let mut walls: Vec<(String, f64)> = {
+        let mut m: HashMap<String, f64> = HashMap::new();
+        for (name, w) in &r.phase_wall {
+            let p = name.split('#').next().unwrap_or(name).to_string();
+            *m.entry(p).or_default() += w;
+        }
+        m.into_iter().collect()
+    };
+    walls.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\ncompute by protocol (P0 wall):");
+    for (p, w) in walls {
+        println!("  {p:<12} {} ({:.1}%)", fmt_duration(w), w / r.wall_s * 100.0);
+    }
+}
+
+fn cmd_serve(kv: HashMap<String, String>) {
+    let (cfg, weights) = load_model(&kv);
+    let engine = kv
+        .get("engine")
+        .and_then(|e| EngineKind::by_name(e))
+        .unwrap_or(EngineKind::CipherPrune);
+    let n_req = opt_usize(&kv, "requests", 8);
+    let seq = opt_usize(&kv, "seq", 16.min(cfg.max_seq));
+    let he_n = opt_usize(&kv, "he-n", cipherprune::he::params::N);
+    let workers = opt_usize(&kv, "workers", 4);
+
+    let policy = BatchPolicy {
+        max_batch: opt_usize(&kv, "max-batch", 4),
+        linger: std::time::Duration::from_millis(opt_usize(&kv, "linger-ms", 20) as u64),
+        min_bucket: 8,
+        max_tokens: cfg.max_seq,
+    };
+    let mut router = Router::new(
+        Arc::new(weights),
+        RouterConfig { policy, workers, he_n, schedule: Some(schedule_for(&cfg)) },
+    );
+    // mixed-length workload: half short, half long
+    let wl_s = Workload::qnli_like(&cfg, seq);
+    let wl_l = Workload::qnli_like(&cfg, (seq * 2).min(cfg.max_seq));
+    let mut reqs: Vec<InferenceRequest> = Vec::new();
+    for (i, s) in wl_s.batch(n_req / 2, 11).into_iter().enumerate() {
+        reqs.push(InferenceRequest { id: i as u64, ids: s.ids, engine });
+    }
+    for (i, s) in wl_l.batch(n_req - n_req / 2, 12).into_iter().enumerate() {
+        reqs.push(InferenceRequest { id: (n_req / 2 + i) as u64, ids: s.ids, engine });
+    }
+    println!(
+        "serving {} requests ({} engine, {} workers)…",
+        reqs.len(),
+        engine.name(),
+        workers
+    );
+    let t0 = std::time::Instant::now();
+    let resp = router.process(reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &resp {
+        println!(
+            "  req {:>3}  bucket {:>4}  latency {}  pred {}",
+            r.id,
+            r.bucket,
+            fmt_duration(r.latency_s),
+            r.result.predicted()
+        );
+    }
+    println!(
+        "\nthroughput: {:.2} req/s over {}\n{}",
+        resp.len() as f64 / wall,
+        fmt_duration(wall),
+        router.metrics.report()
+    );
+}
+
+fn cmd_oracle(kv: HashMap<String, String>) {
+    let path = artifact("model.hlo.txt");
+    if !path.exists() {
+        eprintln!("no artifact at {} — run `make artifacts`", path.display());
+        std::process::exit(2);
+    }
+    let meta = std::fs::read_to_string(artifact("meta.json")).expect("meta.json");
+    let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
+    let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(16);
+    let vocab = meta.get("vocab").and_then(|v| v.as_usize()).unwrap_or(64);
+    let seed = opt_usize(&kv, "seed", 7) as u64;
+
+    let cfg = ModelConfig::tiny();
+    let wl = Workload::qnli_like(&cfg, seq);
+    let ids = wl.batch(1, seed)[0].ids.clone();
+    let mut onehot = vec![0f32; seq * vocab];
+    for (i, &id) in ids.iter().enumerate() {
+        onehot[i * vocab + id] = 1.0;
+    }
+    let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    println!("platform: {}", rt.platform());
+    let t0 = std::time::Instant::now();
+    let out = rt
+        .run_f32(&path, &[TensorF32::new(onehot, vec![seq as i64, vocab as i64])])
+        .expect("XLA execution");
+    println!(
+        "oracle logits {:?} in {} (ids {:?}…)",
+        out[0].data,
+        fmt_duration(t0.elapsed().as_secs_f64()),
+        &ids[..6.min(ids.len())]
+    );
+}
+
+fn cmd_info() {
+    println!("model presets:");
+    for name in ["tiny", "bert-medium", "bert-base", "bert-large", "gpt2-base"] {
+        let c = ModelConfig::by_name(name).unwrap();
+        println!(
+            "  {:<12} L={:<3} d={:<5} H={:<3} ffn={:<5} ~{}M params",
+            c.name,
+            c.n_layers,
+            c.dim,
+            c.heads,
+            c.ffn_dim,
+            c.param_count() / 1_000_000
+        );
+    }
+    println!("\nengines: plaintext iron bolt-no-we bolt cipherprune-prune-only cipherprune");
+    println!("\nartifacts:");
+    for a in ["model.hlo.txt", "importance.hlo.txt", "weights.bin", "thresholds.json"] {
+        let p = artifact(a);
+        println!(
+            "  {:<20} {}",
+            a,
+            if p.exists() { "present" } else { "missing (make artifacts)" }
+        );
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, kv) = parse_args(&args);
+    match pos.first().map(String::as_str) {
+        Some("run") => cmd_run(kv),
+        Some("serve") => cmd_serve(kv),
+        Some("oracle") => cmd_oracle(kv),
+        Some("info") | None => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}' — try run|serve|oracle|info");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Two-party communication substrate.
+//!
+//! The paper runs server and client on two machines over LAN (3 Gbps / 0.8 ms ping)
+//! and WAN (200 Mbps / 40 ms ping). Here both parties run in one process connected
+//! by an in-memory duplex channel; **every byte and every message flight is
+//! counted**, so communication is exact and network time is added analytically via
+//! [`NetModel`] (time = flights × rtt/2 + bytes / bandwidth). This preserves the
+//! paper's reported quantities (comm in GB, runtime under a network model) while
+//! replacing the physical testbed.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Accumulated traffic for one protocol phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseStats {
+    pub bytes: u64,
+    pub msgs: u64,
+    /// Sequential message flights (latency-relevant one-way trips).
+    pub flights: u64,
+}
+
+impl PhaseStats {
+    pub fn add(&mut self, other: &PhaseStats) {
+        self.bytes += other.bytes;
+        self.msgs += other.msgs;
+        self.flights += other.flights;
+    }
+}
+
+/// Shared transcript of all traffic on a channel pair, grouped by phase.
+#[derive(Debug, Default)]
+pub struct Transcript {
+    pub phases: BTreeMap<String, PhaseStats>,
+    pub current: String,
+}
+
+impl Transcript {
+    pub fn total(&self) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for p in self.phases.values() {
+            t.add(p);
+        }
+        t
+    }
+}
+
+pub type SharedTranscript = Arc<Mutex<Transcript>>;
+
+pub fn new_transcript() -> SharedTranscript {
+    Arc::new(Mutex::new(Transcript {
+        phases: BTreeMap::new(),
+        current: "setup".to_string(),
+    }))
+}
+
+/// Network model used to convert a transcript into wall-clock network time.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    pub name: &'static str,
+    pub bandwidth_bps: f64,
+    pub rtt_s: f64,
+}
+
+impl NetModel {
+    /// Paper's LAN: 3 Gbps bandwidth, 0.8 ms ping (Pang et al., 2024 setting).
+    pub const LAN: NetModel =
+        NetModel { name: "LAN", bandwidth_bps: 3e9, rtt_s: 0.8e-3 };
+    /// Paper's WAN: 200 Mbps bandwidth, 40 ms ping.
+    pub const WAN: NetModel =
+        NetModel { name: "WAN", bandwidth_bps: 200e6, rtt_s: 40e-3 };
+    /// BumbleBee comparison setting (App. D): 1 Gbps, 0.5 ms ping.
+    pub const BB_LAN: NetModel =
+        NetModel { name: "BB-LAN", bandwidth_bps: 1e9, rtt_s: 0.5e-3 };
+
+    /// Modeled network time for a traffic summary.
+    pub fn time(&self, s: &PhaseStats) -> f64 {
+        s.flights as f64 * (self.rtt_s / 2.0) + (s.bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// One endpoint of a duplex in-memory channel with byte/flight accounting.
+pub struct Chan {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    transcript: SharedTranscript,
+    sent_since_recv: bool,
+    /// Local (endpoint) totals, cheap to read without locking.
+    pub sent_bytes: u64,
+    pub sent_msgs: u64,
+}
+
+impl Chan {
+    /// Create a connected pair sharing a transcript.
+    pub fn pair() -> (Chan, Chan, SharedTranscript) {
+        let t = new_transcript();
+        let (tx0, rx1) = std::sync::mpsc::channel();
+        let (tx1, rx0) = std::sync::mpsc::channel();
+        let a = Chan {
+            tx: tx0,
+            rx: rx0,
+            transcript: t.clone(),
+            sent_since_recv: false,
+            sent_bytes: 0,
+            sent_msgs: 0,
+        };
+        let b = Chan {
+            tx: tx1,
+            rx: rx1,
+            transcript: t.clone(),
+            sent_since_recv: false,
+            sent_bytes: 0,
+            sent_msgs: 0,
+        };
+        (a, b, t)
+    }
+
+    /// Set the phase label under which subsequent traffic is recorded.
+    /// Phases are protocol-synchronous; either party may set them.
+    pub fn set_phase(&self, phase: &str) {
+        let mut t = self.transcript.lock().unwrap();
+        if t.current != phase {
+            t.current = phase.to_string();
+        }
+    }
+
+    pub fn send_bytes(&mut self, data: &[u8]) {
+        {
+            let mut t = self.transcript.lock().unwrap();
+            let cur = t.current.clone();
+            let p = t.phases.entry(cur).or_default();
+            p.bytes += data.len() as u64;
+            p.msgs += 1;
+        }
+        self.sent_bytes += data.len() as u64;
+        self.sent_msgs += 1;
+        self.sent_since_recv = true;
+        self.tx.send(data.to_vec()).expect("peer hung up");
+    }
+
+    pub fn send_vec(&mut self, data: Vec<u8>) {
+        {
+            let mut t = self.transcript.lock().unwrap();
+            let cur = t.current.clone();
+            let p = t.phases.entry(cur).or_default();
+            p.bytes += data.len() as u64;
+            p.msgs += 1;
+        }
+        self.sent_bytes += data.len() as u64;
+        self.sent_msgs += 1;
+        self.sent_since_recv = true;
+        self.tx.send(data).expect("peer hung up");
+    }
+
+    pub fn recv_bytes(&mut self) -> Vec<u8> {
+        if self.sent_since_recv {
+            // This receive depends on our last send completing a flight:
+            // record one latency-relevant one-way trip.
+            let mut t = self.transcript.lock().unwrap();
+            let cur = t.current.clone();
+            t.phases.entry(cur).or_default().flights += 1;
+            self.sent_since_recv = false;
+        }
+        self.rx.recv().expect("peer hung up")
+    }
+
+    // ---- typed helpers ----
+
+    pub fn send_u64(&mut self, v: u64) {
+        self.send_bytes(&v.to_le_bytes());
+    }
+
+    pub fn recv_u64(&mut self) -> u64 {
+        let b = self.recv_bytes();
+        u64::from_le_bytes(b[..8].try_into().expect("short u64 message"))
+    }
+
+    pub fn send_u64s(&mut self, vs: &[u64]) {
+        let mut buf = Vec::with_capacity(vs.len() * 8);
+        for v in vs {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send_vec(buf);
+    }
+
+    pub fn recv_u64s(&mut self) -> Vec<u64> {
+        let b = self.recv_bytes();
+        assert_eq!(b.len() % 8, 0, "misaligned u64 message");
+        b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Exchange u64 slices simultaneously (both parties call this): one flight
+    /// in each direction, overlapping, so it counts as a single half-RTT per
+    /// party in the transcript.
+    pub fn exchange_u64s(&mut self, vs: &[u64]) -> Vec<u64> {
+        self.send_u64s(vs);
+        self.recv_u64s()
+    }
+
+    pub fn send_bits(&mut self, bits: &[u8]) {
+        self.send_bytes(bits);
+    }
+
+    pub fn recv_bits(&mut self) -> Vec<u8> {
+        self.recv_bytes()
+    }
+
+    /// Snapshot of the shared transcript.
+    pub fn transcript_snapshot(&self) -> Vec<(String, PhaseStats)> {
+        let t = self.transcript.lock().unwrap();
+        t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    pub fn total_stats(&self) -> PhaseStats {
+        self.transcript.lock().unwrap().total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let (mut a, mut b, t) = Chan::pair();
+        let h = thread::spawn(move || {
+            let m = b.recv_bytes();
+            assert_eq!(m, vec![1, 2, 3]);
+            b.send_bytes(&[4, 5]);
+        });
+        a.send_bytes(&[1, 2, 3]);
+        assert_eq!(a.recv_bytes(), vec![4, 5]);
+        h.join().unwrap();
+        let total = t.lock().unwrap().total();
+        assert_eq!(total.bytes, 5);
+        assert_eq!(total.msgs, 2);
+        // a sent then received: 1 flight recorded at a's endpoint
+        assert_eq!(total.flights, 1);
+    }
+
+    #[test]
+    fn typed_u64s() {
+        let (mut a, mut b, _t) = Chan::pair();
+        let h = thread::spawn(move || {
+            let v = b.recv_u64s();
+            assert_eq!(v, vec![7, u64::MAX]);
+            b.send_u64(42);
+        });
+        a.send_u64s(&[7, u64::MAX]);
+        assert_eq!(a.recv_u64(), 42);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn phases_accumulate_separately() {
+        let (mut a, mut b, t) = Chan::pair();
+        let h = thread::spawn(move || {
+            let _ = b.recv_bytes();
+            let _ = b.recv_bytes();
+        });
+        a.set_phase("p1");
+        a.send_bytes(&[0; 10]);
+        a.set_phase("p2");
+        a.send_bytes(&[0; 20]);
+        h.join().unwrap();
+        let tr = t.lock().unwrap();
+        assert_eq!(tr.phases["p1"].bytes, 10);
+        assert_eq!(tr.phases["p2"].bytes, 20);
+    }
+
+    #[test]
+    fn exchange_counts_one_flight_per_party() {
+        let (mut a, mut b, t) = Chan::pair();
+        let h = thread::spawn(move || b.exchange_u64s(&[2]));
+        let ra = a.exchange_u64s(&[1]);
+        let rb = h.join().unwrap();
+        assert_eq!(ra, vec![2]);
+        assert_eq!(rb, vec![1]);
+        let total = t.lock().unwrap().total();
+        // both endpoints recorded a flight — a simultaneous exchange is
+        // 2 one-way trips = 1 RTT total
+        assert_eq!(total.flights, 2);
+    }
+
+    #[test]
+    fn netmodel_time() {
+        let s = PhaseStats { bytes: 3_000_000_000 / 8, msgs: 1, flights: 2 };
+        // 3Gbit over 3Gbps = 1s + 2 half-RTTs of 0.4ms
+        let t = NetModel::LAN.time(&s);
+        assert!((t - 1.0008).abs() < 1e-6, "t={t}");
+        assert!(NetModel::WAN.time(&s) > t);
+    }
+
+    #[test]
+    fn netmodel_constants() {
+        assert_eq!(NetModel::LAN.bandwidth_bps, 3e9);
+        assert_eq!(NetModel::WAN.rtt_s, 40e-3);
+        assert_eq!(NetModel::BB_LAN.bandwidth_bps, 1e9);
+    }
+}

@@ -1,0 +1,187 @@
+//! Model configurations for the evaluated Transformer families.
+//!
+//! The paper evaluates BERT-Medium / BERT-Base / BERT-Large and GPT2-Base
+//! (§4.1). Shapes follow Devlin et al. / Radford et al.; the vocabulary is the
+//! synthetic-corpus vocabulary (DESIGN.md §Substitutions — GLUE inputs are
+//! replaced by controllable-redundancy synthetic tasks, so a small vocab
+//! preserves the pruning dynamics while keeping the one-hot embedding
+//! Π_MatMul tractable).
+
+/// Architecture hyperparameters of one Transformer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Number of Transformer layers L.
+    pub n_layers: usize,
+    /// Embedding dimension D.
+    pub dim: usize,
+    /// Attention heads H (head dim = dim / heads).
+    pub heads: usize,
+    /// Feed-forward inner dimension.
+    pub ffn_dim: usize,
+    /// Vocabulary size (synthetic corpus).
+    pub vocab: usize,
+    /// Maximum sequence length.
+    pub max_seq: usize,
+    /// Classifier output classes.
+    pub n_classes: usize,
+    /// Causal attention (GPT2) vs bidirectional (BERT).
+    pub causal: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// BERT-Medium: 8 layers, 512 dim, 8 heads.
+    pub fn bert_medium() -> Self {
+        Self::bert("bert-medium", 8, 512, 8)
+    }
+
+    /// BERT-Base: 12 layers, 768 dim, 12 heads.
+    pub fn bert_base() -> Self {
+        Self::bert("bert-base", 12, 768, 12)
+    }
+
+    /// BERT-Large: 24 layers, 1024 dim, 16 heads.
+    pub fn bert_large() -> Self {
+        Self::bert("bert-large", 24, 1024, 16)
+    }
+
+    /// GPT2-Base: 12 layers, 768 dim, 12 heads, causal.
+    pub fn gpt2_base() -> Self {
+        let mut c = Self::bert("gpt2-base", 12, 768, 12);
+        c.causal = true;
+        c
+    }
+
+    fn bert(name: &str, n_layers: usize, dim: usize, heads: usize) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            n_layers,
+            dim,
+            heads,
+            ffn_dim: 4 * dim,
+            vocab: 512,
+            max_seq: 512,
+            n_classes: 2,
+            causal: false,
+        }
+    }
+
+    /// Look up a preset by name (CLI entry point).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "bert-medium" => Some(Self::bert_medium()),
+            "bert-base" => Some(Self::bert_base()),
+            "bert-large" => Some(Self::bert_large()),
+            "gpt2-base" => Some(Self::gpt2_base()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Width-reduce by an integer factor (layers and token counts are kept,
+    /// so per-token protocol structure — the quantity the paper's tables
+    /// compare — is unchanged; see DESIGN.md §Scaling for the calibrated
+    /// extrapolation back to full width).
+    pub fn scaled(&self, factor: usize) -> Self {
+        assert!(factor >= 1 && self.heads % factor.min(self.heads) == 0);
+        let f = factor;
+        let heads = (self.heads / f).max(1);
+        let dim = self.dim / f;
+        assert_eq!(dim % heads, 0, "scaled dim must divide heads");
+        ModelConfig {
+            name: format!("{}/w{}", self.name, f),
+            n_layers: self.n_layers,
+            dim,
+            heads,
+            ffn_dim: self.ffn_dim / f,
+            vocab: self.vocab,
+            max_seq: self.max_seq,
+            n_classes: self.n_classes,
+            causal: self.causal,
+        }
+    }
+
+    /// Tiny config for unit/integration tests (2 layers, 32 dim, 2 heads).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny".to_string(),
+            n_layers: 2,
+            dim: 32,
+            heads: 2,
+            ffn_dim: 64,
+            vocab: 64,
+            max_seq: 64,
+            n_classes: 2,
+            causal: false,
+        }
+    }
+
+    /// Approximate parameter count (embeddings + layers + classifier).
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let per_layer = 4 * d * d + 4 * d // attention + biases
+            + 2 * (d * self.ffn_dim) + self.ffn_dim + d // ffn
+            + 4 * d; // two layernorms
+        (self.vocab + self.max_seq) * d + self.n_layers * per_layer + d * self.n_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_shapes() {
+        let m = ModelConfig::bert_medium();
+        assert_eq!((m.n_layers, m.dim, m.heads, m.ffn_dim), (8, 512, 8, 2048));
+        let b = ModelConfig::bert_base();
+        assert_eq!((b.n_layers, b.dim, b.heads), (12, 768, 12));
+        let l = ModelConfig::bert_large();
+        assert_eq!((l.n_layers, l.dim, l.heads), (24, 1024, 16));
+        let g = ModelConfig::gpt2_base();
+        assert!(g.causal);
+        assert_eq!(g.dim, 768);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["bert-medium", "bert-base", "bert-large", "gpt2-base", "tiny"] {
+            assert_eq!(ModelConfig::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_divides_width() {
+        let c = ModelConfig::bert_base().scaled(4);
+        assert_eq!(c.dim, 192);
+        assert_eq!(c.heads, 3);
+        assert_eq!(c.head_dim(), 64);
+        assert_eq!(c.n_layers, 12);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for c in [
+            ModelConfig::bert_medium(),
+            ModelConfig::bert_base(),
+            ModelConfig::bert_large(),
+            ModelConfig::gpt2_base(),
+            ModelConfig::tiny(),
+        ] {
+            assert_eq!(c.dim % c.heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // BERT-Base ≈ 85M transformer params at vocab 512 (real BERT's 110M
+        // includes its 30k-vocab embedding table).
+        let p = ModelConfig::bert_base().param_count();
+        assert!(p > 80_000_000 && p < 130_000_000, "{p}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Transformer model layer: configurations, weights, threshold schedules,
+//! synthetic workloads, and the plaintext reference oracle.
+
+pub mod config;
+pub mod reference;
+pub mod thresholds;
+pub mod weights;
+pub mod workload;
+
+pub use config::ModelConfig;
+pub use reference::{forward, Activations, ForwardOptions, ForwardOutput, PruneStrategy};
+pub use thresholds::ThresholdSchedule;
+pub use weights::ModelWeights;
+pub use workload::{Sample, Workload};

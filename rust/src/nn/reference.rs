@@ -1,0 +1,463 @@
+//! Plaintext (f64) reference inference — the oracle for every engine.
+//!
+//! Mirrors the protocol pipeline exactly (Fig. 4): embedding + positional →
+//! per-layer {QKV projection, per-head SoftMax attention, output projection,
+//! residual, LayerNorm, token pruning, polynomial reduction, FFN with
+//! mixed-degree GELU, residual, LayerNorm} → mean-pool → classifier. Protocol
+//! integration tests compare Engine2P outputs against this forward pass;
+//! accuracy experiments (Table 2, Fig. 12) run it over synthetic corpora.
+//!
+//! Mean-pooling (instead of CLS) makes classification robust to pruning —
+//! plaintext token-pruning work keeps CLS alive by construction; pooling over
+//! the kept set is the equivalent safeguard here and applies uniformly to
+//! BERT- and GPT2-shaped models.
+
+use crate::protocols::gelu::{gelu_exact, gelu_ref, GeluKind};
+use crate::protocols::softmax::softmax_ref;
+
+use super::config::ModelConfig;
+use super::thresholds::ThresholdSchedule;
+use super::weights::{LayerWeights, ModelWeights};
+
+/// Token-pruning strategy of an engine.
+#[derive(Clone, Debug)]
+pub enum PruneStrategy {
+    /// No pruning (IRON, BOLT w/o W.E.).
+    None,
+    /// BOLT's word elimination: one-time top-k keep at layer 0 (k = n/2).
+    WordElim,
+    /// CipherPrune: progressive per-layer threshold pruning.
+    Progressive(ThresholdSchedule),
+}
+
+/// Non-linear activation fidelity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activations {
+    /// Exact e^x SoftMax + tanh GELU (IRON's LUT-backed precision).
+    Precise,
+    /// Polynomial approximations (BOLT / CipherPrune), with optional
+    /// per-token reduction when a β schedule is active.
+    Polynomial { gelu_high: GeluKind },
+}
+
+/// Forward-pass configuration for one engine variant.
+#[derive(Clone, Debug)]
+pub struct ForwardOptions {
+    pub prune: PruneStrategy,
+    /// Apply polynomial reduction with the schedule's β (CipherPrune full).
+    pub reduce: bool,
+    pub activations: Activations,
+}
+
+impl ForwardOptions {
+    pub fn plain() -> Self {
+        ForwardOptions {
+            prune: PruneStrategy::None,
+            reduce: false,
+            activations: Activations::Precise,
+        }
+    }
+
+    pub fn cipherprune(schedule: ThresholdSchedule, reduce: bool) -> Self {
+        ForwardOptions {
+            prune: PruneStrategy::Progressive(schedule),
+            reduce,
+            activations: Activations::Polynomial { gelu_high: GeluKind::High },
+        }
+    }
+
+    pub fn bolt(word_elim: bool) -> Self {
+        ForwardOptions {
+            prune: if word_elim { PruneStrategy::WordElim } else { PruneStrategy::None },
+            reduce: false,
+            activations: Activations::Polynomial { gelu_high: GeluKind::Bolt },
+        }
+    }
+}
+
+/// Per-layer trace of the pruning/reduction decisions (Fig. 19, Table 3).
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    pub n_in: usize,
+    pub n_kept: usize,
+    /// Tokens on the high-degree polynomial path (|M_β| among kept).
+    pub n_high: usize,
+    /// Importance scores of the *input* tokens (Eq. 1).
+    pub scores: Vec<f64>,
+}
+
+/// Output of the reference forward pass.
+#[derive(Clone, Debug)]
+pub struct ForwardOutput {
+    pub logits: Vec<f64>,
+    pub traces: Vec<LayerTrace>,
+}
+
+impl ForwardOutput {
+    pub fn predicted(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Token counts entering each layer (for complexity accounting).
+    pub fn tokens_per_layer(&self) -> Vec<usize> {
+        self.traces.iter().map(|t| t.n_in).collect()
+    }
+}
+
+/// Row-major matrix helpers over plain Vec<f64>.
+fn matmul(a: &[f64], (ar, ac): (usize, usize), b: &[f64], bc: usize) -> Vec<f64> {
+    let mut out = vec![0.0; ar * bc];
+    for i in 0..ar {
+        for k in 0..ac {
+            let v = a[i * ac + k];
+            if v == 0.0 {
+                continue;
+            }
+            let brow = &b[k * bc..(k + 1) * bc];
+            let orow = &mut out[i * bc..(i + 1) * bc];
+            for j in 0..bc {
+                orow[j] += v * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn add_bias(x: &mut [f64], b: &[f64]) {
+    let d = b.len();
+    for (i, v) in x.iter_mut().enumerate() {
+        *v += b[i % d];
+    }
+}
+
+fn layernorm(x: &mut [f64], d: usize, gamma: &[f64], beta: &[f64]) {
+    let eps = crate::protocols::layernorm::LN_EPS;
+    for row in x.chunks_mut(d) {
+        let mean = row.iter().sum::<f64>() / d as f64;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+        let rstd = 1.0 / (var + eps).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * rstd * gamma[j] + beta[j];
+        }
+    }
+}
+
+fn exact_softmax(x: &[f64]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = x.iter().map(|&v| (v - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|&v| v / s).collect()
+}
+
+/// One attention block. Returns (output n×d, per-head attention maps).
+fn attention(
+    l: &LayerWeights,
+    x: &[f64],
+    n: usize,
+    cfg: &ModelConfig,
+    row_high: &[bool],
+    acts: Activations,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let d = cfg.dim;
+    let hd = cfg.head_dim();
+    let mut q = matmul(x, (n, d), &l.wq.data, d);
+    add_bias(&mut q, &l.bq);
+    let mut k = matmul(x, (n, d), &l.wk.data, d);
+    add_bias(&mut k, &l.bk);
+    let mut v = matmul(x, (n, d), &l.wv.data, d);
+    add_bias(&mut v, &l.bv);
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut ctx = vec![0.0; n * d];
+    let mut atts = Vec::with_capacity(cfg.heads);
+    for h in 0..cfg.heads {
+        let off = h * hd;
+        let mut att = vec![0.0; n * n];
+        for i in 0..n {
+            let mut logits = vec![0.0; n];
+            for j in 0..n {
+                let mut dot = 0.0;
+                for c in 0..hd {
+                    dot += q[i * d + off + c] * k[j * d + off + c];
+                }
+                logits[j] = dot * scale;
+            }
+            if cfg.causal {
+                for lg in logits.iter_mut().skip(i + 1) {
+                    *lg = -1e9;
+                }
+            }
+            let row = match acts {
+                Activations::Precise => exact_softmax(&logits),
+                Activations::Polynomial { .. } => {
+                    let high = row_high.is_empty() || row_high[i];
+                    softmax_ref(&logits, if high { 6 } else { 3 })
+                }
+            };
+            att[i * n..(i + 1) * n].copy_from_slice(&row);
+        }
+        // ctx_h = att · V_h
+        for i in 0..n {
+            for j in 0..n {
+                let a = att[i * n + j];
+                if a == 0.0 {
+                    continue;
+                }
+                for c in 0..hd {
+                    ctx[i * d + off + c] += a * v[j * d + off + c];
+                }
+            }
+        }
+        atts.push(att);
+    }
+    let mut out = matmul(&ctx, (n, d), &l.wo.data, d);
+    add_bias(&mut out, &l.bo);
+    (out, atts)
+}
+
+/// Importance scores (Eq. 1) from per-head attention maps.
+pub fn importance(atts: &[Vec<f64>], n: usize) -> Vec<f64> {
+    let h = atts.len();
+    let mut s = vec![0.0; n];
+    for att in atts {
+        for j in 0..n {
+            for i in 0..n {
+                s[i] += att[j * n + i];
+            }
+        }
+    }
+    let c = 1.0 / (h as f64 * n as f64);
+    s.iter_mut().for_each(|v| *v *= c);
+    s
+}
+
+/// Stable-partition keep decision → (new index order, kept count).
+pub fn prune_order(keep: &[bool]) -> (Vec<usize>, usize) {
+    let kept: Vec<usize> = (0..keep.len()).filter(|&i| keep[i]).collect();
+    let mut dropped: Vec<usize> = (0..keep.len()).filter(|&i| !keep[i]).collect();
+    let n_kept = kept.len().max(1);
+    let mut order = kept;
+    if order.is_empty() && !dropped.is_empty() {
+        // degenerate all-pruned input: keep token 0 (move, don't duplicate)
+        order.push(dropped.remove(0));
+    }
+    order.extend(dropped);
+    (order, n_kept)
+}
+
+/// Full reference forward pass.
+pub fn forward(w: &ModelWeights, ids: &[usize], opt: &ForwardOptions) -> ForwardOutput {
+    let cfg = &w.config;
+    let d = cfg.dim;
+    let mut n = ids.len();
+    assert!(n <= cfg.max_seq, "sequence too long");
+    // embedding + positional
+    let mut x = vec![0.0; n * d];
+    for (i, &id) in ids.iter().enumerate() {
+        assert!(id < cfg.vocab);
+        for c in 0..d {
+            x[i * d + c] = w.embedding.at(id, c) + w.positional.at(i, c);
+        }
+    }
+    let mut traces = Vec::with_capacity(cfg.n_layers);
+    // reduction mask carried into the next layer's SoftMax (Alg. 1: M_β^(l−1))
+    let mut row_high: Vec<bool> = vec![];
+    for (li, l) in w.layers.iter().enumerate() {
+        let (att_out, atts) = attention(l, &x, n, cfg, &row_high, opt.activations);
+        // residual + LN1
+        for (xi, ai) in x.iter_mut().zip(&att_out) {
+            *xi += ai;
+        }
+        layernorm(&mut x[..n * d], d, &l.ln1_gamma, &l.ln1_beta);
+        // ---- encrypted token pruning (reference of Π_prune + Π_mask) ----
+        let scores = importance(&atts, n);
+        let keep: Vec<bool> = match &opt.prune {
+            PruneStrategy::None => vec![true; n],
+            PruneStrategy::WordElim => {
+                if li == 0 {
+                    // one-time top-⌈n/2⌉ by score (BOLT's W.E. bitonic sort)
+                    let k = n.div_ceil(2);
+                    let mut idx: Vec<usize> = (0..n).collect();
+                    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+                    let mut kv = vec![false; n];
+                    for &i in idx.iter().take(k) {
+                        kv[i] = true;
+                    }
+                    kv
+                } else {
+                    vec![true; n]
+                }
+            }
+            PruneStrategy::Progressive(s) => {
+                let th = s.theta_abs(li, n);
+                scores.iter().map(|&v| v > th).collect()
+            }
+        };
+        let (order, n_kept) = prune_order(&keep);
+        let mut pruned = vec![0.0; n_kept * d];
+        let mut pruned_scores = vec![0.0; n_kept];
+        for (new, &old) in order.iter().take(n_kept).enumerate() {
+            pruned[new * d..(new + 1) * d].copy_from_slice(&x[old * d..(old + 1) * d]);
+            pruned_scores[new] = scores[old];
+        }
+        // ---- polynomial reduction (reference of Π_reduce) ----
+        let high_mask: Vec<bool> = if opt.reduce {
+            if let PruneStrategy::Progressive(s) = &opt.prune {
+                let bt = s.beta_abs(li, n);
+                pruned_scores.iter().map(|&v| v > bt).collect()
+            } else {
+                vec![true; n_kept]
+            }
+        } else {
+            vec![true; n_kept]
+        };
+        let n_high = high_mask.iter().filter(|&&b| b).count();
+        traces.push(LayerTrace { n_in: n, n_kept, n_high, scores });
+        // ---- FFN with mixed-degree GELU on the pruned sequence ----
+        let mut h = matmul(&pruned, (n_kept, d), &l.w_ff1.data, cfg.ffn_dim);
+        add_bias(&mut h, &l.b_ff1);
+        for (ti, row) in h.chunks_mut(cfg.ffn_dim).enumerate() {
+            match opt.activations {
+                Activations::Precise => {
+                    row.iter_mut().for_each(|v| *v = gelu_exact(*v));
+                }
+                Activations::Polynomial { gelu_high } => {
+                    let kind = if high_mask[ti] { gelu_high } else { GeluKind::Low };
+                    row.iter_mut().for_each(|v| *v = gelu_ref(*v, kind));
+                }
+            }
+        }
+        let mut ff = matmul(&h, (n_kept, cfg.ffn_dim), &l.w_ff2.data, d);
+        add_bias(&mut ff, &l.b_ff2);
+        for (xi, fi) in pruned.iter_mut().zip(&ff) {
+            *xi += fi;
+        }
+        layernorm(&mut pruned, d, &l.ln2_gamma, &l.ln2_beta);
+        x = pruned;
+        n = n_kept;
+        row_high = high_mask;
+    }
+    // mean-pool + classifier
+    let mut pooled = vec![0.0; d];
+    for row in x.chunks(d) {
+        for (p, &v) in pooled.iter_mut().zip(row) {
+            *p += v;
+        }
+    }
+    pooled.iter_mut().for_each(|v| *v /= n as f64);
+    let mut logits = matmul(&pooled, (1, d), &w.w_cls.data, cfg.n_classes);
+    add_bias(&mut logits, &w.b_cls);
+    ForwardOutput { logits, traces }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::workload::Workload;
+
+    fn setup() -> (ModelWeights, Vec<usize>) {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::salient(&cfg, 42);
+        let wl = Workload::qnli_like(&cfg, 16);
+        let s = &wl.batch(1, 3)[0];
+        (w, s.ids.clone())
+    }
+
+    #[test]
+    fn plain_forward_shapes() {
+        let (w, ids) = setup();
+        let out = forward(&w, &ids, &ForwardOptions::plain());
+        assert_eq!(out.logits.len(), 2);
+        assert_eq!(out.traces.len(), 2);
+        assert!(out.traces.iter().all(|t| t.n_kept == t.n_in));
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn progressive_pruning_monotone_nonincreasing() {
+        let (w, ids) = setup();
+        let sched = ThresholdSchedule::default_for(2);
+        let out = forward(&w, &ids, &ForwardOptions::cipherprune(sched, true));
+        let mut prev = ids.len();
+        for t in &out.traces {
+            assert_eq!(t.n_in, prev);
+            assert!(t.n_kept <= t.n_in);
+            assert!(t.n_high <= t.n_kept);
+            prev = t.n_kept;
+        }
+    }
+
+    #[test]
+    fn padding_tokens_get_low_scores() {
+        let (w, ids) = setup();
+        let real_len = ids.iter().filter(|&&i| i != 0).count();
+        let sched = ThresholdSchedule::default_for(2);
+        let out = forward(&w, &ids, &ForwardOptions::cipherprune(sched, false));
+        let s = &out.traces[0].scores;
+        let pad_mean: f64 =
+            s[real_len..].iter().sum::<f64>() / (s.len() - real_len).max(1) as f64;
+        let real_mean: f64 = s[..real_len].iter().sum::<f64>() / real_len as f64;
+        assert!(
+            real_mean > 2.0 * pad_mean,
+            "salient init must concentrate attention: real {real_mean} vs pad {pad_mean}"
+        );
+    }
+
+    #[test]
+    fn word_elim_halves_once() {
+        let (w, ids) = setup();
+        let out = forward(&w, &ids, &ForwardOptions::bolt(true));
+        assert_eq!(out.traces[0].n_kept, ids.len().div_ceil(2));
+        assert_eq!(out.traces[1].n_kept, out.traces[1].n_in);
+    }
+
+    #[test]
+    fn scores_sum_to_one() {
+        let (w, ids) = setup();
+        let out = forward(&w, &ids, &ForwardOptions::plain());
+        for t in &out.traces {
+            let s: f64 = t.scores.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "Eq. 1 scores sum to 1, got {s}");
+        }
+    }
+
+    #[test]
+    fn polynomial_tracks_precise_when_unpruned() {
+        let (w, ids) = setup();
+        let a = forward(&w, &ids, &ForwardOptions::plain());
+        let b = forward(&w, &ids, &ForwardOptions::bolt(false));
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert!((x - y).abs() < 0.35, "plain {x} vs poly {y}");
+        }
+    }
+
+    #[test]
+    fn prune_order_stable_partition() {
+        let (order, k) = prune_order(&[true, false, true, true, false]);
+        assert_eq!(k, 3);
+        assert_eq!(order, vec![0, 2, 3, 1, 4]);
+        // degenerate all-false keeps one
+        let (order, k) = prune_order(&[false, false]);
+        assert_eq!(k, 1);
+        assert_eq!(order[0], 0);
+    }
+
+    #[test]
+    fn causal_masking_differs() {
+        let cfg = ModelConfig {
+            causal: true,
+            ..ModelConfig::tiny()
+        };
+        let w_c = ModelWeights::salient(&cfg, 42);
+        let mut w_b = w_c.clone();
+        w_b.config.causal = false;
+        let ids: Vec<usize> = vec![5, 40, 33, 7];
+        let a = forward(&w_c, &ids, &ForwardOptions::plain());
+        let b = forward(&w_b, &ids, &ForwardOptions::plain());
+        assert!(a.logits.iter().zip(&b.logits).any(|(x, y)| (x - y).abs() > 1e-9));
+    }
+}

@@ -1,0 +1,157 @@
+//! Per-layer pruning (θ) and reduction (β) threshold schedules.
+//!
+//! The paper learns θ^(l) and β^(l) offline with Algorithm 1 (crypto-aware
+//! gradient search, `python/compile/train.py`), then fixes them for online
+//! inference. The schedule is stored in `artifacts/thresholds.json` and loaded
+//! here; when no trained schedule exists, [`ThresholdSchedule::default_for`]
+//! supplies a progressive ramp calibrated on the synthetic workloads.
+//!
+//! Thresholds are expressed *relative to the uniform score* 1/n′ of the
+//! current (post-pruning) token count: an absolute threshold is
+//! `rel / n_current`. Eq. 1 scores sum to 1 across tokens, so the uniform
+//! score is the natural scale — a relative schedule transfers across input
+//! lengths, which is exactly the input-adaptivity the paper claims (a fixed
+//! ratio is what BOLT's W.E. does instead). The server holds the schedule and
+//! derives the absolute θ per layer from the public n′.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Learned per-layer thresholds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThresholdSchedule {
+    /// Pruning thresholds θ^(l), relative to 1/n′.
+    pub theta: Vec<f64>,
+    /// Reduction thresholds β^(l), relative to 1/n′ (β > θ).
+    pub beta: Vec<f64>,
+}
+
+impl ThresholdSchedule {
+    /// Default progressive ramp for an L-layer model: gentle at layer 0
+    /// (mostly padding removal), tightening toward the top. β = 2·θ ramping
+    /// toward 3·θ (more reduction late, where tokens are already few).
+    pub fn default_for(n_layers: usize) -> Self {
+        let l = n_layers.max(1);
+        let theta: Vec<f64> = (0..l)
+            .map(|i| {
+                let t = i as f64 / (l - 1).max(1) as f64;
+                0.35 + 0.55 * t // 0.35 → 0.90 × uniform
+            })
+            .collect();
+        let beta = theta
+            .iter()
+            .enumerate()
+            .map(|(i, &th)| {
+                let t = i as f64 / (l - 1).max(1) as f64;
+                th * (2.0 + t)
+            })
+            .collect();
+        ThresholdSchedule { theta, beta }
+    }
+
+    /// A schedule that never prunes or reduces (baseline engines).
+    pub fn disabled(n_layers: usize) -> Self {
+        ThresholdSchedule { theta: vec![-1.0; n_layers], beta: vec![-1.0; n_layers] }
+    }
+
+    /// Absolute pruning threshold for a layer given the current token count.
+    pub fn theta_abs(&self, layer: usize, n_current: usize) -> f64 {
+        rel_to_abs(self.theta[layer], n_current)
+    }
+
+    /// Absolute reduction threshold for a layer given the current token count.
+    pub fn beta_abs(&self, layer: usize, n_current: usize) -> f64 {
+        rel_to_abs(self.beta[layer], n_current)
+    }
+
+    /// Parse `artifacts/thresholds.json` (written by Algorithm 1 training).
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let theta = j.get("theta")?.as_f64_vec()?;
+        let beta = j.get("beta")?.as_f64_vec()?;
+        if theta.len() != beta.len() || theta.is_empty() {
+            return None;
+        }
+        Some(ThresholdSchedule { theta, beta })
+    }
+
+    pub fn load(path: &Path) -> Option<Self> {
+        let s = std::fs::read_to_string(path).ok()?;
+        Self::from_json(&Json::parse(&s).ok()?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("relative", Json::Bool(true)),
+            ("theta", Json::Arr(self.theta.iter().map(|&v| Json::Num(v)).collect())),
+            ("beta", Json::Arr(self.beta.iter().map(|&v| Json::Num(v)).collect())),
+        ])
+    }
+
+    /// Truncate/extend (by repeating the last entry) to `n_layers`.
+    pub fn fit_layers(mut self, n_layers: usize) -> Self {
+        let last_t = *self.theta.last().unwrap_or(&0.5);
+        let last_b = *self.beta.last().unwrap_or(&1.0);
+        self.theta.resize(n_layers, last_t);
+        self.beta.resize(n_layers, last_b);
+        self
+    }
+}
+
+fn rel_to_abs(rel: f64, n_current: usize) -> f64 {
+    if rel < 0.0 {
+        // disabled sentinel: below any possible score
+        -1.0
+    } else {
+        rel / n_current.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ramp_is_monotone_and_beta_dominates() {
+        let s = ThresholdSchedule::default_for(12);
+        assert_eq!(s.theta.len(), 12);
+        for i in 1..12 {
+            assert!(s.theta[i] >= s.theta[i - 1]);
+        }
+        for i in 0..12 {
+            assert!(s.beta[i] > s.theta[i], "β > θ (paper §3.3)");
+        }
+    }
+
+    #[test]
+    fn relative_to_absolute() {
+        let s = ThresholdSchedule { theta: vec![0.5], beta: vec![1.0] };
+        assert!((s.theta_abs(0, 128) - 0.5 / 128.0).abs() < 1e-12);
+        assert!((s.beta_abs(0, 64) - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_never_fires() {
+        let s = ThresholdSchedule::disabled(3);
+        assert_eq!(s.theta_abs(1, 128), -1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = ThresholdSchedule::default_for(4);
+        let j = s.to_json();
+        let r = ThresholdSchedule::from_json(&j).unwrap();
+        for i in 0..4 {
+            assert!((r.theta[i] - s.theta[i]).abs() < 1e-12);
+            assert!((r.beta[i] - s.beta[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fit_layers_extends_with_last() {
+        let s = ThresholdSchedule { theta: vec![0.1, 0.2], beta: vec![0.3, 0.4] }
+            .fit_layers(4);
+        assert_eq!(s.theta, vec![0.1, 0.2, 0.2, 0.2]);
+        assert_eq!(s.beta, vec![0.3, 0.4, 0.4, 0.4]);
+    }
+}

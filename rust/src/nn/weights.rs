@@ -1,0 +1,352 @@
+//! Weight containers, deterministic initialization, and the binary
+//! weight-file format shared with `python/compile/export_weights.py`.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  "CPW1"            4 bytes
+//! name   u32 len + utf8
+//! u32 ×8: n_layers dim heads ffn_dim vocab max_seq n_classes causal
+//! then matrices in a fixed order, each as u32 rows, u32 cols, f64×rows·cols
+//! ```
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::fixed::F64Mat;
+use crate::util::Xoshiro256;
+
+use super::config::ModelConfig;
+
+/// Weights of one Transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: F64Mat,
+    pub bq: Vec<f64>,
+    pub wk: F64Mat,
+    pub bk: Vec<f64>,
+    pub wv: F64Mat,
+    pub bv: Vec<f64>,
+    pub wo: F64Mat,
+    pub bo: Vec<f64>,
+    pub ln1_gamma: Vec<f64>,
+    pub ln1_beta: Vec<f64>,
+    pub w_ff1: F64Mat,
+    pub b_ff1: Vec<f64>,
+    pub w_ff2: F64Mat,
+    pub b_ff2: Vec<f64>,
+    pub ln2_gamma: Vec<f64>,
+    pub ln2_beta: Vec<f64>,
+}
+
+/// Full model: embeddings + layers + classifier head.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    /// Token embedding table (vocab × dim).
+    pub embedding: F64Mat,
+    /// Positional embeddings (max_seq × dim).
+    pub positional: F64Mat,
+    pub layers: Vec<LayerWeights>,
+    /// Classifier (dim × n_classes).
+    pub w_cls: F64Mat,
+    pub b_cls: Vec<f64>,
+}
+
+fn rand_mat(rng: &mut Xoshiro256, rows: usize, cols: usize, std: f64) -> F64Mat {
+    // Box–Muller gaussian, truncated to ±2σ like BERT's initializer.
+    let mut data = Vec::with_capacity(rows * cols);
+    while data.len() < rows * cols {
+        let u1 = rng.next_f64().max(1e-12);
+        let u2 = rng.next_f64();
+        let g = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        let v = g * std;
+        if v.abs() <= 2.0 * std {
+            data.push(v);
+        }
+    }
+    F64Mat::from_vec(rows, cols, data)
+}
+
+impl ModelWeights {
+    /// Deterministic random initialization (for protocol tests and workloads
+    /// where trained weights are not needed).
+    pub fn random(config: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let d = config.dim;
+        let std = 0.08; // keeps fixed-point activations well inside headroom
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                wq: rand_mat(&mut rng, d, d, std),
+                bq: vec![0.0; d],
+                wk: rand_mat(&mut rng, d, d, std),
+                bk: vec![0.0; d],
+                wv: rand_mat(&mut rng, d, d, std),
+                bv: vec![0.0; d],
+                wo: rand_mat(&mut rng, d, d, std),
+                bo: vec![0.0; d],
+                ln1_gamma: vec![1.0; d],
+                ln1_beta: vec![0.0; d],
+                w_ff1: rand_mat(&mut rng, d, config.ffn_dim, std),
+                b_ff1: vec![0.0; config.ffn_dim],
+                w_ff2: rand_mat(&mut rng, config.ffn_dim, d, std),
+                b_ff2: vec![0.0; d],
+                ln2_gamma: vec![1.0; d],
+                ln2_beta: vec![0.0; d],
+            })
+            .collect();
+        ModelWeights {
+            config: config.clone(),
+            embedding: rand_mat(&mut rng, config.vocab, d, 0.5),
+            positional: rand_mat(&mut rng, config.max_seq, d, 0.05),
+            layers,
+            w_cls: rand_mat(&mut rng, d, config.n_classes, std),
+            b_cls: vec![0.0; config.n_classes],
+        }
+    }
+
+    /// Salience-structured initialization: embeddings of content ids share a
+    /// common direction and W_Q = W_K ≈ I, so attention mass — and therefore
+    /// Eq. 1 importance — concentrates on salient tokens. This reproduces the
+    /// redundancy dynamics a *trained* model exhibits (filler/padding tokens
+    /// attract little attention) without requiring the Python training loop,
+    /// and is what the Rust-only benches use. Trained weights from
+    /// Algorithm 1 can be dropped in via [`ModelWeights::load`].
+    pub fn salient(config: &ModelConfig, seed: u64) -> Self {
+        use super::workload::Workload;
+        let mut w = Self::random(config, seed);
+        let d = config.dim;
+        let hd = config.head_dim();
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5A11_E4CE);
+        // Shared salience direction u (unit entries, spread over all dims so
+        // every attention head sees a slice of it).
+        let u: Vec<f64> =
+            (0..d).map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 }).collect();
+        let un = 1.0 / (d as f64).sqrt();
+        // Keys carry salience: embedding u-component ∝ (0.6 + salience).
+        for v in 0..config.vocab {
+            let s = Workload::salience(config.vocab, v);
+            for c in 0..d {
+                let e = w.embedding.at(v, c) * 0.3 + (0.6 + s) * u[c] * un * 2.0;
+                *w.embedding.at_mut(v, c) = e;
+            }
+        }
+        // Queries carry a constant u-component via the bias: with W_K = I and
+        // b_Q = q0·u, the attention logit of column j is
+        // λ·(0.6 + salience_j) + O(noise) with λ = 2, for every row — the
+        // "global salience head" behaviour trained models learn. A small
+        // W_Q = 0.3·I keeps rows input-dependent. Column softmax mass — and
+        // therefore the Eq. 1 importance score — then tracks salience:
+        // content ≈ e^{2·1.85}, filler ≈ e^{2·0.85}, padding ≈ e^{2·0.6}.
+        let q0 = d as f64 / (hd as f64).sqrt(); // λ = q0·2·√hd/d = 2
+        for l in &mut w.layers {
+            for r in 0..d {
+                for c in 0..d {
+                    let diag = if r == c { 1.0 } else { 0.0 };
+                    *l.wq.at_mut(r, c) = 0.3 * diag;
+                    *l.wk.at_mut(r, c) = diag;
+                }
+            }
+            for c in 0..d {
+                l.bq[c] = q0 * u[c] * un;
+            }
+        }
+        w
+    }
+
+    fn mats(&self) -> Vec<(&str, MatRef<'_>)> {
+        let mut v: Vec<(&str, MatRef<'_>)> = vec![
+            ("embedding", MatRef::M(&self.embedding)),
+            ("positional", MatRef::M(&self.positional)),
+        ];
+        for l in &self.layers {
+            v.push(("wq", MatRef::M(&l.wq)));
+            v.push(("bq", MatRef::V(&l.bq)));
+            v.push(("wk", MatRef::M(&l.wk)));
+            v.push(("bk", MatRef::V(&l.bk)));
+            v.push(("wv", MatRef::M(&l.wv)));
+            v.push(("bv", MatRef::V(&l.bv)));
+            v.push(("wo", MatRef::M(&l.wo)));
+            v.push(("bo", MatRef::V(&l.bo)));
+            v.push(("ln1g", MatRef::V(&l.ln1_gamma)));
+            v.push(("ln1b", MatRef::V(&l.ln1_beta)));
+            v.push(("wf1", MatRef::M(&l.w_ff1)));
+            v.push(("bf1", MatRef::V(&l.b_ff1)));
+            v.push(("wf2", MatRef::M(&l.w_ff2)));
+            v.push(("bf2", MatRef::V(&l.b_ff2)));
+            v.push(("ln2g", MatRef::V(&l.ln2_gamma)));
+            v.push(("ln2b", MatRef::V(&l.ln2_beta)));
+        }
+        v.push(("w_cls", MatRef::M(&self.w_cls)));
+        v.push(("b_cls", MatRef::V(&self.b_cls)));
+        v
+    }
+
+    /// Serialize to the binary weight format.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"CPW1")?;
+        let name = self.config.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        let c = &self.config;
+        for v in [
+            c.n_layers, c.dim, c.heads, c.ffn_dim, c.vocab, c.max_seq, c.n_classes,
+            c.causal as usize,
+        ] {
+            f.write_all(&(v as u32).to_le_bytes())?;
+        }
+        for (_, m) in self.mats() {
+            let (rows, cols, data) = m.parts();
+            f.write_all(&(rows as u32).to_le_bytes())?;
+            f.write_all(&(cols as u32).to_le_bytes())?;
+            for &x in data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the binary weight format.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let mut f = io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"CPW1" {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let vals: Vec<usize> = (0..8)
+            .map(|_| read_u32(&mut f).map(|v| v as usize))
+            .collect::<io::Result<_>>()?;
+        let config = ModelConfig {
+            name,
+            n_layers: vals[0],
+            dim: vals[1],
+            heads: vals[2],
+            ffn_dim: vals[3],
+            vocab: vals[4],
+            max_seq: vals[5],
+            n_classes: vals[6],
+            causal: vals[7] != 0,
+        };
+        let embedding = read_mat(&mut f)?;
+        let positional = read_mat(&mut f)?;
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            layers.push(LayerWeights {
+                wq: read_mat(&mut f)?,
+                bq: read_vec(&mut f)?,
+                wk: read_mat(&mut f)?,
+                bk: read_vec(&mut f)?,
+                wv: read_mat(&mut f)?,
+                bv: read_vec(&mut f)?,
+                wo: read_mat(&mut f)?,
+                bo: read_vec(&mut f)?,
+                ln1_gamma: read_vec(&mut f)?,
+                ln1_beta: read_vec(&mut f)?,
+                w_ff1: read_mat(&mut f)?,
+                b_ff1: read_vec(&mut f)?,
+                w_ff2: read_mat(&mut f)?,
+                b_ff2: read_vec(&mut f)?,
+                ln2_gamma: read_vec(&mut f)?,
+                ln2_beta: read_vec(&mut f)?,
+            });
+        }
+        let w_cls = read_mat(&mut f)?;
+        let b_cls = read_vec(&mut f)?;
+        Ok(ModelWeights { config, embedding, positional, layers, w_cls, b_cls })
+    }
+}
+
+enum MatRef<'a> {
+    M(&'a F64Mat),
+    V(&'a [f64]),
+}
+
+impl<'a> MatRef<'a> {
+    fn parts(&self) -> (usize, usize, &[f64]) {
+        match self {
+            MatRef::M(m) => (m.rows, m.cols, &m.data),
+            MatRef::V(v) => (1, v.len(), v),
+        }
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_mat<R: Read>(r: &mut R) -> io::Result<F64Mat> {
+    let rows = read_u32(r)? as usize;
+    let cols = read_u32(r)? as usize;
+    let mut data = Vec::with_capacity(rows * cols);
+    let mut b = [0u8; 8];
+    for _ in 0..rows * cols {
+        r.read_exact(&mut b)?;
+        data.push(f64::from_le_bytes(b));
+    }
+    Ok(F64Mat::from_vec(rows, cols, data))
+}
+
+fn read_vec<R: Read>(r: &mut R) -> io::Result<Vec<f64>> {
+    let m = read_mat(r)?;
+    assert_eq!(m.rows, 1);
+    Ok(m.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_deterministic() {
+        let c = ModelConfig::tiny();
+        let a = ModelWeights::random(&c, 7);
+        let b = ModelWeights::random(&c, 7);
+        assert_eq!(a.embedding.data, b.embedding.data);
+        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+        let c2 = ModelWeights::random(&c, 8);
+        assert_ne!(a.embedding.data, c2.embedding.data);
+    }
+
+    #[test]
+    fn init_magnitudes_bounded() {
+        let w = ModelWeights::random(&ModelConfig::tiny(), 3);
+        for &v in &w.layers[0].wq.data {
+            assert!(v.abs() <= 0.16 + 1e-9);
+        }
+        assert!(w.layers[0].ln1_gamma.iter().all(|&g| g == 1.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::random(&c, 11);
+        let dir = std::env::temp_dir().join("cipherprune-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        w.save(&p).unwrap();
+        let r = ModelWeights::load(&p).unwrap();
+        assert_eq!(r.config, c);
+        assert_eq!(r.embedding.data, w.embedding.data);
+        assert_eq!(r.layers[1].w_ff2.data, w.layers[1].w_ff2.data);
+        assert_eq!(r.b_cls, w.b_cls);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("cipherprune-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(ModelWeights::load(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic workloads with controllable redundancy.
+//!
+//! The paper evaluates on GLUE (MNLI/QNLI/SST2/MRPC); we substitute
+//! synthetic token-classification corpora whose *redundancy structure* is
+//! controllable (DESIGN.md §Substitutions): every sample mixes
+//!
+//! - **content tokens** — high-salience ids whose embeddings share a common
+//!   direction, so attention mass (and thus Eq. 1 importance) concentrates
+//!   on them,
+//! - **filler tokens** — low-salience ids (the "the/a/movie was" of Fig. 1c),
+//! - **padding** — id 0 up to the sequence length, mirroring the paper's
+//!   Appendix F observation that layer-0 pruning is dominated by padding.
+//!
+//! The label is the majority content class (see [`Workload::sample`]) —
+//! linearly separable from pooled embeddings, yet erased if the content
+//! tokens are pruned, which is exactly the redundancy/importance structure
+//! the pruning experiments require.
+
+use crate::util::Xoshiro256;
+
+use super::config::ModelConfig;
+
+/// Token-id layout within the synthetic vocabulary.
+pub const PAD_ID: usize = 0;
+
+/// One classification sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Token ids, padded with [`PAD_ID`] to the requested length.
+    pub ids: Vec<usize>,
+    /// Ground-truth class.
+    pub label: usize,
+    /// Number of non-padding tokens.
+    pub real_len: usize,
+}
+
+/// Workload generator parameters.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub vocab: usize,
+    pub n_classes: usize,
+    /// Padded sequence length fed to the model.
+    pub seq_len: usize,
+    /// Mean real (unpadded) length.
+    pub mean_len: usize,
+    /// Fraction of real tokens that are low-salience filler ∈ [0, 1).
+    pub redundancy: f64,
+}
+
+impl Workload {
+    /// Workload matching a model config: QNLI-like (paper App. F: mean 48.5
+    /// real tokens at seq 128 → scale proportionally) with 60% filler.
+    pub fn qnli_like(config: &ModelConfig, seq_len: usize) -> Self {
+        Workload {
+            vocab: config.vocab,
+            n_classes: config.n_classes,
+            seq_len,
+            mean_len: (seq_len * 48 / 128).max(8),
+            redundancy: 0.6,
+        }
+    }
+
+    /// Fully dense workload (no padding, low redundancy) — worst case for
+    /// pruning, used in ablations.
+    pub fn dense(config: &ModelConfig, seq_len: usize) -> Self {
+        Workload {
+            vocab: config.vocab,
+            n_classes: config.n_classes,
+            seq_len,
+            mean_len: seq_len,
+            redundancy: 0.2,
+        }
+    }
+
+    /// Is a token id a high-salience content id?
+    pub fn is_content(vocab: usize, id: usize) -> bool {
+        id >= vocab / 2
+    }
+
+    /// Salience of a token id: 0 for PAD, low for filler, high for content.
+    pub fn salience(vocab: usize, id: usize) -> f64 {
+        if id == PAD_ID {
+            0.0
+        } else if Self::is_content(vocab, id) {
+            1.0 + 0.5 * ((id * 37) % 16) as f64 / 16.0
+        } else {
+            0.25
+        }
+    }
+
+    /// Generate one sample. The label is the majority content *class*:
+    /// content ids split into n_classes contiguous bands in the upper half
+    /// of the vocabulary, each sample drawing 75% of its content from its
+    /// label's band — the same rule as `python/compile/data.py`, so models
+    /// trained by Algorithm 1 evaluate correctly on Rust-generated batches.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> Sample {
+        // real length: mean ± 25%, clamped to [4, seq_len]
+        let spread = (self.mean_len / 4).max(1);
+        let real_len = (self.mean_len + (rng.next_u64() as usize % (2 * spread + 1)))
+            .saturating_sub(spread)
+            .clamp(4.min(self.seq_len), self.seq_len);
+        let n_content =
+            ((real_len as f64 * (1.0 - self.redundancy)).round() as usize).clamp(1, real_len);
+        let half = self.vocab / 2;
+        let band = (half / self.n_classes).max(1);
+        let y = rng.next_u64() as usize % self.n_classes;
+        let mut counts = vec![0usize; self.n_classes];
+        let mut ids = Vec::with_capacity(self.seq_len);
+        for i in 0..real_len {
+            // spread content tokens through the sequence
+            let is_content = i * n_content / real_len != (i + 1) * n_content / real_len
+                || (i == 0 && n_content >= real_len);
+            let id = if is_content {
+                let cls = if rng.next_f64() < 0.75 {
+                    y
+                } else {
+                    rng.next_u64() as usize % self.n_classes
+                };
+                counts[cls] += 1;
+                (half + cls * band + rng.next_u64() as usize % band).min(self.vocab - 1)
+            } else {
+                1 + (rng.next_u64() as usize % (half - 1))
+            };
+            ids.push(id);
+        }
+        ids.resize(self.seq_len, PAD_ID);
+        let label = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Sample { ids, label, real_len }
+    }
+
+    /// Generate a batch of samples.
+    pub fn batch(&self, n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| self.sample(&mut rng)).collect()
+    }
+
+    /// A sample whose real length equals the workload mean — benches use
+    /// this so single-run measurements are not at the mercy of the length
+    /// distribution's tails.
+    pub fn representative(&self, seed: u64) -> Sample {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        loop {
+            let s = self.sample(&mut rng);
+            if s.real_len == self.mean_len.min(self.seq_len) {
+                return s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_padded_and_labeled() {
+        let c = ModelConfig::tiny();
+        let w = Workload::qnli_like(&c, 32);
+        for s in w.batch(16, 5) {
+            assert_eq!(s.ids.len(), 32);
+            assert!(s.real_len <= 32 && s.real_len >= 4);
+            assert!(s.label < c.n_classes);
+            // all tokens beyond real_len are PAD
+            assert!(s.ids[s.real_len..].iter().all(|&i| i == PAD_ID));
+            // real tokens are non-PAD
+            assert!(s.ids[..s.real_len].iter().all(|&i| i != PAD_ID));
+        }
+    }
+
+    #[test]
+    fn redundancy_controls_content_fraction() {
+        let c = ModelConfig::tiny();
+        let lo = Workload { redundancy: 0.2, ..Workload::qnli_like(&c, 64) };
+        let hi = Workload { redundancy: 0.8, ..Workload::qnli_like(&c, 64) };
+        let frac = |w: &Workload| {
+            let b = w.batch(64, 9);
+            let (mut c_n, mut tot) = (0usize, 0usize);
+            for s in &b {
+                c_n += s.ids[..s.real_len]
+                    .iter()
+                    .filter(|&&i| Workload::is_content(w.vocab, i))
+                    .count();
+                tot += s.real_len;
+            }
+            c_n as f64 / tot as f64
+        };
+        assert!(frac(&lo) > frac(&hi) + 0.3);
+    }
+
+    #[test]
+    fn determinism_by_seed() {
+        let c = ModelConfig::tiny();
+        let w = Workload::qnli_like(&c, 32);
+        let a = w.batch(4, 42);
+        let b = w.batch(4, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ids, y.ids);
+        }
+    }
+
+    #[test]
+    fn salience_layers() {
+        assert_eq!(Workload::salience(64, PAD_ID), 0.0);
+        assert!(Workload::salience(64, 5) < 0.5);
+        assert!(Workload::salience(64, 40) >= 1.0);
+    }
+}

@@ -1,0 +1,845 @@
+//! Oblivious-transfer layer: IKNP OT extension, correlated OT, chosen 1-of-2
+//! and 1-of-k OT.
+//!
+//! The paper's non-linear protocols (Π_CMP, Π_mask's oblivious swaps, MUX, B2A)
+//! are built on OT, following CrypTFlow2/SIRNN. We implement the IKNP extension
+//! for real over the counted channel: the receiver's `u` matrix, correction
+//! words and ciphertexts are all actual messages, so communication and rounds
+//! are measured, not modeled.
+//!
+//! Base OTs are dealer-seeded (see `party::PartyCtx::dealer_prg`): the λ=128
+//! base-OT seeds come from the setup dealer instead of an interactive
+//! Naor–Pinkas phase. This is a fixed O(λ) setup cost identical across every
+//! compared system (DESIGN.md, substitution table).
+
+use crate::net::Chan;
+use crate::party::PartyCtx;
+use crate::util::{AesPrg, CrHash};
+
+pub const KAPPA: usize = 128;
+
+/// Transpose a 64×64 bit matrix held as 64 u64 rows (Hacker's Delight 7-3).
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] >> j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t << j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Bit-matrix transpose: input `cols` = KAPPA column bitstrings of `n` bits each
+/// (each column packed LSB-first into u64 words); output: `n` rows of 128 bits.
+fn transpose_cols_to_rows(cols: &[Vec<u64>], n: usize) -> Vec<u128> {
+    assert_eq!(cols.len(), KAPPA);
+    let words = n.div_ceil(64);
+    let mut rows = vec![0u128; words * 64];
+    let mut block = [0u64; 64];
+    // process 64 rows at a time; two 64x64 sub-blocks (columns 0-63, 64-127)
+    // transpose64 maps (r, c) -> (63-c, 63-r); reversing row order on input
+    // and output turns that into a plain (r, c) -> (c, r) transpose.
+    for w in 0..words {
+        for half in 0..2 {
+            for j in 0..64 {
+                block[63 - j] = cols[half * 64 + j][w];
+            }
+            transpose64(&mut block);
+            // block[63-i] now holds, at bit j, the bit of column (half*64+j)
+            // for row (w*64 + i)
+            for i in 0..64 {
+                rows[w * 64 + i] |= (block[63 - i] as u128) << (half * 64);
+            }
+        }
+    }
+    rows.truncate(n);
+    rows
+}
+
+/// Extract bit i from a packed (LSB-first) bit vector.
+#[inline]
+pub fn get_bit(bits: &[u8], i: usize) -> bool {
+    (bits[i / 8] >> (i % 8)) & 1 == 1
+}
+
+#[inline]
+pub fn set_bit(bits: &mut [u8], i: usize, v: bool) {
+    if v {
+        bits[i / 8] |= 1 << (i % 8);
+    } else {
+        bits[i / 8] &= !(1 << (i % 8));
+    }
+}
+
+/// Pack bool slice into LSB-first bytes.
+pub fn pack_bits(bs: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; bs.len().div_ceil(8)];
+    for (i, &b) in bs.iter().enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Per-direction IKNP state for the extension *sender*.
+struct SenderBase {
+    /// λ random choice bits s (the sender's base-OT choices).
+    s_bits: u128,
+    /// PRG streams k_{s_j} for each base OT j.
+    streams: Vec<AesPrg>,
+}
+
+/// Per-direction IKNP state for the extension *receiver*.
+struct ReceiverBase {
+    /// Both PRG streams (k_0, k_1) per base OT j.
+    streams0: Vec<AesPrg>,
+    streams1: Vec<AesPrg>,
+}
+
+/// OT endpoint: supports acting as sender and receiver of extended OTs
+/// (base OTs for both directions are derived at setup).
+pub struct OtCtx {
+    send_base: SenderBase,
+    recv_base: ReceiverBase,
+    hash: CrHash,
+    tweak: u64,
+}
+
+impl OtCtx {
+    /// Derive base OTs from the dealer. Direction key: the party that will act
+    /// as extension-*sender* uses the base OTs labeled with its own id.
+    pub fn setup(ctx: &mut PartyCtx) -> OtCtx {
+        let my = ctx.id.index();
+        let other = 1 - my;
+        // base OTs for the direction where *we* are extension sender
+        let (s_bits, my_streams) = {
+            let mut prg = ctx.dealer_prg(&format!("baseot-dir{my}"));
+            let s: u128;
+            let mut seeds0 = Vec::with_capacity(KAPPA);
+            let mut seeds1 = Vec::with_capacity(KAPPA);
+            for _ in 0..KAPPA {
+                let mut k0 = [0u8; 16];
+                let mut k1 = [0u8; 16];
+                prg.fill_bytes(&mut k0);
+                prg.fill_bytes(&mut k1);
+                seeds0.push(k0);
+                seeds1.push(k1);
+            }
+            let mut sb = [0u8; 16];
+            prg.fill_bytes(&mut sb);
+            s = u128::from_le_bytes(sb);
+            let streams = (0..KAPPA)
+                .map(|j| {
+                    let sel = (s >> j) & 1 == 1;
+                    AesPrg::new(if sel { seeds1[j] } else { seeds0[j] })
+                })
+                .collect();
+            (s, streams)
+        };
+        // base OTs for the direction where the *other* party is sender:
+        // we are receiver and hold both seed streams.
+        let (streams0, streams1) = {
+            let mut prg = ctx.dealer_prg(&format!("baseot-dir{other}"));
+            let mut s0 = Vec::with_capacity(KAPPA);
+            let mut s1 = Vec::with_capacity(KAPPA);
+            for _ in 0..KAPPA {
+                let mut k0 = [0u8; 16];
+                let mut k1 = [0u8; 16];
+                prg.fill_bytes(&mut k0);
+                prg.fill_bytes(&mut k1);
+                s0.push(AesPrg::new(k0));
+                s1.push(AesPrg::new(k1));
+            }
+            (s0, s1)
+        };
+        OtCtx {
+            send_base: SenderBase { s_bits, streams: my_streams },
+            recv_base: ReceiverBase { streams0, streams1 },
+            hash: CrHash::new(),
+            tweak: 0,
+        }
+    }
+
+    fn next_tweak(&mut self, n: usize) -> u64 {
+        let t = self.tweak;
+        self.tweak += n as u64;
+        t
+    }
+
+    // ---------------------------------------------------------------- ROT
+
+    /// Random OT, extension-sender side: returns n pairs (m0, m1) of 128-bit
+    /// random messages. The peer must call [`rot_recv`] with n choice bits.
+    pub fn rot_send(&mut self, ch: &mut Chan, n: usize) -> Vec<(u128, u128)> {
+        let words = n.div_ceil(64);
+        // receive u_j columns from receiver
+        let u_flat = ch.recv_u64s();
+        assert_eq!(u_flat.len(), words * KAPPA, "IKNP u matrix size");
+        let mut qcols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
+        for j in 0..KAPPA {
+            let mut col = vec![0u64; words];
+            self.send_base.streams[j].fill_u64(&mut col);
+            if (self.send_base.s_bits >> j) & 1 == 1 {
+                for (c, &u) in col.iter_mut().zip(&u_flat[j * words..(j + 1) * words]) {
+                    *c ^= u;
+                }
+            }
+            qcols.push(col);
+        }
+        let rows = transpose_cols_to_rows(&qcols, n);
+        let s = self.send_base.s_bits;
+        let t0 = self.next_tweak(n);
+        rows.iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                let m0 = self.hash.hash128(t0 + i as u64, q);
+                let m1 = self.hash.hash128(t0 + i as u64, q ^ s);
+                (m0, m1)
+            })
+            .collect()
+    }
+
+    /// Random OT, extension-receiver side: choices packed LSB-first.
+    /// Returns m_{b_i} for each i.
+    pub fn rot_recv(&mut self, ch: &mut Chan, choices: &[u8], n: usize) -> Vec<u128> {
+        assert!(choices.len() * 8 >= n);
+        let words = n.div_ceil(64);
+        // choice bits as u64 words
+        let mut r = vec![0u64; words];
+        for i in 0..n {
+            if get_bit(choices, i) {
+                r[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let mut tcols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
+        let mut u_flat = Vec::with_capacity(KAPPA * words);
+        for j in 0..KAPPA {
+            let mut t = vec![0u64; words];
+            self.recv_base.streams0[j].fill_u64(&mut t);
+            let mut g = vec![0u64; words];
+            self.recv_base.streams1[j].fill_u64(&mut g);
+            for w in 0..words {
+                u_flat.push(t[w] ^ g[w] ^ r[w]);
+            }
+            tcols.push(t);
+        }
+        ch.send_u64s(&u_flat);
+        let rows = transpose_cols_to_rows(&tcols, n);
+        let t0 = self.next_tweak(n);
+        rows.iter()
+            .enumerate()
+            .map(|(i, &t)| self.hash.hash128(t0 + i as u64, t))
+            .collect()
+    }
+
+    // ---------------------------------------------------------------- COT
+
+    /// Correlated OT over Z_2^64, sender side. Sender inputs correlations Δ_i;
+    /// outputs s_i such that the receiver obtains t_i = s_i + b_i·Δ_i.
+    pub fn cot_send(&mut self, ch: &mut Chan, deltas: &[u64]) -> Vec<u64> {
+        let n = deltas.len();
+        let ms = self.rot_send(ch, n);
+        let mut corr = Vec::with_capacity(n);
+        let mut out = Vec::with_capacity(n);
+        for (i, (m0, m1)) in ms.iter().enumerate() {
+            let s = *m0 as u64;
+            // receiver with b=1 holds m1; correction lets it compute s + Δ
+            corr.push(deltas[i].wrapping_add(s).wrapping_sub(*m1 as u64));
+            out.push(s);
+        }
+        ch.send_u64s(&corr);
+        out
+    }
+
+    /// Correlated OT receiver side: inputs packed choice bits.
+    pub fn cot_recv(&mut self, ch: &mut Chan, choices: &[u8], n: usize) -> Vec<u64> {
+        let ms = self.rot_recv(ch, choices, n);
+        let corr = ch.recv_u64s();
+        assert_eq!(corr.len(), n);
+        (0..n)
+            .map(|i| {
+                let mb = ms[i] as u64;
+                if get_bit(choices, i) {
+                    mb.wrapping_add(corr[i])
+                } else {
+                    mb
+                }
+            })
+            .collect()
+    }
+
+    /// Wide COT: correlations are vectors of `w` u64 words (all sharing one
+    /// choice bit per instance). Used for token-vector MUX/swap.
+    pub fn cot_send_wide(&mut self, ch: &mut Chan, deltas: &[Vec<u64>], w: usize) -> Vec<Vec<u64>> {
+        let n = deltas.len();
+        let ms = self.rot_send(ch, n);
+        let t0 = self.next_tweak(n);
+        let mut corr = Vec::with_capacity(n * w);
+        let mut out = Vec::with_capacity(n);
+        let mut buf0 = vec![0u64; w];
+        let mut buf1 = vec![0u64; w];
+        for (i, (m0, m1)) in ms.iter().enumerate() {
+            assert_eq!(deltas[i].len(), w);
+            self.hash.hash_wide(t0 + i as u64, *m0, &mut buf0);
+            self.hash.hash_wide(t0 + i as u64, *m1, &mut buf1);
+            for k in 0..w {
+                corr.push(deltas[i][k].wrapping_add(buf0[k]).wrapping_sub(buf1[k]));
+            }
+            out.push(buf0.clone());
+        }
+        ch.send_u64s(&corr);
+        out
+    }
+
+    pub fn cot_recv_wide(
+        &mut self,
+        ch: &mut Chan,
+        choices: &[u8],
+        n: usize,
+        w: usize,
+    ) -> Vec<Vec<u64>> {
+        let ms = self.rot_recv(ch, choices, n);
+        let t0 = self.next_tweak(n);
+        let corr = ch.recv_u64s();
+        assert_eq!(corr.len(), n * w);
+        let mut buf = vec![0u64; w];
+        (0..n)
+            .map(|i| {
+                self.hash.hash_wide(t0 + i as u64, ms[i], &mut buf);
+                if get_bit(choices, i) {
+                    (0..w).map(|k| buf[k].wrapping_add(corr[i * w + k])).collect()
+                } else {
+                    buf.clone()
+                }
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------- chosen 1-of-2
+
+    /// Chosen-message 1-of-2 OT over u64 words (each message is `w` words).
+    /// Sender side: msgs[i] = (x0, x1).
+    pub fn ot2_send(&mut self, ch: &mut Chan, msgs: &[(Vec<u64>, Vec<u64>)], w: usize) {
+        let n = msgs.len();
+        let ms = self.rot_send(ch, n);
+        // receiver flips its random ROT choice to its real choice
+        let flips = ch.recv_bits();
+        let t0 = self.next_tweak(n);
+        let mut enc = Vec::with_capacity(n * 2 * w);
+        let mut buf0 = vec![0u64; w];
+        let mut buf1 = vec![0u64; w];
+        for (i, (x0, x1)) in msgs.iter().enumerate() {
+            let d = get_bit(&flips, i);
+            self.hash.hash_wide(t0 + i as u64, ms[i].0, &mut buf0);
+            self.hash.hash_wide(t0 + i as u64, ms[i].1, &mut buf1);
+            // e_j encrypts x_j under the key the receiver holds iff b = j:
+            // receiver holds m_c with c = b ^ d  =>  key for x_j is m_{j^d}.
+            let (k0, k1) = if d { (&buf1, &buf0) } else { (&buf0, &buf1) };
+            for k in 0..w {
+                enc.push(x0[k] ^ k0[k]);
+            }
+            for k in 0..w {
+                enc.push(x1[k] ^ k1[k]);
+            }
+        }
+        ch.send_u64s(&enc);
+    }
+
+    /// Chosen-message 1-of-2 OT receiver side.
+    pub fn ot2_recv(&mut self, ch: &mut Chan, choices: &[u8], n: usize, w: usize) -> Vec<Vec<u64>> {
+        // random choices for the ROT layer
+        let mut rand_choices = vec![0u8; n.div_ceil(8)];
+        // derive from hash of nothing deterministic — use a local PRG seeded by
+        // tweak to stay reproducible per session
+        let mut prg = AesPrg::from_u64_seed(0xC0FFEE ^ self.tweak);
+        prg.fill_bytes(&mut rand_choices);
+        let ms = self.rot_recv(ch, &rand_choices, n);
+        let mut flips = vec![0u8; n.div_ceil(8)];
+        for i in 0..n {
+            set_bit(&mut flips, i, get_bit(choices, i) ^ get_bit(&rand_choices, i));
+        }
+        ch.send_bits(&flips);
+        let t0 = self.next_tweak(n);
+        let enc = ch.recv_u64s();
+        assert_eq!(enc.len(), n * 2 * w);
+        let mut buf = vec![0u64; w];
+        (0..n)
+            .map(|i| {
+                let b = get_bit(choices, i);
+                self.hash.hash_wide(t0 + i as u64, ms[i], &mut buf);
+                let base = i * 2 * w + if b { w } else { 0 };
+                (0..w).map(|k| enc[base + k] ^ buf[k]).collect()
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------- chosen 1-of-k
+
+    /// 1-of-k OT (k = 2^m), sender side. `msgs[i]` holds k messages of `w`
+    /// words each. Built from m ROTs per instance plus k encrypted messages
+    /// (Kolesnikov–Kumaresan-style short-secret OT).
+    pub fn otk_send(&mut self, ch: &mut Chan, msgs: &[Vec<Vec<u64>>], k: usize, w: usize) {
+        assert!(k.is_power_of_two() && k >= 2);
+        let m = k.trailing_zeros() as usize;
+        let n = msgs.len();
+        let ms = self.rot_send(ch, n * m);
+        let flips = ch.recv_bits();
+        let t0 = self.next_tweak(n * k);
+        let mut enc = Vec::with_capacity(n * k * w);
+        let mut buf = vec![0u64; w];
+        for (i, mi) in msgs.iter().enumerate() {
+            assert_eq!(mi.len(), k);
+            for (v, msg) in mi.iter().enumerate() {
+                // combine the keys the receiver holds iff its index equals v
+                let mut key: u128 = 0;
+                for j in 0..m {
+                    let vbit = (v >> j) & 1 == 1;
+                    let d = get_bit(&flips, i * m + j);
+                    // receiver's key for bit j is m_{c} with c = i_j ^ d;
+                    // for index v the needed key is m_{v_j ^ d}
+                    let pick1 = vbit ^ d;
+                    let (m0, m1) = ms[i * m + j];
+                    key ^= (if pick1 { m1 } else { m0 }).rotate_left(j as u32);
+                }
+                self.hash.hash_wide(t0 + (i * k + v) as u64, key, &mut buf);
+                for kk in 0..w {
+                    enc.push(msg[kk] ^ buf[kk]);
+                }
+            }
+        }
+        ch.send_u64s(&enc);
+    }
+
+    /// Byte-width 1-of-k OT sender: like [`otk_send`] but messages are `w`
+    /// bytes each — 8× less traffic for the 2-bit payloads of the comparison
+    /// protocol's leaves.
+    pub fn otk_send_bytes(&mut self, ch: &mut Chan, msgs: &[Vec<Vec<u8>>], k: usize, w: usize) {
+        assert!(k.is_power_of_two() && k >= 2);
+        let m = k.trailing_zeros() as usize;
+        let n = msgs.len();
+        let ms = self.rot_send(ch, n * m);
+        let flips = ch.recv_bits();
+        let t0 = self.next_tweak(n * k);
+        let mut enc = Vec::with_capacity(n * k * w);
+        for (i, mi) in msgs.iter().enumerate() {
+            assert_eq!(mi.len(), k);
+            for (v, msg) in mi.iter().enumerate() {
+                let mut key: u128 = 0;
+                for j in 0..m {
+                    let vbit = (v >> j) & 1 == 1;
+                    let d = get_bit(&flips, i * m + j);
+                    let pick1 = vbit ^ d;
+                    let (m0, m1) = ms[i * m + j];
+                    key ^= (if pick1 { m1 } else { m0 }).rotate_left(j as u32);
+                }
+                let mask = self.hash.hash128(t0 + (i * k + v) as u64, key).to_le_bytes();
+                assert!(w <= 16, "byte-width OT supports up to 16-byte messages");
+                for kk in 0..w {
+                    enc.push(msg[kk] ^ mask[kk]);
+                }
+            }
+        }
+        ch.send_bytes(&enc);
+    }
+
+    /// Flat-buffer 1-of-k OT sender: `msgs` holds n·k messages of `w` bytes
+    /// contiguously (message v of instance i at `(i·k + v)·w`). Same protocol
+    /// as [`otk_send_bytes`] without the nested-Vec allocation churn — the
+    /// millionaires leaf phase issues hundreds of thousands of these.
+    pub fn otk_send_flat(&mut self, ch: &mut Chan, msgs: &[u8], n: usize, k: usize, w: usize) {
+        assert!(k.is_power_of_two() && k >= 2);
+        assert_eq!(msgs.len(), n * k * w);
+        assert!(w <= 16, "flat OT supports up to 16-byte messages");
+        let m = k.trailing_zeros() as usize;
+        let ms = self.rot_send(ch, n * m);
+        let flips = ch.recv_bits();
+        let t0 = self.next_tweak(n * k);
+        let mut enc = vec![0u8; n * k * w];
+        for i in 0..n {
+            // precompute per-bit keys once per instance
+            let mut keys0 = [0u128; 16];
+            let mut keys1 = [0u128; 16];
+            for j in 0..m {
+                let d = get_bit(&flips, i * m + j);
+                let (m0, m1) = ms[i * m + j];
+                let (k0, k1) = if d { (m1, m0) } else { (m0, m1) };
+                keys0[j] = k0.rotate_left(j as u32);
+                keys1[j] = k1.rotate_left(j as u32);
+            }
+            for v in 0..k {
+                let mut key: u128 = 0;
+                for j in 0..m {
+                    key ^= if (v >> j) & 1 == 1 { keys1[j] } else { keys0[j] };
+                }
+                let mask = self.hash.hash128(t0 + (i * k + v) as u64, key).to_le_bytes();
+                let base = (i * k + v) * w;
+                for kk in 0..w {
+                    enc[base + kk] = msgs[base + kk] ^ mask[kk];
+                }
+            }
+        }
+        ch.send_bytes(&enc);
+    }
+
+    /// Flat-buffer 1-of-k OT receiver: returns n·w bytes contiguously.
+    pub fn otk_recv_flat(
+        &mut self,
+        ch: &mut Chan,
+        indices: &[usize],
+        k: usize,
+        w: usize,
+    ) -> Vec<u8> {
+        assert!(k.is_power_of_two() && k >= 2);
+        let m = k.trailing_zeros() as usize;
+        let n = indices.len();
+        let mut rand_choices = vec![0u8; (n * m).div_ceil(8)];
+        let mut prg = AesPrg::from_u64_seed(0xBEEF ^ self.tweak);
+        prg.fill_bytes(&mut rand_choices);
+        let ms = self.rot_recv(ch, &rand_choices, n * m);
+        let mut flips = vec![0u8; (n * m).div_ceil(8)];
+        for i in 0..n {
+            assert!(indices[i] < k);
+            for j in 0..m {
+                let ij = (indices[i] >> j) & 1 == 1;
+                set_bit(&mut flips, i * m + j, ij ^ get_bit(&rand_choices, i * m + j));
+            }
+        }
+        ch.send_bits(&flips);
+        let t0 = self.next_tweak(n * k);
+        let enc = ch.recv_bytes();
+        assert_eq!(enc.len(), n * k * w);
+        let mut out = vec![0u8; n * w];
+        for i in 0..n {
+            let v = indices[i];
+            let mut key: u128 = 0;
+            for j in 0..m {
+                key ^= ms[i * m + j].rotate_left(j as u32);
+            }
+            let mask = self.hash.hash128(t0 + (i * k + v) as u64, key).to_le_bytes();
+            let base = (i * k + v) * w;
+            for kk in 0..w {
+                out[i * w + kk] = enc[base + kk] ^ mask[kk];
+            }
+        }
+        out
+    }
+
+    /// Byte-width 1-of-k OT receiver.
+    pub fn otk_recv_bytes(
+        &mut self,
+        ch: &mut Chan,
+        indices: &[usize],
+        k: usize,
+        w: usize,
+    ) -> Vec<Vec<u8>> {
+        assert!(k.is_power_of_two() && k >= 2);
+        let m = k.trailing_zeros() as usize;
+        let n = indices.len();
+        let mut rand_choices = vec![0u8; (n * m).div_ceil(8)];
+        let mut prg = AesPrg::from_u64_seed(0xBEEF ^ self.tweak);
+        prg.fill_bytes(&mut rand_choices);
+        let ms = self.rot_recv(ch, &rand_choices, n * m);
+        let mut flips = vec![0u8; (n * m).div_ceil(8)];
+        for i in 0..n {
+            assert!(indices[i] < k);
+            for j in 0..m {
+                let ij = (indices[i] >> j) & 1 == 1;
+                set_bit(&mut flips, i * m + j, ij ^ get_bit(&rand_choices, i * m + j));
+            }
+        }
+        ch.send_bits(&flips);
+        let t0 = self.next_tweak(n * k);
+        let enc = ch.recv_bytes();
+        assert_eq!(enc.len(), n * k * w);
+        (0..n)
+            .map(|i| {
+                let v = indices[i];
+                let mut key: u128 = 0;
+                for j in 0..m {
+                    key ^= ms[i * m + j].rotate_left(j as u32);
+                }
+                let mask = self.hash.hash128(t0 + (i * k + v) as u64, key).to_le_bytes();
+                let base = (i * k + v) * w;
+                (0..w).map(|kk| enc[base + kk] ^ mask[kk]).collect()
+            })
+            .collect()
+    }
+
+    /// 1-of-k OT receiver side: `indices[i] ∈ [k]`; returns the chosen message.
+    pub fn otk_recv(
+        &mut self,
+        ch: &mut Chan,
+        indices: &[usize],
+        k: usize,
+        w: usize,
+    ) -> Vec<Vec<u64>> {
+        assert!(k.is_power_of_two() && k >= 2);
+        let m = k.trailing_zeros() as usize;
+        let n = indices.len();
+        let mut rand_choices = vec![0u8; (n * m).div_ceil(8)];
+        let mut prg = AesPrg::from_u64_seed(0xBEEF ^ self.tweak);
+        prg.fill_bytes(&mut rand_choices);
+        let ms = self.rot_recv(ch, &rand_choices, n * m);
+        let mut flips = vec![0u8; (n * m).div_ceil(8)];
+        for i in 0..n {
+            assert!(indices[i] < k);
+            for j in 0..m {
+                let ij = (indices[i] >> j) & 1 == 1;
+                set_bit(
+                    &mut flips,
+                    i * m + j,
+                    ij ^ get_bit(&rand_choices, i * m + j),
+                );
+            }
+        }
+        ch.send_bits(&flips);
+        let t0 = self.next_tweak(n * k);
+        let enc = ch.recv_u64s();
+        assert_eq!(enc.len(), n * k * w);
+        let mut buf = vec![0u64; w];
+        (0..n)
+            .map(|i| {
+                let v = indices[i];
+                let mut key: u128 = 0;
+                for j in 0..m {
+                    key ^= ms[i * m + j].rotate_left(j as u32);
+                }
+                self.hash.hash_wide(t0 + (i * k + v) as u64, key, &mut buf);
+                let base = (i * k + v) * w;
+                (0..w).map(|kk| enc[base + kk] ^ buf[kk]).collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::run2;
+
+    fn setup_pair() -> u64 {
+        0xDEAD_BEEF
+    }
+
+    #[test]
+    fn transpose64_roundtrip() {
+        let mut a = [0u64; 64];
+        let mut rng = crate::util::Xoshiro256::seed_from_u64(1);
+        for v in a.iter_mut() {
+            *v = rng.next_u64();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        // the HD kernel maps (r, c) -> (63-c, 63-r) with LSB-first bit order
+        for (i, j) in [(0, 0), (5, 63), (63, 5), (17, 42), (31, 31)] {
+            let bit_t = (a[63 - j] >> (63 - i)) & 1;
+            let bit_o = (orig[i] >> j) & 1;
+            assert_eq!(bit_t, bit_o, "({i},{j})");
+        }
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn rot_consistency() {
+        let n = 300;
+        let (send_out, recv_out, _) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ot.rot_send(&mut ctx.ch, n)
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let mut choices = vec![0u8; n.div_ceil(8)];
+                let mut prg = AesPrg::from_u64_seed(77);
+                prg.fill_bytes(&mut choices);
+                let got = ot.rot_recv(&mut ctx.ch, &choices, n);
+                (choices, got)
+            },
+        );
+        let (choices, got) = recv_out;
+        for i in 0..n {
+            let (m0, m1) = send_out[i];
+            let expect = if get_bit(&choices, i) { m1 } else { m0 };
+            assert_eq!(got[i], expect, "i={i}");
+            assert_ne!(m0, m1);
+        }
+    }
+
+    #[test]
+    fn cot_correlation_holds() {
+        let n: usize = 200;
+        let deltas: Vec<u64> = (0..n as u64).map(|i| i.wrapping_mul(0x1234_5678_9ABC)).collect();
+        let d2 = deltas.clone();
+        let (s_out, r_out, _) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ot.cot_send(&mut ctx.ch, &d2)
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let mut choices = vec![0u8; n.div_ceil(8)];
+                AesPrg::from_u64_seed(3).fill_bytes(&mut choices);
+                let out = ot.cot_recv(&mut ctx.ch, &choices, n);
+                (choices, out)
+            },
+        );
+        let (choices, t) = r_out;
+        for i in 0..n {
+            let b = get_bit(&choices, i) as u64;
+            assert_eq!(
+                t[i],
+                s_out[i].wrapping_add(b.wrapping_mul(deltas[i])),
+                "i={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn cot_wide_correlation() {
+        let n: usize = 40;
+        let w = 7;
+        let deltas: Vec<Vec<u64>> =
+            (0..n).map(|i| (0..w as u64).map(|k| (i as u64) * 1000 + k).collect()).collect();
+        let d2 = deltas.clone();
+        let (s_out, r_out, _) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ot.cot_send_wide(&mut ctx.ch, &d2, w)
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let mut choices = vec![0u8; n.div_ceil(8)];
+                AesPrg::from_u64_seed(9).fill_bytes(&mut choices);
+                let out = ot.cot_recv_wide(&mut ctx.ch, &choices, n, w);
+                (choices, out)
+            },
+        );
+        let (choices, t) = r_out;
+        for i in 0..n {
+            let b = get_bit(&choices, i) as u64;
+            for k in 0..w {
+                assert_eq!(
+                    t[i][k],
+                    s_out[i][k].wrapping_add(b.wrapping_mul(deltas[i][k])),
+                    "i={i} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ot2_chosen_messages() {
+        let n: usize = 100;
+        let w = 2;
+        let msgs: Vec<(Vec<u64>, Vec<u64>)> = (0..n as u64)
+            .map(|i| (vec![i, i + 1], vec![1000 + i, 1001 + i]))
+            .collect();
+        let m2 = msgs.clone();
+        let (_, r_out, _) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ot.ot2_send(&mut ctx.ch, &m2, w);
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let mut choices = vec![0u8; n.div_ceil(8)];
+                AesPrg::from_u64_seed(5).fill_bytes(&mut choices);
+                let out = ot.ot2_recv(&mut ctx.ch, &choices, n, w);
+                (choices, out)
+            },
+        );
+        let (choices, got) = r_out;
+        for i in 0..n {
+            let expect = if get_bit(&choices, i) { &msgs[i].1 } else { &msgs[i].0 };
+            assert_eq!(&got[i], expect, "i={i}");
+        }
+    }
+
+    #[test]
+    fn otk_chosen_messages() {
+        let n = 60;
+        let k = 16;
+        let w = 1;
+        let msgs: Vec<Vec<Vec<u64>>> = (0..n)
+            .map(|i| (0..k).map(|v| vec![(i * 100 + v) as u64]).collect())
+            .collect();
+        let m2 = msgs.clone();
+        let (_, r_out, _) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ot.otk_send(&mut ctx.ch, &m2, k, w);
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let mut rng = crate::util::Xoshiro256::seed_from_u64(11);
+                let idx: Vec<usize> = (0..n).map(|_| rng.below(k as u64) as usize).collect();
+                let out = ot.otk_recv(&mut ctx.ch, &idx, k, w);
+                (idx, out)
+            },
+        );
+        let (idx, got) = r_out;
+        for i in 0..n {
+            assert_eq!(got[i], msgs[i][idx[i]], "i={i} idx={}", idx[i]);
+        }
+    }
+
+    #[test]
+    fn multiple_sequential_batches_stay_consistent() {
+        // tweak counters must keep batches independent
+        let (s, r, _) = run2(
+            setup_pair(),
+            |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let a = ot.rot_send(&mut ctx.ch, 10);
+                let b = ot.rot_send(&mut ctx.ch, 10);
+                (a, b)
+            },
+            |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let c = vec![0xFFu8, 0x03];
+                let a = ot.rot_recv(&mut ctx.ch, &c, 10);
+                let b = ot.rot_recv(&mut ctx.ch, &c, 10);
+                (a, b)
+            },
+        );
+        for i in 0..10 {
+            assert_eq!(r.0[i], s.0[i].1);
+            assert_eq!(r.1[i], s.1[i].1);
+        }
+        assert_ne!(s.0[0].0, s.1[0].0, "tweaks must differ between batches");
+    }
+
+    #[test]
+    fn ot_comm_is_counted() {
+        let n = 1000;
+        let (_, _, t) = run2(
+            setup_pair(),
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                ctx.ch.set_phase("rot");
+                ot.rot_send(&mut ctx.ch, n);
+            },
+            move |ctx| {
+                let mut ot = OtCtx::setup(ctx);
+                let choices = vec![0u8; n.div_ceil(8)];
+                ot.rot_recv(&mut ctx.ch, &choices, n);
+            },
+        );
+        let total = crate::party::transcript_total(&t);
+        // u matrix: 128 columns × ceil(1000/64)=16 words × 8 bytes = 16384 B
+        assert_eq!(total.bytes, 16384);
+    }
+}

@@ -1,0 +1,216 @@
+//! Two-party execution harness.
+//!
+//! Protocols in this framework are written as a pair of symmetric functions, one
+//! per party, each receiving a [`PartyCtx`]. [`run2`] spawns both parties on
+//! threads connected by a counted channel and returns their results plus the
+//! traffic transcript.
+//!
+//! A *dealer* provides setup-phase correlated randomness (base-OT seeds and,
+//! optionally, Beaver triples in "dealer mode" for fast tests). It is stateless:
+//! each correlated value is derived from `seed × purpose × index`, so both
+//! parties draw consistent values without synchronization. In a deployment the
+//! dealer is replaced by the standard interactive base-OT + triple-generation
+//! setup; its traffic is a fixed O(λ) term for all compared systems (DESIGN.md).
+
+use sha2::{Digest, Sha256};
+
+use crate::net::{Chan, PhaseStats, SharedTranscript};
+use crate::util::{AesPrg, Xoshiro256};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartyId {
+    /// Server P0 (owns model weights).
+    P0,
+    /// Client P1 (owns the input).
+    P1,
+}
+
+impl PartyId {
+    pub fn index(&self) -> usize {
+        match self {
+            PartyId::P0 => 0,
+            PartyId::P1 => 1,
+        }
+    }
+
+    pub fn other(&self) -> PartyId {
+        match self {
+            PartyId::P0 => PartyId::P1,
+            PartyId::P1 => PartyId::P0,
+        }
+    }
+}
+
+/// Per-party protocol context.
+pub struct PartyCtx {
+    pub id: PartyId,
+    pub ch: Chan,
+    /// Party-private randomness (distinct per party).
+    pub rng: Xoshiro256,
+    /// Shared dealer seed (common reference for setup correlations).
+    dealer_seed: u64,
+}
+
+impl PartyCtx {
+    pub fn new(id: PartyId, ch: Chan, session_seed: u64) -> Self {
+        let rng = Xoshiro256::seed_from_u64(
+            session_seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(id.index() as u64 + 1)),
+        );
+        Self { id, ch, rng, dealer_seed: session_seed }
+    }
+
+    /// Derive the dealer stream for a purpose. Both parties calling with the
+    /// same purpose get *identical* streams; protocols split them into
+    /// per-party halves deterministically.
+    pub fn dealer_prg(&self, purpose: &str) -> AesPrg {
+        let mut h = Sha256::new();
+        h.update(self.dealer_seed.to_le_bytes());
+        h.update(purpose.as_bytes());
+        let d = h.finalize();
+        let mut seed = [0u8; 16];
+        seed.copy_from_slice(&d[..16]);
+        AesPrg::new(seed)
+    }
+
+    pub fn is_p0(&self) -> bool {
+        self.id == PartyId::P0
+    }
+}
+
+/// Run a two-party protocol: `f0` as server P0, `f1` as client P1.
+/// Returns (P0 result, P1 result, transcript handle).
+pub fn run2<R0, R1, F0, F1>(
+    session_seed: u64,
+    f0: F0,
+    f1: F1,
+) -> (R0, R1, SharedTranscript)
+where
+    R0: Send,
+    R1: Send,
+    F0: FnOnce(&mut PartyCtx) -> R0 + Send,
+    F1: FnOnce(&mut PartyCtx) -> R1 + Send,
+{
+    let (ca, cb, transcript) = Chan::pair();
+    let mut ctx0 = PartyCtx::new(PartyId::P0, ca, session_seed);
+    let mut ctx1 = PartyCtx::new(PartyId::P1, cb, session_seed);
+    let (r0, r1) = std::thread::scope(|s| {
+        let h0 = s.spawn(move || f0(&mut ctx0));
+        let h1 = s.spawn(move || f1(&mut ctx1));
+        (h0.join().expect("P0 panicked"), h1.join().expect("P1 panicked"))
+    });
+    (r0, r1, transcript)
+}
+
+/// Convenience: run a protocol where both parties execute the *same* function
+/// (the common case — protocols branch internally on `ctx.id`).
+pub fn run2_sym<R, F>(session_seed: u64, f: F) -> (R, R, SharedTranscript)
+where
+    R: Send,
+    F: Fn(&mut PartyCtx) -> R + Send + Sync,
+{
+    run2(session_seed, |c| f(c), |c| f(c))
+}
+
+/// Like [`run2`] but hands each party *ownership* of its context (needed by
+/// layers that wrap `PartyCtx` in a larger state object, e.g. `gates::Mpc`).
+pub fn run2_owned<R0, R1, F0, F1>(
+    session_seed: u64,
+    f0: F0,
+    f1: F1,
+) -> (R0, R1, SharedTranscript)
+where
+    R0: Send,
+    R1: Send,
+    F0: FnOnce(PartyCtx) -> R0 + Send,
+    F1: FnOnce(PartyCtx) -> R1 + Send,
+{
+    let (ca, cb, transcript) = Chan::pair();
+    let ctx0 = PartyCtx::new(PartyId::P0, ca, session_seed);
+    let ctx1 = PartyCtx::new(PartyId::P1, cb, session_seed);
+    let (r0, r1) = std::thread::scope(|s| {
+        let h0 = s.spawn(move || f0(ctx0));
+        let h1 = s.spawn(move || f1(ctx1));
+        (h0.join().expect("P0 panicked"), h1.join().expect("P1 panicked"))
+    });
+    (r0, r1, transcript)
+}
+
+/// Symmetric owned-context runner.
+pub fn run2_owned_sym<R, F>(session_seed: u64, f: F) -> (R, R, SharedTranscript)
+where
+    R: Send,
+    F: Fn(PartyCtx) -> R + Send + Sync,
+{
+    run2_owned(session_seed, |c| f(c), |c| f(c))
+}
+
+/// Total traffic recorded on a transcript.
+pub fn transcript_total(t: &SharedTranscript) -> PhaseStats {
+    t.lock().unwrap().total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{add_vec, sub_vec};
+
+    #[test]
+    fn run2_exchanges() {
+        let (r0, r1, t) = run2(
+            1,
+            |ctx| {
+                ctx.ch.send_u64(10);
+                ctx.ch.recv_u64()
+            },
+            |ctx| {
+                let v = ctx.ch.recv_u64();
+                ctx.ch.send_u64(v + 1);
+                v
+            },
+        );
+        assert_eq!(r0, 11);
+        assert_eq!(r1, 10);
+        assert_eq!(transcript_total(&t).msgs, 2);
+    }
+
+    #[test]
+    fn dealer_streams_agree_across_parties() {
+        let (a, b, _) = run2_sym(7, |ctx| {
+            let mut prg = ctx.dealer_prg("test");
+            (0..8).map(|_| prg.next_u64()).collect::<Vec<_>>()
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dealer_streams_differ_by_purpose_and_seed() {
+        let (a, _, _) = run2_sym(7, |ctx| ctx.dealer_prg("x").next_u64());
+        let (b, _, _) = run2_sym(7, |ctx| ctx.dealer_prg("y").next_u64());
+        let (c, _, _) = run2_sym(8, |ctx| ctx.dealer_prg("x").next_u64());
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn party_private_rngs_differ() {
+        let (a, b, _) = run2_sym(3, |ctx| ctx.rng.next_u64());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn secret_share_reconstruct_roundtrip() {
+        // Sharing pattern used everywhere: P0 samples mask r, sends x - r.
+        let secret: Vec<u64> = vec![5, 0, u64::MAX];
+        let sec = secret.clone();
+        let (s0, s1, _) = run2(
+            9,
+            move |ctx| {
+                let r: Vec<u64> = (0..sec.len()).map(|_| ctx.rng.next_u64()).collect();
+                ctx.ch.send_u64s(&sub_vec(&sec, &r));
+                r
+            },
+            move |ctx| ctx.ch.recv_u64s(),
+        );
+        assert_eq!(add_vec(&s0, &s1), secret);
+    }
+}

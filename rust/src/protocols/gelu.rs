@@ -1,0 +1,274 @@
+//! Π_GELU: piecewise-polynomial GELU on shares, in the paper's three variants
+//! (Appendix C):
+//!
+//! - **High-degree** (Eq. 7, BumbleBee coefficients): 0 below −5, P³ on
+//!   (−5, −1.97], P⁶ on (−1.97, 3], identity above 3.
+//! - **BOLT baseline** (Eq. 8): 0 below −2.7, P⁴ on |x| ≤ 2.7, identity above.
+//! - **Reduced degree-2** (Kim et al.): 0 below −1.7626,
+//!   0.5x + 0.28367x² on |x| ≤ 1.7626, identity above.
+//!
+//! Interval selection: the breakpoint comparisons are batched into a single
+//! millionaires invocation (`cmp_gt_consts` over the concatenated vector);
+//! selector bits are combined with one batched AND layer and applied by MUX.
+
+use super::Engine2P;
+use crate::fixed::Ring;
+
+/// Eq. 7 lower polynomial: P³(x) = −0.50540312 − 0.42226581x − 0.11807613x² − 0.01103413x³.
+pub const P3: [f64; 4] = [-0.50540312, -0.42226581, -0.11807613, -0.01103413];
+
+/// Eq. 7 middle polynomial:
+/// P⁶(x) = 0.00852632 + 0.5x + 0.36032927x² − 0.03768820x⁴ + 0.00180675x⁶.
+pub const P6: [f64; 7] = [0.00852632, 0.5, 0.36032927, 0.0, -0.03768820, 0.0, 0.00180675];
+
+/// Eq. 8 BOLT degree-4 polynomial (least-squares fit of GELU on [−2.7, 2.7]).
+pub const P4: [f64; 5] = [0.02499238, 0.5, 0.31471404, 0.0, -0.01939584];
+
+/// Reduced polynomial (Kim et al.): 0.5x + 0.28367x².
+pub const P2: [f64; 3] = [0.0, 0.5, 0.28367];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeluKind {
+    /// Eq. 7 (high-degree piecewise, the non-reduced CipherPrune path).
+    High,
+    /// Eq. 8 (the BOLT baseline polynomial).
+    Bolt,
+    /// Degree-2 reduced polynomial for less-important tokens (§3.3).
+    Low,
+}
+
+/// Batched breakpoint comparisons: returns boolean-share vectors
+/// b_k = [x > thr_k] for each threshold, via one millionaires batch.
+fn breakpoint_bits(e: &mut Engine2P, x: &[Ring], thrs: &[f64]) -> Vec<Vec<u8>> {
+    let n = x.len();
+    let mut rep = Vec::with_capacity(n * thrs.len());
+    let mut ths = Vec::with_capacity(n * thrs.len());
+    for &t in thrs {
+        rep.extend_from_slice(x);
+        let tt = e.fix.enc(t);
+        ths.extend(std::iter::repeat(tt).take(n));
+    }
+    let bits = e.mpc.cmp_gt_consts(&rep, &ths);
+    thrs.iter()
+        .enumerate()
+        .map(|(k, _)| bits[k * n..(k + 1) * n].to_vec())
+        .collect()
+}
+
+/// Π_GELU on a share vector.
+pub fn pi_gelu(e: &mut Engine2P, x: &[Ring], kind: GeluKind) -> Vec<Ring> {
+    e.phase("gelu");
+    match kind {
+        GeluKind::High => {
+            let bs = breakpoint_bits(e, x, &[-5.0, -1.97, 3.0]);
+            let (b1, b2, b3) = (&bs[0], &bs[1], &bs[2]);
+            // selectors: s3 = b1 ∧ ¬b2 (P³ region), s6 = b2 ∧ ¬b3 (P⁶ region)
+            let nb2 = e.mpc.not_bits(b2);
+            let nb3 = e.mpc.not_bits(b3);
+            // batch the two ANDs
+            let mut ax = b1.clone();
+            ax.extend_from_slice(b2);
+            let mut ay = nb2.clone();
+            ay.extend_from_slice(&nb3);
+            let z = e.mpc.and_bits(&ax, &ay);
+            let (s3, s6) = z.split_at(x.len());
+            let p3v = e.poly_eval(&P3, x);
+            let p6v = e.poly_eval(&P6, x);
+            let t3 = e.mpc.mux(s3, &p3v);
+            let t6 = e.mpc.mux(s6, &p6v);
+            let tx = e.mpc.mux(b3, x);
+            (0..x.len())
+                .map(|i| t3[i].wrapping_add(t6[i]).wrapping_add(tx[i]))
+                .collect()
+        }
+        GeluKind::Bolt => {
+            let bs = breakpoint_bits(e, x, &[-2.7, 2.7]);
+            let (b1, b2) = (&bs[0], &bs[1]);
+            let nb2 = e.mpc.not_bits(b2);
+            let s4 = e.mpc.and_bits(b1, &nb2);
+            let p4v = e.poly_eval(&P4, x);
+            let t4 = e.mpc.mux(&s4, &p4v);
+            let tx = e.mpc.mux(b2, x);
+            (0..x.len()).map(|i| t4[i].wrapping_add(tx[i])).collect()
+        }
+        GeluKind::Low => {
+            let bs = breakpoint_bits(e, x, &[-1.7626, 1.7626]);
+            let (b1, b2) = (&bs[0], &bs[1]);
+            let nb2 = e.mpc.not_bits(b2);
+            let s2 = e.mpc.and_bits(b1, &nb2);
+            let p2v = e.poly_eval(&P2, x);
+            let t2 = e.mpc.mux(&s2, &p2v);
+            let tx = e.mpc.mux(b2, x);
+            (0..x.len()).map(|i| t2[i].wrapping_add(tx[i])).collect()
+        }
+    }
+}
+
+/// Mixed-degree Π_GELU over token rows: `token_high[i]` selects the kind for
+/// all features of token i (public post-pruning reduction mask). High tokens
+/// use `high_kind`, others use the reduced degree-2 polynomial.
+pub fn pi_gelu_tokens(
+    e: &mut Engine2P,
+    x: &crate::fixed::RingMat,
+    token_high: &[bool],
+    high_kind: GeluKind,
+) -> crate::fixed::RingMat {
+    let d = x.cols;
+    let (mut hi_vals, mut lo_vals) = (Vec::new(), Vec::new());
+    let (mut hi_rows, mut lo_rows) = (Vec::new(), Vec::new());
+    for r in 0..x.rows {
+        let high = token_high.is_empty() || token_high[r];
+        if high {
+            hi_rows.push(r);
+            hi_vals.extend_from_slice(x.row(r));
+        } else {
+            lo_rows.push(r);
+            lo_vals.extend_from_slice(x.row(r));
+        }
+    }
+    let hi_out = if hi_vals.is_empty() { vec![] } else { pi_gelu(e, &hi_vals, high_kind) };
+    let lo_out = if lo_vals.is_empty() { vec![] } else { pi_gelu(e, &lo_vals, GeluKind::Low) };
+    let mut out = crate::fixed::RingMat::zeros(x.rows, d);
+    for (i, &r) in hi_rows.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&hi_out[i * d..(i + 1) * d]);
+    }
+    for (i, &r) in lo_rows.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&lo_out[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Plaintext references (Appendix C), for tests and the fixed-point oracle.
+pub fn gelu_ref(x: f64, kind: GeluKind) -> f64 {
+    let poly = |c: &[f64], x: f64| -> f64 {
+        c.iter().enumerate().map(|(i, &v)| v * x.powi(i as i32)).sum()
+    };
+    match kind {
+        GeluKind::High => {
+            if x <= -5.0 {
+                0.0
+            } else if x <= -1.97 {
+                poly(&P3, x)
+            } else if x <= 3.0 {
+                poly(&P6, x)
+            } else {
+                x
+            }
+        }
+        GeluKind::Bolt => {
+            if x <= -2.7 {
+                0.0
+            } else if x <= 2.7 {
+                poly(&P4, x)
+            } else {
+                x
+            }
+        }
+        GeluKind::Low => {
+            if x <= -1.7626 {
+                0.0
+            } else if x <= 1.7626 {
+                poly(&P2, x)
+            } else {
+                x
+            }
+        }
+    }
+}
+
+/// Exact GELU (for accuracy comparisons).
+pub fn gelu_exact(x: f64) -> f64 {
+    0.5 * x * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
+}
+
+fn erf_approx(x: f64) -> f64 {
+    // Abramowitz–Stegun 7.1.26 (|err| < 1.5e−7)
+    let s = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    s * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon_vec, run_engine, share_vec};
+    use super::*;
+    use crate::fixed::Fix;
+
+    fn check_kind(kind: GeluKind, seed: u64, tol: f64) {
+        let fx = Fix::default();
+        let xs = [-8.0f64, -5.0, -3.4, -2.0, -1.0, -0.25, 0.0, 0.5, 1.5, 2.5, 3.5, 6.0];
+        let (s0, s1) = share_vec(&xs, fx, seed);
+        let (r0, r1) = run_engine(seed + 1, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_gelu(e, &mine, kind)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = gelu_ref(x, kind);
+            assert!(
+                (got[i] - expect).abs() < tol,
+                "{kind:?} x={x} got={} want={expect}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_high_matches_piecewise_ref() {
+        check_kind(GeluKind::High, 61, 0.03);
+    }
+
+    #[test]
+    fn gelu_bolt_matches_piecewise_ref() {
+        check_kind(GeluKind::Bolt, 63, 0.03);
+    }
+
+    #[test]
+    fn gelu_low_matches_piecewise_ref() {
+        check_kind(GeluKind::Low, 65, 0.03);
+    }
+
+    #[test]
+    fn piecewise_refs_track_exact_gelu() {
+        for x in [-4.0f64, -2.0, -1.0, 0.0, 1.0, 2.0, 4.0] {
+            assert!((gelu_ref(x, GeluKind::High) - gelu_exact(x)).abs() < 0.02, "high x={x}");
+            assert!((gelu_ref(x, GeluKind::Bolt) - gelu_exact(x)).abs() < 0.08, "bolt x={x}");
+            assert!((gelu_ref(x, GeluKind::Low) - gelu_exact(x)).abs() < 0.2, "low x={x}");
+        }
+    }
+
+    #[test]
+    fn mixed_token_gelu() {
+        let fx = Fix::default();
+        let x = crate::fixed::F64Mat::from_vec(3, 4, vec![
+            -1.0, 0.5, 2.0, -3.0, //
+            0.1, -0.4, 1.2, 0.9, //
+            -2.2, 3.3, -0.7, 0.2,
+        ]);
+        let mask = vec![true, false, true];
+        let (s0, s1) = super::super::testutil::share_mat(&x, fx, 67);
+        let m2 = mask.clone();
+        let (r0, r1) = run_engine(68, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_gelu_tokens(e, &mine, &m2, GeluKind::High)
+        });
+        let got = super::super::testutil::recon(&r0, &r1, fx);
+        for r in 0..3 {
+            let kind = if mask[r] { GeluKind::High } else { GeluKind::Low };
+            for c in 0..4 {
+                let expect = gelu_ref(x.at(r, c), kind);
+                assert!(
+                    (got.at(r, c) - expect).abs() < 0.03,
+                    "({r},{c}) got={} want={expect}",
+                    got.at(r, c)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Π_LayerNorm on shares: per-row mean/variance (local sums + Beaver squares),
+//! Newton inverse-square-root, and affine (γ, β) applied with the server's
+//! parameters.
+
+use super::Engine2P;
+use crate::fixed::RingMat;
+
+pub const LN_EPS: f64 = 1e-3;
+
+/// Π_LayerNorm over rows of `x`. γ/β are the server's (P0) parameters, passed
+/// as fixed-point ring vectors (None on P1).
+pub fn pi_layernorm(
+    e: &mut Engine2P,
+    x: &RingMat,
+    gamma: Option<&[u64]>,
+    beta: Option<&[u64]>,
+) -> RingMat {
+    e.phase("layernorm");
+    let (rows, d) = (x.rows, x.cols);
+    // mean per row (local sum, constant multiply)
+    let sums: Vec<u64> = (0..rows)
+        .map(|r| x.row(r).iter().fold(0u64, |a, &b| a.wrapping_add(b)))
+        .collect();
+    let inv_d = e.fix.enc(1.0 / d as f64);
+    let means = e.mpc.scale_const_trunc(&sums, inv_d, e.fix.frac_bits);
+    // centered
+    let mut centered = Vec::with_capacity(rows * d);
+    for r in 0..rows {
+        let m = means[r];
+        centered.extend(x.row(r).iter().map(|&v| v.wrapping_sub(m)));
+    }
+    // variance per row: mean of squares
+    let sq = e.mul_fix(&centered, &centered);
+    let var_sums: Vec<u64> = (0..rows)
+        .map(|r| {
+            sq[r * d..(r + 1) * d]
+                .iter()
+                .fold(0u64, |a, &b| a.wrapping_add(b))
+        })
+        .collect();
+    let vars = e.mpc.scale_const_trunc(&var_sums, inv_d, e.fix.frac_bits);
+    let vars_eps = e.add_const(&vars, LN_EPS);
+    // 1/sqrt(var)
+    let rstd = e.rsqrt_positive(&vars_eps, 6, 4);
+    // normalize: c · rstd (broadcast)
+    let rstd_b: Vec<u64> = (0..rows)
+        .flat_map(|r| std::iter::repeat(rstd[r]).take(d))
+        .collect();
+    let normed = e.mul_fix(&centered, &rstd_b);
+    // affine with server-held γ, β: γ·x via Beaver with P1's γ-share = 0
+    let gamma_share: Vec<u64> = if e.is_p0() {
+        let g = gamma.expect("P0 must hold gamma");
+        assert_eq!(g.len(), d);
+        (0..rows * d).map(|i| g[i % d]).collect()
+    } else {
+        vec![0u64; rows * d]
+    };
+    let mut out = e.mul_fix(&normed, &gamma_share);
+    if e.is_p0() {
+        let b = beta.expect("P0 must hold beta");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = o.wrapping_add(b[i % d]);
+        }
+    }
+    RingMat::from_vec(rows, d, out)
+}
+
+/// Plaintext reference.
+pub fn layernorm_ref(x: &[f64], gamma: &[f64], beta: &[f64]) -> Vec<f64> {
+    let d = x.len() as f64;
+    let mean = x.iter().sum::<f64>() / d;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / d;
+    let rstd = 1.0 / (var + LN_EPS).sqrt();
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| (v - mean) * rstd * gamma[i] + beta[i])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon, run_engine, share_mat};
+    use super::*;
+    use crate::fixed::{F64Mat, Fix};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn layernorm_matches_reference() {
+        let fx = Fix::default();
+        let (rows, d) = (3, 16);
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        let x = F64Mat::from_vec(
+            rows,
+            d,
+            (0..rows * d).map(|_| rng.next_f64() * 6.0 - 3.0).collect(),
+        );
+        let gamma_f: Vec<f64> = (0..d).map(|_| 0.5 + rng.next_f64()).collect();
+        let beta_f: Vec<f64> = (0..d).map(|_| rng.next_f64() - 0.5).collect();
+        let (s0, s1) = share_mat(&x, fx, 72);
+        let g: Vec<u64> = gamma_f.iter().map(|&v| fx.enc(v)).collect();
+        let b: Vec<u64> = beta_f.iter().map(|&v| fx.enc(v)).collect();
+        let (r0, r1) = run_engine(73, 128, move |e| {
+            if e.is_p0() {
+                pi_layernorm(e, &s0, Some(&g), Some(&b))
+            } else {
+                pi_layernorm(e, &s1, None, None)
+            }
+        });
+        let got = recon(&r0, &r1, fx);
+        for r in 0..rows {
+            let expect = layernorm_ref(x.row(r), &gamma_f, &beta_f);
+            for c in 0..d {
+                assert!(
+                    (got.at(r, c) - expect[c]).abs() < 0.08,
+                    "({r},{c}) got={} want={}",
+                    got.at(r, c),
+                    expect[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_output_row_stats() {
+        // with γ=1, β=0 the output rows must have ~zero mean and ~unit variance
+        let fx = Fix::default();
+        let (rows, d) = (2, 32);
+        let mut rng = Xoshiro256::seed_from_u64(74);
+        let x = F64Mat::from_vec(
+            rows,
+            d,
+            (0..rows * d).map(|_| rng.next_f64() * 10.0 - 2.0).collect(),
+        );
+        let (s0, s1) = share_mat(&x, fx, 75);
+        let ones: Vec<u64> = vec![fx.enc(1.0); d];
+        let zeros: Vec<u64> = vec![0u64; d];
+        let (r0, r1) = run_engine(76, 128, move |e| {
+            if e.is_p0() {
+                pi_layernorm(e, &s0, Some(&ones), Some(&zeros))
+            } else {
+                pi_layernorm(e, &s1, None, None)
+            }
+        });
+        let got = recon(&r0, &r1, fx);
+        for r in 0..rows {
+            let mean: f64 = got.row(r).iter().sum::<f64>() / d as f64;
+            let var: f64 =
+                got.row(r).iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+            assert!(mean.abs() < 0.05, "row {r} mean={mean}");
+            assert!((var - 1.0).abs() < 0.15, "row {r} var={var}");
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Π_LUT — oblivious piecewise-linear table lookup, the non-linear substrate
+//! of the IRON baseline (Hao et al. 2022).
+//!
+//! IRON computes precise non-linear activations with SIRNN-style lookup
+//! tables rather than the polynomial approximations BOLT/CipherPrune use.
+//! We realize the same contract — high-precision evaluation whose cost is
+//! dominated by per-element oblivious table selection — as a PWL table with
+//! k segments: one batched Π_CMP per breakpoint produces segment-indicator
+//! bits, Π_B2A converts them, the public per-segment (α, β) coefficients are
+//! combined locally, and a single Beaver multiply applies the slope. Total
+//! cost per element ≈ k comparisons + k B2A + 1 multiply — the comparison
+//! traffic is what makes IRON's non-linear layers expensive (Table 1 /
+//! Fig. 10), exactly the behaviour this baseline must exhibit.
+
+use super::Engine2P;
+use crate::fixed::Ring;
+
+/// Piecewise-linear table: `thresholds` are the segment breakpoints
+/// (ascending); segment j covers (t_{j−1}, t_j] with value α_j + β_j·x.
+/// `alphas`/`betas` have `thresholds.len() + 1` entries (outer segments
+/// included).
+#[derive(Clone, Debug)]
+pub struct PwlTable {
+    pub thresholds: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub betas: Vec<f64>,
+}
+
+impl PwlTable {
+    /// Tabulate `f` on [lo, hi] with `k` uniform segments. Outside the range
+    /// the table continues with the provided (α, β) extensions — constants
+    /// `(f(lo), 0)` / `(f(hi), 0)` are the usual choice; GELU uses `(0, 1)`
+    /// on the right for the identity tail.
+    pub fn from_fn(
+        f: impl Fn(f64) -> f64,
+        lo: f64,
+        hi: f64,
+        k: usize,
+        left: (f64, f64),
+        right: (f64, f64),
+    ) -> Self {
+        assert!(k >= 1 && hi > lo);
+        let step = (hi - lo) / k as f64;
+        let mut thresholds = Vec::with_capacity(k + 1);
+        let mut alphas = vec![left.0];
+        let mut betas = vec![left.1];
+        for j in 0..k {
+            let x0 = lo + j as f64 * step;
+            let x1 = x0 + step;
+            let (y0, y1) = (f(x0), f(x1));
+            let beta = (y1 - y0) / step;
+            let alpha = y0 - beta * x0;
+            thresholds.push(x0);
+            alphas.push(alpha);
+            betas.push(beta);
+        }
+        thresholds.push(hi);
+        alphas.push(right.0);
+        betas.push(right.1);
+        PwlTable { thresholds, alphas, betas }
+    }
+
+    /// Plaintext reference evaluation.
+    pub fn eval_ref(&self, x: f64) -> f64 {
+        let mut seg = 0;
+        for (j, &t) in self.thresholds.iter().enumerate() {
+            if x > t {
+                seg = j + 1;
+            }
+        }
+        self.alphas[seg] + self.betas[seg] * x
+    }
+
+    /// Segment count (cost-model input).
+    pub fn segments(&self) -> usize {
+        self.alphas.len()
+    }
+}
+
+/// Π_LUT: evaluate a PWL table on a share vector. (Caller sets the phase
+/// label — the coordinator buckets LUT traffic under the protocol it
+/// implements, e.g. "gelu" or "softmax".)
+pub fn pi_pwl(e: &mut Engine2P, x: &[Ring], table: &PwlTable) -> Vec<Ring> {
+    let n = x.len();
+    let nt = table.thresholds.len();
+    // batched breakpoint comparisons: bits a_j = [x > t_j]
+    let mut rep = Vec::with_capacity(n * nt);
+    let mut ths = Vec::with_capacity(n * nt);
+    for &t in &table.thresholds {
+        rep.extend_from_slice(x);
+        let tt = e.fix.enc(t);
+        ths.extend(std::iter::repeat(tt).take(n));
+    }
+    let bits = e.mpc.cmp_gt_consts(&rep, &ths);
+    let arith = e.mpc.b2a(&bits); // n·nt arithmetic 0/1 shares
+    // indicator-weighted public coefficients, combined locally:
+    //   A = α_0 + Σ_j (α_{j+1} − α_j)·a_j,  B likewise
+    let mut a_acc: Vec<Ring> = if e.is_p0() {
+        vec![e.fix.enc(table.alphas[0]); n]
+    } else {
+        vec![0; n]
+    };
+    let mut b_acc: Vec<Ring> = if e.is_p0() {
+        vec![e.fix.enc(table.betas[0]); n]
+    } else {
+        vec![0; n]
+    };
+    for j in 0..nt {
+        let da = e.fix.enc(table.alphas[j + 1]) .wrapping_sub(e.fix.enc(table.alphas[j]));
+        let db = e.fix.enc(table.betas[j + 1]).wrapping_sub(e.fix.enc(table.betas[j]));
+        let seg = &arith[j * n..(j + 1) * n];
+        for i in 0..n {
+            a_acc[i] = a_acc[i].wrapping_add(seg[i].wrapping_mul(da));
+            b_acc[i] = b_acc[i].wrapping_add(seg[i].wrapping_mul(db));
+        }
+    }
+    // y = A + B·x (one fixed-point Beaver multiply)
+    let bx = e.mul_fix(&b_acc, x);
+    (0..n).map(|i| a_acc[i].wrapping_add(bx[i])).collect()
+}
+
+/// Π_SoftMax with LUT-precision exponentials — the IRON baseline's SoftMax.
+/// Same structure as [`crate::protocols::softmax::pi_softmax`] (batched
+/// row-max scan, per-row sum, Newton reciprocal) but the exponential is an
+/// oblivious table lookup instead of a Taylor polynomial.
+pub fn pi_softmax_lut(
+    e: &mut Engine2P,
+    x: &crate::fixed::RingMat,
+    table: &PwlTable,
+) -> crate::fixed::RingMat {
+    e.phase("softmax");
+    let (rows, d) = (x.rows, x.cols);
+    let maxes = crate::protocols::softmax::row_max(e, x);
+    let mut centered = Vec::with_capacity(rows * d);
+    for r in 0..rows {
+        let m = maxes[r];
+        centered.extend(x.row(r).iter().map(|&v| v.wrapping_sub(m)));
+    }
+    let exps = pi_pwl(e, &centered, table);
+    let sums: Vec<Ring> = (0..rows)
+        .map(|r| exps[r * d..(r + 1) * d].iter().fold(0u64, |a, &b| a.wrapping_add(b)))
+        .collect();
+    let max_pow2 = (64 - (d as u64).leading_zeros()) as i32 + 1;
+    let recip = e.recip_positive(&sums, max_pow2, 4);
+    let recip_b: Vec<Ring> = (0..rows)
+        .flat_map(|r| std::iter::repeat(recip[r]).take(d))
+        .collect();
+    let out = e.mul_fix(&exps, &recip_b);
+    crate::fixed::RingMat::from_vec(rows, d, out)
+}
+
+/// IRON-fidelity exponential table on the SoftMax input range.
+pub fn exp_table() -> PwlTable {
+    exp_table_k(128)
+}
+
+/// Exponential table with an explicit segment count. Benches use smaller
+/// tables so IRON's non-linear/linear cost ratio lands near its published
+/// value (the 2PC LUTs IRON builds on amortize better than per-breakpoint
+/// comparisons; see DESIGN.md §Substitutions).
+pub fn exp_table_k(k: usize) -> PwlTable {
+    PwlTable::from_fn(f64::exp, -13.0, 0.0, k, (0.0, 0.0), (1.0, 0.0))
+}
+
+/// IRON-fidelity GELU table (identity tail on the right, zero on the left).
+pub fn gelu_table() -> PwlTable {
+    gelu_table_k(128)
+}
+
+/// GELU table with an explicit segment count (see [`exp_table_k`]).
+pub fn gelu_table_k(k: usize) -> PwlTable {
+    PwlTable::from_fn(
+        crate::protocols::gelu::gelu_exact,
+        -5.0,
+        5.0,
+        k,
+        (0.0, 0.0),
+        (0.0, 1.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon_vec, run_engine, share_vec};
+    use super::*;
+    use crate::fixed::Fix;
+
+    #[test]
+    fn table_construction_is_continuous() {
+        let t = exp_table();
+        assert_eq!(t.segments(), 130);
+        // adjacent segments agree at breakpoints (interior)
+        for j in 1..t.thresholds.len() - 1 {
+            let x = t.thresholds[j];
+            let a = t.alphas[j] + t.betas[j] * x;
+            let b = t.alphas[j + 1] + t.betas[j + 1] * x;
+            assert!((a - b).abs() < 1e-9, "discontinuity at {x}");
+        }
+    }
+
+    #[test]
+    fn ref_eval_tracks_exp() {
+        let t = exp_table();
+        for i in 0..50 {
+            let x = -12.9 + i as f64 * 0.25;
+            assert!((t.eval_ref(x) - x.exp()).abs() < 4e-3, "x={x}");
+        }
+        assert_eq!(t.eval_ref(-20.0), 0.0);
+        assert_eq!(t.eval_ref(0.5), 1.0);
+    }
+
+    #[test]
+    fn protocol_matches_reference() {
+        let fx = Fix::default();
+        let xs = [-12.0f64, -6.5, -2.0, -0.5, -0.01, 0.8, -14.0];
+        let (s0, s1) = share_vec(&xs, fx, 500);
+        let (r0, r1) = run_engine(501, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_pwl(e, &mine, &exp_table())
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        let t = exp_table();
+        for (i, &x) in xs.iter().enumerate() {
+            assert!(
+                (got[i] - t.eval_ref(x)).abs() < 0.01,
+                "x={x} got={} want={}",
+                got[i],
+                t.eval_ref(x)
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_table_has_identity_tail() {
+        let fx = Fix::default();
+        let xs = [6.0f64, 10.0, -6.0];
+        let (s0, s1) = share_vec(&xs, fx, 510);
+        let (r0, r1) = run_engine(511, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_pwl(e, &mine, &gelu_table())
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        assert!((got[0] - 6.0).abs() < 0.01);
+        assert!((got[1] - 10.0).abs() < 0.02);
+        assert!(got[2].abs() < 0.01);
+    }
+
+    #[test]
+    fn gelu_table_accuracy_midrange() {
+        let t = gelu_table();
+        for i in 0..100 {
+            let x = -4.9 + i as f64 * 0.098;
+            let want = crate::protocols::gelu::gelu_exact(x);
+            assert!((t.eval_ref(x) - want).abs() < 3e-3, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Fixed-point mathematics on secret shares: polynomial evaluation, the
+//! paper's ApproxExp Taylor series (Eq. 6), and Newton-iteration reciprocal /
+//! inverse-square-root with secure power-of-two range normalization.
+
+use super::Engine2P;
+use crate::fixed::Ring;
+
+impl Engine2P {
+    /// Add a public constant (P0 adjusts its share).
+    pub fn add_const(&self, x: &[Ring], c: f64) -> Vec<Ring> {
+        if self.is_p0() {
+            let cc = self.fix.enc(c);
+            x.iter().map(|&v| v.wrapping_add(cc)).collect()
+        } else {
+            x.to_vec()
+        }
+    }
+
+    /// Multiply by a public float constant and rescale.
+    pub fn mul_const(&mut self, x: &[Ring], c: f64) -> Vec<Ring> {
+        let cc = self.fix.enc(c);
+        self.mpc.scale_const_trunc(x, cc, self.fix.frac_bits)
+    }
+
+    /// Fixed-point Beaver multiply with rescale.
+    pub fn mul_fix(&mut self, x: &[Ring], y: &[Ring]) -> Vec<Ring> {
+        self.mpc.mul_trunc_vec(x, y, self.fix.frac_bits)
+    }
+
+    /// Evaluate a public polynomial Σ c_i x^i on shares via Horner's rule
+    /// (deg sequential fixed-point multiplies).
+    pub fn poly_eval(&mut self, coeffs: &[f64], x: &[Ring]) -> Vec<Ring> {
+        assert!(!coeffs.is_empty());
+        let deg = coeffs.len() - 1;
+        let mut h: Vec<Ring> = if self.is_p0() {
+            vec![self.fix.enc(coeffs[deg]); x.len()]
+        } else {
+            vec![0; x.len()]
+        };
+        for d in (0..deg).rev() {
+            h = self.mul_fix(&h, x);
+            h = self.add_const(&h, coeffs[d]);
+        }
+        h
+    }
+
+    /// Paper Eq. 6: ApproxExp(x) = (1 + x/2^n)^(2^n) for x ∈ [T, 0], else 0.
+    /// `n` = 6 for the high-degree path, 3 for the reduced path; T = −13.
+    pub fn approx_exp(&mut self, x: &[Ring], n: u32, t_clip: f64) -> Vec<Ring> {
+        // y = 1 + x / 2^n   (shift is local per-share arithmetic)
+        let base: Vec<Ring> = {
+            let shifted = self.mpc.trunc_vec(x, n);
+            self.add_const(&shifted, 1.0)
+        };
+        // square n times
+        let mut y = base;
+        for _ in 0..n {
+            y = self.mul_fix(&y, &y);
+        }
+        // clip: x ≤ T → 0
+        let keep = self.mpc.cmp_gt_const(x, self.fix.enc(t_clip));
+        self.mpc.mux(&keep, &y)
+    }
+
+    /// Secure range normalization: given positive shared x < 2^max_pow2,
+    /// returns (x_norm, inv_scale_applier) where x_norm = x·2^(−k) ∈ [0.5, 2)
+    /// and `descale(y)` maps results back by 2^(−k) (for 1/x) — both as shares.
+    ///
+    /// Implementation: k = Σ_j [x > 2^j] over j ∈ {0..max_pow2}; the scaling
+    /// factor 2^(−k) is assembled as Π_j (b_j ? 0.5 : 1) with a product tree.
+    fn normalize_pow2(&mut self, x: &[Ring], max_pow2: i32) -> (Vec<Ring>, Vec<Ring>) {
+        let n = x.len();
+        // comparisons against 1, 2, 4, ... (x > 2^j means another halving)
+        let mut factors: Vec<Vec<Ring>> = Vec::new();
+        for j in 0..max_pow2 {
+            let thr = self.fix.enc((1u64 << j) as f64);
+            let b = self.mpc.cmp_gt_const(x, thr);
+            // factor = b ? 0.5 : 1.0  (shares)
+            let half = self.fix.enc(0.5);
+            let one = self.fix.enc(1.0);
+            let f: Vec<Ring> = {
+                let ba = self.mpc.b2a(&b);
+                // f = 1 + b·(0.5 − 1) = 1 − 0.5b  (exact in fixed point)
+                ba.iter()
+                    .map(|&bv| {
+                        let base = if self.is_p0() { one } else { 0 };
+                        base.wrapping_sub(bv.wrapping_mul(one - half))
+                    })
+                    .collect()
+            };
+            factors.push(f);
+        }
+        // product tree of factors (log depth)
+        let mut level = factors;
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            let mut it = level.into_iter();
+            while let (Some(a), b) = (it.next(), it.next()) {
+                match b {
+                    Some(b) => {
+                        // batch the multiply
+                        next.push(self.mul_fix(&a, &b));
+                    }
+                    None => next.push(a),
+                }
+            }
+            level = next;
+        }
+        let scale = level.pop().unwrap_or_else(|| {
+            if self.is_p0() {
+                vec![self.fix.enc(1.0); n]
+            } else {
+                vec![0; n]
+            }
+        });
+        let x_norm = self.mul_fix(x, &scale);
+        (x_norm, scale)
+    }
+
+    /// Reciprocal of positive shared x ∈ (2^−2, 2^max_pow2): Newton iterations
+    /// y ← y(2 − x·y) after range normalization. Error < 2^−(frac_bits−2).
+    pub fn recip_positive(&mut self, x: &[Ring], max_pow2: i32, iters: usize) -> Vec<Ring> {
+        let (xn, scale) = self.normalize_pow2(x, max_pow2);
+        // normalize_pow2 halves while x > 2^j, so xn ∈ (0.5, 1]. Classic
+        // minimax Newton seed on [0.5, 1]: y0 = 48/17 − 32/17·x
+        // (max rel. error 1/17 ≈ 0.059, squares every iteration).
+        let mut y = {
+            let sx = self.mul_const(&xn, -32.0 / 17.0);
+            self.add_const(&sx, 48.0 / 17.0)
+        };
+        for _ in 0..iters {
+            // y = y(2 − xn·y)
+            let xy = self.mul_fix(&xn, &y);
+            let two_m = {
+                let neg = crate::fixed::neg_vec(&xy);
+                self.add_const(&neg, 2.0)
+            };
+            y = self.mul_fix(&y, &two_m);
+        }
+        // 1/x = y_norm · scale
+        self.mul_fix(&y, &scale)
+    }
+
+    /// Inverse square root of positive shared x ∈ (2^−2, 2^max_pow2):
+    /// y ← y(3 − x·y²)/2 after *even-power* normalization (scale by 4^(−k) so
+    /// the effective sqrt descale is exactly 2^(−k)).
+    pub fn rsqrt_positive(&mut self, x: &[Ring], max_pow4: i32, iters: usize) -> Vec<Ring> {
+        let n = x.len();
+        // factors of 1/4 per comparison with 4^j; sqrt-descale factor 1/2 each
+        let mut quarter_factors: Vec<Vec<Ring>> = Vec::new();
+        let mut half_factors: Vec<Vec<Ring>> = Vec::new();
+        for j in 0..max_pow4 {
+            let thr = self.fix.enc(4f64.powi(j + 1) / 2.0); // x > 4^j·2 → halve twice
+            let b = self.mpc.cmp_gt_const(x, thr);
+            let ba = self.mpc.b2a(&b);
+            let mk = |e: &Engine2P, ba: &[Ring], lo: f64| -> Vec<Ring> {
+                let one = e.fix.enc(1.0);
+                let lo = e.fix.enc(lo);
+                ba.iter()
+                    .map(|&bv| {
+                        let base = if e.is_p0() { one } else { 0 };
+                        base.wrapping_sub(bv.wrapping_mul(one - lo))
+                    })
+                    .collect()
+            };
+            quarter_factors.push(mk(self, &ba, 0.25));
+            half_factors.push(mk(self, &ba, 0.5));
+        }
+        let prod = |e: &mut Engine2P, mut level: Vec<Vec<Ring>>, n: usize| -> Vec<Ring> {
+            while level.len() > 1 {
+                let mut next = Vec::new();
+                let mut it = level.into_iter();
+                while let (Some(a), b) = (it.next(), it.next()) {
+                    match b {
+                        Some(b) => next.push(e.mul_fix(&a, &b)),
+                        None => next.push(a),
+                    }
+                }
+                level = next;
+            }
+            level.pop().unwrap_or_else(|| {
+                if e.is_p0() {
+                    vec![e.fix.enc(1.0); n]
+                } else {
+                    vec![0; n]
+                }
+            })
+        };
+        let qscale = prod(self, quarter_factors, n);
+        let hscale = prod(self, half_factors, n);
+        let xn = self.mul_fix(x, &qscale); // xn ∈ [0.5, 2]
+        // Minimax linear seed for 1/sqrt(x) on [0.5, 2]: y0 = 1.5607 − 0.4714x
+        // (max abs. error ≈ 0.09; Newton's y(3 − xy²)/2 then converges
+        // quadratically — rel. error 0.13 → 1e−6 within four iterations).
+        let mut y = {
+            let sx = self.mul_const(&xn, -0.4714);
+            self.add_const(&sx, 1.5607)
+        };
+        for _ in 0..iters {
+            let y2 = self.mul_fix(&y, &y);
+            let xy2 = self.mul_fix(&xn, &y2);
+            let three_m = {
+                let neg = crate::fixed::neg_vec(&xy2);
+                self.add_const(&neg, 3.0)
+            };
+            let t = self.mul_fix(&y, &three_m);
+            y = self.mpc.trunc_vec(&t, 1); // divide by 2
+        }
+        // 1/sqrt(x) = y · 2^(−k) = y · hscale
+        self.mul_fix(&y, &hscale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon_vec, run_engine, share_vec};
+    use crate::fixed::Fix;
+
+    const HE_N: usize = 256;
+
+    #[test]
+    fn poly_eval_matches_reference() {
+        let fx = Fix::default();
+        let coeffs = [0.5, -1.25, 0.75, 0.125]; // 0.5 − 1.25x + 0.75x² + 0.125x³
+        let xs = [-2.0f64, -0.5, 0.0, 0.3, 1.9];
+        let (s0, s1) = share_vec(&xs, fx, 21);
+        let c2 = coeffs;
+        let (r0, r1) = run_engine(31, HE_N, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            e.poly_eval(&c2, &mine)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = coeffs
+                .iter()
+                .enumerate()
+                .map(|(d, c)| c * x.powi(d as i32))
+                .sum::<f64>();
+            assert!((got[i] - expect).abs() < 0.01, "x={x} got={} want={expect}", got[i]);
+        }
+    }
+
+    #[test]
+    fn approx_exp_high_degree() {
+        let fx = Fix::default();
+        let xs = [-0.1f64, -1.0, -3.0, -6.0, -12.9, -14.0, 0.0];
+        let (s0, s1) = share_vec(&xs, fx, 22);
+        let (r0, r1) = run_engine(32, HE_N, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            e.approx_exp(&mine, 6, -13.0)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = if x <= -13.0 { 0.0 } else { (1.0 + x / 64.0).powi(64) };
+            assert!(
+                (got[i] - expect).abs() < 0.03,
+                "x={x} got={} want={expect}",
+                got[i]
+            );
+            // and the Taylor approx itself tracks e^x
+            if x > -8.0 {
+                assert!((got[i] - x.exp()).abs() < 0.08, "x={x} vs e^x");
+            }
+        }
+    }
+
+    #[test]
+    fn approx_exp_low_degree_coarser() {
+        let fx = Fix::default();
+        let xs = [-0.5f64, -2.0, -4.0];
+        let (s0, s1) = share_vec(&xs, fx, 23);
+        let (r0, r1) = run_engine(33, HE_N, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            e.approx_exp(&mine, 3, -13.0)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = (1.0 + x / 8.0).powi(8);
+            assert!((got[i] - expect).abs() < 0.03, "x={x}");
+        }
+    }
+
+    #[test]
+    fn recip_accuracy() {
+        let fx = Fix::default();
+        let xs = [1.0f64, 1.5, 3.0, 17.5, 64.0, 100.0, 0.6];
+        let (s0, s1) = share_vec(&xs, fx, 24);
+        let (r0, r1) = run_engine(34, HE_N, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            e.recip_positive(&mine, 8, 4)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = 1.0 / x;
+            assert!(
+                (got[i] - expect).abs() < 0.01_f64.max(expect * 0.02),
+                "x={x} got={} want={expect}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rsqrt_accuracy() {
+        let fx = Fix::default();
+        let xs = [1.0f64, 2.0, 4.0, 9.0, 25.0, 100.0, 400.0, 0.5];
+        let (s0, s1) = share_vec(&xs, fx, 25);
+        let (r0, r1) = run_engine(35, HE_N, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            e.rsqrt_positive(&mine, 5, 4)
+        });
+        let got = recon_vec(&r0, &r1, fx);
+        for (i, &x) in xs.iter().enumerate() {
+            let expect = 1.0 / x.sqrt();
+            assert!(
+                (got[i] - expect).abs() < 0.015_f64.max(expect * 0.03),
+                "x={x} got={} want={expect}",
+                got[i]
+            );
+        }
+    }
+}

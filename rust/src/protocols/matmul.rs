@@ -1,0 +1,385 @@
+//! Π_MatMul: secure matrix multiplication via coefficient-packed BFV.
+//!
+//! Two variants:
+//! - [`pi_matmul_weights`]: X is secret-shared, W is the server's plaintext
+//!   weight matrix (linear projections, FFN, embedding). P1 encrypts its share
+//!   X1; P0 evaluates X1·W homomorphically, masks, returns; P0 adds X0·W
+//!   locally. One HE direction.
+//! - [`pi_matmul_shared`]: both X and Y secret-shared (Q·Kᵀ, Att·V). Four
+//!   terms: X0Y0/X1Y1 local, and both cross terms via HE with the *evaluator's
+//!   share* as the plaintext multiplier. Because shares are full-width ring
+//!   elements, the plaintext side is limb-split into two 32-bit halves to keep
+//!   the Δ-scaling rounding error below 1/2 (see `he::params`).
+//!
+//! All outputs are shares at scale 2^(2f); callers truncate.
+
+use super::Engine2P;
+use crate::fixed::RingMat;
+use crate::he::bfv::{decrypt, encrypt, Ciphertext};
+use crate::he::{MatmulPlan, PtNtt};
+
+/// Cap on the row-tile dimension: bounds the transient NTT-cached weight-tile
+/// memory (tile count = k·m·nw/N) while staying close to the comm optimum.
+pub const NW_CAP: usize = 8;
+
+fn choose_plan(n: usize, k: usize, m: usize, big_n: usize) -> MatmulPlan {
+    let mut best: Option<(usize, MatmulPlan)> = None;
+    let mut kw = 1;
+    while kw <= k.min(big_n) {
+        let mut nw = 1;
+        while nw <= n.min(big_n / kw).min(NW_CAP) {
+            let mw_cap = big_n / (nw * kw);
+            if mw_cap >= 1 {
+                let mw = mw_cap.min(m.next_power_of_two());
+                let plan = MatmulPlan { n, k, m, nw, kw, mw, big_n };
+                let cost = plan.input_cts() + plan.output_cts();
+                if best.map_or(true, |(c, _)| cost < c) {
+                    best = Some((cost, plan));
+                }
+            }
+            nw *= 2;
+        }
+        kw *= 2;
+    }
+    best.expect("no valid matmul plan").1
+}
+
+/// Encrypt all X tiles and send them (batched into one message).
+fn send_encrypted_tiles(e: &mut Engine2P, x: &RingMat, plan: &MatmulPlan) {
+    let mut wire: Vec<u64> = Vec::new();
+    for rt in 0..plan.tiles_n() {
+        for kt in 0..plan.tiles_k() {
+            let coeffs = plan.encode_x_tile(x, rt, kt);
+            let ct = encrypt(&e.he, &e.sk, &coeffs, &mut e.mpc.ctx.rng);
+            wire.extend(ct.to_wire());
+        }
+    }
+    e.mpc.ctx.ch.send_u64s(&wire);
+}
+
+fn recv_encrypted_tiles(e: &mut Engine2P, plan: &MatmulPlan) -> Vec<Vec<Ciphertext>> {
+    let wire = e.mpc.ctx.ch.recv_u64s();
+    let per = 2 + crate::he::params::NPRIMES * e.he.n;
+    assert_eq!(wire.len(), per * plan.input_cts(), "tile message size");
+    let mut it = wire.chunks_exact(per);
+    (0..plan.tiles_n())
+        .map(|_| {
+            (0..plan.tiles_k())
+                .map(|_| Ciphertext::from_wire(&e.he, it.next().unwrap()))
+                .collect()
+        })
+        .collect()
+}
+
+/// Evaluator side: multiply-accumulate tiles against weight tiles, mask each
+/// output ciphertext with a uniform polynomial, send back. Returns the
+/// evaluator's (negative-mask) output share.
+fn evaluate_and_mask(
+    e: &mut Engine2P,
+    cts: &[Vec<Ciphertext>],
+    wt: &[Vec<PtNtt>],
+    plan: &MatmulPlan,
+) -> RingMat {
+    let mut wire: Vec<u64> = Vec::new();
+    let mut my_share = RingMat::zeros(plan.n, plan.m);
+    for rt in 0..plan.tiles_n() {
+        for mt in 0..plan.tiles_m() {
+            let mut acc = Ciphertext::zero_like(&e.he);
+            for kt in 0..plan.tiles_k() {
+                acc.mul_pt_accumulate(&cts[rt][kt], &wt[kt][mt]);
+            }
+            // uniform mask over all coefficients (hides cross-term residue)
+            let r: Vec<u64> = (0..e.he.n).map(|_| e.mpc.ctx.rng.next_u64()).collect();
+            acc.add_plain(&e.he, &r);
+            // our share is −r at the extraction positions
+            let mut neg = RingMat::zeros(plan.n, plan.m);
+            plan.extract_out_tile(&r, rt, mt, &mut neg);
+            for (o, &v) in my_share.data.iter_mut().zip(&neg.data) {
+                *o = o.wrapping_sub(v);
+            }
+            wire.extend(acc.to_wire());
+        }
+    }
+    e.mpc.ctx.ch.send_u64s(&wire);
+    my_share
+}
+
+/// Decryptor side: receive masked outputs, decrypt, extract.
+fn recv_and_decrypt(e: &mut Engine2P, plan: &MatmulPlan) -> RingMat {
+    let wire = e.mpc.ctx.ch.recv_u64s();
+    let per = 2 + 2 * crate::he::params::NPRIMES * e.he.n;
+    assert_eq!(wire.len(), per * plan.output_cts(), "output message size");
+    let mut out = RingMat::zeros(plan.n, plan.m);
+    let mut it = wire.chunks_exact(per);
+    for rt in 0..plan.tiles_n() {
+        for mt in 0..plan.tiles_m() {
+            let ct = Ciphertext::from_wire(&e.he, it.next().unwrap());
+            let coeffs = decrypt(&e.he, &e.sk, &ct);
+            plan.extract_out_tile(&coeffs, rt, mt, &mut out);
+        }
+    }
+    out
+}
+
+/// Π_MatMul with server-held plaintext weights. `w` is Some on P0.
+/// Both parties pass their share of X; result is a share of X·W (scale 2^2f).
+pub fn pi_matmul_weights(
+    e: &mut Engine2P,
+    x_share: &RingMat,
+    w: Option<&RingMat>,
+    m: usize,
+) -> RingMat {
+    let (n, k) = (x_share.rows, x_share.cols);
+    let plan = choose_plan(n, k, m, e.he.n);
+    if e.is_p0() {
+        let w = w.expect("P0 must hold weights");
+        assert_eq!((w.rows, w.cols), (k, m));
+        let wt = plan.encode_weights(&e.he, w);
+        let cts = recv_encrypted_tiles(e, &plan);
+        let he_share = evaluate_and_mask(e, &cts, &wt, &plan);
+        // local term X0·W
+        let local = x_share.matmul(w);
+        local.add(&he_share)
+    } else {
+        send_encrypted_tiles(e, x_share, &plan);
+        recv_and_decrypt(e, &plan)
+    }
+}
+
+/// Split a matrix into (low, high) 32-bit limb matrices: x = lo + 2^32·hi.
+fn limb_split(x: &RingMat) -> (RingMat, RingMat) {
+    let lo = x.map(|v| v & 0xFFFF_FFFF);
+    let hi = x.map(|v| v >> 32);
+    (lo, hi)
+}
+
+/// One HE cross-term Z += P_enc_share · P_eval_share where the evaluator's
+/// share is the plaintext side. `evaluating` selects our role.
+/// Computes Xeval·Yenc as (Yencᵀ·Xevalᵀ)ᵀ so the encrypted operand is the
+/// left factor of the packed product.
+fn cross_term(
+    e: &mut Engine2P,
+    evaluating: bool,
+    x_eval_t: Option<&RingMat>, // our share, transposed (evaluator)
+    y_enc_t: Option<&RingMat>,  // our share, transposed (encryptor)
+    n: usize,
+    k: usize,
+    m: usize,
+) -> RingMat {
+    // packed product: (m × k) · (k × n)
+    let plan = choose_plan(m, k, n, e.he.n);
+    if evaluating {
+        let xt = x_eval_t.unwrap(); // (k × n)
+        let (lo, hi) = limb_split(xt);
+        let wt_lo = plan.encode_weights(&e.he, &lo);
+        let wt_hi = plan.encode_weights(&e.he, &hi);
+        let cts = recv_encrypted_tiles(e, &plan);
+        let s_lo = evaluate_and_mask(e, &cts, &wt_lo, &plan);
+        let s_hi = evaluate_and_mask(e, &cts, &wt_hi, &plan);
+        // combine limbs; result is Zᵀ (m × n) → transpose to (n × m)
+        let zt = RingMat::from_vec(
+            m,
+            n,
+            s_lo.data
+                .iter()
+                .zip(&s_hi.data)
+                .map(|(&l, &h)| l.wrapping_add(h.wrapping_shl(32)))
+                .collect(),
+        );
+        zt.transpose()
+    } else {
+        let yt = y_enc_t.unwrap(); // (m × k)
+        send_encrypted_tiles(e, yt, &plan);
+        let lo = recv_and_decrypt(e, &plan);
+        let hi = recv_and_decrypt(e, &plan);
+        let zt = RingMat::from_vec(
+            m,
+            n,
+            lo.data
+                .iter()
+                .zip(&hi.data)
+                .map(|(&l, &h)| l.wrapping_add(h.wrapping_shl(32)))
+                .collect(),
+        );
+        zt.transpose()
+    }
+}
+
+/// Π_MatMul with both operands secret-shared (attention products).
+/// Returns a share of X·Y at scale 2^(2f).
+pub fn pi_matmul_shared(e: &mut Engine2P, x_share: &RingMat, y_share: &RingMat) -> RingMat {
+    let (n, k) = (x_share.rows, x_share.cols);
+    let m = y_share.cols;
+    assert_eq!(y_share.rows, k);
+    // local term
+    let mut out = x_share.matmul(y_share);
+    // cross term A: X0·Y1 — P0 evaluates with plaintext X0, P1 encrypts Y1
+    let xt = x_share.transpose();
+    let yt = y_share.transpose();
+    let a = if e.is_p0() {
+        cross_term(e, true, Some(&xt), None, n, k, m)
+    } else {
+        cross_term(e, false, None, Some(&yt), n, k, m)
+    };
+    // cross term B: X1·Y0 — roles swapped
+    let b = if e.is_p0() {
+        cross_term(e, false, None, Some(&yt), n, k, m)
+    } else {
+        cross_term(e, true, Some(&xt), None, n, k, m)
+    };
+    out = out.add(&a).add(&b);
+    out
+}
+
+/// Convenience: weights matmul followed by truncation back to scale f,
+/// plus optional bias (held by P0) added at scale f.
+pub fn linear_layer(
+    e: &mut Engine2P,
+    x_share: &RingMat,
+    w: Option<&RingMat>,
+    bias: Option<&[u64]>,
+    m: usize,
+) -> RingMat {
+    let prod = pi_matmul_weights(e, x_share, w, m);
+    let t = e.mpc.trunc_vec(&prod.data, e.fix.frac_bits);
+    let mut out = RingMat::from_vec(prod.rows, prod.cols, t);
+    if e.is_p0() {
+        if let Some(b) = bias {
+            assert_eq!(b.len(), m);
+            for r in 0..out.rows {
+                for c in 0..m {
+                    let v = out.at(r, c).wrapping_add(b[c]);
+                    *out.at_mut(r, c) = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon, run_engine, share_mat};
+    use super::*;
+    use crate::fixed::{F64Mat, Fix};
+    use crate::util::Xoshiro256;
+
+    fn rand_f64_mat(rows: usize, cols: usize, amp: f64, seed: u64) -> F64Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        F64Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (rng.next_f64() * 2.0 - 1.0) * amp).collect(),
+        )
+    }
+
+    #[test]
+    fn weights_matmul_small() {
+        let fx = Fix::default();
+        let x = rand_f64_mat(5, 12, 4.0, 1);
+        let w = rand_f64_mat(12, 9, 1.5, 2);
+        let (x0, x1) = share_mat(&x, fx, 3);
+        let wr = w.to_ring(fx);
+        let m = w.cols;
+        let (r0, r1) = run_engine(41, 128, move |e| {
+            let (mine, wref) = if e.is_p0() {
+                (x0.clone(), Some(&wr))
+            } else {
+                (x1.clone(), None)
+            };
+            let prod = pi_matmul_weights(e, &mine, wref, m);
+            let t = e.mpc.trunc_vec(&prod.data, e.fix.frac_bits);
+            RingMat::from_vec(prod.rows, prod.cols, t)
+        });
+        let got = recon(&r0, &r1, fx);
+        let expect = x.matmul(&w);
+        for i in 0..got.data.len() {
+            assert!(
+                (got.data[i] - expect.data[i]).abs() < 0.05,
+                "i={i} got={} want={}",
+                got.data[i],
+                expect.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn shared_matmul_small() {
+        let fx = Fix::default();
+        let x = rand_f64_mat(4, 6, 2.0, 5);
+        let y = rand_f64_mat(6, 7, 2.0, 6);
+        let (x0, x1) = share_mat(&x, fx, 7);
+        let (y0, y1) = share_mat(&y, fx, 8);
+        let (r0, r1) = run_engine(42, 128, move |e| {
+            let (xs, ys) = if e.is_p0() {
+                (x0.clone(), y0.clone())
+            } else {
+                (x1.clone(), y1.clone())
+            };
+            let prod = pi_matmul_shared(e, &xs, &ys);
+            let t = e.mpc.trunc_vec(&prod.data, e.fix.frac_bits);
+            RingMat::from_vec(prod.rows, prod.cols, t)
+        });
+        let got = recon(&r0, &r1, fx);
+        let expect = x.matmul(&y);
+        for i in 0..got.data.len() {
+            assert!(
+                (got.data[i] - expect.data[i]).abs() < 0.05,
+                "i={i} got={} want={}",
+                got.data[i],
+                expect.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn linear_layer_with_bias() {
+        let fx = Fix::default();
+        let x = rand_f64_mat(3, 8, 3.0, 9);
+        let w = rand_f64_mat(8, 5, 1.0, 10);
+        let bias_f: Vec<f64> = (0..5).map(|i| i as f64 * 0.25 - 0.5).collect();
+        let (x0, x1) = share_mat(&x, fx, 11);
+        let wr = w.to_ring(fx);
+        let bias: Vec<u64> = bias_f.iter().map(|&b| fx.enc(b)).collect();
+        let (r0, r1) = run_engine(43, 128, move |e| {
+            if e.is_p0() {
+                linear_layer(e, &x0, Some(&wr), Some(&bias), 5)
+            } else {
+                linear_layer(e, &x1, None, None, 5)
+            }
+        });
+        let got = recon(&r0, &r1, fx);
+        let mut expect = x.matmul(&w);
+        for r in 0..3 {
+            for c in 0..5 {
+                *expect.at_mut(r, c) += bias_f[c];
+            }
+        }
+        for i in 0..got.data.len() {
+            assert!((got.data[i] - expect.data[i]).abs() < 0.05, "i={i}");
+        }
+    }
+
+    #[test]
+    fn comm_is_counted_for_matmul() {
+        let fx = Fix::default();
+        let x = rand_f64_mat(4, 8, 1.0, 12);
+        let w = rand_f64_mat(8, 4, 1.0, 13);
+        let (x0, x1) = share_mat(&x, fx, 14);
+        let wr = w.to_ring(fx);
+        let (bytes0, _bytes1) = run_engine(44, 128, move |e| {
+            e.phase("matmul");
+            let (mine, wref) = if e.is_p0() { (x0.clone(), Some(&wr)) } else { (x1.clone(), None) };
+            pi_matmul_weights(e, &mine, wref, 4);
+            e.mpc.ctx.ch.total_stats().bytes
+        });
+        assert!(bytes0 > 1000, "HE traffic must be counted, got {bytes0}");
+    }
+
+    #[test]
+    fn plan_cap_respected() {
+        let p = choose_plan(128, 768, 768, 8192);
+        assert!(p.nw <= NW_CAP);
+        assert!(p.nw * p.kw * p.mw <= 8192);
+    }
+}

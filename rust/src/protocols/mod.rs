@@ -1,0 +1,131 @@
+//! The paper's two-party protocols.
+//!
+//! - [`matmul`] — Π_MatMul: HE-packed linear layers (shared × server-plaintext
+//!   weights, and shared × shared for attention products).
+//! - [`math`] — fixed-point share arithmetic: Horner polynomial evaluation,
+//!   ApproxExp Taylor series, Newton reciprocal / rsqrt with secure range
+//!   normalization.
+//! - [`softmax`] — Π_SoftMax with per-row polynomial reduction (§3.3, Eq. 4-6).
+//! - [`gelu`] — Π_GELU: high-degree piecewise (Eq. 7), BOLT baseline (Eq. 8),
+//!   and the reduced degree-2 polynomial (Kim et al.).
+//! - [`layernorm`] — Π_LayerNorm.
+//! - [`prune`] — Π_prune (Fig. 13): importance scores + threshold comparison.
+//! - [`mask`] — Π_mask (Fig. 14): mask binding, secure count, O(mn) oblivious
+//!   swaps, truncation.
+//! - [`reduce`] — encrypted polynomial reduction mask (§3.3).
+
+pub mod gelu;
+pub mod layernorm;
+pub mod lut;
+pub mod mask;
+pub mod math;
+pub mod matmul;
+pub mod prune;
+pub mod reduce;
+pub mod softmax;
+
+use crate::fixed::Fix;
+use crate::gates::{Mpc, TripleMode};
+use crate::he::{BfvContext, Ctx, SecretKey};
+use crate::party::PartyCtx;
+
+/// Full two-party protocol endpoint: MPC gates + an HE keypair per party.
+pub struct Engine2P {
+    pub mpc: Mpc,
+    pub he: Ctx,
+    pub sk: SecretKey,
+    pub fix: Fix,
+    /// Suffix appended to every phase label (the coordinator sets "#<layer>"
+    /// so per-protocol traffic is bucketed per layer — Table 3, Fig. 10).
+    phase_ctx: std::cell::RefCell<String>,
+}
+
+impl Engine2P {
+    pub fn new(ctx: PartyCtx, mode: TripleMode, he_n: usize, fix: Fix) -> Self {
+        let mut mpc = Mpc::new(ctx, mode);
+        let he = BfvContext::new(he_n);
+        let sk = SecretKey::gen(&he, &mut mpc.ctx.rng);
+        Engine2P { mpc, he, sk, fix, phase_ctx: std::cell::RefCell::new(String::new()) }
+    }
+
+    pub fn is_p0(&self) -> bool {
+        self.mpc.is_p0()
+    }
+
+    pub fn phase(&self, name: &str) {
+        let ctx = self.phase_ctx.borrow();
+        if ctx.is_empty() {
+            self.mpc.phase(name);
+        } else {
+            self.mpc.phase(&format!("{name}{ctx}"));
+        }
+    }
+
+    /// Set the per-layer phase suffix (empty string to clear).
+    pub fn set_phase_ctx(&self, ctx: &str) {
+        *self.phase_ctx.borrow_mut() = ctx.to_string();
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::fixed::{F64Mat, RingMat};
+    use crate::party::run2_owned_sym;
+    use crate::util::Xoshiro256;
+
+    /// Run the same closure as both parties with a fresh Engine2P each.
+    pub fn run_engine<R: Send>(
+        seed: u64,
+        he_n: usize,
+        f: impl Fn(&mut Engine2P) -> R + Send + Sync,
+    ) -> (R, R) {
+        let (a, b, _) = run2_owned_sym(seed, |ctx| {
+            let mut e = Engine2P::new(ctx, TripleMode::Ot, he_n, Fix::default());
+            f(&mut e)
+        });
+        (a, b)
+    }
+
+    /// Split a float matrix into two additive ring shares (deterministic).
+    pub fn share_mat(m: &F64Mat, fix: Fix, seed: u64) -> (RingMat, RingMat) {
+        let ring = m.to_ring(fix);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let r: Vec<u64> = (0..ring.data.len()).map(|_| rng.next_u64()).collect();
+        let s0 = RingMat::from_vec(
+            ring.rows,
+            ring.cols,
+            ring.data.iter().zip(&r).map(|(x, y)| x.wrapping_sub(*y)).collect(),
+        );
+        let s1 = RingMat::from_vec(ring.rows, ring.cols, r);
+        (s0, s1)
+    }
+
+    /// Reconstruct shares into floats.
+    pub fn recon(a: &RingMat, b: &RingMat, fix: Fix) -> F64Mat {
+        F64Mat::from_vec(
+            a.rows,
+            a.cols,
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| fix.dec(x.wrapping_add(*y)))
+                .collect(),
+        )
+    }
+
+    pub fn share_vec(v: &[f64], fix: Fix, seed: u64) -> (Vec<u64>, Vec<u64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let r: Vec<u64> = (0..v.len()).map(|_| rng.next_u64()).collect();
+        let s0: Vec<u64> = v
+            .iter()
+            .zip(&r)
+            .map(|(x, y)| fix.enc(*x).wrapping_sub(*y))
+            .collect();
+        (s0, r)
+    }
+
+    pub fn recon_vec(a: &[u64], b: &[u64], fix: Fix) -> Vec<f64> {
+        a.iter().zip(b).map(|(x, y)| fix.dec(x.wrapping_add(*y))).collect()
+    }
+}

@@ -1,0 +1,55 @@
+//! Encrypted polynomial reduction (§3.3): after Π_prune + Π_mask have
+//! relocated and concealed token positions, a secure comparison of the
+//! (pruned-order) importance scores against the reduction threshold β yields
+//! the reduction mask M_β, which is then *revealed*: its positions refer to
+//! the rotated/pruned sequence, not original token locations, so disclosure
+//! does not compromise location privacy (paper argument, §3.3).
+//!
+//! M_β[i] = 1 → token i keeps high-degree polynomials; 0 → reduced degree.
+
+use super::Engine2P;
+
+/// Π_reduce: returns the public reduction mask over pruned tokens.
+/// `beta` is the server's learned threshold (ignored on P1). Enforces the
+/// paper's invariant β > θ by construction of the caller's thresholds.
+pub fn pi_reduce(e: &mut Engine2P, pruned_scores: &[u64], beta: f64) -> Vec<bool> {
+    e.phase("reduce");
+    let beta_enc = e.fix.enc(beta);
+    let m = e.mpc.cmp_gt_const(pruned_scores, beta_enc);
+    let opened = e.mpc.open_bits(&m);
+    opened.into_iter().map(|b| b == 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{run_engine, share_vec};
+    use super::*;
+    use crate::fixed::Fix;
+
+    #[test]
+    fn reduce_mask_matches_threshold() {
+        let fx = Fix::default();
+        let scores = [0.9f64, 0.04, 0.3, 0.11, 0.5];
+        let beta = 0.25;
+        let (s0, s1) = share_vec(&scores, fx, 130);
+        let (m0, m1) = run_engine(131, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_reduce(e, &mine, beta)
+        });
+        assert_eq!(m0, m1, "mask is public — both parties see it");
+        let expect: Vec<bool> = scores.iter().map(|&s| s > beta).collect();
+        assert_eq!(m0, expect);
+    }
+
+    #[test]
+    fn reduce_all_below_beta() {
+        let fx = Fix::default();
+        let scores = [0.01f64, 0.02];
+        let (s0, s1) = share_vec(&scores, fx, 132);
+        let (m0, _) = run_engine(133, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_reduce(e, &mine, 0.5)
+        });
+        assert_eq!(m0, vec![false, false]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Π_SoftMax with encrypted polynomial reduction (§3.3).
+//!
+//! Rows are normalized as SoftMax(x − max x) (Kim et al. / IRON style). The
+//! max is found by a linear scan of CMP+MUX (the paper explicitly traverses
+//! rather than building a binary tree, since attention maps are not reusable);
+//! the scan is batched across all rows so its round count is d−1 regardless of
+//! row count. The exponential is the paper's Taylor form (1 + x/2^n)^(2^n)
+//! with n = 6 on the high-degree path and n = 3 on the reduced path (Eq. 5-6);
+//! the denominator inverse is a Newton reciprocal.
+//!
+//! `row_high[i]` is the (public, post-pruning) polynomial-reduction mask M_β:
+//! true rows use the high-degree path. See `reduce.rs` for why revealing it is
+//! safe after Π_mask.
+
+use super::Engine2P;
+use crate::fixed::{RingMat, sub_vec};
+
+pub const EXP_CLIP_T: f64 = -13.0;
+pub const EXP_N_HIGH: u32 = 6;
+pub const EXP_N_LOW: u32 = 3;
+
+/// Batched row-max via linear CMP+MUX scan over the column dimension.
+pub(crate) fn row_max(e: &mut Engine2P, x: &RingMat) -> Vec<u64> {
+    let (rows, cols) = (x.rows, x.cols);
+    let mut m: Vec<u64> = (0..rows).map(|r| x.at(r, 0)).collect();
+    for j in 1..cols {
+        let col: Vec<u64> = (0..rows).map(|r| x.at(r, j)).collect();
+        let b = e.mpc.cmp_gt(&col, &m);
+        m = e.mpc.select(&b, &col, &m);
+    }
+    m
+}
+
+/// SoftMax over a subset of rows with one Taylor degree.
+fn softmax_rows(e: &mut Engine2P, x: &RingMat, rows: &[usize], n_taylor: u32) -> Vec<Vec<u64>> {
+    if rows.is_empty() {
+        return vec![];
+    }
+    let d = x.cols;
+    let sub = RingMat::from_vec(
+        rows.len(),
+        d,
+        rows.iter().flat_map(|&r| x.row(r).to_vec()).collect(),
+    );
+    let maxes = row_max(e, &sub);
+    // x − max (broadcast)
+    let mut centered = Vec::with_capacity(rows.len() * d);
+    for (i, _) in rows.iter().enumerate() {
+        let m = maxes[i];
+        centered.extend(sub.row(i).iter().map(|&v| v.wrapping_sub(m)));
+    }
+    let exps = e.approx_exp(&centered, n_taylor, EXP_CLIP_T);
+    // per-row sums (local)
+    let sums: Vec<u64> = (0..rows.len())
+        .map(|i| {
+            exps[i * d..(i + 1) * d]
+                .iter()
+                .fold(0u64, |a, &b| a.wrapping_add(b))
+        })
+        .collect();
+    // reciprocal: sums ∈ [1, d] (the max term contributes exactly 1)
+    let max_pow2 = (64 - (d as u64).leading_zeros()) as i32 + 1;
+    let recip = e.recip_positive(&sums, max_pow2, 4);
+    // broadcast multiply
+    let recip_b: Vec<u64> = (0..rows.len())
+        .flat_map(|i| std::iter::repeat(recip[i]).take(d))
+        .collect();
+    let out = e.mul_fix(&exps, &recip_b);
+    (0..rows.len()).map(|i| out[i * d..(i + 1) * d].to_vec()).collect()
+}
+
+/// Π_SoftMax over all rows of `x` with a public per-row reduction mask.
+/// Rows with `row_high[i] == true` (or when `row_high` is empty) use the
+/// high-degree path.
+pub fn pi_softmax(e: &mut Engine2P, x: &RingMat, row_high: &[bool]) -> RingMat {
+    e.phase("softmax");
+    let rows_all: Vec<usize> = (0..x.rows).collect();
+    let (hi, lo): (Vec<usize>, Vec<usize>) = if row_high.is_empty() {
+        (rows_all, vec![])
+    } else {
+        assert_eq!(row_high.len(), x.rows);
+        rows_all.into_iter().partition(|&r| row_high[r])
+    };
+    let hi_out = softmax_rows(e, x, &hi, EXP_N_HIGH);
+    let lo_out = softmax_rows(e, x, &lo, EXP_N_LOW);
+    let mut out = RingMat::zeros(x.rows, x.cols);
+    for (i, &r) in hi.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&hi_out[i]);
+    }
+    for (i, &r) in lo.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&lo_out[i]);
+    }
+    out
+}
+
+/// Plaintext reference softmax with the same approximation structure (for
+/// protocol tests and the fixed-point oracle).
+pub fn softmax_ref(x: &[f64], n_taylor: u32) -> Vec<f64> {
+    let max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = x
+        .iter()
+        .map(|&v| {
+            let c = v - max;
+            if c <= EXP_CLIP_T {
+                0.0
+            } else {
+                (1.0 + c / 2f64.powi(n_taylor as i32) as f64).powi(1 << n_taylor)
+            }
+        })
+        .collect();
+    let s: f64 = exps.iter().sum();
+    exps.iter().map(|&v| v / s).collect()
+}
+
+/// Helper used by Π_prune: importance scores from an attention-map share
+/// (Eq. 1) — column means accumulated over heads, all local.
+pub fn importance_scores(e: &mut Engine2P, atts: &[RingMat]) -> Vec<u64> {
+    let h = atts.len();
+    let n = atts[0].rows;
+    let mut acc = vec![0u64; n];
+    for att in atts {
+        assert_eq!((att.rows, att.cols), (n, n));
+        for j in 0..n {
+            for i in 0..n {
+                acc[i] = acc[i].wrapping_add(att.at(j, i));
+            }
+        }
+    }
+    // scale by 1/(H·n) — constant multiply + local truncation
+    let c = e.fix.enc(1.0 / (h as f64 * n as f64));
+    e.mpc.scale_const_trunc(&acc, c, e.fix.frac_bits)
+}
+
+/// sub helper re-export for layer code.
+pub fn sub_broadcast_row(x: &RingMat, v: &[u64]) -> RingMat {
+    let mut out = x.clone();
+    for r in 0..x.rows {
+        let row = out.row_mut(r);
+        let new = sub_vec(row, v);
+        row.copy_from_slice(&new);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{recon, run_engine, share_mat};
+    use super::*;
+    use crate::fixed::{F64Mat, Fix};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn softmax_matches_reference_high() {
+        let fx = Fix::default();
+        let mut rng = Xoshiro256::seed_from_u64(51);
+        let (r, d) = (4, 8);
+        let x = F64Mat::from_vec(
+            r,
+            d,
+            (0..r * d).map(|_| rng.next_f64() * 6.0 - 3.0).collect(),
+        );
+        let (s0, s1) = share_mat(&x, fx, 52);
+        let (o0, o1) = run_engine(53, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_softmax(e, &mine, &[])
+        });
+        let got = recon(&o0, &o1, fx);
+        for i in 0..r {
+            let expect = softmax_ref(x.row(i), EXP_N_HIGH);
+            let row_sum: f64 = (0..d).map(|j| got.at(i, j)).sum();
+            assert!((row_sum - 1.0).abs() < 0.05, "row {i} sum={row_sum}");
+            for j in 0..d {
+                assert!(
+                    (got.at(i, j) - expect[j]).abs() < 0.03,
+                    "({i},{j}) got={} want={}",
+                    got.at(i, j),
+                    expect[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_mixed_degrees() {
+        let fx = Fix::default();
+        let (r, d) = (4, 6);
+        let mut rng = Xoshiro256::seed_from_u64(54);
+        let x = F64Mat::from_vec(
+            r,
+            d,
+            (0..r * d).map(|_| rng.next_f64() * 4.0 - 2.0).collect(),
+        );
+        let mask = vec![true, false, true, false];
+        let (s0, s1) = share_mat(&x, fx, 55);
+        let m2 = mask.clone();
+        let (o0, o1) = run_engine(56, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            pi_softmax(e, &mine, &m2)
+        });
+        let got = recon(&o0, &o1, fx);
+        for i in 0..r {
+            let n_t = if mask[i] { EXP_N_HIGH } else { EXP_N_LOW };
+            let expect = softmax_ref(x.row(i), n_t);
+            for j in 0..d {
+                assert!(
+                    (got.at(i, j) - expect[j]).abs() < 0.04,
+                    "({i},{j}) got={} want={}",
+                    got.at(i, j),
+                    expect[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn importance_scores_match_plain() {
+        let fx = Fix::default();
+        let n = 6;
+        let mut rng = Xoshiro256::seed_from_u64(57);
+        // two attention heads with rows roughly summing to 1
+        let heads: Vec<F64Mat> = (0..2)
+            .map(|_| {
+                let mut m = F64Mat::zeros(n, n);
+                for i in 0..n {
+                    let mut row: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+                    let s: f64 = row.iter().sum();
+                    row.iter_mut().for_each(|v| *v /= s);
+                    m.data[i * n..(i + 1) * n].copy_from_slice(&row);
+                }
+                m
+            })
+            .collect();
+        let shares: Vec<_> = heads.iter().enumerate().map(|(i, h)| share_mat(h, fx, 58 + i as u64)).collect();
+        let s0: Vec<RingMat> = shares.iter().map(|s| s.0.clone()).collect();
+        let s1: Vec<RingMat> = shares.iter().map(|s| s.1.clone()).collect();
+        let (o0, o1) = run_engine(59, 128, move |e| {
+            let mine = if e.is_p0() { s0.clone() } else { s1.clone() };
+            importance_scores(e, &mine)
+        });
+        // reference: Eq. 1
+        for i in 0..n {
+            let mut expect = 0.0;
+            for h in &heads {
+                for j in 0..n {
+                    expect += h.at(j, i);
+                }
+            }
+            expect /= (2 * n) as f64;
+            let got = fx.dec(o0[i].wrapping_add(o1[i]));
+            assert!((got - expect).abs() < 0.01, "i={i} got={got} want={expect}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! XLA/PJRT runtime: loads AOT-lowered HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from Rust.
+//!
+//! Python is build-time only. The Rust binary is self-contained after
+//! `make artifacts`: `HloModuleProto::from_text_file` → `client.compile` →
+//! `execute`, with compiled executables cached per artifact path. The
+//! interchange format is HLO **text** — jax ≥ 0.5 emits serialized protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The coordinator uses this path for the plaintext-oracle engine: accuracy
+//! evaluation (Table 2, Fig. 12) and protocol-vs-plaintext validation run the
+//! same lowered graph the Pallas kernels were compiled into.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Cached PJRT CPU runtime.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+/// A typed f32 tensor argument/result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>(),
+            "tensor data/shape mismatch"
+        );
+        TensorF32 { data, dims }
+    }
+
+    pub fn scalar_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) an HLO-text artifact as a compiled executable.
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        if self.cache.contains_key(path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.cache.insert(path.to_path_buf(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, path: &Path) -> bool {
+        self.cache.contains_key(path)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute an artifact on f32 inputs; returns the tuple elements as f32
+    /// tensors (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&mut self, path: &Path, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        self.load(path)?;
+        let exe = self.cache.get(path).expect("just loaded");
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                xla::Literal::vec1(&t.data)
+                    .reshape(&t.dims)
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .context("executing artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().context("result shape")?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>().context("result to_vec")?;
+                Ok(TensorF32 { data, dims })
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory (overridable via `CIPHERPRUNE_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CIPHERPRUNE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of a named artifact.
+pub fn artifact(name: &str) -> PathBuf {
+    artifacts_dir().join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal valid HLO-text module: f(x, y) = (x·y + 2,) over f32[2,2],
+    /// matching /opt/xla-example's smoke test so this test is hermetic
+    /// (no python needed).
+    const SMOKE_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.8 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    fn smoke_path() -> PathBuf {
+        let dir = std::env::temp_dir().join("cipherprune-rt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("smoke.hlo.txt");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(SMOKE_HLO.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_and_runs_hlo_text() {
+        let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
+        let p = smoke_path();
+        let x = TensorF32::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let y = TensorF32::new(vec![1.0; 4], vec![2, 2]);
+        let out = rt.run_f32(&p, &[x, y]).expect("execute");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![2, 2]);
+        assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let p = smoke_path();
+        rt.load(&p).unwrap();
+        assert!(rt.is_loaded(&p));
+        assert_eq!(rt.loaded_count(), 1);
+        rt.load(&p).unwrap(); // no recompile
+        assert_eq!(rt.loaded_count(), 1);
+        let x = TensorF32::new(vec![0.0; 4], vec![2, 2]);
+        let y = TensorF32::new(vec![0.0; 4], vec![2, 2]);
+        let out = rt.run_f32(&p, &[x, y]).unwrap();
+        assert_eq!(out[0].data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let err = rt.load(Path::new("/nonexistent/f.hlo.txt"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        let t = TensorF32::new(vec![1.0; 6], vec![2, 3]);
+        assert_eq!(t.scalar_count(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorF32::new(vec![1.0; 5], vec![2, 3]);
+    }
+}

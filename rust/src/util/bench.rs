@@ -1,0 +1,257 @@
+//! Micro-benchmark harness (criterion is unavailable in this offline build).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min/stddev reporting, a
+//! text table printer for the paper tables/figures, and JSON output so experiment
+//! results can be archived under `artifacts/results/`.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_s", self.mean_s.into()),
+            ("median_s", self.median_s.into()),
+            ("min_s", self.min_s.into()),
+            ("max_s", self.max_s.into()),
+            ("stddev_s", self.stddev_s.into()),
+        ])
+    }
+}
+
+pub fn summarize(name: &str, samples: &[f64]) -> BenchStats {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: median,
+        min_s: sorted[0],
+        max_s: sorted[n - 1],
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Benchmark with a time budget: run until `budget` elapsed or `max_iters` reached,
+/// with at least `min_iters` runs.
+pub fn bench_budget<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    mut f: F,
+) -> BenchStats {
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < max_iters
+        && (samples.len() < min_iters || start.elapsed() < budget)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Plain-text table printer for paper-style tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n", self.title));
+        let line = |ws: &[usize]| {
+            let mut s = String::from("+");
+            for w in ws {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&widths));
+        out.push('|');
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&format!(" {:w$} |", h, w = widths[i]));
+        }
+        out.push('\n');
+        out.push_str(&line(&widths));
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                out.push_str(&format!(" {:w$} |", c, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        out.push_str(&line(&widths));
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.header
+                        .iter()
+                        .zip(r.iter())
+                        .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", self.title.as_str().into()),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Write a JSON report under artifacts/results/, creating the directory.
+pub fn save_report(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("artifacts/results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let s = summarize("x", &[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.median_s, 3.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 100.0);
+        assert!((s.mean_s - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summarize_even() {
+        let s = summarize("x", &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median_s, 2.5);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("| a "));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_duration(2.0), "2.00 s");
+        assert!(fmt_duration(2e-3).contains("ms"));
+        assert!(fmt_duration(2e-9).contains("ns"));
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert!(fmt_bytes(2.0 * 1024.0 * 1024.0 * 1024.0).contains("GB"));
+    }
+}

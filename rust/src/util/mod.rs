@@ -1,0 +1,10 @@
+//! Shared utilities: seeded RNGs, mini-JSON, micro-bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+
+pub use json::Json;
+pub use propcheck::{gen_range, propcheck};
+pub use rng::{AesPrg, CrHash, Xoshiro256};

@@ -1,0 +1,62 @@
+//! Minimal property-testing harness (proptest is unavailable offline):
+//! runs a property over many seeded random cases and reports the failing
+//! case's seed so it can be replayed deterministically.
+
+use super::Xoshiro256;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. Panics on the
+/// first failure with the case seed and the property's message.
+pub fn propcheck<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    gen: impl Fn(&mut Xoshiro256) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(name.len() as u64);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn gen_range(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    assert!(hi >= lo);
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        propcheck("sum-commutes", 50, |r| (r.next_u64() >> 1, r.next_u64() >> 1), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failures() {
+        propcheck("always-fails", 3, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..1000 {
+            let v = gen_range(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+}

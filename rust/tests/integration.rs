@@ -1,0 +1,138 @@
+//! Cross-layer integration tests: artifacts produced by `make artifacts`
+//! (python AOT) consumed by the Rust runtime and protocol engines.
+//!
+//! These tests skip gracefully when `artifacts/` has not been built so that
+//! `cargo test` works on a fresh checkout; `make test` always builds
+//! artifacts first.
+
+use std::path::Path;
+
+use cipherprune::coordinator::{run_inference, EngineConfig, EngineKind};
+use cipherprune::nn::{
+    forward, Activations, ForwardOptions, ModelWeights, PruneStrategy, ThresholdSchedule,
+};
+use cipherprune::protocols::gelu::GeluKind;
+use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
+
+fn artifacts_ready() -> bool {
+    artifact("model.hlo.txt").exists() && artifact("weights.bin").exists()
+}
+
+/// The headline three-layer consistency check: the XLA-compiled JAX model
+/// (Pallas kernels inlined) must agree with the Rust plaintext reference on
+/// the weights exported by python.
+#[test]
+fn xla_oracle_matches_rust_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let w = ModelWeights::load(&artifact("weights.bin")).expect("CPW1 weights");
+    let meta = std::fs::read_to_string(artifact("meta.json")).unwrap();
+    let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
+    let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap();
+    let vocab = w.config.vocab;
+
+    // deterministic input
+    let ids: Vec<usize> = (0..seq).map(|i| (i * 7 + 3) % vocab).collect();
+    let mut onehot = vec![0f32; seq * vocab];
+    for (i, &id) in ids.iter().enumerate() {
+        onehot[i * vocab + id] = 1.0;
+    }
+
+    let mut rt = XlaRuntime::cpu().expect("PJRT client");
+    let out = rt
+        .run_f32(
+            &artifact("model.hlo.txt"),
+            &[TensorF32::new(onehot, vec![seq as i64, vocab as i64])],
+        )
+        .expect("XLA execution");
+    let xla_logits = &out[0].data;
+
+    let opts = ForwardOptions {
+        prune: PruneStrategy::None,
+        reduce: false,
+        activations: Activations::Polynomial { gelu_high: GeluKind::High },
+    };
+    let ref_out = forward(&w, &ids, &opts);
+    assert_eq!(xla_logits.len(), ref_out.logits.len());
+    for (x, r) in xla_logits.iter().zip(&ref_out.logits) {
+        assert!(
+            (*x as f64 - r).abs() < 5e-3,
+            "XLA {xla_logits:?} vs reference {:?}",
+            ref_out.logits
+        );
+    }
+}
+
+/// The standalone importance-kernel artifact must match Eq. 1.
+#[test]
+fn importance_kernel_artifact_matches_eq1() {
+    if !artifact("importance.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = std::fs::read_to_string(artifact("meta.json")).unwrap();
+    let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
+    let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap();
+    let heads = 2usize; // tiny config
+    let mut att = vec![0f32; heads * seq * seq];
+    // row-stochastic random-ish attention
+    for h in 0..heads {
+        for i in 0..seq {
+            let mut row: Vec<f32> =
+                (0..seq).map(|j| ((h * 31 + i * 7 + j * 3) % 11) as f32 + 1.0).collect();
+            let s: f32 = row.iter().sum();
+            row.iter_mut().for_each(|v| *v /= s);
+            for (j, &v) in row.iter().enumerate() {
+                att[h * seq * seq + i * seq + j] = v;
+            }
+        }
+    }
+    let mut rt = XlaRuntime::cpu().unwrap();
+    let out = rt
+        .run_f32(
+            &artifact("importance.hlo.txt"),
+            &[TensorF32::new(att.clone(), vec![heads as i64, seq as i64, seq as i64])],
+        )
+        .unwrap();
+    // Eq. 1 reference
+    for i in 0..seq {
+        let mut s = 0.0f64;
+        for h in 0..heads {
+            for j in 0..seq {
+                s += att[h * seq * seq + j * seq + i] as f64;
+            }
+        }
+        s /= (heads * seq) as f64;
+        assert!(
+            (out[0].data[i] as f64 - s).abs() < 1e-5,
+            "token {i}: kernel {} vs eq1 {s}",
+            out[0].data[i]
+        );
+    }
+}
+
+/// The full CipherPrune engine runs on python-trained weights + thresholds.
+#[test]
+fn cipherprune_engine_runs_on_exported_weights() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let w = ModelWeights::load(&artifact("weights.bin")).unwrap();
+    let sched = ThresholdSchedule::load(&artifact("thresholds.json"))
+        .unwrap_or_else(|| ThresholdSchedule::default_for(w.config.n_layers))
+        .fit_layers(w.config.n_layers);
+    let mut cfg = EngineConfig::for_tests(EngineKind::CipherPrune, w.config.n_layers);
+    cfg.schedule = sched.clone();
+    let ids: Vec<usize> = (0..8).map(|i| (i * 5 + 1) % w.config.vocab).collect();
+    let run = run_inference(&cfg, &w, &ids);
+    let want = forward(&w, &ids, &ForwardOptions::cipherprune(sched, true));
+    for (g, r) in run.logits.iter().zip(&want.logits) {
+        assert!((g - r).abs() < 0.3, "{:?} vs {:?}", run.logits, want.logits);
+    }
+    for (ls, tr) in run.layer_stats.iter().zip(&want.traces) {
+        assert_eq!(ls.n_kept, tr.n_kept);
+    }
+}

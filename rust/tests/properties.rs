@@ -1,0 +1,375 @@
+//! Property-based tests over coordinator and protocol invariants
+//! (seeded random cases via util::propcheck; proptest is unavailable
+//! offline — failures replay deterministically from the reported seed).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cipherprune::coordinator::batcher::{bucket_for, Batch, BatchPolicy, Batcher};
+use cipherprune::coordinator::{EngineKind, InferenceRequest, Router, RouterConfig};
+use cipherprune::fixed::{F64Mat, Fix, RingMat};
+use cipherprune::nn::reference::prune_order;
+use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::util::{gen_range, propcheck, Xoshiro256};
+
+// ---------------------------------------------------------------- batcher
+
+#[test]
+fn batcher_never_loses_or_duplicates_requests() {
+    propcheck(
+        "batcher-conservation",
+        60,
+        |rng| {
+            let n = gen_range(rng, 1, 40);
+            let lens: Vec<usize> = (0..n).map(|_| gen_range(rng, 1, 512)).collect();
+            let max_batch = gen_range(rng, 1, 9);
+            (lens, max_batch)
+        },
+        |(lens, max_batch)| {
+            let policy = BatchPolicy {
+                max_batch: *max_batch,
+                linger: Duration::from_millis(0),
+                min_bucket: 16,
+                max_tokens: 512,
+            };
+            let mut b = Batcher::new(policy);
+            for (i, &l) in lens.iter().enumerate() {
+                b.push(InferenceRequest {
+                    id: i as u64,
+                    ids: vec![1; l],
+                    engine: EngineKind::CipherPrune,
+                })
+                .map_err(|_| format!("rejected legal len {l}"))?;
+            }
+            let mut seen = vec![false; lens.len()];
+            let mut batches: Vec<Batch> = Vec::new();
+            while let Some(batch) = b.next_batch(Instant::now()) {
+                batches.push(batch);
+            }
+            batches.extend(b.drain_all());
+            for batch in &batches {
+                if batch.requests.len() > *max_batch {
+                    return Err(format!("batch over max: {}", batch.requests.len()));
+                }
+                for r in &batch.requests {
+                    if seen[r.id as usize] {
+                        return Err(format!("request {} duplicated", r.id));
+                    }
+                    seen[r.id as usize] = true;
+                    let bucket = bucket_for(r.ids.len(), &policy);
+                    if bucket != batch.bucket {
+                        return Err(format!(
+                            "request len {} (bucket {bucket}) in batch bucket {}",
+                            r.ids.len(),
+                            batch.bucket
+                        ));
+                    }
+                    if r.ids.len() > batch.bucket {
+                        return Err("request longer than its bucket".into());
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("request lost".into());
+            }
+            if b.pending() != 0 {
+                return Err("pending after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_preserves_fifo_within_bucket() {
+    propcheck(
+        "batcher-fifo",
+        40,
+        |rng| {
+            let n = gen_range(rng, 2, 30);
+            (0..n).map(|_| gen_range(rng, 20, 31)).collect::<Vec<_>>() // one bucket (32)
+        },
+        |lens| {
+            let policy = BatchPolicy {
+                max_batch: 4,
+                linger: Duration::from_millis(0),
+                min_bucket: 16,
+                max_tokens: 512,
+            };
+            let mut b = Batcher::new(policy);
+            for (i, &l) in lens.iter().enumerate() {
+                b.push(InferenceRequest {
+                    id: i as u64,
+                    ids: vec![1; l],
+                    engine: EngineKind::Bolt,
+                })
+                .unwrap();
+            }
+            let mut last = None;
+            while let Some(batch) = b.next_batch(Instant::now()) {
+                for r in &batch.requests {
+                    if let Some(prev) = last {
+                        if r.id <= prev {
+                            return Err(format!("order violated: {} after {prev}", r.id));
+                        }
+                    }
+                    last = Some(r.id);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- pruning
+
+#[test]
+fn prune_order_is_stable_partition_permutation() {
+    propcheck(
+        "prune-order",
+        200,
+        |rng| {
+            let n = gen_range(rng, 1, 64);
+            (0..n).map(|_| rng.next_u64() & 1 == 1).collect::<Vec<bool>>()
+        },
+        |keep| {
+            let (order, n_kept) = prune_order(keep);
+            let n = keep.len();
+            if order.len() != n {
+                return Err("not a permutation (length)".into());
+            }
+            let mut seen = vec![false; n];
+            for &i in &order {
+                if seen[i] {
+                    return Err("not a permutation (dup)".into());
+                }
+                seen[i] = true;
+            }
+            let expect_kept = keep.iter().filter(|&&k| k).count().max(1);
+            if n_kept != expect_kept {
+                return Err(format!("n_kept {n_kept} != {expect_kept}"));
+            }
+            // kept prefix preserves original order
+            let kept_slice = &order[..n_kept];
+            for w in kept_slice.windows(2) {
+                if w[0] >= w[1] {
+                    return Err("kept order not stable".into());
+                }
+            }
+            // all kept indices (when any) are keep=true
+            if keep.iter().any(|&k| k) {
+                for &i in kept_slice {
+                    if !keep[i] {
+                        return Err(format!("pruned token {i} in kept prefix"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn threshold_schedule_invariants() {
+    propcheck(
+        "schedule",
+        100,
+        |rng| (gen_range(rng, 1, 48), gen_range(rng, 1, 48), gen_range(rng, 1, 512)),
+        |&(l_from, l_to, n_cur)| {
+            let s = ThresholdSchedule::default_for(l_from).fit_layers(l_to);
+            if s.theta.len() != l_to || s.beta.len() != l_to {
+                return Err("fit_layers length".into());
+            }
+            for li in 0..l_to {
+                if s.beta[li] <= s.theta[li] {
+                    return Err(format!("beta <= theta at layer {li}"));
+                }
+                let abs = s.theta_abs(li, n_cur);
+                if !(abs.is_finite() && abs * n_cur as f64 - s.theta[li] < 1e-9) {
+                    return Err("relative/absolute mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- fixed point
+
+#[test]
+fn fixed_point_roundtrip_error_bounded() {
+    propcheck(
+        "fix-roundtrip",
+        300,
+        |rng| (rng.next_f64() - 0.5) * 2e5,
+        |&x| {
+            let fx = Fix::default();
+            let err = (fx.dec(fx.enc(x)) - x).abs();
+            let ulp = 1.0 / fx.scale();
+            if err <= ulp {
+                Ok(())
+            } else {
+                Err(format!("err {err} > ulp {ulp}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn ring_matmul_matches_f64() {
+    propcheck(
+        "ring-matmul",
+        40,
+        |rng| {
+            let (n, k, m) = (gen_range(rng, 1, 8), gen_range(rng, 1, 8), gen_range(rng, 1, 8));
+            let a = F64Mat::from_vec(
+                n,
+                k,
+                (0..n * k).map(|_| (rng.next_f64() - 0.5) * 4.0).collect(),
+            );
+            let b = F64Mat::from_vec(
+                k,
+                m,
+                (0..k * m).map(|_| (rng.next_f64() - 0.5) * 4.0).collect(),
+            );
+            (a, b)
+        },
+        |(a, b)| {
+            let fx = Fix::default();
+            let got = a.to_ring(fx).matmul(&b.to_ring(fx));
+            let want = a.matmul(b);
+            // ring product carries scale 2^2f
+            let fx2 = Fix { frac_bits: fx.frac_bits * 2 };
+            for i in 0..want.rows {
+                for j in 0..want.cols {
+                    let g = fx2.dec(got.at(i, j));
+                    let w = want.at(i, j);
+                    if (g - w).abs() > 1e-2 {
+                        return Err(format!("({i},{j}): {g} vs {w}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ring_mat_transpose_involution() {
+    propcheck(
+        "transpose",
+        100,
+        |rng| {
+            let (r, c) = (gen_range(rng, 1, 12), gen_range(rng, 1, 12));
+            RingMat::from_vec(r, c, (0..r * c).map(|_| rng.next_u64()).collect())
+        },
+        |m| {
+            let t2 = m.transpose().transpose();
+            if t2.data == m.data && t2.rows == m.rows {
+                Ok(())
+            } else {
+                Err("transpose not involutive".into())
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------- workload
+
+#[test]
+fn workload_samples_always_wellformed() {
+    propcheck(
+        "workload",
+        100,
+        |rng| {
+            let seq = gen_range(rng, 8, 128);
+            let red = 0.1 + 0.8 * rng.next_f64();
+            (seq, red, rng.next_u64())
+        },
+        |&(seq, red, seed)| {
+            let cfg = ModelConfig::tiny();
+            let wl = Workload { redundancy: red, ..Workload::qnli_like(&cfg, seq) };
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let s = wl.sample(&mut rng);
+            if s.ids.len() != seq {
+                return Err("not padded to seq".into());
+            }
+            if s.label >= cfg.n_classes {
+                return Err("label out of range".into());
+            }
+            if s.ids.iter().any(|&i| i >= cfg.vocab) {
+                return Err("token out of vocab".into());
+            }
+            if s.ids[..s.real_len].iter().any(|&i| i == 0)
+                || s.ids[s.real_len..].iter().any(|&i| i != 0)
+            {
+                return Err("padding structure broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- router
+
+/// End-to-end router property (real engines at test scale): every submitted
+/// request is answered exactly once with the right logit arity.
+#[test]
+fn router_answers_every_request_exactly_once() {
+    let cfg = ModelConfig::tiny();
+    let weights = Arc::new(ModelWeights::salient(&cfg, 42));
+    propcheck(
+        "router-exactly-once",
+        4,
+        |rng| {
+            let n = gen_range(rng, 1, 5);
+            (0..n)
+                .map(|i| InferenceRequest {
+                    id: i as u64,
+                    ids: Workload::qnli_like(&ModelConfig::tiny(), gen_range(rng, 6, 12))
+                        .batch(1, rng.next_u64())[0]
+                        .ids
+                        .clone(),
+                    engine: if rng.next_u64() & 1 == 0 {
+                        EngineKind::CipherPrune
+                    } else {
+                        EngineKind::BoltNoWe
+                    },
+                })
+                .collect::<Vec<_>>()
+        },
+        |reqs| {
+            let mut router = Router::new(
+                weights.clone(),
+                RouterConfig {
+                    policy: BatchPolicy {
+                        max_batch: 2,
+                        linger: Duration::from_millis(0),
+                        min_bucket: 8,
+                        max_tokens: 64,
+                    },
+                    workers: 2,
+                    he_n: 128,
+                    schedule: None,
+                },
+            );
+            let n = reqs.len();
+            let resp = router.process(reqs.clone());
+            if resp.len() != n {
+                return Err(format!("{} responses for {n} requests", resp.len()));
+            }
+            let mut ids: Vec<u64> = resp.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != n {
+                return Err("duplicate/missing response ids".into());
+            }
+            for r in &resp {
+                if r.result.logits.len() != 2 {
+                    return Err("wrong logit arity".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

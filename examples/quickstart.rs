@@ -1,10 +1,18 @@
-//! Quickstart: one private CipherPrune inference end-to-end, validated
-//! against (a) the Rust plaintext reference and (b) the AOT XLA oracle
-//! artifact produced by `make artifacts` — all three layers composing.
+//! Quickstart: the prepare → session → infer lifecycle end-to-end.
+//!
+//! One model is ring-encoded once ([`PreparedModel::prepare`]), one two-party
+//! session is started once ([`Session::start`] — HE keygen + base OTs on a
+//! persistent P0/P1 thread pair), and then *several* private CipherPrune
+//! requests run through it paying only the online protocol. The first
+//! response is validated against (a) the Rust plaintext reference and (b) the
+//! AOT XLA oracle artifact produced by `make artifacts` — all three layers
+//! composing.
 //!
 //!     cargo run --release --example quickstart
 
-use cipherprune::coordinator::{run_inference, EngineConfig, EngineKind};
+use std::sync::Arc;
+
+use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
 use cipherprune::nn::{forward, ForwardOptions, ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration};
@@ -21,12 +29,24 @@ fn main() {
     let sample = &Workload::qnli_like(&cfg, 16).batch(1, 3)[0];
     println!("model {} | {} tokens ({} real)", cfg.name, sample.ids.len(), sample.real_len);
 
-    // 2. private inference: server P0 holds weights, client P1 holds tokens;
+    // 2. offline, once per model: ring-encode the weights
+    let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
+
+    // 3. offline, once per engine kind: start a reusable two-party session.
+    //    Server P0 holds the prepared weights, client P1 holds the tokens;
     //    both parties run in-process over a byte-counted channel.
-    let mut ec = EngineConfig::new(EngineKind::CipherPrune, cfg.n_layers);
-    ec.he_n = 4096;
-    ec.schedule = schedule.clone();
-    let private = run_inference(&ec, &weights, &sample.ids);
+    let ec = EngineConfig::new(EngineKind::CipherPrune)
+        .he_n(4096)
+        .schedule(schedule.clone());
+    let mut session = Session::start(model, ec);
+    println!(
+        "session setup {} ({} one-time traffic)",
+        fmt_duration(session.setup_wall_s()),
+        fmt_bytes(session.setup_stats().bytes as f64),
+    );
+
+    // 4. online: serve requests through the live session
+    let private = session.infer(&sample.ids);
     println!(
         "\n[private]   logits {:?}  pred {}  ({}, {} traffic)",
         private.logits,
@@ -37,9 +57,24 @@ fn main() {
     for (i, s) in private.layer_stats.iter().enumerate() {
         println!("  layer {i}: {} → {} tokens ({} high-degree)", s.n_in, s.n_kept, s.n_high);
     }
+    // further requests reuse the session — no keygen, no base OTs
+    for (i, s) in Workload::qnli_like(&cfg, 16).batch(2, 9).iter().enumerate() {
+        let r = session.infer(&s.ids);
+        println!(
+            "[request {}] pred {}  online {} ({} traffic)",
+            i + 2,
+            r.predicted(),
+            fmt_duration(r.wall_s),
+            fmt_bytes(r.total_stats().bytes as f64),
+        );
+    }
 
-    // 3. plaintext reference (same pruning semantics, f64)
-    let reference = forward(&weights, &sample.ids, &ForwardOptions::cipherprune(schedule, true));
+    // 5. plaintext reference (same pruning semantics, f64)
+    let reference = forward(
+        &session.model().weights,
+        &sample.ids,
+        &ForwardOptions::cipherprune(schedule, true),
+    );
     println!("[reference] logits {:?}  pred {}", reference.logits, reference.predicted());
     let max_err = private
         .logits
@@ -50,24 +85,28 @@ fn main() {
     println!("  max |Δ| vs reference: {max_err:.4} (fixed-point noise)");
     assert!(max_err < 0.3, "protocol must track the reference");
 
-    // 4. XLA oracle (Layer 1+2 lowered to HLO, executed via PJRT)
+    // 6. XLA oracle (Layer 1+2 lowered to HLO, executed via PJRT)
     let hlo = artifact("model.hlo.txt");
-    if hlo.exists() {
-        let meta = std::fs::read_to_string(artifact("meta.json")).unwrap();
-        let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
-        let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(16);
-        let n = seq.min(sample.ids.len());
-        let mut onehot = vec![0f32; seq * cfg.vocab];
-        for (i, &id) in sample.ids.iter().take(n).enumerate() {
-            onehot[i * cfg.vocab + id] = 1.0;
-        }
-        let mut rt = XlaRuntime::cpu().expect("PJRT");
-        let out = rt
-            .run_f32(&hlo, &[TensorF32::new(onehot, vec![seq as i64, cfg.vocab as i64])])
-            .expect("oracle");
-        println!("[xla oracle] logits {:?} (unpruned polynomial forward)", out[0].data);
-    } else {
+    if !hlo.exists() {
         println!("[xla oracle] skipped — run `make artifacts`");
+    } else {
+        match XlaRuntime::cpu() {
+            Ok(mut rt) => {
+                let meta = std::fs::read_to_string(artifact("meta.json")).unwrap();
+                let meta = cipherprune::util::json::Json::parse(&meta).unwrap();
+                let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(16);
+                let n = seq.min(sample.ids.len());
+                let mut onehot = vec![0f32; seq * cfg.vocab];
+                for (i, &id) in sample.ids.iter().take(n).enumerate() {
+                    onehot[i * cfg.vocab + id] = 1.0;
+                }
+                let out = rt
+                    .run_f32(&hlo, &[TensorF32::new(onehot, vec![seq as i64, cfg.vocab as i64])])
+                    .expect("oracle");
+                println!("[xla oracle] logits {:?} (unpruned polynomial forward)", out[0].data);
+            }
+            Err(e) => println!("[xla oracle] skipped — {e:#}"),
+        }
     }
     println!("\nquickstart OK");
 }

@@ -3,10 +3,17 @@
 //! cost dominates the unpruned engines; CipherPrune's progressive pruning
 //! flattens the curve.
 //!
+//! Each engine kind runs through ONE reusable [`Session`] for the whole
+//! sweep — the model is encoded once and keys/base OTs are set up once per
+//! engine, so the measured per-point cost is the online protocol only (the
+//! quantity the paper's figure compares).
+//!
 //!     cargo run --release --example scalability
 //!     SCALE_SEQS="16,32,64" cargo run --release --example scalability
 
-use cipherprune::coordinator::{run_inference, EngineConfig, EngineKind};
+use std::sync::Arc;
+
+use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
 use cipherprune::net::NetModel;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration, Table};
@@ -19,22 +26,31 @@ fn main() {
         .collect();
     let cfg = ModelConfig::tiny();
     let weights = ModelWeights::salient(&cfg, 42);
-
+    // offline: encode once, one session per compared engine
+    let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
     let engines = [EngineKind::BoltNoWe, EngineKind::Bolt, EngineKind::CipherPrune];
+    let mut sessions: Vec<Session> = engines
+        .iter()
+        .map(|&kind| {
+            // distinct seed per kind: independent sessions must not share
+            // dealer/OT randomness streams
+            let ec = EngineConfig::new(kind).he_n(2048).seed(0xC1F4E9 ^ kind.ordinal());
+            Session::start(model.clone(), ec)
+        })
+        .collect();
+
     let mut table = Table::new(
-        "runtime vs input length (tiny model, LAN-modeled)",
+        "online runtime vs input length (tiny model, LAN-modeled)",
         &["tokens", "engine", "compute", "traffic", "LAN total", "kept@last"],
     );
     for &seq in &seqs {
         let sample = &Workload::qnli_like(&cfg, seq).batch(1, 5)[0];
-        for kind in engines {
-            let mut ec = EngineConfig::new(kind, cfg.n_layers);
-            ec.he_n = 2048;
-            let r = run_inference(&ec, &weights, &sample.ids);
+        for session in sessions.iter_mut() {
+            let r = session.infer(&sample.ids);
             let t = r.total_stats();
             table.row(vec![
                 seq.to_string(),
-                kind.name().to_string(),
+                session.kind().name().to_string(),
                 fmt_duration(r.wall_s),
                 fmt_bytes(t.bytes as f64),
                 fmt_duration(r.wall_s + NetModel::LAN.time(&t)),

@@ -4,6 +4,13 @@
 //! per-request latency, throughput, accuracy vs ground truth, and the
 //! per-engine metrics registry.
 //!
+//! The router follows the prepare → session → infer lifecycle: it ring-encodes
+//! the model exactly once at construction ([`PreparedModel`]) and keeps a
+//! per-engine-kind cache of live two-party [`Session`]s, so every request
+//! after the first pays only the online protocol — no weight encoding, no
+//! HE keygen, no base OTs. The metrics report's `offline:` line shows how
+//! much setup was amortized.
+//!
 //!     cargo run --release --example serve_batch            # quick
 //!     SERVE_REQS=16 SERVE_SEQ=32 cargo run --release --example serve_batch
 

@@ -58,15 +58,13 @@ pub fn proxy_weights(cfg: &ModelConfig) -> ModelWeights {
 
 /// Engine config with bench defaults (learned thresholds when present).
 pub fn bench_engine(kind: EngineKind, cfg: &ModelConfig) -> EngineConfig {
-    let mut ec = EngineConfig::new(kind, cfg.n_layers);
-    ec.he_n = bench_he_n();
-    ec.iron_segments = 16;
-    if matches!(kind, EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly) {
+    let mut ec = EngineConfig::new(kind).he_n(bench_he_n()).iron_segments(16);
+    if kind.uses_schedule() {
         // learned thresholds only transfer to the architecture they were
         // trained for; proxies with other layer counts use the default ramp
         if let Some(s) = ThresholdSchedule::load(&artifact("thresholds.json")) {
             if s.theta.len() == cfg.n_layers {
-                ec.schedule = s;
+                ec = ec.schedule(s);
             }
         }
     }

@@ -244,7 +244,7 @@ fn fig12() {
             *b = b.max(th * 1.05);
         }
         let mut ec = bench_engine(EngineKind::CipherPrune, &pcfg);
-        ec.schedule = psched;
+        ec.schedule = Some(psched);
         let r = run_inference(
             &ec,
             &pw,

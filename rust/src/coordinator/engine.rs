@@ -1,13 +1,20 @@
-//! The private-inference engines: full Transformer forward passes assembled
-//! from the two-party protocols, one variant per compared system (Table 1).
+//! Engine configuration and the prepared-model layer of the inference
+//! lifecycle.
 //!
-//! Layer pipeline (Fig. 4): Π_MatMul embedding → per layer {Π_MatMul QKV,
-//! per-head Π_MatMul + Π_SoftMax attention, Π_MatMul output projection,
-//! residual, Π_LayerNorm, **Π_prune + Π_mask**, **Π_reduce**, Π_MatMul FFN
-//! with mixed-degree Π_GELU, residual, Π_LayerNorm} → mean-pool →
-//! classifier → open logits.
+//! The serving API has three levels (BOLT-style offline/online split):
 //!
-//! Engine differences:
+//! 1. [`PreparedModel`] — ring-encoded weights + fixed-point codec, built
+//!    **once per model** by [`PreparedModel::prepare`].
+//! 2. [`Session`](super::session::Session) — reusable two-party state for one
+//!    engine kind (HE keys, base OTs, triple machinery on persistent party
+//!    threads), built **once per kind** and serving many requests.
+//! 3. [`Session::infer`](super::session::Session::infer) — the online phase.
+//!
+//! [`run_inference`] is a thin one-shot shim over the three levels, kept for
+//! scripts and tests that run a single inference.
+//!
+//! Engine differences (Table 1) are pass data in
+//! [`PipelineSpec::for_kind`](super::pipeline::PipelineSpec::for_kind):
 //! - **IRON** — Π_LUT SoftMax/GELU (LUT precision), no pruning.
 //! - **BOLT w/o W.E.** — polynomial SoftMax (n=6 Taylor) + Eq. 8 GELU.
 //! - **BOLT** — ditto + one-time 50% word elimination via oblivious bitonic
@@ -17,30 +24,29 @@
 //! - **CipherPrune** — ditto + Π_reduce with β: reduced tokens get n=3
 //!   Taylor SoftMax rows and degree-2 GELU.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::baselines::bitonic::bitonic_sort_prune;
 use crate::fixed::{Fix, RingMat};
 use crate::gates::TripleMode;
-use crate::nn::{ModelWeights, ThresholdSchedule};
+use crate::nn::{ModelConfig, ModelWeights, ThresholdSchedule};
 use crate::party::run2_owned_sym;
-use crate::protocols::gelu::{pi_gelu_tokens, GeluKind};
-use crate::protocols::layernorm::pi_layernorm;
-use crate::protocols::lut::{exp_table_k, gelu_table_k, pi_pwl, pi_softmax_lut};
-use crate::protocols::matmul::{linear_layer, pi_matmul_shared};
-use crate::protocols::prune::pi_prune;
-use crate::protocols::reduce::pi_reduce;
-use crate::protocols::softmax::{importance_scores, pi_softmax};
 use crate::protocols::Engine2P;
 
+use super::pipeline::{run_pipeline, PipelineSpec, RunCtx};
 use super::types::{EngineKind, LayerStat, RunResult};
 
-/// Configuration of one engine instance.
+/// Configuration of one engine instance (builder-style).
+///
+/// ```text
+/// let cfg = EngineConfig::new(EngineKind::CipherPrune).he_n(4096).seed(7);
+/// ```
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub kind: EngineKind,
-    /// θ/β schedule (used by the CipherPrune kinds).
-    pub schedule: ThresholdSchedule,
+    /// Explicit θ/β schedule. `None` resolves per model at session start:
+    /// the default ramp for the CipherPrune kinds, disabled otherwise.
+    pub schedule: Option<ThresholdSchedule>,
     /// BFV ring degree (8192 for deployment parameters; tests use 128–256).
     pub he_n: usize,
     /// Beaver-triple generation mode.
@@ -54,16 +60,10 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
-    pub fn new(kind: EngineKind, n_layers: usize) -> Self {
-        let schedule = match kind {
-            EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly => {
-                ThresholdSchedule::default_for(n_layers)
-            }
-            _ => ThresholdSchedule::disabled(n_layers),
-        };
+    pub fn new(kind: EngineKind) -> Self {
         EngineConfig {
             kind,
-            schedule,
+            schedule: None,
             he_n: crate::he::params::N,
             triple_mode: TripleMode::Ot,
             seed: 0xC1F4E9,
@@ -72,19 +72,44 @@ impl EngineConfig {
     }
 
     /// Test-sized HE ring (fast; keeps all protocol structure).
-    pub fn for_tests(kind: EngineKind, n_layers: usize) -> Self {
-        EngineConfig { he_n: 128, ..Self::new(kind, n_layers) }
+    pub fn for_tests(kind: EngineKind) -> Self {
+        Self::new(kind).he_n(128)
     }
-}
 
-/// Column-range slice of a row-major share matrix (head extraction).
-fn cols(m: &RingMat, lo: usize, hi: usize) -> RingMat {
-    let w = hi - lo;
-    let mut out = RingMat::zeros(m.rows, w);
-    for r in 0..m.rows {
-        out.row_mut(r).copy_from_slice(&m.row(r)[lo..hi]);
+    pub fn he_n(mut self, he_n: usize) -> Self {
+        self.he_n = he_n;
+        self
     }
-    out
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn triple_mode(mut self, mode: TripleMode) -> Self {
+        self.triple_mode = mode;
+        self
+    }
+
+    pub fn iron_segments(mut self, segments: usize) -> Self {
+        self.iron_segments = segments;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: ThresholdSchedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// The θ/β schedule to run against a model with `n_layers` layers: the
+    /// explicit schedule fitted to the layer count, or the kind's default.
+    pub fn resolved_schedule(&self, n_layers: usize) -> ThresholdSchedule {
+        match &self.schedule {
+            Some(s) => s.clone().fit_layers(n_layers),
+            None if self.kind.uses_schedule() => ThresholdSchedule::default_for(n_layers),
+            None => ThresholdSchedule::disabled(n_layers),
+        }
+    }
 }
 
 /// Ring-encoded weights (server side), precomputed once per model.
@@ -149,33 +174,37 @@ impl RingWeights {
     }
 }
 
-/// Simple section clock for per-phase wall accounting (kept on P0 only).
-struct PhaseClock {
-    t: Instant,
-    acc: Vec<(String, f64)>,
-    active: bool,
+/// A model prepared for serving: float weights + their one-time ring
+/// encoding. Build once, share across sessions and requests.
+pub struct PreparedModel {
+    pub weights: Arc<ModelWeights>,
+    pub ring: RingWeights,
+    pub fix: Fix,
 }
 
-impl PhaseClock {
-    fn new(active: bool) -> Self {
-        PhaseClock { t: Instant::now(), acc: Vec::new(), active }
+impl PreparedModel {
+    pub fn prepare(weights: Arc<ModelWeights>) -> Self {
+        Self::prepare_with(weights, Fix::default())
     }
 
-    fn mark(&mut self, label: String) {
-        if self.active {
-            self.acc.push((label, self.t.elapsed().as_secs_f64()));
-        }
-        self.t = Instant::now();
+    pub fn prepare_with(weights: Arc<ModelWeights>, fix: Fix) -> Self {
+        let ring = RingWeights::encode(&weights, fix);
+        PreparedModel { weights, ring, fix }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.weights.config
     }
 }
 
-struct PartyOut {
-    logits: Vec<f64>,
-    layer_stats: Vec<LayerStat>,
-    phase_wall: Vec<(String, f64)>,
-}
-
-/// Run one private inference end-to-end (spawns both parties in-process).
+/// One-shot shim: encode, set up, infer, tear down — for scripts and tests
+/// that run a single inference. Borrows the weights (no `Arc`, no clone);
+/// serving paths should use [`PreparedModel`] + [`Session`](super::session::Session)
+/// instead so the encode/setup amortizes. `wall_s` covers setup + online (weight encoding
+/// excluded, as before), and `phases` includes the setup traffic.
+///
+/// This drives the same [`pipeline`](super::pipeline) as a session with the
+/// same seed, so a fresh session's first request reproduces it exactly.
 pub fn run_inference(
     cfg: &EngineConfig,
     weights: &ModelWeights,
@@ -186,10 +215,18 @@ pub fn run_inference(
     }
     let fix = Fix::default();
     let ring_w = RingWeights::encode(weights, fix);
+    let schedule = cfg.resolved_schedule(weights.config.n_layers);
     let t0 = Instant::now();
     let (p0, _p1, transcript) = run2_owned_sym(cfg.seed, |ctx| {
         let mut e = Engine2P::new(ctx, cfg.triple_mode, cfg.he_n, fix);
-        run_party(&mut e, cfg, weights, &ring_w, ids)
+        let spec = PipelineSpec::for_kind(cfg.kind, cfg);
+        let rc = RunCtx {
+            cfg,
+            mcfg: &weights.config,
+            ring_w: &ring_w,
+            schedule: &schedule,
+        };
+        run_pipeline(&mut e, &rc, &spec, ids)
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let phases: Vec<_> = {
@@ -197,18 +234,7 @@ pub fn run_inference(
         t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
     };
     let mut layer_stats = p0.layer_stats;
-    // harvest per-layer softmax/gelu traffic from the transcript labels
-    for (li, st) in layer_stats.iter_mut().enumerate() {
-        let sm = format!("softmax#{li}");
-        let ge = format!("gelu#{li}");
-        for (name, s) in &phases {
-            if *name == sm {
-                st.softmax_bytes = s.bytes;
-            } else if *name == ge {
-                st.gelu_bytes = s.bytes;
-            }
-        }
-    }
+    super::session::harvest_layer_traffic(&mut layer_stats, &phases);
     RunResult {
         logits: p0.logits,
         layer_stats,
@@ -218,7 +244,7 @@ pub fn run_inference(
     }
 }
 
-fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult {
+pub(crate) fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult {
     let t0 = Instant::now();
     let out = crate::nn::forward(weights, ids, &crate::nn::ForwardOptions::plain());
     RunResult {
@@ -239,217 +265,6 @@ fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult {
     }
 }
 
-/// The symmetric party program. `weights`/`ring_w` are touched only on P0;
-/// `ids` only on P1 (the harness hands both to both threads — the *channel*
-/// is the only communication path, so the security-relevant dataflow is
-/// exactly the protocols').
-fn run_party(
-    e: &mut Engine2P,
-    cfg: &EngineConfig,
-    weights: &ModelWeights,
-    ring_w: &RingWeights,
-    ids: &[usize],
-) -> PartyOut {
-    let mcfg = &weights.config;
-    let fix = e.fix;
-    let d = mcfg.dim;
-    let hd = mcfg.head_dim();
-    let heads = mcfg.heads;
-    let mut n = ids.len();
-    let mut clock = PhaseClock::new(e.is_p0());
-
-    // ---- embedding: one-hot(ids) · E  (Π_MatMul), then + positional ----
-    e.set_phase_ctx("");
-    e.phase("embed");
-    let onehot = {
-        let mut m = RingMat::zeros(n, mcfg.vocab);
-        if !e.is_p0() {
-            for (i, &id) in ids.iter().enumerate() {
-                *m.at_mut(i, id) = fix.enc(1.0);
-            }
-        }
-        m
-    };
-    let w_emb = if e.is_p0() { Some(&ring_w.emb) } else { None };
-    let mut x = linear_layer(e, &onehot, w_emb, None, d);
-    if e.is_p0() {
-        for i in 0..n {
-            for c in 0..d {
-                let v = x.at(i, c).wrapping_add(ring_w.pos.at(i, c));
-                *x.at_mut(i, c) = v;
-            }
-        }
-    }
-    clock.mark("embed".into());
-
-    let mut layer_stats: Vec<LayerStat> = Vec::with_capacity(mcfg.n_layers);
-    // public per-row reduction mask carried into the next layer's SoftMax
-    let mut row_high: Vec<bool> = vec![];
-
-    for li in 0..mcfg.n_layers {
-        e.set_phase_ctx(&format!("#{li}"));
-        let lw = ring_w.layers.get(li);
-        let mut st = LayerStat { n_in: n, n_kept: n, ..Default::default() };
-
-        // ---- QKV projections ----
-        e.phase("matmul");
-        let p0w = |f: fn(&RingLayer) -> &RingMat| lw.map(f);
-        let p0b = |f: fn(&RingLayer) -> &Vec<u64>| lw.map(|l| f(l).as_slice());
-        let q = linear_layer(e, &x, p0w(|l| &l.wq), p0b(|l| &l.bq), d);
-        let k = linear_layer(e, &x, p0w(|l| &l.wk), p0b(|l| &l.bk), d);
-        let v = linear_layer(e, &x, p0w(|l| &l.wv), p0b(|l| &l.bv), d);
-        clock.mark(format!("matmul#{li}"));
-
-        // ---- per-head attention ----
-        let inv_sqrt = fix.enc(1.0 / (hd as f64).sqrt());
-        let mut ctx_mat = RingMat::zeros(n, d);
-        let mut atts: Vec<RingMat> = Vec::with_capacity(heads);
-        for h in 0..heads {
-            let (lo, hi) = (h * hd, (h + 1) * hd);
-            let qh = cols(&q, lo, hi);
-            let kh = cols(&k, lo, hi);
-            let vh = cols(&v, lo, hi);
-            e.phase("matmul");
-            let prod = pi_matmul_shared(e, &qh, &kh.transpose()); // scale 2f
-            let logits_v =
-                e.mpc.scale_const_trunc(&prod.data, inv_sqrt, 2 * fix.frac_bits);
-            let mut logits = RingMat::from_vec(n, n, logits_v);
-            if mcfg.causal && e.is_p0() {
-                // public causal structure: mask j > i far below the clip
-                let neg = fix.enc(-30.0);
-                for i in 0..n {
-                    for j in i + 1..n {
-                        let nv = logits.at(i, j).wrapping_add(neg);
-                        *logits.at_mut(i, j) = nv;
-                    }
-                }
-            }
-            clock.mark(format!("matmul#{li}"));
-            let att = match cfg.kind {
-                EngineKind::Iron => {
-                    let t = exp_table_k(cfg.iron_segments);
-                    pi_softmax_lut(e, &logits, &t)
-                }
-                _ => pi_softmax(e, &logits, &row_high),
-            };
-            clock.mark(format!("softmax#{li}"));
-            e.phase("matmul");
-            let ch = pi_matmul_shared(e, &att, &vh); // scale 2f
-            let ch_t = e.mpc.trunc_vec(&ch.data, fix.frac_bits);
-            for r in 0..n {
-                ctx_mat.row_mut(r)[lo..hi]
-                    .copy_from_slice(&ch_t[r * hd..(r + 1) * hd]);
-            }
-            clock.mark(format!("matmul#{li}"));
-            atts.push(att);
-        }
-
-        // ---- output projection + residual + LN1 ----
-        e.phase("matmul");
-        let attn_out = linear_layer(e, &ctx_mat, p0w(|l| &l.wo), p0b(|l| &l.bo), d);
-        let xr = x.add(&attn_out);
-        clock.mark(format!("matmul#{li}"));
-        let x_ln = pi_layernorm(
-            e,
-            &xr,
-            p0b(|l| &l.ln1_gamma).map(|g| g),
-            p0b(|l| &l.ln1_beta).map(|b| b),
-        );
-        clock.mark(format!("layernorm#{li}"));
-
-        // ---- encrypted token pruning ----
-        let tprune = Instant::now();
-        let (mut xp, pruned_scores) = match cfg.kind {
-            EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly => {
-                let theta = cfg.schedule.theta_abs(li, n);
-                let out = pi_prune(e, &atts, &x_ln, theta);
-                st.swaps = out.swaps;
-                st.n_kept = out.n_kept;
-                (out.tokens, Some(out.scores))
-            }
-            EngineKind::Bolt if li == 0 => {
-                // W.E.: sort all tokens by importance, keep the top half
-                e.phase("prune");
-                let scores = importance_scores(e, &atts);
-                let keep = n.div_ceil(2);
-                let out = bitonic_sort_prune(e, &x_ln, &scores, keep);
-                st.swaps = out.swaps;
-                st.n_kept = keep;
-                (out.tokens, Some(out.scores))
-            }
-            _ => (x_ln, None),
-        };
-        st.prune_wall_s = tprune.elapsed().as_secs_f64();
-        clock.mark(format!("prune#{li}"));
-        let n_kept = st.n_kept;
-
-        // ---- encrypted polynomial reduction ----
-        let high_mask: Vec<bool> = match (&cfg.kind, &pruned_scores) {
-            (EngineKind::CipherPrune, Some(scores)) => {
-                let beta = cfg.schedule.beta_abs(li, n);
-                pi_reduce(e, scores, beta)
-            }
-            _ => vec![true; n_kept],
-        };
-        st.n_high = high_mask.iter().filter(|&&b| b).count();
-        clock.mark(format!("reduce#{li}"));
-
-        // ---- FFN with mixed-degree GELU ----
-        e.phase("matmul");
-        let h1 = linear_layer(e, &xp, p0w(|l| &l.w_ff1), p0b(|l| &l.b_ff1), mcfg.ffn_dim);
-        clock.mark(format!("matmul#{li}"));
-        let h_act = match cfg.kind {
-            EngineKind::Iron => {
-                e.phase("gelu");
-                let out = pi_pwl(e, &h1.data, &gelu_table_k(cfg.iron_segments));
-                RingMat::from_vec(h1.rows, h1.cols, out)
-            }
-            EngineKind::BoltNoWe | EngineKind::Bolt => {
-                pi_gelu_tokens(e, &h1, &high_mask, GeluKind::Bolt)
-            }
-            _ => pi_gelu_tokens(e, &h1, &high_mask, GeluKind::High),
-        };
-        clock.mark(format!("gelu#{li}"));
-        e.phase("matmul");
-        let h2 = linear_layer(e, &h_act, p0w(|l| &l.w_ff2), p0b(|l| &l.b_ff2), d);
-        let xr2 = xp.add(&h2);
-        clock.mark(format!("matmul#{li}"));
-        xp = pi_layernorm(
-            e,
-            &xr2,
-            p0b(|l| &l.ln2_gamma).map(|g| g),
-            p0b(|l| &l.ln2_beta).map(|b| b),
-        );
-        clock.mark(format!("layernorm#{li}"));
-
-        x = xp;
-        n = n_kept;
-        row_high = high_mask;
-        layer_stats.push(st);
-    }
-
-    // ---- mean-pool + classifier + open ----
-    e.set_phase_ctx("");
-    e.phase("classify");
-    let mut pooled = vec![0u64; d];
-    for r in 0..n {
-        for (p, &v) in pooled.iter_mut().zip(x.row(r)) {
-            *p = p.wrapping_add(v);
-        }
-    }
-    let inv_n = fix.enc(1.0 / n as f64);
-    let pooled = e.mpc.scale_const_trunc(&pooled, inv_n, fix.frac_bits);
-    let pooled_m = RingMat::from_vec(1, d, pooled);
-    let w_cls = if e.is_p0() { Some(&ring_w.w_cls) } else { None };
-    let b_cls = if e.is_p0() { Some(ring_w.b_cls.as_slice()) } else { None };
-    let logits_share = linear_layer(e, &pooled_m, w_cls, b_cls, mcfg.n_classes);
-    let opened = e.mpc.open(&logits_share.data);
-    let logits: Vec<f64> = opened.iter().map(|&v| fix.dec(v)).collect();
-    clock.mark("classify".into());
-
-    PartyOut { logits, layer_stats, phase_wall: clock.acc }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,7 +282,7 @@ mod tests {
     /// the contract).
     fn assert_close_to_ref(kind: EngineKind, opts: ForwardOptions, tol: f64) {
         let (w, ids) = tiny_setup();
-        let cfg = EngineConfig::for_tests(kind, w.config.n_layers);
+        let cfg = EngineConfig::for_tests(kind);
         let got = run_inference(&cfg, &w, &ids);
         let want = crate::nn::forward(&w, &ids, &opts);
         assert_eq!(got.logits.len(), want.logits.len());
@@ -499,8 +314,7 @@ mod tests {
     #[test]
     fn cipherprune_matches_reference() {
         let sched = ThresholdSchedule::default_for(2);
-        let mut cfg = EngineConfig::for_tests(EngineKind::CipherPrune, 2);
-        cfg.schedule = sched.clone();
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune).schedule(sched.clone());
         let (w, ids) = tiny_setup();
         let got = run_inference(&cfg, &w, &ids);
         let want = crate::nn::forward(&w, &ids, &ForwardOptions::cipherprune(sched, true));
@@ -521,7 +335,7 @@ mod tests {
     #[test]
     fn plaintext_engine_is_reference() {
         let (w, ids) = tiny_setup();
-        let cfg = EngineConfig::for_tests(EngineKind::Plaintext, 2);
+        let cfg = EngineConfig::for_tests(EngineKind::Plaintext);
         let got = run_inference(&cfg, &w, &ids);
         let want = crate::nn::forward(&w, &ids, &ForwardOptions::plain());
         assert_eq!(got.logits, want.logits);
@@ -530,7 +344,7 @@ mod tests {
     #[test]
     fn cipherprune_produces_layer_phases() {
         let (w, ids) = tiny_setup();
-        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune, 2);
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune);
         let got = run_inference(&cfg, &w, &ids);
         assert!(got.stats_by_prefix("softmax#0").bytes > 0);
         assert!(got.stats_by_prefix("softmax#1").bytes > 0);
@@ -545,21 +359,27 @@ mod tests {
     #[test]
     fn pruning_reduces_downstream_traffic() {
         let (w, ids) = tiny_setup();
-        let none = run_inference(
-            &EngineConfig::for_tests(EngineKind::BoltNoWe, 2),
-            &w,
-            &ids,
-        );
-        let pruned = run_inference(
-            &EngineConfig::for_tests(EngineKind::CipherPrune, 2),
-            &w,
-            &ids,
-        );
+        let none = run_inference(&EngineConfig::for_tests(EngineKind::BoltNoWe), &w, &ids);
+        let pruned =
+            run_inference(&EngineConfig::for_tests(EngineKind::CipherPrune), &w, &ids);
         // CipherPrune must prune something on this workload…
         assert!(pruned.layer_stats[0].n_kept < pruned.layer_stats[0].n_in);
         // …and its layer-1 softmax traffic must be below the unpruned engine's
         let a = pruned.layer_stats[1].softmax_bytes;
         let b = none.layer_stats[1].softmax_bytes;
         assert!(a < b, "pruned softmax#1 {a} !< unpruned {b}");
+    }
+
+    #[test]
+    fn schedule_resolution_follows_kind() {
+        let cp = EngineConfig::new(EngineKind::CipherPrune).resolved_schedule(3);
+        assert_eq!(cp.theta.len(), 3);
+        assert!(cp.theta.iter().any(|&t| t >= 0.0), "default ramp enabled");
+        let bolt = EngineConfig::new(EngineKind::Bolt).resolved_schedule(3);
+        assert!(bolt.theta.iter().all(|&t| t < 0.0), "disabled sentinel");
+        let explicit = EngineConfig::new(EngineKind::CipherPrune)
+            .schedule(ThresholdSchedule { theta: vec![0.1], beta: vec![0.2] })
+            .resolved_schedule(4);
+        assert_eq!(explicit.theta.len(), 4, "fitted to the model");
     }
 }

@@ -67,6 +67,12 @@ impl EngineMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct MetricsRegistry {
     pub engines: BTreeMap<String, EngineMetrics>,
+    /// One-time model preparations (RingWeights encodings) performed by the
+    /// serving stack. A healthy server encodes each model exactly once.
+    pub model_preps: u64,
+    /// Two-party session setups (HE keygen + base OTs). Bounded by
+    /// engine kinds × worker slots, not by request count.
+    pub session_setups: u64,
 }
 
 impl MetricsRegistry {
@@ -81,6 +87,12 @@ impl MetricsRegistry {
     /// Render a compact text report.
     pub fn report(&self) -> String {
         let mut out = String::new();
+        if self.model_preps > 0 || self.session_setups > 0 {
+            out.push_str(&format!(
+                "offline: model preps={} session setups={}\n",
+                self.model_preps, self.session_setups,
+            ));
+        }
         for (name, m) in &self.engines {
             out.push_str(&format!(
                 "{name}: runs={} mean={:.3}s p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",

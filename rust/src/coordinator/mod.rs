@@ -1,20 +1,48 @@
-//! Layer-3 serving coordinator: request routing, dynamic batching, engine
-//! dispatch, threshold schedules, and metrics.
+//! Layer-3 serving coordinator: request routing, dynamic batching, reusable
+//! inference sessions, threshold schedules, and metrics.
 //!
-//! The paper's system contribution is the protocol stack; the coordinator is
-//! the deployment shell around it — a leader loop that admits requests,
-//! buckets them by length (private-inference cost is quadratic in padded
-//! length), dispatches batches to engine workers, and aggregates per-protocol
-//! metrics. `rust/src/main.rs` exposes it as the `serve` subcommand.
+//! # Session lifecycle
+//!
+//! The API splits one private inference into three levels so that per-request
+//! cost is only the online protocol (the paper's offline/online split, scaled
+//! to a serving loop):
+//!
+//! 1. **[`PreparedModel::prepare`]** — once per model. Ring-encodes the float
+//!    weights into fixed point ([`RingWeights`]).
+//! 2. **[`Session::start`]** — once per engine kind (per worker slot).
+//!    Spawns a persistent P0/P1 thread pair over the byte-counted channel and
+//!    runs the expensive two-party setup: HE keygen, base OTs, the Beaver
+//!    triple machinery.
+//! 3. **[`Session::infer`]** — per request. Runs only the online layer-pass
+//!    pipeline; its `RunResult` carries this request's traffic and wall time.
+//!
+//! ```text
+//! let model = Arc::new(PreparedModel::prepare(weights));      // offline, once
+//! let mut s = Session::start(model, EngineConfig::new(kind)); // offline, once
+//! let r1 = s.infer(&ids_a);                                   // online
+//! let r2 = s.infer(&ids_b);                                   // online
+//! ```
+//!
+//! [`run_inference`] is a one-shot shim over the same path; [`Router`] holds
+//! one [`PreparedModel`] plus a per-kind [`Session`] cache and drives the
+//! length-bucketed [`Batcher`] (private-inference cost is quadratic in padded
+//! length). The per-party program itself is a composable [`pipeline`] of
+//! layer passes selected per engine kind — see
+//! [`PipelineSpec::for_kind`](pipeline::PipelineSpec::for_kind).
+//! `rust/src/main.rs` exposes the stack as the `run`/`serve` subcommands.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pipeline;
 pub mod router;
+pub mod session;
 pub mod types;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use engine::{run_inference, EngineConfig, RingWeights};
+pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;
+pub use pipeline::PipelineSpec;
 pub use router::{Router, RouterConfig};
+pub use session::Session;
 pub use types::{EngineKind, InferenceRequest, LayerStat, RunResult};

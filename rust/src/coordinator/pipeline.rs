@@ -1,0 +1,573 @@
+//! Composable layer-pass pipeline: the per-party program of one private
+//! inference, decomposed into passes (Fig. 4).
+//!
+//! The five engine variants of the paper's comparison set differ only in
+//! *data*: which SoftMax/GELU protocol they run, whether and how they prune,
+//! and whether reduced tokens take the degree-2 path. [`PipelineSpec::for_kind`]
+//! expresses each variant as a pass list plus non-linear selectors, so the
+//! layer loop in [`run_pipeline`] is variant-agnostic — adding a sixth engine
+//! means returning a new spec, not editing the loop.
+//!
+//! Pass order per layer: [`AttentionPass`] (QKV, per-head SoftMax attention,
+//! output projection, residual, LN1) → [`PrunePass`] (Π_prune/Π_mask or
+//! BOLT's one-time bitonic word elimination) → [`ReducePass`] (Π_reduce β
+//! mask) → [`FfnPass`] (FFN with mixed-degree Π_GELU, residual, LN2).
+//! [`EmbedPass`] and [`ClassifierPass`] bracket the loop.
+
+use std::time::Instant;
+
+use crate::baselines::bitonic::bitonic_sort_prune;
+use crate::fixed::RingMat;
+use crate::nn::{ModelConfig, ThresholdSchedule};
+use crate::protocols::gelu::{pi_gelu_tokens, GeluKind};
+use crate::protocols::layernorm::pi_layernorm;
+use crate::protocols::lut::{exp_table_k, gelu_table_k, pi_pwl, pi_softmax_lut};
+use crate::protocols::matmul::{linear_layer, pi_matmul_shared};
+use crate::protocols::prune::pi_prune;
+use crate::protocols::reduce::pi_reduce;
+use crate::protocols::softmax::{importance_scores, pi_softmax};
+use crate::protocols::Engine2P;
+
+use super::engine::{EngineConfig, RingLayer, RingWeights};
+use super::types::{EngineKind, LayerStat};
+
+/// Simple section clock for per-phase wall accounting (kept on P0 only).
+pub struct PhaseClock {
+    t: Instant,
+    acc: Vec<(String, f64)>,
+    active: bool,
+}
+
+impl PhaseClock {
+    pub fn new(active: bool) -> Self {
+        PhaseClock { t: Instant::now(), acc: Vec::new(), active }
+    }
+
+    pub fn mark(&mut self, label: String) {
+        if self.active {
+            self.acc.push((label, self.t.elapsed().as_secs_f64()));
+        }
+        self.t = Instant::now();
+    }
+
+    fn into_acc(self) -> Vec<(String, f64)> {
+        self.acc
+    }
+}
+
+/// What one party returns from a pipeline run.
+pub struct PartyOut {
+    pub logits: Vec<f64>,
+    pub layer_stats: Vec<LayerStat>,
+    pub phase_wall: Vec<(String, f64)>,
+}
+
+/// Immutable per-run context handed to every pass. `ring_w` is touched only
+/// on P0; the harness hands it to both threads — the *channel* is the only
+/// communication path, so the security-relevant dataflow is exactly the
+/// protocols'.
+pub struct RunCtx<'a> {
+    pub cfg: &'a EngineConfig,
+    pub mcfg: &'a ModelConfig,
+    pub ring_w: &'a RingWeights,
+    /// θ/β schedule resolved against the model's layer count.
+    pub schedule: &'a ThresholdSchedule,
+}
+
+/// Mutable state threaded through the layer passes.
+pub struct LayerState {
+    /// Current layer index.
+    pub li: usize,
+    /// Token count *entering* this layer (updated to `stat.n_kept` between
+    /// layers by the driver, never mid-layer — β thresholds are relative to
+    /// the layer-input count).
+    pub n: usize,
+    /// Current token representations (share), `stat.n_kept` rows after
+    /// pruning.
+    pub x: RingMat,
+    /// Per-head attention maps from [`AttentionPass`] (consumed by pruning).
+    pub atts: Vec<RingMat>,
+    /// Importance scores of the kept tokens, when a prune pass produced them.
+    pub scores: Option<Vec<u64>>,
+    /// Public per-row reduction mask carried in from the *previous* layer's
+    /// [`ReducePass`] (selects SoftMax Taylor degree).
+    pub row_high: Vec<bool>,
+    /// This layer's reduction mask (length `stat.n_kept`).
+    pub high_mask: Vec<bool>,
+    /// Decision statistics being accumulated for this layer.
+    pub stat: LayerStat,
+    /// Wall clock for per-phase accounting.
+    pub clock: PhaseClock,
+}
+
+/// One composable step of the per-layer loop.
+pub trait LayerPass: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState);
+}
+
+/// SoftMax protocol selector.
+#[derive(Clone, Copy, Debug)]
+pub enum SoftmaxSel {
+    /// Π_LUT piecewise-linear exp (IRON).
+    Lut { segments: usize },
+    /// Polynomial SoftMax with per-row degree reduction (BOLT/CipherPrune).
+    Poly,
+}
+
+/// GELU protocol selector.
+#[derive(Clone, Copy, Debug)]
+pub enum GeluSel {
+    /// Π_LUT piecewise-linear GELU (IRON).
+    Lut { segments: usize },
+    /// Token-wise Π_GELU: `kind` on high rows, degree-2 on reduced rows.
+    Tokens(GeluKind),
+}
+
+/// Pruning strategy selector.
+#[derive(Clone, Copy, Debug)]
+pub enum PruneSel {
+    /// No pruning.
+    None,
+    /// BOLT word elimination: one-time 50% cut by oblivious bitonic sort.
+    WordElim { at_layer: usize },
+    /// CipherPrune progressive Π_prune/Π_mask with the learned θ schedule.
+    Progressive,
+}
+
+/// Polynomial-reduction selector.
+#[derive(Clone, Copy, Debug)]
+pub enum ReduceSel {
+    /// Every kept token stays on the high-degree path.
+    None,
+    /// Π_reduce with the β schedule (CipherPrune).
+    Beta,
+}
+
+/// Embedding: one-hot(ids) · E (Π_MatMul), then + positional.
+pub struct EmbedPass;
+
+impl EmbedPass {
+    pub fn run(
+        &self,
+        e: &mut Engine2P,
+        rc: &RunCtx<'_>,
+        ids: &[usize],
+        clock: &mut PhaseClock,
+    ) -> RingMat {
+        let fix = e.fix;
+        let (n, d) = (ids.len(), rc.mcfg.dim);
+        e.set_phase_ctx("");
+        e.phase("embed");
+        let onehot = {
+            let mut m = RingMat::zeros(n, rc.mcfg.vocab);
+            if !e.is_p0() {
+                for (i, &id) in ids.iter().enumerate() {
+                    *m.at_mut(i, id) = fix.enc(1.0);
+                }
+            }
+            m
+        };
+        let w_emb = if e.is_p0() { Some(&rc.ring_w.emb) } else { None };
+        let mut x = linear_layer(e, &onehot, w_emb, None, d);
+        if e.is_p0() {
+            for i in 0..n {
+                for c in 0..d {
+                    let v = x.at(i, c).wrapping_add(rc.ring_w.pos.at(i, c));
+                    *x.at_mut(i, c) = v;
+                }
+            }
+        }
+        clock.mark("embed".into());
+        x
+    }
+}
+
+/// P0's ring weights for layer `li` (both parties call; P1 passes the same
+/// references, which the matmul protocol ignores off-P0).
+fn layer_w<'a>(rc: &RunCtx<'a>, li: usize) -> Option<&'a RingLayer> {
+    rc.ring_w.layers.get(li)
+}
+
+/// Select one weight matrix from P0's layer weights.
+fn p0w(lw: Option<&RingLayer>, f: fn(&RingLayer) -> &RingMat) -> Option<&RingMat> {
+    lw.map(f)
+}
+
+/// Select one bias/affine vector from P0's layer weights.
+fn p0b(lw: Option<&RingLayer>, f: fn(&RingLayer) -> &Vec<u64>) -> Option<&[u64]> {
+    lw.map(|l| f(l).as_slice())
+}
+
+/// QKV projections, per-head SoftMax attention, output projection, residual,
+/// LN1. Leaves post-LN1 tokens in `st.x` and attention maps in `st.atts`.
+pub struct AttentionPass {
+    pub softmax: SoftmaxSel,
+}
+
+impl LayerPass for AttentionPass {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
+        let fix = e.fix;
+        let mcfg = rc.mcfg;
+        let (d, hd, heads) = (mcfg.dim, mcfg.head_dim(), mcfg.heads);
+        let (li, n) = (st.li, st.n);
+        let lw = layer_w(rc, li);
+
+        // ---- QKV projections ----
+        e.phase("matmul");
+        let q = linear_layer(e, &st.x, p0w(lw, |l| &l.wq), p0b(lw, |l| &l.bq), d);
+        let k = linear_layer(e, &st.x, p0w(lw, |l| &l.wk), p0b(lw, |l| &l.bk), d);
+        let v = linear_layer(e, &st.x, p0w(lw, |l| &l.wv), p0b(lw, |l| &l.bv), d);
+        st.clock.mark(format!("matmul#{li}"));
+
+        // ---- per-head attention ----
+        let inv_sqrt = fix.enc(1.0 / (hd as f64).sqrt());
+        let mut ctx_mat = RingMat::zeros(n, d);
+        let mut atts: Vec<RingMat> = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let (lo, hi) = (h * hd, (h + 1) * hd);
+            let qh = q.col_range(lo, hi);
+            let kh = k.col_range(lo, hi);
+            let vh = v.col_range(lo, hi);
+            e.phase("matmul");
+            let prod = pi_matmul_shared(e, &qh, &kh.transpose()); // scale 2f
+            let logits_v =
+                e.mpc.scale_const_trunc(&prod.data, inv_sqrt, 2 * fix.frac_bits);
+            let mut logits = RingMat::from_vec(n, n, logits_v);
+            if mcfg.causal && e.is_p0() {
+                // public causal structure: mask j > i far below the clip
+                let neg = fix.enc(-30.0);
+                for i in 0..n {
+                    for j in i + 1..n {
+                        let nv = logits.at(i, j).wrapping_add(neg);
+                        *logits.at_mut(i, j) = nv;
+                    }
+                }
+            }
+            st.clock.mark(format!("matmul#{li}"));
+            let att = match self.softmax {
+                SoftmaxSel::Lut { segments } => {
+                    let t = exp_table_k(segments);
+                    pi_softmax_lut(e, &logits, &t)
+                }
+                SoftmaxSel::Poly => pi_softmax(e, &logits, &st.row_high),
+            };
+            st.clock.mark(format!("softmax#{li}"));
+            e.phase("matmul");
+            let ch = pi_matmul_shared(e, &att, &vh); // scale 2f
+            let ch_t = e.mpc.trunc_vec(&ch.data, fix.frac_bits);
+            for r in 0..n {
+                ctx_mat.row_mut(r)[lo..hi]
+                    .copy_from_slice(&ch_t[r * hd..(r + 1) * hd]);
+            }
+            st.clock.mark(format!("matmul#{li}"));
+            atts.push(att);
+        }
+
+        // ---- output projection + residual + LN1 ----
+        e.phase("matmul");
+        let attn_out = linear_layer(e, &ctx_mat, p0w(lw, |l| &l.wo), p0b(lw, |l| &l.bo), d);
+        let xr = st.x.add(&attn_out);
+        st.clock.mark(format!("matmul#{li}"));
+        st.x = pi_layernorm(e, &xr, p0b(lw, |l| &l.ln1_gamma), p0b(lw, |l| &l.ln1_beta));
+        st.clock.mark(format!("layernorm#{li}"));
+        st.atts = atts;
+    }
+}
+
+/// Encrypted token pruning (Π_prune/Π_mask, or BOLT's bitonic W.E.).
+pub struct PrunePass {
+    pub sel: PruneSel,
+}
+
+impl LayerPass for PrunePass {
+    fn name(&self) -> &'static str {
+        "prune"
+    }
+
+    fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
+        let (li, n) = (st.li, st.n);
+        let tprune = Instant::now();
+        match self.sel {
+            PruneSel::Progressive => {
+                let theta = rc.schedule.theta_abs(li, n);
+                let out = pi_prune(e, &st.atts, &st.x, theta);
+                st.stat.swaps = out.swaps;
+                st.stat.n_kept = out.n_kept;
+                st.x = out.tokens;
+                st.scores = Some(out.scores);
+            }
+            PruneSel::WordElim { at_layer } if li == at_layer => {
+                // W.E.: sort all tokens by importance, keep the top half
+                e.phase("prune");
+                let scores = importance_scores(e, &st.atts);
+                let keep = n.div_ceil(2);
+                let out = bitonic_sort_prune(e, &st.x, &scores, keep);
+                st.stat.swaps = out.swaps;
+                st.stat.n_kept = keep;
+                st.x = out.tokens;
+                st.scores = Some(out.scores);
+            }
+            _ => {}
+        }
+        st.stat.prune_wall_s = tprune.elapsed().as_secs_f64();
+        st.clock.mark(format!("prune#{li}"));
+    }
+}
+
+/// Encrypted polynomial reduction: β mask over the kept tokens.
+pub struct ReducePass {
+    pub sel: ReduceSel,
+}
+
+impl LayerPass for ReducePass {
+    fn name(&self) -> &'static str {
+        "reduce"
+    }
+
+    fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
+        let (li, n_kept) = (st.li, st.stat.n_kept);
+        st.high_mask = match (self.sel, &st.scores) {
+            (ReduceSel::Beta, Some(scores)) => {
+                let beta = rc.schedule.beta_abs(li, st.n);
+                pi_reduce(e, scores, beta)
+            }
+            _ => vec![true; n_kept],
+        };
+        st.stat.n_high = st.high_mask.iter().filter(|&&b| b).count();
+        st.clock.mark(format!("reduce#{li}"));
+    }
+}
+
+/// FFN with mixed-degree GELU, residual, LN2.
+pub struct FfnPass {
+    pub gelu: GeluSel,
+}
+
+impl LayerPass for FfnPass {
+    fn name(&self) -> &'static str {
+        "ffn"
+    }
+
+    fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
+        let li = st.li;
+        let lw = layer_w(rc, li);
+        e.phase("matmul");
+        let h1 = linear_layer(
+            e,
+            &st.x,
+            p0w(lw, |l| &l.w_ff1),
+            p0b(lw, |l| &l.b_ff1),
+            rc.mcfg.ffn_dim,
+        );
+        st.clock.mark(format!("matmul#{li}"));
+        let h_act = match self.gelu {
+            GeluSel::Lut { segments } => {
+                e.phase("gelu");
+                let out = pi_pwl(e, &h1.data, &gelu_table_k(segments));
+                RingMat::from_vec(h1.rows, h1.cols, out)
+            }
+            GeluSel::Tokens(kind) => pi_gelu_tokens(e, &h1, &st.high_mask, kind),
+        };
+        st.clock.mark(format!("gelu#{li}"));
+        e.phase("matmul");
+        let h2 =
+            linear_layer(e, &h_act, p0w(lw, |l| &l.w_ff2), p0b(lw, |l| &l.b_ff2), rc.mcfg.dim);
+        let xr2 = st.x.add(&h2);
+        st.clock.mark(format!("matmul#{li}"));
+        st.x = pi_layernorm(e, &xr2, p0b(lw, |l| &l.ln2_gamma), p0b(lw, |l| &l.ln2_beta));
+        st.clock.mark(format!("layernorm#{li}"));
+    }
+}
+
+/// Mean-pool + classifier + open logits.
+pub struct ClassifierPass;
+
+impl ClassifierPass {
+    pub fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) -> Vec<f64> {
+        let fix = e.fix;
+        let (n, d) = (st.n, rc.mcfg.dim);
+        e.set_phase_ctx("");
+        e.phase("classify");
+        let mut pooled = vec![0u64; d];
+        for r in 0..n {
+            for (p, &v) in pooled.iter_mut().zip(st.x.row(r)) {
+                *p = p.wrapping_add(v);
+            }
+        }
+        let inv_n = fix.enc(1.0 / n as f64);
+        let pooled = e.mpc.scale_const_trunc(&pooled, inv_n, fix.frac_bits);
+        let pooled_m = RingMat::from_vec(1, d, pooled);
+        let w_cls = if e.is_p0() { Some(&rc.ring_w.w_cls) } else { None };
+        let b_cls = if e.is_p0() { Some(rc.ring_w.b_cls.as_slice()) } else { None };
+        let logits_share = linear_layer(e, &pooled_m, w_cls, b_cls, rc.mcfg.n_classes);
+        let opened = e.mpc.open(&logits_share.data);
+        let logits: Vec<f64> = opened.iter().map(|&v| fix.dec(v)).collect();
+        st.clock.mark("classify".into());
+        logits
+    }
+}
+
+/// An engine variant expressed as data: pass list + non-linear selectors.
+pub struct PipelineSpec {
+    pub embed: EmbedPass,
+    pub layer_passes: Vec<Box<dyn LayerPass>>,
+    pub classify: ClassifierPass,
+}
+
+impl PipelineSpec {
+    /// The paper's comparison set (Table 1) as pass data. A hypothetical
+    /// sixth variant is a new arm here — the layer loop never changes.
+    pub fn for_kind(kind: EngineKind, cfg: &EngineConfig) -> Self {
+        let lut = |k: usize| (SoftmaxSel::Lut { segments: k }, GeluSel::Lut { segments: k });
+        let (softmax, gelu, prune, reduce) = match kind {
+            EngineKind::Iron => {
+                let (s, g) = lut(cfg.iron_segments);
+                (s, g, PruneSel::None, ReduceSel::None)
+            }
+            EngineKind::BoltNoWe => (
+                SoftmaxSel::Poly,
+                GeluSel::Tokens(GeluKind::Bolt),
+                PruneSel::None,
+                ReduceSel::None,
+            ),
+            EngineKind::Bolt => (
+                SoftmaxSel::Poly,
+                GeluSel::Tokens(GeluKind::Bolt),
+                PruneSel::WordElim { at_layer: 0 },
+                ReduceSel::None,
+            ),
+            EngineKind::CipherPrunePruneOnly => (
+                SoftmaxSel::Poly,
+                GeluSel::Tokens(GeluKind::High),
+                PruneSel::Progressive,
+                ReduceSel::None,
+            ),
+            // Plaintext never reaches the two-party pipeline; give it the
+            // full CipherPrune spec so the mapping is total.
+            EngineKind::CipherPrune | EngineKind::Plaintext => (
+                SoftmaxSel::Poly,
+                GeluSel::Tokens(GeluKind::High),
+                PruneSel::Progressive,
+                ReduceSel::Beta,
+            ),
+        };
+        PipelineSpec {
+            embed: EmbedPass,
+            layer_passes: vec![
+                Box::new(AttentionPass { softmax }),
+                Box::new(PrunePass { sel: prune }),
+                Box::new(ReducePass { sel: reduce }),
+                Box::new(FfnPass { gelu }),
+            ],
+            classify: ClassifierPass,
+        }
+    }
+}
+
+/// Drive one party through the pipeline. Variant-agnostic: every per-kind
+/// decision lives in the `spec`.
+pub fn run_pipeline(
+    e: &mut Engine2P,
+    rc: &RunCtx<'_>,
+    spec: &PipelineSpec,
+    ids: &[usize],
+) -> PartyOut {
+    let mut clock = PhaseClock::new(e.is_p0());
+    let x = spec.embed.run(e, rc, ids, &mut clock);
+    let mut st = LayerState {
+        li: 0,
+        n: ids.len(),
+        x,
+        atts: Vec::new(),
+        scores: None,
+        row_high: Vec::new(),
+        high_mask: Vec::new(),
+        stat: LayerStat::default(),
+        clock,
+    };
+    let mut layer_stats: Vec<LayerStat> = Vec::with_capacity(rc.mcfg.n_layers);
+    for li in 0..rc.mcfg.n_layers {
+        e.set_phase_ctx(&format!("#{li}"));
+        st.li = li;
+        st.stat = LayerStat { n_in: st.n, n_kept: st.n, ..Default::default() };
+        st.atts.clear();
+        st.scores = None;
+        st.high_mask.clear();
+        for pass in &spec.layer_passes {
+            pass.run(e, rc, &mut st);
+        }
+        st.n = st.stat.n_kept;
+        st.row_high = std::mem::take(&mut st.high_mask);
+        layer_stats.push(st.stat.clone());
+    }
+    let logits = spec.classify.run(e, rc, &mut st);
+    PartyOut { logits, layer_stats, phase_wall: st.clock.into_acc() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::PreparedModel;
+    use crate::nn::{ModelConfig, ModelWeights, Workload};
+    use crate::party::run2_owned_sym;
+    use std::sync::Arc;
+
+    #[test]
+    fn every_kind_is_pipeline_data() {
+        for kind in EngineKind::private_engines() {
+            let cfg = EngineConfig::for_tests(kind);
+            let spec = PipelineSpec::for_kind(kind, &cfg);
+            let names: Vec<_> = spec.layer_passes.iter().map(|p| p.name()).collect();
+            assert_eq!(names, ["attention", "prune", "reduce", "ffn"], "{kind:?}");
+        }
+    }
+
+    /// A hypothetical sixth engine variant — LUT SoftMax with progressive
+    /// pruning — composes from existing passes without touching the layer
+    /// loop or any engine code.
+    #[test]
+    fn custom_spec_composes_without_engine_changes() {
+        let mcfg = ModelConfig::tiny();
+        let w = Arc::new(ModelWeights::salient(&mcfg, 42));
+        let ids = Workload::qnli_like(&mcfg, 8).batch(1, 17)[0].ids.clone();
+        let model = PreparedModel::prepare(w);
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let schedule = cfg.resolved_schedule(mcfg.n_layers);
+        let spec = PipelineSpec {
+            embed: EmbedPass,
+            layer_passes: vec![
+                Box::new(AttentionPass { softmax: SoftmaxSel::Lut { segments: 16 } }),
+                Box::new(PrunePass { sel: PruneSel::Progressive }),
+                Box::new(ReducePass { sel: ReduceSel::None }),
+                Box::new(FfnPass { gelu: GeluSel::Tokens(GeluKind::High) }),
+            ],
+            classify: ClassifierPass,
+        };
+        let (p0, _p1, _t) = run2_owned_sym(cfg.seed, |ctx| {
+            let mut e = crate::protocols::Engine2P::new(
+                ctx,
+                cfg.triple_mode,
+                cfg.he_n,
+                model.fix,
+            );
+            let rc = RunCtx {
+                cfg: &cfg,
+                mcfg: &model.weights.config,
+                ring_w: &model.ring,
+                schedule: &schedule,
+            };
+            run_pipeline(&mut e, &rc, &spec, &ids)
+        });
+        assert_eq!(p0.logits.len(), mcfg.n_classes);
+        assert_eq!(p0.layer_stats.len(), mcfg.n_layers);
+        // progressive pruning is active even under the LUT softmax
+        assert!(p0.layer_stats[0].n_kept <= p0.layer_stats[0].n_in);
+        // no reduce pass → every kept token stays high-degree
+        assert_eq!(p0.layer_stats[0].n_high, p0.layer_stats[0].n_kept);
+    }
+}

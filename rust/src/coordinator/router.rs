@@ -1,23 +1,32 @@
 //! Request router: admits requests, drives the length-bucketed batcher, pads
-//! each batch to its bucket, executes batch members on parallel engine
-//! workers (each private inference is its own P0/P1 thread pair), and
-//! records metrics.
+//! each batch to its bucket, executes batch members on cached per-kind
+//! [`Session`]s (each session is a persistent P0/P1 thread pair), and records
+//! metrics.
+//!
+//! Offline work is amortized across the router's lifetime: the model is
+//! ring-encoded exactly once ([`PreparedModel`], at construction) and each
+//! engine kind's two-party setup runs once per worker slot, so repeated
+//! requests pay only the online protocol.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::nn::{workload::PAD_ID, ModelWeights, ThresholdSchedule};
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
-use super::engine::{run_inference, EngineConfig};
+use super::engine::{EngineConfig, PreparedModel};
 use super::metrics::MetricsRegistry;
+use super::session::Session;
 use super::types::{EngineKind, InferenceRequest, RunResult};
 
 /// Router configuration.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
     pub policy: BatchPolicy,
-    /// Max concurrent engine executions within a batch.
+    /// Max concurrent engine executions within a batch. The budget is split
+    /// across the engine kinds present in the batch; a batch with more kinds
+    /// than workers runs one slot per kind. Also bounds cached sessions.
     pub workers: usize,
     /// BFV ring degree handed to engines.
     pub he_n: usize,
@@ -47,29 +56,49 @@ pub struct Response {
     pub latency_s: f64,
 }
 
-/// The leader: owns the batcher, model weights, and metrics.
+/// The leader: owns the batcher, the prepared model, the per-kind session
+/// cache, and metrics.
 pub struct Router {
-    weights: Arc<ModelWeights>,
+    model: Arc<PreparedModel>,
     cfg: RouterConfig,
     batcher: Batcher,
     pub metrics: MetricsRegistry,
     submitted: Vec<(u64, Instant)>,
+    /// engine kind → up to `workers` live sessions, reused across batches.
+    sessions: HashMap<EngineKind, Vec<Session>>,
 }
 
 impl Router {
     pub fn new(weights: Arc<ModelWeights>, cfg: RouterConfig) -> Self {
         let batcher = Batcher::new(cfg.policy);
-        Router { weights, cfg, batcher, metrics: MetricsRegistry::default(), submitted: Vec::new() }
+        let mut metrics = MetricsRegistry::default();
+        let model = Arc::new(PreparedModel::prepare(weights));
+        metrics.model_preps += 1;
+        Router {
+            model,
+            cfg,
+            batcher,
+            metrics,
+            submitted: Vec::new(),
+            sessions: HashMap::new(),
+        }
+    }
+
+    /// The once-encoded model this router serves.
+    pub fn model(&self) -> &PreparedModel {
+        &self.model
+    }
+
+    /// Live cached sessions for a kind.
+    pub fn cached_sessions(&self, kind: EngineKind) -> usize {
+        self.sessions.get(&kind).map(Vec::len).unwrap_or(0)
     }
 
     fn engine_config(&self, kind: EngineKind, seed: u64) -> EngineConfig {
-        let n_layers = self.weights.config.n_layers;
-        let mut ec = EngineConfig::new(kind, n_layers);
-        ec.he_n = self.cfg.he_n;
-        ec.seed = seed;
+        let mut ec = EngineConfig::new(kind).he_n(self.cfg.he_n).seed(seed);
         if let Some(s) = &self.cfg.schedule {
-            if matches!(kind, EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly) {
-                ec.schedule = s.clone().fit_layers(n_layers);
+            if kind.uses_schedule() {
+                ec = ec.schedule(s.clone());
             }
         }
         ec
@@ -86,7 +115,6 @@ impl Router {
 
     fn run_batch(&mut self, batch: Batch) -> Vec<Response> {
         let bucket = batch.bucket;
-        let weights = self.weights.clone();
         let workers = self.cfg.workers.max(1);
         // pad all requests to the bucket length
         let jobs: Vec<(u64, EngineKind, Vec<usize>)> = batch
@@ -97,36 +125,79 @@ impl Router {
                 (r.id, r.engine, r.ids)
             })
             .collect();
-        let cfgs: Vec<EngineConfig> = jobs
-            .iter()
-            .map(|(id, kind, _)| self.engine_config(*kind, 0xBA7C * (*id + 1)))
-            .collect();
-        // execute with bounded parallelism
-        let results: Vec<(u64, EngineKind, RunResult)> = std::thread::scope(|s| {
-            let mut out = Vec::with_capacity(jobs.len());
-            for base in (0..jobs.len()).step_by(workers) {
-                let end = (base + workers).min(jobs.len());
-                let handles: Vec<_> = (base..end)
-                    .map(|i| {
-                        let weights = weights.clone();
-                        let job = &jobs[i];
-                        let cfg = &cfgs[i];
-                        s.spawn(move || {
-                            let r = run_inference(cfg, &weights, &job.2);
-                            (job.0, job.1, r)
-                        })
-                    })
-                    .collect();
-                for h in handles {
-                    out.push(h.join().expect("engine worker panicked"));
+        // group job indices by engine kind
+        let mut groups: HashMap<EngineKind, Vec<usize>> = HashMap::new();
+        for (i, (_, kind, _)) in jobs.iter().enumerate() {
+            groups.entry(*kind).or_default().push(i);
+        }
+        // split the worker budget across the kinds in this batch (larger
+        // groups get the remainder) so total concurrency stays ≤ `workers`;
+        // every kind needs at least one slot to make progress, so a batch
+        // with more kinds than workers degrades to one slot per kind
+        let n_kinds = groups.len().max(1);
+        let base = workers / n_kinds;
+        let mut extra = workers % n_kinds;
+        let mut order: Vec<EngineKind> = groups.keys().copied().collect();
+        order.sort_by_key(|k| std::cmp::Reverse(groups[k].len()));
+        let mut alloc: HashMap<EngineKind, usize> = HashMap::new();
+        for kind in order {
+            let bonus = if extra > 0 {
+                extra -= 1;
+                1
+            } else {
+                0
+            };
+            let slots = (base + bonus).max(1).min(groups[&kind].len());
+            alloc.insert(kind, slots);
+        }
+        // grow each kind's session pool to its allocation (setup runs once
+        // per slot, then the sessions persist across batches)
+        for (kind, &want) in &alloc {
+            let ec0 = self.engine_config(*kind, 0);
+            let pool = self.sessions.entry(*kind).or_default();
+            while pool.len() < want {
+                // distinct per kind AND per slot: concurrent sessions must
+                // not share dealer/OT randomness streams
+                let seed = (0xBA7C_u64 ^ (kind.ordinal() << 16))
+                    .wrapping_mul(pool.len() as u64 + 1);
+                let ec = EngineConfig { seed, ..ec0.clone() };
+                pool.push(Session::start(self.model.clone(), ec));
+                self.metrics.session_setups += 1;
+            }
+        }
+        // execute: each session slot serves its stride of its kind's jobs
+        let jobs_ref = &jobs;
+        let slot_results: Vec<Vec<(usize, RunResult)>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (kind, pool) in self.sessions.iter_mut() {
+                let Some(idxs) = groups.get(kind) else { continue };
+                let n_slots = alloc[kind].min(pool.len()).max(1);
+                for (slot, sess) in pool.iter_mut().take(n_slots).enumerate() {
+                    let mine: Vec<usize> =
+                        idxs.iter().copied().skip(slot).step_by(n_slots).collect();
+                    handles.push(s.spawn(move || {
+                        mine.into_iter()
+                            .map(|i| (i, sess.infer(&jobs_ref[i].2)))
+                            .collect::<Vec<_>>()
+                    }));
                 }
             }
-            out
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("engine session panicked"))
+                .collect()
         });
+        let mut results: Vec<Option<RunResult>> = jobs.iter().map(|_| None).collect();
+        for slot in slot_results {
+            for (i, r) in slot {
+                results[i] = Some(r);
+            }
+        }
         let now = Instant::now();
-        results
-            .into_iter()
-            .map(|(id, kind, result)| {
+        jobs.into_iter()
+            .zip(results)
+            .map(|((id, kind, _), result)| {
+                let result = result.expect("every job executed");
                 self.metrics.record(kind.name(), &result);
                 let latency_s = self
                     .submitted
@@ -221,6 +292,10 @@ mod tests {
         }
         let m = r.metrics.get("cipherprune").unwrap();
         assert_eq!(m.runs, 3);
+        // 3 requests, 1 model prep, ≤ workers session setups
+        assert_eq!(r.metrics.model_preps, 1);
+        assert!(r.metrics.session_setups <= 2);
+        assert_eq!(r.cached_sessions(EngineKind::CipherPrune) as u64, r.metrics.session_setups);
     }
 
     #[test]
@@ -247,5 +322,8 @@ mod tests {
         assert_eq!(resp.len(), 4);
         assert_eq!(r.metrics.get("cipherprune").unwrap().runs, 2);
         assert_eq!(r.metrics.get("bolt-no-we").unwrap().runs, 2);
+        // separate kinds keep separate session pools
+        assert!(r.cached_sessions(EngineKind::CipherPrune) >= 1);
+        assert!(r.cached_sessions(EngineKind::BoltNoWe) >= 1);
     }
 }

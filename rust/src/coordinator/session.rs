@@ -1,0 +1,260 @@
+//! Reusable two-party inference sessions.
+//!
+//! A [`Session`] pins the per-engine-kind state that is expensive to build —
+//! the `Engine2P` endpoints (HE keypairs, base OTs, triple machinery) on two
+//! persistent party threads connected by the byte-counted channel — and
+//! serves many requests through it. [`Session::infer`] runs the *online*
+//! phase only; weight encoding lives one level up in
+//! [`PreparedModel`](super::engine::PreparedModel), built once per model.
+//!
+//! Per-request traffic is the transcript delta since the previous request, so
+//! [`RunResult::phases`] keeps the same per-protocol labels as the one-shot
+//! path while the one-time setup traffic is reported separately via
+//! [`Session::setup_stats`].
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::net::{Chan, PhaseStats, SharedTranscript};
+use crate::party::{PartyCtx, PartyId};
+use crate::protocols::Engine2P;
+
+use super::engine::{run_plaintext, EngineConfig, PreparedModel};
+use super::pipeline::{run_pipeline, PartyOut, PipelineSpec, RunCtx};
+use super::types::{EngineKind, LayerStat, RunResult};
+
+fn spawn_party(
+    id: PartyId,
+    ch: Chan,
+    cfg: EngineConfig,
+    model: Arc<PreparedModel>,
+    job_rx: Receiver<Vec<usize>>,
+    out_tx: Sender<PartyOut>,
+    ready_tx: Sender<()>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // One-time setup: HE keygen + base OTs (communicates with the peer).
+        let ctx = PartyCtx::new(id, ch, cfg.seed);
+        let mut e = Engine2P::new(ctx, cfg.triple_mode, cfg.he_n, model.fix);
+        let _ = ready_tx.send(());
+        let spec = PipelineSpec::for_kind(cfg.kind, &cfg);
+        let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
+        while let Ok(ids) = job_rx.recv() {
+            let rc = RunCtx {
+                cfg: &cfg,
+                mcfg: &model.weights.config,
+                ring_w: &model.ring,
+                schedule: &schedule,
+            };
+            let out = run_pipeline(&mut e, &rc, &spec, &ids);
+            if out_tx.send(out).is_err() {
+                break;
+            }
+        }
+    })
+}
+
+struct TwoParty {
+    transcript: SharedTranscript,
+    job_tx: Vec<Sender<Vec<usize>>>,
+    out_rx: Vec<Receiver<PartyOut>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Cumulative transcript snapshot at the end of the previous request
+    /// (initially: the setup traffic).
+    seen: BTreeMap<String, PhaseStats>,
+    setup_phases: Vec<(String, PhaseStats)>,
+    setup_wall_s: f64,
+}
+
+/// A prepared model bound to one engine kind's live two-party state.
+pub struct Session {
+    cfg: EngineConfig,
+    model: Arc<PreparedModel>,
+    /// None for the plaintext oracle (no crypto state to reuse).
+    inner: Option<TwoParty>,
+    runs: u64,
+}
+
+impl Session {
+    /// Spawn both party threads and run the one-time setup (HE keygen +
+    /// base OTs). Everything after this call is online-phase work.
+    pub fn start(model: Arc<PreparedModel>, cfg: EngineConfig) -> Session {
+        if cfg.kind == EngineKind::Plaintext {
+            return Session { cfg, model, inner: None, runs: 0 };
+        }
+        let t0 = Instant::now();
+        let (ca, cb, transcript) = Chan::pair();
+        let (jtx0, jrx0) = channel();
+        let (jtx1, jrx1) = channel();
+        let (otx0, orx0) = channel();
+        let (otx1, orx1) = channel();
+        let (rtx0, rrx0) = channel();
+        let (rtx1, rrx1) = channel();
+        let h0 = spawn_party(PartyId::P0, ca, cfg.clone(), model.clone(), jrx0, otx0, rtx0);
+        let h1 = spawn_party(PartyId::P1, cb, cfg.clone(), model.clone(), jrx1, otx1, rtx1);
+        rrx0.recv().expect("P0 session setup failed");
+        rrx1.recv().expect("P1 session setup failed");
+        let setup_wall_s = t0.elapsed().as_secs_f64();
+        let seen: BTreeMap<String, PhaseStats> = {
+            let t = transcript.lock().unwrap();
+            t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+        };
+        let setup_phases = seen.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        Session {
+            cfg,
+            model,
+            inner: Some(TwoParty {
+                transcript,
+                job_tx: vec![jtx0, jtx1],
+                out_rx: vec![orx0, orx1],
+                handles: vec![h0, h1],
+                seen,
+                setup_phases,
+                setup_wall_s,
+            }),
+            runs: 0,
+        }
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.cfg.kind
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &PreparedModel {
+        &self.model
+    }
+
+    /// Requests served so far.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Wall time of the one-time two-party setup (0 for plaintext).
+    pub fn setup_wall_s(&self) -> f64 {
+        self.inner.as_ref().map(|tp| tp.setup_wall_s).unwrap_or(0.0)
+    }
+
+    /// Traffic of the one-time setup, by phase label.
+    pub fn setup_phases(&self) -> &[(String, PhaseStats)] {
+        self.inner.as_ref().map(|tp| tp.setup_phases.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total one-time setup traffic.
+    pub fn setup_stats(&self) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for (_, s) in self.setup_phases() {
+            t.add(s);
+        }
+        t
+    }
+
+    /// Serve one request: online phase only (no weight encoding, no keygen,
+    /// no base OTs). `RunResult::phases` holds this request's traffic.
+    pub fn infer(&mut self, ids: &[usize]) -> RunResult {
+        self.runs += 1;
+        let Some(tp) = self.inner.as_mut() else {
+            return run_plaintext(&self.model.weights, ids);
+        };
+        let t0 = Instant::now();
+        tp.job_tx[0].send(ids.to_vec()).expect("P0 session worker gone");
+        tp.job_tx[1].send(ids.to_vec()).expect("P1 session worker gone");
+        let p0 = tp.out_rx[0].recv().expect("P0 session worker died");
+        let _p1 = tp.out_rx[1].recv().expect("P1 session worker died");
+        let wall_s = t0.elapsed().as_secs_f64();
+        // per-request traffic = transcript delta since the previous request
+        let snap: BTreeMap<String, PhaseStats> = {
+            let t = tp.transcript.lock().unwrap();
+            t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+        };
+        let phases: Vec<(String, PhaseStats)> = snap
+            .iter()
+            .filter_map(|(k, v)| {
+                let prev = tp.seen.get(k).copied().unwrap_or_default();
+                let d = PhaseStats {
+                    bytes: v.bytes - prev.bytes,
+                    msgs: v.msgs - prev.msgs,
+                    flights: v.flights - prev.flights,
+                };
+                (d.bytes > 0 || d.msgs > 0 || d.flights > 0).then(|| (k.clone(), d))
+            })
+            .collect();
+        tp.seen = snap;
+        let mut layer_stats = p0.layer_stats;
+        harvest_layer_traffic(&mut layer_stats, &phases);
+        RunResult {
+            logits: p0.logits,
+            layer_stats,
+            phases,
+            phase_wall: p0.phase_wall,
+            wall_s,
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let Some(tp) = self.inner.take() {
+            let TwoParty { job_tx, out_rx, handles, .. } = tp;
+            // closing the job channels lets both party loops exit cleanly
+            drop(job_tx);
+            drop(out_rx);
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Attach per-layer SoftMax/GELU traffic to the layer stats: one pass over
+/// the phase labels, parsing the `proto#layer` suffix into a direct index
+/// (replaces the old O(layers × phases) string-compare harvest).
+pub(crate) fn harvest_layer_traffic(
+    layer_stats: &mut [LayerStat],
+    phases: &[(String, PhaseStats)],
+) {
+    for (name, s) in phases {
+        if let Some(li) = name.strip_prefix("softmax#").and_then(|v| v.parse::<usize>().ok())
+        {
+            if let Some(st) = layer_stats.get_mut(li) {
+                st.softmax_bytes = s.bytes;
+            }
+        } else if let Some(li) =
+            name.strip_prefix("gelu#").and_then(|v| v.parse::<usize>().ok())
+        {
+            if let Some(st) = layer_stats.get_mut(li) {
+                st.gelu_bytes = s.bytes;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harvest_assigns_by_layer_index() {
+        let mut stats = vec![LayerStat::default(), LayerStat::default()];
+        let mk = |b: u64| PhaseStats { bytes: b, ..Default::default() };
+        let phases = vec![
+            ("softmax#0".to_string(), mk(10)),
+            ("gelu#1".to_string(), mk(7)),
+            ("softmax#1".to_string(), mk(20)),
+            ("matmul#0".to_string(), mk(99)),
+            ("softmax#bogus".to_string(), mk(1)),
+            ("softmax#9".to_string(), mk(1)), // out of range: ignored
+        ];
+        harvest_layer_traffic(&mut stats, &phases);
+        assert_eq!(stats[0].softmax_bytes, 10);
+        assert_eq!(stats[1].softmax_bytes, 20);
+        assert_eq!(stats[1].gelu_bytes, 7);
+        assert_eq!(stats[0].gelu_bytes, 0);
+    }
+}

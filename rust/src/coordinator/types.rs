@@ -54,6 +54,29 @@ impl EngineKind {
             EngineKind::CipherPrune,
         ]
     }
+
+    /// Every variant, oracle included.
+    pub fn all() -> [EngineKind; 6] {
+        [
+            EngineKind::Plaintext,
+            EngineKind::Iron,
+            EngineKind::BoltNoWe,
+            EngineKind::Bolt,
+            EngineKind::CipherPrunePruneOnly,
+            EngineKind::CipherPrune,
+        ]
+    }
+
+    /// Kinds that consume the learned θ/β schedule (progressive pruning).
+    pub fn uses_schedule(&self) -> bool {
+        matches!(self, EngineKind::CipherPrune | EngineKind::CipherPrunePruneOnly)
+    }
+
+    /// Stable small integer id (the index in [`EngineKind::all`]); used to
+    /// derive distinct session seeds per kind.
+    pub fn ordinal(&self) -> u64 {
+        EngineKind::all().iter().position(|k| k == self).unwrap_or(0) as u64
+    }
 }
 
 /// One inference request (client side).
@@ -140,10 +163,19 @@ mod tests {
 
     #[test]
     fn engine_names_roundtrip() {
-        for e in EngineKind::private_engines() {
+        for e in EngineKind::all() {
             assert_eq!(EngineKind::by_name(e.name()), Some(e));
         }
-        assert_eq!(EngineKind::by_name("plaintext"), Some(EngineKind::Plaintext));
+        // names are unique
+        let mut names: Vec<_> = EngineKind::all().iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), EngineKind::all().len());
+        // legacy alias still resolves
+        assert_eq!(
+            EngineKind::by_name("cipherprune+"),
+            Some(EngineKind::CipherPrunePruneOnly)
+        );
         assert!(EngineKind::by_name("x").is_none());
     }
 

@@ -156,6 +156,18 @@ impl RingMat {
         RingMat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// Column-range slice `[lo, hi)` as a new matrix (e.g. extracting one
+    /// attention head's columns from a packed QKV projection).
+    pub fn col_range(&self, lo: usize, hi: usize) -> RingMat {
+        assert!(lo <= hi && hi <= self.cols, "col_range {lo}..{hi} of {}", self.cols);
+        let w = hi - lo;
+        let mut out = RingMat::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
     /// Keep only the first `n` rows.
     pub fn truncate_rows(&mut self, n: usize) {
         assert!(n <= self.rows);
@@ -334,6 +346,16 @@ mod tests {
         assert_eq!(add_vec(&a, &b), vec![0, 3]);
         assert_eq!(sub_vec(&b, &a), vec![2, 1]);
         assert_eq!(neg_vec(&[1]), vec![u64::MAX]);
+    }
+
+    #[test]
+    fn col_range_slices_columns() {
+        let m = RingMat::from_vec(2, 4, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let s = m.col_range(1, 3);
+        assert_eq!((s.rows, s.cols), (2, 2));
+        assert_eq!(s.data, vec![2, 3, 6, 7]);
+        assert_eq!(m.col_range(0, 4), m);
+        assert_eq!(m.col_range(2, 2).data.len(), 0);
     }
 
     #[test]

@@ -18,8 +18,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use cipherprune::coordinator::{
-    run_inference, BatchPolicy, EngineConfig, EngineKind, InferenceRequest, Router,
-    RouterConfig,
+    run_inference, BatchPolicy, EngineConfig, EngineKind, InferenceRequest,
+    PreparedModel, Router, RouterConfig, Session,
 };
 use cipherprune::net::NetModel;
 use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
@@ -100,10 +100,25 @@ fn cmd_run(kv: HashMap<String, String>) {
         sample.real_len
     );
 
-    let mut ec = EngineConfig::new(engine, cfg.n_layers);
-    ec.he_n = he_n;
-    ec.schedule = schedule_for(&cfg);
-    let r = run_inference(&ec, &weights, &sample.ids);
+    // prepare → session → infer: the offline work (weight encoding, HE
+    // keygen, base OTs) is visible separately from the online request.
+    // The plaintext oracle has no offline phase — skip the encoding.
+    let r = if engine == EngineKind::Plaintext {
+        run_inference(&EngineConfig::new(engine), &weights, &sample.ids)
+    } else {
+        let t_prep = std::time::Instant::now();
+        let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
+        let prep_s = t_prep.elapsed().as_secs_f64();
+        let ec = EngineConfig::new(engine).he_n(he_n).schedule(schedule_for(&cfg));
+        let mut session = Session::start(model, ec);
+        println!(
+            "offline: weight encode {}  session setup {} ({} setup traffic)",
+            fmt_duration(prep_s),
+            fmt_duration(session.setup_wall_s()),
+            fmt_bytes(session.setup_stats().bytes as f64),
+        );
+        session.infer(&sample.ids)
+    };
 
     println!("\nlogits: {:?}  (predicted class {})", r.logits, r.predicted());
     let mut t = Table::new(
@@ -239,7 +254,13 @@ fn cmd_oracle(kv: HashMap<String, String>) {
     for (i, &id) in ids.iter().enumerate() {
         onehot[i * vocab + id] = 1.0;
     }
-    let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let mut rt = match XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("oracle unavailable: {e:#}");
+            std::process::exit(2);
+        }
+    };
     println!("platform: {}", rt.platform());
     let t0 = std::time::Instant::now();
     let out = rt

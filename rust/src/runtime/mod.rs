@@ -11,17 +11,14 @@
 //! The coordinator uses this path for the plaintext-oracle engine: accuracy
 //! evaluation (Table 2, Fig. 12) and protocol-vs-plaintext validation run the
 //! same lowered graph the Pallas kernels were compiled into.
+//!
+//! The `xla` bindings are not on crates.io, so the real client is gated
+//! behind the **`xla` cargo feature** (see `rust/Cargo.toml`). The default
+//! build ships a stub whose constructor returns an error; every consumer
+//! treats that as "oracle unavailable" and skips, exactly as it does when
+//! `make artifacts` has not been run.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
-
-/// Cached PJRT CPU runtime.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
-}
+use std::path::PathBuf;
 
 /// A typed f32 tensor argument/result.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,73 +42,143 @@ impl TensorF32 {
     }
 }
 
-impl XlaRuntime {
-    /// Create a PJRT CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(XlaRuntime { client, cache: HashMap::new() })
+#[cfg(feature = "xla")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{Context, Result};
+
+    use super::TensorF32;
+
+    /// Cached PJRT CPU runtime.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load (and cache) an HLO-text artifact as a compiled executable.
-    pub fn load(&mut self, path: &Path) -> Result<()> {
-        if self.cache.contains_key(path) {
-            return Ok(());
+    impl XlaRuntime {
+        /// Create a PJRT CPU client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(XlaRuntime { client, cache: HashMap::new() })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        self.cache.insert(path.to_path_buf(), exe);
-        Ok(())
-    }
 
-    pub fn is_loaded(&self, path: &Path) -> bool {
-        self.cache.contains_key(path)
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    pub fn loaded_count(&self) -> usize {
-        self.cache.len()
-    }
+        /// Load (and cache) an HLO-text artifact as a compiled executable.
+        pub fn load(&mut self, path: &Path) -> Result<()> {
+            if self.cache.contains_key(path) {
+                return Ok(());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(path.to_path_buf(), exe);
+            Ok(())
+        }
 
-    /// Execute an artifact on f32 inputs; returns the tuple elements as f32
-    /// tensors (artifacts are lowered with `return_tuple=True`).
-    pub fn run_f32(&mut self, path: &Path, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        self.load(path)?;
-        let exe = self.cache.get(path).expect("just loaded");
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                xla::Literal::vec1(&t.data)
-                    .reshape(&t.dims)
-                    .context("reshaping input literal")
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .context("executing artifact")?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = result.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape().context("result shape")?;
-                let dims: Vec<i64> = shape.dims().to_vec();
-                let data = lit.to_vec::<f32>().context("result to_vec")?;
-                Ok(TensorF32 { data, dims })
-            })
-            .collect()
+        pub fn is_loaded(&self, path: &Path) -> bool {
+            self.cache.contains_key(path)
+        }
+
+        pub fn loaded_count(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Execute an artifact on f32 inputs; returns the tuple elements as
+        /// f32 tensors (artifacts are lowered with `return_tuple=True`).
+        pub fn run_f32(
+            &mut self,
+            path: &Path,
+            inputs: &[TensorF32],
+        ) -> Result<Vec<TensorF32>> {
+            self.load(path)?;
+            let exe = self.cache.get(path).expect("just loaded");
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&t.dims)
+                        .context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .context("executing artifact")?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = result.to_tuple().context("untupling result")?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape().context("result shape")?;
+                    let dims: Vec<i64> = shape.dims().to_vec();
+                    let data = lit.to_vec::<f32>().context("result to_vec")?;
+                    Ok(TensorF32 { data, dims })
+                })
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod backend {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::TensorF32;
+
+    /// Stub runtime compiled when the `xla` feature is off: constructing it
+    /// fails, so every oracle path reports "unavailable" and skips.
+    pub struct XlaRuntime {
+        _private: (),
+    }
+
+    impl XlaRuntime {
+        pub fn cpu() -> Result<Self> {
+            bail!(
+                "built without the `xla` cargo feature — the XLA/PJRT oracle \
+                 is unavailable (see rust/Cargo.toml)"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&mut self, _path: &Path) -> Result<()> {
+            bail!("built without the `xla` cargo feature")
+        }
+
+        pub fn is_loaded(&self, _path: &Path) -> bool {
+            false
+        }
+
+        pub fn loaded_count(&self) -> usize {
+            0
+        }
+
+        pub fn run_f32(
+            &mut self,
+            _path: &Path,
+            _inputs: &[TensorF32],
+        ) -> Result<Vec<TensorF32>> {
+            bail!("built without the `xla` cargo feature")
+        }
+    }
+}
+
+pub use backend::XlaRuntime;
 
 /// Default artifacts directory (overridable via `CIPHERPRUNE_ARTIFACTS`).
 pub fn artifacts_dir() -> PathBuf {
@@ -128,12 +195,17 @@ pub fn artifact(name: &str) -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Write;
 
-    /// Minimal valid HLO-text module: f(x, y) = (x·y + 2,) over f32[2,2],
-    /// matching /opt/xla-example's smoke test so this test is hermetic
-    /// (no python needed).
-    const SMOKE_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+    #[cfg(feature = "xla")]
+    mod with_xla {
+        use super::super::*;
+        use std::io::Write;
+        use std::path::PathBuf;
+
+        /// Minimal valid HLO-text module: f(x, y) = (x·y + 2,) over f32[2,2],
+        /// matching /opt/xla-example's smoke test so this test is hermetic
+        /// (no python needed).
+        const SMOKE_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
 
 ENTRY main.8 {
   Arg_0.1 = f32[2,2]{1,0} parameter(0)
@@ -146,47 +218,56 @@ ENTRY main.8 {
 }
 "#;
 
-    fn smoke_path() -> PathBuf {
-        let dir = std::env::temp_dir().join("cipherprune-rt-test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("smoke.hlo.txt");
-        let mut f = std::fs::File::create(&p).unwrap();
-        f.write_all(SMOKE_HLO.as_bytes()).unwrap();
-        p
+        fn smoke_path() -> PathBuf {
+            let dir = std::env::temp_dir().join("cipherprune-rt-test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("smoke.hlo.txt");
+            let mut f = std::fs::File::create(&p).unwrap();
+            f.write_all(SMOKE_HLO.as_bytes()).unwrap();
+            p
+        }
+
+        #[test]
+        fn loads_and_runs_hlo_text() {
+            let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
+            let p = smoke_path();
+            let x = TensorF32::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+            let y = TensorF32::new(vec![1.0; 4], vec![2, 2]);
+            let out = rt.run_f32(&p, &[x, y]).expect("execute");
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].dims, vec![2, 2]);
+            assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+        }
+
+        #[test]
+        fn executable_cache_hits() {
+            let mut rt = XlaRuntime::cpu().unwrap();
+            let p = smoke_path();
+            rt.load(&p).unwrap();
+            assert!(rt.is_loaded(&p));
+            assert_eq!(rt.loaded_count(), 1);
+            rt.load(&p).unwrap(); // no recompile
+            assert_eq!(rt.loaded_count(), 1);
+            let x = TensorF32::new(vec![0.0; 4], vec![2, 2]);
+            let y = TensorF32::new(vec![0.0; 4], vec![2, 2]);
+            let out = rt.run_f32(&p, &[x, y]).unwrap();
+            assert_eq!(out[0].data, vec![2.0; 4]);
+        }
+
+        #[test]
+        fn missing_artifact_errors() {
+            let mut rt = XlaRuntime::cpu().unwrap();
+            let err = rt.load(std::path::Path::new("/nonexistent/f.hlo.txt"));
+            assert!(err.is_err());
+        }
     }
 
+    #[cfg(not(feature = "xla"))]
     #[test]
-    fn loads_and_runs_hlo_text() {
-        let mut rt = XlaRuntime::cpu().expect("PJRT CPU client");
-        let p = smoke_path();
-        let x = TensorF32::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
-        let y = TensorF32::new(vec![1.0; 4], vec![2, 2]);
-        let out = rt.run_f32(&p, &[x, y]).expect("execute");
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].dims, vec![2, 2]);
-        assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
-    }
-
-    #[test]
-    fn executable_cache_hits() {
-        let mut rt = XlaRuntime::cpu().unwrap();
-        let p = smoke_path();
-        rt.load(&p).unwrap();
-        assert!(rt.is_loaded(&p));
-        assert_eq!(rt.loaded_count(), 1);
-        rt.load(&p).unwrap(); // no recompile
-        assert_eq!(rt.loaded_count(), 1);
-        let x = TensorF32::new(vec![0.0; 4], vec![2, 2]);
-        let y = TensorF32::new(vec![0.0; 4], vec![2, 2]);
-        let out = rt.run_f32(&p, &[x, y]).unwrap();
-        assert_eq!(out[0].data, vec![2.0; 4]);
-    }
-
-    #[test]
-    fn missing_artifact_errors() {
-        let mut rt = XlaRuntime::cpu().unwrap();
-        let err = rt.load(Path::new("/nonexistent/f.hlo.txt"));
+    fn stub_reports_unavailable() {
+        let err = XlaRuntime::cpu();
         assert!(err.is_err());
+        assert!(format!("{:#}", err.err().unwrap()).contains("xla"));
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! AOT XLA oracle artifact produced by `make artifacts` — all three layers
 //! composing.
 //!
+//! PERF: the online phase runs the HE/OT hot loops on a per-party worker
+//! pool sized from the host (override with `EngineConfig::threads(..)` or
+//! `THREADS=1`); outputs and transcripts are identical at any setting — see
+//! "Performance model" in the coordinator docs.
+//!
 //!     cargo run --release --example quickstart
 
 use std::sync::Arc;

@@ -8,6 +8,11 @@
 //! engine, so the measured per-point cost is the online protocol only (the
 //! quantity the paper's figure compares).
 //!
+//! PERF: each session's hot loops run on a host-sized worker pool (pin with
+//! `THREADS=n`); the sweep's wall times scale with cores while traffic stays
+//! byte-identical. `cargo run --release --bin bench_e2e` records the
+//! single-thread vs host-pool speedup.
+//!
 //!     cargo run --release --example scalability
 //!     SCALE_SEQS="16,32,64" cargo run --release --example scalability
 

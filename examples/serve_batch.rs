@@ -11,6 +11,11 @@
 //! HE keygen, no base OTs. The metrics report's `offline:` line shows how
 //! much setup was amortized.
 //!
+//! PERF: each live session runs two party threads whose hot loops use a
+//! worker pool (`RouterConfig::threads`). The default divides the host
+//! across the worker budget (`host / (2 × workers)`, min 1) so concurrent
+//! session slots don't oversubscribe each other; pin it to override.
+//!
 //!     cargo run --release --example serve_batch            # quick
 //!     SERVE_REQS=16 SERVE_SEQ=32 cargo run --release --example serve_batch
 
@@ -50,6 +55,7 @@ fn main() {
             workers: 4,
             he_n: 4096,
             schedule: Some(schedule),
+            threads: None,
         },
     );
 

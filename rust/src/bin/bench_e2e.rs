@@ -1,0 +1,175 @@
+//! bench_e2e — end-to-end performance trajectory for the serving stack:
+//! times prepare / session-setup / infer per engine kind and token length,
+//! with the per-party worker pool at 1 thread vs host-sized, and writes
+//! `BENCH_pr2.json` so successive PRs can track online-phase wall time.
+//!
+//! The headline record is the single-thread vs multi-thread `Session::infer`
+//! comparison on the longest configured sequence (128 tokens in the full
+//! sweep) — the worker-pool layer must beat its own sequential baseline on a
+//! multi-core host.
+//!
+//! Usage:
+//!   cargo run --release --bin bench_e2e              # full sweep (minutes)
+//!   cargo run --release --bin bench_e2e -- --smoke   # CI-sized (~a minute)
+//!   cargo run --release --bin bench_e2e -- --out path/to.json
+//!
+//! PERF: results depend on host core count; `host_threads` is recorded in
+//! the report. The full sweep uses the width-reduced bert-medium proxy
+//! (dim 128, 8 layers — same token-dependent protocol structure as the
+//! paper's testbed, see benches/bench_common.rs for the scale policy).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::util::bench::fmt_duration;
+use cipherprune::util::{Json, WorkerPool};
+
+struct RunRecord {
+    engine: &'static str,
+    seq: usize,
+    he_n: usize,
+    threads: usize,
+    setup_s: f64,
+    infer_s: f64,
+    online_bytes: u64,
+}
+
+impl RunRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", self.engine.into()),
+            ("seq", self.seq.into()),
+            ("he_n", self.he_n.into()),
+            ("threads", self.threads.into()),
+            ("setup_s", self.setup_s.into()),
+            ("infer_s", self.infer_s.into()),
+            ("online_bytes", self.online_bytes.into()),
+        ])
+    }
+}
+
+fn measure(
+    kind: EngineKind,
+    cfg: &ModelConfig,
+    model: &Arc<PreparedModel>,
+    seq: usize,
+    he_n: usize,
+    threads: usize,
+    iters: usize,
+) -> RunRecord {
+    let ids = Workload::qnli_like(cfg, seq).batch(1, 7)[0].ids.clone();
+    let ec = EngineConfig::new(kind).he_n(he_n).threads(threads);
+    let mut session = Session::start(model.clone(), ec);
+    let setup_s = session.setup_wall_s();
+    // min over iters: the steady-state online cost (first request may still
+    // be warming allocator/caches)
+    let mut infer_s = f64::INFINITY;
+    let mut online_bytes = 0;
+    for _ in 0..iters.max(1) {
+        let r = session.infer(&ids);
+        infer_s = infer_s.min(r.wall_s);
+        online_bytes = r.total_stats().bytes;
+    }
+    println!(
+        "  {:<24} seq {:>4}  threads {:>2}  setup {:>9}  infer {:>9}",
+        kind.name(),
+        seq,
+        threads,
+        fmt_duration(setup_s),
+        fmt_duration(infer_s),
+    );
+    RunRecord { engine: kind.name(), seq, he_n, threads, setup_s, infer_s, online_bytes }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_pr2.json".to_string());
+    let host = WorkerPool::auto().threads();
+
+    // smoke: tiny model, test-sized ring — exercises every stage in seconds.
+    // full: width-reduced bert-medium proxy at deployment-shaped lengths.
+    let (cfg, kinds, seqs, he_n, iters) = if smoke {
+        (ModelConfig::tiny(), vec![EngineKind::CipherPrune], vec![8, 16], 128, 1)
+    } else {
+        (
+            ModelConfig::by_name("bert-medium").expect("preset").scaled(4),
+            vec![EngineKind::Bolt, EngineKind::CipherPrune],
+            vec![32, 128],
+            4096,
+            2,
+        )
+    };
+    let weights = Arc::new(ModelWeights::salient(&cfg, 42));
+    println!(
+        "bench_e2e: model {} ({} layers, dim {})  host_threads {}  mode {}",
+        cfg.name,
+        cfg.n_layers,
+        cfg.dim,
+        host,
+        if smoke { "smoke" } else { "full" },
+    );
+
+    // prepare once: it is per-model offline work shared by every session
+    // below (PreparedModel::prepare sizes its own pool from the host)
+    let t0 = Instant::now();
+    let model = Arc::new(PreparedModel::prepare(weights));
+    let prepare_s = t0.elapsed().as_secs_f64();
+    println!("  prepare (once, host pool): {}", fmt_duration(prepare_s));
+
+    let thread_cfgs = if host > 1 { vec![1, host] } else { vec![1] };
+    let mut runs: Vec<RunRecord> = Vec::new();
+    for &kind in &kinds {
+        for &seq in &seqs {
+            for &t in &thread_cfgs {
+                runs.push(measure(kind, &cfg, &model, seq, he_n, t, iters));
+            }
+        }
+    }
+
+    // headline: single-thread vs host pool on the longest CipherPrune config
+    let top_seq = *seqs.iter().max().unwrap();
+    let pick = |threads: usize| {
+        runs.iter()
+            .find(|r| r.engine == "cipherprune" && r.seq == top_seq && r.threads == threads)
+            .map(|r| r.infer_s)
+    };
+    let (t1, tn) = (pick(1), pick(host));
+    let speedup = match (t1, tn) {
+        (Some(a), Some(b)) if b > 0.0 && host > 1 => a / b,
+        _ => 1.0,
+    };
+    println!(
+        "\nspeedup on {top_seq}-token cipherprune infer: {speedup:.2}x ({} → {})",
+        fmt_duration(t1.unwrap_or(0.0)),
+        fmt_duration(tn.or(t1).unwrap_or(0.0)),
+    );
+
+    let report = Json::obj(vec![
+        ("bench", "bench_e2e_pr2".into()),
+        ("smoke", smoke.into()),
+        ("model", cfg.name.as_str().into()),
+        ("host_threads", host.into()),
+        ("prepare_s", prepare_s.into()),
+        ("runs", Json::Arr(runs.iter().map(RunRecord::to_json).collect())),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("engine", "cipherprune".into()),
+                ("seq", top_seq.into()),
+                ("threads_1_infer_s", t1.unwrap_or(0.0).into()),
+                ("threads_max_infer_s", tn.or(t1).unwrap_or(0.0).into()),
+                ("speedup", speedup.into()),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, report.to_string_pretty()).expect("write report");
+    println!("wrote {out_path}");
+}

@@ -32,6 +32,7 @@ use crate::gates::TripleMode;
 use crate::nn::{ModelConfig, ModelWeights, ThresholdSchedule};
 use crate::party::run2_owned_sym;
 use crate::protocols::Engine2P;
+use crate::util::WorkerPool;
 
 use super::pipeline::{run_pipeline, PipelineSpec, RunCtx};
 use super::types::{EngineKind, LayerStat, RunResult};
@@ -57,6 +58,12 @@ pub struct EngineConfig {
     /// LUT-precision-faithful; benches use 16 so the end-to-end cost ratio
     /// vs BOLT lands near IRON's published one (DESIGN.md §Substitutions).
     pub iron_segments: usize,
+    /// Worker threads per party for the data-parallel HE/OT hot paths.
+    /// `None` sizes from the host (`THREADS`/`CIPHERPRUNE_THREADS` env var,
+    /// else `available_parallelism`). Outputs and transcripts are
+    /// bit-identical at any setting — see the coordinator's
+    /// [Performance model](super#performance-model).
+    pub threads: Option<usize>,
 }
 
 impl EngineConfig {
@@ -68,6 +75,7 @@ impl EngineConfig {
             triple_mode: TripleMode::Ot,
             seed: 0xC1F4E9,
             iron_segments: 128,
+            threads: None,
         }
     }
 
@@ -99,6 +107,20 @@ impl EngineConfig {
     pub fn schedule(mut self, schedule: ThresholdSchedule) -> Self {
         self.schedule = Some(schedule);
         self
+    }
+
+    /// Pin the per-party worker-pool size (1 = fully sequential engine).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// The worker pool this configuration resolves to.
+    pub fn resolved_pool(&self) -> WorkerPool {
+        match self.threads {
+            Some(t) => WorkerPool::new(t),
+            None => WorkerPool::auto(),
+        }
     }
 
     /// The θ/β schedule to run against a model with `n_layers` layers: the
@@ -142,32 +164,38 @@ pub struct RingLayer {
 
 impl RingWeights {
     pub fn encode(w: &ModelWeights, fix: Fix) -> Self {
+        Self::encode_with(w, fix, WorkerPool::single())
+    }
+
+    /// [`encode`](Self::encode) with the per-layer encodings spread over
+    /// `pool` (layers are independent; order is preserved).
+    pub fn encode_with(w: &ModelWeights, fix: Fix, pool: WorkerPool) -> Self {
         let ev = |v: &[f64]| fix.enc_vec(v);
+        let layers = pool.sized_for(w.layers.len(), 1).par_map(w.layers.len(), |i| {
+            let l = &w.layers[i];
+            RingLayer {
+                wq: l.wq.to_ring(fix),
+                bq: ev(&l.bq),
+                wk: l.wk.to_ring(fix),
+                bk: ev(&l.bk),
+                wv: l.wv.to_ring(fix),
+                bv: ev(&l.bv),
+                wo: l.wo.to_ring(fix),
+                bo: ev(&l.bo),
+                ln1_gamma: ev(&l.ln1_gamma),
+                ln1_beta: ev(&l.ln1_beta),
+                w_ff1: l.w_ff1.to_ring(fix),
+                b_ff1: ev(&l.b_ff1),
+                w_ff2: l.w_ff2.to_ring(fix),
+                b_ff2: ev(&l.b_ff2),
+                ln2_gamma: ev(&l.ln2_gamma),
+                ln2_beta: ev(&l.ln2_beta),
+            }
+        });
         RingWeights {
             emb: w.embedding.to_ring(fix),
             pos: w.positional.to_ring(fix),
-            layers: w
-                .layers
-                .iter()
-                .map(|l| RingLayer {
-                    wq: l.wq.to_ring(fix),
-                    bq: ev(&l.bq),
-                    wk: l.wk.to_ring(fix),
-                    bk: ev(&l.bk),
-                    wv: l.wv.to_ring(fix),
-                    bv: ev(&l.bv),
-                    wo: l.wo.to_ring(fix),
-                    bo: ev(&l.bo),
-                    ln1_gamma: ev(&l.ln1_gamma),
-                    ln1_beta: ev(&l.ln1_beta),
-                    w_ff1: l.w_ff1.to_ring(fix),
-                    b_ff1: ev(&l.b_ff1),
-                    w_ff2: l.w_ff2.to_ring(fix),
-                    b_ff2: ev(&l.b_ff2),
-                    ln2_gamma: ev(&l.ln2_gamma),
-                    ln2_beta: ev(&l.ln2_beta),
-                })
-                .collect(),
+            layers,
             w_cls: w.w_cls.to_ring(fix),
             b_cls: ev(&w.b_cls),
         }
@@ -188,7 +216,8 @@ impl PreparedModel {
     }
 
     pub fn prepare_with(weights: Arc<ModelWeights>, fix: Fix) -> Self {
-        let ring = RingWeights::encode(&weights, fix);
+        // offline, once per model — encode the layers on the host-sized pool
+        let ring = RingWeights::encode_with(&weights, fix, WorkerPool::auto());
         PreparedModel { weights, ring, fix }
     }
 
@@ -214,11 +243,12 @@ pub fn run_inference(
         return run_plaintext(weights, ids);
     }
     let fix = Fix::default();
-    let ring_w = RingWeights::encode(weights, fix);
+    let ring_w = RingWeights::encode_with(weights, fix, cfg.resolved_pool());
     let schedule = cfg.resolved_schedule(weights.config.n_layers);
     let t0 = Instant::now();
     let (p0, _p1, transcript) = run2_owned_sym(cfg.seed, |ctx| {
-        let mut e = Engine2P::new(ctx, cfg.triple_mode, cfg.he_n, fix);
+        let mut e =
+            Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, fix, cfg.resolved_pool());
         let spec = PipelineSpec::for_kind(cfg.kind, cfg);
         let rc = RunCtx {
             cfg,

@@ -23,6 +23,39 @@
 //! let r2 = s.infer(&ids_b);                                   // online
 //! ```
 //!
+//! # Performance model
+//!
+//! The online phase is data-parallel on a per-party
+//! [`WorkerPool`](crate::util::WorkerPool) (std scoped threads, sized from
+//! `available_parallelism`, pinned with [`EngineConfig::threads`] or the
+//! `THREADS`/`CIPHERPRUNE_THREADS` env var, plumbed through
+//! [`Session`] into the `Engine2P` endpoints and the OT layer):
+//!
+//! - **What parallelizes.** The embarrassingly parallel crypto hot loops:
+//!   X-tile encode+encrypt and output-tile decrypt + U192 CRT lift in
+//!   Π_MatMul, the per-output-ciphertext `mul_pt_accumulate` chains on the
+//!   evaluator (with lazy \[0, 2q) accumulation, one reduction per chain),
+//!   weight-tile NTT encoding, per-prime NTT passes, and the IKNP OT
+//!   extension's PRG-expansion / bit-transpose / hash batches. Protocol
+//!   *rounds* stay sequential — parallelism is within a flight, never across
+//!   the channel.
+//! - **Why transcripts stay deterministic.** Every randomized parallel loop
+//!   pre-draws its randomness *sequentially* from the party RNG in item
+//!   order (one seed per encrypted tile, one mask polynomial per output
+//!   ciphertext), workers expand private per-item streams from those seeds,
+//!   and results are reassembled in index order before the single batched
+//!   send. OT base-PRG streams are owned per column and advance by the same
+//!   amount on any worker. Hence outputs *and* per-request transcript bytes
+//!   are bit-identical for every pool size (`tests/parallel.rs` pins this;
+//!   CI runs the suite again with `THREADS=1`).
+//! - **How to set `threads`.** Default `None` sizes from the host. Each
+//!   session runs *two* party threads, each with its own pool, and the
+//!   [`Router`] runs up to `workers` sessions per kind — the budget is
+//!   `workers × 2 × threads ≲ cores`, which `RouterConfig` enforces by
+//!   default (`None` → `host / (2 × workers)`, min 1). For single-request
+//!   latency, leave the default.
+//!   `cargo run --release --bin bench_e2e` records the measured speedup.
+//!
 //! [`run_inference`] is a one-shot shim over the same path; [`Router`] holds
 //! one [`PreparedModel`] plus a per-kind [`Session`] cache and drives the
 //! length-bucketed [`Batcher`] (private-inference cost is quadratic in padded

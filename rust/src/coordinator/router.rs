@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::nn::{workload::PAD_ID, ModelWeights, ThresholdSchedule};
+use crate::util::WorkerPool;
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::engine::{EngineConfig, PreparedModel};
@@ -32,6 +33,11 @@ pub struct RouterConfig {
     pub he_n: usize,
     /// θ/β schedule for the CipherPrune engines.
     pub schedule: Option<ThresholdSchedule>,
+    /// Per-party worker threads inside each session's HE/OT hot paths.
+    /// `None` divides the host parallelism across the worker budget
+    /// (`host / (2 × workers)`, min 1) so concurrent sessions don't
+    /// oversubscribe each other; set explicitly to override.
+    pub threads: Option<usize>,
 }
 
 impl Default for RouterConfig {
@@ -41,6 +47,7 @@ impl Default for RouterConfig {
             workers: 4,
             he_n: crate::he::params::N,
             schedule: None,
+            threads: None,
         }
     }
 }
@@ -101,7 +108,12 @@ impl Router {
                 ec = ec.schedule(s.clone());
             }
         }
-        ec
+        // default: split the host budget across worker sessions × 2 party
+        // threads so concurrent sessions don't thrash each other's caches
+        let threads = self.cfg.threads.unwrap_or_else(|| {
+            (WorkerPool::auto().threads() / (2 * self.cfg.workers.max(1))).max(1)
+        });
+        ec.threads(threads)
     }
 
     /// Submit a request (queued until a batch releases).
@@ -264,6 +276,7 @@ mod tests {
                 workers: 2,
                 he_n: 128,
                 schedule: None,
+                threads: None,
             },
         )
     }

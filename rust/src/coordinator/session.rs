@@ -38,7 +38,13 @@ fn spawn_party(
     std::thread::spawn(move || {
         // One-time setup: HE keygen + base OTs (communicates with the peer).
         let ctx = PartyCtx::new(id, ch, cfg.seed);
-        let mut e = Engine2P::new(ctx, cfg.triple_mode, cfg.he_n, model.fix);
+        let mut e = Engine2P::with_pool(
+            ctx,
+            cfg.triple_mode,
+            cfg.he_n,
+            model.fix,
+            cfg.resolved_pool(),
+        );
         let _ = ready_tx.send(());
         let spec = PipelineSpec::for_kind(cfg.kind, &cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
@@ -144,6 +150,17 @@ impl Session {
     /// Traffic of the one-time setup, by phase label.
     pub fn setup_phases(&self) -> &[(String, PhaseStats)] {
         self.inner.as_ref().map(|tp| tp.setup_phases.as_slice()).unwrap_or(&[])
+    }
+
+    /// Per-endpoint running content digest of everything sent on the
+    /// session's channel so far (setup + all requests); `[0, 0]` for the
+    /// plaintext oracle. The thread-count invariance tests compare this to
+    /// pin wire *content*, not just byte counts.
+    pub fn transcript_digest(&self) -> [u64; 2] {
+        self.inner
+            .as_ref()
+            .map(|tp| tp.transcript.lock().unwrap().content)
+            .unwrap_or([0; 2])
     }
 
     /// Total one-time setup traffic.

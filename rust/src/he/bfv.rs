@@ -12,7 +12,7 @@ use super::bigint::{
 };
 use super::ntt::{add_mod, mul_mod, mul_mod_shoup, shoup, sub_mod, NttTable};
 use super::params::{CBD_K, NPRIMES, PRIMES, PSI_16384};
-use crate::util::{AesPrg, Xoshiro256};
+use crate::util::{AesPrg, WorkerPool, Xoshiro256};
 use std::sync::Arc;
 
 /// Shared immutable BFV context: NTT tables and CRT constants.
@@ -122,18 +122,28 @@ impl RnsPoly {
     }
 
     pub fn forward_ntt(&mut self, ctx: &BfvContext) {
+        self.forward_ntt_with(ctx, WorkerPool::single());
+    }
+
+    /// Forward NTT with the per-prime passes spread over `pool` (each prime's
+    /// residue vector is independent). Used by paths that are not already
+    /// parallel at a coarser (per-tile) granularity.
+    pub fn forward_ntt_with(&mut self, ctx: &BfvContext, pool: WorkerPool) {
         assert!(!self.ntt);
-        for (i, r) in self.res.iter_mut().enumerate() {
-            ctx.tables[i].forward(r);
-        }
+        pool.sized_for(NPRIMES, 1)
+            .par_for_each_mut(&mut self.res, |i, r| ctx.tables[i].forward(r));
         self.ntt = true;
     }
 
     pub fn inverse_ntt(&mut self, ctx: &BfvContext) {
+        self.inverse_ntt_with(ctx, WorkerPool::single());
+    }
+
+    /// Inverse NTT with the per-prime passes spread over `pool`.
+    pub fn inverse_ntt_with(&mut self, ctx: &BfvContext, pool: WorkerPool) {
         assert!(self.ntt);
-        for (i, r) in self.res.iter_mut().enumerate() {
-            ctx.tables[i].inverse(r);
-        }
+        pool.sized_for(NPRIMES, 1)
+            .par_for_each_mut(&mut self.res, |i, r| ctx.tables[i].inverse(r));
         self.ntt = false;
     }
 
@@ -188,11 +198,18 @@ impl PtNtt {
     /// *as a signed integer* into each prime field so small negative weights
     /// stay small.
     pub fn encode(ctx: &BfvContext, coeffs: &[u64]) -> Self {
+        Self::encode_with(ctx, coeffs, WorkerPool::single())
+    }
+
+    /// [`encode`](Self::encode) with the per-prime reduce + NTT + Shoup
+    /// passes spread over `pool` (used when the caller has a single tile and
+    /// cannot parallelize at tile granularity).
+    pub fn encode_with(ctx: &BfvContext, coeffs: &[u64], pool: WorkerPool) -> Self {
         assert_eq!(coeffs.len(), ctx.n);
-        let mut vals: Vec<Vec<u64>> = (0..NPRIMES)
-            .map(|i| {
+        let per_prime: Vec<(Vec<u64>, Vec<u64>)> =
+            pool.sized_for(NPRIMES, 1).par_map(NPRIMES, |i| {
                 let q = PRIMES[i];
-                coeffs
+                let mut v: Vec<u64> = coeffs
                     .iter()
                     .map(|&c| {
                         let s = c as i64;
@@ -202,17 +219,12 @@ impl PtNtt {
                             (s as u64) % q
                         }
                     })
-                    .collect()
-            })
-            .collect();
-        for (i, v) in vals.iter_mut().enumerate() {
-            ctx.tables[i].forward(v);
-        }
-        let shoup_q = vals
-            .iter()
-            .enumerate()
-            .map(|(i, v)| v.iter().map(|&w| shoup(w, PRIMES[i])).collect())
-            .collect();
+                    .collect();
+                ctx.tables[i].forward(&mut v);
+                let sh = v.iter().map(|&w| shoup(w, q)).collect();
+                (v, sh)
+            });
+        let (vals, shoup_q) = per_prime.into_iter().unzip();
         PtNtt { vals, shoup: shoup_q }
     }
 }
@@ -332,31 +344,42 @@ pub fn encrypt(
 
 /// Decrypt to plaintext coefficients mod 2^64.
 pub fn decrypt(ctx: &BfvContext, sk: &SecretKey, ct: &Ciphertext) -> Vec<u64> {
+    decrypt_with(ctx, sk, ct, WorkerPool::single())
+}
+
+/// [`decrypt`] with the heavy per-coefficient work — c1·s multiply-add,
+/// inverse NTT, and the U192 CRT lift + rounding — spread over `pool`.
+/// Bit-identical output at any pool size. Callers that decrypt *many*
+/// ciphertexts parallelize across them instead and pass a single pool here.
+pub fn decrypt_with(
+    ctx: &BfvContext,
+    sk: &SecretKey,
+    ct: &Ciphertext,
+    pool: WorkerPool,
+) -> Vec<u64> {
     assert!(ct.c0.ntt && ct.c1.ntt);
     // x = c0 + c1·s per prime, then inverse NTT
     let mut x = ct.c0.clone();
-    for i in 0..NPRIMES {
+    pool.sized_for(NPRIMES, 1).par_for_each_mut(&mut x.res, |i, r| {
         let q = PRIMES[i];
-        for j in 0..ctx.n {
+        for (j, v) in r.iter_mut().enumerate() {
             let cs = mul_mod(ct.c1.res[i][j], sk.s_ntt.res[i][j], q);
-            x.res[i][j] = add_mod(x.res[i][j], cs, q);
+            *v = add_mod(*v, cs, q);
         }
-    }
-    x.inverse_ntt(ctx);
+    });
+    x.inverse_ntt_with(ctx, pool);
     // CRT-lift each coefficient and round: m = round(x·2^64 / q) mod 2^64
-    (0..ctx.n)
-        .map(|j| {
-            let mut acc: U192 = [0, 0, 0];
-            for i in 0..NPRIMES {
-                let xi = x.res[i][j];
-                let term = mul_mod(xi, ctx.crt_y[i], PRIMES[i]);
-                let prod = mul_u128_u64(ctx.crt_m[i], term);
-                acc = super::bigint::u192_add(acc, prod);
-            }
-            let lifted = u192_mod_small(acc, ctx.q_big);
-            divround_shift64(lifted, ctx.q_half, ctx.q_big)
-        })
-        .collect()
+    pool.sized_for(ctx.n, 1024).par_map(ctx.n, |j| {
+        let mut acc: U192 = [0, 0, 0];
+        for i in 0..NPRIMES {
+            let xi = x.res[i][j];
+            let term = mul_mod(xi, ctx.crt_y[i], PRIMES[i]);
+            let prod = mul_u128_u64(ctx.crt_m[i], term);
+            acc = super::bigint::u192_add(acc, prod);
+        }
+        let lifted = u192_mod_small(acc, ctx.q_big);
+        divround_shift64(lifted, ctx.q_half, ctx.q_big)
+    })
 }
 
 impl Ciphertext {
@@ -377,6 +400,49 @@ impl Ciphertext {
             for j in 0..dst1.len() {
                 let p = mul_mod_shoup(src1[j], pv[j], ps[j], q);
                 dst1[j] = add_mod(dst1[j], p, q);
+            }
+        }
+    }
+
+    /// Lazy-reduction variant of [`mul_pt_accumulate`](Self::mul_pt_accumulate):
+    /// residues accumulate in [0, 2q) — the Shoup product is left unreduced
+    /// (< 2q) and the running sum gets a single conditional 2q subtraction
+    /// instead of two canonical reductions per coefficient. Sums stay below
+    /// 4q < 2^62, so u64 never overflows. Call [`normalize`](Self::normalize)
+    /// after the last accumulate of a chain; decryption, further homomorphic
+    /// ops, and (transcript-determinism!) serialization all require canonical
+    /// residues.
+    pub fn mul_pt_accumulate_lazy(&mut self, ct: &Ciphertext, pt: &PtNtt) {
+        assert!(self.c0.ntt && ct.c0.ntt);
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            let two_q = 2 * q;
+            let (pv, ps) = (&pt.vals[i], &pt.shoup[i]);
+            let dst0 = &mut self.c0.res[i];
+            let src0 = &ct.c0.res[i];
+            for j in 0..dst0.len() {
+                let p = super::ntt::mul_mod_shoup_lazy(src0[j], pv[j], ps[j], q);
+                let s = dst0[j] + p;
+                dst0[j] = if s >= two_q { s - two_q } else { s };
+            }
+            let dst1 = &mut self.c1.res[i];
+            let src1 = &ct.c1.res[i];
+            for j in 0..dst1.len() {
+                let p = super::ntt::mul_mod_shoup_lazy(src1[j], pv[j], ps[j], q);
+                let s = dst1[j] + p;
+                dst1[j] = if s >= two_q { s - two_q } else { s };
+            }
+        }
+    }
+
+    /// Reduce residues from the lazy [0, 2q) range back to canonical [0, q).
+    pub fn normalize(&mut self) {
+        for i in 0..NPRIMES {
+            let q = PRIMES[i];
+            for v in self.c0.res[i].iter_mut().chain(self.c1.res[i].iter_mut()) {
+                if *v >= q {
+                    *v -= q;
+                }
             }
         }
     }
@@ -633,6 +699,60 @@ mod tests {
             }
         }
         assert_eq!(decrypt(&ctx, &sk, &acc), expect);
+    }
+
+    /// Lazy-reduction accumulate must agree with the strict reference for
+    /// every kt-chain length the matmul plans produce, including chains whose
+    /// intermediate residues cross the q boundary (uniform-share messages put
+    /// mass in [q, 2q) from the very first lazy accumulate).
+    #[test]
+    fn lazy_accumulate_matches_strict_across_chain_lengths() {
+        let (ctx, sk, mut rng) = setup(256);
+        for &chain in &[1usize, 2, 3, 5, 8, 13] {
+            let mut strict = Ciphertext::zero_like(&ctx);
+            let mut lazy = Ciphertext::zero_like(&ctx);
+            let mut crossed_q = false;
+            for step in 0..chain {
+                let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+                let mut w = vec![0u64; ctx.n];
+                for wi in w.iter_mut().take(8) {
+                    *wi = ((rng.next_u64() % 16384) as i64 - 8192) as u64;
+                }
+                w[step % ctx.n] = w[step % ctx.n].wrapping_add(1); // never all-zero
+                let ct = encrypt(&ctx, &sk, &m, &mut rng);
+                let pt = PtNtt::encode(&ctx, &w);
+                strict.mul_pt_accumulate(&ct, &pt);
+                lazy.mul_pt_accumulate_lazy(&ct, &pt);
+                crossed_q = crossed_q
+                    || (0..NPRIMES).any(|i| {
+                        lazy.c0.res[i].iter().any(|&v| v >= PRIMES[i])
+                    });
+            }
+            assert!(crossed_q, "chain {chain}: lazy range [q, 2q) never exercised");
+            lazy.normalize();
+            assert_eq!(lazy.c0, strict.c0, "chain {chain}: c0 residues");
+            assert_eq!(lazy.c1, strict.c1, "chain {chain}: c1 residues");
+            assert_eq!(
+                decrypt(&ctx, &sk, &lazy),
+                decrypt(&ctx, &sk, &strict),
+                "chain {chain}: decryptions"
+            );
+        }
+    }
+
+    #[test]
+    fn decrypt_with_pool_matches_sequential() {
+        // n = 2048 so the CRT-lift stage (min 1024 coeffs/thread) actually
+        // splits across workers instead of degrading to one
+        let (ctx, sk, mut rng) = setup(2048);
+        let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let seq = decrypt(&ctx, &sk, &ct);
+        for threads in [2, 3, 8] {
+            let par = decrypt_with(&ctx, &sk, &ct, WorkerPool::new(threads));
+            assert_eq!(par, seq, "threads={threads}");
+        }
+        assert_eq!(seq, m);
     }
 
     #[test]

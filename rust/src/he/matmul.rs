@@ -19,6 +19,7 @@
 
 use super::bfv::{BfvContext, PtNtt};
 use crate::fixed::RingMat;
+use crate::util::WorkerPool;
 
 /// Tiling plan for an (n × k) · (k × m) product in ring degree N.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,8 +36,17 @@ pub struct MatmulPlan {
 
 impl MatmulPlan {
     /// Choose tile shape minimizing input + output ciphertext count subject
-    /// to nw·kw·mw ≤ N (powers of two for clean strides).
-    pub fn choose(n: usize, k: usize, m: usize, big_n: usize) -> MatmulPlan {
+    /// to nw·kw·mw ≤ N (powers of two for clean strides). `nw_cap` bounds the
+    /// row-tile dimension — the protocol layer passes its cap to limit the
+    /// transient NTT-cached weight-tile memory (tile count = k·m·nw/N) while
+    /// staying close to the comm optimum; `None` searches unconstrained.
+    pub fn choose(
+        n: usize,
+        k: usize,
+        m: usize,
+        big_n: usize,
+        nw_cap: Option<usize>,
+    ) -> MatmulPlan {
         let mut best: Option<(usize, MatmulPlan)> = None;
         let pow2 = |limit: usize| {
             let mut v = vec![];
@@ -48,7 +58,8 @@ impl MatmulPlan {
             v
         };
         for &kw in pow2(k.min(big_n)).iter() {
-            for &nw in pow2(n.min(big_n / kw)).iter() {
+            let nw_max = n.min(big_n / kw).min(nw_cap.unwrap_or(usize::MAX));
+            for &nw in pow2(nw_max).iter() {
                 let mw_cap = big_n / (nw * kw);
                 if mw_cap == 0 {
                     continue;
@@ -98,6 +109,16 @@ impl MatmulPlan {
     /// coefficients (mod-2^64 values, zero padded).
     pub fn encode_x_tile(&self, x: &RingMat, rt: usize, kt: usize) -> Vec<u64> {
         let mut out = vec![0u64; self.big_n];
+        self.encode_x_tile_into(x, rt, kt, &mut out);
+        out
+    }
+
+    /// [`encode_x_tile`](Self::encode_x_tile) into a caller-owned scratch
+    /// buffer (zero-filled here) — the tile loops reuse one buffer per worker
+    /// instead of allocating N coefficients per tile.
+    pub fn encode_x_tile_into(&self, x: &RingMat, rt: usize, kt: usize, out: &mut [u64]) {
+        assert_eq!(out.len(), self.big_n);
+        out.fill(0);
         let r0 = rt * self.nw;
         let k0 = kt * self.kw;
         for i in 0..self.nw {
@@ -113,12 +134,20 @@ impl MatmulPlan {
                 out[i * self.kw * self.mw + j] = x.at(r, c);
             }
         }
-        out
     }
 
     /// Encode one W tile (rows [k0, k0+kw) × cols [m0, m0+mw)).
     pub fn encode_w_tile(&self, w: &RingMat, kt: usize, mt: usize) -> Vec<u64> {
         let mut out = vec![0u64; self.big_n];
+        self.encode_w_tile_into(w, kt, mt, &mut out);
+        out
+    }
+
+    /// [`encode_w_tile`](Self::encode_w_tile) into a caller-owned scratch
+    /// buffer (zero-filled here).
+    pub fn encode_w_tile_into(&self, w: &RingMat, kt: usize, mt: usize, out: &mut [u64]) {
+        assert_eq!(out.len(), self.big_n);
+        out.fill(0);
         let k0 = kt * self.kw;
         let m0 = mt * self.mw;
         for j in 0..self.kw {
@@ -134,20 +163,40 @@ impl MatmulPlan {
                 out[(self.kw - 1 - j) + c * self.kw] = w.at(r, cc);
             }
         }
-        out
     }
 
     /// Encode and NTT-cache all weight tiles.
     pub fn encode_weights(&self, ctx: &BfvContext, w: &RingMat) -> Vec<Vec<PtNtt>> {
+        self.encode_weights_with(ctx, w, WorkerPool::single())
+    }
+
+    /// [`encode_weights`](Self::encode_weights) with the tiles spread over
+    /// `pool` (a single-tile plan parallelizes inside the NTT encode
+    /// instead). Tile order — and hence the cache layout — is identical at
+    /// any pool size.
+    pub fn encode_weights_with(
+        &self,
+        ctx: &BfvContext,
+        w: &RingMat,
+        pool: WorkerPool,
+    ) -> Vec<Vec<PtNtt>> {
         assert_eq!(w.rows, self.k);
         assert_eq!(w.cols, self.m);
-        (0..self.tiles_k())
-            .map(|kt| {
-                (0..self.tiles_m())
-                    .map(|mt| PtNtt::encode(ctx, &self.encode_w_tile(w, kt, mt)))
-                    .collect()
-            })
-            .collect()
+        let (tk, tm) = (self.tiles_k(), self.tiles_m());
+        let n_tiles = tk * tm;
+        if n_tiles == 1 {
+            return vec![vec![PtNtt::encode_with(ctx, &self.encode_w_tile(w, 0, 0), pool)]];
+        }
+        let flat: Vec<PtNtt> = pool.sized_for(n_tiles, 1).par_map_with(
+            n_tiles,
+            || vec![0u64; self.big_n],
+            |scratch, t| {
+                self.encode_w_tile_into(w, t / tm, t % tm, scratch);
+                PtNtt::encode(ctx, scratch)
+            },
+        );
+        let mut it = flat.into_iter();
+        (0..tk).map(|_| (0..tm).map(|_| it.next().unwrap()).collect()).collect()
     }
 
     /// Extract an output tile from decrypted coefficients into `out`
@@ -222,7 +271,7 @@ mod tests {
     #[test]
     fn plan_respects_capacity() {
         for (n, k, m) in [(128, 768, 768), (128, 64, 128), (4, 4, 4), (128, 768, 3072)] {
-            let p = MatmulPlan::choose(n, k, m, 8192);
+            let p = MatmulPlan::choose(n, k, m, 8192, None);
             assert!(p.nw * p.kw * p.mw <= 8192, "{p:?}");
             assert!(p.nw >= 1 && p.kw >= 1 && p.mw >= 1);
         }
@@ -230,7 +279,7 @@ mod tests {
 
     #[test]
     fn plan_costs_reasonable() {
-        let p = MatmulPlan::choose(128, 768, 768, 8192);
+        let p = MatmulPlan::choose(128, 768, 768, 8192, None);
         // must beat the naive row-per-ct (128 in, 9856 out) by a wide margin
         assert!(p.input_cts() + p.output_cts() < 2000, "{p:?}");
     }
@@ -241,7 +290,7 @@ mod tests {
         for (n, k, m, big_n) in [(6, 8, 10, 64), (4, 16, 4, 128), (3, 5, 7, 64)] {
             let x = rand_mat(n, k, 1 << 20, 1);
             let w = rand_mat(k, m, 1 << 13, 2);
-            let plan = MatmulPlan::choose(n, k, m, big_n);
+            let plan = MatmulPlan::choose(n, k, m, big_n, None);
             let mut out = RingMat::zeros(n, m);
             for rt in 0..plan.tiles_n() {
                 for mt in 0..plan.tiles_m() {
@@ -273,7 +322,7 @@ mod tests {
         // X coefficients are uniform ring elements (they are *shares*)
         let x = RingMat::from_vec(n, k, (0..n * k).map(|_| rng.next_u64()).collect());
         let w = rand_mat(k, m, 1 << 13, 3);
-        let plan = MatmulPlan::choose(n, k, m, big_n);
+        let plan = MatmulPlan::choose(n, k, m, big_n, None);
         let wt = plan.encode_weights(&ctx, &w);
         // encrypt X tiles
         let xct: Vec<Vec<_>> = (0..plan.tiles_n())

@@ -8,5 +8,5 @@ pub mod matmul;
 pub mod ntt;
 pub mod params;
 
-pub use bfv::{decrypt, encrypt, BfvContext, Ciphertext, Ctx, PtNtt, SecretKey};
+pub use bfv::{decrypt, decrypt_with, encrypt, BfvContext, Ciphertext, Ctx, PtNtt, SecretKey};
 pub use matmul::MatmulPlan;

@@ -13,6 +13,12 @@
 //!   cipherprune run --model bert-base --scale 8 --engine bolt --seq 128
 //!   cipherprune serve --model tiny --requests 8 --engine cipherprune
 //!   cipherprune oracle
+//!
+//! PERF: `run` and `serve` take `--threads <n>` to pin the per-party worker
+//! pool for the HE/OT hot paths (default: host-sized, `THREADS` env
+//! overridable). Outputs and transcripts are identical at any setting; see
+//! the coordinator docs ("Performance model") and `bench_e2e` for the
+//! measured speedup.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -109,7 +115,10 @@ fn cmd_run(kv: HashMap<String, String>) {
         let t_prep = std::time::Instant::now();
         let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
         let prep_s = t_prep.elapsed().as_secs_f64();
-        let ec = EngineConfig::new(engine).he_n(he_n).schedule(schedule_for(&cfg));
+        let mut ec = EngineConfig::new(engine).he_n(he_n).schedule(schedule_for(&cfg));
+        if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
+            ec = ec.threads(t);
+        }
         let mut session = Session::start(model, ec);
         println!(
             "offline: weight encode {}  session setup {} ({} setup traffic)",
@@ -197,7 +206,13 @@ fn cmd_serve(kv: HashMap<String, String>) {
     };
     let mut router = Router::new(
         Arc::new(weights),
-        RouterConfig { policy, workers, he_n, schedule: Some(schedule_for(&cfg)) },
+        RouterConfig {
+            policy,
+            workers,
+            he_n,
+            schedule: Some(schedule_for(&cfg)),
+            threads: kv.get("threads").and_then(|v| v.parse().ok()),
+        },
     );
     // mixed-length workload: half short, half long
     let wl_s = Workload::qnli_like(&cfg, seq);

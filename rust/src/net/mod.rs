@@ -29,11 +29,36 @@ impl PhaseStats {
     }
 }
 
+/// Deterministic content mix over a byte stream (u64-word FNV-1a variant —
+/// word-wise so a ciphertext flight costs len/8 mix steps, not len); pass
+/// the previous digest to chain.
+pub fn content_mix(mut h: u64, data: &[u8]) -> u64 {
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        h ^= u64::from_le_bytes(c.try_into().unwrap());
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for &b in chunks.remainder() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Digest initial value (the FNV-1a offset basis).
+pub const DIGEST_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
 /// Shared transcript of all traffic on a channel pair, grouped by phase.
 #[derive(Debug, Default)]
 pub struct Transcript {
     pub phases: BTreeMap<String, PhaseStats>,
     pub current: String,
+    /// Per-endpoint running content digest of every byte sent (index =
+    /// endpoint id). Each endpoint's sends are protocol-sequential and each
+    /// updates only its own slot, so the pair is a deterministic function of
+    /// the protocol regardless of thread scheduling — the thread-count
+    /// invariance tests pin wire *content*, not just byte counts, on it.
+    pub content: [u64; 2],
 }
 
 impl Transcript {
@@ -52,6 +77,7 @@ pub fn new_transcript() -> SharedTranscript {
     Arc::new(Mutex::new(Transcript {
         phases: BTreeMap::new(),
         current: "setup".to_string(),
+        content: [DIGEST_INIT; 2],
     }))
 }
 
@@ -86,6 +112,12 @@ pub struct Chan {
     rx: Receiver<Vec<u8>>,
     transcript: SharedTranscript,
     sent_since_recv: bool,
+    /// Index into `Transcript::content` (0 for the first endpoint of the
+    /// pair, 1 for the second).
+    endpoint: usize,
+    /// Running content digest of this endpoint's sends, folded lock-free and
+    /// mirrored into `Transcript::content[endpoint]` on each send.
+    content: u64,
     /// Local (endpoint) totals, cheap to read without locking.
     pub sent_bytes: u64,
     pub sent_msgs: u64,
@@ -102,6 +134,8 @@ impl Chan {
             rx: rx0,
             transcript: t.clone(),
             sent_since_recv: false,
+            endpoint: 0,
+            content: DIGEST_INIT,
             sent_bytes: 0,
             sent_msgs: 0,
         };
@@ -110,6 +144,8 @@ impl Chan {
             rx: rx1,
             transcript: t.clone(),
             sent_since_recv: false,
+            endpoint: 1,
+            content: DIGEST_INIT,
             sent_bytes: 0,
             sent_msgs: 0,
         };
@@ -125,31 +161,31 @@ impl Chan {
         }
     }
 
-    pub fn send_bytes(&mut self, data: &[u8]) {
+    /// Shared accounting for every outgoing message: fold the content digest
+    /// outside the shared lock (only the finished u64 goes under it), then
+    /// record bytes/msgs and mirror the digest into the transcript.
+    fn record_send(&mut self, data: &[u8]) {
+        self.content = content_mix(self.content, data);
         {
             let mut t = self.transcript.lock().unwrap();
             let cur = t.current.clone();
             let p = t.phases.entry(cur).or_default();
             p.bytes += data.len() as u64;
             p.msgs += 1;
+            t.content[self.endpoint] = self.content;
         }
         self.sent_bytes += data.len() as u64;
         self.sent_msgs += 1;
         self.sent_since_recv = true;
+    }
+
+    pub fn send_bytes(&mut self, data: &[u8]) {
+        self.record_send(data);
         self.tx.send(data.to_vec()).expect("peer hung up");
     }
 
     pub fn send_vec(&mut self, data: Vec<u8>) {
-        {
-            let mut t = self.transcript.lock().unwrap();
-            let cur = t.current.clone();
-            let p = t.phases.entry(cur).or_default();
-            p.bytes += data.len() as u64;
-            p.msgs += 1;
-        }
-        self.sent_bytes += data.len() as u64;
-        self.sent_msgs += 1;
-        self.sent_since_recv = true;
+        self.record_send(&data);
         self.tx.send(data).expect("peer hung up");
     }
 
@@ -253,6 +289,28 @@ mod tests {
         a.send_u64s(&[7, u64::MAX]);
         assert_eq!(a.recv_u64(), 42);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn content_digest_tracks_wire_bytes_per_endpoint() {
+        let send = |payload_a: &'static [u8], payload_b: &'static [u8]| {
+            let (mut a, mut b, t) = Chan::pair();
+            let h = thread::spawn(move || {
+                let _ = b.recv_bytes();
+                b.send_bytes(payload_b);
+            });
+            a.send_bytes(payload_a);
+            let _ = a.recv_bytes();
+            h.join().unwrap();
+            let tr = t.lock().unwrap();
+            tr.content
+        };
+        let d1 = send(&[1, 2, 3], &[9]);
+        let d2 = send(&[1, 2, 3], &[9]);
+        assert_eq!(d1, d2, "same streams → same digests");
+        let d3 = send(&[1, 2, 4], &[9]);
+        assert_ne!(d1[0], d3[0], "endpoint-0 content change detected");
+        assert_eq!(d1[1], d3[1], "endpoint-1 stream unchanged");
     }
 
     #[test]

@@ -14,9 +14,15 @@
 
 use crate::net::Chan;
 use crate::party::PartyCtx;
-use crate::util::{AesPrg, CrHash};
+use crate::util::{AesPrg, CrHash, WorkerPool};
 
 pub const KAPPA: usize = 128;
+
+/// Minimum extension-batch size before the PRG-expansion / transpose / hash
+/// stages run on the worker pool — below this, fork/join overhead beats the
+/// AES work saved. Protocol batches in the non-linear layers run 10⁴–10⁶
+/// instances; tiny control batches stay sequential.
+const PAR_MIN_OT: usize = 8192;
 
 /// Transpose a 64×64 bit matrix held as 64 u64 rows (Hacker's Delight 7-3).
 pub fn transpose64(a: &mut [u64; 64]) {
@@ -37,15 +43,16 @@ pub fn transpose64(a: &mut [u64; 64]) {
 
 /// Bit-matrix transpose: input `cols` = KAPPA column bitstrings of `n` bits each
 /// (each column packed LSB-first into u64 words); output: `n` rows of 128 bits.
-fn transpose_cols_to_rows(cols: &[Vec<u64>], n: usize) -> Vec<u128> {
+/// Each 64-row block is independent, so the word loop runs on the pool.
+fn transpose_cols_to_rows(cols: &[Vec<u64>], n: usize, pool: WorkerPool) -> Vec<u128> {
     assert_eq!(cols.len(), KAPPA);
     let words = n.div_ceil(64);
-    let mut rows = vec![0u128; words * 64];
-    let mut block = [0u64; 64];
     // process 64 rows at a time; two 64x64 sub-blocks (columns 0-63, 64-127)
     // transpose64 maps (r, c) -> (63-c, 63-r); reversing row order on input
     // and output turns that into a plain (r, c) -> (c, r) transpose.
-    for w in 0..words {
+    let blocks: Vec<[u128; 64]> = pool.sized_for(words, 4).par_map(words, |w| {
+        let mut out = [0u128; 64];
+        let mut block = [0u64; 64];
         for half in 0..2 {
             for j in 0..64 {
                 block[63 - j] = cols[half * 64 + j][w];
@@ -54,9 +61,14 @@ fn transpose_cols_to_rows(cols: &[Vec<u64>], n: usize) -> Vec<u128> {
             // block[63-i] now holds, at bit j, the bit of column (half*64+j)
             // for row (w*64 + i)
             for i in 0..64 {
-                rows[w * 64 + i] |= (block[63 - i] as u128) << (half * 64);
+                out[i] |= (block[63 - i] as u128) << (half * 64);
             }
         }
+        out
+    });
+    let mut rows = Vec::with_capacity(words * 64);
+    for b in blocks {
+        rows.extend_from_slice(&b);
     }
     rows.truncate(n);
     rows
@@ -98,9 +110,9 @@ struct SenderBase {
 
 /// Per-direction IKNP state for the extension *receiver*.
 struct ReceiverBase {
-    /// Both PRG streams (k_0, k_1) per base OT j.
-    streams0: Vec<AesPrg>,
-    streams1: Vec<AesPrg>,
+    /// Both PRG streams (k_0, k_1) per base OT j, paired so the column loop
+    /// can hand each worker ownership of one column's streams.
+    streams: Vec<(AesPrg, AesPrg)>,
 }
 
 /// OT endpoint: supports acting as sender and receiver of extended OTs
@@ -110,6 +122,10 @@ pub struct OtCtx {
     recv_base: ReceiverBase,
     hash: CrHash,
     tweak: u64,
+    /// Worker pool for batch PRG expansion / transpose / hashing
+    /// ([`set_pool`](Self::set_pool)); every parallel path is
+    /// transcript-deterministic at any pool size.
+    pool: WorkerPool,
 }
 
 impl OtCtx {
@@ -145,25 +161,39 @@ impl OtCtx {
         };
         // base OTs for the direction where the *other* party is sender:
         // we are receiver and hold both seed streams.
-        let (streams0, streams1) = {
+        let streams = {
             let mut prg = ctx.dealer_prg(&format!("baseot-dir{other}"));
-            let mut s0 = Vec::with_capacity(KAPPA);
-            let mut s1 = Vec::with_capacity(KAPPA);
+            let mut s = Vec::with_capacity(KAPPA);
             for _ in 0..KAPPA {
                 let mut k0 = [0u8; 16];
                 let mut k1 = [0u8; 16];
                 prg.fill_bytes(&mut k0);
                 prg.fill_bytes(&mut k1);
-                s0.push(AesPrg::new(k0));
-                s1.push(AesPrg::new(k1));
+                s.push((AesPrg::new(k0), AesPrg::new(k1)));
             }
-            (s0, s1)
+            s
         };
         OtCtx {
             send_base: SenderBase { s_bits, streams: my_streams },
-            recv_base: ReceiverBase { streams0, streams1 },
+            recv_base: ReceiverBase { streams },
             hash: CrHash::new(),
             tweak: 0,
+            pool: WorkerPool::auto(),
+        }
+    }
+
+    /// Install the worker pool used for large extension batches (plumbed from
+    /// `EngineConfig::threads` via `Mpc::set_pool`).
+    pub fn set_pool(&mut self, pool: WorkerPool) {
+        self.pool = pool;
+    }
+
+    /// The pool for an `n`-instance batch: sequential below [`PAR_MIN_OT`].
+    fn pool_for(&self, n: usize) -> WorkerPool {
+        if n >= PAR_MIN_OT {
+            self.pool
+        } else {
+            WorkerPool::single()
         }
     }
 
@@ -177,33 +207,40 @@ impl OtCtx {
 
     /// Random OT, extension-sender side: returns n pairs (m0, m1) of 128-bit
     /// random messages. The peer must call [`rot_recv`] with n choice bits.
+    ///
+    /// Large batches run the column PRG expansion, the bit transpose, and the
+    /// per-row hashing on the pool. Each base-OT column owns its PRG stream
+    /// and advances it by exactly `words`, so stream states — and the
+    /// transcript — are identical at any pool size.
     pub fn rot_send(&mut self, ch: &mut Chan, n: usize) -> Vec<(u128, u128)> {
         let words = n.div_ceil(64);
         // receive u_j columns from receiver
         let u_flat = ch.recv_u64s();
         assert_eq!(u_flat.len(), words * KAPPA, "IKNP u matrix size");
-        let mut qcols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
-        for j in 0..KAPPA {
-            let mut col = vec![0u64; words];
-            self.send_base.streams[j].fill_u64(&mut col);
-            if (self.send_base.s_bits >> j) & 1 == 1 {
-                for (c, &u) in col.iter_mut().zip(&u_flat[j * words..(j + 1) * words]) {
-                    *c ^= u;
-                }
-            }
-            qcols.push(col);
-        }
-        let rows = transpose_cols_to_rows(&qcols, n);
+        let pool = self.pool_for(n);
         let s = self.send_base.s_bits;
+        let u_flat = &u_flat;
+        let qcols: Vec<Vec<u64>> =
+            pool.par_map_mut(&mut self.send_base.streams, |j, prg| {
+                let mut col = vec![0u64; words];
+                prg.fill_u64(&mut col);
+                if (s >> j) & 1 == 1 {
+                    for (c, &u) in col.iter_mut().zip(&u_flat[j * words..(j + 1) * words])
+                    {
+                        *c ^= u;
+                    }
+                }
+                col
+            });
+        let rows = transpose_cols_to_rows(&qcols, n, pool);
         let t0 = self.next_tweak(n);
-        rows.iter()
-            .enumerate()
-            .map(|(i, &q)| {
-                let m0 = self.hash.hash128(t0 + i as u64, q);
-                let m1 = self.hash.hash128(t0 + i as u64, q ^ s);
-                (m0, m1)
-            })
-            .collect()
+        let hash = &self.hash;
+        pool.par_map(n, |i| {
+            let q = rows[i];
+            let m0 = hash.hash128(t0 + i as u64, q);
+            let m1 = hash.hash128(t0 + i as u64, q ^ s);
+            (m0, m1)
+        })
     }
 
     /// Random OT, extension-receiver side: choices packed LSB-first.
@@ -218,25 +255,31 @@ impl OtCtx {
                 r[i / 64] |= 1 << (i % 64);
             }
         }
-        let mut tcols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
+        let pool = self.pool_for(n);
+        let r = &r;
+        // expand both PRG streams per base OT and form u_j = t_j ⊕ g_j ⊕ r
+        let cols: Vec<(Vec<u64>, Vec<u64>)> =
+            pool.par_map_mut(&mut self.recv_base.streams, |_, (s0, s1)| {
+                let mut t = vec![0u64; words];
+                s0.fill_u64(&mut t);
+                let mut u = vec![0u64; words];
+                s1.fill_u64(&mut u);
+                for (uw, (tw, rw)) in u.iter_mut().zip(t.iter().zip(r)) {
+                    *uw ^= tw ^ rw;
+                }
+                (t, u)
+            });
         let mut u_flat = Vec::with_capacity(KAPPA * words);
-        for j in 0..KAPPA {
-            let mut t = vec![0u64; words];
-            self.recv_base.streams0[j].fill_u64(&mut t);
-            let mut g = vec![0u64; words];
-            self.recv_base.streams1[j].fill_u64(&mut g);
-            for w in 0..words {
-                u_flat.push(t[w] ^ g[w] ^ r[w]);
-            }
+        let mut tcols = Vec::with_capacity(KAPPA);
+        for (t, u) in cols {
+            u_flat.extend_from_slice(&u);
             tcols.push(t);
         }
         ch.send_u64s(&u_flat);
-        let rows = transpose_cols_to_rows(&tcols, n);
+        let rows = transpose_cols_to_rows(&tcols, n, pool);
         let t0 = self.next_tweak(n);
-        rows.iter()
-            .enumerate()
-            .map(|(i, &t)| self.hash.hash128(t0 + i as u64, t))
-            .collect()
+        let hash = &self.hash;
+        pool.par_map(n, |i| hash.hash128(t0 + i as u64, rows[i]))
     }
 
     // ---------------------------------------------------------------- COT

@@ -15,44 +15,39 @@
 
 use super::Engine2P;
 use crate::fixed::RingMat;
-use crate::he::bfv::{decrypt, encrypt, Ciphertext};
+use crate::he::bfv::{decrypt, decrypt_with, encrypt, Ciphertext};
 use crate::he::{MatmulPlan, PtNtt};
+use crate::util::Xoshiro256;
 
 /// Cap on the row-tile dimension: bounds the transient NTT-cached weight-tile
 /// memory (tile count = k·m·nw/N) while staying close to the comm optimum.
+/// Fed to [`MatmulPlan::choose`] as the `nw_cap` — the tiling policy itself
+/// lives in one place, in the `he` layer.
 pub const NW_CAP: usize = 8;
 
-fn choose_plan(n: usize, k: usize, m: usize, big_n: usize) -> MatmulPlan {
-    let mut best: Option<(usize, MatmulPlan)> = None;
-    let mut kw = 1;
-    while kw <= k.min(big_n) {
-        let mut nw = 1;
-        while nw <= n.min(big_n / kw).min(NW_CAP) {
-            let mw_cap = big_n / (nw * kw);
-            if mw_cap >= 1 {
-                let mw = mw_cap.min(m.next_power_of_two());
-                let plan = MatmulPlan { n, k, m, nw, kw, mw, big_n };
-                let cost = plan.input_cts() + plan.output_cts();
-                if best.map_or(true, |(c, _)| cost < c) {
-                    best = Some((cost, plan));
-                }
-            }
-            nw *= 2;
-        }
-        kw *= 2;
-    }
-    best.expect("no valid matmul plan").1
-}
-
 /// Encrypt all X tiles and send them (batched into one message).
+///
+/// Parallel-deterministic: one 64-bit seed per tile is pre-drawn from the
+/// party RNG *in tile order*, and each tile's encryption randomness (c1 PRG
+/// seed + CBD noise) is expanded from its own `Xoshiro256` stream seeded by
+/// it — the wire bytes are identical at any pool size.
 fn send_encrypted_tiles(e: &mut Engine2P, x: &RingMat, plan: &MatmulPlan) {
-    let mut wire: Vec<u64> = Vec::new();
-    for rt in 0..plan.tiles_n() {
-        for kt in 0..plan.tiles_k() {
-            let coeffs = plan.encode_x_tile(x, rt, kt);
-            let ct = encrypt(&e.he, &e.sk, &coeffs, &mut e.mpc.ctx.rng);
-            wire.extend(ct.to_wire());
-        }
+    let (tn, tk) = (plan.tiles_n(), plan.tiles_k());
+    let n_tiles = tn * tk;
+    let seeds: Vec<u64> = (0..n_tiles).map(|_| e.mpc.ctx.rng.next_u64()).collect();
+    let (he, sk) = (&e.he, &e.sk);
+    let tiles: Vec<Vec<u64>> = e.pool.sized_for(n_tiles, 1).par_map_with(
+        n_tiles,
+        || vec![0u64; he.n],
+        |scratch, t| {
+            plan.encode_x_tile_into(x, t / tk, t % tk, scratch);
+            let mut trng = Xoshiro256::seed_from_u64(seeds[t]);
+            encrypt(he, sk, scratch, &mut trng).to_wire()
+        },
+    );
+    let mut wire: Vec<u64> = Vec::with_capacity(tiles.iter().map(Vec::len).sum());
+    for t in tiles {
+        wire.extend(t);
     }
     e.mpc.ctx.ch.send_u64s(&wire);
 }
@@ -74,49 +69,75 @@ fn recv_encrypted_tiles(e: &mut Engine2P, plan: &MatmulPlan) -> Vec<Vec<Cipherte
 /// Evaluator side: multiply-accumulate tiles against weight tiles, mask each
 /// output ciphertext with a uniform polynomial, send back. Returns the
 /// evaluator's (negative-mask) output share.
+///
+/// Every (rt, mt) output ciphertext is independent, so the kt-chains run on
+/// the pool; the uniform masks are pre-drawn sequentially in (rt, mt) order
+/// so the party RNG stream — and the transcript — never depends on the pool
+/// size. The kt-chain itself accumulates lazily in [0, 2q) with a single
+/// normalize before masking.
 fn evaluate_and_mask(
     e: &mut Engine2P,
     cts: &[Vec<Ciphertext>],
     wt: &[Vec<PtNtt>],
     plan: &MatmulPlan,
 ) -> RingMat {
-    let mut wire: Vec<u64> = Vec::new();
-    let mut my_share = RingMat::zeros(plan.n, plan.m);
-    for rt in 0..plan.tiles_n() {
-        for mt in 0..plan.tiles_m() {
-            let mut acc = Ciphertext::zero_like(&e.he);
-            for kt in 0..plan.tiles_k() {
-                acc.mul_pt_accumulate(&cts[rt][kt], &wt[kt][mt]);
-            }
-            // uniform mask over all coefficients (hides cross-term residue)
-            let r: Vec<u64> = (0..e.he.n).map(|_| e.mpc.ctx.rng.next_u64()).collect();
-            acc.add_plain(&e.he, &r);
-            // our share is −r at the extraction positions
-            let mut neg = RingMat::zeros(plan.n, plan.m);
-            plan.extract_out_tile(&r, rt, mt, &mut neg);
-            for (o, &v) in my_share.data.iter_mut().zip(&neg.data) {
-                *o = o.wrapping_sub(v);
-            }
-            wire.extend(acc.to_wire());
+    let (tm, tk) = (plan.tiles_m(), plan.tiles_k());
+    let n_out = plan.output_cts();
+    let masks: Vec<Vec<u64>> = (0..n_out)
+        .map(|_| (0..e.he.n).map(|_| e.mpc.ctx.rng.next_u64()).collect())
+        .collect();
+    let he = &e.he;
+    let outs: Vec<Vec<u64>> = e.pool.sized_for(n_out, 1).par_map(n_out, |t| {
+        let (rt, mt) = (t / tm, t % tm);
+        let mut acc = Ciphertext::zero_like(he);
+        for kt in 0..tk {
+            acc.mul_pt_accumulate_lazy(&cts[rt][kt], &wt[kt][mt]);
         }
+        acc.normalize();
+        // uniform mask over all coefficients (hides cross-term residue)
+        acc.add_plain(he, &masks[t]);
+        acc.to_wire()
+    });
+    // our share is −r at the extraction positions (tiles cover disjoint
+    // output cells, so one accumulate-then-negate pass suffices)
+    let mut neg = RingMat::zeros(plan.n, plan.m);
+    for (t, r) in masks.iter().enumerate() {
+        plan.extract_out_tile(r, t / tm, t % tm, &mut neg);
+    }
+    let my_share = RingMat::from_vec(
+        plan.n,
+        plan.m,
+        neg.data.iter().map(|&v| 0u64.wrapping_sub(v)).collect(),
+    );
+    let mut wire: Vec<u64> = Vec::with_capacity(outs.iter().map(Vec::len).sum());
+    for o in outs {
+        wire.extend(o);
     }
     e.mpc.ctx.ch.send_u64s(&wire);
     my_share
 }
 
-/// Decryptor side: receive masked outputs, decrypt, extract.
+/// Decryptor side: receive masked outputs, decrypt, extract. Many output
+/// ciphertexts decrypt on the pool in parallel; a single one instead spreads
+/// its inverse NTT + U192 CRT lift across the pool.
 fn recv_and_decrypt(e: &mut Engine2P, plan: &MatmulPlan) -> RingMat {
     let wire = e.mpc.ctx.ch.recv_u64s();
     let per = 2 + 2 * crate::he::params::NPRIMES * e.he.n;
-    assert_eq!(wire.len(), per * plan.output_cts(), "output message size");
+    let n_out = plan.output_cts();
+    assert_eq!(wire.len(), per * n_out, "output message size");
+    let (he, sk) = (&e.he, &e.sk);
+    let chunks: Vec<&[u64]> = wire.chunks_exact(per).collect();
+    let coeffs: Vec<Vec<u64>> = if n_out > 1 {
+        e.pool.sized_for(n_out, 1).par_map(n_out, |t| {
+            decrypt(he, sk, &Ciphertext::from_wire(he, chunks[t]))
+        })
+    } else {
+        vec![decrypt_with(he, sk, &Ciphertext::from_wire(he, chunks[0]), e.pool)]
+    };
+    let tm = plan.tiles_m();
     let mut out = RingMat::zeros(plan.n, plan.m);
-    let mut it = wire.chunks_exact(per);
-    for rt in 0..plan.tiles_n() {
-        for mt in 0..plan.tiles_m() {
-            let ct = Ciphertext::from_wire(&e.he, it.next().unwrap());
-            let coeffs = decrypt(&e.he, &e.sk, &ct);
-            plan.extract_out_tile(&coeffs, rt, mt, &mut out);
-        }
+    for (t, c) in coeffs.iter().enumerate() {
+        plan.extract_out_tile(c, t / tm, t % tm, &mut out);
     }
     out
 }
@@ -130,11 +151,11 @@ pub fn pi_matmul_weights(
     m: usize,
 ) -> RingMat {
     let (n, k) = (x_share.rows, x_share.cols);
-    let plan = choose_plan(n, k, m, e.he.n);
+    let plan = MatmulPlan::choose(n, k, m, e.he.n, Some(NW_CAP));
     if e.is_p0() {
         let w = w.expect("P0 must hold weights");
         assert_eq!((w.rows, w.cols), (k, m));
-        let wt = plan.encode_weights(&e.he, w);
+        let wt = plan.encode_weights_with(&e.he, w, e.pool);
         let cts = recv_encrypted_tiles(e, &plan);
         let he_share = evaluate_and_mask(e, &cts, &wt, &plan);
         // local term X0·W
@@ -167,12 +188,12 @@ fn cross_term(
     m: usize,
 ) -> RingMat {
     // packed product: (m × k) · (k × n)
-    let plan = choose_plan(m, k, n, e.he.n);
+    let plan = MatmulPlan::choose(m, k, n, e.he.n, Some(NW_CAP));
     if evaluating {
         let xt = x_eval_t.unwrap(); // (k × n)
         let (lo, hi) = limb_split(xt);
-        let wt_lo = plan.encode_weights(&e.he, &lo);
-        let wt_hi = plan.encode_weights(&e.he, &hi);
+        let wt_lo = plan.encode_weights_with(&e.he, &lo, e.pool);
+        let wt_hi = plan.encode_weights_with(&e.he, &hi, e.pool);
         let cts = recv_encrypted_tiles(e, &plan);
         let s_lo = evaluate_and_mask(e, &cts, &wt_lo, &plan);
         let s_hi = evaluate_and_mask(e, &cts, &wt_hi, &plan);
@@ -378,8 +399,15 @@ mod tests {
 
     #[test]
     fn plan_cap_respected() {
-        let p = choose_plan(128, 768, 768, 8192);
+        let p = MatmulPlan::choose(128, 768, 768, 8192, Some(NW_CAP));
         assert!(p.nw <= NW_CAP);
         assert!(p.nw * p.kw * p.mw <= 8192);
+        // the capped search must agree with the historical protocol chooser:
+        // same cost metric, same ascending kw/nw iteration, same tie-break
+        let unc = MatmulPlan::choose(128, 768, 768, 8192, None);
+        assert!(
+            p.input_cts() + p.output_cts() >= unc.input_cts() + unc.output_cts(),
+            "cap can only cost, never gain"
+        );
     }
 }

@@ -28,6 +28,7 @@ use crate::fixed::Fix;
 use crate::gates::{Mpc, TripleMode};
 use crate::he::{BfvContext, Ctx, SecretKey};
 use crate::party::PartyCtx;
+use crate::util::WorkerPool;
 
 /// Full two-party protocol endpoint: MPC gates + an HE keypair per party.
 pub struct Engine2P {
@@ -35,6 +36,10 @@ pub struct Engine2P {
     pub he: Ctx,
     pub sk: SecretKey,
     pub fix: Fix,
+    /// Worker pool for the data-parallel HE hot loops (tile encrypt /
+    /// evaluate / decrypt); also installed into the OT layer at construction.
+    /// All parallel paths are transcript-deterministic at any pool size.
+    pub pool: WorkerPool,
     /// Suffix appended to every phase label (the coordinator sets "#<layer>"
     /// so per-protocol traffic is bucketed per layer — Table 3, Fig. 10).
     phase_ctx: std::cell::RefCell<String>,
@@ -42,10 +47,24 @@ pub struct Engine2P {
 
 impl Engine2P {
     pub fn new(ctx: PartyCtx, mode: TripleMode, he_n: usize, fix: Fix) -> Self {
+        Self::with_pool(ctx, mode, he_n, fix, WorkerPool::auto())
+    }
+
+    /// [`new`](Self::new) with an explicit worker pool (the coordinator plumbs
+    /// `EngineConfig::threads` here; `WorkerPool::single()` reproduces the
+    /// sequential engine exactly — same outputs, same transcript).
+    pub fn with_pool(
+        ctx: PartyCtx,
+        mode: TripleMode,
+        he_n: usize,
+        fix: Fix,
+        pool: WorkerPool,
+    ) -> Self {
         let mut mpc = Mpc::new(ctx, mode);
+        mpc.set_pool(pool);
         let he = BfvContext::new(he_n);
         let sk = SecretKey::gen(&he, &mut mpc.ctx.rng);
-        Engine2P { mpc, he, sk, fix, phase_ctx: std::cell::RefCell::new(String::new()) }
+        Engine2P { mpc, he, sk, fix, pool, phase_ctx: std::cell::RefCell::new(String::new()) }
     }
 
     pub fn is_p0(&self) -> bool {

@@ -1,10 +1,13 @@
-//! Shared utilities: seeded RNGs, mini-JSON, micro-bench harness.
+//! Shared utilities: seeded RNGs, mini-JSON, micro-bench harness, and the
+//! scoped worker pool behind the data-parallel HE/OT hot paths.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod propcheck;
 pub mod rng;
 
 pub use json::Json;
+pub use pool::WorkerPool;
 pub use propcheck::{gen_range, propcheck};
 pub use rng::{AesPrg, CrHash, Xoshiro256};

@@ -1,0 +1,233 @@
+//! Scoped worker pool for the data-parallel HE/OT hot paths.
+//!
+//! Design constraints (why this is ~150 lines and not a dependency):
+//! - **std-only**: `std::thread::scope` (fork/join without `'static` bounds)
+//!   is all the machinery the hot loops need; the container has no rayon.
+//! - **deterministic**: work item `i` always computes the same value and the
+//!   results are reassembled in index order, so callers that pre-draw their
+//!   randomness *sequentially* (one seed per tile, one mask per output
+//!   ciphertext) produce byte-identical protocol transcripts at any pool
+//!   size. `tests/parallel.rs` pins this invariant end-to-end.
+//! - **static chunking**: each worker owns one contiguous index range. The
+//!   parallel items (NTT-domain tile ops, OT column expansions) are
+//!   homogeneous, so work stealing would buy nothing and cost ordering.
+//! - **fork/join per call**: a tile encrypt/evaluate/decrypt does hundreds of
+//!   microseconds to milliseconds of work, so the ~tens-of-µs scoped-spawn
+//!   cost amortizes. Callers gate tiny batches with [`WorkerPool::sized_for`].
+
+/// A sized handle for running embarrassingly parallel index loops on scoped
+/// threads. `Copy` on purpose: it is plumbed by value from `EngineConfig`
+/// through `Session` into `Engine2P` and the OT layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Sequential pool (the determinism baseline).
+    pub fn single() -> Self {
+        WorkerPool { threads: 1 }
+    }
+
+    /// Pool sized from the host: the `CIPHERPRUNE_THREADS` or `THREADS`
+    /// environment variable when set (CI pins `THREADS=1` to catch
+    /// determinism-vs-parallelism regressions), otherwise
+    /// `std::thread::available_parallelism`.
+    pub fn auto() -> Self {
+        let env = std::env::var("CIPHERPRUNE_THREADS")
+            .ok()
+            .or_else(|| std::env::var("THREADS").ok())
+            .and_then(|v| v.parse::<usize>().ok());
+        let t = env.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        WorkerPool::new(t)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cap the pool so every worker gets at least `min_per_thread` items —
+    /// below that, fork/join overhead dominates and sequential wins.
+    pub fn sized_for(&self, items: usize, min_per_thread: usize) -> WorkerPool {
+        let cap = (items / min_per_thread.max(1)).max(1);
+        WorkerPool { threads: self.threads.min(cap) }
+    }
+
+    /// `(0..n).map(f)` with the index range split across the workers.
+    /// Results come back in index order.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.par_map_with(n, || (), |_, i| f(i))
+    }
+
+    /// [`par_map`](Self::par_map) with a per-worker scratch value built once
+    /// by `init` — this is how the tile loops hoist their `vec![0; N]`
+    /// encode buffers out of the per-tile body.
+    pub fn par_map_with<S, T, I, F>(&self, n: usize, init: I, f: F) -> Vec<T>
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        let t = self.threads.min(n).max(1);
+        if t <= 1 {
+            let mut s = init();
+            return (0..n).map(|i| f(&mut s, i)).collect();
+        }
+        let chunk = n.div_ceil(t);
+        let mut out: Vec<Option<T>> = Vec::new();
+        out.resize_with(n, || None);
+        std::thread::scope(|scope| {
+            for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+                let (init, f) = (&init, &f);
+                scope.spawn(move || {
+                    let mut s = init();
+                    let base = ci * chunk;
+                    for (off, slot) in slots.iter_mut().enumerate() {
+                        *slot = Some(f(&mut s, base + off));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+    }
+
+    /// Map over mutable items (each worker owns a contiguous chunk of the
+    /// slice), returning per-item results in index order. Used where the
+    /// items *are* the state — e.g. the OT base PRG streams, which each
+    /// advance by the same amount regardless of which worker runs them.
+    pub fn par_map_mut<A, T, F>(&self, items: &mut [A], f: F) -> Vec<T>
+    where
+        A: Send,
+        T: Send,
+        F: Fn(usize, &mut A) -> T + Sync,
+    {
+        let n = items.len();
+        let t = self.threads.min(n).max(1);
+        if t <= 1 {
+            return items.iter_mut().enumerate().map(|(i, a)| f(i, a)).collect();
+        }
+        let chunk = n.div_ceil(t);
+        let mut out: Vec<Option<T>> = Vec::new();
+        out.resize_with(n, || None);
+        std::thread::scope(|scope| {
+            for ((ci, slots), part) in
+                out.chunks_mut(chunk).enumerate().zip(items.chunks_mut(chunk))
+            {
+                let f = &f;
+                scope.spawn(move || {
+                    let base = ci * chunk;
+                    for (off, (slot, a)) in
+                        slots.iter_mut().zip(part.iter_mut()).enumerate()
+                    {
+                        *slot = Some(f(base + off, a));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+    }
+
+    /// In-place parallel mutation of a slice (index order irrelevant to the
+    /// caller; items are disjoint).
+    pub fn par_for_each_mut<A, F>(&self, items: &mut [A], f: F)
+    where
+        A: Send,
+        F: Fn(usize, &mut A) + Sync,
+    {
+        self.par_map_mut(items, |i, a| f(i, a));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        for threads in [1, 2, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let got = pool.par_map(37, |i| i * i);
+            assert_eq!(got, (0..37).map(|i| i * i).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_with_reuses_scratch_per_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let pool = WorkerPool::new(4);
+        let got = pool.par_map_with(
+            100,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |scratch, i| {
+                *scratch += 1;
+                i + *scratch - *scratch
+            },
+        );
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        assert!(inits.load(Ordering::SeqCst) <= 4, "one scratch per worker");
+    }
+
+    #[test]
+    fn par_map_mut_chunks_align_with_indices() {
+        for threads in [1, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let mut items: Vec<u64> = (0..23).collect();
+            let got = pool.par_map_mut(&mut items, |i, a| {
+                *a += 100;
+                (i as u64, *a)
+            });
+            for (i, (gi, gv)) in got.iter().enumerate() {
+                assert_eq!(*gi, i as u64);
+                assert_eq!(*gv, i as u64 + 100);
+            }
+            assert_eq!(items, (100..123).collect::<Vec<u64>>());
+        }
+    }
+
+    #[test]
+    fn results_identical_across_pool_sizes() {
+        let seq = WorkerPool::single().par_map(64, |i| (i as u64).wrapping_mul(0x9E37));
+        for threads in [2, 3, 7] {
+            let par = WorkerPool::new(threads).par_map(64, |i| (i as u64).wrapping_mul(0x9E37));
+            assert_eq!(par, seq);
+        }
+    }
+
+    #[test]
+    fn sized_for_caps_threads() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.sized_for(2, 1).threads(), 2);
+        assert_eq!(pool.sized_for(100, 1).threads(), 8);
+        assert_eq!(pool.sized_for(8, 4).threads(), 2);
+        assert_eq!(pool.sized_for(0, 1).threads(), 1);
+    }
+
+    #[test]
+    fn auto_is_at_least_one() {
+        assert!(WorkerPool::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = WorkerPool::new(4);
+        assert!(pool.par_map(0, |i| i).is_empty());
+        assert_eq!(pool.par_map(1, |i| i), vec![0]);
+        let mut v: Vec<u8> = vec![];
+        pool.par_for_each_mut(&mut v, |_, _| {});
+    }
+}

@@ -1,0 +1,151 @@
+//! Thread-count invariance: the worker-pool parallelism added to the HE/OT
+//! hot paths must never change what the protocols compute *or* what crosses
+//! the wire. Every test runs the same computation at pool sizes 1, 2, and
+//! host-max and asserts bit-identical outputs, transcript byte/message
+//! counts, AND per-endpoint wire-content digests (`Transcript::content`), so
+//! a content-level determinism regression — e.g. drawing encryption seeds
+//! inside a parallel closure — cannot slip past on matching sizes alone.
+//! (CI additionally re-runs the whole suite with `THREADS=1`.)
+
+use std::sync::Arc;
+
+use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::fixed::{F64Mat, Fix, RingMat};
+use cipherprune::gates::TripleMode;
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::party::{run2_owned_sym, transcript_total};
+use cipherprune::protocols::matmul::{pi_matmul_shared, pi_matmul_weights};
+use cipherprune::protocols::Engine2P;
+use cipherprune::util::{WorkerPool, Xoshiro256};
+
+fn pool_sizes() -> Vec<usize> {
+    let max = WorkerPool::auto().threads().max(2);
+    let mut v = vec![1, 2, max];
+    v.dedup();
+    v
+}
+
+fn rand_f64_mat(rows: usize, cols: usize, amp: f64, seed: u64) -> F64Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    F64Mat::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| (rng.next_f64() * 2.0 - 1.0) * amp).collect(),
+    )
+}
+
+fn share_mat(m: &F64Mat, fix: Fix, seed: u64) -> (RingMat, RingMat) {
+    let ring = m.to_ring(fix);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let r: Vec<u64> = (0..ring.data.len()).map(|_| rng.next_u64()).collect();
+    let s0 = RingMat::from_vec(
+        ring.rows,
+        ring.cols,
+        ring.data.iter().zip(&r).map(|(x, y)| x.wrapping_sub(*y)).collect(),
+    );
+    let s1 = RingMat::from_vec(ring.rows, ring.cols, r);
+    (s0, s1)
+}
+
+/// Both Π_MatMul variants end-to-end at each pool size: identical output
+/// shares on both parties, identical transcript bytes and message counts.
+#[test]
+fn matmul_protocols_invariant_across_pool_sizes() {
+    let fx = Fix::default();
+    let x = rand_f64_mat(5, 12, 4.0, 1);
+    let w = rand_f64_mat(12, 9, 1.5, 2);
+    let y = rand_f64_mat(9, 7, 2.0, 3);
+    let (x0, x1) = share_mat(&x, fx, 4);
+    let (y0, y1) = share_mat(&y, fx, 5);
+    let wr = w.to_ring(fx);
+    let m = w.cols;
+
+    let mut baseline: Option<(Vec<u64>, Vec<u64>, u64, u64, [u64; 2])> = None;
+    for &threads in &pool_sizes() {
+        let (x0, x1, y0, y1, wr) =
+            (x0.clone(), x1.clone(), y0.clone(), y1.clone(), wr.clone());
+        let (r0, r1, t) = run2_owned_sym(71, move |ctx| {
+            let mut e = Engine2P::with_pool(
+                ctx,
+                TripleMode::Ot,
+                128,
+                fx,
+                WorkerPool::new(threads),
+            );
+            let (xs, ys, wref) = if e.is_p0() {
+                (x0.clone(), y0.clone(), Some(&wr))
+            } else {
+                (x1.clone(), y1.clone(), None)
+            };
+            let a = pi_matmul_weights(&mut e, &xs, wref, m);
+            let b = pi_matmul_shared(&mut e, &a, &ys);
+            let mut out = a.data;
+            out.extend(b.data);
+            out
+        });
+        let total = transcript_total(&t);
+        let digest = t.lock().unwrap().content;
+        let cur = (r0, r1, total.bytes, total.msgs, digest);
+        match &baseline {
+            None => baseline = Some(cur),
+            Some(b) => {
+                assert_eq!(b.0, cur.0, "P0 shares differ at {threads} threads");
+                assert_eq!(b.1, cur.1, "P1 shares differ at {threads} threads");
+                assert_eq!(b.2, cur.2, "transcript bytes differ at {threads} threads");
+                assert_eq!(b.3, cur.3, "transcript msgs differ at {threads} threads");
+                assert_eq!(b.4, cur.4, "wire content differs at {threads} threads");
+            }
+        }
+    }
+}
+
+/// A full `Session::infer` (every protocol in the pipeline, OT extension
+/// included) at each pool size: identical logits, identical setup traffic,
+/// identical per-request transcript bytes.
+#[test]
+fn session_infer_invariant_across_pool_sizes() {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, 17)[0].ids.clone();
+
+    let mut baseline: Option<(Vec<f64>, u64, u64, u64, [u64; 2])> = None;
+    for &threads in &pool_sizes() {
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(threads);
+        let model = Arc::new(PreparedModel::prepare(w.clone()));
+        let mut session = Session::start(model, ec);
+        let r = session.infer(&ids);
+        let req = r.total_stats();
+        let cur = (
+            r.logits.clone(),
+            session.setup_stats().bytes,
+            req.bytes,
+            req.msgs,
+            session.transcript_digest(),
+        );
+        match &baseline {
+            None => baseline = Some(cur),
+            Some(b) => {
+                assert_eq!(b.0, cur.0, "logits differ at {threads} threads");
+                assert_eq!(b.1, cur.1, "setup bytes differ at {threads} threads");
+                assert_eq!(b.2, cur.2, "request bytes differ at {threads} threads");
+                assert_eq!(b.3, cur.3, "request msgs differ at {threads} threads");
+                assert_eq!(b.4, cur.4, "wire content differs at {threads} threads");
+            }
+        }
+    }
+}
+
+/// The one-shot shim and a threaded fresh session still agree exactly (the
+/// PR-1 contract survives the parallel engine).
+#[test]
+fn one_shot_matches_threaded_session() {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, 17)[0].ids.clone();
+    let max = WorkerPool::auto().threads().max(2);
+    let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(max);
+    let one_shot = cipherprune::coordinator::run_inference(&ec, &w, &ids);
+    let model = Arc::new(PreparedModel::prepare(w));
+    let mut session = Session::start(model, ec);
+    assert_eq!(session.infer(&ids).logits, one_shot.logits);
+}

@@ -351,6 +351,7 @@ fn router_answers_every_request_exactly_once() {
                     workers: 2,
                     he_n: 128,
                     schedule: None,
+                    threads: None,
                 },
             );
             let n = reqs.len();

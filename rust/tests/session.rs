@@ -114,6 +114,7 @@ fn router_prepares_model_once_across_requests() {
             workers: 2,
             he_n: 128,
             schedule: None,
+            threads: None,
         },
     );
     let cfg = ModelConfig::tiny();

@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
-use cipherprune::nn::{forward, ForwardOptions, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::nn::{forward_masked, ForwardOptions, ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration};
 
@@ -74,8 +74,9 @@ fn main() {
         );
     }
 
-    // 5. plaintext reference (same pruning semantics, f64)
-    let reference = forward(
+    // 5. plaintext reference (same pruning AND padding semantics, f64 —
+    //    the masked oracle strips the pad run exactly like the session does)
+    let reference = forward_masked(
         &session.model().weights,
         &sample.ids,
         &ForwardOptions::cipherprune(schedule, true),

@@ -11,6 +11,13 @@
 //! HE keygen, no base OTs. The metrics report's `offline:` line shows how
 //! much setup was amortized.
 //!
+//! Batches FUSE: a released bucket of same-kind requests runs as one
+//! block-masked pipeline pass (one weight-ciphertext pass for the whole
+//! batch), so the report's `runs=` counts batches while `requests=` counts
+//! members and `amortized=` shows the per-request share. Buckets are a
+//! scheduling notion only — padding is stripped at the session boundary
+//! (lengths are public), so results are bucket-independent.
+//!
 //! PERF: each live session runs two party threads whose hot loops use a
 //! worker pool (`RouterConfig::threads`). The default divides the host
 //! across the worker budget (`host / (2 × workers)`, min 1) so concurrent

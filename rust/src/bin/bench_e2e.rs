@@ -1,12 +1,16 @@
 //! bench_e2e — end-to-end performance trajectory for the serving stack:
-//! times prepare / session-setup / infer per engine kind and token length,
-//! with the per-party worker pool at 1 thread vs host-sized, and writes
-//! `BENCH_pr2.json` so successive PRs can track online-phase wall time.
+//! times prepare / session-setup / infer per engine kind and token length
+//! (single-thread vs host-sized worker pool), plus the PR-3 **fused-batch
+//! sweep**: B same-bucket requests fused into ONE block-masked pipeline run
+//! at B ∈ {1, 2, 4, 8}, recording per-request amortized wall time. Writes
+//! `BENCH_pr3.json` so successive PRs can track online-phase wall time.
 //!
-//! The headline record is the single-thread vs multi-thread `Session::infer`
-//! comparison on the longest configured sequence (128 tokens in the full
-//! sweep) — the worker-pool layer must beat its own sequential baseline on a
-//! multi-core host.
+//! Headline records:
+//! - single-thread vs multi-thread `Session::infer` on the longest
+//!   configured sequence (the PR-2 worker-pool record), and
+//! - B = 1 vs B = 4 fused amortization on the CipherPrune engine (the PR-3
+//!   cross-request amortization record: one weight-ciphertext pass serves
+//!   the whole batch).
 //!
 //! Usage:
 //!   cargo run --release --bin bench_e2e              # full sweep (minutes)
@@ -21,7 +25,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::coordinator::{BlockRun, EngineConfig, EngineKind, PreparedModel, Session};
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
 use cipherprune::util::bench::fmt_duration;
 use cipherprune::util::{Json, WorkerPool};
@@ -45,6 +49,28 @@ impl RunRecord {
             ("threads", self.threads.into()),
             ("setup_s", self.setup_s.into()),
             ("infer_s", self.infer_s.into()),
+            ("online_bytes", self.online_bytes.into()),
+        ])
+    }
+}
+
+struct FusedRecord {
+    engine: &'static str,
+    seq: usize,
+    batch: usize,
+    wall_s: f64,
+    amortized_s: f64,
+    online_bytes: u64,
+}
+
+impl FusedRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", self.engine.into()),
+            ("seq", self.seq.into()),
+            ("batch", self.batch.into()),
+            ("wall_s", self.wall_s.into()),
+            ("amortized_s", self.amortized_s.into()),
             ("online_bytes", self.online_bytes.into()),
         ])
     }
@@ -83,6 +109,51 @@ fn measure(
     RunRecord { engine: kind.name(), seq, he_n, threads, setup_s, infer_s, online_bytes }
 }
 
+/// Fused-batch sweep: B requests of one bucket through ONE session, each
+/// batch size as one `infer_batch` call (one fused pipeline run).
+fn measure_fused(
+    kind: EngineKind,
+    cfg: &ModelConfig,
+    model: &Arc<PreparedModel>,
+    seq: usize,
+    he_n: usize,
+    batches: &[usize],
+) -> Vec<FusedRecord> {
+    let max_b = batches.iter().copied().max().unwrap_or(1);
+    let samples = Workload::qnli_like(cfg, seq).batch(max_b, 7);
+    let ec = EngineConfig::new(kind).he_n(he_n);
+    let mut session = Session::start(model.clone(), ec);
+    batches
+        .iter()
+        .map(|&bsz| {
+            let items: Vec<BlockRun> = samples[..bsz]
+                .iter()
+                .enumerate()
+                .map(|(i, s)| BlockRun { nonce: 1000 + i as u64, ids: s.ids.clone() })
+                .collect();
+            let rs = session.infer_batch(&items);
+            let r = &rs[0];
+            let rec = FusedRecord {
+                engine: kind.name(),
+                seq,
+                batch: bsz,
+                wall_s: r.wall_s,
+                amortized_s: r.amortized_wall_s(),
+                online_bytes: r.total_stats().bytes,
+            };
+            println!(
+                "  {:<24} seq {:>4}  B {:>2}  batch {:>9}  amortized {:>9}/req",
+                kind.name(),
+                seq,
+                bsz,
+                fmt_duration(rec.wall_s),
+                fmt_duration(rec.amortized_s),
+            );
+            rec
+        })
+        .collect()
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -91,13 +162,20 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_pr2.json".to_string());
+        .unwrap_or_else(|| "BENCH_pr3.json".to_string());
     let host = WorkerPool::auto().threads();
 
     // smoke: tiny model, test-sized ring — exercises every stage in seconds.
     // full: width-reduced bert-medium proxy at deployment-shaped lengths.
-    let (cfg, kinds, seqs, he_n, iters) = if smoke {
-        (ModelConfig::tiny(), vec![EngineKind::CipherPrune], vec![8, 16], 128, 1)
+    let (cfg, kinds, seqs, he_n, iters, fused_batches) = if smoke {
+        (
+            ModelConfig::tiny(),
+            vec![EngineKind::CipherPrune],
+            vec![8, 16],
+            128,
+            1,
+            vec![1, 4],
+        )
     } else {
         (
             ModelConfig::by_name("bert-medium").expect("preset").scaled(4),
@@ -105,6 +183,7 @@ fn main() {
             vec![32, 128],
             4096,
             2,
+            vec![1, 2, 4, 8],
         )
     };
     let weights = Arc::new(ModelWeights::salient(&cfg, 42));
@@ -134,7 +213,14 @@ fn main() {
         }
     }
 
-    // headline: single-thread vs host pool on the longest CipherPrune config
+    // fused-batch sweep at one bucket (the shortest configured sequence
+    // keeps the sweep affordable; amortization is about batch size, not n)
+    let fused_seq = *seqs.iter().min().unwrap();
+    println!("\nfused-batch sweep (B requests → one pipeline run):");
+    let fused =
+        measure_fused(EngineKind::CipherPrune, &cfg, &model, fused_seq, he_n, &fused_batches);
+
+    // headline 1: single-thread vs host pool on the longest CipherPrune config
     let top_seq = *seqs.iter().max().unwrap();
     let pick = |threads: usize| {
         runs.iter()
@@ -152,13 +238,27 @@ fn main() {
         fmt_duration(tn.or(t1).unwrap_or(0.0)),
     );
 
+    // headline 2: B=1 vs B=4 fused amortization
+    let fused_pick = |b: usize| fused.iter().find(|r| r.batch == b);
+    let (f1, f4) = (fused_pick(1), fused_pick(4));
+    let amortization = match (f1, f4) {
+        (Some(a), Some(b)) if b.amortized_s > 0.0 => a.wall_s / b.amortized_s,
+        _ => 1.0,
+    };
+    println!(
+        "fused amortization on {fused_seq}-token cipherprune: {amortization:.2}x per request (B=1 {} → B=4 {}/req)",
+        fmt_duration(f1.map(|r| r.wall_s).unwrap_or(0.0)),
+        fmt_duration(f4.map(|r| r.amortized_s).unwrap_or(0.0)),
+    );
+
     let report = Json::obj(vec![
-        ("bench", "bench_e2e_pr2".into()),
+        ("bench", "bench_e2e_pr3".into()),
         ("smoke", smoke.into()),
         ("model", cfg.name.as_str().into()),
         ("host_threads", host.into()),
         ("prepare_s", prepare_s.into()),
         ("runs", Json::Arr(runs.iter().map(RunRecord::to_json).collect())),
+        ("fused", Json::Arr(fused.iter().map(FusedRecord::to_json).collect())),
         (
             "speedup",
             Json::obj(vec![
@@ -167,6 +267,16 @@ fn main() {
                 ("threads_1_infer_s", t1.unwrap_or(0.0).into()),
                 ("threads_max_infer_s", tn.or(t1).unwrap_or(0.0).into()),
                 ("speedup", speedup.into()),
+            ]),
+        ),
+        (
+            "fused_amortization",
+            Json::obj(vec![
+                ("engine", "cipherprune".into()),
+                ("seq", fused_seq.into()),
+                ("batch_1_wall_s", f1.map(|r| r.wall_s).unwrap_or(0.0).into()),
+                ("batch_4_amortized_s", f4.map(|r| r.amortized_s).unwrap_or(0.0).into()),
+                ("amortization", amortization.into()),
             ]),
         ),
     ]);

@@ -37,6 +37,33 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Round the policy to the invariants `bucket_for` assumes: `max_batch ≥
+    /// 1` and `min_bucket` a power of two no larger than the cap's power-of-
+    /// two floor. `max_tokens` — the admission cap, usually the model's
+    /// `max_seq` — stays EXACTLY as given: rounding it up would admit
+    /// sequences the model cannot embed, rounding it down would reject
+    /// lengths the model serves fine. A non-power-of-two cap leaves the
+    /// *top* bucket clamped at `max_tokens`, so it can group several true
+    /// length classes; with the mask-aware pipeline that is harmless —
+    /// every request runs at its real length regardless of bucket (before
+    /// the pipeline was mask-aware, this clamp silently padded mixed
+    /// lengths together, which is what used to make it a bug).
+    /// [`Batcher::new`] normalizes at construction so a policy in use is
+    /// always sound.
+    pub fn normalized(mut self) -> Self {
+        self.max_batch = self.max_batch.max(1);
+        self.max_tokens = self.max_tokens.max(1);
+        let cap_pow2 = if self.max_tokens.is_power_of_two() {
+            self.max_tokens
+        } else {
+            self.max_tokens.next_power_of_two() / 2
+        };
+        self.min_bucket = self.min_bucket.max(1).next_power_of_two().min(cap_pow2);
+        self
+    }
+}
+
 /// Round a raw length up to its bucket (next power of two ≥ min_bucket).
 pub fn bucket_for(len: usize, policy: &BatchPolicy) -> usize {
     len.next_power_of_two().max(policy.min_bucket).min(policy.max_tokens)
@@ -64,17 +91,18 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queues: Vec::new() }
+        Batcher { policy: policy.normalized(), queues: Vec::new() }
     }
 
     pub fn policy(&self) -> &BatchPolicy {
         &self.policy
     }
 
-    /// Enqueue a request. Returns its bucket, or Err if it exceeds
-    /// `max_tokens`.
+    /// Enqueue a request. Returns its bucket, or Err if it is empty or
+    /// exceeds `max_tokens` (an empty request has nothing to classify and,
+    /// with padding no longer added, nothing to run).
     pub fn push(&mut self, req: InferenceRequest) -> Result<usize, InferenceRequest> {
-        if req.ids.len() > self.policy.max_tokens {
+        if req.ids.is_empty() || req.ids.len() > self.policy.max_tokens {
             return Err(req);
         }
         let b = bucket_for(req.ids.len(), &self.policy);
@@ -95,21 +123,17 @@ impl Batcher {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Release the next ready batch, if any: a full bucket, or — past the
-    /// linger deadline — the bucket with the oldest waiting request.
+    /// Release the next ready batch, if any.
+    ///
+    /// Order matters for fairness: the linger-expired bucket with the
+    /// *oldest* waiting request releases FIRST, and only then a full bucket.
+    /// The previous full-bucket-first order starved long requests — queues
+    /// are length-sorted, so a busy short bucket kept filling and always won
+    /// the full-bucket scan, while an expired long request waited forever.
+    /// The linger deadline is the latency promise; amortization never
+    /// outranks it.
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
-        // full bucket first (best amortization)
-        if let Some((b, q)) = self
-            .queues
-            .iter_mut()
-            .find(|(_, q)| q.len() >= self.policy.max_batch)
-        {
-            let reqs = q.drain(..self.policy.max_batch.min(q.len()))
-                .map(|p| p.req)
-                .collect();
-            return Some(Batch { bucket: *b, requests: reqs });
-        }
-        // otherwise: oldest request past its linger deadline
+        // 1. oldest request past its linger deadline (anti-starvation)
         let deadline = self.policy.linger;
         let expired = self
             .queues
@@ -123,6 +147,17 @@ impl Batcher {
             let (b, q) = &mut self.queues[idx];
             let take = q.len().min(self.policy.max_batch);
             let reqs = q.drain(..take).map(|p| p.req).collect();
+            return Some(Batch { bucket: *b, requests: reqs });
+        }
+        // 2. otherwise a full bucket (best amortization)
+        if let Some((b, q)) = self
+            .queues
+            .iter_mut()
+            .find(|(_, q)| q.len() >= self.policy.max_batch)
+        {
+            let reqs = q.drain(..self.policy.max_batch.min(q.len()))
+                .map(|p| p.req)
+                .collect();
             return Some(Batch { bucket: *b, requests: reqs });
         }
         None
@@ -163,10 +198,24 @@ mod tests {
     }
 
     #[test]
-    fn rejects_overlong() {
+    fn rejects_overlong_and_empty() {
         let mut b = Batcher::new(BatchPolicy::default());
         assert!(b.push(req(1, 600)).is_err());
         assert!(b.push(req(2, 512)).is_ok());
+        assert!(b.push(req(3, 0)).is_err(), "empty requests have nothing to run");
+    }
+
+    #[test]
+    fn oversized_min_bucket_clamps_to_cap() {
+        let p = BatchPolicy {
+            max_batch: 2,
+            linger: Duration::from_millis(1),
+            min_bucket: 64,
+            max_tokens: 48,
+        }
+        .normalized();
+        assert_eq!(p.max_tokens, 48, "cap is exact");
+        assert_eq!(p.min_bucket, 32, "min_bucket clamps to the cap's pow2 floor");
     }
 
     #[test]
@@ -208,6 +257,85 @@ mod tests {
         assert_eq!(batch.bucket, 32);
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(b.pending(), 1);
+    }
+
+    /// Starvation regression: a busy short bucket that keeps filling must
+    /// NOT preempt a linger-expired long request. Expired-oldest releases
+    /// first; the full bucket goes next.
+    #[test]
+    fn expired_request_preempts_full_short_bucket() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            linger: Duration::from_millis(0), // everything expires instantly
+            ..Default::default()
+        });
+        b.push(req(1, 300)).unwrap(); // long request, bucket 512, arrives first
+        b.push(req(2, 20)).unwrap(); // short bucket 32 …
+        b.push(req(3, 20)).unwrap(); // … now FULL
+        let first = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(
+            first.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1],
+            "oldest expired request releases before the full short bucket"
+        );
+        let second = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(second.bucket, 32);
+        assert_eq!(second.requests.len(), 2);
+    }
+
+    /// Without expiry, a full bucket still releases immediately (the
+    /// fast-path amortization is preserved).
+    #[test]
+    fn full_bucket_still_releases_when_nothing_expired() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            linger: Duration::from_secs(100),
+            ..Default::default()
+        });
+        b.push(req(1, 300)).unwrap(); // long, not expired, not full
+        b.push(req(2, 20)).unwrap();
+        b.push(req(3, 20)).unwrap(); // short bucket full
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.bucket, 32);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    /// Policy normalization: `max_batch`/`min_bucket` are rounded sound at
+    /// construction, while the admission cap `max_tokens` is preserved
+    /// exactly — a model whose `max_seq` is 48 must keep serving 33–48-token
+    /// requests. The clamped top bucket those lengths share is pure
+    /// scheduling (the mask-aware pipeline runs every request at its real
+    /// length), no longer the silent mixed-length padding bug it was.
+    #[test]
+    fn non_pow2_cap_keeps_admission_range() {
+        let p = BatchPolicy {
+            max_batch: 0,
+            linger: Duration::from_millis(1),
+            min_bucket: 12,
+            max_tokens: 48,
+        }
+        .normalized();
+        assert_eq!(p.min_bucket, 16);
+        assert_eq!(p.max_tokens, 48, "the caller's cap is exact, never rounded");
+        assert_eq!(p.max_batch, 1);
+        // already-sound policies are untouched
+        let q = BatchPolicy::default().normalized();
+        assert_eq!((q.min_bucket, q.max_tokens), (16, 512));
+        // and through the batcher: true power-of-two buckets below the cap,
+        // one clamped (scheduling-only) top bucket at it
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_secs(100),
+            min_bucket: 8,
+            max_tokens: 48,
+        });
+        assert_eq!(b.push(req(1, 48)).unwrap(), 48, "full cap range stays admitted");
+        assert_eq!(b.push(req(2, 33)).unwrap(), 48, "top bucket clamps to the cap");
+        assert_eq!(b.push(req(3, 20)).unwrap(), 32);
+        assert_eq!(b.push(req(4, 10)).unwrap(), 16);
+        assert!(b.push(req(5, 49)).is_err());
+        assert_eq!(b.policy().max_tokens, 48);
     }
 
     #[test]

@@ -232,6 +232,10 @@ impl PreparedModel {
 /// instead so the encode/setup amortizes. `wall_s` covers setup + online (weight encoding
 /// excluded, as before), and `phases` includes the setup traffic.
 ///
+/// Like the session path, trailing padding is stripped before the pipeline
+/// (lengths are public), so a bucket-padded request reproduces its
+/// real-length run exactly.
+///
 /// This drives the same [`pipeline`](super::pipeline) as a session with the
 /// same seed, so a fresh session's first request reproduces it exactly.
 pub fn run_inference(
@@ -241,6 +245,11 @@ pub fn run_inference(
 ) -> RunResult {
     if cfg.kind == EngineKind::Plaintext {
         return run_plaintext(weights, ids);
+    }
+    let mut ids: Vec<usize> = crate::nn::workload::strip_padding(ids).to_vec();
+    if ids.is_empty() {
+        // empty input degenerates to one pad token, like the session path
+        ids.push(crate::nn::workload::PAD_ID);
     }
     let fix = Fix::default();
     let ring_w = RingWeights::encode_with(weights, fix, cfg.resolved_pool());
@@ -256,7 +265,7 @@ pub fn run_inference(
             ring_w: &ring_w,
             schedule: &schedule,
         };
-        run_pipeline(&mut e, &rc, &spec, ids)
+        run_pipeline(&mut e, &rc, &spec, &ids)
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let phases: Vec<_> = {
@@ -271,12 +280,16 @@ pub fn run_inference(
         phases,
         phase_wall: p0.phase_wall,
         wall_s,
+        batch_size: 1,
     }
 }
 
 pub(crate) fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult {
     let t0 = Instant::now();
-    let out = crate::nn::forward(weights, ids, &crate::nn::ForwardOptions::plain());
+    // masked oracle: same padding semantics as the private engines (empty
+    // input degenerates to one pad token, like the session path)
+    let ids: &[usize] = if ids.is_empty() { &[crate::nn::workload::PAD_ID] } else { ids };
+    let out = crate::nn::forward_masked(weights, ids, &crate::nn::ForwardOptions::plain());
     RunResult {
         logits: out.logits,
         layer_stats: out
@@ -292,6 +305,7 @@ pub(crate) fn run_plaintext(weights: &ModelWeights, ids: &[usize]) -> RunResult 
         phases: vec![],
         phase_wall: vec![],
         wall_s: t0.elapsed().as_secs_f64(),
+        batch_size: 1,
     }
 }
 
@@ -307,14 +321,16 @@ mod tests {
         (w, wl.batch(1, 17)[0].ids.clone())
     }
 
-    /// Engine output must track the plaintext reference (fixed-point noise
-    /// accumulates over layers; the logit *ordering* and coarse values are
-    /// the contract).
+    /// Engine output must track the mask-aware plaintext reference
+    /// (fixed-point noise accumulates over layers; the logit *ordering* and
+    /// coarse values are the contract). `forward_masked` because the
+    /// pipeline strips padding — pad tokens no longer contaminate attention
+    /// or the classifier pool.
     fn assert_close_to_ref(kind: EngineKind, opts: ForwardOptions, tol: f64) {
         let (w, ids) = tiny_setup();
         let cfg = EngineConfig::for_tests(kind);
         let got = run_inference(&cfg, &w, &ids);
-        let want = crate::nn::forward(&w, &ids, &opts);
+        let want = crate::nn::forward_masked(&w, &ids, &opts);
         assert_eq!(got.logits.len(), want.logits.len());
         for (g, r) in got.logits.iter().zip(&want.logits) {
             assert!(
@@ -347,7 +363,8 @@ mod tests {
         let cfg = EngineConfig::for_tests(EngineKind::CipherPrune).schedule(sched.clone());
         let (w, ids) = tiny_setup();
         let got = run_inference(&cfg, &w, &ids);
-        let want = crate::nn::forward(&w, &ids, &ForwardOptions::cipherprune(sched, true));
+        let want =
+            crate::nn::forward_masked(&w, &ids, &ForwardOptions::cipherprune(sched, true));
         for (g, r) in got.logits.iter().zip(&want.logits) {
             assert!((g - r).abs() < 0.25, "got {:?} want {:?}", got.logits, want.logits);
         }
@@ -367,7 +384,7 @@ mod tests {
         let (w, ids) = tiny_setup();
         let cfg = EngineConfig::for_tests(EngineKind::Plaintext);
         let got = run_inference(&cfg, &w, &ids);
-        let want = crate::nn::forward(&w, &ids, &ForwardOptions::plain());
+        let want = crate::nn::forward_masked(&w, &ids, &ForwardOptions::plain());
         assert_eq!(got.logits, want.logits);
     }
 
@@ -384,6 +401,27 @@ mod tests {
         // per-layer harvested traffic present
         assert!(got.layer_stats[0].softmax_bytes > 0);
         assert!(got.layer_stats[0].gelu_bytes > 0);
+    }
+
+    /// The padding bugfix at the one-shot level: a request must produce the
+    /// *identical* run at its real length and padded to any bucket — not
+    /// merely close logits, the same transcript-determined values.
+    #[test]
+    fn padded_and_real_length_runs_are_identical() {
+        let (w, ids) = tiny_setup();
+        let real = crate::nn::workload::real_len(&ids);
+        let mut padded = ids[..real].to_vec();
+        padded.resize(real + 8, crate::nn::workload::PAD_ID);
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let a = run_inference(&cfg, &w, &ids[..real]);
+        let b = run_inference(&cfg, &w, &padded);
+        assert_eq!(a.logits, b.logits, "bucket choice must not change logits");
+        for (x, y) in a.layer_stats.iter().zip(&b.layer_stats) {
+            assert_eq!(x.n_in, y.n_in);
+            assert_eq!(x.n_kept, y.n_kept);
+            assert_eq!(x.n_high, y.n_high);
+        }
+        assert_eq!(a.layer_stats[0].n_in, real, "layer 0 sees the real length");
     }
 
     #[test]

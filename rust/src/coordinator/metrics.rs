@@ -6,10 +6,17 @@ use crate::net::{NetModel, PhaseStats};
 
 use super::types::RunResult;
 
-/// Latency/traffic summary of a set of runs.
+/// Latency/traffic summary of a set of runs. A *run* is one pipeline pass —
+/// a fused batch of B requests counts as one run and B `requests`, so
+/// `runs < requests` is the signature of working batch fusion and
+/// [`amortized_wall_s`](Self::amortized_wall_s) is the per-request cost the
+/// fusion buys.
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
+    /// Pipeline runs (fused batches count once).
     pub runs: u64,
+    /// Individual requests served (a fused batch of B counts B).
+    pub requests: u64,
     pub wall_s_total: f64,
     pub bytes_total: u64,
     pub flights_total: u64,
@@ -20,8 +27,12 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Record one pipeline run. `r` carries its own `batch_size`; callers
+    /// with a fused batch record it ONCE (its phases/wall are batch-level —
+    /// recording every member would multiply-count the shared traffic).
     pub fn record(&mut self, r: &RunResult) {
         self.runs += 1;
+        self.requests += r.batch_size.max(1) as u64;
         self.wall_s_total += r.wall_s;
         self.walls.push(r.wall_s);
         let t = r.total_stats();
@@ -38,6 +49,16 @@ impl EngineMetrics {
             0.0
         } else {
             self.wall_s_total / self.runs as f64
+        }
+    }
+
+    /// Per-request amortized wall time across all runs (equals
+    /// [`mean_wall_s`](Self::mean_wall_s) when nothing was fused).
+    pub fn amortized_wall_s(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.wall_s_total / self.requests as f64
         }
     }
 
@@ -95,9 +116,11 @@ impl MetricsRegistry {
         }
         for (name, m) in &self.engines {
             out.push_str(&format!(
-                "{name}: runs={} mean={:.3}s p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",
+                "{name}: runs={} requests={} mean={:.3}s amortized={:.3}s/req p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",
                 m.runs,
+                m.requests,
                 m.mean_wall_s(),
+                m.amortized_wall_s(),
                 m.percentile_wall_s(0.95),
                 m.bytes_total as f64 / 1e6,
                 m.modeled_total_s(&NetModel::LAN),
@@ -113,6 +136,10 @@ mod tests {
     use super::*;
 
     fn fake_run(wall: f64, bytes: u64) -> RunResult {
+        fake_batch(wall, bytes, 1)
+    }
+
+    fn fake_batch(wall: f64, bytes: u64, batch_size: usize) -> RunResult {
         RunResult {
             logits: vec![0.0, 1.0],
             layer_stats: vec![],
@@ -122,6 +149,7 @@ mod tests {
             )],
             phase_wall: vec![],
             wall_s: wall,
+            batch_size,
         }
     }
 
@@ -132,9 +160,23 @@ mod tests {
         reg.record("cipherprune", &fake_run(3.0, 200));
         let m = reg.get("cipherprune").unwrap();
         assert_eq!(m.runs, 2);
+        assert_eq!(m.requests, 2);
         assert!((m.mean_wall_s() - 2.0).abs() < 1e-12);
         assert_eq!(m.bytes_total, 300);
         assert_eq!(m.by_protocol["softmax"].bytes, 300);
+    }
+
+    #[test]
+    fn fused_batch_counts_one_run_many_requests() {
+        let mut reg = MetricsRegistry::default();
+        reg.record("cipherprune", &fake_batch(4.0, 400, 4));
+        let m = reg.get("cipherprune").unwrap();
+        assert_eq!(m.runs, 1, "a fused batch is one pipeline run");
+        assert_eq!(m.requests, 4);
+        assert!((m.mean_wall_s() - 4.0).abs() < 1e-12);
+        assert!((m.amortized_wall_s() - 1.0).abs() < 1e-12);
+        // batch traffic counted once, not per member
+        assert_eq!(m.bytes_total, 400);
     }
 
     #[test]

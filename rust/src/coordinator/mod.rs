@@ -56,11 +56,53 @@
 //!   latency, leave the default.
 //!   `cargo run --release --bin bench_e2e` records the measured speedup.
 //!
+//! # Padding, public lengths, and fused batching
+//!
+//! **Sequence lengths are public in this 2PC setting** — ciphertext counts
+//! and message sizes leak them to either party regardless, so treating the
+//! per-request *validity mask* (which rows are real tokens) as public gives
+//! up nothing. The serving stack exploits that end-to-end:
+//!
+//! - **Padding never contaminates results.** The router used to pad every
+//!   request to its power-of-two bucket and run the padded sequence: pad
+//!   tokens attended and were attended to, absorbed SoftMax mass, shifted
+//!   the Eq. 1 importance scores that drive Π_prune (θ was even resolved
+//!   against the *padded* n), and were averaged into the classifier pool —
+//!   so the same request returned different logits depending on its bucket.
+//!   Now [`Session`]/[`run_inference`] strip the trailing `PAD_ID` run at
+//!   the boundary and the pipeline runs at the real length. A masked pad
+//!   column would contribute exactly zero attention (the Taylor exp clips
+//!   to 0 far below the row max), zero importance, and nothing to the pool,
+//!   so stripping computes the identical function while skipping the dead
+//!   O(n²) work.
+//! - **Batch fusion.** A batch of B same-kind requests executes as ONE
+//!   pipeline run over a stacked (Σn_b)×d token matrix with a
+//!   **block-diagonal attention mask**: each request attends only within
+//!   its own block (realized structurally as per-block attention products —
+//!   off-block attention is exactly zero under the mask, so it is never
+//!   computed), while every *weight* interaction (embedding, QKV/output/FFN
+//!   projections, classifier) runs as one fused Π_MatMul — one
+//!   weight-ciphertext pass for the whole batch instead of B. Importance
+//!   normalization, θ/β resolution, Π_prune/Π_mask relocation, Π_reduce,
+//!   and classifier pooling are all per block. See
+//!   [`pipeline::run_pipeline_batch`].
+//! - **Bit-consistency.** Together with *aligned truncation*
+//!   ([`Mpc::align_begin`](crate::gates::Mpc::align_begin)) — which pins
+//!   P1's pre-truncation share to a canonical stream keyed by the request
+//!   nonce, making every reconstructed value independent of the randomness
+//!   history — a request produces **identical logits and identical
+//!   per-layer prune/reduce decisions** run alone at its real length, alone
+//!   padded to any bucket, or inside any fused batch (the block mask with
+//!   B = 1 *is* the padding fix). `tests/batching.rs` pins all three.
+//!   Nonce uniqueness per request content is part of the privacy contract;
+//!   the router enforces unique in-flight ids and uses them as nonces.
+//!
 //! [`run_inference`] is a one-shot shim over the same path; [`Router`] holds
 //! one [`PreparedModel`] plus a per-kind [`Session`] cache and drives the
-//! length-bucketed [`Batcher`] (private-inference cost is quadratic in padded
-//! length). The per-party program itself is a composable [`pipeline`] of
-//! layer passes selected per engine kind — see
+//! length-bucketed [`Batcher`] (buckets remain a *scheduling* notion — they
+//! group requests of similar cost for fusion but no longer change results).
+//! The per-party program itself is a composable [`pipeline`] of layer passes
+//! selected per engine kind — see
 //! [`PipelineSpec::for_kind`](pipeline::PipelineSpec::for_kind).
 //! `rust/src/main.rs` exposes the stack as the `run`/`serve` subcommands.
 
@@ -75,7 +117,7 @@ pub mod types;
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;
-pub use pipeline::PipelineSpec;
+pub use pipeline::{BlockRun, PipelineSpec};
 pub use router::{Router, RouterConfig};
 pub use session::Session;
 pub use types::{EngineKind, InferenceRequest, LayerStat, RunResult};

@@ -1,18 +1,49 @@
 //! Composable layer-pass pipeline: the per-party program of one private
-//! inference, decomposed into passes (Fig. 4).
+//! inference *batch*, decomposed into passes (Fig. 4).
 //!
 //! The five engine variants of the paper's comparison set differ only in
 //! *data*: which SoftMax/GELU protocol they run, whether and how they prune,
 //! and whether reduced tokens take the degree-2 path. [`PipelineSpec::for_kind`]
 //! expresses each variant as a pass list plus non-linear selectors, so the
-//! layer loop in [`run_pipeline`] is variant-agnostic — adding a sixth engine
-//! means returning a new spec, not editing the loop.
+//! layer loop in [`run_pipeline_batch`] is variant-agnostic — adding a sixth
+//! engine means returning a new spec, not editing the loop.
 //!
-//! Pass order per layer: [`AttentionPass`] (QKV, per-head SoftMax attention,
-//! output projection, residual, LN1) → [`PrunePass`] (Π_prune/Π_mask or
-//! BOLT's one-time bitonic word elimination) → [`ReducePass`] (Π_reduce β
-//! mask) → [`FfnPass`] (FFN with mixed-degree Π_GELU, residual, LN2).
-//! [`EmbedPass`] and [`ClassifierPass`] bracket the loop.
+//! # Blocks, padding, and fusion
+//!
+//! A pipeline run processes a *batch* of B ≥ 1 requests ([`BlockRun`]s) in
+//! one pass. Each request is one **block** of rows in a fused token matrix;
+//! sequence lengths are public (shapes leak them anyway), so callers strip
+//! bucket padding before entry — pad tokens never attend, never absorb
+//! SoftMax mass, never enter Eq. 1 importance scores, and never reach the
+//! classifier pool. The attention mask is **block-diagonal**: each request
+//! attends only within its own block. Since a masked logit contributes
+//! exactly zero attention (the Taylor exp clips to 0 far below the row max),
+//! the mask is realized structurally — per-block attention products — rather
+//! than by materializing a (Σn)² matrix and masking most of it; the causal
+//! mask inside a block stays the additive `-30` form. What *is* fused across
+//! blocks is every weight interaction: QKV/output/FFN projections, the
+//! embedding, and the classifier run as ONE Π_MatMul over the stacked
+//! (Σn_b)×d matrix, so B requests pay for one weight-ciphertext pass instead
+//! of B.
+//!
+//! Per-block bookkeeping keeps the paper's semantics per *request*:
+//! importance scores normalize by the block's own token count (Eq. 1), the
+//! θ/β schedule resolves against the block's real n (not the bucket length),
+//! Π_prune/Π_mask relocate within the block, and the classifier pools over
+//! the block's kept tokens.
+//!
+//! Bit-consistency: together with aligned truncation
+//! ([`Mpc::align_begin`](crate::gates::Mpc::align_begin)) every block
+//! reconstructs exactly the values of a solo run with the same nonce — the
+//! block mask with B = 1 *is* the padding fix, and a fused run is
+//! bit-consistent with B solo runs at real length.
+//!
+//! Pass order per layer: [`AttentionPass`] (QKV, per-head per-block SoftMax
+//! attention, output projection, residual, LN1) → [`PrunePass`]
+//! (Π_prune/Π_mask or BOLT's one-time bitonic word elimination) →
+//! [`ReducePass`] (Π_reduce β mask) → [`FfnPass`] (FFN with mixed-degree
+//! Π_GELU, residual, LN2). [`EmbedPass`] and [`ClassifierPass`] bracket the
+//! loop.
 
 use std::time::Instant;
 
@@ -55,7 +86,53 @@ impl PhaseClock {
     }
 }
 
-/// What one party returns from a pipeline run.
+/// One request inside a pipeline batch. `ids` must already be stripped to
+/// the real (public) length — see `nn::workload::strip_padding`. The nonce
+/// keys the aligned-truncation canonical streams; it must be unique per
+/// request content (the session mixes the caller's nonce with the content
+/// via [`block_nonce`], the router supplies request ids).
+#[derive(Clone, Debug)]
+pub struct BlockRun {
+    pub nonce: u64,
+    pub ids: Vec<usize>,
+}
+
+/// Canonical per-request alignment nonce: SHA-256 of the caller's nonce and
+/// the (stripped) token content, truncated to 64 bits. Folding the content
+/// in makes canonical-pad reuse across *different* inputs collision-hard
+/// even if a caller recycles a nonce or request id after completion — the
+/// same (nonce, content) pair replays identically (reproducibility), any
+/// change of content diverges the streams (no one-time-pad reuse; a
+/// cryptographic hash so a collision cannot be crafted). Token ids are the
+/// client's input, but they are already known to P1 and the nonce only keys
+/// P1's private stream, so mixing them leaks nothing new.
+pub fn block_nonce(nonce: u64, ids: &[usize]) -> u64 {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    h.update(nonce.to_le_bytes());
+    for &id in ids {
+        h.update((id as u64).to_le_bytes());
+    }
+    let d = h.finalize();
+    u64::from_le_bytes(d[..8].try_into().expect("8 bytes"))
+}
+
+/// What one party returns for one block of a pipeline batch.
+pub struct BlockOut {
+    pub nonce: u64,
+    pub logits: Vec<f64>,
+    pub layer_stats: Vec<LayerStat>,
+}
+
+/// What one party returns from a fused pipeline run. `phase_wall` is
+/// batch-level (the blocks ran fused; per-block wall is not separable).
+pub struct BatchPartyOut {
+    pub blocks: Vec<BlockOut>,
+    pub phase_wall: Vec<(String, f64)>,
+}
+
+/// What one party returns from a single-request pipeline run (the B = 1
+/// view of [`BatchPartyOut`], kept for one-shot callers).
 pub struct PartyOut {
     pub logits: Vec<f64>,
     pub layer_stats: Vec<LayerStat>,
@@ -74,17 +151,16 @@ pub struct RunCtx<'a> {
     pub schedule: &'a ThresholdSchedule,
 }
 
-/// Mutable state threaded through the layer passes.
-pub struct LayerState {
-    /// Current layer index.
-    pub li: usize,
+/// Per-request mutable state inside the fused batch.
+pub struct BlockState {
+    pub nonce: u64,
     /// Token count *entering* this layer (updated to `stat.n_kept` between
-    /// layers by the driver, never mid-layer — β thresholds are relative to
-    /// the layer-input count).
+    /// layers by the driver, never mid-layer — θ/β thresholds are relative
+    /// to the layer-input count).
     pub n: usize,
-    /// Current token representations (share), `stat.n_kept` rows after
-    /// pruning.
-    pub x: RingMat,
+    /// Current row count of this block in the fused matrix (= `n` until the
+    /// prune pass shrinks it to `stat.n_kept`).
+    pub rows: usize,
     /// Per-head attention maps from [`AttentionPass`] (consumed by pruning).
     pub atts: Vec<RingMat>,
     /// Importance scores of the kept tokens, when a prune pass produced them.
@@ -96,8 +172,43 @@ pub struct LayerState {
     pub high_mask: Vec<bool>,
     /// Decision statistics being accumulated for this layer.
     pub stat: LayerStat,
+}
+
+/// Mutable state threaded through the layer passes.
+pub struct LayerState {
+    /// Current layer index.
+    pub li: usize,
+    /// Fused token representations (share), rows grouped by block.
+    pub x: RingMat,
+    /// Per-request block states, in row order.
+    pub blocks: Vec<BlockState>,
     /// Wall clock for per-phase accounting.
     pub clock: PhaseClock,
+}
+
+impl LayerState {
+    /// Aligned-truncation row layout of the current fused matrix.
+    fn layout(&self) -> Vec<(usize, usize)> {
+        self.blocks.iter().enumerate().map(|(i, b)| (i, b.rows)).collect()
+    }
+
+    /// `(block index, row start, row end)` of every block in the *current*
+    /// fused matrix. Snapshotted up front, so a pass may shrink
+    /// `blocks[bi].rows` while iterating (Π_prune does) without corrupting
+    /// the offsets of later blocks — every per-block loop goes through this
+    /// one bookkeeping site.
+    fn block_ranges(&self) -> Vec<(usize, usize, usize)> {
+        let mut off = 0usize;
+        self.blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let r = (bi, off, off + b.rows);
+                off += b.rows;
+                r
+            })
+            .collect()
+    }
 }
 
 /// One composable step of the per-layer loop.
@@ -144,7 +255,9 @@ pub enum ReduceSel {
     Beta,
 }
 
-/// Embedding: one-hot(ids) · E (Π_MatMul), then + positional.
+/// Embedding: one-hot(ids) · E (one fused Π_MatMul over all blocks), then +
+/// positional — at *block-local* positions: request i's token j sits at
+/// position j whatever bucket or batch slot it rode in on.
 pub struct EmbedPass;
 
 impl EmbedPass {
@@ -152,29 +265,41 @@ impl EmbedPass {
         &self,
         e: &mut Engine2P,
         rc: &RunCtx<'_>,
-        ids: &[usize],
+        blocks: &[BlockRun],
         clock: &mut PhaseClock,
     ) -> RingMat {
         let fix = e.fix;
-        let (n, d) = (ids.len(), rc.mcfg.dim);
+        let d = rc.mcfg.dim;
+        let n_total: usize = blocks.iter().map(|b| b.ids.len()).sum();
         e.set_phase_ctx("");
         e.phase("embed");
         let onehot = {
-            let mut m = RingMat::zeros(n, rc.mcfg.vocab);
+            let mut m = RingMat::zeros(n_total, rc.mcfg.vocab);
             if !e.is_p0() {
-                for (i, &id) in ids.iter().enumerate() {
-                    *m.at_mut(i, id) = fix.enc(1.0);
+                let mut row = 0usize;
+                for b in blocks {
+                    for &id in &b.ids {
+                        *m.at_mut(row, id) = fix.enc(1.0);
+                        row += 1;
+                    }
                 }
             }
             m
         };
+        let layout: Vec<(usize, usize)> =
+            blocks.iter().enumerate().map(|(i, b)| (i, b.ids.len())).collect();
+        e.mpc.align_rows(&layout);
         let w_emb = if e.is_p0() { Some(&rc.ring_w.emb) } else { None };
         let mut x = linear_layer(e, &onehot, w_emb, None, d);
         if e.is_p0() {
-            for i in 0..n {
-                for c in 0..d {
-                    let v = x.at(i, c).wrapping_add(rc.ring_w.pos.at(i, c));
-                    *x.at_mut(i, c) = v;
+            let mut row = 0usize;
+            for b in blocks {
+                for i in 0..b.ids.len() {
+                    for c in 0..d {
+                        let v = x.at(row, c).wrapping_add(rc.ring_w.pos.at(i, c));
+                        *x.at_mut(row, c) = v;
+                    }
+                    row += 1;
                 }
             }
         }
@@ -199,8 +324,10 @@ fn p0b(lw: Option<&RingLayer>, f: fn(&RingLayer) -> &Vec<u64>) -> Option<&[u64]>
     lw.map(|l| f(l).as_slice())
 }
 
-/// QKV projections, per-head SoftMax attention, output projection, residual,
-/// LN1. Leaves post-LN1 tokens in `st.x` and attention maps in `st.atts`.
+/// QKV projections (fused across blocks), per-head **per-block** SoftMax
+/// attention (the block-diagonal mask), output projection, residual, LN1.
+/// Leaves post-LN1 tokens in `st.x` and per-block attention maps in
+/// `st.blocks[*].atts`.
 pub struct AttentionPass {
     pub softmax: SoftmaxSel,
 }
@@ -214,72 +341,97 @@ impl LayerPass for AttentionPass {
         let fix = e.fix;
         let mcfg = rc.mcfg;
         let (d, hd, heads) = (mcfg.dim, mcfg.head_dim(), mcfg.heads);
-        let (li, n) = (st.li, st.n);
+        let li = st.li;
         let lw = layer_w(rc, li);
+        let layout = st.layout();
+        let n_total = st.x.rows;
 
-        // ---- QKV projections ----
+        // ---- QKV projections: one fused weight pass for the whole batch ----
+        e.mpc.align_rows(&layout);
         e.phase("matmul");
         let q = linear_layer(e, &st.x, p0w(lw, |l| &l.wq), p0b(lw, |l| &l.bq), d);
         let k = linear_layer(e, &st.x, p0w(lw, |l| &l.wk), p0b(lw, |l| &l.bk), d);
         let v = linear_layer(e, &st.x, p0w(lw, |l| &l.wv), p0b(lw, |l| &l.bv), d);
         st.clock.mark(format!("matmul#{li}"));
 
-        // ---- per-head attention ----
+        // ---- per-head, per-block attention (block-diagonal mask) ----
         let inv_sqrt = fix.enc(1.0 / (hd as f64).sqrt());
-        let mut ctx_mat = RingMat::zeros(n, d);
-        let mut atts: Vec<RingMat> = Vec::with_capacity(heads);
+        let mut ctx_mat = RingMat::zeros(n_total, d);
+        let ranges = st.block_ranges();
+        // LUT table depends only on the segment count — build once per pass
+        let lut_table = match self.softmax {
+            SoftmaxSel::Lut { segments } => Some(exp_table_k(segments)),
+            SoftmaxSel::Poly => None,
+        };
         for h in 0..heads {
             let (lo, hi) = (h * hd, (h + 1) * hd);
             let qh = q.col_range(lo, hi);
             let kh = k.col_range(lo, hi);
             let vh = v.col_range(lo, hi);
-            e.phase("matmul");
-            let prod = pi_matmul_shared(e, &qh, &kh.transpose()); // scale 2f
-            let logits_v =
-                e.mpc.scale_const_trunc(&prod.data, inv_sqrt, 2 * fix.frac_bits);
-            let mut logits = RingMat::from_vec(n, n, logits_v);
-            if mcfg.causal && e.is_p0() {
-                // public causal structure: mask j > i far below the clip
-                let neg = fix.enc(-30.0);
-                for i in 0..n {
-                    for j in i + 1..n {
-                        let nv = logits.at(i, j).wrapping_add(neg);
-                        *logits.at_mut(i, j) = nv;
+            for &(bi, r0, r1) in &ranges {
+                let n = r1 - r0;
+                e.mpc.align_block(bi);
+                // solo runs skip the per-block copies (the range spans the
+                // whole head matrix)
+                let qhb;
+                let khb;
+                let vhb;
+                let (qs, ks, vs) = if ranges.len() == 1 {
+                    (&qh, &kh, &vh)
+                } else {
+                    qhb = qh.row_range(r0, r1);
+                    khb = kh.row_range(r0, r1);
+                    vhb = vh.row_range(r0, r1);
+                    (&qhb, &khb, &vhb)
+                };
+                e.phase("matmul");
+                let prod = pi_matmul_shared(e, qs, &ks.transpose()); // scale 2f
+                let logits_v =
+                    e.mpc.scale_const_trunc(&prod.data, inv_sqrt, 2 * fix.frac_bits);
+                let mut logits = RingMat::from_vec(n, n, logits_v);
+                if mcfg.causal && e.is_p0() {
+                    // public causal structure within the block: mask j > i
+                    // far below the clip
+                    let neg = fix.enc(-30.0);
+                    for i in 0..n {
+                        for j in i + 1..n {
+                            let nv = logits.at(i, j).wrapping_add(neg);
+                            *logits.at_mut(i, j) = nv;
+                        }
                     }
                 }
-            }
-            st.clock.mark(format!("matmul#{li}"));
-            let att = match self.softmax {
-                SoftmaxSel::Lut { segments } => {
-                    let t = exp_table_k(segments);
-                    pi_softmax_lut(e, &logits, &t)
+                st.clock.mark(format!("matmul#{li}"));
+                let att = match &lut_table {
+                    Some(t) => pi_softmax_lut(e, &logits, t),
+                    None => pi_softmax(e, &logits, &st.blocks[bi].row_high),
+                };
+                st.clock.mark(format!("softmax#{li}"));
+                e.phase("matmul");
+                let ch = pi_matmul_shared(e, &att, vs); // scale 2f
+                let ch_t = e.mpc.trunc_vec(&ch.data, fix.frac_bits);
+                for r in 0..n {
+                    ctx_mat.row_mut(r0 + r)[lo..hi]
+                        .copy_from_slice(&ch_t[r * hd..(r + 1) * hd]);
                 }
-                SoftmaxSel::Poly => pi_softmax(e, &logits, &st.row_high),
-            };
-            st.clock.mark(format!("softmax#{li}"));
-            e.phase("matmul");
-            let ch = pi_matmul_shared(e, &att, &vh); // scale 2f
-            let ch_t = e.mpc.trunc_vec(&ch.data, fix.frac_bits);
-            for r in 0..n {
-                ctx_mat.row_mut(r)[lo..hi]
-                    .copy_from_slice(&ch_t[r * hd..(r + 1) * hd]);
+                st.clock.mark(format!("matmul#{li}"));
+                st.blocks[bi].atts.push(att);
             }
-            st.clock.mark(format!("matmul#{li}"));
-            atts.push(att);
         }
 
-        // ---- output projection + residual + LN1 ----
+        // ---- output projection + residual + LN1 (fused across blocks) ----
+        e.mpc.align_rows(&layout);
         e.phase("matmul");
         let attn_out = linear_layer(e, &ctx_mat, p0w(lw, |l| &l.wo), p0b(lw, |l| &l.bo), d);
         let xr = st.x.add(&attn_out);
         st.clock.mark(format!("matmul#{li}"));
         st.x = pi_layernorm(e, &xr, p0b(lw, |l| &l.ln1_gamma), p0b(lw, |l| &l.ln1_beta));
         st.clock.mark(format!("layernorm#{li}"));
-        st.atts = atts;
     }
 }
 
-/// Encrypted token pruning (Π_prune/Π_mask, or BOLT's bitonic W.E.).
+/// Encrypted token pruning (Π_prune/Π_mask, or BOLT's bitonic W.E.) — per
+/// block: scores normalize over the block's own tokens and θ resolves
+/// against the block's real count (the padded-bucket n would skew both).
 pub struct PrunePass {
     pub sel: PruneSel,
 }
@@ -290,36 +442,58 @@ impl LayerPass for PrunePass {
     }
 
     fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
-        let (li, n) = (st.li, st.n);
+        let li = st.li;
         let tprune = Instant::now();
         match self.sel {
             PruneSel::Progressive => {
-                let theta = rc.schedule.theta_abs(li, n);
-                let out = pi_prune(e, &st.atts, &st.x, theta);
-                st.stat.swaps = out.swaps;
-                st.stat.n_kept = out.n_kept;
-                st.x = out.tokens;
-                st.scores = Some(out.scores);
+                let mut parts: Vec<RingMat> = Vec::with_capacity(st.blocks.len());
+                // ranges snapshotted before the loop shrinks blk.rows
+                for (bi, r0, r1) in st.block_ranges() {
+                    e.mpc.align_block(bi);
+                    let xb = st.x.row_range(r0, r1);
+                    let blk = &mut st.blocks[bi];
+                    // θ from the block's real layer-input count, not the
+                    // bucket length
+                    let theta = rc.schedule.theta_abs(li, blk.n);
+                    let out = pi_prune(e, &blk.atts, &xb, theta);
+                    blk.stat.swaps = out.swaps;
+                    blk.stat.n_kept = out.n_kept;
+                    blk.rows = out.n_kept;
+                    blk.scores = Some(out.scores);
+                    parts.push(out.tokens);
+                }
+                st.x = RingMat::vstack_owned(parts);
             }
             PruneSel::WordElim { at_layer } if li == at_layer => {
-                // W.E.: sort all tokens by importance, keep the top half
-                e.phase("prune");
-                let scores = importance_scores(e, &st.atts);
-                let keep = n.div_ceil(2);
-                let out = bitonic_sort_prune(e, &st.x, &scores, keep);
-                st.stat.swaps = out.swaps;
-                st.stat.n_kept = keep;
-                st.x = out.tokens;
-                st.scores = Some(out.scores);
+                // W.E.: per block, sort tokens by importance, keep the top half
+                let mut parts: Vec<RingMat> = Vec::with_capacity(st.blocks.len());
+                for (bi, r0, r1) in st.block_ranges() {
+                    e.mpc.align_block(bi);
+                    e.phase("prune");
+                    let xb = st.x.row_range(r0, r1);
+                    let blk = &mut st.blocks[bi];
+                    let scores = importance_scores(e, &blk.atts);
+                    let keep = blk.n.div_ceil(2);
+                    let out = bitonic_sort_prune(e, &xb, &scores, keep);
+                    blk.stat.swaps = out.swaps;
+                    blk.stat.n_kept = keep;
+                    blk.rows = keep;
+                    blk.scores = Some(out.scores);
+                    parts.push(out.tokens);
+                }
+                st.x = RingMat::vstack_owned(parts);
             }
             _ => {}
         }
-        st.stat.prune_wall_s = tprune.elapsed().as_secs_f64();
+        let wall = tprune.elapsed().as_secs_f64();
+        for blk in st.blocks.iter_mut() {
+            blk.stat.prune_wall_s = wall;
+        }
         st.clock.mark(format!("prune#{li}"));
     }
 }
 
-/// Encrypted polynomial reduction: β mask over the kept tokens.
+/// Encrypted polynomial reduction: β mask over each block's kept tokens.
 pub struct ReducePass {
     pub sel: ReduceSel,
 }
@@ -330,20 +504,25 @@ impl LayerPass for ReducePass {
     }
 
     fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
-        let (li, n_kept) = (st.li, st.stat.n_kept);
-        st.high_mask = match (self.sel, &st.scores) {
-            (ReduceSel::Beta, Some(scores)) => {
-                let beta = rc.schedule.beta_abs(li, st.n);
-                pi_reduce(e, scores, beta)
-            }
-            _ => vec![true; n_kept],
-        };
-        st.stat.n_high = st.high_mask.iter().filter(|&&b| b).count();
+        let li = st.li;
+        for (bi, blk) in st.blocks.iter_mut().enumerate() {
+            e.mpc.align_block(bi);
+            blk.high_mask = match (self.sel, &blk.scores) {
+                (ReduceSel::Beta, Some(scores)) => {
+                    let beta = rc.schedule.beta_abs(li, blk.n);
+                    pi_reduce(e, scores, beta)
+                }
+                _ => vec![true; blk.stat.n_kept],
+            };
+            blk.stat.n_high = blk.high_mask.iter().filter(|&&b| b).count();
+        }
         st.clock.mark(format!("reduce#{li}"));
     }
 }
 
-/// FFN with mixed-degree GELU, residual, LN2.
+/// FFN with mixed-degree GELU (per block — the degree partition is
+/// block-local), residual, LN2. The two FFN projections are fused across
+/// blocks.
 pub struct FfnPass {
     pub gelu: GeluSel,
 }
@@ -356,6 +535,8 @@ impl LayerPass for FfnPass {
     fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
         let li = st.li;
         let lw = layer_w(rc, li);
+        let layout = st.layout();
+        e.mpc.align_rows(&layout);
         e.phase("matmul");
         let h1 = linear_layer(
             e,
@@ -365,15 +546,39 @@ impl LayerPass for FfnPass {
             rc.mcfg.ffn_dim,
         );
         st.clock.mark(format!("matmul#{li}"));
-        let h_act = match self.gelu {
-            GeluSel::Lut { segments } => {
-                e.phase("gelu");
-                let out = pi_pwl(e, &h1.data, &gelu_table_k(segments));
-                RingMat::from_vec(h1.rows, h1.cols, out)
-            }
-            GeluSel::Tokens(kind) => pi_gelu_tokens(e, &h1, &st.high_mask, kind),
+        let mut parts: Vec<RingMat> = Vec::with_capacity(st.blocks.len());
+        // LUT table depends only on the segment count — build once per pass
+        let lut_table = match self.gelu {
+            GeluSel::Lut { segments } => Some(gelu_table_k(segments)),
+            GeluSel::Tokens(_) => None,
         };
+        let ranges = st.block_ranges();
+        for &(bi, r0, r1) in &ranges {
+            e.mpc.align_block(bi);
+            // solo runs skip the per-block copy (the range spans all of h1)
+            let h1b;
+            let h1s = if ranges.len() == 1 {
+                &h1
+            } else {
+                h1b = h1.row_range(r0, r1);
+                &h1b
+            };
+            let part = match (self.gelu, &lut_table) {
+                (GeluSel::Lut { .. }, Some(t)) => {
+                    e.phase("gelu");
+                    let out = pi_pwl(e, &h1s.data, t);
+                    RingMat::from_vec(h1s.rows, h1s.cols, out)
+                }
+                (GeluSel::Tokens(kind), _) => {
+                    pi_gelu_tokens(e, h1s, &st.blocks[bi].high_mask, kind)
+                }
+                (GeluSel::Lut { .. }, None) => unreachable!("table built above"),
+            };
+            parts.push(part);
+        }
+        let h_act = RingMat::vstack_owned(parts);
         st.clock.mark(format!("gelu#{li}"));
+        e.mpc.align_rows(&layout);
         e.phase("matmul");
         let h2 =
             linear_layer(e, &h_act, p0w(lw, |l| &l.w_ff2), p0b(lw, |l| &l.b_ff2), rc.mcfg.dim);
@@ -384,31 +589,48 @@ impl LayerPass for FfnPass {
     }
 }
 
-/// Mean-pool + classifier + open logits.
+/// Per-block mean-pool + one fused classifier matmul + open logits.
 pub struct ClassifierPass;
 
 impl ClassifierPass {
-    pub fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) -> Vec<f64> {
+    pub fn run(
+        &self,
+        e: &mut Engine2P,
+        rc: &RunCtx<'_>,
+        st: &mut LayerState,
+    ) -> Vec<Vec<f64>> {
         let fix = e.fix;
-        let (n, d) = (st.n, rc.mcfg.dim);
+        let (d, nc) = (rc.mcfg.dim, rc.mcfg.n_classes);
         e.set_phase_ctx("");
         e.phase("classify");
-        let mut pooled = vec![0u64; d];
-        for r in 0..n {
-            for (p, &v) in pooled.iter_mut().zip(st.x.row(r)) {
-                *p = p.wrapping_add(v);
+        let mut pooled_rows: Vec<RingMat> = Vec::with_capacity(st.blocks.len());
+        for (bi, r0, r1) in st.block_ranges() {
+            e.mpc.align_block(bi);
+            let mut pooled = vec![0u64; d];
+            for r in r0..r1 {
+                for (p, &v) in pooled.iter_mut().zip(st.x.row(r)) {
+                    *p = p.wrapping_add(v);
+                }
             }
+            // pool over the block's kept tokens only — pads and other
+            // requests never average in
+            let inv_n = fix.enc(1.0 / (r1 - r0) as f64);
+            let pooled = e.mpc.scale_const_trunc(&pooled, inv_n, fix.frac_bits);
+            pooled_rows.push(RingMat::from_vec(1, d, pooled));
         }
-        let inv_n = fix.enc(1.0 / n as f64);
-        let pooled = e.mpc.scale_const_trunc(&pooled, inv_n, fix.frac_bits);
-        let pooled_m = RingMat::from_vec(1, d, pooled);
+        let pooled_m = RingMat::vstack(&pooled_rows); // B × d
+        let cls_layout: Vec<(usize, usize)> =
+            (0..st.blocks.len()).map(|b| (b, 1)).collect();
+        e.mpc.align_rows(&cls_layout);
         let w_cls = if e.is_p0() { Some(&rc.ring_w.w_cls) } else { None };
         let b_cls = if e.is_p0() { Some(rc.ring_w.b_cls.as_slice()) } else { None };
-        let logits_share = linear_layer(e, &pooled_m, w_cls, b_cls, rc.mcfg.n_classes);
+        let logits_share = linear_layer(e, &pooled_m, w_cls, b_cls, nc);
         let opened = e.mpc.open(&logits_share.data);
-        let logits: Vec<f64> = opened.iter().map(|&v| fix.dec(v)).collect();
+        let out: Vec<Vec<f64>> = (0..st.blocks.len())
+            .map(|b| opened[b * nc..(b + 1) * nc].iter().map(|&v| fix.dec(v)).collect())
+            .collect();
         st.clock.mark("classify".into());
-        logits
+        out
     }
 }
 
@@ -469,44 +691,95 @@ impl PipelineSpec {
     }
 }
 
-/// Drive one party through the pipeline. Variant-agnostic: every per-kind
-/// decision lives in the `spec`.
+/// Drive one party through a fused pipeline batch. Variant-agnostic: every
+/// per-kind decision lives in the `spec`; every per-request decision lives
+/// in the block states. Aligned truncation is active for the whole run, so
+/// each block's reconstructed values are those of its solo run.
+pub fn run_pipeline_batch(
+    e: &mut Engine2P,
+    rc: &RunCtx<'_>,
+    spec: &PipelineSpec,
+    blocks: &[BlockRun],
+) -> BatchPartyOut {
+    assert!(!blocks.is_empty(), "empty pipeline batch");
+    let nonces: Vec<u64> = blocks.iter().map(|b| b.nonce).collect();
+    e.mpc.align_begin(&nonces);
+    let mut clock = PhaseClock::new(e.is_p0());
+    let x = spec.embed.run(e, rc, blocks, &mut clock);
+    let mut st = LayerState {
+        li: 0,
+        x,
+        blocks: blocks
+            .iter()
+            .map(|b| BlockState {
+                nonce: b.nonce,
+                n: b.ids.len(),
+                rows: b.ids.len(),
+                atts: Vec::new(),
+                scores: None,
+                row_high: Vec::new(),
+                high_mask: Vec::new(),
+                stat: LayerStat::default(),
+            })
+            .collect(),
+        clock,
+    };
+    let mut layer_stats: Vec<Vec<LayerStat>> =
+        vec![Vec::with_capacity(rc.mcfg.n_layers); blocks.len()];
+    for li in 0..rc.mcfg.n_layers {
+        e.set_phase_ctx(&format!("#{li}"));
+        st.li = li;
+        for blk in st.blocks.iter_mut() {
+            blk.stat = LayerStat { n_in: blk.n, n_kept: blk.n, ..Default::default() };
+            blk.atts.clear();
+            blk.scores = None;
+            blk.high_mask.clear();
+        }
+        for pass in &spec.layer_passes {
+            pass.run(e, rc, &mut st);
+        }
+        for (b, blk) in st.blocks.iter_mut().enumerate() {
+            blk.n = blk.stat.n_kept;
+            blk.row_high = std::mem::take(&mut blk.high_mask);
+            layer_stats[b].push(blk.stat.clone());
+        }
+    }
+    let logits = spec.classify.run(e, rc, &mut st);
+    e.mpc.align_end();
+    let outs: Vec<BlockOut> = logits
+        .into_iter()
+        .zip(layer_stats)
+        .zip(st.blocks.iter())
+        .map(|((lg, ls), blk)| BlockOut { nonce: blk.nonce, logits: lg, layer_stats: ls })
+        .collect();
+    BatchPartyOut { blocks: outs, phase_wall: st.clock.into_acc() }
+}
+
+/// Drive one party through the pipeline for a single request (nonce 0) —
+/// the B = 1 view of [`run_pipeline_batch`], kept for one-shot callers and
+/// custom-spec composition.
 pub fn run_pipeline(
     e: &mut Engine2P,
     rc: &RunCtx<'_>,
     spec: &PipelineSpec,
     ids: &[usize],
 ) -> PartyOut {
-    let mut clock = PhaseClock::new(e.is_p0());
-    let x = spec.embed.run(e, rc, ids, &mut clock);
-    let mut st = LayerState {
-        li: 0,
-        n: ids.len(),
-        x,
-        atts: Vec::new(),
-        scores: None,
-        row_high: Vec::new(),
-        high_mask: Vec::new(),
-        stat: LayerStat::default(),
-        clock,
-    };
-    let mut layer_stats: Vec<LayerStat> = Vec::with_capacity(rc.mcfg.n_layers);
-    for li in 0..rc.mcfg.n_layers {
-        e.set_phase_ctx(&format!("#{li}"));
-        st.li = li;
-        st.stat = LayerStat { n_in: st.n, n_kept: st.n, ..Default::default() };
-        st.atts.clear();
-        st.scores = None;
-        st.high_mask.clear();
-        for pass in &spec.layer_passes {
-            pass.run(e, rc, &mut st);
-        }
-        st.n = st.stat.n_kept;
-        st.row_high = std::mem::take(&mut st.high_mask);
-        layer_stats.push(st.stat.clone());
+    // content-mixed nonce, matching what Session::infer_batch derives for a
+    // nonce-0 request with the same ids — the one-shot shim and a fresh
+    // session's first request stay bit-identical
+    let batch = run_pipeline_batch(
+        e,
+        rc,
+        spec,
+        &[BlockRun { nonce: block_nonce(0, ids), ids: ids.to_vec() }],
+    );
+    let mut blocks = batch.blocks;
+    let one = blocks.remove(0);
+    PartyOut {
+        logits: one.logits,
+        layer_stats: one.layer_stats,
+        phase_wall: batch.phase_wall,
     }
-    let logits = spec.classify.run(e, rc, &mut st);
-    PartyOut { logits, layer_stats, phase_wall: st.clock.into_acc() }
 }
 
 #[cfg(test)]
@@ -516,6 +789,17 @@ mod tests {
     use crate::nn::{ModelConfig, ModelWeights, Workload};
     use crate::party::run2_owned_sym;
     use std::sync::Arc;
+
+    /// The content-mixed nonce replays for identical (nonce, content) pairs
+    /// and diverges on any change — the structural guard against canonical
+    /// pad reuse.
+    #[test]
+    fn block_nonce_separates_content_and_replays() {
+        assert_eq!(block_nonce(7, &[1, 2, 3]), block_nonce(7, &[1, 2, 3]));
+        assert_ne!(block_nonce(7, &[1, 2, 3]), block_nonce(7, &[1, 2, 4]));
+        assert_ne!(block_nonce(7, &[1, 2, 3]), block_nonce(8, &[1, 2, 3]));
+        assert_ne!(block_nonce(7, &[1, 2]), block_nonce(7, &[1, 2, 0]));
+    }
 
     #[test]
     fn every_kind_is_pipeline_data() {
@@ -569,5 +853,53 @@ mod tests {
         assert!(p0.layer_stats[0].n_kept <= p0.layer_stats[0].n_in);
         // no reduce pass → every kept token stays high-degree
         assert_eq!(p0.layer_stats[0].n_high, p0.layer_stats[0].n_kept);
+    }
+
+    /// A two-block fused run produces per-block outputs whose shapes and
+    /// layer trajectories follow each block's own length.
+    #[test]
+    fn fused_blocks_keep_per_request_bookkeeping() {
+        let mcfg = ModelConfig::tiny();
+        let w = Arc::new(ModelWeights::salient(&mcfg, 42));
+        let wl = Workload::qnli_like(&mcfg, 8);
+        let a = wl.batch(1, 17)[0].clone();
+        let b = wl.batch(1, 23)[0].clone();
+        let blocks = vec![
+            BlockRun { nonce: 1, ids: a.ids[..a.real_len].to_vec() },
+            BlockRun { nonce: 2, ids: b.ids[..b.real_len].to_vec() },
+        ];
+        let model = PreparedModel::prepare(w);
+        let cfg = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let schedule = cfg.resolved_schedule(mcfg.n_layers);
+        let blocks2 = blocks.clone();
+        let (p0, _p1, _t) = run2_owned_sym(cfg.seed, move |ctx| {
+            let mut e = crate::protocols::Engine2P::new(
+                ctx,
+                cfg.triple_mode,
+                cfg.he_n,
+                model.fix,
+            );
+            let spec = PipelineSpec::for_kind(EngineKind::CipherPrune, &cfg);
+            let rc = RunCtx {
+                cfg: &cfg,
+                mcfg: &model.weights.config,
+                ring_w: &model.ring,
+                schedule: &schedule,
+            };
+            run_pipeline_batch(&mut e, &rc, &spec, &blocks2)
+        });
+        assert_eq!(p0.blocks.len(), 2);
+        for (out, blk) in p0.blocks.iter().zip(&blocks) {
+            assert_eq!(out.nonce, blk.nonce);
+            assert_eq!(out.logits.len(), mcfg.n_classes);
+            assert_eq!(out.layer_stats[0].n_in, blk.ids.len());
+            let mut prev = blk.ids.len();
+            for ls in &out.layer_stats {
+                assert_eq!(ls.n_in, prev);
+                assert!(ls.n_kept <= ls.n_in);
+                assert!(ls.n_high <= ls.n_kept);
+                prev = ls.n_kept;
+            }
+        }
     }
 }

@@ -1,7 +1,15 @@
-//! Request router: admits requests, drives the length-bucketed batcher, pads
-//! each batch to its bucket, executes batch members on cached per-kind
-//! [`Session`]s (each session is a persistent P0/P1 thread pair), and records
-//! metrics.
+//! Request router: admits requests (rejecting duplicate in-flight ids),
+//! drives the length-bucketed batcher, **fuses** each same-kind batch group
+//! into one block-masked pipeline run on a cached [`Session`] (each session
+//! is a persistent P0/P1 thread pair), and records metrics.
+//!
+//! Requests are *not* padded to their bucket any more: the pipeline is
+//! mask-aware (lengths are public, padding is stripped at the session
+//! boundary), so the bucket is purely a scheduling/reporting notion and a
+//! request's result is independent of the bucket it rode in. A batch of B
+//! same-kind requests executes as ONE fused run — one weight-ciphertext pass
+//! over the stacked token matrix — with `metrics.runs` counting batches and
+//! `metrics.requests` counting members.
 //!
 //! Offline work is amortized across the router's lifetime: the model is
 //! ring-encoded exactly once ([`PreparedModel`], at construction) and each
@@ -12,12 +20,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::nn::{workload::PAD_ID, ModelWeights, ThresholdSchedule};
+use crate::nn::{ModelWeights, ThresholdSchedule};
 use crate::util::WorkerPool;
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::engine::{EngineConfig, PreparedModel};
 use super::metrics::MetricsRegistry;
+use super::pipeline::BlockRun;
 use super::session::Session;
 use super::types::{EngineKind, InferenceRequest, RunResult};
 
@@ -57,9 +66,12 @@ impl Default for RouterConfig {
 pub struct Response {
     pub id: u64,
     pub result: RunResult,
-    /// Padded length the request was executed at.
+    /// Scheduling bucket the request was released from. The pipeline runs at
+    /// the real length, so the bucket no longer affects the result — it only
+    /// records which queue the batcher grouped this request into.
     pub bucket: usize,
-    /// Queueing + execution latency.
+    /// Queueing + execution latency (execution is the fused batch's wall;
+    /// see [`RunResult::amortized_wall_s`] for the per-request share).
     pub latency_s: f64,
 }
 
@@ -117,9 +129,15 @@ impl Router {
     }
 
     /// Submit a request (queued until a batch releases).
-    /// Err = rejected (too long for the policy).
+    /// Err = rejected: too long for the policy, or its id is already in
+    /// flight. Duplicate ids would corrupt latency accounting and response
+    /// ordering, and they key the aligned-truncation nonces — uniqueness is
+    /// part of the privacy contract (see `gates::Mpc::align_begin`).
     pub fn submit(&mut self, req: InferenceRequest) -> Result<(), InferenceRequest> {
         let id = req.id;
+        if self.submitted.iter().any(|(i, _)| *i == id) {
+            return Err(req);
+        }
         self.batcher.push(req)?;
         self.submitted.push((id, Instant::now()));
         Ok(())
@@ -128,14 +146,12 @@ impl Router {
     fn run_batch(&mut self, batch: Batch) -> Vec<Response> {
         let bucket = batch.bucket;
         let workers = self.cfg.workers.max(1);
-        // pad all requests to the bucket length
+        // no bucket padding: the pipeline strips pads anyway (mask-aware),
+        // so jobs travel at their submitted length
         let jobs: Vec<(u64, EngineKind, Vec<usize>)> = batch
             .requests
             .into_iter()
-            .map(|mut r| {
-                r.ids.resize(bucket, PAD_ID);
-                (r.id, r.engine, r.ids)
-            })
+            .map(|r| (r.id, r.engine, r.ids))
             .collect();
         // group job indices by engine kind
         let mut groups: HashMap<EngineKind, Vec<usize>> = HashMap::new();
@@ -177,9 +193,11 @@ impl Router {
                 self.metrics.session_setups += 1;
             }
         }
-        // execute: each session slot serves its stride of its kind's jobs
+        // execute: each session slot FUSES its stride of its kind's jobs
+        // into one block-masked pipeline run (cross-request amortization —
+        // one weight-ciphertext pass instead of one per request)
         let jobs_ref = &jobs;
-        let slot_results: Vec<Vec<(usize, RunResult)>> = std::thread::scope(|s| {
+        let slot_results: Vec<(Vec<usize>, Vec<RunResult>)> = std::thread::scope(|s| {
             let mut handles = Vec::new();
             for (kind, pool) in self.sessions.iter_mut() {
                 let Some(idxs) = groups.get(kind) else { continue };
@@ -187,10 +205,21 @@ impl Router {
                 for (slot, sess) in pool.iter_mut().take(n_slots).enumerate() {
                     let mine: Vec<usize> =
                         idxs.iter().copied().skip(slot).step_by(n_slots).collect();
+                    if mine.is_empty() {
+                        continue;
+                    }
                     handles.push(s.spawn(move || {
-                        mine.into_iter()
-                            .map(|i| (i, sess.infer(&jobs_ref[i].2)))
-                            .collect::<Vec<_>>()
+                        let items: Vec<BlockRun> = mine
+                            .iter()
+                            .map(|&i| BlockRun {
+                                // in-flight ids are unique (submit enforces
+                                // it) → valid alignment nonces
+                                nonce: jobs_ref[i].0,
+                                ids: jobs_ref[i].2.clone(),
+                            })
+                            .collect();
+                        let results = sess.infer_batch(&items);
+                        (mine, results)
                     }));
                 }
             }
@@ -200,17 +229,21 @@ impl Router {
                 .collect()
         });
         let mut results: Vec<Option<RunResult>> = jobs.iter().map(|_| None).collect();
-        for slot in slot_results {
-            for (i, r) in slot {
+        for (mine, rs) in slot_results {
+            // one fused run per slot → one metrics record (`runs` counts
+            // batches; the record's batch_size carries the member count)
+            if let Some(first) = rs.first() {
+                self.metrics.record(jobs[mine[0]].1.name(), first);
+            }
+            for (i, r) in mine.into_iter().zip(rs) {
                 results[i] = Some(r);
             }
         }
         let now = Instant::now();
         jobs.into_iter()
             .zip(results)
-            .map(|((id, kind, _), result)| {
+            .map(|((id, _kind, _), result)| {
                 let result = result.expect("every job executed");
-                self.metrics.record(kind.name(), &result);
                 let latency_s = self
                     .submitted
                     .iter()
@@ -305,6 +338,7 @@ mod tests {
         }
         let m = r.metrics.get("cipherprune").unwrap();
         assert_eq!(m.runs, 3);
+        assert_eq!(m.requests, 3);
         // 3 requests, 1 model prep, ≤ workers session setups
         assert_eq!(r.metrics.model_preps, 1);
         assert!(r.metrics.session_setups <= 2);
@@ -320,6 +354,59 @@ mod tests {
             engine: EngineKind::CipherPrune,
         };
         assert!(r.submit(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_inflight_ids() {
+        let mut r = mk_router(8); // large batch: nothing releases between submits
+        let mut reqs = mk_reqs(2, EngineKind::CipherPrune);
+        reqs[1].id = reqs[0].id; // duplicate
+        assert!(r.submit(reqs.remove(0)).is_ok());
+        let dup = reqs.remove(0);
+        assert!(r.submit(dup).is_err(), "duplicate in-flight id must be rejected");
+        assert_eq!(r.pending(), 1);
+        // after the original completes, the id is free again
+        let resp = r.flush();
+        assert_eq!(resp.len(), 1);
+        let again = mk_reqs(1, EngineKind::CipherPrune);
+        assert!(r.submit(again.into_iter().next().unwrap()).is_ok());
+    }
+
+    /// A full same-kind batch executes as ONE fused pipeline run: `runs`
+    /// counts batches, `requests` counts members, and every member reports
+    /// the batch size for amortized accounting.
+    #[test]
+    fn full_bucket_fuses_into_one_run() {
+        let cfg = ModelConfig::tiny();
+        let weights = Arc::new(ModelWeights::salient(&cfg, 42));
+        let mut r = Router::new(
+            weights,
+            RouterConfig {
+                policy: BatchPolicy {
+                    max_batch: 3,
+                    linger: std::time::Duration::from_secs(100),
+                    min_bucket: 8,
+                    max_tokens: 64,
+                },
+                workers: 1, // one slot → the whole group fuses
+                he_n: 128,
+                schedule: None,
+                threads: None,
+            },
+        );
+        for q in mk_reqs(3, EngineKind::CipherPrune) {
+            r.submit(q).unwrap();
+        }
+        let resp = r.step();
+        assert_eq!(resp.len(), 3, "full bucket released and fused");
+        for rsp in &resp {
+            assert_eq!(rsp.result.batch_size, 3);
+            assert_eq!(rsp.result.logits.len(), 2);
+        }
+        let m = r.metrics.get("cipherprune").unwrap();
+        assert_eq!(m.runs, 1, "one fused pipeline run");
+        assert_eq!(m.requests, 3);
+        assert!(m.amortized_wall_s() <= m.mean_wall_s());
     }
 
     #[test]

@@ -3,14 +3,24 @@
 //! A [`Session`] pins the per-engine-kind state that is expensive to build —
 //! the `Engine2P` endpoints (HE keypairs, base OTs, triple machinery) on two
 //! persistent party threads connected by the byte-counted channel — and
-//! serves many requests through it. [`Session::infer`] runs the *online*
-//! phase only; weight encoding lives one level up in
+//! serves many requests through it. [`Session::infer_batch`] runs the
+//! *online* phase only, for a whole same-session batch fused into ONE
+//! pipeline run ([`Session::infer`] is the B = 1 convenience); weight
+//! encoding lives one level up in
 //! [`PreparedModel`](super::engine::PreparedModel), built once per model.
 //!
-//! Per-request traffic is the transcript delta since the previous request, so
+//! Padding is stripped at the session boundary (lengths are public — see the
+//! [coordinator docs](super#padding-public-lengths-and-fused-batching)), so
+//! a request behaves identically whatever bucket it was padded to, and a
+//! fused batch reproduces each member's solo results bit-for-bit (aligned
+//! truncation keys the canonical streams by the caller-supplied nonce).
+//!
+//! Per-batch traffic is the transcript delta since the previous batch, so
 //! [`RunResult::phases`] keeps the same per-protocol labels as the one-shot
 //! path while the one-time setup traffic is reported separately via
-//! [`Session::setup_stats`].
+//! [`Session::setup_stats`]. For a fused batch the delta is *batch-level*:
+//! each member's `RunResult` carries the shared phases/wall plus its
+//! `batch_size`, so per-request amortized cost is `wall_s / batch_size`.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -19,11 +29,14 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::net::{Chan, PhaseStats, SharedTranscript};
+use crate::nn::workload::strip_padding;
 use crate::party::{PartyCtx, PartyId};
 use crate::protocols::Engine2P;
 
 use super::engine::{run_plaintext, EngineConfig, PreparedModel};
-use super::pipeline::{run_pipeline, PartyOut, PipelineSpec, RunCtx};
+use super::pipeline::{
+    run_pipeline_batch, BatchPartyOut, BlockRun, PipelineSpec, RunCtx,
+};
 use super::types::{EngineKind, LayerStat, RunResult};
 
 fn spawn_party(
@@ -31,8 +44,8 @@ fn spawn_party(
     ch: Chan,
     cfg: EngineConfig,
     model: Arc<PreparedModel>,
-    job_rx: Receiver<Vec<usize>>,
-    out_tx: Sender<PartyOut>,
+    job_rx: Receiver<Vec<BlockRun>>,
+    out_tx: Sender<BatchPartyOut>,
     ready_tx: Sender<()>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
@@ -48,14 +61,14 @@ fn spawn_party(
         let _ = ready_tx.send(());
         let spec = PipelineSpec::for_kind(cfg.kind, &cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
-        while let Ok(ids) = job_rx.recv() {
+        while let Ok(blocks) = job_rx.recv() {
             let rc = RunCtx {
                 cfg: &cfg,
                 mcfg: &model.weights.config,
                 ring_w: &model.ring,
                 schedule: &schedule,
             };
-            let out = run_pipeline(&mut e, &rc, &spec, &ids);
+            let out = run_pipeline_batch(&mut e, &rc, &spec, &blocks);
             if out_tx.send(out).is_err() {
                 break;
             }
@@ -65,10 +78,10 @@ fn spawn_party(
 
 struct TwoParty {
     transcript: SharedTranscript,
-    job_tx: Vec<Sender<Vec<usize>>>,
-    out_rx: Vec<Receiver<PartyOut>>,
+    job_tx: Vec<Sender<Vec<BlockRun>>>,
+    out_rx: Vec<Receiver<BatchPartyOut>>,
     handles: Vec<JoinHandle<()>>,
-    /// Cumulative transcript snapshot at the end of the previous request
+    /// Cumulative transcript snapshot at the end of the previous batch
     /// (initially: the setup traffic).
     seen: BTreeMap<String, PhaseStats>,
     setup_phases: Vec<(String, PhaseStats)>,
@@ -82,6 +95,7 @@ pub struct Session {
     /// None for the plaintext oracle (no crypto state to reuse).
     inner: Option<TwoParty>,
     runs: u64,
+    requests: u64,
 }
 
 impl Session {
@@ -89,7 +103,7 @@ impl Session {
     /// base OTs). Everything after this call is online-phase work.
     pub fn start(model: Arc<PreparedModel>, cfg: EngineConfig) -> Session {
         if cfg.kind == EngineKind::Plaintext {
-            return Session { cfg, model, inner: None, runs: 0 };
+            return Session { cfg, model, inner: None, runs: 0, requests: 0 };
         }
         let t0 = Instant::now();
         let (ca, cb, transcript) = Chan::pair();
@@ -122,6 +136,7 @@ impl Session {
                 setup_wall_s,
             }),
             runs: 0,
+            requests: 0,
         }
     }
 
@@ -137,9 +152,14 @@ impl Session {
         &self.model
     }
 
-    /// Requests served so far.
+    /// Pipeline runs served so far (a fused batch counts once).
     pub fn runs(&self) -> u64 {
         self.runs
+    }
+
+    /// Individual requests served so far (a fused batch of B counts B).
+    pub fn requests(&self) -> u64 {
+        self.requests
     }
 
     /// Wall time of the one-time two-party setup (0 for plaintext).
@@ -155,7 +175,7 @@ impl Session {
     /// Per-endpoint running content digest of everything sent on the
     /// session's channel so far (setup + all requests); `[0, 0]` for the
     /// plaintext oracle. The thread-count invariance tests compare this to
-    /// pin wire *content*, not just byte counts.
+    /// pin wire *content*, not just sizes.
     pub fn transcript_digest(&self) -> [u64; 2] {
         self.inner
             .as_ref()
@@ -172,20 +192,64 @@ impl Session {
         t
     }
 
-    /// Serve one request: online phase only (no weight encoding, no keygen,
-    /// no base OTs). `RunResult::phases` holds this request's traffic.
-    pub fn infer(&mut self, ids: &[usize]) -> RunResult {
+    /// Serve a batch of requests fused into ONE pipeline run: online phase
+    /// only (no weight encoding, no keygen, no base OTs). Bucket padding is
+    /// stripped here; each item's nonce keys its aligned-truncation streams,
+    /// so results are bit-identical to solo runs with the same nonces.
+    /// Results come back in item order. The returned `RunResult`s share the
+    /// batch's phases/wall and carry `batch_size` for amortized accounting.
+    pub fn infer_batch(&mut self, items: &[BlockRun]) -> Vec<RunResult> {
+        assert!(!items.is_empty(), "empty inference batch");
         self.runs += 1;
+        self.requests += items.len() as u64;
+        let blocks: Vec<BlockRun> = items
+            .iter()
+            .map(|it| {
+                let mut ids = strip_padding(&it.ids).to_vec();
+                if ids.is_empty() {
+                    // an empty request degenerates to one pad token, like an
+                    // all-pad one — the pipeline needs ≥ 1 row per block
+                    ids.push(crate::nn::workload::PAD_ID);
+                }
+                // content-mixed alignment nonce: recycling a caller nonce
+                // with different content cannot reuse the canonical pads
+                let nonce = super::pipeline::block_nonce(it.nonce, &ids);
+                BlockRun { nonce, ids }
+            })
+            .collect();
+        // validate here, in the caller's thread — a duplicate (nonce,
+        // content) pair would trip the align_begin assert inside the party
+        // threads and wedge the session for every later request
+        {
+            let mut seen: Vec<u64> = blocks.iter().map(|b| b.nonce).collect();
+            seen.sort_unstable();
+            assert!(
+                !seen.windows(2).any(|w| w[0] == w[1]),
+                "infer_batch: two batch members share a (nonce, content) pair — \
+                 give identical requests distinct nonces"
+            );
+        }
         let Some(tp) = self.inner.as_mut() else {
-            return run_plaintext(&self.model.weights, ids);
+            // plaintext oracle: no crypto, but the same masked semantics
+            let t0 = Instant::now();
+            let mut out: Vec<RunResult> = blocks
+                .iter()
+                .map(|b| run_plaintext(&self.model.weights, &b.ids))
+                .collect();
+            let wall_s = t0.elapsed().as_secs_f64();
+            for r in out.iter_mut() {
+                r.wall_s = wall_s;
+                r.batch_size = blocks.len();
+            }
+            return out;
         };
         let t0 = Instant::now();
-        tp.job_tx[0].send(ids.to_vec()).expect("P0 session worker gone");
-        tp.job_tx[1].send(ids.to_vec()).expect("P1 session worker gone");
+        tp.job_tx[0].send(blocks.clone()).expect("P0 session worker gone");
+        tp.job_tx[1].send(blocks).expect("P1 session worker gone");
         let p0 = tp.out_rx[0].recv().expect("P0 session worker died");
         let _p1 = tp.out_rx[1].recv().expect("P1 session worker died");
         let wall_s = t0.elapsed().as_secs_f64();
-        // per-request traffic = transcript delta since the previous request
+        // per-batch traffic = transcript delta since the previous batch
         let snap: BTreeMap<String, PhaseStats> = {
             let t = tp.transcript.lock().unwrap();
             t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
@@ -203,15 +267,33 @@ impl Session {
             })
             .collect();
         tp.seen = snap;
-        let mut layer_stats = p0.layer_stats;
-        harvest_layer_traffic(&mut layer_stats, &phases);
-        RunResult {
-            logits: p0.logits,
-            layer_stats,
-            phases,
-            phase_wall: p0.phase_wall,
-            wall_s,
-        }
+        let batch_size = p0.blocks.len();
+        p0.blocks
+            .into_iter()
+            .map(|b| {
+                let mut layer_stats = b.layer_stats;
+                harvest_layer_traffic(&mut layer_stats, &phases);
+                RunResult {
+                    logits: b.logits,
+                    layer_stats,
+                    phases: phases.clone(),
+                    phase_wall: p0.phase_wall.clone(),
+                    wall_s,
+                    batch_size,
+                }
+            })
+            .collect()
+    }
+
+    /// Serve one request (the B = 1 batch with caller-nonce 0). Safe for
+    /// mixed inputs: the effective alignment nonce mixes in the request
+    /// content ([`block_nonce`](super::pipeline::block_nonce)), so repeated
+    /// identical inputs replay deterministically while different inputs
+    /// never share canonical pads.
+    pub fn infer(&mut self, ids: &[usize]) -> RunResult {
+        self.infer_batch(&[BlockRun { nonce: 0, ids: ids.to_vec() }])
+            .pop()
+            .expect("one result per request")
     }
 }
 
@@ -230,8 +312,10 @@ impl Drop for Session {
 }
 
 /// Attach per-layer SoftMax/GELU traffic to the layer stats: one pass over
-/// the phase labels, parsing the `proto#layer` suffix into a direct index
-/// (replaces the old O(layers × phases) string-compare harvest).
+/// the phase labels, parsing the `proto#layer` suffix into a direct index.
+/// For a fused batch the phases are batch-level, so every member's stats
+/// carry the batch totals (per-block protocol traffic is not separable on
+/// one shared channel).
 pub(crate) fn harvest_layer_traffic(
     layer_stats: &mut [LayerStat],
     phases: &[(String, PhaseStats)],

@@ -88,6 +88,14 @@ pub struct InferenceRequest {
 }
 
 /// Per-layer decision statistics (Fig. 19, Table 3).
+///
+/// The *decision* fields (`n_in`/`n_kept`/`n_high`/`swaps`) are always the
+/// owning request's own. The *cost* fields (`prune_wall_s`,
+/// `softmax_bytes`, `gelu_bytes`) are measured per pipeline run: in a fused
+/// batch they carry the whole batch's layer cost (one shared channel and
+/// clock — per-block cost is not separable), so divide by
+/// `RunResult::batch_size` for a per-request estimate before aggregating
+/// across batch members.
 #[derive(Clone, Debug, Default)]
 pub struct LayerStat {
     pub n_in: usize,
@@ -96,28 +104,45 @@ pub struct LayerStat {
     pub n_high: usize,
     /// Oblivious swaps performed by Π_mask / bitonic sort.
     pub swaps: usize,
-    /// Wall time of the pruning protocol in this layer (s).
+    /// Wall time of the pruning protocol in this layer (s; batch-level in a
+    /// fused run).
     pub prune_wall_s: f64,
-    /// SoftMax protocol traffic this layer (bytes).
+    /// SoftMax protocol traffic this layer (bytes; batch-level in a fused
+    /// run).
     pub softmax_bytes: u64,
-    /// GELU protocol traffic this layer (bytes).
+    /// GELU protocol traffic this layer (bytes; batch-level in a fused
+    /// run).
     pub gelu_bytes: u64,
 }
 
-/// Result of one private inference run.
+/// Result of one private inference request. When the request executed
+/// inside a fused batch, `phases`, `phase_wall`, `wall_s`, and the cost
+/// fields inside `layer_stats` are *batch-level* (the batch ran as one
+/// pipeline pass on one channel); `logits` and the per-layer *decision*
+/// fields (`n_in`/`n_kept`/`n_high`/`swaps`) are always this request's own.
+/// Amortized per-request wall time is `wall_s / batch_size`.
 #[derive(Clone, Debug)]
 pub struct RunResult {
     pub logits: Vec<f64>,
     pub layer_stats: Vec<LayerStat>,
-    /// Per-phase traffic, keyed by "protocol#layer" labels.
+    /// Per-phase traffic, keyed by "protocol#layer" labels (batch totals).
     pub phases: Vec<(String, PhaseStats)>,
-    /// Per-phase P0 wall time (s), same keys.
+    /// Per-phase P0 wall time (s), same keys (batch totals).
     pub phase_wall: Vec<(String, f64)>,
-    /// End-to-end wall time (s), both parties in-process.
+    /// End-to-end wall time (s) of the pipeline run that served this
+    /// request, both parties in-process.
     pub wall_s: f64,
+    /// Number of requests fused into that run (1 for a solo run).
+    pub batch_size: usize,
 }
 
 impl RunResult {
+    /// Per-request amortized wall time: the batch wall split across its
+    /// members.
+    pub fn amortized_wall_s(&self) -> f64 {
+        self.wall_s / self.batch_size.max(1) as f64
+    }
+
     pub fn predicted(&self) -> usize {
         self.logits
             .iter()
@@ -192,7 +217,9 @@ mod tests {
             ],
             phase_wall: vec![("softmax#0".into(), 1.0), ("softmax#1".into(), 2.0)],
             wall_s: 3.0,
+            batch_size: 2,
         };
+        assert!((r.amortized_wall_s() - 1.5).abs() < 1e-12);
         assert_eq!(r.stats_by_prefix("softmax").bytes, 30);
         assert_eq!(r.stats_by_prefix("gelu").bytes, 5);
         assert_eq!(r.total_stats().bytes, 35);

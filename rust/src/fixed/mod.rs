@@ -175,6 +175,40 @@ impl RingMat {
         self.data.truncate(n * self.cols);
     }
 
+    /// Row-range slice `[lo, hi)` as a new matrix (e.g. extracting one
+    /// request's block from a fused batch matrix).
+    pub fn row_range(&self, lo: usize, hi: usize) -> RingMat {
+        assert!(lo <= hi && hi <= self.rows, "row_range {lo}..{hi} of {}", self.rows);
+        RingMat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack matrices vertically (all must share the column count).
+    pub fn vstack(parts: &[RingMat]) -> RingMat {
+        assert!(!parts.is_empty(), "vstack of nothing");
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        RingMat { rows, cols, data }
+    }
+
+    /// [`vstack`](Self::vstack) taking ownership: the common single-part
+    /// case moves the matrix out instead of copying it.
+    pub fn vstack_owned(mut parts: Vec<RingMat>) -> RingMat {
+        if parts.len() == 1 {
+            parts.pop().expect("one part")
+        } else {
+            RingMat::vstack(&parts)
+        }
+    }
+
     pub fn map(&self, f: impl Fn(Ring) -> Ring) -> RingMat {
         RingMat {
             rows: self.rows,
@@ -364,5 +398,16 @@ mod tests {
         m.truncate_rows(2);
         assert_eq!(m.rows, 2);
         assert_eq!(m.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn row_range_and_vstack_roundtrip() {
+        let m = RingMat::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]);
+        let top = m.row_range(0, 1);
+        let rest = m.row_range(1, 3);
+        assert_eq!((top.rows, top.cols), (1, 2));
+        assert_eq!(rest.data, vec![3, 4, 5, 6]);
+        assert_eq!(RingMat::vstack(&[top, rest]), m);
+        assert_eq!(m.row_range(2, 2).rows, 0);
     }
 }

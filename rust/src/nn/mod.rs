@@ -8,7 +8,9 @@ pub mod weights;
 pub mod workload;
 
 pub use config::ModelConfig;
-pub use reference::{forward, Activations, ForwardOptions, ForwardOutput, PruneStrategy};
+pub use reference::{
+    forward, forward_masked, Activations, ForwardOptions, ForwardOutput, PruneStrategy,
+};
 pub use thresholds::ThresholdSchedule;
 pub use weights::ModelWeights;
-pub use workload::{Sample, Workload};
+pub use workload::{real_len, strip_padding, Sample, Workload, PAD_ID};

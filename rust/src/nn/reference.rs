@@ -249,7 +249,24 @@ pub fn prune_order(keep: &[bool]) -> (Vec<usize>, usize) {
     (order, n_kept)
 }
 
-/// Full reference forward pass.
+/// Mask-aware oracle: the reference a *served* request is checked against.
+///
+/// Strips the trailing [`PAD_ID`](super::workload::PAD_ID) run (lengths are
+/// public — see `coordinator` docs on padding semantics) and runs
+/// [`forward`] on the real prefix. This mirrors the private pipeline's
+/// validity mask exactly: a masked pad column contributes exactly zero
+/// SoftMax mass, zero Eq. 1 importance, and nothing to the classifier pool,
+/// so masking and stripping compute the same function — stripping just skips
+/// the dead work. Under the block-fusion model, requests are independent in
+/// exact arithmetic, so the batched oracle is a per-request loop.
+pub fn forward_masked(w: &ModelWeights, ids: &[usize], opt: &ForwardOptions) -> ForwardOutput {
+    forward(w, super::workload::strip_padding(ids), opt)
+}
+
+/// Full reference forward pass on `ids` exactly as given (padding included —
+/// the pre-mask semantics kept for padding-sensitivity studies like the
+/// `padding_tokens_get_low_scores` test; serving paths compare against
+/// [`forward_masked`]).
 pub fn forward(w: &ModelWeights, ids: &[usize], opt: &ForwardOptions) -> ForwardOutput {
     let cfg = &w.config;
     let d = cfg.dim;
@@ -444,6 +461,24 @@ mod tests {
         let (order, k) = prune_order(&[false, false]);
         assert_eq!(k, 1);
         assert_eq!(order[0], 0);
+    }
+
+    #[test]
+    fn forward_masked_equals_forward_on_real_prefix() {
+        let (w, ids) = setup();
+        let real = crate::nn::workload::real_len(&ids);
+        let a = forward_masked(&w, &ids, &ForwardOptions::plain());
+        let b = forward(&w, &ids[..real], &ForwardOptions::plain());
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.traces[0].n_in, real);
+        // and when padding is present, it must differ from the padded pass
+        if real < ids.len() {
+            let c = forward(&w, &ids, &ForwardOptions::plain());
+            assert!(
+                a.logits.iter().zip(&c.logits).any(|(x, y)| (x - y).abs() > 1e-12),
+                "padding contaminated the padded pass, masked pass must differ"
+            );
+        }
     }
 
     #[test]

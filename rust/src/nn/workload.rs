@@ -23,6 +23,24 @@ use super::config::ModelConfig;
 /// Token-id layout within the synthetic vocabulary.
 pub const PAD_ID: usize = 0;
 
+/// Number of tokens before the trailing [`PAD_ID`] run — the *public* real
+/// length of a (possibly bucket-padded) request. Sequence lengths are public
+/// in this 2PC setting (message sizes leak them anyway), which is what lets
+/// the pipeline strip padding instead of letting pad tokens absorb SoftMax
+/// mass and distort Eq. 1 importance scores. Degenerate all-pad inputs keep
+/// one token so every request still produces a prediction.
+pub fn real_len(ids: &[usize]) -> usize {
+    if ids.is_empty() {
+        return 0;
+    }
+    ids.iter().rposition(|&id| id != PAD_ID).map_or(1, |p| p + 1)
+}
+
+/// The non-padding prefix of `ids` (see [`real_len`]).
+pub fn strip_padding(ids: &[usize]) -> &[usize] {
+    &ids[..real_len(ids)]
+}
+
 /// One classification sample.
 #[derive(Clone, Debug)]
 pub struct Sample {
@@ -200,6 +218,20 @@ mod tests {
         let b = w.batch(4, 42);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.ids, y.ids);
+        }
+    }
+
+    #[test]
+    fn real_len_strips_trailing_padding_only() {
+        assert_eq!(real_len(&[3, 5, 0, 0]), 2);
+        assert_eq!(real_len(&[3, 0, 5, 0]), 3, "interior PAD is kept");
+        assert_eq!(real_len(&[3, 5]), 2);
+        assert_eq!(real_len(&[0, 0]), 1, "all-pad keeps one token");
+        assert_eq!(real_len(&[]), 0);
+        assert_eq!(strip_padding(&[7, 9, 0]), &[7, 9]);
+        let c = ModelConfig::tiny();
+        for s in Workload::qnli_like(&c, 32).batch(8, 13) {
+            assert_eq!(real_len(&s.ids), s.real_len);
         }
     }
 

@@ -16,6 +16,13 @@
 //!    with one wide MUX (two wide COTs — the paper's "four OT-based
 //!    multiplications"). O(mn) swaps total.
 //! 4. **Truncate**: both parties locally drop the trailing m rows and the tag.
+//!
+//! Π_mask contains no fixed-point truncation, so it is *exact in
+//! reconstruction*: its outputs (and the public n′) are deterministic
+//! functions of the reconstructed inputs, which is one of the properties the
+//! coordinator's bit-consistent batch fusion rests on (the other is aligned
+//! truncation — see `gates::Mpc::align_begin`). In a fused batch it runs per
+//! block: tokens relocate within their own request only.
 
 use super::Engine2P;
 use crate::fixed::RingMat;

@@ -7,6 +7,12 @@
 //! 3.   ⟨M⟩[i] = Π_CMP(⟨S⟩[i], θ) — n comparisons, batched into one
 //!      millionaires invocation;
 //! 4.   Π_mask relocates pruned tokens to the tail and truncates.
+//!
+//! In a fused batch the coordinator calls Π_prune once per block with that
+//! block's attention maps, token rows, and θ resolved against the block's
+//! *real* current token count (`ThresholdSchedule::theta_abs(li, n_block)`)
+//! — resolving θ against a padded bucket length was the core of the padding
+//! bug this layering fixes.
 
 use super::mask::{pi_mask, MaskOutput};
 use super::softmax::importance_scores;

@@ -6,6 +6,11 @@
 //! does not compromise location privacy (paper argument, §3.3).
 //!
 //! M_β[i] = 1 → token i keeps high-degree polynomials; 0 → reduced degree.
+//!
+//! Per-block in a fused batch: each request's mask is computed from its own
+//! pruned scores against β resolved at the block's real token count, and its
+//! positions index the block's pruned order only — revealing it discloses
+//! nothing across requests.
 
 use super::Engine2P;
 

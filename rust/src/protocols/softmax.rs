@@ -11,6 +11,12 @@
 //! `row_high[i]` is the (public, post-pruning) polynomial-reduction mask M_β:
 //! true rows use the high-degree path. See `reduce.rs` for why revealing it is
 //! safe after Π_mask.
+//!
+//! Block semantics: the coordinator invokes this protocol once per *block*
+//! (request) of a fused batch, on the block's own n×n attention logits — the
+//! block-diagonal attention mask realized structurally. Likewise
+//! [`importance_scores`] normalizes by the calling block's own token count
+//! (Eq. 1's 1/(H·n) with the block's real n, never a padded bucket length).
 
 use super::Engine2P;
 use crate::fixed::{RingMat, sub_vec};

@@ -1,0 +1,218 @@
+//! Batched-vs-solo bit-consistency: the contract of the mask-aware fused
+//! pipeline (see the coordinator docs on padding semantics).
+//!
+//! For any request, ALL of the following must produce identical logits and
+//! identical per-layer `n_kept`/`n_high` trajectories — not merely close:
+//!
+//! 1. run alone at its real length,
+//! 2. run alone padded to a power-of-two bucket,
+//! 3. run inside a fused batch with other requests.
+//!
+//! (1) ≡ (2) is the padding bugfix: lengths are public, the session strips
+//! the pad run, so the bucket cannot change the computation — the wire
+//! transcript is byte-identical. (3) ≡ (1) is what aligned truncation buys:
+//! every non-truncation gate is exact in reconstruction, and the canonical
+//! per-(nonce, counter) truncation streams make the one inexact gate a
+//! deterministic function of the reconstructed value, so a block inside a
+//! fused run reconstructs exactly its solo values.
+
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    BatchPolicy, BlockRun, EngineConfig, EngineKind, InferenceRequest, PreparedModel,
+    Router, RouterConfig, Session,
+};
+use cipherprune::nn::{real_len, ModelConfig, ModelWeights, Workload, PAD_ID};
+
+fn tiny_weights() -> Arc<ModelWeights> {
+    Arc::new(ModelWeights::salient(&ModelConfig::tiny(), 42))
+}
+
+fn sample_ids(seed: u64) -> Vec<usize> {
+    let cfg = ModelConfig::tiny();
+    Workload::qnli_like(&cfg, 8).batch(1, seed)[0].ids.clone()
+}
+
+fn fresh_session(w: &Arc<ModelWeights>) -> Session {
+    let model = Arc::new(PreparedModel::prepare(w.clone()));
+    Session::start(model, EngineConfig::for_tests(EngineKind::CipherPrune))
+}
+
+/// (1) ≡ (2): real length vs padded bucket — identical logits, identical
+/// per-layer decisions, identical wire transcript.
+#[test]
+fn padded_solo_matches_real_length_bit_for_bit() {
+    let w = tiny_weights();
+    let ids = sample_ids(17);
+    let real = real_len(&ids);
+    let real_ids = ids[..real].to_vec();
+    let mut padded = real_ids.clone();
+    padded.resize(real + 9, PAD_ID); // an off-bucket pad run, why not
+
+    let mut s_real = fresh_session(&w);
+    let mut s_pad = fresh_session(&w);
+    let a = s_real
+        .infer_batch(&[BlockRun { nonce: 7, ids: real_ids }])
+        .pop()
+        .unwrap();
+    let b = s_pad.infer_batch(&[BlockRun { nonce: 7, ids: padded }]).pop().unwrap();
+
+    assert_eq!(a.logits, b.logits, "bucket padding changed the logits");
+    assert_eq!(a.layer_stats.len(), b.layer_stats.len());
+    for (x, y) in a.layer_stats.iter().zip(&b.layer_stats) {
+        assert_eq!(x.n_in, y.n_in);
+        assert_eq!(x.n_kept, y.n_kept);
+        assert_eq!(x.n_high, y.n_high);
+        assert_eq!(x.swaps, y.swaps);
+    }
+    assert_eq!(a.layer_stats[0].n_in, real, "pipeline saw the real length");
+    // strongest form: the two sessions exchanged identical bytes
+    assert_eq!(
+        s_real.transcript_digest(),
+        s_pad.transcript_digest(),
+        "stripping must make the padded run's transcript identical"
+    );
+}
+
+/// (3) ≡ (1): a fused batch of mixed-length requests reproduces each
+/// member's solo run exactly, for every engine kind that reaches the
+/// two-party pipeline's pruning/reduction machinery.
+#[test]
+fn fused_batch_matches_solo_runs_bit_for_bit() {
+    let w = tiny_weights();
+    let base = sample_ids(17);
+    let real = real_len(&base);
+    // three distinct requests at three lengths (prefixes are valid inputs)
+    let items = vec![
+        BlockRun { nonce: 101, ids: base[..real.min(5)].to_vec() },
+        BlockRun { nonce: 102, ids: base[..real].to_vec() },
+        BlockRun { nonce: 103, ids: sample_ids(23) },
+    ];
+
+    // solo: each request through its own batch of one (one shared fresh
+    // session — aligned truncation makes results position-independent)
+    let mut s_solo = fresh_session(&w);
+    let solo: Vec<_> = items
+        .iter()
+        .map(|it| s_solo.infer_batch(&[it.clone()]).pop().unwrap())
+        .collect();
+
+    // fused: all three in ONE pipeline run
+    let mut s_fused = fresh_session(&w);
+    let fused = s_fused.infer_batch(&items);
+    assert_eq!(fused.len(), 3);
+    assert_eq!(s_fused.runs(), 1, "a fused batch is one pipeline run");
+    assert_eq!(s_fused.requests(), 3);
+
+    for (i, (f, s)) in fused.iter().zip(&solo).enumerate() {
+        assert_eq!(f.batch_size, 3);
+        assert_eq!(
+            f.logits, s.logits,
+            "request {i}: fused logits must equal the solo run's"
+        );
+        assert_eq!(f.layer_stats.len(), s.layer_stats.len());
+        for (x, y) in f.layer_stats.iter().zip(&s.layer_stats) {
+            assert_eq!(x.n_in, y.n_in, "request {i} n_in");
+            assert_eq!(x.n_kept, y.n_kept, "request {i} n_kept");
+            assert_eq!(x.n_high, y.n_high, "request {i} n_high");
+        }
+    }
+}
+
+/// Serving the same request twice through one session gives identical
+/// logits: with aligned truncation there is no ±1-LSB drift across the
+/// session's randomness-stream positions.
+#[test]
+fn repeat_requests_are_deterministic_within_a_session() {
+    let w = tiny_weights();
+    let ids = sample_ids(17);
+    let mut s = fresh_session(&w);
+    let a = s.infer_batch(&[BlockRun { nonce: 9, ids: ids.clone() }]).pop().unwrap();
+    let b = s.infer_batch(&[BlockRun { nonce: 9, ids }]).pop().unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.total_stats().bytes, b.total_stats().bytes);
+}
+
+/// End-to-end through the router: a router that fuses a full bucket returns
+/// exactly what a request-at-a-time router returns, while executing one
+/// pipeline run instead of N.
+#[test]
+fn router_fused_equals_router_solo() {
+    let w = tiny_weights();
+    let cfg = ModelConfig::tiny();
+    let wl = Workload::qnli_like(&cfg, 8);
+    let mk_reqs = || -> Vec<InferenceRequest> {
+        wl.batch(3, 99)
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| InferenceRequest {
+                id: i as u64,
+                ids: s.ids,
+                engine: EngineKind::CipherPrune,
+            })
+            .collect()
+    };
+    let mk_router = |max_batch: usize| -> Router {
+        Router::new(
+            w.clone(),
+            RouterConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    linger: std::time::Duration::from_secs(100),
+                    min_bucket: 8,
+                    max_tokens: 64,
+                },
+                workers: 1, // one slot per kind → same session seed both ways
+                he_n: 128,
+                schedule: None,
+                threads: None,
+            },
+        )
+    };
+
+    // solo router: max_batch 1 releases each request as its own run
+    let mut solo = mk_router(1);
+    let solo_resp = solo.process(mk_reqs());
+    assert_eq!(solo_resp.len(), 3);
+    assert_eq!(solo.metrics.get("cipherprune").unwrap().runs, 3);
+
+    // fused router: all three queued, then one full-bucket fused run
+    let mut fused = mk_router(3);
+    for r in mk_reqs() {
+        fused.submit(r).unwrap();
+    }
+    let fused_resp = fused.step();
+    assert_eq!(fused_resp.len(), 3);
+    let m = fused.metrics.get("cipherprune").unwrap();
+    assert_eq!(m.runs, 1, "full bucket fused into one pipeline run");
+    assert_eq!(m.requests, 3);
+
+    for (s, f) in solo_resp.iter().zip(&fused_resp) {
+        assert_eq!(s.id, f.id);
+        assert_eq!(
+            s.result.logits, f.result.logits,
+            "request {}: fused serving changed the logits",
+            s.id
+        );
+        for (x, y) in s.result.layer_stats.iter().zip(&f.result.layer_stats) {
+            assert_eq!(x.n_kept, y.n_kept);
+            assert_eq!(x.n_high, y.n_high);
+        }
+        assert_eq!(f.result.batch_size, 3);
+    }
+}
+
+/// The plaintext oracle session follows the same masked semantics: padded
+/// and real-length runs agree.
+#[test]
+fn plaintext_session_is_mask_aware() {
+    let w = tiny_weights();
+    let ids = sample_ids(17);
+    let real = real_len(&ids);
+    let model = Arc::new(PreparedModel::prepare(w.clone()));
+    let mut s = Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext));
+    let a = s.infer(&ids);
+    let b = s.infer(&ids[..real]);
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.layer_stats[0].n_in, real);
+}

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::coordinator::{BlockRun, EngineConfig, EngineKind, PreparedModel, Session};
 use cipherprune::fixed::{F64Mat, Fix, RingMat};
 use cipherprune::gates::TripleMode;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
@@ -130,6 +130,43 @@ fn session_infer_invariant_across_pool_sizes() {
                 assert_eq!(b.2, cur.2, "request bytes differ at {threads} threads");
                 assert_eq!(b.3, cur.3, "request msgs differ at {threads} threads");
                 assert_eq!(b.4, cur.4, "wire content differs at {threads} threads");
+            }
+        }
+    }
+}
+
+/// A fused batch (three mixed-length requests in ONE pipeline run — block
+/// masks, aligned truncation, per-block bookkeeping) at each pool size:
+/// identical per-request logits, identical transcript bytes/messages, and
+/// identical wire-content digests.
+#[test]
+fn fused_batch_invariant_across_pool_sizes() {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let items: Vec<BlockRun> = Workload::qnli_like(&cfg, 8)
+        .batch(3, 31)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| BlockRun { nonce: 50 + i as u64, ids: s.ids })
+        .collect();
+
+    let mut baseline: Option<(Vec<Vec<f64>>, u64, u64, [u64; 2])> = None;
+    for &threads in &pool_sizes() {
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(threads);
+        let model = Arc::new(PreparedModel::prepare(w.clone()));
+        let mut session = Session::start(model, ec);
+        let rs = session.infer_batch(&items);
+        assert_eq!(rs.len(), items.len());
+        let logits: Vec<Vec<f64>> = rs.iter().map(|r| r.logits.clone()).collect();
+        let req = rs[0].total_stats(); // batch-level, shared by all members
+        let cur = (logits, req.bytes, req.msgs, session.transcript_digest());
+        match &baseline {
+            None => baseline = Some(cur),
+            Some(b) => {
+                assert_eq!(b.0, cur.0, "fused logits differ at {threads} threads");
+                assert_eq!(b.1, cur.1, "batch bytes differ at {threads} threads");
+                assert_eq!(b.2, cur.2, "batch msgs differ at {threads} threads");
+                assert_eq!(b.3, cur.3, "wire content differs at {threads} threads");
             }
         }
     }

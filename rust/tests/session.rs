@@ -4,9 +4,10 @@
 //! The contract under test: `Session::infer` is online-only (weight encoding
 //! and key/base-OT setup happen before it), a session's first request is
 //! bit-identical to the one-shot `run_inference` shim (same seed → same
-//! randomness), and later requests through the same session agree up to the
-//! ±1-LSB probabilistic-truncation noise while making identical public
-//! pruning decisions.
+//! randomness), and later requests through the same session are *exactly*
+//! reproducible — aligned truncation (PR 3) removed the ±1-LSB
+//! probabilistic-truncation drift that used to accumulate across a
+//! session's randomness streams.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -25,9 +26,10 @@ fn tiny_setup() -> (Arc<ModelWeights>, Vec<usize>) {
 }
 
 /// ≥3 requests through one session per engine kind: request 1 must equal the
-/// one-shot path exactly; requests 2–3 reuse keys/base OTs and may differ
-/// only by truncation noise. Per-request wall time excludes weight encoding
-/// and session setup by construction (both happen before `infer`).
+/// one-shot path exactly, and — with aligned truncation — requests 2–3 must
+/// reproduce it *exactly* too, despite reusing keys/base OTs at advanced
+/// stream positions. Per-request wall time excludes weight encoding and
+/// session setup by construction (both happen before `infer`).
 #[test]
 fn session_reuse_matches_one_shot_for_every_kind() {
     let (w, ids) = tiny_setup();
@@ -46,15 +48,10 @@ fn session_reuse_matches_one_shot_for_every_kind() {
         assert!(r1.total_stats().bytes < one_shot.total_stats().bytes);
         for req in 2..=3 {
             let r = session.infer(&ids);
-            for (a, b) in r.logits.iter().zip(&one_shot.logits) {
-                assert!(
-                    (a - b).abs() < 0.2,
-                    "{kind:?} request {req}: {:?} vs one-shot {:?}",
-                    r.logits,
-                    one_shot.logits
-                );
-            }
-            // public pruning decisions must not drift across requests
+            assert_eq!(
+                r.logits, one_shot.logits,
+                "{kind:?} request {req}: aligned truncation makes repeats exact"
+            );
             for (ls, os) in r.layer_stats.iter().zip(&one_shot.layer_stats) {
                 assert_eq!(ls.n_in, os.n_in, "{kind:?} request {req} n_in");
                 assert_eq!(ls.n_kept, os.n_kept, "{kind:?} request {req} n_kept");
@@ -84,7 +81,8 @@ fn session_request_traffic_is_per_request() {
     assert!(r2.layer_stats[0].gelu_bytes > 0);
 }
 
-/// The plaintext oracle also runs behind the session API.
+/// The plaintext oracle also runs behind the session API, with the same
+/// masked padding semantics as the private engines.
 #[test]
 fn plaintext_session_serves_requests() {
     let (w, ids) = tiny_setup();
@@ -92,7 +90,8 @@ fn plaintext_session_serves_requests() {
     let mut session =
         Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext));
     let r = session.infer(&ids);
-    let want = cipherprune::nn::forward(&w, &ids, &cipherprune::nn::ForwardOptions::plain());
+    let want =
+        cipherprune::nn::forward_masked(&w, &ids, &cipherprune::nn::ForwardOptions::plain());
     assert_eq!(r.logits, want.logits);
     assert_eq!(session.setup_wall_s(), 0.0);
 }

@@ -13,11 +13,19 @@
 //! `THREADS=1`); outputs and transcripts are identical at any setting — see
 //! "Performance model" in the coordinator docs.
 //!
+//! TRANSPORT: set `TRANSPORT=tcp` (real loopback sockets), `sim`/`sim-wan`
+//! (NetModel delay injection), or `mem` (default) to pick the channel
+//! backend — logits, decisions, and wire digests are identical on all of
+//! them; only wall time changes. For two separate OS processes, see the
+//! `cipherprune party` subcommand.
+//!
 //!     cargo run --release --example quickstart
+//!     TRANSPORT=tcp cargo run --release --example quickstart
 
 use std::sync::Arc;
 
 use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::{forward_masked, ForwardOptions, ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration};
@@ -40,18 +48,24 @@ fn main() {
     // 3. offline, once per engine kind: start a reusable two-party session.
     //    Server P0 holds the prepared weights, client P1 holds the tokens;
     //    both parties run in-process over a byte-counted channel.
+    let transport = std::env::var("TRANSPORT")
+        .ok()
+        .map(|name| TransportSpec::by_name(&name).expect("TRANSPORT=mem|tcp|sim|sim-wan"))
+        .unwrap_or(TransportSpec::Mem);
     let ec = EngineConfig::new(EngineKind::CipherPrune)
         .he_n(4096)
-        .schedule(schedule.clone());
-    let mut session = Session::start(model, ec);
+        .schedule(schedule.clone())
+        .transport(transport.clone());
+    let mut session = Session::start(model, ec).expect("session start");
     println!(
-        "session setup {} ({} one-time traffic)",
+        "session setup {} over {} ({} one-time traffic)",
         fmt_duration(session.setup_wall_s()),
+        transport.label(),
         fmt_bytes(session.setup_stats().bytes as f64),
     );
 
     // 4. online: serve requests through the live session
-    let private = session.infer(&sample.ids);
+    let private = session.infer(&sample.ids).expect("inference");
     println!(
         "\n[private]   logits {:?}  pred {}  ({}, {} traffic)",
         private.logits,
@@ -64,7 +78,7 @@ fn main() {
     }
     // further requests reuse the session — no keygen, no base OTs
     for (i, s) in Workload::qnli_like(&cfg, 16).batch(2, 9).iter().enumerate() {
-        let r = session.infer(&s.ids);
+        let r = session.infer(&s.ids).expect("inference");
         println!(
             "[request {}] pred {}  online {} ({} traffic)",
             i + 2,

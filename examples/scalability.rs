@@ -40,7 +40,7 @@ fn main() {
             // distinct seed per kind: independent sessions must not share
             // dealer/OT randomness streams
             let ec = EngineConfig::new(kind).he_n(2048).seed(0xC1F4E9 ^ kind.ordinal());
-            Session::start(model.clone(), ec)
+            Session::start(model.clone(), ec).expect("session start")
         })
         .collect();
 
@@ -51,7 +51,7 @@ fn main() {
     for &seq in &seqs {
         let sample = &Workload::qnli_like(&cfg, seq).batch(1, 5)[0];
         for session in sessions.iter_mut() {
-            let r = session.infer(&sample.ids);
+            let r = session.infer(&sample.ids).expect("inference");
             let t = r.total_stats();
             table.row(vec![
                 seq.to_string(),

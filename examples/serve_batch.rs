@@ -31,6 +31,7 @@ use std::sync::Arc;
 use cipherprune::coordinator::{
     BatchPolicy, EngineKind, InferenceRequest, Router, RouterConfig,
 };
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::{ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::runtime::artifact;
 use cipherprune::util::bench::fmt_duration;
@@ -63,6 +64,7 @@ fn main() {
             he_n: 4096,
             schedule: Some(schedule),
             threads: None,
+            transport: TransportSpec::Mem,
         },
     );
 
@@ -91,14 +93,15 @@ fn main() {
 
     let mut correct = 0usize;
     for r in &resp {
-        let ok = r.result.predicted() == truth[r.id as usize];
+        let res = r.result.as_ref().expect("healthy in-process serving");
+        let ok = res.predicted() == truth[r.id as usize];
         correct += ok as usize;
         println!(
             "  req {:>2}  bucket {:>3}  latency {:>9}  pred {} {}",
             r.id,
             r.bucket,
             fmt_duration(r.latency_s),
-            r.result.predicted(),
+            res.predicted(),
             if ok { "✓" } else { "✗" }
         );
     }

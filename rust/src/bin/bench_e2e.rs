@@ -1,31 +1,41 @@
 //! bench_e2e — end-to-end performance trajectory for the serving stack:
 //! times prepare / session-setup / infer per engine kind and token length
-//! (single-thread vs host-sized worker pool), plus the PR-3 **fused-batch
-//! sweep**: B same-bucket requests fused into ONE block-masked pipeline run
-//! at B ∈ {1, 2, 4, 8}, recording per-request amortized wall time. Writes
-//! `BENCH_pr3.json` so successive PRs can track online-phase wall time.
+//! (single-thread vs host-sized worker pool), the PR-3 **fused-batch
+//! sweep** (B same-bucket requests fused into ONE block-masked pipeline run,
+//! per-request amortized wall), and the PR-4 **flight-coalescing A/B**:
+//! the same request with write coalescing on vs off, recording per-phase
+//! flight counts (coalescing must strictly reduce flights on the
+//! multi-round phases while leaving bytes/msgs/digests untouched). Writes
+//! `BENCH_pr4.json` so successive PRs can track online-phase wall time.
 //!
 //! Headline records:
 //! - single-thread vs multi-thread `Session::infer` on the longest
-//!   configured sequence (the PR-2 worker-pool record), and
-//! - B = 1 vs B = 4 fused amortization on the CipherPrune engine (the PR-3
-//!   cross-request amortization record: one weight-ciphertext pass serves
-//!   the whole batch).
+//!   configured sequence (the PR-2 worker-pool record),
+//! - B = 1 vs B = 4 fused amortization on the CipherPrune engine (PR-3),
+//! - coalesced vs uncoalesced total flights + the phase with the largest
+//!   reduction (PR-4 transport-layer record).
 //!
 //! Usage:
-//!   cargo run --release --bin bench_e2e              # full sweep (minutes)
-//!   cargo run --release --bin bench_e2e -- --smoke   # CI-sized (~a minute)
+//!   cargo run --release --bin bench_e2e                        # full sweep
+//!   cargo run --release --bin bench_e2e -- --smoke             # CI-sized
+//!   cargo run --release --bin bench_e2e -- --transport tcp     # loopback TCP
 //!   cargo run --release --bin bench_e2e -- --out path/to.json
+//!
+//! `--transport mem|tcp|sim|sim-wan` selects the channel backend for every
+//! session in the sweep (`sim*` injects NetModel delays — expect wall times
+//! to include them). Results are backend-independent by construction.
 //!
 //! PERF: results depend on host core count; `host_threads` is recorded in
 //! the report. The full sweep uses the width-reduced bert-medium proxy
 //! (dim 128, 8 layers — same token-dependent protocol structure as the
 //! paper's testbed, see benches/bench_common.rs for the scale policy).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use cipherprune::coordinator::{BlockRun, EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
 use cipherprune::util::bench::fmt_duration;
 use cipherprune::util::{Json, WorkerPool};
@@ -35,6 +45,7 @@ struct RunRecord {
     seq: usize,
     he_n: usize,
     threads: usize,
+    transport: String,
     setup_s: f64,
     infer_s: f64,
     online_bytes: u64,
@@ -47,6 +58,7 @@ impl RunRecord {
             ("seq", self.seq.into()),
             ("he_n", self.he_n.into()),
             ("threads", self.threads.into()),
+            ("transport", self.transport.as_str().into()),
             ("setup_s", self.setup_s.into()),
             ("infer_s", self.infer_s.into()),
             ("online_bytes", self.online_bytes.into()),
@@ -84,17 +96,21 @@ fn measure(
     he_n: usize,
     threads: usize,
     iters: usize,
+    transport: &TransportSpec,
 ) -> RunRecord {
     let ids = Workload::qnli_like(cfg, seq).batch(1, 7)[0].ids.clone();
-    let ec = EngineConfig::new(kind).he_n(he_n).threads(threads);
-    let mut session = Session::start(model.clone(), ec);
+    let ec = EngineConfig::new(kind)
+        .he_n(he_n)
+        .threads(threads)
+        .transport(transport.clone());
+    let mut session = Session::start(model.clone(), ec).expect("session setup");
     let setup_s = session.setup_wall_s();
     // min over iters: the steady-state online cost (first request may still
     // be warming allocator/caches)
     let mut infer_s = f64::INFINITY;
     let mut online_bytes = 0;
     for _ in 0..iters.max(1) {
-        let r = session.infer(&ids);
+        let r = session.infer(&ids).expect("infer");
         infer_s = infer_s.min(r.wall_s);
         online_bytes = r.total_stats().bytes;
     }
@@ -106,7 +122,81 @@ fn measure(
         fmt_duration(setup_s),
         fmt_duration(infer_s),
     );
-    RunRecord { engine: kind.name(), seq, he_n, threads, setup_s, infer_s, online_bytes }
+    RunRecord {
+        engine: kind.name(),
+        seq,
+        he_n,
+        threads,
+        transport: transport.label(),
+        setup_s,
+        infer_s,
+        online_bytes,
+    }
+}
+
+/// One request with coalescing on vs off: identical bytes/msgs/digests, and
+/// the per-phase flight counts show where turnaround coalescing collapses
+/// consecutive same-direction messages into single flights.
+struct CoalescingRecord {
+    engine: &'static str,
+    seq: usize,
+    transport: String,
+    coalesced_flights: u64,
+    uncoalesced_flights: u64,
+    /// (phase, coalesced, uncoalesced) for every phase where they differ.
+    phases: Vec<(String, u64, u64)>,
+}
+
+fn measure_coalescing(
+    kind: EngineKind,
+    cfg: &ModelConfig,
+    model: &Arc<PreparedModel>,
+    seq: usize,
+    he_n: usize,
+    transport: &TransportSpec,
+) -> CoalescingRecord {
+    let ids = Workload::qnli_like(cfg, seq).batch(1, 7)[0].ids.clone();
+    let run = |coalesce: bool| {
+        let ec = EngineConfig::new(kind)
+            .he_n(he_n)
+            .transport(transport.clone())
+            .coalesce(coalesce);
+        let mut s = Session::start(model.clone(), ec).expect("session setup");
+        let r = s.infer(&ids).expect("infer");
+        let phases: BTreeMap<String, u64> =
+            r.phases.iter().map(|(k, v)| (k.clone(), v.flights)).collect();
+        (r.total_stats(), phases, s.transcript_digest())
+    };
+    let (ct, cp, cd) = run(true);
+    let (ut, up, ud) = run(false);
+    assert_eq!(ct.bytes, ut.bytes, "coalescing must not change bytes");
+    assert_eq!(ct.msgs, ut.msgs, "coalescing must not change message counts");
+    assert_eq!(cd, ud, "coalescing must not change wire content");
+    let mut phases: Vec<(String, u64, u64)> = Vec::new();
+    for (name, u) in &up {
+        let c = cp.get(name).copied().unwrap_or(0);
+        if c != *u {
+            phases.push((name.clone(), c, *u));
+        }
+    }
+    // largest reduction first
+    phases.sort_by_key(|(_, c, u)| std::cmp::Reverse(u.saturating_sub(*c)));
+    println!(
+        "  {:<24} seq {:>4}  flights {:>6} coalesced vs {:>6} uncoalesced ({} phases reduced)",
+        kind.name(),
+        seq,
+        ct.flights,
+        ut.flights,
+        phases.len(),
+    );
+    CoalescingRecord {
+        engine: kind.name(),
+        seq,
+        transport: transport.label(),
+        coalesced_flights: ct.flights,
+        uncoalesced_flights: ut.flights,
+        phases,
+    }
 }
 
 /// Fused-batch sweep: B requests of one bucket through ONE session, each
@@ -118,11 +208,12 @@ fn measure_fused(
     seq: usize,
     he_n: usize,
     batches: &[usize],
+    transport: &TransportSpec,
 ) -> Vec<FusedRecord> {
     let max_b = batches.iter().copied().max().unwrap_or(1);
     let samples = Workload::qnli_like(cfg, seq).batch(max_b, 7);
-    let ec = EngineConfig::new(kind).he_n(he_n);
-    let mut session = Session::start(model.clone(), ec);
+    let ec = EngineConfig::new(kind).he_n(he_n).transport(transport.clone());
+    let mut session = Session::start(model.clone(), ec).expect("session setup");
     batches
         .iter()
         .map(|&bsz| {
@@ -131,7 +222,7 @@ fn measure_fused(
                 .enumerate()
                 .map(|(i, s)| BlockRun { nonce: 1000 + i as u64, ids: s.ids.clone() })
                 .collect();
-            let rs = session.infer_batch(&items);
+            let rs = session.infer_batch(&items).expect("fused infer");
             let r = &rs[0];
             let rec = FusedRecord {
                 engine: kind.name(),
@@ -162,7 +253,18 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_pr3.json".to_string());
+        .unwrap_or_else(|| "BENCH_pr4.json".to_string());
+    let transport = args
+        .iter()
+        .position(|a| a == "--transport")
+        .and_then(|i| args.get(i + 1))
+        .map(|name| {
+            TransportSpec::by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown transport '{name}' — use mem|tcp|sim|sim-wan");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(TransportSpec::Mem);
     let host = WorkerPool::auto().threads();
 
     // smoke: tiny model, test-sized ring — exercises every stage in seconds.
@@ -188,12 +290,13 @@ fn main() {
     };
     let weights = Arc::new(ModelWeights::salient(&cfg, 42));
     println!(
-        "bench_e2e: model {} ({} layers, dim {})  host_threads {}  mode {}",
+        "bench_e2e: model {} ({} layers, dim {})  host_threads {}  mode {}  transport {}",
         cfg.name,
         cfg.n_layers,
         cfg.dim,
         host,
         if smoke { "smoke" } else { "full" },
+        transport.label(),
     );
 
     // prepare once: it is per-model offline work shared by every session
@@ -208,7 +311,7 @@ fn main() {
     for &kind in &kinds {
         for &seq in &seqs {
             for &t in &thread_cfgs {
-                runs.push(measure(kind, &cfg, &model, seq, he_n, t, iters));
+                runs.push(measure(kind, &cfg, &model, seq, he_n, t, iters, &transport));
             }
         }
     }
@@ -217,8 +320,20 @@ fn main() {
     // keeps the sweep affordable; amortization is about batch size, not n)
     let fused_seq = *seqs.iter().min().unwrap();
     println!("\nfused-batch sweep (B requests → one pipeline run):");
-    let fused =
-        measure_fused(EngineKind::CipherPrune, &cfg, &model, fused_seq, he_n, &fused_batches);
+    let fused = measure_fused(
+        EngineKind::CipherPrune,
+        &cfg,
+        &model,
+        fused_seq,
+        he_n,
+        &fused_batches,
+        &transport,
+    );
+
+    // flight-coalescing A/B (the PR-4 transport-layer record)
+    println!("\ncoalescing A/B (same request, write coalescing on vs off):");
+    let coalescing =
+        measure_coalescing(EngineKind::CipherPrune, &cfg, &model, fused_seq, he_n, &transport);
 
     // headline 1: single-thread vs host pool on the longest CipherPrune config
     let top_seq = *seqs.iter().max().unwrap();
@@ -251,14 +366,56 @@ fn main() {
         fmt_duration(f4.map(|r| r.amortized_s).unwrap_or(0.0)),
     );
 
+    // headline 3: coalesced vs uncoalesced flights + the biggest phase win
+    let flight_reduction = if coalescing.coalesced_flights > 0 {
+        coalescing.uncoalesced_flights as f64 / coalescing.coalesced_flights as f64
+    } else {
+        1.0
+    };
+    println!(
+        "flight coalescing on {fused_seq}-token cipherprune: {} → {} flights ({flight_reduction:.2}x fewer one-way trips)",
+        coalescing.uncoalesced_flights, coalescing.coalesced_flights,
+    );
+    if let Some((phase, c, u)) = coalescing.phases.first() {
+        println!("  biggest phase reduction: {phase}  {u} → {c} flights");
+    }
+
     let report = Json::obj(vec![
-        ("bench", "bench_e2e_pr3".into()),
+        ("bench", "bench_e2e_pr4".into()),
         ("smoke", smoke.into()),
         ("model", cfg.name.as_str().into()),
         ("host_threads", host.into()),
+        ("transport", coalescing.transport.as_str().into()),
         ("prepare_s", prepare_s.into()),
         ("runs", Json::Arr(runs.iter().map(RunRecord::to_json).collect())),
         ("fused", Json::Arr(fused.iter().map(FusedRecord::to_json).collect())),
+        (
+            "coalescing",
+            Json::obj(vec![
+                ("engine", coalescing.engine.into()),
+                ("seq", coalescing.seq.into()),
+                ("transport", coalescing.transport.as_str().into()),
+                ("coalesced_flights", coalescing.coalesced_flights.into()),
+                ("uncoalesced_flights", coalescing.uncoalesced_flights.into()),
+                ("flight_reduction", flight_reduction.into()),
+                (
+                    "phases",
+                    Json::Arr(
+                        coalescing
+                            .phases
+                            .iter()
+                            .map(|(phase, c, u)| {
+                                Json::obj(vec![
+                                    ("phase", phase.as_str().into()),
+                                    ("coalesced", (*c).into()),
+                                    ("uncoalesced", (*u).into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
         (
             "speedup",
             Json::obj(vec![

@@ -29,8 +29,9 @@ use std::time::Instant;
 
 use crate::fixed::{Fix, RingMat};
 use crate::gates::TripleMode;
+use crate::net::{Chan, TransportSpec};
 use crate::nn::{ModelConfig, ModelWeights, ThresholdSchedule};
-use crate::party::run2_owned_sym;
+use crate::party::run2_owned_sym_over;
 use crate::protocols::Engine2P;
 use crate::util::WorkerPool;
 
@@ -64,6 +65,16 @@ pub struct EngineConfig {
     /// bit-identical at any setting — see the coordinator's
     /// [Performance model](super#performance-model).
     pub threads: Option<usize>,
+    /// Channel backend for the two-party link: in-memory (default),
+    /// simulated-delay, or real loopback TCP. Same seed ⇒ identical logits,
+    /// decisions, and wire-content digests on every backend; only measured
+    /// wall time (and, for `Sim`, injected latency) differs.
+    pub transport: TransportSpec,
+    /// Coalesce consecutive same-direction messages into one wire
+    /// frame/flight (default `true` — the flush-on-turnaround discipline).
+    /// `false` sends one frame per message: the uncoalesced baseline that
+    /// `bench_e2e` compares flight counts against.
+    pub coalesce: bool,
 }
 
 impl EngineConfig {
@@ -76,6 +87,8 @@ impl EngineConfig {
             seed: 0xC1F4E9,
             iron_segments: 128,
             threads: None,
+            transport: TransportSpec::Mem,
+            coalesce: true,
         }
     }
 
@@ -112,6 +125,18 @@ impl EngineConfig {
     /// Pin the per-party worker-pool size (1 = fully sequential engine).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads);
+        self
+    }
+
+    /// Select the channel transport backend (mem / sim / loopback TCP).
+    pub fn transport(mut self, transport: TransportSpec) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Enable/disable wire-frame coalescing (on by default).
+    pub fn coalesce(mut self, coalesce: bool) -> Self {
+        self.coalesce = coalesce;
         self
     }
 
@@ -232,6 +257,10 @@ impl PreparedModel {
 /// instead so the encode/setup amortizes. `wall_s` covers setup + online (weight encoding
 /// excluded, as before), and `phases` includes the setup traffic.
 ///
+/// Runs over [`EngineConfig::transport`] like a session would; as a *shim*
+/// it panics on transport failure (the session/router paths surface those
+/// as `anyhow::Error` instead).
+///
 /// Like the session path, trailing padding is stripped before the pipeline
 /// (lengths are public), so a bucket-padded request reproduces its
 /// real-length run exactly.
@@ -254,8 +283,12 @@ pub fn run_inference(
     let fix = Fix::default();
     let ring_w = RingWeights::encode_with(weights, fix, cfg.resolved_pool());
     let schedule = cfg.resolved_schedule(weights.config.n_layers);
+    let (mut ca, mut cb, chan_t) = Chan::pair_over(&cfg.transport)
+        .unwrap_or_else(|e| panic!("building {} transport: {e}", cfg.transport.label()));
+    ca.set_coalesce(cfg.coalesce);
+    cb.set_coalesce(cfg.coalesce);
     let t0 = Instant::now();
-    let (p0, _p1, transcript) = run2_owned_sym(cfg.seed, |ctx| {
+    let (p0, _p1, transcript) = run2_owned_sym_over(cfg.seed, (ca, cb, chan_t), |ctx| {
         let mut e =
             Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, fix, cfg.resolved_pool());
         let spec = PipelineSpec::for_kind(cfg.kind, cfg);

@@ -94,6 +94,9 @@ pub struct MetricsRegistry {
     /// Two-party session setups (HE keygen + base OTs). Bounded by
     /// engine kinds × worker slots, not by request count.
     pub session_setups: u64,
+    /// Requests that failed (transport/session errors) instead of returning
+    /// a result. Healthy serving keeps this at zero.
+    pub failures: u64,
 }
 
 impl MetricsRegistry {
@@ -113,6 +116,9 @@ impl MetricsRegistry {
                 "offline: model preps={} session setups={}\n",
                 self.model_preps, self.session_setups,
             ));
+        }
+        if self.failures > 0 {
+            out.push_str(&format!("failed requests: {}\n", self.failures));
         }
         for (name, m) in &self.engines {
             out.push_str(&format!(

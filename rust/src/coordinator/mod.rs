@@ -17,10 +17,10 @@
 //!    pipeline; its `RunResult` carries this request's traffic and wall time.
 //!
 //! ```text
-//! let model = Arc::new(PreparedModel::prepare(weights));      // offline, once
-//! let mut s = Session::start(model, EngineConfig::new(kind)); // offline, once
-//! let r1 = s.infer(&ids_a);                                   // online
-//! let r2 = s.infer(&ids_b);                                   // online
+//! let model = Arc::new(PreparedModel::prepare(weights));        // offline, once
+//! let mut s = Session::start(model, EngineConfig::new(kind))?;  // offline, once
+//! let r1 = s.infer(&ids_a)?;                                    // online
+//! let r2 = s.infer(&ids_b)?;                                    // online
 //! ```
 //!
 //! # Performance model
@@ -105,11 +105,33 @@
 //! selected per engine kind — see
 //! [`PipelineSpec::for_kind`](pipeline::PipelineSpec::for_kind).
 //! `rust/src/main.rs` exposes the stack as the `run`/`serve` subcommands.
+//!
+//! # Deployment topologies
+//!
+//! The communication substrate is a pluggable transport under one framed,
+//! coalescing channel (see [`crate::net`]), so the same protocol code runs:
+//!
+//! 1. **In-process** (default): [`Session`] owns both party threads over
+//!    `MemTransport`; network time is modeled analytically.
+//! 2. **In-process over real/simulated links**:
+//!    [`EngineConfig::transport`](engine::EngineConfig) selects loopback TCP
+//!    or `SimTransport` NetModel-delay injection — same seed, identical
+//!    logits/decisions/wire digests on every backend.
+//! 3. **Two processes** (`cipherprune party --role p0 --listen …` /
+//!    `--role p1 --connect …`): each process drives one endpoint through
+//!    [`remote::run_party`] against one [`PreparedModel`], with a config
+//!    handshake pinning model/seed/stream equality before the first round.
+//!
+//! A transport failure anywhere fails the *request* (typed
+//! `net::NetError` → `anyhow::Error` through [`Session::infer`] and the
+//! router, which poisons and later replaces the affected session) — never
+//! the serving process.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
+pub mod remote;
 pub mod router;
 pub mod session;
 pub mod types;
@@ -118,6 +140,7 @@ pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;
 pub use pipeline::{BlockRun, PipelineSpec};
+pub use remote::{run_party, PartySummary};
 pub use router::{Router, RouterConfig};
 pub use session::Session;
-pub use types::{EngineKind, InferenceRequest, LayerStat, RunResult};
+pub use types::{predicted_class, EngineKind, InferenceRequest, LayerStat, RunResult};

@@ -117,6 +117,44 @@ pub fn block_nonce(nonce: u64, ids: &[usize]) -> u64 {
     u64::from_le_bytes(d[..8].try_into().expect("8 bytes"))
 }
 
+/// Reject duplicate normalized (nonce, content) pairs in one run — they
+/// would collide on canonical truncation pads (and trip the `align_begin`
+/// assert inside a party thread). The single check shared by
+/// `Session::infer_batch` and `remote::run_party`; call it on
+/// [`normalize_blocks`] output, in the caller's thread.
+pub fn ensure_unique_nonces(blocks: &[BlockRun]) -> Result<(), String> {
+    let mut nonces: Vec<u64> = blocks.iter().map(|b| b.nonce).collect();
+    nonces.sort_unstable();
+    if nonces.windows(2).any(|w| w[0] == w[1]) {
+        return Err(
+            "two batch members share a (nonce, content) pair — give identical \
+             requests distinct nonces"
+                .to_string(),
+        );
+    }
+    Ok(())
+}
+
+/// Session-boundary normalization shared by `Session::infer_batch` and the
+/// two-process driver (`coordinator::remote`): strip the public trailing
+/// pad run, degrade an empty request to one PAD token (the pipeline needs
+/// ≥ 1 row per block), and mix the request content into the caller nonce
+/// via [`block_nonce`]. Callers must still reject duplicate normalized
+/// nonces before dispatch ([`ensure_unique_nonces`]).
+pub fn normalize_blocks(items: &[BlockRun]) -> Vec<BlockRun> {
+    items
+        .iter()
+        .map(|it| {
+            let mut ids = crate::nn::workload::strip_padding(&it.ids).to_vec();
+            if ids.is_empty() {
+                ids.push(crate::nn::workload::PAD_ID);
+            }
+            let nonce = block_nonce(it.nonce, &ids);
+            BlockRun { nonce, ids }
+        })
+        .collect()
+}
+
 /// What one party returns for one block of a pipeline batch.
 pub struct BlockOut {
     pub nonce: u64,
@@ -746,6 +784,12 @@ pub fn run_pipeline_batch(
     }
     let logits = spec.classify.run(e, rc, &mut st);
     e.mpc.align_end();
+    // Turn any trailing buffered sends into their final flight NOW: the
+    // party may go idle (session job loop, process exit) while the peer
+    // still needs them, and the per-batch transcript delta is read right
+    // after both parties report — flushing here keeps both correct on
+    // every transport backend.
+    e.mpc.ctx.ch.flush();
     let outs: Vec<BlockOut> = logits
         .into_iter()
         .zip(layer_stats)

@@ -1,0 +1,281 @@
+//! Two-process deployment: drive ONE party of the two-party pipeline in
+//! this process against a peer process over a caller-supplied channel
+//! (normally TCP — the `cipherprune party` subcommand wires the sockets,
+//! one `--listen`, one `--connect`).
+//!
+//! An in-process [`Session`](super::session::Session) owns *both* party
+//! threads; here each OS process owns exactly one endpoint and both run the
+//! same deterministic request stream against the same
+//! [`PreparedModel`](super::engine::PreparedModel) (this harness shares
+//! token ids with both parties — see `pipeline::RunCtx` — so a shared
+//! workload seed is the stand-in for a request feed). Before any protocol
+//! round, the two processes exchange a **config handshake** fingerprinting
+//! the model shape, session seed, engine kind, ring degree, and the request
+//! stream itself: any divergence aborts with a readable error instead of
+//! desyncing the MPC protocol into garbage or a hang.
+//!
+//! Transport failures (peer crashed, socket severed) surface as `Err` from
+//! [`run_party`], never as a process-killing panic.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use anyhow::Context;
+use sha2::{Digest, Sha256};
+
+use crate::net::{panic_to_error, Chan, PhaseStats};
+use crate::party::{PartyCtx, PartyId};
+use crate::protocols::Engine2P;
+
+use super::engine::{EngineConfig, PreparedModel};
+use super::pipeline::{
+    ensure_unique_nonces, normalize_blocks, run_pipeline_batch, BatchPartyOut, BlockRun,
+    PipelineSpec, RunCtx,
+};
+
+/// Handshake magic/version word. Bump when the handshake layout changes.
+const HS_MAGIC: u64 = 0x4350_5052_2e68_7331; // "CPPR.hs1"
+
+/// Handshake field layout (all u64). `role` is checked for *inequality* —
+/// the two processes must be opposite parties; everything else for equality.
+const HS_FIELDS: [&str; 8] = [
+    "magic/version",
+    "model config",
+    "session seed",
+    "engine kind",
+    "he_n",
+    "protocol parameters (schedule/triples/segments)",
+    "request stream",
+    "role",
+];
+
+/// What one party's process run produced. The peer process holds the
+/// mirror-image summary; `digest` is this endpoint's wire-content digest
+/// (slot `role.index()` of an in-process transcript at the same seed).
+pub struct PartySummary {
+    pub role: PartyId,
+    /// Per-batch pipeline outputs, in stream order (logits are meaningful
+    /// on P0; P1 holds the complementary view).
+    pub batches: Vec<BatchPartyOut>,
+    /// Traffic recorded at this endpoint (its own sends only — the peer
+    /// process accounts for the opposite direction).
+    pub stats: PhaseStats,
+    /// This endpoint's running wire-content digest.
+    pub digest: u64,
+}
+
+fn config_hash(model: &PreparedModel) -> u64 {
+    let mc = &model.weights.config;
+    let mut h = Sha256::new();
+    h.update(mc.name.as_bytes());
+    for v in [mc.n_layers, mc.dim, mc.heads, mc.ffn_dim, mc.vocab, mc.max_seq] {
+        h.update((v as u64).to_le_bytes());
+    }
+    u64::from_le_bytes(h.finalize()[..8].try_into().expect("8 bytes"))
+}
+
+fn stream_hash(batches: &[Vec<BlockRun>]) -> u64 {
+    let mut h = Sha256::new();
+    for b in batches {
+        h.update((b.len() as u64).to_le_bytes());
+        for r in b {
+            h.update(r.nonce.to_le_bytes());
+            h.update((r.ids.len() as u64).to_le_bytes());
+            for &id in &r.ids {
+                h.update((id as u64).to_le_bytes());
+            }
+        }
+    }
+    u64::from_le_bytes(h.finalize()[..8].try_into().expect("8 bytes"))
+}
+
+/// Everything else protocol-shaping: the resolved θ/β schedule (artifact
+/// files can differ between machines!), the triple mode, LUT segments.
+fn params_hash(model: &PreparedModel, cfg: &EngineConfig) -> u64 {
+    let mut h = Sha256::new();
+    let sched = cfg.resolved_schedule(model.weights.config.n_layers);
+    for v in sched.theta.iter().chain(&sched.beta) {
+        h.update(v.to_bits().to_le_bytes());
+    }
+    h.update(((cfg.triple_mode == crate::gates::TripleMode::Dealer) as u64).to_le_bytes());
+    h.update((cfg.iron_segments as u64).to_le_bytes());
+    u64::from_le_bytes(h.finalize()[..8].try_into().expect("8 bytes"))
+}
+
+fn fingerprint(
+    role: PartyId,
+    model: &PreparedModel,
+    cfg: &EngineConfig,
+    batches: &[Vec<BlockRun>],
+) -> Vec<u64> {
+    vec![
+        HS_MAGIC,
+        config_hash(model),
+        cfg.seed,
+        cfg.kind.ordinal(),
+        cfg.he_n as u64,
+        params_hash(model, cfg),
+        stream_hash(batches),
+        role.index() as u64,
+    ]
+}
+
+fn check_fingerprint(mine: &[u64], theirs: &[u64]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        theirs.len() == mine.len(),
+        "handshake: peer sent {} fields, expected {} — mismatched binary versions?",
+        theirs.len(),
+        mine.len()
+    );
+    for (i, name) in HS_FIELDS.iter().enumerate() {
+        let (m, t) = (mine[i], theirs[i]);
+        if *name == "role" {
+            anyhow::ensure!(
+                m != t,
+                "handshake: both processes claim party P{m} — start one with \
+                 --role p0 (listen) and one with --role p1 (connect)"
+            );
+        } else {
+            anyhow::ensure!(
+                m == t,
+                "handshake mismatch on {name}: ours {m:#018x}, peer {t:#018x} — \
+                 start both parties with identical --model/--engine/--seed/--he-n/\
+                 --requests/--seq"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run this process's party end-to-end: config handshake, one-time setup
+/// (HE keygen + base OTs + setup ping), then every batch of the request
+/// stream through the fused pipeline. The channel's endpoint index must be
+/// `role.index()`.
+pub fn run_party(
+    role: PartyId,
+    chan: Chan,
+    model: &PreparedModel,
+    cfg: &EngineConfig,
+    batches: &[Vec<BlockRun>],
+) -> anyhow::Result<PartySummary> {
+    let normalized: Vec<Vec<BlockRun>> =
+        batches.iter().map(|b| normalize_blocks(b)).collect();
+    for (bi, b) in normalized.iter().enumerate() {
+        ensure_unique_nonces(b).map_err(|m| anyhow::anyhow!("request batch {bi}: {m}"))?;
+    }
+    // fingerprint the NORMALIZED stream so cosmetic padding differences
+    // between the two processes' workload construction cannot desync them
+    let fp = fingerprint(role, model, cfg, &normalized);
+    let result = catch_unwind(AssertUnwindSafe(move || -> anyhow::Result<PartySummary> {
+        let mut chan = chan;
+        chan.set_coalesce(cfg.coalesce);
+        chan.set_phase("handshake");
+        let theirs = chan.exchange_u64s(&fp);
+        check_fingerprint(&fp, &theirs)?;
+        chan.set_phase("setup");
+        let ctx = PartyCtx::new(role, chan, cfg.seed);
+        let mut e =
+            Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, model.fix, cfg.resolved_pool());
+        let spec = PipelineSpec::for_kind(cfg.kind, cfg);
+        let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
+        let mut outs = Vec::with_capacity(normalized.len());
+        for blocks in &normalized {
+            let rc = RunCtx {
+                cfg,
+                mcfg: &model.weights.config,
+                ring_w: &model.ring,
+                schedule: &schedule,
+            };
+            // run_pipeline_batch flushes its trailing frame, so between
+            // batches (and at exit) the peer never waits on buffered data
+            outs.push(run_pipeline_batch(&mut e, &rc, &spec, blocks));
+        }
+        let stats = e.mpc.ctx.ch.total_stats();
+        let digest = e.mpc.ctx.ch.content_digest();
+        Ok(PartySummary { role, batches: outs, stats, digest })
+    }));
+    match result {
+        Ok(r) => r,
+        Err(p) => Err(panic_to_error(p)).context("party run failed"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::types::EngineKind;
+    use crate::net::Chan;
+    use crate::nn::{ModelConfig, ModelWeights, Workload};
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<PreparedModel>, Vec<Vec<BlockRun>>) {
+        let cfg = ModelConfig::tiny();
+        let w = Arc::new(ModelWeights::salient(&cfg, 42));
+        let model = Arc::new(PreparedModel::prepare(w));
+        let batches: Vec<Vec<BlockRun>> = Workload::qnli_like(&cfg, 8)
+            .batch(2, 7)
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| vec![BlockRun { nonce: 1 + i as u64, ids: s.ids }])
+            .collect();
+        (model, batches)
+    }
+
+    /// Two `run_party` endpoints over one in-process channel pair — the
+    /// same code path the `cipherprune party` subcommand drives over TCP —
+    /// agree with a `Session` at the same seed.
+    #[test]
+    fn paired_run_party_matches_session() {
+        let (model, batches) = setup();
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let (ca, cb, _t) = Chan::pair();
+        let (m0, e0) = (model.clone(), ec.clone());
+        let b0 = batches.clone();
+        let h = std::thread::spawn(move || run_party(PartyId::P0, ca, &m0, &e0, &b0));
+        let s1 = run_party(PartyId::P1, cb, &model, &ec, &batches).expect("P1");
+        let s0 = h.join().expect("P0 thread").expect("P0");
+        assert_eq!(s0.batches.len(), 2);
+        assert_eq!(s1.batches.len(), 2);
+
+        let mut session =
+            crate::coordinator::Session::start(model.clone(), ec).expect("session");
+        for (bi, batch) in batches.iter().enumerate() {
+            let rs = session.infer_batch(batch).expect("infer");
+            assert_eq!(
+                rs[0].logits, s0.batches[bi].blocks[0].logits,
+                "two-process party run must reproduce the in-process session"
+            );
+        }
+    }
+
+    /// Mismatched configs abort in the handshake with a readable error —
+    /// before any MPC round can desync.
+    #[test]
+    fn handshake_rejects_mismatched_seed() {
+        let (model, batches) = setup();
+        let ec0 = EngineConfig::for_tests(EngineKind::CipherPrune).seed(1);
+        let ec1 = EngineConfig::for_tests(EngineKind::CipherPrune).seed(2);
+        let (ca, cb, _t) = Chan::pair();
+        let (m0, b0) = (model.clone(), batches.clone());
+        let h = std::thread::spawn(move || run_party(PartyId::P0, ca, &m0, &ec0, &b0));
+        let r1 = run_party(PartyId::P1, cb, &model, &ec1, &batches);
+        let r0 = h.join().expect("P0 thread");
+        assert!(r0.is_err() && r1.is_err());
+        let msg = format!("{:#}", r1.unwrap_err());
+        assert!(msg.contains("session seed"), "actionable mismatch report: {msg}");
+    }
+
+    /// Two processes that both claim P0 are caught by the role field.
+    #[test]
+    fn handshake_rejects_duplicate_role() {
+        let (model, batches) = setup();
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let (ca, cb, _t) = Chan::pair();
+        let (m0, e0, b0) = (model.clone(), ec.clone(), batches.clone());
+        let h = std::thread::spawn(move || run_party(PartyId::P0, ca, &m0, &e0, &b0));
+        let r1 = run_party(PartyId::P0, cb, &model, &ec, &batches);
+        let r0 = h.join().expect("P0 thread");
+        assert!(r0.is_err() && r1.is_err());
+        let msg = format!("{:#}", r1.unwrap_err());
+        assert!(msg.contains("both processes claim party"), "{msg}");
+    }
+}

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::net::TransportSpec;
 use crate::nn::{ModelWeights, ThresholdSchedule};
 use crate::util::WorkerPool;
 
@@ -47,6 +48,10 @@ pub struct RouterConfig {
     /// (`host / (2 × workers)`, min 1) so concurrent sessions don't
     /// oversubscribe each other; set explicitly to override.
     pub threads: Option<usize>,
+    /// Channel backend for every session this router starts (mem / sim /
+    /// loopback TCP). Results are backend-independent; see
+    /// [`EngineConfig::transport`](super::engine::EngineConfig).
+    pub transport: TransportSpec,
 }
 
 impl Default for RouterConfig {
@@ -57,6 +62,7 @@ impl Default for RouterConfig {
             he_n: crate::he::params::N,
             schedule: None,
             threads: None,
+            transport: TransportSpec::Mem,
         }
     }
 }
@@ -65,7 +71,10 @@ impl Default for RouterConfig {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub result: RunResult,
+    /// The inference result, or the failure that consumed this request
+    /// (session setup impossible, peer disconnected mid-batch, …). A failed
+    /// request never panics the router or wedges its queue.
+    pub result: Result<RunResult, String>,
     /// Scheduling bucket the request was released from. The pipeline runs at
     /// the real length, so the bucket no longer affects the result — it only
     /// records which queue the batcher grouped this request into.
@@ -85,6 +94,12 @@ pub struct Router {
     submitted: Vec<(u64, Instant)>,
     /// engine kind → up to `workers` live sessions, reused across batches.
     sessions: HashMap<EngineKind, Vec<Session>>,
+    /// engine kind → sessions EVER started for it. Seeds derive from this
+    /// monotonic counter, not the live pool size, so a replacement started
+    /// after a poisoned session was evicted can never repeat the seed of a
+    /// still-live session (concurrent sessions must not share dealer/OT
+    /// randomness streams).
+    setups_by_kind: HashMap<EngineKind, u64>,
 }
 
 impl Router {
@@ -100,6 +115,7 @@ impl Router {
             metrics,
             submitted: Vec::new(),
             sessions: HashMap::new(),
+            setups_by_kind: HashMap::new(),
         }
     }
 
@@ -125,7 +141,7 @@ impl Router {
         let threads = self.cfg.threads.unwrap_or_else(|| {
             (WorkerPool::auto().threads() / (2 * self.cfg.workers.max(1))).max(1)
         });
-        ec.threads(threads)
+        ec.threads(threads).transport(self.cfg.transport.clone())
     }
 
     /// Submit a request (queued until a batch releases).
@@ -178,78 +194,122 @@ impl Router {
             let slots = (base + bonus).max(1).min(groups[&kind].len());
             alloc.insert(kind, slots);
         }
+        // evict sessions poisoned by an earlier batch's failure first, so
+        // the growth pass below replaces them with fresh setups
+        for pool in self.sessions.values_mut() {
+            pool.retain(|s| s.poisoned().is_none());
+        }
         // grow each kind's session pool to its allocation (setup runs once
-        // per slot, then the sessions persist across batches)
+        // per slot, then the sessions persist across batches); a setup
+        // failure (e.g. the transport cannot be built) stops growing that
+        // pool and, if the pool stays empty, fails the kind's requests
+        let mut setup_errors: HashMap<EngineKind, String> = HashMap::new();
         for (kind, &want) in &alloc {
             let ec0 = self.engine_config(*kind, 0);
             let pool = self.sessions.entry(*kind).or_default();
             while pool.len() < want {
-                // distinct per kind AND per slot: concurrent sessions must
-                // not share dealer/OT randomness streams
-                let seed = (0xBA7C_u64 ^ (kind.ordinal() << 16))
-                    .wrapping_mul(pool.len() as u64 + 1);
+                // distinct per kind AND per lifetime-setup: concurrent (and
+                // replacement) sessions must not share dealer/OT randomness
+                // streams, so the seed multiplier is the monotonic per-kind
+                // setup count, never the current pool size
+                let seq = self.setups_by_kind.entry(*kind).or_insert(0);
+                let seed = (0xBA7C_u64 ^ (kind.ordinal() << 16)).wrapping_mul(*seq + 1);
+                *seq += 1;
                 let ec = EngineConfig { seed, ..ec0.clone() };
-                pool.push(Session::start(self.model.clone(), ec));
-                self.metrics.session_setups += 1;
+                match Session::start(self.model.clone(), ec) {
+                    Ok(s) => {
+                        pool.push(s);
+                        self.metrics.session_setups += 1;
+                    }
+                    Err(e) => {
+                        setup_errors.insert(*kind, format!("session setup failed: {e:#}"));
+                        break;
+                    }
+                }
             }
         }
         // execute: each session slot FUSES its stride of its kind's jobs
         // into one block-masked pipeline run (cross-request amortization —
-        // one weight-ciphertext pass instead of one per request)
+        // one weight-ciphertext pass instead of one per request). A slot
+        // failure fails only its own stride's requests.
         let jobs_ref = &jobs;
-        let slot_results: Vec<(Vec<usize>, Vec<RunResult>)> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (kind, pool) in self.sessions.iter_mut() {
-                let Some(idxs) = groups.get(kind) else { continue };
-                let n_slots = alloc[kind].min(pool.len()).max(1);
-                for (slot, sess) in pool.iter_mut().take(n_slots).enumerate() {
-                    let mine: Vec<usize> =
-                        idxs.iter().copied().skip(slot).step_by(n_slots).collect();
-                    if mine.is_empty() {
-                        continue;
+        let slot_results: Vec<(Vec<usize>, Result<Vec<RunResult>, String>)> =
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for (kind, pool) in self.sessions.iter_mut() {
+                    let Some(idxs) = groups.get(kind) else { continue };
+                    if pool.is_empty() {
+                        continue; // setup failed: handled via setup_errors
                     }
-                    handles.push(s.spawn(move || {
-                        let items: Vec<BlockRun> = mine
-                            .iter()
-                            .map(|&i| BlockRun {
-                                // in-flight ids are unique (submit enforces
-                                // it) → valid alignment nonces
-                                nonce: jobs_ref[i].0,
-                                ids: jobs_ref[i].2.clone(),
-                            })
-                            .collect();
-                        let results = sess.infer_batch(&items);
-                        (mine, results)
-                    }));
+                    let n_slots = alloc[kind].min(pool.len()).max(1);
+                    for (slot, sess) in pool.iter_mut().take(n_slots).enumerate() {
+                        let mine: Vec<usize> =
+                            idxs.iter().copied().skip(slot).step_by(n_slots).collect();
+                        if mine.is_empty() {
+                            continue;
+                        }
+                        handles.push(s.spawn(move || {
+                            let items: Vec<BlockRun> = mine
+                                .iter()
+                                .map(|&i| BlockRun {
+                                    // in-flight ids are unique (submit
+                                    // enforces it) → valid alignment nonces
+                                    nonce: jobs_ref[i].0,
+                                    ids: jobs_ref[i].2.clone(),
+                                })
+                                .collect();
+                            let results =
+                                sess.infer_batch(&items).map_err(|e| format!("{e:#}"));
+                            (mine, results)
+                        }));
+                    }
                 }
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("engine session panicked"))
-                .collect()
-        });
-        let mut results: Vec<Option<RunResult>> = jobs.iter().map(|_| None).collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("engine session panicked"))
+                    .collect()
+            });
+        let mut results: Vec<Option<Result<RunResult, String>>> =
+            jobs.iter().map(|_| None).collect();
         for (mine, rs) in slot_results {
-            // one fused run per slot → one metrics record (`runs` counts
-            // batches; the record's batch_size carries the member count)
-            if let Some(first) = rs.first() {
-                self.metrics.record(jobs[mine[0]].1.name(), first);
-            }
-            for (i, r) in mine.into_iter().zip(rs) {
-                results[i] = Some(r);
+            match rs {
+                Ok(rs) => {
+                    // one fused run per slot → one metrics record (`runs`
+                    // counts batches; the record's batch_size carries the
+                    // member count)
+                    if let Some(first) = rs.first() {
+                        self.metrics.record(jobs[mine[0]].1.name(), first);
+                    }
+                    for (i, r) in mine.into_iter().zip(rs) {
+                        results[i] = Some(Ok(r));
+                    }
+                }
+                Err(e) => {
+                    for i in mine {
+                        results[i] = Some(Err(e.clone()));
+                    }
+                }
             }
         }
         let now = Instant::now();
         jobs.into_iter()
             .zip(results)
-            .map(|((id, _kind, _), result)| {
-                let result = result.expect("every job executed");
+            .map(|((id, kind, _), result)| {
+                let result = result.unwrap_or_else(|| {
+                    Err(setup_errors
+                        .get(&kind)
+                        .cloned()
+                        .unwrap_or_else(|| "no live session for this engine kind".to_string()))
+                });
+                if result.is_err() {
+                    self.metrics.failures += 1;
+                }
                 let latency_s = self
                     .submitted
                     .iter()
                     .find(|(i, _)| *i == id)
                     .map(|(_, t)| now.duration_since(*t).as_secs_f64())
-                    .unwrap_or(result.wall_s);
+                    .unwrap_or(0.0);
                 self.submitted.retain(|(i, _)| *i != id);
                 Response { id, result, bucket, latency_s }
             })
@@ -310,6 +370,7 @@ mod tests {
                 he_n: 128,
                 schedule: None,
                 threads: None,
+                transport: TransportSpec::Mem,
             },
         )
     }
@@ -333,9 +394,10 @@ mod tests {
         assert_eq!(r.pending(), 0);
         for (i, rsp) in resp.iter().enumerate() {
             assert_eq!(rsp.id, i as u64);
-            assert_eq!(rsp.result.logits.len(), 2);
+            assert_eq!(rsp.result.as_ref().unwrap().logits.len(), 2);
             assert_eq!(rsp.bucket, 8);
         }
+        assert_eq!(r.metrics.failures, 0);
         let m = r.metrics.get("cipherprune").unwrap();
         assert_eq!(m.runs, 3);
         assert_eq!(m.requests, 3);
@@ -392,6 +454,7 @@ mod tests {
                 he_n: 128,
                 schedule: None,
                 threads: None,
+                transport: TransportSpec::Mem,
             },
         );
         for q in mk_reqs(3, EngineKind::CipherPrune) {
@@ -400,8 +463,9 @@ mod tests {
         let resp = r.step();
         assert_eq!(resp.len(), 3, "full bucket released and fused");
         for rsp in &resp {
-            assert_eq!(rsp.result.batch_size, 3);
-            assert_eq!(rsp.result.logits.len(), 2);
+            let res = rsp.result.as_ref().unwrap();
+            assert_eq!(res.batch_size, 3);
+            assert_eq!(res.logits.len(), 2);
         }
         let m = r.metrics.get("cipherprune").unwrap();
         assert_eq!(m.runs, 1, "one fused pipeline run");

@@ -21,21 +21,39 @@
 //! [`Session::setup_stats`]. For a fused batch the delta is *batch-level*:
 //! each member's `RunResult` carries the shared phases/wall plus its
 //! `batch_size`, so per-request amortized cost is `wall_s / batch_size`.
+//!
+//! # Transports and failure
+//!
+//! The party pair runs over any in-process transport backend
+//! ([`EngineConfig::transport`](super::engine::EngineConfig)): plain
+//! memory, simulated-delay memory ([`crate::net::SimTransport`]), or a
+//! real loopback TCP socket ([`Session::start_over`] additionally accepts a
+//! caller-built channel pair for custom/fault-injection transports). A
+//! transport failure mid-request — a disconnected peer, a severed socket —
+//! **fails the request, not the process**: the typed `NetError` unwinds to
+//! the party loop, is converted back into a value, and surfaces as an
+//! `anyhow::Error` from [`Session::infer`]/[`Session::infer_batch`]. The
+//! failing party tears down its channel endpoint (unblocking the peer) and
+//! the session is *poisoned*: later requests fail fast instead of touching
+//! half-dead protocol state.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::net::{Chan, PhaseStats, SharedTranscript};
-use crate::nn::workload::strip_padding;
+use anyhow::Context;
+
+use crate::net::{panic_to_error, Chan, PhaseStats, SharedTranscript};
 use crate::party::{PartyCtx, PartyId};
 use crate::protocols::Engine2P;
 
 use super::engine::{run_plaintext, EngineConfig, PreparedModel};
 use super::pipeline::{
-    run_pipeline_batch, BatchPartyOut, BlockRun, PipelineSpec, RunCtx,
+    ensure_unique_nonces, normalize_blocks, run_pipeline_batch, BatchPartyOut, BlockRun,
+    PipelineSpec, RunCtx,
 };
 use super::types::{EngineKind, LayerStat, RunResult};
 
@@ -45,20 +63,27 @@ fn spawn_party(
     cfg: EngineConfig,
     model: Arc<PreparedModel>,
     job_rx: Receiver<Vec<BlockRun>>,
-    out_tx: Sender<BatchPartyOut>,
-    ready_tx: Sender<()>,
+    out_tx: Sender<anyhow::Result<BatchPartyOut>>,
+    ready_tx: Sender<Result<(), String>>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
-        // One-time setup: HE keygen + base OTs (communicates with the peer).
-        let ctx = PartyCtx::new(id, ch, cfg.seed);
-        let mut e = Engine2P::with_pool(
-            ctx,
-            cfg.triple_mode,
-            cfg.he_n,
-            model.fix,
-            cfg.resolved_pool(),
-        );
-        let _ = ready_tx.send(());
+        // One-time setup: HE keygen, base OTs, setup ping. A transport
+        // failure here (e.g. a TCP peer that never answers) is reported
+        // through `ready_tx` instead of killing the process.
+        let setup = catch_unwind(AssertUnwindSafe(|| {
+            let ctx = PartyCtx::new(id, ch, cfg.seed);
+            Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, model.fix, cfg.resolved_pool())
+        }));
+        let mut e = match setup {
+            Ok(e) => {
+                let _ = ready_tx.send(Ok(()));
+                e
+            }
+            Err(p) => {
+                let _ = ready_tx.send(Err(format!("{:#}", panic_to_error(p))));
+                return;
+            }
+        };
         let spec = PipelineSpec::for_kind(cfg.kind, &cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
         while let Ok(blocks) = job_rx.recv() {
@@ -68,9 +93,23 @@ fn spawn_party(
                 ring_w: &model.ring,
                 schedule: &schedule,
             };
-            let out = run_pipeline_batch(&mut e, &rc, &spec, &blocks);
-            if out_tx.send(out).is_err() {
-                break;
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                run_pipeline_batch(&mut e, &rc, &spec, &blocks)
+            }));
+            match out {
+                Ok(o) => {
+                    if out_tx.send(Ok(o)).is_err() {
+                        break;
+                    }
+                }
+                Err(p) => {
+                    // Report, then exit: dropping the engine (and with it
+                    // this channel endpoint) unblocks a peer still waiting
+                    // on us, so BOTH parties converge to an error instead
+                    // of one hanging mid-protocol.
+                    let _ = out_tx.send(Err(panic_to_error(p)));
+                    break;
+                }
             }
         }
     })
@@ -79,13 +118,16 @@ fn spawn_party(
 struct TwoParty {
     transcript: SharedTranscript,
     job_tx: Vec<Sender<Vec<BlockRun>>>,
-    out_rx: Vec<Receiver<BatchPartyOut>>,
+    out_rx: Vec<Receiver<anyhow::Result<BatchPartyOut>>>,
     handles: Vec<JoinHandle<()>>,
     /// Cumulative transcript snapshot at the end of the previous batch
     /// (initially: the setup traffic).
     seen: BTreeMap<String, PhaseStats>,
     setup_phases: Vec<(String, PhaseStats)>,
     setup_wall_s: f64,
+    /// First transport/protocol failure, if any — the session fails fast
+    /// afterwards instead of dispatching onto dead party threads.
+    poisoned: Option<String>,
 }
 
 /// A prepared model bound to one engine kind's live two-party state.
@@ -99,14 +141,37 @@ pub struct Session {
 }
 
 impl Session {
-    /// Spawn both party threads and run the one-time setup (HE keygen +
-    /// base OTs). Everything after this call is online-phase work.
-    pub fn start(model: Arc<PreparedModel>, cfg: EngineConfig) -> Session {
+    /// Spawn both party threads over the configured transport
+    /// ([`EngineConfig::transport`]) and run the one-time setup (HE keygen +
+    /// base OTs + setup ping). Everything after this call is online-phase
+    /// work. Errors if the transport cannot be built (e.g. no loopback
+    /// socket) or either party fails setup.
+    pub fn start(model: Arc<PreparedModel>, cfg: EngineConfig) -> anyhow::Result<Session> {
         if cfg.kind == EngineKind::Plaintext {
-            return Session { cfg, model, inner: None, runs: 0, requests: 0 };
+            return Ok(Session { cfg, model, inner: None, runs: 0, requests: 0 });
         }
+        let chans = Chan::pair_over(&cfg.transport)
+            .with_context(|| format!("building {} transport", cfg.transport.label()))?;
+        Self::start_over(model, cfg, chans)
+    }
+
+    /// [`start`](Self::start) over a caller-built channel pair — custom or
+    /// fault-injection transports (`Chan::pair_from`). The two endpoints
+    /// must share the `SharedTranscript` of the tuple.
+    pub fn start_over(
+        model: Arc<PreparedModel>,
+        cfg: EngineConfig,
+        chans: (Chan, Chan, SharedTranscript),
+    ) -> anyhow::Result<Session> {
+        if cfg.kind == EngineKind::Plaintext {
+            // the oracle has no two-party protocol — same early-out as
+            // `start` (the caller's channel pair is simply dropped)
+            return Ok(Session { cfg, model, inner: None, runs: 0, requests: 0 });
+        }
+        let (mut ca, mut cb, transcript) = chans;
+        ca.set_coalesce(cfg.coalesce);
+        cb.set_coalesce(cfg.coalesce);
         let t0 = Instant::now();
-        let (ca, cb, transcript) = Chan::pair();
         let (jtx0, jrx0) = channel();
         let (jtx1, jrx1) = channel();
         let (otx0, orx0) = channel();
@@ -115,15 +180,25 @@ impl Session {
         let (rtx1, rrx1) = channel();
         let h0 = spawn_party(PartyId::P0, ca, cfg.clone(), model.clone(), jrx0, otx0, rtx0);
         let h1 = spawn_party(PartyId::P1, cb, cfg.clone(), model.clone(), jrx1, otx1, rtx1);
-        rrx0.recv().expect("P0 session setup failed");
-        rrx1.recv().expect("P1 session setup failed");
+        // Collect BOTH ready reports before judging: a failing party drops
+        // its channel endpoint, which errors the peer's setup too, so both
+        // receives terminate (with a value or a closed channel) — no hangs.
+        let r0 = rrx0.recv();
+        let r1 = rrx1.recv();
+        for (who, r) in [("P0", r0), ("P1", r1)] {
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => anyhow::bail!("{who} session setup failed: {msg}"),
+                Err(_) => anyhow::bail!("{who} session setup thread died"),
+            }
+        }
         let setup_wall_s = t0.elapsed().as_secs_f64();
         let seen: BTreeMap<String, PhaseStats> = {
             let t = transcript.lock().unwrap();
             t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
         };
         let setup_phases = seen.iter().map(|(k, v)| (k.clone(), *v)).collect();
-        Session {
+        Ok(Session {
             cfg,
             model,
             inner: Some(TwoParty {
@@ -134,10 +209,11 @@ impl Session {
                 seen,
                 setup_phases,
                 setup_wall_s,
+                poisoned: None,
             }),
             runs: 0,
             requests: 0,
-        }
+        })
     }
 
     pub fn kind(&self) -> EngineKind {
@@ -192,43 +268,30 @@ impl Session {
         t
     }
 
+    /// `Some(reason)` once a transport/protocol failure has poisoned this
+    /// session (later `infer*` calls fail fast).
+    pub fn poisoned(&self) -> Option<&str> {
+        self.inner.as_ref().and_then(|tp| tp.poisoned.as_deref())
+    }
+
     /// Serve a batch of requests fused into ONE pipeline run: online phase
     /// only (no weight encoding, no keygen, no base OTs). Bucket padding is
     /// stripped here; each item's nonce keys its aligned-truncation streams,
     /// so results are bit-identical to solo runs with the same nonces.
     /// Results come back in item order. The returned `RunResult`s share the
     /// batch's phases/wall and carry `batch_size` for amortized accounting.
-    pub fn infer_batch(&mut self, items: &[BlockRun]) -> Vec<RunResult> {
-        assert!(!items.is_empty(), "empty inference batch");
-        self.runs += 1;
-        self.requests += items.len() as u64;
-        let blocks: Vec<BlockRun> = items
-            .iter()
-            .map(|it| {
-                let mut ids = strip_padding(&it.ids).to_vec();
-                if ids.is_empty() {
-                    // an empty request degenerates to one pad token, like an
-                    // all-pad one — the pipeline needs ≥ 1 row per block
-                    ids.push(crate::nn::workload::PAD_ID);
-                }
-                // content-mixed alignment nonce: recycling a caller nonce
-                // with different content cannot reuse the canonical pads
-                let nonce = super::pipeline::block_nonce(it.nonce, &ids);
-                BlockRun { nonce, ids }
-            })
-            .collect();
-        // validate here, in the caller's thread — a duplicate (nonce,
-        // content) pair would trip the align_begin assert inside the party
-        // threads and wedge the session for every later request
-        {
-            let mut seen: Vec<u64> = blocks.iter().map(|b| b.nonce).collect();
-            seen.sort_unstable();
-            assert!(
-                !seen.windows(2).any(|w| w[0] == w[1]),
-                "infer_batch: two batch members share a (nonce, content) pair — \
-                 give identical requests distinct nonces"
-            );
-        }
+    ///
+    /// Errors — duplicate (nonce, content) pairs, a disconnected peer, a
+    /// poisoned session — fail the request; the process and the `Session`
+    /// value stay alive.
+    pub fn infer_batch(&mut self, items: &[BlockRun]) -> anyhow::Result<Vec<RunResult>> {
+        anyhow::ensure!(!items.is_empty(), "empty inference batch");
+        // strip padding, degrade empties, content-mix the alignment nonces;
+        // validate uniqueness here, in the caller's thread — a duplicate
+        // would trip the align_begin assert inside the party threads and
+        // poison the session for every later request
+        let blocks = normalize_blocks(items);
+        ensure_unique_nonces(&blocks).map_err(|m| anyhow::anyhow!("infer_batch: {m}"))?;
         let Some(tp) = self.inner.as_mut() else {
             // plaintext oracle: no crypto, but the same masked semantics
             let t0 = Instant::now();
@@ -241,13 +304,50 @@ impl Session {
                 r.wall_s = wall_s;
                 r.batch_size = blocks.len();
             }
-            return out;
+            self.runs += 1;
+            self.requests += blocks.len() as u64;
+            return Ok(out);
         };
+        if let Some(msg) = &tp.poisoned {
+            anyhow::bail!("session poisoned by an earlier failure: {msg}");
+        }
         let t0 = Instant::now();
-        tp.job_tx[0].send(blocks.clone()).expect("P0 session worker gone");
-        tp.job_tx[1].send(blocks).expect("P1 session worker gone");
-        let p0 = tp.out_rx[0].recv().expect("P0 session worker died");
-        let _p1 = tp.out_rx[1].recv().expect("P1 session worker died");
+        // dispatch to both parties, then collect BOTH results. A party that
+        // fails reports an error and exits, dropping its channel endpoint —
+        // which errors the peer out of any blocking receive — so both
+        // collections below terminate.
+        let sent = [
+            tp.job_tx[0].send(blocks.clone()).is_ok(),
+            tp.job_tx[1].send(blocks).is_ok(),
+        ];
+        let mut first_err: Option<String> = None;
+        let mut p0_out: Option<BatchPartyOut> = None;
+        for (i, &was_sent) in sent.iter().enumerate() {
+            if !was_sent {
+                first_err.get_or_insert(format!("P{i} session worker is gone"));
+                continue;
+            }
+            match tp.out_rx[i].recv() {
+                Ok(Ok(out)) => {
+                    if i == 0 {
+                        p0_out = Some(out);
+                    }
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(format!("P{i}: {e:#}"));
+                }
+                Err(_) => {
+                    first_err.get_or_insert(format!("P{i} session worker died mid-batch"));
+                }
+            }
+        }
+        if let Some(msg) = first_err {
+            tp.poisoned = Some(msg.clone());
+            anyhow::bail!("inference failed: {msg}");
+        }
+        let p0 = p0_out.expect("P0 result present when no party failed");
+        self.runs += 1;
+        self.requests += p0.blocks.len() as u64;
         let wall_s = t0.elapsed().as_secs_f64();
         // per-batch traffic = transcript delta since the previous batch
         let snap: BTreeMap<String, PhaseStats> = {
@@ -268,7 +368,8 @@ impl Session {
             .collect();
         tp.seen = snap;
         let batch_size = p0.blocks.len();
-        p0.blocks
+        Ok(p0
+            .blocks
             .into_iter()
             .map(|b| {
                 let mut layer_stats = b.layer_stats;
@@ -282,18 +383,21 @@ impl Session {
                     batch_size,
                 }
             })
-            .collect()
+            .collect())
     }
 
     /// Serve one request (the B = 1 batch with caller-nonce 0). Safe for
     /// mixed inputs: the effective alignment nonce mixes in the request
     /// content ([`block_nonce`](super::pipeline::block_nonce)), so repeated
     /// identical inputs replay deterministically while different inputs
-    /// never share canonical pads.
-    pub fn infer(&mut self, ids: &[usize]) -> RunResult {
-        self.infer_batch(&[BlockRun { nonce: 0, ids: ids.to_vec() }])
+    /// never share canonical pads. Errors like
+    /// [`infer_batch`](Self::infer_batch): a dead transport fails the
+    /// request, not the process.
+    pub fn infer(&mut self, ids: &[usize]) -> anyhow::Result<RunResult> {
+        Ok(self
+            .infer_batch(&[BlockRun { nonce: 0, ids: ids.to_vec() }])?
             .pop()
-            .expect("one result per request")
+            .expect("one result per request"))
     }
 }
 

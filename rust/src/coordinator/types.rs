@@ -136,6 +136,18 @@ pub struct RunResult {
     pub batch_size: usize,
 }
 
+/// Argmax over a logit vector (ties and the empty vector resolve to 0).
+/// The single shared definition behind [`RunResult::predicted`] and the
+/// `cipherprune party` output.
+pub fn predicted_class(logits: &[f64]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 impl RunResult {
     /// Per-request amortized wall time: the batch wall split across its
     /// members.
@@ -144,12 +156,7 @@ impl RunResult {
     }
 
     pub fn predicted(&self) -> usize {
-        self.logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        predicted_class(&self.logits)
     }
 
     /// Total traffic over all phases.

@@ -5,30 +5,41 @@
 //!              decisions, per-protocol traffic, and modeled LAN/WAN time.
 //! - `serve`  — serving demo: router + length-bucketed dynamic batcher over
 //!              a synthetic workload; prints the metrics report.
+//! - `party`  — run ONE party as its own OS process over real TCP
+//!              (`--role p0 --listen addr` / `--role p1 --connect addr`);
+//!              both processes load the same model and run the same
+//!              deterministic request stream, pinned by a config handshake.
 //! - `oracle` — execute the AOT XLA artifact (plaintext path) on an input.
 //! - `info`   — model presets and artifact status.
 //!
 //! Examples:
 //!   cipherprune run --model tiny --engine cipherprune --seq 16
+//!   cipherprune run --model tiny --transport tcp      # loopback TCP pair
 //!   cipherprune run --model bert-base --scale 8 --engine bolt --seq 128
 //!   cipherprune serve --model tiny --requests 8 --engine cipherprune
+//!   cipherprune party --role p0 --listen 127.0.0.1:7441 --model tiny
+//!   cipherprune party --role p1 --connect 127.0.0.1:7441 --model tiny
 //!   cipherprune oracle
 //!
-//! PERF: `run` and `serve` take `--threads <n>` to pin the per-party worker
-//! pool for the HE/OT hot paths (default: host-sized, `THREADS` env
-//! overridable). Outputs and transcripts are identical at any setting; see
-//! the coordinator docs ("Performance model") and `bench_e2e` for the
-//! measured speedup.
+//! `run` and `serve` take `--transport mem|tcp|sim|sim-wan` (in-process
+//! backends; `tcp` = real loopback sockets) and `--uncoalesced` to disable
+//! write coalescing for flight-count A/B runs. PERF: `--threads <n>` pins
+//! the per-party worker pool for the HE/OT hot paths (default: host-sized,
+//! `THREADS` env overridable). Outputs and transcripts are identical at any
+//! setting; see the coordinator docs ("Performance model") and `bench_e2e`.
 
 use std::collections::HashMap;
+use std::io::Write as _;
 use std::sync::Arc;
+use std::time::Duration;
 
 use cipherprune::coordinator::{
-    run_inference, BatchPolicy, EngineConfig, EngineKind, InferenceRequest,
-    PreparedModel, Router, RouterConfig, Session,
+    predicted_class, run_inference, run_party, BatchPolicy, BlockRun, EngineConfig,
+    EngineKind, InferenceRequest, PreparedModel, Router, RouterConfig, Session,
 };
-use cipherprune::net::NetModel;
+use cipherprune::net::{new_transcript, Chan, NetModel, TcpTransport, TransportSpec};
 use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::party::PartyId;
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration, Table};
 
@@ -83,6 +94,14 @@ fn schedule_for(cfg: &ModelConfig) -> ThresholdSchedule {
         .unwrap_or_else(|| ThresholdSchedule::default_for(cfg.n_layers))
 }
 
+fn transport_for(kv: &HashMap<String, String>) -> TransportSpec {
+    let name = kv.get("transport").map(String::as_str).unwrap_or("mem");
+    TransportSpec::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown transport '{name}' — use mem|tcp|sim|sim-wan");
+        std::process::exit(2);
+    })
+}
+
 fn cmd_run(kv: HashMap<String, String>) {
     let (cfg, weights) = load_model(&kv);
     let engine = kv
@@ -109,24 +128,36 @@ fn cmd_run(kv: HashMap<String, String>) {
     // prepare → session → infer: the offline work (weight encoding, HE
     // keygen, base OTs) is visible separately from the online request.
     // The plaintext oracle has no offline phase — skip the encoding.
+    let transport = transport_for(&kv);
     let r = if engine == EngineKind::Plaintext {
         run_inference(&EngineConfig::new(engine), &weights, &sample.ids)
     } else {
         let t_prep = std::time::Instant::now();
         let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
         let prep_s = t_prep.elapsed().as_secs_f64();
-        let mut ec = EngineConfig::new(engine).he_n(he_n).schedule(schedule_for(&cfg));
+        let mut ec = EngineConfig::new(engine)
+            .he_n(he_n)
+            .schedule(schedule_for(&cfg))
+            .transport(transport.clone())
+            .coalesce(!kv.contains_key("uncoalesced"));
         if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
             ec = ec.threads(t);
         }
-        let mut session = Session::start(model, ec);
+        let mut session = Session::start(model, ec).unwrap_or_else(|e| {
+            eprintln!("session setup failed: {e:#}");
+            std::process::exit(1);
+        });
         println!(
-            "offline: weight encode {}  session setup {} ({} setup traffic)",
+            "offline [{} transport]: weight encode {}  session setup {} ({} setup traffic)",
+            transport.label(),
             fmt_duration(prep_s),
             fmt_duration(session.setup_wall_s()),
             fmt_bytes(session.setup_stats().bytes as f64),
         );
-        session.infer(&sample.ids)
+        session.infer(&sample.ids).unwrap_or_else(|e| {
+            eprintln!("inference failed: {e:#}");
+            std::process::exit(1);
+        })
     };
 
     println!("\nlogits: {:?}  (predicted class {})", r.logits, r.predicted());
@@ -212,6 +243,7 @@ fn cmd_serve(kv: HashMap<String, String>) {
             he_n,
             schedule: Some(schedule_for(&cfg)),
             threads: kv.get("threads").and_then(|v| v.parse().ok()),
+            transport: transport_for(&kv),
         },
     );
     // mixed-length workload: half short, half long
@@ -234,13 +266,16 @@ fn cmd_serve(kv: HashMap<String, String>) {
     let resp = router.process(reqs);
     let wall = t0.elapsed().as_secs_f64();
     for r in &resp {
-        println!(
-            "  req {:>3}  bucket {:>4}  latency {}  pred {}",
-            r.id,
-            r.bucket,
-            fmt_duration(r.latency_s),
-            r.result.predicted()
-        );
+        match &r.result {
+            Ok(res) => println!(
+                "  req {:>3}  bucket {:>4}  latency {}  pred {}",
+                r.id,
+                r.bucket,
+                fmt_duration(r.latency_s),
+                res.predicted()
+            ),
+            Err(e) => println!("  req {:>3}  bucket {:>4}  FAILED: {e}", r.id, r.bucket),
+        }
     }
     println!(
         "\nthroughput: {:.2} req/s over {}\n{}",
@@ -248,6 +283,128 @@ fn cmd_serve(kv: HashMap<String, String>) {
         fmt_duration(wall),
         router.metrics.report()
     );
+}
+
+/// Run ONE party of the two-party protocol as this OS process, over real
+/// TCP. Both processes must be started with identical model/engine/seed/
+/// workload flags (the handshake verifies this before any protocol round)
+/// and opposite roles: the listener is conventionally P0 (the server, which
+/// holds the weights), the connector P1.
+fn cmd_party(kv: HashMap<String, String>) {
+    let role = match kv.get("role").map(String::as_str) {
+        Some("p0") => PartyId::P0,
+        Some("p1") => PartyId::P1,
+        _ => {
+            eprintln!("party: --role p0|p1 is required");
+            std::process::exit(2);
+        }
+    };
+    let (cfg, weights) = load_model(&kv);
+    let engine = kv
+        .get("engine")
+        .and_then(|e| EngineKind::by_name(e))
+        .unwrap_or(EngineKind::CipherPrune);
+    if engine == EngineKind::Plaintext {
+        eprintln!("party: the plaintext oracle has no two-party protocol to split");
+        std::process::exit(2);
+    }
+    let seq = opt_usize(&kv, "seq", 16.min(cfg.max_seq));
+    let he_n = opt_usize(&kv, "he-n", cipherprune::he::params::N);
+    let seed = opt_usize(&kv, "seed", 7) as u64;
+    let requests = opt_usize(&kv, "requests", 1);
+
+    // Deterministic request stream, identical on both sides (the harness
+    // stand-in for a shared request feed; the handshake hashes it).
+    let wl = Workload::qnli_like(&cfg, seq);
+    let batches: Vec<Vec<BlockRun>> = wl
+        .batch(requests, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| vec![BlockRun { nonce: 1 + i as u64, ids: s.ids }])
+        .collect();
+
+    // Publish the listen address BEFORE the (slow) model preparation so the
+    // peer can start its connect-retry loop immediately.
+    enum Pending {
+        Accept(std::net::TcpListener),
+        Connect(String),
+    }
+    let pending = if let Some(addr) = kv.get("listen") {
+        let (listener, local) = TcpTransport::bind(addr).unwrap_or_else(|e| {
+            eprintln!("party: cannot listen on {addr}: {e}");
+            std::process::exit(1);
+        });
+        println!("listening on {local}");
+        std::io::stdout().flush().ok();
+        Pending::Accept(listener)
+    } else if let Some(addr) = kv.get("connect") {
+        Pending::Connect(addr.clone())
+    } else {
+        eprintln!("party: pass --listen ADDR (server side) or --connect ADDR (client side)");
+        std::process::exit(2);
+    };
+
+    let t_prep = std::time::Instant::now();
+    let model = PreparedModel::prepare(Arc::new(weights));
+    println!(
+        "prepared {} in {} ({:?}, {} requests of ≤{} tokens)",
+        cfg.name,
+        fmt_duration(t_prep.elapsed().as_secs_f64()),
+        role,
+        requests,
+        seq
+    );
+
+    let transport = match pending {
+        Pending::Accept(listener) => TcpTransport::accept(&listener).unwrap_or_else(|e| {
+            eprintln!("party: accept failed: {e}");
+            std::process::exit(1);
+        }),
+        Pending::Connect(addr) => {
+            let timeout = Duration::from_secs(opt_usize(&kv, "connect-timeout-s", 15) as u64);
+            TcpTransport::connect_retry(&addr, timeout).unwrap_or_else(|e| {
+                eprintln!("party: cannot connect to {addr}: {e}");
+                std::process::exit(1);
+            })
+        }
+    };
+    let chan = Chan::over(Box::new(transport), role.index(), new_transcript());
+
+    let mut ec = EngineConfig::new(engine)
+        .he_n(he_n)
+        .seed(seed)
+        .schedule(schedule_for(&cfg))
+        .coalesce(!kv.contains_key("uncoalesced"));
+    if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
+        ec = ec.threads(t);
+    }
+
+    match run_party(role, chan, &model, &ec, &batches) {
+        Ok(sum) => {
+            if role == PartyId::P0 {
+                for (bi, b) in sum.batches.iter().enumerate() {
+                    for blk in &b.blocks {
+                        let pred = predicted_class(&blk.logits);
+                        println!("req {bi}: logits {:?}  pred {pred}", blk.logits);
+                    }
+                }
+            }
+            println!(
+                "party {:?} done: {} requests, sent {} in {} msgs / {} flights, \
+                 endpoint digest {:016x}",
+                sum.role,
+                requests,
+                fmt_bytes(sum.stats.bytes as f64),
+                sum.stats.msgs,
+                sum.stats.flights,
+                sum.digest,
+            );
+        }
+        Err(e) => {
+            eprintln!("party failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_oracle(kv: HashMap<String, String>) {
@@ -321,10 +478,11 @@ fn main() {
     match pos.first().map(String::as_str) {
         Some("run") => cmd_run(kv),
         Some("serve") => cmd_serve(kv),
+        Some("party") => cmd_party(kv),
         Some("oracle") => cmd_oracle(kv),
         Some("info") | None => cmd_info(),
         Some(other) => {
-            eprintln!("unknown subcommand '{other}' — try run|serve|oracle|info");
+            eprintln!("unknown subcommand '{other}' — try run|serve|party|oracle|info");
             std::process::exit(2);
         }
     }

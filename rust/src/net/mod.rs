@@ -1,23 +1,193 @@
-//! Two-party communication substrate.
+//! Two-party communication substrate: a pluggable transport layer with a
+//! framed wire protocol, coalesced flights, and exact accounting.
 //!
-//! The paper runs server and client on two machines over LAN (3 Gbps / 0.8 ms ping)
-//! and WAN (200 Mbps / 40 ms ping). Here both parties run in one process connected
-//! by an in-memory duplex channel; **every byte and every message flight is
-//! counted**, so communication is exact and network time is added analytically via
-//! [`NetModel`] (time = flights × rtt/2 + bytes / bandwidth). This preserves the
-//! paper's reported quantities (comm in GB, runtime under a network model) while
-//! replacing the physical testbed.
+//! The paper runs server and client on two machines over LAN (3 Gbps /
+//! 0.8 ms ping) and WAN (200 Mbps / 40 ms ping). Here the same protocol code
+//! runs over any [`Transport`] backend:
+//!
+//! - **`MemTransport`** — both parties in one process (tests, benches, the
+//!   default serving substrate). Network time is *modeled* analytically via
+//!   [`NetModel`] (time = flights × rtt/2 + bytes / bandwidth).
+//! - **`TcpTransport`** — the parties as two OS processes over a real socket
+//!   (loopback or two machines; see the `cipherprune party` subcommand).
+//! - **`SimTransport`** — in-process, but each frame is delivered only after
+//!   its `NetModel` delay, so modeled and *measured* network time can be
+//!   compared on one axis.
+//!
+//! # Framing and flight coalescing
+//!
+//! [`Chan`] is the protocol-facing endpoint. Each logical message
+//! (`send_bytes`/`send_u64s`/…) is appended, length-prefixed (`u32 LE len ‖
+//! payload`), to a **write buffer** instead of hitting the wire immediately.
+//! The buffer is flushed into ONE transport frame:
+//!
+//! - **on turnaround** — right before this endpoint blocks in a receive
+//!   (the peer cannot answer until it has our data),
+//! - **at run boundaries** — the pipeline flushes after every batch, and
+//!   engine setup flushes before going live,
+//! - **on drop** — a protocol whose final action is a send relies on this.
+//!
+//! Consecutive same-direction messages therefore coalesce into one
+//! frame = one recorded **flight**, turning the old implicit
+//! `sent_since_recv` heuristic into the real wire behavior: over TCP the
+//! coalesced run is one write/packet burst, and over `SimTransport` it pays
+//! one half-RTT. A stream that outgrows the coalescing window
+//! (`COALESCE_WINDOW`, 64 MiB) is flushed early — bounded memory, frames safely
+//! under the TCP cap, and back-to-back frames pipeline anyway.
+//! `Chan::set_coalesce(false)` flushes after every message (one frame per
+//! message) — the uncoalesced baseline `bench_e2e` compares against.
+//!
+//! Framing costs one payload memcpy per direction (message → frame buffer,
+//! frame → message). That is deliberate: it is O(bytes) against the HE/OT
+//! compute that produces those bytes, and it buys an identical code path —
+//! and identical accounting — for every backend.
+//!
+//! # Accounting
+//!
+//! Bytes, message counts, and the per-endpoint content digests are folded
+//! per *logical message*, before framing — so they are identical on every
+//! backend and at every coalescing setting; only `flights` (frame count)
+//! responds to coalescing. Pending per-phase stats commit to the shared
+//! [`Transcript`] **once per flush or phase change** (not per message), and
+//! the digest mix itself stays outside the lock.
+//!
+//! # Errors
+//!
+//! Transport failures are typed ([`NetError`]) and must not kill a party
+//! thread. Protocol code keeps the plain non-`Result` send/recv API; a
+//! failure unwinds via `panic_any(NetError)` to the party boundary, where
+//! [`panic_to_error`] converts it into an `anyhow::Error` (the session party
+//! loop and `coordinator::remote` both catch it, fail the *request*, and
+//! keep the process alive). Fallible `try_*` variants exist for callers that
+//! want errors as values.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{Receiver, Sender};
+pub mod tcp;
+pub mod transport;
+
+pub use tcp::TcpTransport;
+pub use transport::{CutTransport, MemTransport, SimTransport, Transport};
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::sync::{Arc, Mutex};
+
+/// Largest single logical message. Bounded below the `u32` inner length
+/// prefix AND below `TcpTransport`'s frame cap (2 GiB), so an over-long
+/// message fails identically on every backend instead of only on TCP.
+const MAX_MSG: usize = (1 << 31) - 64;
+
+/// Coalescing window: once the write buffer reaches this size it is flushed
+/// as a frame even without a turnaround. Bounds memory held per endpoint AND
+/// keeps every frame far below `TcpTransport`'s 2 GiB frame cap, so a
+/// GB-scale same-direction HE tile stream behaves identically on every
+/// backend (the check lives here in `Chan`, so the resulting flight counts
+/// are deterministic and backend-independent). Latency-wise, back-to-back
+/// frames pipeline — only the turnaround flight is latency-serial.
+const COALESCE_WINDOW: usize = 64 << 20;
+
+/// Typed failure of the communication substrate. Surfaced as
+/// `anyhow::Error` through `Session::infer*` and the router; a disconnected
+/// peer fails the in-flight request, never the process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetError {
+    /// The peer endpoint is gone (dropped, process exited, socket closed).
+    Disconnected,
+    /// Transport-level I/O failure (socket error, writer thread gone).
+    Io(String),
+    /// Malformed wire data (bad frame length, truncated message framing).
+    Frame(String),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Disconnected => write!(f, "peer disconnected"),
+            NetError::Io(e) => write!(f, "transport I/O error: {e}"),
+            NetError::Frame(e) => write!(f, "wire framing error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl NetError {
+    pub fn from_io(e: std::io::Error) -> NetError {
+        NetError::Io(e.to_string())
+    }
+}
+
+/// Abort the current protocol run with a typed transport error. The plain
+/// (non-`try_`) channel methods use this so protocol code stays free of
+/// `Result` plumbing; the unwind is caught at the party boundary and turned
+/// back into a value by [`panic_to_error`].
+fn raise(e: NetError) -> ! {
+    std::panic::panic_any(e)
+}
+
+/// Convert a caught unwind payload back into an error: a typed [`NetError`]
+/// if the run died on the transport, otherwise the panic message.
+pub fn panic_to_error(p: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+    match p.downcast::<NetError>() {
+        Ok(e) => anyhow::Error::new(*e),
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&'static str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            anyhow::anyhow!("party panicked: {msg}")
+        }
+    }
+}
+
+/// Which transport backend a session/engine should run its channel over.
+/// All variants are in-process pairs (two *threads*); for two *processes*
+/// build a `TcpTransport` directly and drive it through
+/// `coordinator::remote::run_party` (the `cipherprune party` subcommand).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransportSpec {
+    /// In-memory duplex (default; zero transport cost).
+    Mem,
+    /// In-memory with injected `NetModel` bandwidth/RTT delays.
+    Sim(NetModel),
+    /// Real TCP over an ephemeral loopback port.
+    TcpLoopback,
+}
+
+impl Default for TransportSpec {
+    fn default() -> Self {
+        TransportSpec::Mem
+    }
+}
+
+impl TransportSpec {
+    /// Parse a CLI name: `mem`, `tcp`, `sim`/`sim-lan`, `sim-wan`.
+    pub fn by_name(s: &str) -> Option<TransportSpec> {
+        match s {
+            "mem" => Some(TransportSpec::Mem),
+            "tcp" => Some(TransportSpec::TcpLoopback),
+            "sim" | "sim-lan" => Some(TransportSpec::Sim(NetModel::LAN)),
+            "sim-wan" => Some(TransportSpec::Sim(NetModel::WAN)),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TransportSpec::Mem => "mem".to_string(),
+            TransportSpec::Sim(m) => format!("sim:{}", m.name),
+            TransportSpec::TcpLoopback => "tcp".to_string(),
+        }
+    }
+}
 
 /// Accumulated traffic for one protocol phase.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PhaseStats {
     pub bytes: u64,
     pub msgs: u64,
-    /// Sequential message flights (latency-relevant one-way trips).
+    /// Latency-relevant one-way trips = coalesced wire frames sent.
     pub flights: u64,
 }
 
@@ -52,12 +222,14 @@ pub const DIGEST_INIT: u64 = 0xcbf2_9ce4_8422_2325;
 #[derive(Debug, Default)]
 pub struct Transcript {
     pub phases: BTreeMap<String, PhaseStats>,
+    /// Last phase label set by either endpoint (informational; each
+    /// endpoint attributes its own traffic to its own local phase).
     pub current: String,
     /// Per-endpoint running content digest of every byte sent (index =
-    /// endpoint id). Each endpoint's sends are protocol-sequential and each
-    /// updates only its own slot, so the pair is a deterministic function of
-    /// the protocol regardless of thread scheduling — the thread-count
-    /// invariance tests pin wire *content*, not just byte counts, on it.
+    /// endpoint id). Folded per *logical message* — before coalescing and
+    /// below any transport — so the pair is a deterministic function of the
+    /// protocol regardless of backend, thread scheduling, or coalescing.
+    /// The invariance tests pin wire *content*, not just sizes, on it.
     pub content: [u64; 2],
 }
 
@@ -81,8 +253,9 @@ pub fn new_transcript() -> SharedTranscript {
     }))
 }
 
-/// Network model used to convert a transcript into wall-clock network time.
-#[derive(Clone, Copy, Debug)]
+/// Network model used to convert a transcript into wall-clock network time,
+/// and to drive [`SimTransport`] delay injection.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetModel {
     pub name: &'static str,
     pub bandwidth_bps: f64,
@@ -99,24 +272,55 @@ impl NetModel {
     /// BumbleBee comparison setting (App. D): 1 Gbps, 0.5 ms ping.
     pub const BB_LAN: NetModel =
         NetModel { name: "BB-LAN", bandwidth_bps: 1e9, rtt_s: 0.5e-3 };
+    /// Zero-cost model: `SimTransport` with it adds no delay, so a sim run
+    /// can be compared bit-for-bit against `MemTransport` in fast tests.
+    pub const INSTANT: NetModel =
+        NetModel { name: "instant", bandwidth_bps: f64::INFINITY, rtt_s: 0.0 };
 
     /// Modeled network time for a traffic summary.
     pub fn time(&self, s: &PhaseStats) -> f64 {
         s.flights as f64 * (self.rtt_s / 2.0) + (s.bytes as f64 * 8.0) / self.bandwidth_bps
     }
+
+    /// Delivery delay of one wire frame of `bytes` length: half an RTT plus
+    /// serialization time. Matches [`time`](Self::time) with one flight, so
+    /// per-frame injection sums to the analytic model on serial protocols.
+    pub fn frame_delay_s(&self, bytes: usize) -> f64 {
+        self.rtt_s / 2.0 + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
 }
 
-/// One endpoint of a duplex in-memory channel with byte/flight accounting.
+/// Phase attribution + stats pending commit. Interior-mutable so the
+/// `&self` accessors (`set_phase`, snapshots) can commit without widening
+/// the protocol-facing API to `&mut`.
+struct PendingAcct {
+    phase: String,
+    bytes: u64,
+    msgs: u64,
+}
+
+/// One endpoint of a duplex channel with byte/flight accounting, message
+/// framing, and write coalescing, over a pluggable [`Transport`].
 pub struct Chan {
-    tx: Sender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    t: Box<dyn Transport>,
     transcript: SharedTranscript,
-    sent_since_recv: bool,
-    /// Index into `Transcript::content` (0 for the first endpoint of the
-    /// pair, 1 for the second).
+    /// Index into `Transcript::content` (0/1 for the two endpoints).
     endpoint: usize,
-    /// Running content digest of this endpoint's sends, folded lock-free and
-    /// mirrored into `Transcript::content[endpoint]` on each send.
+    /// Coalesce consecutive sends into one frame, flushed on turnaround
+    /// (default). `false` = one frame per message (uncoalesced baseline).
+    coalesce: bool,
+    /// Wire frame under construction: length-prefixed logical messages.
+    wbuf: Vec<u8>,
+    /// Messages parsed out of received frames, not yet consumed.
+    rq: VecDeque<Vec<u8>>,
+    /// Per-phase stats awaiting their one-lock-per-flush commit.
+    acct: RefCell<PendingAcct>,
+    /// First transport failure — sticky: once the link died, every later
+    /// operation reports the same error (a drained-but-unsent buffer must
+    /// not make a later flush look successful).
+    dead: Option<NetError>,
+    /// Running content digest of this endpoint's sends, folded lock-free per
+    /// message and mirrored into `Transcript::content[endpoint]` at commit.
     content: u64,
     /// Local (endpoint) totals, cheap to read without locking.
     pub sent_bytes: u64,
@@ -124,81 +328,253 @@ pub struct Chan {
 }
 
 impl Chan {
-    /// Create a connected pair sharing a transcript.
-    pub fn pair() -> (Chan, Chan, SharedTranscript) {
-        let t = new_transcript();
-        let (tx0, rx1) = std::sync::mpsc::channel();
-        let (tx1, rx0) = std::sync::mpsc::channel();
-        let a = Chan {
-            tx: tx0,
-            rx: rx0,
-            transcript: t.clone(),
-            sent_since_recv: false,
-            endpoint: 0,
+    /// Wrap one endpoint of a transport pair. `endpoint` indexes
+    /// `Transcript::content` (0 for the first endpoint, 1 for the second);
+    /// a connected pair must use distinct indices and share `transcript`.
+    pub fn over(t: Box<dyn Transport>, endpoint: usize, transcript: SharedTranscript) -> Chan {
+        assert!(endpoint < 2, "a duplex pair has endpoints 0 and 1");
+        Chan {
+            t,
+            transcript,
+            endpoint,
+            coalesce: true,
+            wbuf: Vec::new(),
+            rq: VecDeque::new(),
+            acct: RefCell::new(PendingAcct {
+                phase: "setup".to_string(),
+                bytes: 0,
+                msgs: 0,
+            }),
+            dead: None,
             content: DIGEST_INIT,
             sent_bytes: 0,
             sent_msgs: 0,
-        };
-        let b = Chan {
-            tx: tx1,
-            rx: rx1,
-            transcript: t.clone(),
-            sent_since_recv: false,
-            endpoint: 1,
-            content: DIGEST_INIT,
-            sent_bytes: 0,
-            sent_msgs: 0,
-        };
-        (a, b, t)
-    }
-
-    /// Set the phase label under which subsequent traffic is recorded.
-    /// Phases are protocol-synchronous; either party may set them.
-    pub fn set_phase(&self, phase: &str) {
-        let mut t = self.transcript.lock().unwrap();
-        if t.current != phase {
-            t.current = phase.to_string();
         }
     }
 
-    /// Shared accounting for every outgoing message: fold the content digest
-    /// outside the shared lock (only the finished u64 goes under it), then
-    /// record bytes/msgs and mirror the digest into the transcript.
+    /// Connected pair over two caller-built transports, sharing a fresh
+    /// transcript.
+    pub fn pair_from(
+        ta: Box<dyn Transport>,
+        tb: Box<dyn Transport>,
+    ) -> (Chan, Chan, SharedTranscript) {
+        let t = new_transcript();
+        (Chan::over(ta, 0, t.clone()), Chan::over(tb, 1, t.clone()), t)
+    }
+
+    /// In-memory connected pair (the historical default).
+    pub fn pair() -> (Chan, Chan, SharedTranscript) {
+        let (ta, tb) = MemTransport::pair();
+        Self::pair_from(Box::new(ta), Box::new(tb))
+    }
+
+    /// In-memory pair with `model` delays injected per frame.
+    pub fn sim_pair(model: NetModel) -> (Chan, Chan, SharedTranscript) {
+        let (ta, tb) = SimTransport::pair(model);
+        Self::pair_from(Box::new(ta), Box::new(tb))
+    }
+
+    /// Real-TCP pair over an ephemeral loopback port.
+    pub fn tcp_loopback_pair() -> Result<(Chan, Chan, SharedTranscript), NetError> {
+        let (ta, tb) = TcpTransport::loopback_pair().map_err(NetError::from_io)?;
+        Ok(Self::pair_from(Box::new(ta), Box::new(tb)))
+    }
+
+    /// Connected pair for a [`TransportSpec`].
+    pub fn pair_over(spec: &TransportSpec) -> Result<(Chan, Chan, SharedTranscript), NetError> {
+        match spec {
+            TransportSpec::Mem => Ok(Self::pair()),
+            TransportSpec::Sim(m) => Ok(Self::sim_pair(*m)),
+            TransportSpec::TcpLoopback => Self::tcp_loopback_pair(),
+        }
+    }
+
+    /// Enable/disable write coalescing (on by default). Off = every message
+    /// is its own frame/flight; bytes, msgs, and digests are unaffected.
+    pub fn set_coalesce(&mut self, on: bool) {
+        self.coalesce = on;
+    }
+
+    /// Backend name of the underlying transport.
+    pub fn transport_name(&self) -> &'static str {
+        self.t.name()
+    }
+
+    /// This endpoint's running wire-content digest.
+    pub fn content_digest(&self) -> u64 {
+        self.content
+    }
+
+    pub fn endpoint(&self) -> usize {
+        self.endpoint
+    }
+
+    /// Set the phase label under which this endpoint's subsequent traffic is
+    /// recorded. Phases are protocol-synchronous: both parties execute the
+    /// same symmetric protocol code, so each endpoint's local label stays in
+    /// step with its own sends. Committing the pending stats here (and at
+    /// flush) is what keeps the shared lock off the per-message path.
+    pub fn set_phase(&self, phase: &str) {
+        let mut a = self.acct.borrow_mut();
+        if a.phase == phase {
+            return;
+        }
+        let mut t = self.transcript.lock().unwrap();
+        if a.bytes > 0 || a.msgs > 0 {
+            let p = t.phases.entry(a.phase.clone()).or_default();
+            p.bytes += a.bytes;
+            p.msgs += a.msgs;
+            t.content[self.endpoint] = self.content;
+            a.bytes = 0;
+            a.msgs = 0;
+        }
+        t.current = phase.to_string();
+        a.phase = phase.to_string();
+    }
+
+    /// Fold one outgoing message into the local accounting (digest outside
+    /// any lock; stats pend until the next flush/phase-change commit).
     fn record_send(&mut self, data: &[u8]) {
         self.content = content_mix(self.content, data);
         {
-            let mut t = self.transcript.lock().unwrap();
-            let cur = t.current.clone();
-            let p = t.phases.entry(cur).or_default();
-            p.bytes += data.len() as u64;
-            p.msgs += 1;
-            t.content[self.endpoint] = self.content;
+            let mut a = self.acct.borrow_mut();
+            a.bytes += data.len() as u64;
+            a.msgs += 1;
         }
         self.sent_bytes += data.len() as u64;
         self.sent_msgs += 1;
-        self.sent_since_recv = true;
+    }
+
+    /// Commit pending stats (plus `flights` new flights) under ONE lock.
+    fn commit_pending(&self, flights: u64) {
+        let a = &mut *self.acct.borrow_mut();
+        if a.bytes == 0 && a.msgs == 0 && flights == 0 {
+            return;
+        }
+        let mut t = self.transcript.lock().unwrap();
+        let p = t.phases.entry(a.phase.clone()).or_default();
+        p.bytes += a.bytes;
+        p.msgs += a.msgs;
+        p.flights += flights;
+        t.content[self.endpoint] = self.content;
+        a.bytes = 0;
+        a.msgs = 0;
+    }
+
+    // ---- sending ----
+
+    /// Latch a transport failure and return it.
+    fn fail(&mut self, e: NetError) -> NetError {
+        self.dead.get_or_insert(e.clone());
+        e
+    }
+
+    pub fn try_send_bytes(&mut self, data: &[u8]) -> Result<(), NetError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        if data.len() > MAX_MSG {
+            return Err(NetError::Frame(format!("message too large: {} bytes", data.len())));
+        }
+        // ship the current frame first when this message would push it past
+        // the window: every frame stays ≤ max(COALESCE_WINDOW, 4 + MAX_MSG),
+        // safely under the TCP frame cap on every backend — even a max-size
+        // message rides alone in its own frame
+        if !self.wbuf.is_empty() && self.wbuf.len() + 4 + data.len() > COALESCE_WINDOW {
+            self.try_flush()?;
+        }
+        self.record_send(data);
+        self.wbuf.reserve(4 + data.len());
+        self.wbuf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        self.wbuf.extend_from_slice(data);
+        if self.coalesce && self.wbuf.len() < COALESCE_WINDOW {
+            Ok(())
+        } else {
+            self.try_flush()
+        }
     }
 
     pub fn send_bytes(&mut self, data: &[u8]) {
-        self.record_send(data);
-        self.tx.send(data.to_vec()).expect("peer hung up");
+        if let Err(e) = self.try_send_bytes(data) {
+            raise(e)
+        }
     }
 
     pub fn send_vec(&mut self, data: Vec<u8>) {
-        self.record_send(&data);
-        self.tx.send(data).expect("peer hung up");
+        self.send_bytes(&data);
+    }
+
+    /// Flush the write buffer as ONE wire frame (= one recorded flight).
+    /// No-op (beyond committing pending stats) when nothing is buffered.
+    pub fn try_flush(&mut self) -> Result<(), NetError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        if self.wbuf.is_empty() {
+            self.commit_pending(0);
+            return Ok(());
+        }
+        let frame = std::mem::take(&mut self.wbuf);
+        if let Err(e) = self.t.send_frame(frame) {
+            return Err(self.fail(e));
+        }
+        self.commit_pending(1);
+        Ok(())
+    }
+
+    pub fn flush(&mut self) {
+        if let Err(e) = self.try_flush() {
+            raise(e)
+        }
+    }
+
+    // ---- receiving ----
+
+    /// Receive the next logical message. Flushes our own buffer first — the
+    /// turnaround discipline: once we block waiting on the peer, everything
+    /// we produced must be on the wire, or neither side makes progress.
+    pub fn try_recv_bytes(&mut self) -> Result<Vec<u8>, NetError> {
+        self.try_flush()?;
+        loop {
+            if let Some(m) = self.rq.pop_front() {
+                return Ok(m);
+            }
+            let frame = match self.t.recv_frame() {
+                Ok(f) => f,
+                Err(e) => return Err(self.fail(e)),
+            };
+            if let Err(e) = self.split_frame(&frame) {
+                return Err(self.fail(e));
+            }
+        }
     }
 
     pub fn recv_bytes(&mut self) -> Vec<u8> {
-        if self.sent_since_recv {
-            // This receive depends on our last send completing a flight:
-            // record one latency-relevant one-way trip.
-            let mut t = self.transcript.lock().unwrap();
-            let cur = t.current.clone();
-            t.phases.entry(cur).or_default().flights += 1;
-            self.sent_since_recv = false;
+        match self.try_recv_bytes() {
+            Ok(m) => m,
+            Err(e) => raise(e),
         }
-        self.rx.recv().expect("peer hung up")
+    }
+
+    /// Parse one wire frame into its length-prefixed logical messages.
+    fn split_frame(&mut self, frame: &[u8]) -> Result<(), NetError> {
+        if frame.is_empty() {
+            return Err(NetError::Frame("empty frame".to_string()));
+        }
+        let mut off = 0usize;
+        while off < frame.len() {
+            if off + 4 > frame.len() {
+                return Err(NetError::Frame("truncated message header".to_string()));
+            }
+            let len = u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            if off + len > frame.len() {
+                return Err(NetError::Frame("truncated message body".to_string()));
+            }
+            self.rq.push_back(frame[off..off + len].to_vec());
+            off += len;
+        }
+        Ok(())
     }
 
     // ---- typed helpers ----
@@ -228,9 +604,10 @@ impl Chan {
             .collect()
     }
 
-    /// Exchange u64 slices simultaneously (both parties call this): one flight
-    /// in each direction, overlapping, so it counts as a single half-RTT per
-    /// party in the transcript.
+    /// Exchange u64 slices simultaneously (both parties call this): the recv
+    /// flushes each side's frame, so it is one overlapping flight per
+    /// direction — a single RTT total. Transports must queue sends (see
+    /// [`Transport`]) precisely so this cannot deadlock on large frames.
     pub fn exchange_u64s(&mut self, vs: &[u64]) -> Vec<u64> {
         self.send_u64s(vs);
         self.recv_u64s()
@@ -244,14 +621,25 @@ impl Chan {
         self.recv_bytes()
     }
 
-    /// Snapshot of the shared transcript.
+    /// Snapshot of the shared transcript (pending stats committed first).
     pub fn transcript_snapshot(&self) -> Vec<(String, PhaseStats)> {
+        self.commit_pending(0);
         let t = self.transcript.lock().unwrap();
         t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     pub fn total_stats(&self) -> PhaseStats {
+        self.commit_pending(0);
         self.transcript.lock().unwrap().total()
+    }
+}
+
+impl Drop for Chan {
+    /// Best-effort flush of a trailing coalesced frame: a protocol whose
+    /// final action is a send relies on this when its endpoint is torn down
+    /// right after (e.g. a `run2` closure returning).
+    fn drop(&mut self) {
+        let _ = self.try_flush();
     }
 }
 
@@ -267,6 +655,7 @@ mod tests {
             let m = b.recv_bytes();
             assert_eq!(m, vec![1, 2, 3]);
             b.send_bytes(&[4, 5]);
+            // b's trailing send flushes when b drops at thread exit
         });
         a.send_bytes(&[1, 2, 3]);
         assert_eq!(a.recv_bytes(), vec![4, 5]);
@@ -274,8 +663,8 @@ mod tests {
         let total = t.lock().unwrap().total();
         assert_eq!(total.bytes, 5);
         assert_eq!(total.msgs, 2);
-        // a sent then received: 1 flight recorded at a's endpoint
-        assert_eq!(total.flights, 1);
+        // one frame per direction: a flushed on turnaround, b on drop
+        assert_eq!(total.flights, 2);
     }
 
     #[test]
@@ -289,6 +678,37 @@ mod tests {
         a.send_u64s(&[7, u64::MAX]);
         assert_eq!(a.recv_u64(), 42);
         h.join().unwrap();
+    }
+
+    /// Consecutive same-direction messages coalesce into ONE frame/flight;
+    /// disabling coalescing makes each message its own flight. Bytes, msgs,
+    /// and message boundaries are identical either way.
+    #[test]
+    fn coalescing_merges_consecutive_sends_into_one_flight() {
+        let run = |coalesce: bool| {
+            let (mut a, mut b, t) = Chan::pair();
+            a.set_coalesce(coalesce);
+            let h = thread::spawn(move || {
+                let msgs = vec![b.recv_bytes(), b.recv_bytes(), b.recv_bytes()];
+                b.send_bytes(&[9]);
+                msgs
+            });
+            a.send_bytes(&[1]);
+            a.send_bytes(&[2, 2]);
+            a.send_bytes(&[3, 3, 3]);
+            let _ = a.recv_bytes(); // turnaround: flushes the (coalesced) buffer
+            let msgs = h.join().unwrap();
+            assert_eq!(msgs, vec![vec![1], vec![2, 2], vec![3, 3, 3]]);
+            let tr = t.lock().unwrap();
+            (tr.total(), tr.content)
+        };
+        let (c, dc) = run(true);
+        let (u, du) = run(false);
+        assert_eq!(c.bytes, u.bytes);
+        assert_eq!(c.msgs, u.msgs);
+        assert_eq!(dc, du, "coalescing must not change wire content digests");
+        assert_eq!(c.flights, 2, "3 sends coalesce into 1 flight (+1 reply)");
+        assert_eq!(u.flights, 4, "uncoalesced: one flight per message (+1 reply)");
     }
 
     #[test]
@@ -324,10 +744,13 @@ mod tests {
         a.send_bytes(&[0; 10]);
         a.set_phase("p2");
         a.send_bytes(&[0; 20]);
+        a.flush();
         h.join().unwrap();
         let tr = t.lock().unwrap();
         assert_eq!(tr.phases["p1"].bytes, 10);
         assert_eq!(tr.phases["p2"].bytes, 20);
+        // the two messages coalesced into one frame, attributed at flush
+        assert_eq!(tr.total().flights, 1);
     }
 
     #[test]
@@ -339,9 +762,34 @@ mod tests {
         assert_eq!(ra, vec![2]);
         assert_eq!(rb, vec![1]);
         let total = t.lock().unwrap().total();
-        // both endpoints recorded a flight — a simultaneous exchange is
+        // both endpoints flushed one frame — a simultaneous exchange is
         // 2 one-way trips = 1 RTT total
         assert_eq!(total.flights, 2);
+    }
+
+    #[test]
+    fn dropped_peer_is_a_typed_error_not_a_plain_panic() {
+        let (mut a, b, _t) = Chan::pair();
+        drop(b);
+        a.send_bytes(&[1]); // buffered: coalescing defers the failure
+        assert_eq!(a.try_flush().unwrap_err(), NetError::Disconnected);
+        // the panicking API unwinds with the typed payload
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.flush()))
+            .expect_err("flush must unwind");
+        let e = panic_to_error(p);
+        assert!(e.to_string().contains("disconnected"), "{e:#}");
+        assert!(e.downcast_ref::<NetError>().is_some(), "typed NetError preserved");
+    }
+
+    #[test]
+    fn pending_stats_visible_before_flush() {
+        // mid-protocol snapshots must see buffered-but-unflushed sends
+        let (mut a, _b, _t) = Chan::pair();
+        a.send_bytes(&[0; 32]);
+        let s = a.total_stats();
+        assert_eq!(s.bytes, 32);
+        assert_eq!(s.msgs, 1);
+        assert_eq!(s.flights, 0, "no frame on the wire yet");
     }
 
     #[test]
@@ -351,6 +799,9 @@ mod tests {
         let t = NetModel::LAN.time(&s);
         assert!((t - 1.0008).abs() < 1e-6, "t={t}");
         assert!(NetModel::WAN.time(&s) > t);
+        // per-frame injection sums to the analytic model
+        let d = NetModel::LAN.frame_delay_s((3_000_000_000 / 8) / 2);
+        assert!((2.0 * d - t).abs() < 1e-9);
     }
 
     #[test]
@@ -358,5 +809,16 @@ mod tests {
         assert_eq!(NetModel::LAN.bandwidth_bps, 3e9);
         assert_eq!(NetModel::WAN.rtt_s, 40e-3);
         assert_eq!(NetModel::BB_LAN.bandwidth_bps, 1e9);
+        assert_eq!(NetModel::INSTANT.time(&PhaseStats { bytes: 1 << 30, msgs: 9, flights: 9 }), 0.0);
+    }
+
+    #[test]
+    fn transport_spec_names_roundtrip() {
+        for name in ["mem", "tcp", "sim", "sim-wan"] {
+            assert!(TransportSpec::by_name(name).is_some(), "{name}");
+        }
+        assert_eq!(TransportSpec::by_name("mem"), Some(TransportSpec::Mem));
+        assert_eq!(TransportSpec::by_name("carrier-pigeon"), None);
+        assert_eq!(TransportSpec::Sim(NetModel::WAN).label(), "sim:WAN");
     }
 }

@@ -1,0 +1,200 @@
+//! TCP backend for the [`Transport`] trait: length-prefixed frames over a
+//! `TcpStream`, suitable for two OS processes on one machine (loopback) or
+//! two machines over LAN/WAN.
+//!
+//! Wire format: each frame is `u32 LE length ‖ payload` (the payload itself
+//! is `Chan`'s inner message framing — the transport never looks inside).
+//! `TCP_NODELAY` is set so a flushed frame leaves immediately; coalescing is
+//! `Chan`'s job, not Nagle's.
+//!
+//! Writes run on a dedicated writer thread fed through a queue, so
+//! [`send_frame`](TcpTransport::send_frame) never blocks on the peer's read
+//! side — required by the [`Transport`] contract: during a simultaneous
+//! share exchange both parties flush large frames at each other before
+//! reading, which over a bare socket can deadlock once both kernel buffers
+//! fill. The writer drains the queue (and flushes) before the transport
+//! drops, so trailing frames are delivered even on immediate teardown.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::transport::Transport;
+use super::NetError;
+
+/// Sanity bound on an incoming frame length: a corrupt header fails fast
+/// instead of attempting a multi-GiB allocation.
+const MAX_FRAME: usize = 1 << 31;
+
+fn io_err(e: io::Error) -> NetError {
+    if e.kind() == io::ErrorKind::UnexpectedEof {
+        NetError::Disconnected
+    } else {
+        NetError::Io(e.to_string())
+    }
+}
+
+/// One endpoint of a framed TCP link.
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    wtx: Option<Sender<Vec<u8>>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Wrap an established stream (sets `TCP_NODELAY`, spawns the writer).
+    pub fn from_stream(stream: TcpStream) -> io::Result<TcpTransport> {
+        stream.set_nodelay(true)?;
+        let write_half = stream.try_clone()?;
+        let (wtx, wrx) = channel::<Vec<u8>>();
+        let writer = std::thread::spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            while let Ok(frame) = wrx.recv() {
+                if w.write_all(&(frame.len() as u32).to_le_bytes()).is_err()
+                    || w.write_all(&frame).is_err()
+                    || w.flush().is_err()
+                {
+                    // peer gone: drain silently; the reader side reports it
+                    return;
+                }
+            }
+        });
+        Ok(TcpTransport {
+            reader: BufReader::new(stream),
+            wtx: Some(wtx),
+            writer: Some(writer),
+        })
+    }
+
+    /// Bind a listener (supports port 0 for an ephemeral port) and return it
+    /// with the actually-bound address, so callers can publish the address
+    /// *before* blocking in [`accept`](Self::accept).
+    pub fn bind(addr: &str) -> io::Result<(TcpListener, SocketAddr)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok((listener, local))
+    }
+
+    /// Accept one peer connection on a bound listener.
+    pub fn accept(listener: &TcpListener) -> io::Result<TcpTransport> {
+        let (stream, _peer) = listener.accept()?;
+        Self::from_stream(stream)
+    }
+
+    /// Connect to a listening peer.
+    pub fn connect(addr: &str) -> io::Result<TcpTransport> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Connect with retries until `timeout` elapses — lets the client
+    /// process start before (or while) the server is still binding.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpTransport> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => return Self::from_stream(s),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// A connected pair over an ephemeral loopback port — real sockets, no
+    /// external network, usable inside `cargo test`.
+    pub fn loopback_pair() -> io::Result<(TcpTransport, TcpTransport)> {
+        let (listener, addr) = Self::bind("127.0.0.1:0")?;
+        let connector = std::thread::spawn(move || TcpStream::connect(addr));
+        let (server, _) = listener.accept()?;
+        let client = connector.join().expect("connector thread panicked")?;
+        Ok((Self::from_stream(server)?, Self::from_stream(client)?))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        if frame.len() > MAX_FRAME {
+            return Err(NetError::Frame(format!("frame too large: {} bytes", frame.len())));
+        }
+        self.wtx
+            .as_ref()
+            .expect("writer queue present until drop")
+            .send(frame)
+            .map_err(|_| NetError::Disconnected)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        let mut len_bytes = [0u8; 4];
+        self.reader.read_exact(&mut len_bytes).map_err(io_err)?;
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(NetError::Frame(format!("bad frame length {len}")));
+        }
+        let mut frame = vec![0u8; len];
+        self.reader.read_exact(&mut frame).map_err(io_err)?;
+        Ok(frame)
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // closing the queue lets the writer drain remaining frames and exit
+        self.wtx.take();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_frames_roundtrip() {
+        let (mut a, mut b) = TcpTransport::loopback_pair().expect("loopback pair");
+        a.send_frame(vec![1, 2, 3]).unwrap();
+        a.send_frame(vec![9; 1000]).unwrap();
+        assert_eq!(b.recv_frame().unwrap(), vec![1, 2, 3]);
+        assert_eq!(b.recv_frame().unwrap(), vec![9; 1000]);
+        b.send_frame(vec![7]).unwrap();
+        assert_eq!(a.recv_frame().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn dropped_peer_reports_disconnected() {
+        let (a, mut b) = TcpTransport::loopback_pair().expect("loopback pair");
+        drop(a);
+        assert_eq!(b.recv_frame().unwrap_err(), NetError::Disconnected);
+    }
+
+    #[test]
+    fn trailing_frames_survive_immediate_drop() {
+        // the writer thread must drain its queue before the socket closes
+        let (mut a, mut b) = TcpTransport::loopback_pair().expect("loopback pair");
+        for i in 0..10u8 {
+            a.send_frame(vec![i; 100]).unwrap();
+        }
+        drop(a);
+        for i in 0..10u8 {
+            assert_eq!(b.recv_frame().unwrap(), vec![i; 100]);
+        }
+        assert_eq!(b.recv_frame().unwrap_err(), NetError::Disconnected);
+    }
+
+    #[test]
+    fn connect_retry_times_out_cleanly() {
+        // port 1 on loopback is essentially never listening
+        let r = TcpTransport::connect_retry("127.0.0.1:1", Duration::from_millis(120));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Pluggable byte-frame transports underneath [`Chan`](super::Chan).
+//!
+//! A transport moves opaque *frames* — already-coalesced bundles of one or
+//! more length-prefixed logical messages, built by `Chan`'s write buffer —
+//! between the two endpoints of a duplex link. All accounting (bytes, msgs,
+//! flights, per-endpoint content digests) and all message framing live in
+//! [`Chan`](super::Chan), so every backend produces byte-identical protocol
+//! transcripts; backends differ only in *how* a frame crosses the boundary:
+//!
+//! - [`MemTransport`] — in-process `mpsc` duplex (the original substrate).
+//! - [`SimTransport`] — in-process, with [`NetModel`](super::NetModel)
+//!   bandwidth/RTT delays injected per frame on the receive side, so modeled
+//!   and *measured* network time can be compared on one axis.
+//! - [`TcpTransport`](super::tcp::TcpTransport) — length-prefixed frames
+//!   over a real socket (two-process mode; loopback-testable).
+//! - [`CutTransport`] — fault injection: severs a live link on demand so the
+//!   error path (typed [`NetError`], session poisoning) can be tested
+//!   deterministically.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{NetError, NetModel};
+
+/// One endpoint's view of a duplex frame pipe.
+///
+/// Contract:
+/// - [`send_frame`](Self::send_frame) must not block waiting for the peer to
+///   *read* (queue- or writer-thread-backed). `Chan` flushes its write buffer
+///   right before blocking in recv, and a blocking send there would deadlock
+///   two parties that flush large frames at each other simultaneously (e.g.
+///   a share `open` exchange).
+/// - [`recv_frame`](Self::recv_frame) blocks until the next frame arrives
+///   and returns [`NetError::Disconnected`] once the peer is gone for good.
+/// - Frames arrive in order, intact, and exactly once.
+pub trait Transport: Send {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError>;
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError>;
+    /// Backend name for reports and error messages.
+    fn name(&self) -> &'static str;
+}
+
+/// In-process duplex over unbounded `mpsc` channels. Sends never block;
+/// a dropped peer surfaces as [`NetError::Disconnected`] on both sides.
+pub struct MemTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl MemTransport {
+    /// Create a connected pair.
+    pub fn pair() -> (MemTransport, MemTransport) {
+        let (tx0, rx1) = channel();
+        let (tx1, rx0) = channel();
+        (MemTransport { tx: tx0, rx: rx0 }, MemTransport { tx: tx1, rx: rx1 })
+    }
+}
+
+impl Transport for MemTransport {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        self.tx.send(frame).map_err(|_| NetError::Disconnected)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        self.rx.recv().map_err(|_| NetError::Disconnected)
+    }
+
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+}
+
+/// [`MemTransport`] plus per-frame delay injection from a
+/// [`NetModel`](super::NetModel): a frame sent at `t` becomes readable at
+/// `t + rtt/2 + bytes/bandwidth`. Because a frame is exactly one recorded
+/// flight, the wall time of a serial (ping-pong) protocol over this backend
+/// converges to `NetModel::time` of its transcript — the analytic model and
+/// the measured clock meet on one axis (`tests/transport.rs` pins this).
+pub struct SimTransport {
+    tx: Sender<(Instant, Vec<u8>)>,
+    rx: Receiver<(Instant, Vec<u8>)>,
+    model: NetModel,
+}
+
+impl SimTransport {
+    /// Create a connected pair simulating `model` in both directions.
+    pub fn pair(model: NetModel) -> (SimTransport, SimTransport) {
+        let (tx0, rx1) = channel();
+        let (tx1, rx0) = channel();
+        (
+            SimTransport { tx: tx0, rx: rx0, model },
+            SimTransport { tx: tx1, rx: rx1, model },
+        )
+    }
+}
+
+impl Transport for SimTransport {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        self.tx.send((Instant::now(), frame)).map_err(|_| NetError::Disconnected)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        let (sent_at, frame) = self.rx.recv().map_err(|_| NetError::Disconnected)?;
+        let delay = self.model.frame_delay_s(frame.len());
+        if delay > 0.0 {
+            let ready = sent_at + Duration::from_secs_f64(delay);
+            let now = Instant::now();
+            if ready > now {
+                std::thread::sleep(ready - now);
+            }
+        }
+        Ok(frame)
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// Fault-injection wrapper: once the shared switch is tripped, every send
+/// and receive on this endpoint fails with [`NetError::Disconnected`].
+/// Wrap *both* endpoints of a pair with [`CutTransport::wrapping`] and one
+/// switch to sever the whole link between protocol rounds.
+pub struct CutTransport {
+    inner: Box<dyn Transport>,
+    cut: Arc<AtomicBool>,
+}
+
+impl CutTransport {
+    /// Wrap a transport; returns the endpoint and the (untripped) switch.
+    pub fn new(inner: Box<dyn Transport>) -> (CutTransport, Arc<AtomicBool>) {
+        let cut = Arc::new(AtomicBool::new(false));
+        (Self::wrapping(inner, cut.clone()), cut)
+    }
+
+    /// Wrap a transport sharing an existing switch (for the peer endpoint).
+    pub fn wrapping(inner: Box<dyn Transport>, cut: Arc<AtomicBool>) -> CutTransport {
+        CutTransport { inner, cut }
+    }
+}
+
+impl Transport for CutTransport {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        if self.cut.load(Ordering::SeqCst) {
+            return Err(NetError::Disconnected);
+        }
+        self.inner.send_frame(frame)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        if self.cut.load(Ordering::SeqCst) {
+            return Err(NetError::Disconnected);
+        }
+        self.inner.recv_frame()
+    }
+
+    fn name(&self) -> &'static str {
+        "cut"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_frames_roundtrip_in_order() {
+        let (mut a, mut b) = MemTransport::pair();
+        a.send_frame(vec![1, 2]).unwrap();
+        a.send_frame(vec![3]).unwrap();
+        assert_eq!(b.recv_frame().unwrap(), vec![1, 2]);
+        assert_eq!(b.recv_frame().unwrap(), vec![3]);
+        b.send_frame(vec![4]).unwrap();
+        assert_eq!(a.recv_frame().unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn mem_dropped_peer_disconnects() {
+        let (mut a, b) = MemTransport::pair();
+        drop(b);
+        assert_eq!(a.send_frame(vec![1]).unwrap_err(), NetError::Disconnected);
+        assert_eq!(a.recv_frame().unwrap_err(), NetError::Disconnected);
+    }
+
+    #[test]
+    fn cut_switch_severs_both_ops() {
+        let (ta, tb) = MemTransport::pair();
+        let (mut a, cut) = CutTransport::new(Box::new(ta));
+        let mut b = CutTransport::wrapping(Box::new(tb), cut.clone());
+        a.send_frame(vec![7]).unwrap();
+        assert_eq!(b.recv_frame().unwrap(), vec![7]);
+        cut.store(true, Ordering::SeqCst);
+        assert_eq!(a.send_frame(vec![8]).unwrap_err(), NetError::Disconnected);
+        assert_eq!(b.recv_frame().unwrap_err(), NetError::Disconnected);
+    }
+
+    #[test]
+    fn sim_injects_at_least_the_modeled_delay() {
+        let m = NetModel { name: "t", bandwidth_bps: 1e9, rtt_s: 20e-3 };
+        let (mut a, mut b) = SimTransport::pair(m);
+        let t0 = Instant::now();
+        a.send_frame(vec![0; 64]).unwrap();
+        let f = b.recv_frame().unwrap();
+        assert_eq!(f.len(), 64);
+        assert!(t0.elapsed() >= Duration::from_millis(10), "half-RTT injected");
+    }
+}

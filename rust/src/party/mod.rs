@@ -3,7 +3,12 @@
 //! Protocols in this framework are written as a pair of symmetric functions, one
 //! per party, each receiving a [`PartyCtx`]. [`run2`] spawns both parties on
 //! threads connected by a counted channel and returns their results plus the
-//! traffic transcript.
+//! traffic transcript. The channel's transport is pluggable: the plain
+//! runners use the in-memory backend, and the `*_over` variants accept a
+//! caller-built [`Chan`] pair (TCP loopback, simulated WAN, fault-injection
+//! wrappers — see [`crate::net::TransportSpec`]). For a *single* party bound
+//! to a remote peer process, skip the runners entirely and drive
+//! `coordinator::remote::run_party` with one `Chan`.
 //!
 //! A *dealer* provides setup-phase correlated randomness (base-OT seeds and,
 //! optionally, Beaver triples in "dealer mode" for fast tests). It is stateless:
@@ -142,7 +147,24 @@ where
     F0: FnOnce(PartyCtx) -> R0 + Send,
     F1: FnOnce(PartyCtx) -> R1 + Send,
 {
-    let (ca, cb, transcript) = Chan::pair();
+    run2_owned_over(session_seed, Chan::pair(), f0, f1)
+}
+
+/// [`run2_owned`] over a caller-built channel pair — any transport backend.
+/// The pair must share the returned transcript (see `Chan::pair_from`).
+pub fn run2_owned_over<R0, R1, F0, F1>(
+    session_seed: u64,
+    chans: (Chan, Chan, SharedTranscript),
+    f0: F0,
+    f1: F1,
+) -> (R0, R1, SharedTranscript)
+where
+    R0: Send,
+    R1: Send,
+    F0: FnOnce(PartyCtx) -> R0 + Send,
+    F1: FnOnce(PartyCtx) -> R1 + Send,
+{
+    let (ca, cb, transcript) = chans;
     let ctx0 = PartyCtx::new(PartyId::P0, ca, session_seed);
     let ctx1 = PartyCtx::new(PartyId::P1, cb, session_seed);
     let (r0, r1) = std::thread::scope(|s| {
@@ -160,6 +182,19 @@ where
     F: Fn(PartyCtx) -> R + Send + Sync,
 {
     run2_owned(session_seed, |c| f(c), |c| f(c))
+}
+
+/// Symmetric owned-context runner over a caller-built channel pair.
+pub fn run2_owned_sym_over<R, F>(
+    session_seed: u64,
+    chans: (Chan, Chan, SharedTranscript),
+    f: F,
+) -> (R, R, SharedTranscript)
+where
+    R: Send,
+    F: Fn(PartyCtx) -> R + Send + Sync,
+{
+    run2_owned_over(session_seed, chans, |c| f(c), |c| f(c))
 }
 
 /// Total traffic recorded on a transcript.

@@ -30,6 +30,10 @@ use crate::he::{BfvContext, Ctx, SecretKey};
 use crate::party::PartyCtx;
 use crate::util::WorkerPool;
 
+/// Setup-ping magic word: pins that the peer speaks the same wire protocol
+/// before any heavy round (matters once the channel can be a real socket).
+const SETUP_MAGIC: u64 = 0x4349_5048_5052_554e; // "CIPHPRUN"
+
 /// Full two-party protocol endpoint: MPC gates + an HE keypair per party.
 pub struct Engine2P {
     pub mpc: Mpc,
@@ -64,6 +68,24 @@ impl Engine2P {
         mpc.set_pool(pool);
         let he = BfvContext::new(he_n);
         let sk = SecretKey::gen(&he, &mut mpc.ctx.rng);
+        // Setup liveness ping: one tiny exchange proves connectivity and
+        // framing end-to-end and catches a mismatched ring degree before the
+        // first (expensive) protocol round — essential over TCP, harmless
+        // in-process. The trailing flush puts the frame on the wire before
+        // the engine is declared ready.
+        mpc.ctx.ch.set_phase("setup");
+        let peer = mpc.ctx.ch.exchange_u64s(&[SETUP_MAGIC, he_n as u64]);
+        assert_eq!(
+            peer.first().copied(),
+            Some(SETUP_MAGIC),
+            "setup ping: peer speaks a different wire protocol"
+        );
+        assert_eq!(
+            peer.get(1).copied(),
+            Some(he_n as u64),
+            "setup ping: peer configured a different BFV ring degree"
+        );
+        mpc.ctx.ch.flush();
         Engine2P { mpc, he, sk, fix, pool, phase_ctx: std::cell::RefCell::new(String::new()) }
     }
 

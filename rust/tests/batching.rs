@@ -22,6 +22,7 @@ use cipherprune::coordinator::{
     BatchPolicy, BlockRun, EngineConfig, EngineKind, InferenceRequest, PreparedModel,
     Router, RouterConfig, Session,
 };
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::{real_len, ModelConfig, ModelWeights, Workload, PAD_ID};
 
 fn tiny_weights() -> Arc<ModelWeights> {
@@ -36,6 +37,7 @@ fn sample_ids(seed: u64) -> Vec<usize> {
 fn fresh_session(w: &Arc<ModelWeights>) -> Session {
     let model = Arc::new(PreparedModel::prepare(w.clone()));
     Session::start(model, EngineConfig::for_tests(EngineKind::CipherPrune))
+        .expect("session start")
 }
 
 /// (1) ≡ (2): real length vs padded bucket — identical logits, identical
@@ -53,9 +55,14 @@ fn padded_solo_matches_real_length_bit_for_bit() {
     let mut s_pad = fresh_session(&w);
     let a = s_real
         .infer_batch(&[BlockRun { nonce: 7, ids: real_ids }])
+        .expect("infer")
         .pop()
         .unwrap();
-    let b = s_pad.infer_batch(&[BlockRun { nonce: 7, ids: padded }]).pop().unwrap();
+    let b = s_pad
+        .infer_batch(&[BlockRun { nonce: 7, ids: padded }])
+        .expect("infer")
+        .pop()
+        .unwrap();
 
     assert_eq!(a.logits, b.logits, "bucket padding changed the logits");
     assert_eq!(a.layer_stats.len(), b.layer_stats.len());
@@ -94,12 +101,12 @@ fn fused_batch_matches_solo_runs_bit_for_bit() {
     let mut s_solo = fresh_session(&w);
     let solo: Vec<_> = items
         .iter()
-        .map(|it| s_solo.infer_batch(&[it.clone()]).pop().unwrap())
+        .map(|it| s_solo.infer_batch(&[it.clone()]).expect("infer").pop().unwrap())
         .collect();
 
     // fused: all three in ONE pipeline run
     let mut s_fused = fresh_session(&w);
-    let fused = s_fused.infer_batch(&items);
+    let fused = s_fused.infer_batch(&items).expect("fused infer");
     assert_eq!(fused.len(), 3);
     assert_eq!(s_fused.runs(), 1, "a fused batch is one pipeline run");
     assert_eq!(s_fused.requests(), 3);
@@ -127,8 +134,8 @@ fn repeat_requests_are_deterministic_within_a_session() {
     let w = tiny_weights();
     let ids = sample_ids(17);
     let mut s = fresh_session(&w);
-    let a = s.infer_batch(&[BlockRun { nonce: 9, ids: ids.clone() }]).pop().unwrap();
-    let b = s.infer_batch(&[BlockRun { nonce: 9, ids }]).pop().unwrap();
+    let a = s.infer_batch(&[BlockRun { nonce: 9, ids: ids.clone() }]).expect("infer").pop().unwrap();
+    let b = s.infer_batch(&[BlockRun { nonce: 9, ids }]).expect("infer").pop().unwrap();
     assert_eq!(a.logits, b.logits);
     assert_eq!(a.total_stats().bytes, b.total_stats().bytes);
 }
@@ -166,6 +173,7 @@ fn router_fused_equals_router_solo() {
                 he_n: 128,
                 schedule: None,
                 threads: None,
+                transport: TransportSpec::Mem,
             },
         )
     };
@@ -189,16 +197,17 @@ fn router_fused_equals_router_solo() {
 
     for (s, f) in solo_resp.iter().zip(&fused_resp) {
         assert_eq!(s.id, f.id);
+        let (sr, fr) = (s.result.as_ref().unwrap(), f.result.as_ref().unwrap());
         assert_eq!(
-            s.result.logits, f.result.logits,
+            sr.logits, fr.logits,
             "request {}: fused serving changed the logits",
             s.id
         );
-        for (x, y) in s.result.layer_stats.iter().zip(&f.result.layer_stats) {
+        for (x, y) in sr.layer_stats.iter().zip(&fr.layer_stats) {
             assert_eq!(x.n_kept, y.n_kept);
             assert_eq!(x.n_high, y.n_high);
         }
-        assert_eq!(f.result.batch_size, 3);
+        assert_eq!(fr.batch_size, 3);
     }
 }
 
@@ -210,9 +219,10 @@ fn plaintext_session_is_mask_aware() {
     let ids = sample_ids(17);
     let real = real_len(&ids);
     let model = Arc::new(PreparedModel::prepare(w.clone()));
-    let mut s = Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext));
-    let a = s.infer(&ids);
-    let b = s.infer(&ids[..real]);
+    let mut s = Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext))
+        .expect("session start");
+    let a = s.infer(&ids).expect("infer");
+    let b = s.infer(&ids[..real]).expect("infer");
     assert_eq!(a.logits, b.logits);
     assert_eq!(a.layer_stats[0].n_in, real);
 }

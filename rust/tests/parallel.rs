@@ -112,8 +112,8 @@ fn session_infer_invariant_across_pool_sizes() {
     for &threads in &pool_sizes() {
         let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(threads);
         let model = Arc::new(PreparedModel::prepare(w.clone()));
-        let mut session = Session::start(model, ec);
-        let r = session.infer(&ids);
+        let mut session = Session::start(model, ec).expect("session start");
+        let r = session.infer(&ids).expect("infer");
         let req = r.total_stats();
         let cur = (
             r.logits.clone(),
@@ -154,8 +154,8 @@ fn fused_batch_invariant_across_pool_sizes() {
     for &threads in &pool_sizes() {
         let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(threads);
         let model = Arc::new(PreparedModel::prepare(w.clone()));
-        let mut session = Session::start(model, ec);
-        let rs = session.infer_batch(&items);
+        let mut session = Session::start(model, ec).expect("session start");
+        let rs = session.infer_batch(&items).expect("fused infer");
         assert_eq!(rs.len(), items.len());
         let logits: Vec<Vec<f64>> = rs.iter().map(|r| r.logits.clone()).collect();
         let req = rs[0].total_stats(); // batch-level, shared by all members
@@ -183,6 +183,6 @@ fn one_shot_matches_threaded_session() {
     let ec = EngineConfig::for_tests(EngineKind::CipherPrune).threads(max);
     let one_shot = cipherprune::coordinator::run_inference(&ec, &w, &ids);
     let model = Arc::new(PreparedModel::prepare(w));
-    let mut session = Session::start(model, ec);
-    assert_eq!(session.infer(&ids).logits, one_shot.logits);
+    let mut session = Session::start(model, ec).expect("session start");
+    assert_eq!(session.infer(&ids).expect("infer").logits, one_shot.logits);
 }

@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 use cipherprune::coordinator::batcher::{bucket_for, Batch, BatchPolicy, Batcher};
 use cipherprune::coordinator::{EngineKind, InferenceRequest, Router, RouterConfig};
 use cipherprune::fixed::{F64Mat, Fix, RingMat};
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::reference::prune_order;
 use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::util::{gen_range, propcheck, Xoshiro256};
@@ -352,6 +353,7 @@ fn router_answers_every_request_exactly_once() {
                     he_n: 128,
                     schedule: None,
                     threads: None,
+                    transport: TransportSpec::Mem,
                 },
             );
             let n = reqs.len();
@@ -366,8 +368,10 @@ fn router_answers_every_request_exactly_once() {
                 return Err("duplicate/missing response ids".into());
             }
             for r in &resp {
-                if r.result.logits.len() != 2 {
-                    return Err("wrong logit arity".into());
+                match &r.result {
+                    Ok(res) if res.logits.len() == 2 => {}
+                    Ok(_) => return Err("wrong logit arity".into()),
+                    Err(e) => return Err(format!("request {} failed: {e}", r.id)),
                 }
             }
             Ok(())

@@ -16,6 +16,7 @@ use cipherprune::coordinator::{
     run_inference, BatchPolicy, EngineConfig, EngineKind, InferenceRequest,
     PreparedModel, Router, RouterConfig, Session,
 };
+use cipherprune::net::TransportSpec;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
 
 fn tiny_setup() -> (Arc<ModelWeights>, Vec<usize>) {
@@ -37,9 +38,9 @@ fn session_reuse_matches_one_shot_for_every_kind() {
         let cfg = EngineConfig::for_tests(kind);
         let one_shot = run_inference(&cfg, &w, &ids);
         let model = Arc::new(PreparedModel::prepare(w.clone()));
-        let mut session = Session::start(model, cfg);
+        let mut session = Session::start(model, cfg).expect("session start");
         assert!(session.setup_stats().bytes > 0, "{kind:?}: setup communicates");
-        let r1 = session.infer(&ids);
+        let r1 = session.infer(&ids).expect("infer");
         assert_eq!(
             r1.logits, one_shot.logits,
             "{kind:?}: fresh session replays the one-shot randomness"
@@ -47,7 +48,7 @@ fn session_reuse_matches_one_shot_for_every_kind() {
         // setup traffic is not billed to the request
         assert!(r1.total_stats().bytes < one_shot.total_stats().bytes);
         for req in 2..=3 {
-            let r = session.infer(&ids);
+            let r = session.infer(&ids).expect("infer");
             assert_eq!(
                 r.logits, one_shot.logits,
                 "{kind:?} request {req}: aligned truncation makes repeats exact"
@@ -69,9 +70,9 @@ fn session_request_traffic_is_per_request() {
     let (w, ids) = tiny_setup();
     let cfg = EngineConfig::for_tests(EngineKind::CipherPrune);
     let model = Arc::new(PreparedModel::prepare(w));
-    let mut session = Session::start(model, cfg);
-    let r1 = session.infer(&ids);
-    let r2 = session.infer(&ids);
+    let mut session = Session::start(model, cfg).expect("session start");
+    let r1 = session.infer(&ids).expect("infer");
+    let r2 = session.infer(&ids).expect("infer");
     // same input, same engine → same protocol structure and (deterministic
     // message framing) the same online byte count
     assert_eq!(r1.total_stats().bytes, r2.total_stats().bytes);
@@ -87,9 +88,9 @@ fn session_request_traffic_is_per_request() {
 fn plaintext_session_serves_requests() {
     let (w, ids) = tiny_setup();
     let model = Arc::new(PreparedModel::prepare(w.clone()));
-    let mut session =
-        Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext));
-    let r = session.infer(&ids);
+    let mut session = Session::start(model, EngineConfig::for_tests(EngineKind::Plaintext))
+        .expect("session start");
+    let r = session.infer(&ids).expect("infer");
     let want =
         cipherprune::nn::forward_masked(&w, &ids, &cipherprune::nn::ForwardOptions::plain());
     assert_eq!(r.logits, want.logits);
@@ -114,6 +115,7 @@ fn router_prepares_model_once_across_requests() {
             he_n: 128,
             schedule: None,
             threads: None,
+            transport: TransportSpec::Mem,
         },
     );
     let cfg = ModelConfig::tiny();

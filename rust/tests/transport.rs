@@ -1,0 +1,252 @@
+//! Transport-layer integration: the pluggable channel backends must be
+//! protocol-invisible — same seed ⇒ identical logits, prune/reduce
+//! decisions, transcript totals, and per-endpoint wire-content digests on
+//! MemTransport, TcpTransport (real loopback sockets), and SimTransport —
+//! while flight coalescing strictly reduces one-way trips, SimTransport's
+//! injected delays agree with the analytic NetModel, a severed link fails
+//! the request (typed error, poisoned session) instead of the process, and
+//! the `cipherprune party` subcommand runs the protocol across two real OS
+//! processes over loopback TCP.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    EngineConfig, EngineKind, PreparedModel, RunResult, Session,
+};
+use cipherprune::net::{
+    new_transcript, Chan, CutTransport, MemTransport, NetModel, PhaseStats, TransportSpec,
+};
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+
+fn tiny() -> (Arc<ModelWeights>, Vec<usize>) {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, 17)[0].ids.clone();
+    (w, ids)
+}
+
+fn run_once(spec: TransportSpec, coalesce: bool) -> (RunResult, [u64; 2], PhaseStats) {
+    let (w, ids) = tiny();
+    let model = Arc::new(PreparedModel::prepare(w));
+    let ec = EngineConfig::for_tests(EngineKind::CipherPrune)
+        .transport(spec)
+        .coalesce(coalesce);
+    let mut s = Session::start(model, ec).expect("session start");
+    let r = s.infer(&ids).expect("infer");
+    let digest = s.transcript_digest();
+    (r, digest, s.setup_stats())
+}
+
+fn assert_identical(
+    (ra, da, sa): &(RunResult, [u64; 2], PhaseStats),
+    (rb, db, sb): &(RunResult, [u64; 2], PhaseStats),
+    what: &str,
+) {
+    assert_eq!(ra.logits, rb.logits, "{what}: logits");
+    for (x, y) in ra.layer_stats.iter().zip(&rb.layer_stats) {
+        assert_eq!(x.n_in, y.n_in, "{what}: n_in");
+        assert_eq!(x.n_kept, y.n_kept, "{what}: prune decisions");
+        assert_eq!(x.n_high, y.n_high, "{what}: reduce decisions");
+        assert_eq!(x.swaps, y.swaps, "{what}: swaps");
+    }
+    assert_eq!(da, db, "{what}: per-endpoint wire-content digests");
+    let (ta, tb) = (ra.total_stats(), rb.total_stats());
+    assert_eq!(ta.bytes, tb.bytes, "{what}: online bytes");
+    assert_eq!(ta.msgs, tb.msgs, "{what}: online msgs");
+    assert_eq!(ta.flights, tb.flights, "{what}: online flights");
+    assert_eq!(sa.bytes, sb.bytes, "{what}: setup bytes");
+    assert_eq!(sa.msgs, sb.msgs, "{what}: setup msgs");
+}
+
+/// Real TCP over a loopback socket is byte-identical to the in-memory
+/// substrate: the transport is below the framing/accounting layer.
+#[test]
+fn tcp_loopback_is_bit_identical_to_mem() {
+    let mem = run_once(TransportSpec::Mem, true);
+    let tcp = run_once(TransportSpec::TcpLoopback, true);
+    assert_identical(&mem, &tcp, "tcp vs mem");
+}
+
+/// SimTransport (here with the zero-cost model, so the test stays fast) is
+/// byte-identical too — delay injection sits below the accounting layer.
+#[test]
+fn sim_transport_is_bit_identical_to_mem() {
+    let mem = run_once(TransportSpec::Mem, true);
+    let sim = run_once(TransportSpec::Sim(NetModel::INSTANT), true);
+    assert_identical(&mem, &sim, "sim vs mem");
+}
+
+/// Coalescing strictly reduces recorded flights — in total AND on at least
+/// one multi-round protocol phase — while logits, decisions, bytes, msgs,
+/// and wire digests stay identical.
+#[test]
+fn coalescing_strictly_reduces_flights_only() {
+    let on = run_once(TransportSpec::Mem, true);
+    let off = run_once(TransportSpec::Mem, false);
+    // everything but flights is untouched
+    assert_eq!(on.0.logits, off.0.logits);
+    assert_eq!(on.1, off.1, "wire digests unchanged by coalescing");
+    let (tc, tu) = (on.0.total_stats(), off.0.total_stats());
+    assert_eq!(tc.bytes, tu.bytes);
+    assert_eq!(tc.msgs, tu.msgs);
+    assert!(
+        tc.flights < tu.flights,
+        "coalescing must reduce total flights ({} !< {})",
+        tc.flights,
+        tu.flights
+    );
+    // …and strictly on at least one individual phase
+    let uncoalesced: std::collections::BTreeMap<&str, u64> =
+        off.0.phases.iter().map(|(k, v)| (k.as_str(), v.flights)).collect();
+    let reduced = on.0.phases.iter().any(|(k, v)| {
+        uncoalesced.get(k.as_str()).map(|u| v.flights < *u).unwrap_or(false)
+    });
+    assert!(reduced, "at least one phase must lose flights to coalescing");
+}
+
+/// Measured wall time over SimTransport ≈ `NetModel::time` of the recorded
+/// transcript, on a serial ping-pong where latency dominates compute.
+#[test]
+fn sim_delay_tracks_net_model() {
+    let m = NetModel { name: "test", bandwidth_bps: 80e6, rtt_s: 16e-3 };
+    let (mut a, mut b, t) = Chan::sim_pair(m);
+    let rounds = 6usize;
+    let h = std::thread::spawn(move || {
+        for _ in 0..rounds {
+            let v = b.recv_u64s();
+            b.send_u64s(&v);
+        }
+        // trailing reply flushes when b drops here
+    });
+    let t0 = std::time::Instant::now();
+    for i in 0..rounds {
+        a.send_u64s(&vec![i as u64; 1000]);
+        let _ = a.recv_u64s();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    h.join().unwrap();
+    let total = t.lock().unwrap().total();
+    assert_eq!(total.flights as usize, 2 * rounds, "one frame per direction per round");
+    let modeled = m.time(&total);
+    assert!(
+        wall >= 0.9 * modeled,
+        "measured {wall:.4}s must not undershoot the model {modeled:.4}s"
+    );
+    assert!(
+        wall <= 2.0 * modeled + 0.05,
+        "measured {wall:.4}s strayed far above the model {modeled:.4}s"
+    );
+}
+
+/// A severed link fails the request with a typed, readable error; the
+/// session poisons (later requests fail fast) and the process survives.
+#[test]
+fn severed_link_fails_request_not_process() {
+    let (w, ids) = tiny();
+    let model = Arc::new(PreparedModel::prepare(w));
+    let (ta, tb) = MemTransport::pair();
+    let (cta, cut) = CutTransport::new(Box::new(ta));
+    let ctb = CutTransport::wrapping(Box::new(tb), cut.clone());
+    let t = new_transcript();
+    let ca = Chan::over(Box::new(cta), 0, t.clone());
+    let cb = Chan::over(Box::new(ctb), 1, t.clone());
+    let ec = EngineConfig::for_tests(EngineKind::CipherPrune);
+    let mut s = Session::start_over(model, ec, (ca, cb, t)).expect("session start");
+
+    let ok = s.infer(&ids).expect("healthy link serves the request");
+    assert_eq!(ok.logits.len(), 2);
+    assert!(s.poisoned().is_none());
+
+    cut.store(true, Ordering::SeqCst);
+    let err = s.infer(&ids).expect_err("severed link must fail the request");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("disconnected"), "typed NetError surfaced: {msg}");
+    assert!(s.poisoned().is_some());
+
+    let again = s.infer(&ids).expect_err("poisoned session fails fast");
+    assert!(format!("{again:#}").contains("poisoned"));
+}
+
+/// A session whose transport is dead from the start reports a setup error
+/// instead of panicking or hanging.
+#[test]
+fn dead_transport_fails_session_setup_cleanly() {
+    let (w, _ids) = tiny();
+    let model = Arc::new(PreparedModel::prepare(w));
+    let (ta, tb) = MemTransport::pair();
+    let (cta, cut) = CutTransport::new(Box::new(ta));
+    let ctb = CutTransport::wrapping(Box::new(tb), cut.clone());
+    cut.store(true, Ordering::SeqCst); // dead before the first byte
+    let t = new_transcript();
+    let ca = Chan::over(Box::new(cta), 0, t.clone());
+    let cb = Chan::over(Box::new(ctb), 1, t.clone());
+    let ec = EngineConfig::for_tests(EngineKind::CipherPrune);
+    let err = Session::start_over(model, ec, (ca, cb, t))
+        .expect_err("setup over a dead link must error");
+    assert!(format!("{err:#}").contains("setup failed"), "{err:#}");
+}
+
+/// The real two-process topology: spawn `cipherprune party` twice (P0
+/// listening on an ephemeral loopback port, P1 connecting), and check both
+/// complete the same request stream. This is the full stack — processes,
+/// sockets, handshake, framed coalesced wire protocol — in `cargo test`,
+/// with no external network.
+#[test]
+fn two_process_party_subcommand_over_loopback() {
+    let bin = env!("CARGO_BIN_EXE_cipherprune");
+    let common = [
+        "--model",
+        "tiny",
+        "--he-n",
+        "128",
+        "--requests",
+        "2",
+        "--seq",
+        "8",
+        "--seed",
+        "7",
+        "--threads",
+        "1",
+    ];
+    let mut p0 = Command::new(bin)
+        .args(["party", "--role", "p0", "--listen", "127.0.0.1:0"])
+        .args(common)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn P0");
+    // P0 prints its ephemeral address before accepting
+    let mut p0_stdout = BufReader::new(p0.stdout.take().expect("P0 stdout"));
+    let mut addr = String::new();
+    for _ in 0..50 {
+        let mut line = String::new();
+        if p0_stdout.read_line(&mut line).expect("read P0 stdout") == 0 {
+            break;
+        }
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+    assert!(!addr.is_empty(), "P0 must announce its listen address");
+
+    let p1 = Command::new(bin)
+        .args(["party", "--role", "p1", "--connect", &addr])
+        .args(common)
+        .output()
+        .expect("run P1");
+    let p1_out = String::from_utf8_lossy(&p1.stdout).to_string()
+        + &String::from_utf8_lossy(&p1.stderr);
+    assert!(p1.status.success(), "P1 failed:\n{p1_out}");
+
+    let mut p0_rest = String::new();
+    p0_stdout.read_to_string(&mut p0_rest).expect("drain P0 stdout");
+    let status = p0.wait().expect("wait P0");
+    assert!(status.success(), "P0 failed:\n{p0_rest}");
+    assert!(p0_rest.contains("pred"), "P0 prints predictions:\n{p0_rest}");
+    assert!(p0_rest.contains("party P0 done"), "{p0_rest}");
+    assert!(p1_out.contains("party P1 done"), "{p1_out}");
+}

@@ -135,6 +135,14 @@ pub fn bitonic_sort_prune(
     SortPruneOutput { tokens, scores: out_scores, swaps, stages }
 }
 
+/// Preprocessing cost of [`bitonic_sort_prune`] on `n` tokens: one Π_CMP
+/// and one wide MUX per compare-exchange of the fixed O(n log² n) network.
+pub fn demand_bitonic(d: &mut crate::gates::preproc::PreprocDemand, n: usize) {
+    let s = bitonic_swap_count(n) as u64;
+    d.cmp32(s);
+    d.mux(s);
+}
+
 /// Compare-exchange count of a bitonic network on n elements (analysis
 /// helper for Fig. 11 — matches what [`bitonic_sort_prune`] performs).
 pub fn bitonic_swap_count(n: usize) -> usize {

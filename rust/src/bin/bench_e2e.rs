@@ -2,28 +2,38 @@
 //! times prepare / session-setup / infer per engine kind and token length
 //! (single-thread vs host-sized worker pool), the PR-3 **fused-batch
 //! sweep** (B same-bucket requests fused into ONE block-masked pipeline run,
-//! per-request amortized wall), and the PR-4 **flight-coalescing A/B**:
-//! the same request with write coalescing on vs off, recording per-phase
-//! flight counts (coalescing must strictly reduce flights on the
-//! multi-round phases while leaving bytes/msgs/digests untouched). Writes
-//! `BENCH_pr4.json` so successive PRs can track online-phase wall time.
+//! per-request amortized wall), the PR-4 **flight-coalescing A/B**, and the
+//! PR-5 **offline/online phase split**: the same request on a session whose
+//! correlated-randomness pools were preprocessed vs one generating
+//! everything on demand, asserting bit-identical logits and recording
+//! `offline_wall_s` / `online_wall_s` / the on-demand baseline. Writes
+//! `BENCH_pr5.json` so successive PRs can track online-phase wall time.
 //!
 //! Headline records:
 //! - single-thread vs multi-thread `Session::infer` on the longest
 //!   configured sequence (the PR-2 worker-pool record),
 //! - B = 1 vs B = 4 fused amortization on the CipherPrune engine (PR-3),
-//! - coalesced vs uncoalesced total flights + the phase with the largest
-//!   reduction (PR-4 transport-layer record).
+//! - coalesced vs uncoalesced total flights (PR-4 transport-layer record),
+//! - preprocessed online wall vs on-demand wall (PR-5 phase-split record).
 //!
 //! Usage:
 //!   cargo run --release --bin bench_e2e                        # full sweep
 //!   cargo run --release --bin bench_e2e -- --smoke             # CI-sized
 //!   cargo run --release --bin bench_e2e -- --transport tcp     # loopback TCP
 //!   cargo run --release --bin bench_e2e -- --out path/to.json
+//!   cargo run --release --bin bench_e2e -- --smoke --check-against BENCH_baseline.json
 //!
 //! `--transport mem|tcp|sim|sim-wan` selects the channel backend for every
 //! session in the sweep (`sim*` injects NetModel delays — expect wall times
 //! to include them). Results are backend-independent by construction.
+//!
+//! `--check-against <baseline.json>` is the CI regression tripwire: after
+//! the sweep it compares this run against a committed baseline produced by
+//! the same flags and exits nonzero if any fused `amortized_s` regressed by
+//! more than 25%, or if any matching record's online bytes or single-thread
+//! transcript digest drifted (those are host-independent — drift means the
+//! protocol changed, not the machine). Generate the first baseline on a
+//! toolchain host with `--smoke --out BENCH_baseline.json` and commit it.
 //!
 //! PERF: results depend on host core count; `host_threads` is recorded in
 //! the report. The full sweep uses the width-reduced bert-medium proxy
@@ -40,6 +50,10 @@ use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
 use cipherprune::util::bench::fmt_duration;
 use cipherprune::util::{Json, WorkerPool};
 
+fn digest_hex(d: [u64; 2]) -> String {
+    format!("{:016x}:{:016x}", d[0], d[1])
+}
+
 struct RunRecord {
     engine: &'static str,
     seq: usize,
@@ -49,6 +63,9 @@ struct RunRecord {
     setup_s: f64,
     infer_s: f64,
     online_bytes: u64,
+    /// Per-endpoint wire-content digest after the measured infers —
+    /// host/thread independent, so the tripwire can pin it across machines.
+    digest: String,
 }
 
 impl RunRecord {
@@ -62,6 +79,7 @@ impl RunRecord {
             ("setup_s", self.setup_s.into()),
             ("infer_s", self.infer_s.into()),
             ("online_bytes", self.online_bytes.into()),
+            ("digest", self.digest.as_str().into()),
         ])
     }
 }
@@ -131,6 +149,102 @@ fn measure(
         setup_s,
         infer_s,
         online_bytes,
+        digest: digest_hex(session.transcript_digest()),
+    }
+}
+
+/// Offline/online phase split: the same request on a preprocessed session
+/// (pools filled by the schedule-sized dry run, refilled between iters) vs
+/// a session generating all correlated randomness on demand. Logits and
+/// decisions must be bit-identical; only the wall time may differ.
+struct PhaseSplitRecord {
+    engine: &'static str,
+    seq: usize,
+    transport: String,
+    offline_wall_s: f64,
+    online_wall_s: f64,
+    ondemand_wall_s: f64,
+    online_bytes_preproc: u64,
+    online_bytes_ondemand: u64,
+}
+
+impl PhaseSplitRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", self.engine.into()),
+            ("seq", self.seq.into()),
+            ("transport", self.transport.as_str().into()),
+            ("offline_wall_s", self.offline_wall_s.into()),
+            ("online_wall_s", self.online_wall_s.into()),
+            ("ondemand_wall_s", self.ondemand_wall_s.into()),
+            ("online_bytes_preproc", self.online_bytes_preproc.into()),
+            ("online_bytes_ondemand", self.online_bytes_ondemand.into()),
+        ])
+    }
+}
+
+fn measure_phase_split(
+    kind: EngineKind,
+    cfg: &ModelConfig,
+    model: &Arc<PreparedModel>,
+    seq: usize,
+    he_n: usize,
+    iters: usize,
+    transport: &TransportSpec,
+) -> PhaseSplitRecord {
+    let ids = Workload::qnli_like(cfg, seq).batch(1, 7)[0].ids.clone();
+    let mk = || {
+        let ec = EngineConfig::new(kind).he_n(he_n).transport(transport.clone());
+        Session::start(model.clone(), ec).expect("session setup")
+    };
+    // on-demand baseline
+    let mut od = mk();
+    let mut ondemand_wall_s = f64::INFINITY;
+    let mut od_bytes = 0;
+    let mut od_result = None;
+    for _ in 0..iters.max(1) {
+        let r = od.infer(&ids).expect("on-demand infer");
+        ondemand_wall_s = ondemand_wall_s.min(r.wall_s);
+        od_bytes = r.total_stats().bytes;
+        od_result = Some(r);
+    }
+    // preprocessed: pools filled before the first request, refilled between
+    let mut pp = mk();
+    pp.preprocess(&[ids.len()]).expect("preprocess");
+    let mut online_wall_s = f64::INFINITY;
+    let mut pp_bytes = 0;
+    let mut pp_result = None;
+    for _ in 0..iters.max(1) {
+        let r = pp.infer(&ids).expect("preprocessed infer");
+        online_wall_s = online_wall_s.min(r.wall_s);
+        pp_bytes = r.total_stats().bytes;
+        pp_result = Some(r);
+        pp.refill().expect("refill");
+    }
+    let (od_r, pp_r) = (od_result.expect("ran"), pp_result.expect("ran"));
+    assert_eq!(od_r.logits, pp_r.logits, "phase split must not change logits");
+    for (a, b) in od_r.layer_stats.iter().zip(&pp_r.layer_stats) {
+        assert_eq!(a.n_kept, b.n_kept, "phase split must not change pruning");
+        assert_eq!(a.n_high, b.n_high, "phase split must not change reduction");
+    }
+    println!(
+        "  {:<24} seq {:>4}  offline {:>9}  online {:>9}  vs on-demand {:>9} ({:.2}x)",
+        kind.name(),
+        seq,
+        fmt_duration(pp.offline_wall_s()),
+        fmt_duration(online_wall_s),
+        fmt_duration(ondemand_wall_s),
+        if online_wall_s > 0.0 { ondemand_wall_s / online_wall_s } else { 1.0 },
+    );
+    PhaseSplitRecord {
+        engine: kind.name(),
+        seq,
+        transport: transport.label(),
+        offline_wall_s: pp.offline_wall_s(),
+        online_wall_s,
+        ondemand_wall_s,
+        online_bytes_preproc: pp_bytes,
+        online_bytes_ondemand: od_bytes,
     }
 }
 
@@ -253,7 +367,12 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_pr4.json".to_string());
+        .unwrap_or_else(|| "BENCH_pr5.json".to_string());
+    let check_against = args
+        .iter()
+        .position(|a| a == "--check-against")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let transport = args
         .iter()
         .position(|a| a == "--transport")
@@ -335,6 +454,18 @@ fn main() {
     let coalescing =
         measure_coalescing(EngineKind::CipherPrune, &cfg, &model, fused_seq, he_n, &transport);
 
+    // offline/online phase split (the PR-5 record)
+    println!("\nphase split (preprocessed pools vs on-demand generation):");
+    let phase_split = measure_phase_split(
+        EngineKind::CipherPrune,
+        &cfg,
+        &model,
+        fused_seq,
+        he_n,
+        iters,
+        &transport,
+    );
+
     // headline 1: single-thread vs host pool on the longest CipherPrune config
     let top_seq = *seqs.iter().max().unwrap();
     let pick = |threads: usize| {
@@ -380,8 +511,21 @@ fn main() {
         println!("  biggest phase reduction: {phase}  {u} → {c} flights");
     }
 
+    // headline 4: preprocessed online wall vs on-demand
+    let split_speedup = if phase_split.online_wall_s > 0.0 {
+        phase_split.ondemand_wall_s / phase_split.online_wall_s
+    } else {
+        1.0
+    };
+    println!(
+        "phase split on {fused_seq}-token cipherprune: online {} preprocessed vs {} on-demand ({split_speedup:.2}x; offline {})",
+        fmt_duration(phase_split.online_wall_s),
+        fmt_duration(phase_split.ondemand_wall_s),
+        fmt_duration(phase_split.offline_wall_s),
+    );
+
     let report = Json::obj(vec![
-        ("bench", "bench_e2e_pr4".into()),
+        ("bench", "bench_e2e_pr5".into()),
         ("smoke", smoke.into()),
         ("model", cfg.name.as_str().into()),
         ("host_threads", host.into()),
@@ -436,7 +580,124 @@ fn main() {
                 ("amortization", amortization.into()),
             ]),
         ),
+        (
+            "phase_split",
+            Json::obj(vec![
+                ("engine", phase_split.engine.into()),
+                ("seq", phase_split.seq.into()),
+                ("transport", phase_split.transport.as_str().into()),
+                ("offline_wall_s", phase_split.offline_wall_s.into()),
+                ("online_wall_s", phase_split.online_wall_s.into()),
+                ("ondemand_wall_s", phase_split.ondemand_wall_s.into()),
+                ("online_bytes_preproc", phase_split.online_bytes_preproc.into()),
+                ("online_bytes_ondemand", phase_split.online_bytes_ondemand.into()),
+                ("speedup", split_speedup.into()),
+            ]),
+        ),
     ]);
     std::fs::write(&out_path, report.to_string_pretty()).expect("write report");
     println!("wrote {out_path}");
+
+    if let Some(baseline_path) = check_against {
+        let failures = check_regressions(&report, &baseline_path);
+        if !failures.is_empty() {
+            eprintln!("\nREGRESSION CHECK FAILED against {baseline_path}:");
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+        println!("regression check against {baseline_path}: OK");
+    }
+}
+
+/// The CI bench tripwire: compare this run's report against a committed
+/// baseline. Wall-time checks tolerate 25% (runner noise); bytes and the
+/// single-thread transcript digests are host-independent and must match
+/// exactly. Records present only on one side are reported as failures
+/// (a silently shrunk sweep must not pass).
+fn check_regressions(report: &Json, baseline_path: &str) -> Vec<String> {
+    let mut failures = Vec::new();
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("cannot read baseline: {e}")],
+    };
+    let base = match Json::parse(&text) {
+        Ok(b) => b,
+        Err(e) => return vec![format!("cannot parse baseline: {e}")],
+    };
+    let key = |r: &Json| -> String {
+        format!(
+            "{}/seq{}/t{}/{}",
+            r.get("engine").and_then(Json::as_str).unwrap_or("?"),
+            r.get("seq").and_then(Json::as_usize).unwrap_or(0),
+            r.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            r.get("transport").and_then(Json::as_str).unwrap_or("?"),
+        )
+    };
+    // runs: bytes + digest drift, single-thread records only (the baseline
+    // host's pool-sized records need not exist on this host)
+    let base_runs = base.get("runs").and_then(Json::as_arr).unwrap_or(&[]);
+    let cur_runs = report.get("runs").and_then(Json::as_arr).unwrap_or(&[]);
+    for b in base_runs {
+        if b.get("threads").and_then(Json::as_usize) != Some(1) {
+            continue;
+        }
+        let k = key(b);
+        let Some(c) = cur_runs.iter().find(|&c| key(c) == k) else {
+            failures.push(format!("run record {k} missing from current sweep"));
+            continue;
+        };
+        let (bb, cb) = (
+            b.get("online_bytes").and_then(Json::as_u64),
+            c.get("online_bytes").and_then(Json::as_u64),
+        );
+        if bb != cb {
+            failures.push(format!("{k}: online bytes drifted {bb:?} -> {cb:?}"));
+        }
+        let (bd, cd) = (
+            b.get("digest").and_then(Json::as_str),
+            c.get("digest").and_then(Json::as_str),
+        );
+        if bd.is_some() && bd != cd {
+            failures.push(format!("{k}: transcript digest drifted {bd:?} -> {cd:?}"));
+        }
+    }
+    // fused: amortized wall regression (>25%) + bytes drift
+    let base_fused = base.get("fused").and_then(Json::as_arr).unwrap_or(&[]);
+    let cur_fused = report.get("fused").and_then(Json::as_arr).unwrap_or(&[]);
+    for b in base_fused {
+        let bkey = (
+            b.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+            b.get("seq").and_then(Json::as_usize).unwrap_or(0),
+            b.get("batch").and_then(Json::as_usize).unwrap_or(0),
+        );
+        let Some(c) = cur_fused.iter().find(|c| {
+            (
+                c.get("engine").and_then(Json::as_str).unwrap_or("?").to_string(),
+                c.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                c.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            ) == bkey
+        }) else {
+            failures.push(format!("fused record {bkey:?} missing from current sweep"));
+            continue;
+        };
+        let (ba, ca) = (
+            b.get("amortized_s").and_then(Json::as_f64).unwrap_or(0.0),
+            c.get("amortized_s").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+        );
+        if ba > 0.0 && ca > ba * 1.25 {
+            failures.push(format!(
+                "fused {bkey:?}: amortized_wall_s regressed {ba:.4}s -> {ca:.4}s (>25%)"
+            ));
+        }
+        let (bb, cb) = (
+            b.get("online_bytes").and_then(Json::as_u64),
+            c.get("online_bytes").and_then(Json::as_u64),
+        );
+        if bb != cb {
+            failures.push(format!("fused {bkey:?}: online bytes drifted {bb:?} -> {cb:?}"));
+        }
+    }
+    failures
 }

@@ -75,6 +75,14 @@ pub struct EngineConfig {
     /// `false` sends one frame per message: the uncoalesced baseline that
     /// `bench_e2e` compares flight counts against.
     pub coalesce: bool,
+    /// Offline/online split: when set, `Session::start` runs a preprocessing
+    /// phase sized for one batch of requests with these token counts (the
+    /// schedule-driven dry run over the pipeline spec), so the first `infer`
+    /// is online-only. `None` (default) starts with empty pools — every
+    /// request generates its correlated randomness on demand, as before.
+    /// Sessions can also preprocess/refill explicitly at any time
+    /// (`Session::preprocess`/`Session::refill`).
+    pub preprocess_shape: Option<Vec<usize>>,
 }
 
 impl EngineConfig {
@@ -89,6 +97,7 @@ impl EngineConfig {
             threads: None,
             transport: TransportSpec::Mem,
             coalesce: true,
+            preprocess_shape: None,
         }
     }
 
@@ -137,6 +146,13 @@ impl EngineConfig {
     /// Enable/disable wire-frame coalescing (on by default).
     pub fn coalesce(mut self, coalesce: bool) -> Self {
         self.coalesce = coalesce;
+        self
+    }
+
+    /// Preprocess at session start for one batch of requests with these
+    /// token counts (see [`EngineConfig::preprocess_shape`]).
+    pub fn preprocess_for(mut self, lens: &[usize]) -> Self {
+        self.preprocess_shape = Some(lens.to_vec());
         self
     }
 

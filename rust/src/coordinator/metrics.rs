@@ -17,6 +17,9 @@ pub struct EngineMetrics {
     pub runs: u64,
     /// Individual requests served (a fused batch of B counts B).
     pub requests: u64,
+    /// Offline wall spent preprocessing/refilling correlated-randomness
+    /// pools for this engine (outside any request's latency).
+    pub offline_wall_s: f64,
     pub wall_s_total: f64,
     pub bytes_total: u64,
     pub flights_total: u64,
@@ -97,11 +100,20 @@ pub struct MetricsRegistry {
     /// Requests that failed (transport/session errors) instead of returning
     /// a result. Healthy serving keeps this at zero.
     pub failures: u64,
+    /// Background pool refills that failed (the session is poisoned and will
+    /// be replaced — with its banked randomness lost — on the next batch).
+    /// Healthy serving keeps this at zero.
+    pub refill_failures: u64,
 }
 
 impl MetricsRegistry {
     pub fn record(&mut self, engine: &str, r: &RunResult) {
         self.engines.entry(engine.to_string()).or_default().record(r);
+    }
+
+    /// Account offline preprocessing/refill wall to an engine.
+    pub fn record_offline(&mut self, engine: &str, wall_s: f64) {
+        self.engines.entry(engine.to_string()).or_default().offline_wall_s += wall_s;
     }
 
     pub fn get(&self, engine: &str) -> Option<&EngineMetrics> {
@@ -120,13 +132,17 @@ impl MetricsRegistry {
         if self.failures > 0 {
             out.push_str(&format!("failed requests: {}\n", self.failures));
         }
+        if self.refill_failures > 0 {
+            out.push_str(&format!("failed pool refills: {}\n", self.refill_failures));
+        }
         for (name, m) in &self.engines {
             out.push_str(&format!(
-                "{name}: runs={} requests={} mean={:.3}s amortized={:.3}s/req p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",
+                "{name}: runs={} requests={} mean={:.3}s amortized={:.3}s/req offline={:.3}s p95={:.3}s comm={:.1}MB LAN={:.3}s WAN={:.3}s\n",
                 m.runs,
                 m.requests,
                 m.mean_wall_s(),
                 m.amortized_wall_s(),
+                m.offline_wall_s,
                 m.percentile_wall_s(0.95),
                 m.bytes_total as f64 / 1e6,
                 m.modeled_total_s(&NetModel::LAN),

@@ -56,6 +56,44 @@
 //!   latency, leave the default.
 //!   `cargo run --release --bin bench_e2e` records the measured speedup.
 //!
+//! # Offline/online phases
+//!
+//! The paper's headline costs are *online* numbers; the correlated
+//! randomness behind the interactive non-linear protocols is
+//! input-independent and moves off the request path:
+//!
+//! - **What is preprocessable.** Beaver triples (per `TripleMode`), the
+//!   IKNP OT-extension material under Π_CMP/Π_MUX/Π_B2A (banked as random
+//!   OTs, derandomized online with one n-*bit* flips message in place of
+//!   the n×128-bit u-matrix and all PRG/transpose/hash work), and the
+//!   aligned-truncation canonical pads (nonce-keyed, so they pre-expand in
+//!   one parallel pass at batch entry from the previous same-shape batch's
+//!   learned *pad plan* rather than ahead of the request).
+//! - **Sizing model.** [`Session::preprocess`] sizes the pools with a
+//!   schedule-driven dry run over the pipeline's pass descriptors
+//!   ([`PipelineSpec::preproc_demand`](pipeline::PipelineSpec::preproc_demand)):
+//!   per model/sequence/batch shape it counts the triples, comparisons,
+//!   MUXes, B2As, and truncations of every layer pass, as a **sound upper
+//!   bound** (post-prune shapes are data-dependent, so the dry run assumes
+//!   no pruning; surplus material stays valid for later requests). The fill
+//!   is accounted exactly — `filled == demand` — and online consumption is
+//!   double-entry (`drained` from pools + `inline` fallback) per
+//!   [`PreprocReport`].
+//! - **Refill policy.** Pools drain monotonically; when one runs dry the
+//!   gate generates inline, transparently and bit-identically.
+//!   [`Session::refill`] regenerates exactly what was drained since the
+//!   last refill; the [`Router`] runs it on idle [`Router::step`] ticks
+//!   ([`Router::maintain`]) and exposes [`Router::prewarm`] for explicit
+//!   warmup, so a serving loop keeps pools warm between requests.
+//! - **Metrics.** [`Session::offline_wall_s`]/[`Session::online_wall_s`]
+//!   split session wall time; `EngineMetrics::offline_wall_s` aggregates
+//!   per engine; `bench_e2e` records preprocessed-vs-on-demand online
+//!   latency (`offline_wall_s`/`online_wall_s`/`ondemand_wall_s`).
+//!   Preprocessed and on-demand runs produce **bit-identical logits and
+//!   prune/reduce decisions** (every pooled object is reconstruction-exact
+//!   or value-identical to its inline counterpart) — `tests/preproc.rs`
+//!   pins this on the mem and TCP transports.
+//!
 //! # Padding, public lengths, and fused batching
 //!
 //! **Sequence lengths are public in this 2PC setting** — ciphertext counts
@@ -136,6 +174,7 @@ pub mod router;
 pub mod session;
 pub mod types;
 
+pub use crate::gates::preproc::{PoolStats, PreprocDemand, PreprocReport};
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;

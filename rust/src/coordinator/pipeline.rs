@@ -47,16 +47,21 @@
 
 use std::time::Instant;
 
-use crate::baselines::bitonic::bitonic_sort_prune;
+use crate::baselines::bitonic::{bitonic_sort_prune, demand_bitonic};
 use crate::fixed::RingMat;
+use crate::gates::preproc::{PreprocDemand, PreprocReport};
 use crate::nn::{ModelConfig, ThresholdSchedule};
-use crate::protocols::gelu::{pi_gelu_tokens, GeluKind};
-use crate::protocols::layernorm::pi_layernorm;
-use crate::protocols::lut::{exp_table_k, gelu_table_k, pi_pwl, pi_softmax_lut};
-use crate::protocols::matmul::{linear_layer, pi_matmul_shared};
-use crate::protocols::prune::pi_prune;
-use crate::protocols::reduce::pi_reduce;
-use crate::protocols::softmax::{importance_scores, pi_softmax};
+use crate::protocols::gelu::{demand_gelu_tokens, pi_gelu_tokens, GeluKind};
+use crate::protocols::layernorm::{demand_layernorm, pi_layernorm};
+use crate::protocols::lut::{
+    demand_pwl, demand_softmax_lut, exp_table_k, gelu_table_k, pi_pwl, pi_softmax_lut,
+};
+use crate::protocols::matmul::{demand_linear_layer, linear_layer, pi_matmul_shared};
+use crate::protocols::prune::{demand_prune, pi_prune};
+use crate::protocols::reduce::{demand_reduce, pi_reduce};
+use crate::protocols::softmax::{
+    demand_importance_scores, demand_softmax, importance_scores, pi_softmax,
+};
 use crate::protocols::Engine2P;
 
 use super::engine::{EngineConfig, RingLayer, RingWeights};
@@ -167,6 +172,9 @@ pub struct BlockOut {
 pub struct BatchPartyOut {
     pub blocks: Vec<BlockOut>,
     pub phase_wall: Vec<(String, f64)>,
+    /// This endpoint's cumulative preprocessing-pool accounting after the
+    /// run (drives the session's drain-based refill).
+    pub preproc: PreprocReport,
 }
 
 /// What one party returns from a single-request pipeline run (the B = 1
@@ -253,6 +261,13 @@ impl LayerState {
 pub trait LayerPass: Send + Sync {
     fn name(&self) -> &'static str;
     fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState);
+
+    /// Dry-run cost pass: record this pass's correlated-randomness demand
+    /// for layer `li` over per-block token counts `blocks`, as a **sound
+    /// upper bound** (post-prune counts are data-dependent, so the shape
+    /// model never shrinks blocks between layers, every token takes the
+    /// high-degree path, and Π_mask assumes worst-case relocation).
+    fn demand(&self, mcfg: &ModelConfig, li: usize, blocks: &[usize], d: &mut PreprocDemand);
 }
 
 /// SoftMax protocol selector.
@@ -299,6 +314,12 @@ pub enum ReduceSel {
 pub struct EmbedPass;
 
 impl EmbedPass {
+    /// Demand mirror: one fused linear layer over all block rows.
+    pub fn demand(&self, mcfg: &ModelConfig, blocks: &[usize], d: &mut PreprocDemand) {
+        let n_total: u64 = blocks.iter().map(|&n| n as u64).sum();
+        demand_linear_layer(d, n_total, mcfg.dim as u64);
+    }
+
     pub fn run(
         &self,
         e: &mut Engine2P,
@@ -465,6 +486,31 @@ impl LayerPass for AttentionPass {
         st.x = pi_layernorm(e, &xr, p0b(lw, |l| &l.ln1_gamma), p0b(lw, |l| &l.ln1_beta));
         st.clock.mark(format!("layernorm#{li}"));
     }
+
+    fn demand(&self, mcfg: &ModelConfig, _li: usize, blocks: &[usize], d: &mut PreprocDemand) {
+        let (dm, hd, heads) = (mcfg.dim as u64, mcfg.head_dim() as u64, mcfg.heads as u64);
+        let n_total: u64 = blocks.iter().map(|&n| n as u64).sum();
+        for _ in 0..3 {
+            demand_linear_layer(d, n_total, dm); // Q, K, V
+        }
+        let lut_table = match self.softmax {
+            SoftmaxSel::Lut { segments } => Some(exp_table_k(segments)),
+            SoftmaxSel::Poly => None,
+        };
+        for _ in 0..heads {
+            for &nb in blocks {
+                let n = nb as u64;
+                d.trunc(n * n); // QKᵀ rescale
+                match &lut_table {
+                    Some(t) => demand_softmax_lut(d, n, n, t),
+                    None => demand_softmax(d, n, n),
+                }
+                d.trunc(n * hd); // Att·V rescale
+            }
+        }
+        demand_linear_layer(d, n_total, dm); // output projection
+        demand_layernorm(d, n_total, dm); // LN1
+    }
 }
 
 /// Encrypted token pruning (Π_prune/Π_mask, or BOLT's bitonic W.E.) — per
@@ -529,6 +575,23 @@ impl LayerPass for PrunePass {
         }
         st.clock.mark(format!("prune#{li}"));
     }
+
+    fn demand(&self, _mcfg: &ModelConfig, li: usize, blocks: &[usize], d: &mut PreprocDemand) {
+        match self.sel {
+            PruneSel::Progressive => {
+                for &nb in blocks {
+                    demand_prune(d, nb as u64);
+                }
+            }
+            PruneSel::WordElim { at_layer } if li == at_layer => {
+                for &nb in blocks {
+                    demand_importance_scores(d, nb as u64);
+                    demand_bitonic(d, nb);
+                }
+            }
+            _ => {}
+        }
+    }
 }
 
 /// Encrypted polynomial reduction: β mask over each block's kept tokens.
@@ -555,6 +618,14 @@ impl LayerPass for ReducePass {
             blk.stat.n_high = blk.high_mask.iter().filter(|&&b| b).count();
         }
         st.clock.mark(format!("reduce#{li}"));
+    }
+
+    fn demand(&self, _mcfg: &ModelConfig, _li: usize, blocks: &[usize], d: &mut PreprocDemand) {
+        if matches!(self.sel, ReduceSel::Beta) {
+            for &nb in blocks {
+                demand_reduce(d, nb as u64);
+            }
+        }
     }
 }
 
@@ -625,12 +696,42 @@ impl LayerPass for FfnPass {
         st.x = pi_layernorm(e, &xr2, p0b(lw, |l| &l.ln2_gamma), p0b(lw, |l| &l.ln2_beta));
         st.clock.mark(format!("layernorm#{li}"));
     }
+
+    fn demand(&self, mcfg: &ModelConfig, _li: usize, blocks: &[usize], d: &mut PreprocDemand) {
+        let (dm, ffn) = (mcfg.dim as u64, mcfg.ffn_dim as u64);
+        let n_total: u64 = blocks.iter().map(|&n| n as u64).sum();
+        demand_linear_layer(d, n_total, ffn);
+        match self.gelu {
+            GeluSel::Lut { segments } => {
+                let t = gelu_table_k(segments);
+                for &nb in blocks {
+                    demand_pwl(d, nb as u64 * ffn, &t);
+                }
+            }
+            GeluSel::Tokens(kind) => {
+                for &nb in blocks {
+                    demand_gelu_tokens(d, nb as u64, ffn, kind);
+                }
+            }
+        }
+        demand_linear_layer(d, n_total, dm);
+        demand_layernorm(d, n_total, dm); // LN2
+    }
 }
 
 /// Per-block mean-pool + one fused classifier matmul + open logits.
 pub struct ClassifierPass;
 
 impl ClassifierPass {
+    /// Demand mirror: one pooled-mean truncation per block and the fused
+    /// classifier linear layer (the logit opening is plain traffic).
+    pub fn demand(&self, mcfg: &ModelConfig, blocks: &[usize], d: &mut PreprocDemand) {
+        for _ in blocks {
+            d.trunc(mcfg.dim as u64);
+        }
+        demand_linear_layer(d, blocks.len() as u64, mcfg.n_classes as u64);
+    }
+
     pub fn run(
         &self,
         e: &mut Engine2P,
@@ -727,6 +828,27 @@ impl PipelineSpec {
             classify: ClassifierPass,
         }
     }
+
+    /// Schedule-sized dry-run cost pass: how much correlated randomness one
+    /// pipeline run over requests of `lens` tokens consumes, as a sound
+    /// upper bound (see [`LayerPass::demand`]). This is what
+    /// `Session::preprocess` asks the offline phase to pregenerate.
+    pub fn preproc_demand(&self, mcfg: &ModelConfig, lens: &[usize]) -> PreprocDemand {
+        let mut d = PreprocDemand::default();
+        if lens.is_empty() {
+            return d;
+        }
+        // the session degrades empty requests to one pad token
+        let blocks: Vec<usize> = lens.iter().map(|&l| l.max(1)).collect();
+        self.embed.demand(mcfg, &blocks, &mut d);
+        for li in 0..mcfg.n_layers {
+            for pass in &self.layer_passes {
+                pass.demand(mcfg, li, &blocks, &mut d);
+            }
+        }
+        self.classify.demand(mcfg, &blocks, &mut d);
+        d
+    }
 }
 
 /// Drive one party through a fused pipeline batch. Variant-agnostic: every
@@ -796,7 +918,11 @@ pub fn run_pipeline_batch(
         .zip(st.blocks.iter())
         .map(|((lg, ls), blk)| BlockOut { nonce: blk.nonce, logits: lg, layer_stats: ls })
         .collect();
-    BatchPartyOut { blocks: outs, phase_wall: st.clock.into_acc() }
+    BatchPartyOut {
+        blocks: outs,
+        phase_wall: st.clock.into_acc(),
+        preproc: e.mpc.preproc_report(),
+    }
 }
 
 /// Drive one party through the pipeline for a single request (nonce 0) —

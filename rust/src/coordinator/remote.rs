@@ -89,7 +89,9 @@ fn stream_hash(batches: &[Vec<BlockRun>]) -> u64 {
 }
 
 /// Everything else protocol-shaping: the resolved θ/β schedule (artifact
-/// files can differ between machines!), the triple mode, LUT segments.
+/// files can differ between machines!), the triple mode, LUT segments, and
+/// the preprocessing shape — an offline fill is a two-party protocol, so
+/// one process preprocessing while the other does not would desync the MPC.
 fn params_hash(model: &PreparedModel, cfg: &EngineConfig) -> u64 {
     let mut h = Sha256::new();
     let sched = cfg.resolved_schedule(model.weights.config.n_layers);
@@ -98,6 +100,15 @@ fn params_hash(model: &PreparedModel, cfg: &EngineConfig) -> u64 {
     }
     h.update(((cfg.triple_mode == crate::gates::TripleMode::Dealer) as u64).to_le_bytes());
     h.update((cfg.iron_segments as u64).to_le_bytes());
+    match &cfg.preprocess_shape {
+        None => h.update(0u64.to_le_bytes()),
+        Some(lens) => {
+            h.update((1 + lens.len() as u64).to_le_bytes());
+            for &l in lens {
+                h.update((l as u64).to_le_bytes());
+            }
+        }
+    }
     u64::from_le_bytes(h.finalize()[..8].try_into().expect("8 bytes"))
 }
 
@@ -177,6 +188,12 @@ pub fn run_party(
             Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, model.fix, cfg.resolved_pool());
         let spec = PipelineSpec::for_kind(cfg.kind, cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
+        // offline phase, when configured: both processes run it (the
+        // handshake hashed the shape, so they agree) before the first batch
+        if let Some(lens) = &cfg.preprocess_shape {
+            let demand = spec.preproc_demand(&model.weights.config, lens);
+            e.mpc.preprocess(&demand);
+        }
         let mut outs = Vec::with_capacity(normalized.len());
         for blocks in &normalized {
             let rc = RunCtx {
@@ -262,6 +279,51 @@ mod tests {
         assert!(r0.is_err() && r1.is_err());
         let msg = format!("{:#}", r1.unwrap_err());
         assert!(msg.contains("session seed"), "actionable mismatch report: {msg}");
+    }
+
+    /// A preprocessing party pair (offline fill before the request stream)
+    /// reproduces the in-process session bit-for-bit — the offline phase
+    /// must not change any online value.
+    #[test]
+    fn preprocessed_party_pair_matches_plain_session() {
+        let (model, batches) = setup();
+        let lens: Vec<usize> = batches[0].iter().map(|b| b.ids.len()).collect();
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune).preprocess_for(&lens);
+        let (ca, cb, _t) = Chan::pair();
+        let (m0, e0) = (model.clone(), ec.clone());
+        let b0 = batches.clone();
+        let h = std::thread::spawn(move || run_party(PartyId::P0, ca, &m0, &e0, &b0));
+        let s1 = run_party(PartyId::P1, cb, &model, &ec, &batches).expect("P1");
+        let s0 = h.join().expect("P0 thread").expect("P0");
+        assert_eq!(s1.batches.len(), s0.batches.len());
+
+        let plain = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let mut session =
+            crate::coordinator::Session::start(model.clone(), plain).expect("session");
+        for (bi, batch) in batches.iter().enumerate() {
+            let rs = session.infer_batch(batch).expect("infer");
+            assert_eq!(
+                rs[0].logits, s0.batches[bi].blocks[0].logits,
+                "preprocessed two-process run must reproduce the plain session"
+            );
+        }
+    }
+
+    /// One process preprocessing while the other does not would desync the
+    /// MPC — the handshake rejects it up front.
+    #[test]
+    fn handshake_rejects_mismatched_preprocess_shape() {
+        let (model, batches) = setup();
+        let ec0 = EngineConfig::for_tests(EngineKind::CipherPrune).preprocess_for(&[16]);
+        let ec1 = EngineConfig::for_tests(EngineKind::CipherPrune);
+        let (ca, cb, _t) = Chan::pair();
+        let (m0, b0) = (model.clone(), batches.clone());
+        let h = std::thread::spawn(move || run_party(PartyId::P0, ca, &m0, &ec0, &b0));
+        let r1 = run_party(PartyId::P1, cb, &model, &ec1, &batches);
+        let r0 = h.join().expect("P0 thread");
+        assert!(r0.is_err() && r1.is_err());
+        let msg = format!("{:#}", r1.unwrap_err());
+        assert!(msg.contains("protocol parameters"), "actionable report: {msg}");
     }
 
     /// Two processes that both claim P0 are caught by the role field.

@@ -144,6 +144,77 @@ impl Router {
         ec.threads(threads).transport(self.cfg.transport.clone())
     }
 
+    /// Grow `kind`'s session pool to `want` live sessions, reusing the ones
+    /// already cached. Seeds derive from the monotonic per-kind setup count
+    /// (never the pool size): concurrent and replacement sessions must not
+    /// share dealer/OT randomness streams.
+    fn grow_pool(&mut self, kind: EngineKind, want: usize) -> Result<(), String> {
+        let ec0 = self.engine_config(kind, 0);
+        let pool = self.sessions.entry(kind).or_default();
+        while pool.len() < want {
+            let seq = self.setups_by_kind.entry(kind).or_insert(0);
+            let seed = (0xBA7C_u64 ^ (kind.ordinal() << 16)).wrapping_mul(*seq + 1);
+            *seq += 1;
+            let ec = EngineConfig { seed, ..ec0.clone() };
+            match Session::start(self.model.clone(), ec) {
+                Ok(s) => {
+                    pool.push(s);
+                    self.metrics.session_setups += 1;
+                }
+                Err(e) => return Err(format!("session setup failed: {e:#}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Offline prewarm: grow `kind`'s pool to `slots` sessions (bounded by
+    /// the worker budget) and preprocess each for one batch of requests
+    /// with `lens` tokens, so the first real batch pays online cost only.
+    pub fn prewarm(
+        &mut self,
+        kind: EngineKind,
+        lens: &[usize],
+        slots: usize,
+    ) -> Result<(), String> {
+        let want = slots.clamp(1, self.cfg.workers.max(1));
+        self.grow_pool(kind, want)?;
+        let t0 = Instant::now();
+        if let Some(pool) = self.sessions.get_mut(&kind) {
+            for s in pool.iter_mut() {
+                s.preprocess(lens).map_err(|e| format!("prewarm failed: {e:#}"))?;
+            }
+        }
+        self.metrics.record_offline(kind.name(), t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Background-warmth hook: top every cached session's randomness pools
+    /// back up to their preprocessed levels (exact drain-based refill; a
+    /// no-op for sessions that never drained anything). Runs between
+    /// batches — [`Router::step`] calls it whenever no batch is ready, so a
+    /// serving loop keeps pools warm with its idle ticks.
+    pub fn maintain(&mut self) {
+        for (kind, pool) in self.sessions.iter_mut() {
+            let t0 = Instant::now();
+            let mut refilled = false;
+            for s in pool.iter_mut() {
+                if s.poisoned().is_none() {
+                    match s.refill() {
+                        Ok(d) => refilled |= !d.is_empty(),
+                        // the session is now poisoned; the next batch evicts
+                        // and replaces it — make that visible instead of
+                        // letting it read as an unexplained session_setups
+                        // increment
+                        Err(_) => self.metrics.refill_failures += 1,
+                    }
+                }
+            }
+            if refilled {
+                self.metrics.record_offline(kind.name(), t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+
     /// Submit a request (queued until a batch releases).
     /// Err = rejected: too long for the policy, or its id is already in
     /// flight. Duplicate ids would corrupt latency accounting and response
@@ -205,27 +276,8 @@ impl Router {
         // pool and, if the pool stays empty, fails the kind's requests
         let mut setup_errors: HashMap<EngineKind, String> = HashMap::new();
         for (kind, &want) in &alloc {
-            let ec0 = self.engine_config(*kind, 0);
-            let pool = self.sessions.entry(*kind).or_default();
-            while pool.len() < want {
-                // distinct per kind AND per lifetime-setup: concurrent (and
-                // replacement) sessions must not share dealer/OT randomness
-                // streams, so the seed multiplier is the monotonic per-kind
-                // setup count, never the current pool size
-                let seq = self.setups_by_kind.entry(*kind).or_insert(0);
-                let seed = (0xBA7C_u64 ^ (kind.ordinal() << 16)).wrapping_mul(*seq + 1);
-                *seq += 1;
-                let ec = EngineConfig { seed, ..ec0.clone() };
-                match Session::start(self.model.clone(), ec) {
-                    Ok(s) => {
-                        pool.push(s);
-                        self.metrics.session_setups += 1;
-                    }
-                    Err(e) => {
-                        setup_errors.insert(*kind, format!("session setup failed: {e:#}"));
-                        break;
-                    }
-                }
+            if let Err(e) = self.grow_pool(*kind, want) {
+                setup_errors.insert(*kind, e);
             }
         }
         // execute: each session slot FUSES its stride of its kind's jobs
@@ -316,11 +368,15 @@ impl Router {
             .collect()
     }
 
-    /// Release and execute at most one ready batch.
+    /// Release and execute at most one ready batch; with nothing ready, use
+    /// the idle tick to refill session randomness pools ([`maintain`](Self::maintain)).
     pub fn step(&mut self) -> Vec<Response> {
         match self.batcher.next_batch(Instant::now()) {
             Some(b) => self.run_batch(b),
-            None => vec![],
+            None => {
+                self.maintain();
+                vec![]
+            }
         }
     }
 

@@ -15,6 +15,18 @@
 //! fused batch reproduces each member's solo results bit-for-bit (aligned
 //! truncation keys the canonical streams by the caller-supplied nonce).
 //!
+//! # Offline/online phase split
+//!
+//! Beyond the one-time setup, a session can move the *correlated
+//! randomness* of the online protocols off the request path:
+//! [`Session::preprocess`] fills pools of Beaver triples and OT-extension
+//! material sized by a schedule-driven dry run
+//! (`PipelineSpec::preproc_demand`), [`Session::refill`] tops them back up
+//! by exactly what was drained, and `infer*` consumes them transparently
+//! (an empty pool falls back to on-demand generation, bit-identically).
+//! [`Session::offline_wall_s`]/[`Session::online_wall_s`] split the cost;
+//! [`Session::preproc_reports`] exposes the exact pool accounting.
+//!
 //! Per-batch traffic is the transcript delta since the previous batch, so
 //! [`RunResult::phases`] keeps the same per-protocol labels as the one-shot
 //! path while the one-time setup traffic is reported separately via
@@ -46,6 +58,7 @@ use std::time::Instant;
 
 use anyhow::Context;
 
+use crate::gates::preproc::{PreprocDemand, PreprocReport};
 use crate::net::{panic_to_error, Chan, PhaseStats, SharedTranscript};
 use crate::party::{PartyCtx, PartyId};
 use crate::protocols::Engine2P;
@@ -57,13 +70,26 @@ use super::pipeline::{
 };
 use super::types::{EngineKind, LayerStat, RunResult};
 
+/// Work dispatched to a party thread: an online fused batch, or an offline
+/// preprocessing phase filling the correlated-randomness pools.
+enum PartyJob {
+    Infer(Vec<BlockRun>),
+    Preprocess(PreprocDemand),
+}
+
+/// What a party thread sends back per job.
+enum PartyReply {
+    Batch(Box<BatchPartyOut>),
+    Preproc(Box<PreprocReport>),
+}
+
 fn spawn_party(
     id: PartyId,
     ch: Chan,
     cfg: EngineConfig,
     model: Arc<PreparedModel>,
-    job_rx: Receiver<Vec<BlockRun>>,
-    out_tx: Sender<anyhow::Result<BatchPartyOut>>,
+    job_rx: Receiver<PartyJob>,
+    out_tx: Sender<anyhow::Result<PartyReply>>,
     ready_tx: Sender<Result<(), String>>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
@@ -86,15 +112,21 @@ fn spawn_party(
         };
         let spec = PipelineSpec::for_kind(cfg.kind, &cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
-        while let Ok(blocks) = job_rx.recv() {
-            let rc = RunCtx {
-                cfg: &cfg,
-                mcfg: &model.weights.config,
-                ring_w: &model.ring,
-                schedule: &schedule,
-            };
-            let out = catch_unwind(AssertUnwindSafe(|| {
-                run_pipeline_batch(&mut e, &rc, &spec, &blocks)
+        while let Ok(job) = job_rx.recv() {
+            let out = catch_unwind(AssertUnwindSafe(|| match job {
+                PartyJob::Infer(blocks) => {
+                    let rc = RunCtx {
+                        cfg: &cfg,
+                        mcfg: &model.weights.config,
+                        ring_w: &model.ring,
+                        schedule: &schedule,
+                    };
+                    PartyReply::Batch(Box::new(run_pipeline_batch(&mut e, &rc, &spec, &blocks)))
+                }
+                PartyJob::Preprocess(demand) => {
+                    e.mpc.preprocess(&demand);
+                    PartyReply::Preproc(Box::new(e.mpc.preproc_report()))
+                }
             }));
             match out {
                 Ok(o) => {
@@ -117,8 +149,8 @@ fn spawn_party(
 
 struct TwoParty {
     transcript: SharedTranscript,
-    job_tx: Vec<Sender<Vec<BlockRun>>>,
-    out_rx: Vec<Receiver<anyhow::Result<BatchPartyOut>>>,
+    job_tx: Vec<Sender<PartyJob>>,
+    out_rx: Vec<Receiver<anyhow::Result<PartyReply>>>,
     handles: Vec<JoinHandle<()>>,
     /// Cumulative transcript snapshot at the end of the previous batch
     /// (initially: the setup traffic).
@@ -138,6 +170,15 @@ pub struct Session {
     inner: Option<TwoParty>,
     runs: u64,
     requests: u64,
+    /// Cumulative wall time of preprocessing/refill phases (offline).
+    offline_wall_s: f64,
+    /// Cumulative wall time of `infer*` calls (online).
+    online_wall_s: f64,
+    /// Latest pool accounting per party (updated after every job).
+    last_reports: [PreprocReport; 2],
+    /// P0's cumulative (triples, rot_send, rot_recv) drain counters at the
+    /// last refill — the drain-based refill regenerates exactly the delta.
+    refill_mark: (u64, u64, u64),
 }
 
 impl Session {
@@ -148,11 +189,26 @@ impl Session {
     /// socket) or either party fails setup.
     pub fn start(model: Arc<PreparedModel>, cfg: EngineConfig) -> anyhow::Result<Session> {
         if cfg.kind == EngineKind::Plaintext {
-            return Ok(Session { cfg, model, inner: None, runs: 0, requests: 0 });
+            return Ok(Self::oracle(cfg, model));
         }
         let chans = Chan::pair_over(&cfg.transport)
             .with_context(|| format!("building {} transport", cfg.transport.label()))?;
         Self::start_over(model, cfg, chans)
+    }
+
+    /// The no-crypto plaintext-oracle session (every offline API no-ops).
+    fn oracle(cfg: EngineConfig, model: Arc<PreparedModel>) -> Session {
+        Session {
+            cfg,
+            model,
+            inner: None,
+            runs: 0,
+            requests: 0,
+            offline_wall_s: 0.0,
+            online_wall_s: 0.0,
+            last_reports: [PreprocReport::default(), PreprocReport::default()],
+            refill_mark: (0, 0, 0),
+        }
     }
 
     /// [`start`](Self::start) over a caller-built channel pair — custom or
@@ -166,7 +222,7 @@ impl Session {
         if cfg.kind == EngineKind::Plaintext {
             // the oracle has no two-party protocol — same early-out as
             // `start` (the caller's channel pair is simply dropped)
-            return Ok(Session { cfg, model, inner: None, runs: 0, requests: 0 });
+            return Ok(Self::oracle(cfg, model));
         }
         let (mut ca, mut cb, transcript) = chans;
         ca.set_coalesce(cfg.coalesce);
@@ -198,7 +254,7 @@ impl Session {
             t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
         };
         let setup_phases = seen.iter().map(|(k, v)| (k.clone(), *v)).collect();
-        Ok(Session {
+        let mut session = Session {
             cfg,
             model,
             inner: Some(TwoParty {
@@ -213,7 +269,19 @@ impl Session {
             }),
             runs: 0,
             requests: 0,
-        })
+            offline_wall_s: 0.0,
+            online_wall_s: 0.0,
+            last_reports: [PreprocReport::default(), PreprocReport::default()],
+            refill_mark: (0, 0, 0),
+        };
+        // schedule-sized preprocessing at session start, when configured —
+        // the first request then pays online cost only
+        if let Some(lens) = session.cfg.preprocess_shape.clone() {
+            session
+                .preprocess(&lens)
+                .context("preprocessing at session start")?;
+        }
+        Ok(session)
     }
 
     pub fn kind(&self) -> EngineKind {
@@ -317,21 +385,20 @@ impl Session {
         // which errors the peer out of any blocking receive — so both
         // collections below terminate.
         let sent = [
-            tp.job_tx[0].send(blocks.clone()).is_ok(),
-            tp.job_tx[1].send(blocks).is_ok(),
+            tp.job_tx[0].send(PartyJob::Infer(blocks.clone())).is_ok(),
+            tp.job_tx[1].send(PartyJob::Infer(blocks)).is_ok(),
         ];
         let mut first_err: Option<String> = None;
-        let mut p0_out: Option<BatchPartyOut> = None;
+        let mut outs: [Option<Box<BatchPartyOut>>; 2] = [None, None];
         for (i, &was_sent) in sent.iter().enumerate() {
             if !was_sent {
                 first_err.get_or_insert(format!("P{i} session worker is gone"));
                 continue;
             }
             match tp.out_rx[i].recv() {
-                Ok(Ok(out)) => {
-                    if i == 0 {
-                        p0_out = Some(out);
-                    }
+                Ok(Ok(PartyReply::Batch(out))) => outs[i] = Some(out),
+                Ok(Ok(PartyReply::Preproc(_))) => {
+                    first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
                 }
                 Ok(Err(e)) => {
                     first_err.get_or_insert(format!("P{i}: {e:#}"));
@@ -345,10 +412,15 @@ impl Session {
             tp.poisoned = Some(msg.clone());
             anyhow::bail!("inference failed: {msg}");
         }
-        let p0 = p0_out.expect("P0 result present when no party failed");
+        let p0 = *outs[0].take().expect("P0 result present when no party failed");
+        if let Some(p1) = outs[1].take() {
+            self.last_reports[1] = p1.preproc.clone();
+        }
+        self.last_reports[0] = p0.preproc.clone();
         self.runs += 1;
         self.requests += p0.blocks.len() as u64;
         let wall_s = t0.elapsed().as_secs_f64();
+        self.online_wall_s += wall_s;
         // per-batch traffic = transcript delta since the previous batch
         let snap: BTreeMap<String, PhaseStats> = {
             let t = tp.transcript.lock().unwrap();
@@ -384,6 +456,117 @@ impl Session {
                 }
             })
             .collect())
+    }
+
+    /// Cumulative wall time spent in preprocessing/refill phases (offline).
+    pub fn offline_wall_s(&self) -> f64 {
+        self.offline_wall_s
+    }
+
+    /// Cumulative wall time spent serving `infer*` calls (online).
+    pub fn online_wall_s(&self) -> f64 {
+        self.online_wall_s
+    }
+
+    /// Latest pool accounting of the two parties (`[P0, P1]`), updated after
+    /// every infer/preprocess job. All-zero until the first job.
+    pub fn preproc_reports(&self) -> &[PreprocReport; 2] {
+        &self.last_reports
+    }
+
+    /// Schedule-sized dry run: the correlated-randomness demand of ONE fused
+    /// batch of requests with `lens` tokens each, from the pipeline spec's
+    /// cost pass (a sound upper bound — see `PipelineSpec::preproc_demand`).
+    pub fn preproc_demand(&self, lens: &[usize]) -> PreprocDemand {
+        if self.cfg.kind == EngineKind::Plaintext {
+            return PreprocDemand::default();
+        }
+        let spec = PipelineSpec::for_kind(self.cfg.kind, &self.cfg);
+        spec.preproc_demand(self.model.config(), lens)
+    }
+
+    /// Offline phase: pregenerate the correlated randomness for one batch of
+    /// requests with `lens` tokens each (Beaver triples + OT-extension
+    /// material; truncation pads pre-expand per batch from the learned pad
+    /// plan since they are nonce-keyed). Subsequent `infer*` calls drain the
+    /// pools and fall back on demand transparently if they run dry. Returns
+    /// the demand that was banked. No-op for the plaintext oracle.
+    pub fn preprocess(&mut self, lens: &[usize]) -> anyhow::Result<PreprocDemand> {
+        let demand = self.preproc_demand(lens);
+        self.preprocess_with(&demand)?;
+        Ok(demand)
+    }
+
+    /// [`preprocess`](Self::preprocess) with an explicit demand (tests,
+    /// custom sizing policies, drain-based refill).
+    pub fn preprocess_with(&mut self, demand: &PreprocDemand) -> anyhow::Result<()> {
+        let Some(tp) = self.inner.as_mut() else {
+            return Ok(()); // plaintext oracle: nothing to pregenerate
+        };
+        if let Some(msg) = &tp.poisoned {
+            anyhow::bail!("session poisoned by an earlier failure: {msg}");
+        }
+        if demand.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let sent = [
+            tp.job_tx[0].send(PartyJob::Preprocess(demand.clone())).is_ok(),
+            tp.job_tx[1].send(PartyJob::Preprocess(demand.clone())).is_ok(),
+        ];
+        let mut first_err: Option<String> = None;
+        for (i, &was_sent) in sent.iter().enumerate() {
+            if !was_sent {
+                first_err.get_or_insert(format!("P{i} session worker is gone"));
+                continue;
+            }
+            match tp.out_rx[i].recv() {
+                Ok(Ok(PartyReply::Preproc(report))) => self.last_reports[i] = *report,
+                Ok(Ok(PartyReply::Batch(_))) => {
+                    first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(format!("P{i}: {e:#}"));
+                }
+                Err(_) => {
+                    first_err.get_or_insert(format!("P{i} session worker died preprocessing"));
+                }
+            }
+        }
+        if let Some(msg) = first_err {
+            tp.poisoned = Some(msg.clone());
+            anyhow::bail!("preprocessing failed: {msg}");
+        }
+        // keep the per-batch online deltas clean: preproc traffic belongs to
+        // the offline ledger, like setup
+        tp.seen = {
+            let t = tp.transcript.lock().unwrap();
+            t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+        };
+        self.offline_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Drain-based refill (the background-warmth hook): regenerate exactly
+    /// what the online phase has drained from the pools since the last
+    /// refill, restoring them to their preprocessed levels. Cheap no-op when
+    /// nothing was drained. The router calls this between batches.
+    pub fn refill(&mut self) -> anyhow::Result<PreprocDemand> {
+        let r = &self.last_reports[0];
+        let demand = PreprocDemand {
+            triples: r.triples.drained - self.refill_mark.0,
+            // P0's send pool serves the P0-as-extension-sender direction
+            rot_p0s: r.rot_send.drained - self.refill_mark.1,
+            rot_p1s: r.rot_recv.drained - self.refill_mark.2,
+            pad_words: 0,
+        };
+        let mark = (r.triples.drained, r.rot_send.drained, r.rot_recv.drained);
+        if demand.is_empty() {
+            return Ok(demand);
+        }
+        self.preprocess_with(&demand)?;
+        self.refill_mark = mark;
+        Ok(demand)
     }
 
     /// Serve one request (the B = 1 batch with caller-nonce 0). Safe for

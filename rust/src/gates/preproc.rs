@@ -1,0 +1,364 @@
+//! Offline/online phase split: pools of preprocessed correlated randomness.
+//!
+//! CipherPrune's headline numbers are *online* inference costs; the
+//! correlated randomness behind the interactive non-linear protocols —
+//! Beaver triples, the IKNP OT-extension material under Π_CMP / Π_MUX /
+//! Π_B2A, and the aligned-truncation canonical pads — is input-independent
+//! and can be generated before any request arrives (standard 2PC practice,
+//! CrypTFlow2/SIRNN lineage). This module holds the types of that split:
+//!
+//! - [`PreprocDemand`] — how much of each kind of material a workload shape
+//!   needs. Computed by a dry-run cost pass over the pipeline's pass
+//!   descriptors (`PipelineSpec::preproc_demand`): gate-level counters here,
+//!   protocol-level mirrors co-located with each protocol
+//!   (`protocols::*::demand_*`). The counts are **sound upper bounds** for a
+//!   shape: post-prune token counts are data-dependent, so the dry run
+//!   assumes no pruning downstream and worst-case relocation work inside
+//!   Π_mask — leftover material stays valid for later requests.
+//! - [`PreprocStore`] — the per-party pools owned by `gates::Mpc` (Beaver
+//!   triples per `TripleMode`, canonical truncation pads keyed by
+//!   `(nonce, op-counter)`, and the learned pad plan). The ROT pools live
+//!   next to the extension state in `ot::OtCtx` as [`RotPools`].
+//! - [`PoolStats`] / [`PreprocReport`] — exact double-entry accounting:
+//!   `filled` is what preprocessing banked (always equal to the demand it
+//!   was asked for), `drained` what the online phase took from a pool, and
+//!   `inline` what was generated on demand at the point of use (the
+//!   transparent fallback when a pool runs dry). `drained + inline` is the
+//!   measured demand of the traffic actually served, which drives the
+//!   session's exact drain-based refill.
+//!
+//! Bit-consistency: every pooled object is either consumed only through
+//! reconstruction-exact gates (triples, ROTs after derandomization) or is
+//! the *identical* value the inline path would compute (canonical pads), so
+//! preprocessed and on-demand sessions produce bit-identical logits and
+//! prune/reduce decisions — pinned by `tests/preproc.rs`.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::fixed::Ring;
+
+/// Double-entry counters of one pool. Units are instances (triples, ROTs)
+/// or ring words (pads).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Banked by the offline phase.
+    pub filled: u64,
+    /// Served from the pool by the online phase.
+    pub drained: u64,
+    /// Generated on demand at the point of use (pool empty or too small —
+    /// the transparent fallback; also the whole story for a session that
+    /// never preprocessed).
+    pub inline: u64,
+}
+
+impl PoolStats {
+    /// Total demand observed online, however it was served.
+    pub fn demanded(&self) -> u64 {
+        self.drained + self.inline
+    }
+}
+
+/// How much correlated randomness a workload shape consumes, in the four
+/// pooled currencies. `rot_p0s`/`rot_p1s` count IKNP extension instances by
+/// *direction* (which party acts as extension sender) — each party banks its
+/// own half of both directions.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PreprocDemand {
+    /// Beaver triples (generated under the session's `TripleMode`).
+    pub triples: u64,
+    /// Random-OT instances with P0 as extension sender.
+    pub rot_p0s: u64,
+    /// Random-OT instances with P1 as extension sender.
+    pub rot_p1s: u64,
+    /// Aligned-truncation pad words (P1-side; informational — pads are keyed
+    /// by the request nonce, so they pre-expand per batch from the learned
+    /// pad plan rather than from this count).
+    pub pad_words: u64,
+}
+
+impl PreprocDemand {
+    pub fn is_empty(&self) -> bool {
+        self.triples == 0 && self.rot_p0s == 0 && self.rot_p1s == 0
+    }
+
+    pub fn add(&mut self, other: &PreprocDemand) {
+        self.triples += other.triples;
+        self.rot_p0s += other.rot_p0s;
+        self.rot_p1s += other.rot_p1s;
+        self.pad_words += other.pad_words;
+    }
+
+    // ---- gate-level cost mirrors (see `gates::Mpc` / `gates::cmp`) ----
+
+    /// One Beaver multiplication batch of `n` elements (`Mpc::mul_vec`).
+    pub fn mul(&mut self, n: u64) {
+        self.triples += n;
+    }
+
+    /// One truncation of `n` elements (`Mpc::trunc_vec` under alignment —
+    /// P1 draws one canonical pad word per element).
+    pub fn trunc(&mut self, n: u64) {
+        self.pad_words += n;
+    }
+
+    /// Fixed-point multiply + rescale (`Engine2P::mul_fix`).
+    pub fn mul_fix(&mut self, n: u64) {
+        self.mul(n);
+        self.trunc(n);
+    }
+
+    /// Boolean AND batch (`Mpc::and_bits`): one GF(2) COT in each direction.
+    pub fn and(&mut self, n: u64) {
+        self.rot_p0s += n;
+        self.rot_p1s += n;
+    }
+
+    /// Boolean→arithmetic conversion (`Mpc::b2a`): P0 is the COT sender.
+    pub fn b2a(&mut self, n: u64) {
+        self.rot_p0s += n;
+    }
+
+    /// MUX / select of `n` instances (`Mpc::mux`/`mux_wide`): one wide COT
+    /// per direction; the ROT count is per instance, independent of width.
+    pub fn mux(&mut self, n: u64) {
+        self.rot_p0s += n;
+        self.rot_p1s += n;
+    }
+
+    /// One comparison batch over the low `bits` of `n` elements
+    /// (`Mpc::cmp_gt*` → millionaires over `bits − 1` carry bits): P0 sends
+    /// one 1-of-16 OT per 4-bit leaf (4 ROTs each), and the log-depth
+    /// combine tree ANDs `2(leaves − 1)` bit pairs per element.
+    pub fn cmp_bits(&mut self, n: u64, bits: u32) {
+        assert!(bits >= 2, "comparison needs at least one carry bit");
+        let leaves = u64::from(bits - 1).div_ceil(4);
+        self.rot_p0s += n * leaves * 4;
+        self.and(2 * n * leaves.saturating_sub(1));
+    }
+
+    /// The default fixed-point comparison domain (`gates::cmp::CMP_BITS`).
+    pub fn cmp32(&mut self, n: u64) {
+        self.cmp_bits(n, super::cmp::CMP_BITS);
+    }
+}
+
+/// Random-OT pools, one per extension direction of this party: `send` holds
+/// `(m0, m1)` pairs for the direction where this party is extension sender,
+/// `recv` holds `(random choice, m_choice)` singles for the other. Lives in
+/// `ot::OtCtx`; filled by `Mpc::preprocess`, drained by
+/// `rot_send`/`rot_recv` via beaver-style derandomization (the receiver
+/// flips its pooled random choices to the call's real choices with one
+/// n-bit message — 128× less online traffic than the inline u-matrix, and
+/// none of the PRG/transpose/hash work).
+#[derive(Default)]
+pub struct RotPools {
+    pub(crate) send: VecDeque<(u128, u128)>,
+    pub(crate) recv: VecDeque<(bool, u128)>,
+    pub send_stats: PoolStats,
+    pub recv_stats: PoolStats,
+    /// While set, `rot_send`/`rot_recv` bypass the pools and run the inline
+    /// extension without counting it as online demand — the offline triple
+    /// fill runs under this guard so it never eats banked ROTs.
+    pub(crate) suspend: bool,
+}
+
+/// The `Mpc`-side pools: Beaver triples and canonical truncation pads (the
+/// ROT pools sit in `ot::OtCtx` as [`RotPools`]).
+#[derive(Default)]
+pub struct PreprocStore {
+    pub(crate) triples: VecDeque<(Ring, Ring, Ring)>,
+    pub triple_stats: PoolStats,
+    /// Pre-expanded canonical pads keyed by `(block nonce, op counter)`.
+    /// P1-only (P0 receives the reshare difference, it never draws pads).
+    pub(crate) pads: HashMap<(u64, u64), Vec<Ring>>,
+    pub pad_stats: PoolStats,
+    /// Truncation trace of the latest aligned run — per block slot, the
+    /// `(op counter, element count)` sequence. The next batch with the same
+    /// block count pre-expands all its pads in one parallel pass at
+    /// `align_begin` (nonces are known there), instead of serially inline.
+    pub(crate) pad_plan: Option<Vec<Vec<(u64, usize)>>>,
+    pub(crate) pad_trace: Vec<Vec<(u64, usize)>>,
+}
+
+/// Snapshot of one party's pool accounting (cumulative since session start).
+#[derive(Clone, Debug, Default)]
+pub struct PreprocReport {
+    pub triples: PoolStats,
+    pub triples_avail: u64,
+    /// This party's extension-sender direction.
+    pub rot_send: PoolStats,
+    pub rot_send_avail: u64,
+    /// This party's extension-receiver direction.
+    pub rot_recv: PoolStats,
+    pub rot_recv_avail: u64,
+    /// Canonical pad words (meaningful on P1).
+    pub pads: PoolStats,
+    pub pads_avail: u64,
+}
+
+impl PreprocReport {
+    /// `true` once any pool has been filled by an offline phase.
+    pub fn preprocessed(&self) -> bool {
+        self.triples.filled > 0 || self.rot_send.filled > 0 || self.rot_recv.filled > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::run_mpc;
+    use super::super::TripleMode;
+    use super::*;
+
+    #[test]
+    fn demand_counters_compose() {
+        let mut d = PreprocDemand::default();
+        d.mul_fix(10);
+        assert_eq!(d.triples, 10);
+        assert_eq!(d.pad_words, 10);
+        d.cmp32(5);
+        // 8 leaves of 4 ROTs on the P0-sender direction + 14 ANDs/elem
+        assert_eq!(d.rot_p0s, 5 * 32 + 5 * 14);
+        assert_eq!(d.rot_p1s, 5 * 14);
+        let mut e = PreprocDemand::default();
+        e.add(&d);
+        assert_eq!(e, d);
+        assert!(!d.is_empty());
+        assert!(PreprocDemand::default().is_empty());
+    }
+
+    #[test]
+    fn pooled_triples_are_valid_and_accounted() {
+        for mode in [TripleMode::Dealer, TripleMode::Ot] {
+            let (out0, out1) = run_mpc(41, mode, |m| {
+                let d = PreprocDemand { triples: 24, ..Default::default() };
+                m.preprocess(&d);
+                let t = m.triples(24);
+                (t, m.preproc_report())
+            });
+            let ((t0, r0), (t1, r1)) = (out0, out1);
+            for i in 0..24 {
+                let a = t0[i].0.wrapping_add(t1[i].0);
+                let b = t0[i].1.wrapping_add(t1[i].1);
+                let c = t0[i].2.wrapping_add(t1[i].2);
+                assert_eq!(c, a.wrapping_mul(b), "mode={mode:?} i={i}");
+            }
+            for r in [&r0, &r1] {
+                assert_eq!(r.triples.filled, 24);
+                assert_eq!(r.triples.drained, 24);
+                assert_eq!(r.triples.inline, 0);
+                assert_eq!(r.triples_avail, 0);
+            }
+        }
+    }
+
+    /// A comparison served entirely from preprocessed ROT pools sized by the
+    /// gate-level demand mirror: correct result, zero inline fallback, and
+    /// the pools drain to exactly empty — the counts match the protocol.
+    #[test]
+    fn cmp_demand_covers_one_comparison_exactly() {
+        let fx = crate::fixed::Fix::default();
+        let xs = [-2.0f64, -0.01, 0.0, 0.01, 3.0];
+        let theta = fx.enc(0.5);
+        let enc: Vec<u64> = xs.iter().map(|&x| fx.enc(x)).collect();
+        let mut d = PreprocDemand::default();
+        d.cmp32(enc.len() as u64);
+        let ((s0, r0), (s1, r1)) = run_mpc(42, TripleMode::Ot, move |m| {
+            m.preprocess(&d);
+            let mut prg = m.ctx.dealer_prg("preproc-cmp");
+            let r: Vec<u64> = (0..enc.len()).map(|_| prg.next_u64()).collect();
+            let mine: Vec<u64> = if m.is_p0() {
+                enc.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect()
+            } else {
+                r.clone()
+            };
+            let s = m.cmp_gt_const(&mine, theta);
+            (s, m.preproc_report())
+        });
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!((s0[i] ^ s1[i]) == 1, x > 0.5, "x={x}");
+        }
+        for r in [&r0, &r1] {
+            assert_eq!(r.rot_send.inline, 0, "no fallback: pool covers the cmp");
+            assert_eq!(r.rot_recv.inline, 0);
+            assert_eq!(r.rot_send_avail, 0, "demand mirror is exact for one cmp");
+            assert_eq!(r.rot_recv_avail, 0);
+            assert_eq!(r.rot_send.drained, r.rot_send.filled);
+            assert_eq!(r.rot_recv.drained, r.rot_recv.filled);
+        }
+    }
+
+    /// An undersized pool falls back inline mid-protocol without error and
+    /// still computes the right answer.
+    #[test]
+    fn undersized_pool_falls_back_inline() {
+        let x: Vec<u64> = vec![3, 7, u64::MAX, 12345];
+        let y: Vec<u64> = vec![5, 11, 2, 9];
+        let expect: Vec<u64> =
+            x.iter().zip(&y).map(|(a, b)| a.wrapping_mul(*b)).collect();
+        let (x2, y2) = (x.clone(), y.clone());
+        let ((z0, r0), (z1, _)) = run_mpc(43, TripleMode::Ot, move |m| {
+            // bank two triples, then multiply 4 + 4 elements: the first
+            // batch (4 > 2) falls back inline, pool stays for a smaller use
+            let d = PreprocDemand { triples: 2, ..Default::default() };
+            m.preprocess(&d);
+            let (xs, ys) = if m.is_p0() {
+                let a = m.share_input(&x2);
+                let b = m.recv_shares();
+                (a, b)
+            } else {
+                let a = m.recv_shares();
+                let b = m.share_input(&y2);
+                (a, b)
+            };
+            let z = m.mul_vec(&xs, &ys);
+            let z2 = m.mul_vec(&xs[..2], &ys[..2]);
+            (z.into_iter().chain(z2).collect::<Vec<u64>>(), m.preproc_report())
+        });
+        let got: Vec<u64> =
+            z0.iter().zip(&z1).map(|(a, b)| a.wrapping_add(*b)).collect();
+        assert_eq!(&got[..4], &expect[..]);
+        assert_eq!(&got[4..6], &expect[..2]);
+        assert_eq!(r0.triples.filled, 2);
+        assert_eq!(r0.triples.inline, 4, "oversized batch generated inline");
+        assert_eq!(r0.triples.drained, 2, "smaller batch drained the pool");
+        assert_eq!(r0.triples_avail, 0);
+    }
+
+    /// Pad pre-expansion from a learned plan reproduces the inline canonical
+    /// pads bit-for-bit (same PRG), and the second run drains the pool.
+    #[test]
+    fn pad_plan_prefills_second_aligned_run() {
+        let vals: Vec<u64> =
+            (0..12i64).map(|i| ((i * 7_901 - 44) << 9) as u64).collect();
+        let v2 = vals.clone();
+        let ((a0, _r0), (a1, r1)) = run_mpc(44, TripleMode::Dealer, move |m| {
+            let mut prg = m.ctx.dealer_prg("pad-split");
+            let r: Vec<u64> = (0..v2.len()).map(|_| prg.next_u64()).collect();
+            let mine: Vec<u64> = if m.is_p0() {
+                v2.iter().zip(&r).map(|(a, b)| a.wrapping_sub(*b)).collect()
+            } else {
+                r.clone()
+            };
+            // run 1: no plan yet — pads expand inline, trace is recorded
+            m.align_begin(&[5]);
+            let t1 = m.trunc_vec(&mine, 9);
+            m.align_end();
+            // run 2: same shape, different nonce — pads come from the pool
+            m.align_begin(&[6]);
+            let t2 = m.trunc_vec(&mine, 9);
+            m.align_end();
+            ((t1, t2), m.preproc_report())
+        });
+        let recon = |a: &[u64], b: &[u64]| -> Vec<u64> {
+            a.iter().zip(b).map(|(x, y)| x.wrapping_add(*y)).collect()
+        };
+        let run1 = recon(&a0.0, &a1.0);
+        let run2 = recon(&a0.1, &a1.1);
+        assert_eq!(run1, run2, "pooled pads must reconstruct the same values");
+        // P1 holds the pad pool: run 1 went inline (and recorded the plan),
+        // run 2 was served from the bulk pre-expansion
+        assert_eq!(r1.pads.inline, vals.len() as u64);
+        assert_eq!(r1.pads.drained, vals.len() as u64);
+        assert_eq!(r1.pads.filled, vals.len() as u64);
+    }
+}

@@ -23,7 +23,11 @@
 //!
 //! `run` and `serve` take `--transport mem|tcp|sim|sim-wan` (in-process
 //! backends; `tcp` = real loopback sockets) and `--uncoalesced` to disable
-//! write coalescing for flight-count A/B runs. PERF: `--threads <n>` pins
+//! write coalescing for flight-count A/B runs. Offline/online split:
+//! `run --preprocess` pregenerates the request's correlated randomness at
+//! session start (the infer below is then online-only), and
+//! `serve --prewarm` preprocesses every worker session before traffic (the
+//! router also refills pools on idle ticks). PERF: `--threads <n>` pins
 //! the per-party worker pool for the HE/OT hot paths (default: host-sized,
 //! `THREADS` env overridable). Outputs and transcripts are identical at any
 //! setting; see the coordinator docs ("Performance model") and `bench_e2e`.
@@ -143,6 +147,11 @@ fn cmd_run(kv: HashMap<String, String>) {
         if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
             ec = ec.threads(t);
         }
+        if kv.contains_key("preprocess") {
+            // offline/online split: pregenerate this request's correlated
+            // randomness at session start, so infer below is online-only
+            ec = ec.preprocess_for(&[sample.ids.len()]);
+        }
         let mut session = Session::start(model, ec).unwrap_or_else(|e| {
             eprintln!("session setup failed: {e:#}");
             std::process::exit(1);
@@ -154,6 +163,13 @@ fn cmd_run(kv: HashMap<String, String>) {
             fmt_duration(session.setup_wall_s()),
             fmt_bytes(session.setup_stats().bytes as f64),
         );
+        if session.offline_wall_s() > 0.0 {
+            println!(
+                "  preprocessed correlated randomness in {} (pools drain online; \
+                 --preprocess off = on-demand)",
+                fmt_duration(session.offline_wall_s()),
+            );
+        }
         session.infer(&sample.ids).unwrap_or_else(|e| {
             eprintln!("inference failed: {e:#}");
             std::process::exit(1);
@@ -255,6 +271,21 @@ fn cmd_serve(kv: HashMap<String, String>) {
     }
     for (i, s) in wl_l.batch(n_req - n_req / 2, 12).into_iter().enumerate() {
         reqs.push(InferenceRequest { id: (n_req / 2 + i) as u64, ids: s.ids, engine });
+    }
+    if kv.contains_key("prewarm") {
+        // offline prewarm: set up + preprocess the sessions before traffic,
+        // sized for the WORST batch a session can be handed — max_batch
+        // fused requests at the long bucket length (the workload below mixes
+        // seq- and 2·seq-token requests); a smaller shape would leave the
+        // pools under-provisioned and most randomness still inline
+        let long_seq = (seq * 2).min(cfg.max_seq);
+        let lens = vec![long_seq; opt_usize(&kv, "max-batch", 4).max(1)];
+        if let Err(e) = router.prewarm(engine, &lens, workers) {
+            eprintln!("prewarm failed: {e}");
+            std::process::exit(1);
+        }
+        let b = lens.len();
+        println!("prewarmed {workers} session(s) for {b} x {long_seq}-token batches");
     }
     println!(
         "serving {} requests ({} engine, {} workers)…",

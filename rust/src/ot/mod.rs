@@ -11,7 +11,20 @@
 //! base-OT seeds come from the setup dealer instead of an interactive
 //! Naor–Pinkas phase. This is a fixed O(λ) setup cost identical across every
 //! compared system (DESIGN.md, substitution table).
+//!
+//! # Offline/online split
+//!
+//! [`rot_send`](OtCtx::rot_send)/[`rot_recv`](OtCtx::rot_recv) transparently
+//! drain preprocessed random OTs when the direction's pool
+//! ([`RotPools`](crate::gates::preproc::RotPools), filled offline by
+//! `gates::Mpc::preprocess`) holds enough instances: the receiver
+//! derandomizes its pooled random choices to the call's real choices with
+//! one n-*bit* flips message, replacing the n×128-bit online u-matrix and
+//! all PRG/transpose/hash work. Both parties fill and drain in lockstep, so
+//! the pool-vs-inline branch always agrees; an empty or undersized pool
+//! falls back to the inline extension unchanged (the pre-split wire format).
 
+use crate::gates::preproc::RotPools;
 use crate::net::Chan;
 use crate::party::PartyCtx;
 use crate::util::{AesPrg, CrHash, WorkerPool};
@@ -126,6 +139,8 @@ pub struct OtCtx {
     /// ([`set_pool`](Self::set_pool)); every parallel path is
     /// transcript-deterministic at any pool size.
     pool: WorkerPool,
+    /// Preprocessed random-OT pools, one per extension direction.
+    pub(crate) pools: RotPools,
 }
 
 impl OtCtx {
@@ -179,6 +194,7 @@ impl OtCtx {
             hash: CrHash::new(),
             tweak: 0,
             pool: WorkerPool::auto(),
+            pools: RotPools::default(),
         }
     }
 
@@ -206,13 +222,45 @@ impl OtCtx {
     // ---------------------------------------------------------------- ROT
 
     /// Random OT, extension-sender side: returns n pairs (m0, m1) of 128-bit
-    /// random messages. The peer must call [`rot_recv`] with n choice bits.
+    /// random messages. The peer must call [`rot_recv`](Self::rot_recv) with
+    /// n choice bits.
+    ///
+    /// When the send pool holds ≥ n preprocessed pairs, they are drained
+    /// instead: the receiver sends one n-bit flips message derandomizing its
+    /// pooled random choices, and each pooled pair is swapped per flip bit
+    /// so the receiver's held message is `m'_{c_i}` under the returned pair
+    /// `(m'_0, m'_1)`. Otherwise the inline IKNP extension runs unchanged.
+    pub fn rot_send(&mut self, ch: &mut Chan, n: usize) -> Vec<(u128, u128)> {
+        if self.pools.suspend {
+            return self.rot_send_inline(ch, n);
+        }
+        if n > 0 && self.pools.send.len() >= n {
+            let flips = ch.recv_bits();
+            assert!(flips.len() * 8 >= n, "pooled ROT flips size");
+            let out: Vec<(u128, u128)> = (0..n)
+                .map(|i| {
+                    let (m0, m1) = self.pools.send.pop_front().expect("sized above");
+                    if get_bit(&flips, i) {
+                        (m1, m0)
+                    } else {
+                        (m0, m1)
+                    }
+                })
+                .collect();
+            self.pools.send_stats.drained += n as u64;
+            return out;
+        }
+        self.pools.send_stats.inline += n as u64;
+        self.rot_send_inline(ch, n)
+    }
+
+    /// The inline IKNP extension (sender side) — the pre-split wire format.
     ///
     /// Large batches run the column PRG expansion, the bit transpose, and the
     /// per-row hashing on the pool. Each base-OT column owns its PRG stream
     /// and advances it by exactly `words`, so stream states — and the
     /// transcript — are identical at any pool size.
-    pub fn rot_send(&mut self, ch: &mut Chan, n: usize) -> Vec<(u128, u128)> {
+    fn rot_send_inline(&mut self, ch: &mut Chan, n: usize) -> Vec<(u128, u128)> {
         let words = n.div_ceil(64);
         // receive u_j columns from receiver
         let u_flat = ch.recv_u64s();
@@ -244,8 +292,32 @@ impl OtCtx {
     }
 
     /// Random OT, extension-receiver side: choices packed LSB-first.
-    /// Returns m_{b_i} for each i.
+    /// Returns m_{b_i} for each i. Pool-drain mirror of
+    /// [`rot_send`](Self::rot_send): with ≥ n pooled `(r_i, m_{r_i})`
+    /// singles, sends flips `c_i ⊕ r_i` and returns the pooled messages
+    /// (which equal `m'_{c_i}` after the sender's swap).
     pub fn rot_recv(&mut self, ch: &mut Chan, choices: &[u8], n: usize) -> Vec<u128> {
+        if self.pools.suspend {
+            return self.rot_recv_inline(ch, choices, n);
+        }
+        if n > 0 && self.pools.recv.len() >= n {
+            let mut flips = vec![0u8; n.div_ceil(8)];
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let (r, m) = self.pools.recv.pop_front().expect("sized above");
+                set_bit(&mut flips, i, get_bit(choices, i) ^ r);
+                out.push(m);
+            }
+            ch.send_bits(&flips);
+            self.pools.recv_stats.drained += n as u64;
+            return out;
+        }
+        self.pools.recv_stats.inline += n as u64;
+        self.rot_recv_inline(ch, choices, n)
+    }
+
+    /// The inline IKNP extension (receiver side).
+    fn rot_recv_inline(&mut self, ch: &mut Chan, choices: &[u8], n: usize) -> Vec<u128> {
         assert!(choices.len() * 8 >= n);
         let words = n.div_ceil(64);
         // choice bits as u64 words
@@ -280,6 +352,47 @@ impl OtCtx {
         let t0 = self.next_tweak(n);
         let hash = &self.hash;
         pool.par_map(n, |i| hash.hash128(t0 + i as u64, rows[i]))
+    }
+
+    // ------------------------------------------------------- offline fill
+
+    /// Chunk size of one offline extension batch: bounds the transient
+    /// u-matrix memory while amortizing the per-batch fixed cost. Must match
+    /// on both parties (it does — it is a compile-time constant).
+    const FILL_CHUNK: usize = 1 << 16;
+
+    /// Offline phase, extension-sender side: run the inline extension for
+    /// `n` instances and bank the `(m0, m1)` pairs in the send pool.
+    pub fn fill_rot_send(&mut self, ch: &mut Chan, n: usize) {
+        let mut left = n;
+        while left > 0 {
+            let c = left.min(Self::FILL_CHUNK);
+            let ms = self.rot_send_inline(ch, c);
+            self.pools.send.extend(ms);
+            left -= c;
+        }
+        self.pools.send_stats.filled += n as u64;
+    }
+
+    /// Offline phase, extension-receiver side: `rand_choices` are this
+    /// party's private random choice bits (packed LSB-first, ≥ n bits);
+    /// banks `(r_i, m_{r_i})` singles for later derandomized drains.
+    pub fn fill_rot_recv(&mut self, ch: &mut Chan, rand_choices: &[u8], n: usize) {
+        assert!(rand_choices.len() * 8 >= n);
+        let mut off = 0;
+        while off < n {
+            let c = (n - off).min(Self::FILL_CHUNK);
+            let mut cb = vec![0u8; c.div_ceil(8)];
+            for i in 0..c {
+                set_bit(&mut cb, i, get_bit(rand_choices, off + i));
+            }
+            let ms = self.rot_recv_inline(ch, &cb, c);
+            for (i, m) in ms.into_iter().enumerate() {
+                self.pools.recv.push_back((get_bit(&cb, i), m));
+            }
+            off += c;
+        }
+        self.pools.recv_stats.filled += n as u64;
     }
 
     // ---------------------------------------------------------------- COT

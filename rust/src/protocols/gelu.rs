@@ -11,8 +11,10 @@
 //! millionaires invocation (`cmp_gt_consts` over the concatenated vector);
 //! selector bits are combined with one batched AND layer and applied by MUX.
 
+use super::math::demand_poly_eval;
 use super::Engine2P;
 use crate::fixed::Ring;
+use crate::gates::preproc::PreprocDemand;
 
 /// Eq. 7 lower polynomial: P³(x) = −0.50540312 − 0.42226581x − 0.11807613x² − 0.01103413x³.
 pub const P3: [f64; 4] = [-0.50540312, -0.42226581, -0.11807613, -0.01103413];
@@ -136,6 +138,48 @@ pub fn pi_gelu_tokens(
         out.row_mut(r).copy_from_slice(&lo_out[i * d..(i + 1) * d]);
     }
     out
+}
+
+// ---------------------------------------------------------------- demand
+
+/// [`pi_gelu`] on `n` elements: batched breakpoint comparisons, the
+/// region-selector ANDs, the piece polynomials, and one MUX per piece.
+pub fn demand_gelu(d: &mut PreprocDemand, n: u64, kind: GeluKind) {
+    if n == 0 {
+        return;
+    }
+    match kind {
+        GeluKind::High => {
+            d.cmp32(3 * n);
+            d.and(2 * n);
+            demand_poly_eval(d, n, 3);
+            demand_poly_eval(d, n, 6);
+            d.mux(n);
+            d.mux(n);
+            d.mux(n);
+        }
+        GeluKind::Bolt => {
+            d.cmp32(2 * n);
+            d.and(n);
+            demand_poly_eval(d, n, 4);
+            d.mux(n);
+            d.mux(n);
+        }
+        GeluKind::Low => {
+            d.cmp32(2 * n);
+            d.and(n);
+            demand_poly_eval(d, n, 2);
+            d.mux(n);
+            d.mux(n);
+        }
+    }
+}
+
+/// [`pi_gelu_tokens`] over a `rows × cols` block. Upper bound: every token
+/// on the `high_kind` path (the degree-2 reduced path consumes strictly
+/// less in every counter).
+pub fn demand_gelu_tokens(d: &mut PreprocDemand, rows: u64, cols: u64, high_kind: GeluKind) {
+    demand_gelu(d, rows * cols, high_kind);
 }
 
 /// Plaintext references (Appendix C), for tests and the fixed-point oracle.

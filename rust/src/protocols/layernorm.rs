@@ -2,8 +2,10 @@
 //! Newton inverse-square-root, and affine (γ, β) applied with the server's
 //! parameters.
 
+use super::math::demand_rsqrt_positive;
 use super::Engine2P;
 use crate::fixed::RingMat;
+use crate::gates::preproc::PreprocDemand;
 
 pub const LN_EPS: f64 = 1e-3;
 
@@ -63,6 +65,23 @@ pub fn pi_layernorm(
         }
     }
     RingMat::from_vec(rows, d, out)
+}
+
+// ---------------------------------------------------------------- demand
+
+/// [`pi_layernorm`] over `rows × cols`: mean + variance truncations, the
+/// Beaver square, the Newton inverse square root (max_pow4 = 6, 4
+/// iterations), and the normalize/affine multiplies.
+pub fn demand_layernorm(d: &mut PreprocDemand, rows: u64, cols: u64) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    d.trunc(rows); // means
+    d.mul_fix(rows * cols); // squares
+    d.trunc(rows); // variances
+    demand_rsqrt_positive(d, rows, 6, 4);
+    d.mul_fix(rows * cols); // normalize
+    d.mul_fix(rows * cols); // affine (gamma)
 }
 
 /// Plaintext reference.

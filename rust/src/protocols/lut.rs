@@ -12,8 +12,11 @@
 //! traffic is what makes IRON's non-linear layers expensive (Table 1 /
 //! Fig. 10), exactly the behaviour this baseline must exhibit.
 
+use super::math::demand_recip_positive;
+use super::softmax::{demand_row_max, softmax_recip_pow2};
 use super::Engine2P;
 use crate::fixed::Ring;
+use crate::gates::preproc::PreprocDemand;
 
 /// Piecewise-linear table: `thresholds` are the segment breakpoints
 /// (ascending); segment j covers (t_{j−1}, t_j] with value α_j + β_j·x.
@@ -147,6 +150,31 @@ pub fn pi_softmax_lut(
         .collect();
     let out = e.mul_fix(&exps, &recip_b);
     crate::fixed::RingMat::from_vec(rows, d, out)
+}
+
+// ---------------------------------------------------------------- demand
+
+/// [`pi_pwl`] on `n` elements: one batched comparison and B2A per
+/// breakpoint, plus the single slope multiply.
+pub fn demand_pwl(d: &mut PreprocDemand, n: u64, table: &PwlTable) {
+    if n == 0 {
+        return;
+    }
+    let nt = table.thresholds.len() as u64;
+    d.cmp32(n * nt);
+    d.b2a(n * nt);
+    d.mul_fix(n);
+}
+
+/// [`pi_softmax_lut`] over `rows × cols`.
+pub fn demand_softmax_lut(d: &mut PreprocDemand, rows: u64, cols: u64, table: &PwlTable) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    demand_row_max(d, rows, cols);
+    demand_pwl(d, rows * cols, table);
+    demand_recip_positive(d, rows, softmax_recip_pow2(cols), 4);
+    d.mul_fix(rows * cols);
 }
 
 /// IRON-fidelity exponential table on the SoftMax input range.

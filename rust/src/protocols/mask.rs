@@ -26,6 +26,7 @@
 
 use super::Engine2P;
 use crate::fixed::RingMat;
+use crate::gates::preproc::PreprocDemand;
 
 /// Result of Π_mask.
 pub struct MaskOutput {
@@ -158,6 +159,28 @@ pub fn pi_mask_strategy(
 
     // 4. truncate locally
     truncate_rows(rows, n_kept, d, swaps)
+}
+
+/// Preprocessing cost of [`pi_mask`] (BatchedPrefix strategy) on `n` tokens.
+/// The pass count m′ = n − n_kept is data-dependent, so this is the worst
+/// case m′ = n − 1; each pass runs the Hillis–Steele prefix-AND ladder, one
+/// batched wide MUX over n − 1 rows, and the alive-lane bit AND.
+pub fn demand_mask(d: &mut PreprocDemand, n: u64) {
+    if n == 0 {
+        return;
+    }
+    d.b2a(n); // bind (tag lane)
+    let mut prefix = 0u64;
+    let mut step = 1u64;
+    while step < n {
+        prefix += n - step;
+        step <<= 1;
+    }
+    for _ in 0..n.saturating_sub(1) {
+        d.and(prefix);
+        d.mux(n - 1);
+        d.and(n - 1);
+    }
 }
 
 fn truncate_rows(rows: Vec<Vec<u64>>, n_kept: usize, d: usize, swaps: usize) -> MaskOutput {

@@ -4,6 +4,7 @@
 
 use super::Engine2P;
 use crate::fixed::Ring;
+use crate::gates::preproc::PreprocDemand;
 
 impl Engine2P {
     /// Add a public constant (P0 adjusts its share).
@@ -208,6 +209,65 @@ impl Engine2P {
         }
         // 1/sqrt(x) = y · 2^(−k) = y · hscale
         self.mul_fix(&y, &hscale)
+    }
+}
+
+// ---------------------------------------------------------------- demand
+// Preprocessing cost mirrors (offline/online split): each function walks the
+// control flow of the protocol above and records its correlated-randomness
+// consumption into a `PreprocDemand`. Kept adjacent to the implementations
+// so a protocol change and its cost mirror review together.
+
+/// [`Engine2P::poly_eval`]: `deg` sequential fixed-point multiplies.
+pub fn demand_poly_eval(d: &mut PreprocDemand, n: u64, deg: u64) {
+    for _ in 0..deg {
+        d.mul_fix(n);
+    }
+}
+
+/// [`Engine2P::approx_exp`]: base shift + `taylor` squarings + clip CMP+MUX.
+pub fn demand_approx_exp(d: &mut PreprocDemand, n: u64, taylor: u32) {
+    d.trunc(n);
+    for _ in 0..taylor {
+        d.mul_fix(n);
+    }
+    d.cmp32(n);
+    d.mux(n);
+}
+
+/// [`Engine2P::recip_positive`]: `max_pow2` CMP+B2A normalization factors, a
+/// product tree of `max_pow2 − 1` multiplies, the normalize multiply, the
+/// seed constant-multiply truncation, 2 multiplies per Newton iteration, and
+/// the final descale multiply.
+pub fn demand_recip_positive(d: &mut PreprocDemand, n: u64, max_pow2: i32, iters: u64) {
+    let p = max_pow2.max(0) as u64;
+    for _ in 0..p {
+        d.cmp32(n);
+        d.b2a(n);
+    }
+    let muls = p.saturating_sub(1) + 1 + 2 * iters + 1;
+    for _ in 0..muls {
+        d.mul_fix(n);
+    }
+    d.trunc(n);
+}
+
+/// [`Engine2P::rsqrt_positive`]: like the reciprocal but with two product
+/// trees (quarter + half scales), 3 multiplies and one halving truncation
+/// per Newton iteration.
+pub fn demand_rsqrt_positive(d: &mut PreprocDemand, n: u64, max_pow4: i32, iters: u64) {
+    let q = max_pow4.max(0) as u64;
+    for _ in 0..q {
+        d.cmp32(n);
+        d.b2a(n);
+    }
+    let muls = 2 * q.saturating_sub(1) + 1 + 3 * iters + 1;
+    for _ in 0..muls {
+        d.mul_fix(n);
+    }
+    d.trunc(n);
+    for _ in 0..iters {
+        d.trunc(n);
     }
 }
 

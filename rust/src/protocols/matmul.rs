@@ -252,6 +252,13 @@ pub fn pi_matmul_shared(e: &mut Engine2P, x_share: &RingMat, y_share: &RingMat) 
     out
 }
 
+/// Preprocessing cost of [`linear_layer`] over `rows` output rows of `m`
+/// columns: the HE matmul itself consumes no correlated randomness; the
+/// rescale truncation draws one canonical pad word per output element.
+pub fn demand_linear_layer(d: &mut crate::gates::preproc::PreprocDemand, rows: u64, m: u64) {
+    d.trunc(rows * m);
+}
+
 /// Convenience: weights matmul followed by truncation back to scale f,
 /// plus optional bias (held by P0) added at scale f.
 pub fn linear_layer(

@@ -14,10 +14,11 @@
 //! — resolving θ against a padded bucket length was the core of the padding
 //! bug this layering fixes.
 
-use super::mask::{pi_mask, MaskOutput};
-use super::softmax::importance_scores;
+use super::mask::{demand_mask, pi_mask, MaskOutput};
+use super::softmax::{demand_importance_scores, importance_scores};
 use super::Engine2P;
 use crate::fixed::RingMat;
+use crate::gates::preproc::PreprocDemand;
 
 /// Output of Π_prune: pruned tokens + their importance scores (for Π_reduce).
 pub struct PruneOutput {
@@ -41,6 +42,18 @@ pub fn pi_prune(
     let m = e.mpc.cmp_gt_const(&s, theta_enc);
     let MaskOutput { tokens, scores, n_kept, swaps } = pi_mask(e, x, &s, &m);
     PruneOutput { tokens, scores, n_kept, swaps }
+}
+
+/// Preprocessing cost of [`pi_prune`] on a block of `n` tokens: the Eq. 1
+/// score truncation, one batched threshold comparison, and worst-case
+/// Π_mask relocation.
+pub fn demand_prune(d: &mut PreprocDemand, n: u64) {
+    if n == 0 {
+        return;
+    }
+    demand_importance_scores(d, n);
+    d.cmp32(n);
+    demand_mask(d, n);
 }
 
 /// Plaintext reference of the whole pruning decision (Eq. 1 + threshold).

@@ -13,6 +13,13 @@
 //! nothing across requests.
 
 use super::Engine2P;
+use crate::gates::preproc::PreprocDemand;
+
+/// Preprocessing cost of [`pi_reduce`] on `n` pruned scores: one batched
+/// comparison against β (the mask opening is plain traffic).
+pub fn demand_reduce(d: &mut PreprocDemand, n: u64) {
+    d.cmp32(n);
+}
 
 /// Π_reduce: returns the public reduction mask over pruned tokens.
 /// `beta` is the server's learned threshold (ignored on P1). Enforces the

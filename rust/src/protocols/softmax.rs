@@ -18,8 +18,10 @@
 //! [`importance_scores`] normalizes by the calling block's own token count
 //! (Eq. 1's 1/(H·n) with the block's real n, never a padded bucket length).
 
+use super::math::{demand_approx_exp, demand_recip_positive};
 use super::Engine2P;
 use crate::fixed::{RingMat, sub_vec};
+use crate::gates::preproc::PreprocDemand;
 
 pub const EXP_CLIP_T: f64 = -13.0;
 pub const EXP_N_HIGH: u32 = 6;
@@ -135,6 +137,39 @@ pub fn importance_scores(e: &mut Engine2P, atts: &[RingMat]) -> Vec<u64> {
     // scale by 1/(H·n) — constant multiply + local truncation
     let c = e.fix.enc(1.0 / (h as f64 * n as f64));
     e.mpc.scale_const_trunc(&acc, c, e.fix.frac_bits)
+}
+
+// ---------------------------------------------------------------- demand
+
+/// [`row_max`]: a (cols − 1)-step CMP + select scan batched over the rows.
+pub(crate) fn demand_row_max(d: &mut PreprocDemand, rows: u64, cols: u64) {
+    for _ in 1..cols {
+        d.cmp32(rows);
+        d.mux(rows);
+    }
+}
+
+/// The Newton-reciprocal range bound used by both SoftMax variants.
+pub(crate) fn softmax_recip_pow2(cols: u64) -> i32 {
+    (64 - cols.leading_zeros()) as i32 + 1
+}
+
+/// [`pi_softmax`] over a `rows × cols` logit block. Upper bound: every row
+/// on the high-degree Taylor path (the reduced path consumes strictly less;
+/// the partition itself is free).
+pub fn demand_softmax(d: &mut PreprocDemand, rows: u64, cols: u64) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    demand_row_max(d, rows, cols);
+    demand_approx_exp(d, rows * cols, EXP_N_HIGH);
+    demand_recip_positive(d, rows, softmax_recip_pow2(cols), 4);
+    d.mul_fix(rows * cols);
+}
+
+/// [`importance_scores`]: one constant-scale truncation over the scores.
+pub fn demand_importance_scores(d: &mut PreprocDemand, n: u64) {
+    d.trunc(n);
 }
 
 /// sub helper re-export for layer code.

@@ -1,0 +1,210 @@
+//! Offline/online phase split, end to end: preprocessed sessions must be
+//! bit-identical to on-demand sessions (logits + prune/reduce decisions),
+//! transport-invariant, exhaustion-safe (transparent inline fallback), and
+//! exactly accounted (fill == demand; drain-based refill restores levels).
+
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    BlockRun, EngineConfig, EngineKind, PreparedModel, PreprocDemand, Session,
+};
+use cipherprune::net::TransportSpec;
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+
+fn setup() -> (Arc<PreparedModel>, Vec<BlockRun>) {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let model = Arc::new(PreparedModel::prepare(w));
+    let items: Vec<BlockRun> = Workload::qnli_like(&cfg, 12)
+        .batch(2, 7)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| BlockRun { nonce: 1 + i as u64, ids: s.ids })
+        .collect();
+    (model, items)
+}
+
+fn ec(transport: TransportSpec) -> EngineConfig {
+    EngineConfig::new(EngineKind::CipherPrune).he_n(128).transport(transport)
+}
+
+/// The headline property: a session whose pools were filled by the
+/// schedule-sized dry run serves the same batch bit-identically to a
+/// session generating everything on demand — and the dry run is a sound
+/// upper bound, so nothing falls back inline.
+#[test]
+fn preprocessed_matches_ondemand_bit_identically() {
+    let (model, items) = setup();
+    let mut od = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("od session");
+    let r_od = od.infer_batch(&items).expect("on-demand infer");
+
+    let mut pp = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("pp session");
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    let demand = pp.preprocess(&lens).expect("preprocess");
+    assert!(!demand.is_empty(), "dry run must demand material");
+    let r_pp = pp.infer_batch(&items).expect("preprocessed infer");
+
+    assert_eq!(r_od.len(), r_pp.len());
+    for (a, b) in r_od.iter().zip(&r_pp) {
+        assert_eq!(a.logits, b.logits, "logits must be bit-identical");
+        for (x, y) in a.layer_stats.iter().zip(&b.layer_stats) {
+            assert_eq!(x.n_kept, y.n_kept, "prune decisions must match");
+            assert_eq!(x.n_high, y.n_high, "reduce decisions must match");
+        }
+    }
+    // soundness of the dry-run sizing: the pools covered the whole run
+    let [p0, p1] = pp.preproc_reports();
+    for r in [p0, p1] {
+        assert_eq!(r.triples.inline, 0, "triple pool must cover the run");
+        assert_eq!(r.rot_send.inline, 0, "ROT send pool must cover the run");
+        assert_eq!(r.rot_recv.inline, 0, "ROT recv pool must cover the run");
+        assert!(r.triples.drained > 0, "the run must actually drain the pools");
+        assert!(r.rot_send.drained > 0);
+    }
+    assert!(pp.offline_wall_s() > 0.0);
+}
+
+/// Preprocessed sessions are transport-invariant like everything else:
+/// identical logits, decisions, and per-endpoint wire digests on mem and
+/// real loopback TCP (the pooled drain path has its own wire format — the
+/// flips messages — so this pins it over real sockets).
+#[test]
+fn preprocessed_runs_are_transport_invariant() {
+    let (model, items) = setup();
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    let run = |transport: TransportSpec| {
+        let mut s = Session::start(model.clone(), ec(transport)).expect("session");
+        s.preprocess(&lens).expect("preprocess");
+        let rs = s.infer_batch(&items).expect("infer");
+        let logits: Vec<Vec<f64>> = rs.iter().map(|r| r.logits.clone()).collect();
+        let kept: Vec<Vec<usize>> = rs
+            .iter()
+            .map(|r| r.layer_stats.iter().map(|l| l.n_kept).collect())
+            .collect();
+        (logits, kept, s.transcript_digest())
+    };
+    let mem = run(TransportSpec::Mem);
+    let tcp = run(TransportSpec::TcpLoopback);
+    assert_eq!(mem.0, tcp.0, "logits must not depend on the transport");
+    assert_eq!(mem.1, tcp.1, "decisions must not depend on the transport");
+    assert_eq!(mem.2, tcp.2, "wire content must not depend on the transport");
+}
+
+/// Pool exhaustion mid-batch: an undersized explicit demand serves the
+/// early gate calls from the pools, runs dry, and falls back to on-demand
+/// generation without error — and still bit-identical to the on-demand run.
+#[test]
+fn pool_exhaustion_falls_back_on_demand_without_error() {
+    let (model, items) = setup();
+    let one = vec![items[0].clone()];
+    let mut od = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("od session");
+    let want = od.infer_batch(&one).expect("on-demand infer");
+
+    let mut pp = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("pp session");
+    let small = PreprocDemand {
+        triples: 2_000,
+        rot_p0s: 9_000,
+        rot_p1s: 3_000,
+        pad_words: 0,
+    };
+    pp.preprocess_with(&small).expect("small preprocess");
+    let got = pp.infer_batch(&one).expect("exhausting infer");
+    assert_eq!(want[0].logits, got[0].logits, "fallback must stay bit-identical");
+
+    let [p0, _p1] = pp.preproc_reports();
+    assert!(p0.triples.drained > 0, "small pool served early batches");
+    assert!(p0.triples.inline > 0, "then ran dry and fell back inline");
+    assert!(p0.rot_send.drained > 0);
+    assert!(p0.rot_send.inline > 0);
+}
+
+/// Exact pool accounting: the fill equals the demand it was asked for
+/// (per party, per direction), and the drain-based refill restores every
+/// pool to its preprocessed level exactly.
+#[test]
+fn fill_accounting_matches_demand_and_refill_restores_levels() {
+    let (model, items) = setup();
+    let mut s = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("session");
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    let d = s.preproc_demand(&lens);
+    assert!(!d.is_empty());
+    s.preprocess_with(&d).expect("preprocess");
+    {
+        let [p0, p1] = s.preproc_reports();
+        assert_eq!(p0.triples.filled, d.triples, "fill == demand (triples)");
+        assert_eq!(p0.rot_send.filled, d.rot_p0s, "P0 sends the P0-sender direction");
+        assert_eq!(p0.rot_recv.filled, d.rot_p1s);
+        assert_eq!(p1.rot_send.filled, d.rot_p1s, "P1 mirrors the directions");
+        assert_eq!(p1.rot_recv.filled, d.rot_p0s);
+        assert_eq!(p0.triples_avail, d.triples, "nothing drained yet");
+        assert_eq!(p1.triples.filled, d.triples);
+    }
+    s.infer_batch(&items).expect("infer");
+    let drained = (
+        s.preproc_reports()[0].triples.drained,
+        s.preproc_reports()[0].rot_send.drained,
+        s.preproc_reports()[0].rot_recv.drained,
+    );
+    assert!(drained.0 > 0 && drained.1 > 0 && drained.2 > 0);
+    let refill = s.refill().expect("refill");
+    assert_eq!(refill.triples, drained.0, "refill regenerates the exact drain");
+    assert_eq!(refill.rot_p0s, drained.1);
+    assert_eq!(refill.rot_p1s, drained.2);
+    let [p0, _p1] = s.preproc_reports();
+    assert_eq!(p0.triples_avail, d.triples, "refill restores the triple pool");
+    assert_eq!(p0.rot_send_avail, d.rot_p0s, "…and both ROT pools");
+    assert_eq!(p0.rot_recv_avail, d.rot_p1s);
+    // double-entry identity: everything banked is either held or drained
+    assert_eq!(p0.triples.filled, p0.triples_avail + p0.triples.drained);
+    assert_eq!(p0.rot_send.filled, p0.rot_send_avail + p0.rot_send.drained);
+    // a second refill with nothing drained in between is a no-op
+    let noop = s.refill().expect("noop refill");
+    assert!(noop.is_empty());
+}
+
+/// The nonce-keyed truncation pads cannot be made before a request exists,
+/// but a repeat of the same batch shape pre-expands them in bulk from the
+/// learned pad plan: the replayed batch is bit-identical and P1 serves its
+/// pads from the pool.
+#[test]
+fn pad_plan_warms_repeated_shapes() {
+    let (model, items) = setup();
+    let mut s = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("session");
+    let r1 = s.infer_batch(&items).expect("first batch");
+    // exact replay: same (nonce, content) pairs reconstruct identically
+    let r2 = s.infer_batch(&items).expect("replayed batch");
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.logits, b.logits, "replay must be bit-identical");
+    }
+    let [_p0, p1] = s.preproc_reports();
+    assert!(p1.pads.filled > 0, "the plan pre-expanded the second run's pads");
+    assert_eq!(
+        p1.pads.drained, p1.pads.filled,
+        "an identical replay consumes the pre-expansion exactly"
+    );
+    assert_eq!(
+        p1.pads.inline, p1.pads.drained,
+        "first run inline == second run pooled (same truncation trace)"
+    );
+}
+
+/// `EngineConfig::preprocess_for` wires the offline phase into session
+/// start: the first request is online-only and bit-identical to a plain
+/// session's.
+#[test]
+fn preprocess_at_session_start() {
+    let (model, items) = setup();
+    let one = vec![items[0].clone()];
+    let mut plain = Session::start(model.clone(), ec(TransportSpec::Mem)).expect("plain");
+    let want = plain.infer_batch(&one).expect("infer");
+
+    let cfg = ec(TransportSpec::Mem).preprocess_for(&[one[0].ids.len()]);
+    let mut warm = Session::start(model.clone(), cfg).expect("warm session");
+    assert!(warm.offline_wall_s() > 0.0, "start ran the offline phase");
+    assert!(warm.preproc_reports()[0].preprocessed());
+    let got = warm.infer_batch(&one).expect("online-only infer");
+    assert_eq!(want[0].logits, got[0].logits);
+    let [p0, _] = warm.preproc_reports();
+    assert_eq!(p0.triples.inline, 0, "the first request was online-only");
+    assert_eq!(p0.rot_send.inline, 0);
+}

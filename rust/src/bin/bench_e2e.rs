@@ -22,6 +22,12 @@
 //!   cargo run --release --bin bench_e2e -- --transport tcp     # loopback TCP
 //!   cargo run --release --bin bench_e2e -- --out path/to.json
 //!   cargo run --release --bin bench_e2e -- --smoke --check-against BENCH_baseline.json
+//!   cargo run --release --bin bench_e2e -- --loadgen 64 --shards 2   # serving load test
+//!
+//! `--loadgen N` skips the sweep and instead drives the serving front door
+//! (`serving::Server`) with N concurrent loopback clients over mixed engine
+//! kinds and lengths, reporting throughput, queue-wait percentiles, and the
+//! shed/completed split (the PR-6 serving record).
 //!
 //! `--transport mem|tcp|sim|sim-wan` selects the channel backend for every
 //! session in the sweep (`sim*` injects NetModel delays — expect wall times
@@ -44,9 +50,12 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use cipherprune::coordinator::{BlockRun, EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::coordinator::{
+    BatchPolicy, BlockRun, EngineConfig, EngineKind, PreparedModel, Session,
+};
 use cipherprune::net::TransportSpec;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::serving::{ServeConfig, Server, ServingClient, WireRequest, WireResponse};
 use cipherprune::util::bench::fmt_duration;
 use cipherprune::util::{Json, WorkerPool};
 
@@ -359,6 +368,120 @@ fn measure_fused(
         .collect()
 }
 
+/// `--loadgen N`: skip the sweep and drive the serving front door with N
+/// concurrent loopback clients. Kinds and token lengths alternate across the
+/// fleet so several buckets (and, with `--shards >= 2`, more than one shard)
+/// see traffic. Shedding under pressure is expected behaviour and reported
+/// separately; a `Failed` response is a hard error and aborts the run.
+fn run_loadgen(n_clients: usize, shards: usize, host: usize, out_path: &str) {
+    const REQS_PER_CLIENT: u64 = 4;
+    let cfg = ModelConfig::tiny();
+    let weights = Arc::new(ModelWeights::salient(&cfg, 42));
+    let t0 = Instant::now();
+    let model = Arc::new(PreparedModel::prepare(weights));
+    let prepare_s = t0.elapsed().as_secs_f64();
+
+    let serve_cfg = ServeConfig {
+        shards,
+        policy: BatchPolicy {
+            max_batch: 8,
+            linger: std::time::Duration::from_millis(10),
+            min_bucket: 8,
+            max_tokens: 32,
+        },
+        // Size the admission bound to the fleet so a healthy run sheds only
+        // under genuine pressure, not by construction.
+        max_queue: 4 * n_clients.max(1),
+        ..ServeConfig::for_tests()
+    };
+    let mut server = Server::start(model, serve_cfg, "127.0.0.1:0", "127.0.0.1:0")
+        .expect("start front door");
+    let addr = server.addr().to_string();
+    println!(
+        "bench_e2e loadgen: {n_clients} clients x {REQS_PER_CLIENT} reqs, {shards} shards, \
+         host_threads {host}, serving on {addr}"
+    );
+
+    let base = Workload::qnli_like(&cfg, 8).batch(1, 7)[0].ids.clone();
+    let t1 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let base = base.clone();
+            std::thread::spawn(move || {
+                let mut client =
+                    ServingClient::connect_retry(&addr, std::time::Duration::from_secs(10))
+                        .expect("connect to front door");
+                let kind = if c % 2 == 0 {
+                    EngineKind::CipherPrune
+                } else {
+                    EngineKind::BoltNoWe
+                };
+                let ids: Vec<usize> = match c % 3 {
+                    0 => base[..base.len().min(4)].to_vec(),
+                    1 => base.clone(),
+                    _ => base.iter().cycle().take(12).copied().collect(),
+                };
+                let (mut done, mut shed, mut failed) = (0u64, 0u64, 0u64);
+                for r in 0..REQS_PER_CLIENT {
+                    let req = WireRequest {
+                        id: r + 1,
+                        engine: kind,
+                        nonce: 1 + c as u64 * REQS_PER_CLIENT + r,
+                        ids: ids.clone(),
+                    };
+                    match client.call(&req).expect("serving call") {
+                        WireResponse::Result { .. } => done += 1,
+                        WireResponse::Overloaded { .. } | WireResponse::Rejected { .. } => {
+                            shed += 1
+                        }
+                        WireResponse::Failed { detail, .. } => {
+                            eprintln!("loadgen: request failed: {detail}");
+                            failed += 1;
+                        }
+                    }
+                }
+                (done, shed, failed)
+            })
+        })
+        .collect();
+    let (mut done, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (d, s, f) = h.join().expect("loadgen client thread");
+        done += d;
+        shed += s;
+        failed += f;
+    }
+    let wall_s = t1.elapsed().as_secs_f64();
+    server.shutdown();
+
+    let total = n_clients as u64 * REQS_PER_CLIENT;
+    let rps = done as f64 / wall_s.max(1e-9);
+    println!(
+        "loadgen: {done}/{total} completed, {shed} shed, {failed} failed in {} — {rps:.1} req/s",
+        fmt_duration(wall_s),
+    );
+    assert_eq!(failed, 0, "loadgen saw hard Failed responses");
+    assert_eq!(done + shed, total, "every request must get a typed response");
+
+    let report = Json::obj(vec![
+        ("bench", "loadgen".into()),
+        ("model", cfg.name.as_str().into()),
+        ("host_threads", host.into()),
+        ("clients", n_clients.into()),
+        ("reqs_per_client", (REQS_PER_CLIENT as usize).into()),
+        ("shards", shards.into()),
+        ("prepare_s", prepare_s.into()),
+        ("wall_s", wall_s.into()),
+        ("completed", (done as usize).into()),
+        ("shed", (shed as usize).into()),
+        ("failed", (failed as usize).into()),
+        ("throughput_rps", rps.into()),
+    ]);
+    std::fs::write(out_path, report.to_string_pretty()).expect("write loadgen report");
+    println!("wrote {out_path}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -385,6 +508,23 @@ fn main() {
         })
         .unwrap_or(TransportSpec::Mem);
     let host = WorkerPool::auto().threads();
+
+    if let Some(i) = args.iter().position(|a| a == "--loadgen") {
+        let n_clients: usize = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(64);
+        let shards: usize = args
+            .iter()
+            .position(|a| a == "--shards")
+            .and_then(|j| args.get(j + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        let loadgen_out = if args.iter().any(|a| a == "--out") {
+            out_path
+        } else {
+            "BENCH_loadgen.json".to_string()
+        };
+        run_loadgen(n_clients, shards, host, &loadgen_out);
+        return;
+    }
 
     // smoke: tiny model, test-sized ring — exercises every stage in seconds.
     // full: width-reduced bert-medium proxy at deployment-shaped lengths.

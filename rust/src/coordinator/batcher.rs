@@ -69,6 +69,36 @@ pub fn bucket_for(len: usize, policy: &BatchPolicy) -> usize {
     len.next_power_of_two().max(policy.min_bucket).min(policy.max_tokens)
 }
 
+/// Why a request was refused admission. Typed so a network front door can
+/// map each cause to a wire error code instead of guessing from context
+/// (the serving layer translates these into `wire::RejectCode`s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// `ids` is empty — nothing to classify and, with padding no longer
+    /// added at the boundary, nothing to run.
+    EmptyInput,
+    /// `ids.len()` exceeds the policy's `max_tokens` admission cap.
+    TooLong,
+    /// The request id is already in flight (router-level: duplicate ids
+    /// would corrupt latency accounting and response ordering, and they key
+    /// the aligned-truncation nonces — uniqueness is part of the privacy
+    /// contract).
+    DuplicateId,
+    /// A bounded queue is at capacity (admission-control shedding).
+    QueueFull,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::EmptyInput => "empty input",
+            RejectReason::TooLong => "request exceeds max_tokens",
+            RejectReason::DuplicateId => "request id already in flight",
+            RejectReason::QueueFull => "queue at capacity",
+        }
+    }
+}
+
 struct Pending {
     req: InferenceRequest,
     arrived: Instant,
@@ -98,12 +128,18 @@ impl Batcher {
         &self.policy
     }
 
-    /// Enqueue a request. Returns its bucket, or Err if it is empty or
-    /// exceeds `max_tokens` (an empty request has nothing to classify and,
-    /// with padding no longer added, nothing to run).
-    pub fn push(&mut self, req: InferenceRequest) -> Result<usize, InferenceRequest> {
-        if req.ids.is_empty() || req.ids.len() > self.policy.max_tokens {
-            return Err(req);
+    /// Enqueue a request. Returns its bucket, or the request back with the
+    /// typed reason it was refused ([`RejectReason::EmptyInput`] /
+    /// [`RejectReason::TooLong`]).
+    pub fn push(
+        &mut self,
+        req: InferenceRequest,
+    ) -> Result<usize, (InferenceRequest, RejectReason)> {
+        if req.ids.is_empty() {
+            return Err((req, RejectReason::EmptyInput));
+        }
+        if req.ids.len() > self.policy.max_tokens {
+            return Err((req, RejectReason::TooLong));
         }
         let b = bucket_for(req.ids.len(), &self.policy);
         let q = match self.queues.iter_mut().find(|(len, _)| *len == b) {
@@ -121,6 +157,19 @@ impl Batcher {
     /// Number of pending requests across all buckets.
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Earliest linger expiry across all queued requests — the next instant
+    /// at which [`next_batch`](Self::next_batch) could release a *non-full*
+    /// bucket. `None` when nothing is queued. A serving loop sleeps until
+    /// this deadline (or a new arrival) instead of busy-polling: waking
+    /// earlier finds nothing releasable, waking later breaks the linger
+    /// latency promise.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|(_, q)| q.front().map(|p| p.arrived + self.policy.linger))
+            .min()
     }
 
     /// Release the next ready batch, if any.
@@ -198,11 +247,14 @@ mod tests {
     }
 
     #[test]
-    fn rejects_overlong_and_empty() {
+    fn rejects_overlong_and_empty_with_typed_reasons() {
         let mut b = Batcher::new(BatchPolicy::default());
-        assert!(b.push(req(1, 600)).is_err());
+        let (r, why) = b.push(req(1, 600)).unwrap_err();
+        assert_eq!(r.id, 1, "the request comes back by value");
+        assert_eq!(why, RejectReason::TooLong);
         assert!(b.push(req(2, 512)).is_ok());
-        assert!(b.push(req(3, 0)).is_err(), "empty requests have nothing to run");
+        let (_, why) = b.push(req(3, 0)).unwrap_err();
+        assert_eq!(why, RejectReason::EmptyInput, "empty requests have nothing to run");
     }
 
     #[test]
@@ -336,6 +388,34 @@ mod tests {
         assert_eq!(b.push(req(4, 10)).unwrap(), 16);
         assert!(b.push(req(5, 49)).is_err());
         assert_eq!(b.policy().max_tokens, 48);
+    }
+
+    /// `next_deadline` tracks the oldest queued request's linger expiry:
+    /// empty → None, earliest-arrival wins across buckets, and releasing
+    /// that request moves the deadline to the next-oldest survivor.
+    #[test]
+    fn next_deadline_is_earliest_linger_expiry() {
+        let linger = Duration::from_millis(50);
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            linger,
+            ..Default::default()
+        });
+        assert!(b.next_deadline().is_none(), "empty batcher has no deadline");
+        let before = Instant::now();
+        b.push(req(1, 20)).unwrap(); // bucket 32, arrives first
+        std::thread::sleep(Duration::from_millis(5));
+        b.push(req(2, 100)).unwrap(); // bucket 128, arrives later
+        let after = Instant::now();
+        let d = b.next_deadline().expect("two pending requests");
+        assert!(d >= before + linger, "deadline is arrival + linger");
+        assert!(d <= after + linger, "the OLDEST arrival sets the deadline");
+        // waking at the deadline finds the expired request releasable
+        assert!(b.next_batch(d).is_some(), "deadline wake releases the batch");
+        let d2 = b.next_deadline().expect("one request still pending");
+        assert!(d2 > d, "deadline advances to the next-oldest request");
+        assert!(b.next_batch(d2 + linger).is_some());
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct EngineMetrics {
     pub flights_total: u64,
     /// Wall times of individual runs (for percentiles).
     pub walls: Vec<f64>,
+    /// Per-request queue wait (enqueue → dispatch), seconds. Wall time alone
+    /// hides saturation: a loaded server shows flat run walls while requests
+    /// spend ever longer queued — these percentiles make that visible.
+    pub queue_waits: Vec<f64>,
     /// Traffic grouped by protocol prefix ("softmax", "gelu", …).
     pub by_protocol: BTreeMap<String, PhaseStats>,
 }
@@ -66,13 +70,17 @@ impl EngineMetrics {
     }
 
     pub fn percentile_wall_s(&self, p: f64) -> f64 {
-        if self.walls.is_empty() {
-            return 0.0;
-        }
-        let mut w = self.walls.clone();
-        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((w.len() - 1) as f64 * p).round() as usize;
-        w[idx]
+        percentile(&self.walls, p)
+    }
+
+    /// Record one request's enqueue→dispatch queue wait.
+    pub fn record_queue_wait(&mut self, wait_s: f64) {
+        self.queue_waits.push(wait_s);
+    }
+
+    /// Queue-wait percentile across all recorded requests (0 when none).
+    pub fn percentile_queue_wait_s(&self, p: f64) -> f64 {
+        percentile(&self.queue_waits, p)
     }
 
     /// Total end-to-end time under a modeled network: measured compute +
@@ -85,6 +93,17 @@ impl EngineMetrics {
         };
         self.wall_s_total + net.time(&s)
     }
+}
+
+/// Nearest-rank percentile over an unsorted sample (0 when empty).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut w = samples.to_vec();
+    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((w.len() - 1) as f64 * p).round() as usize;
+    w[idx]
 }
 
 /// Registry keyed by engine name.
@@ -114,6 +133,11 @@ impl MetricsRegistry {
     /// Account offline preprocessing/refill wall to an engine.
     pub fn record_offline(&mut self, engine: &str, wall_s: f64) {
         self.engines.entry(engine.to_string()).or_default().offline_wall_s += wall_s;
+    }
+
+    /// Record one request's enqueue→dispatch queue wait for an engine.
+    pub fn record_queue_wait(&mut self, engine: &str, wait_s: f64) {
+        self.engines.entry(engine.to_string()).or_default().record_queue_wait(wait_s);
     }
 
     pub fn get(&self, engine: &str) -> Option<&EngineMetrics> {
@@ -148,6 +172,15 @@ impl MetricsRegistry {
                 m.modeled_total_s(&NetModel::LAN),
                 m.modeled_total_s(&NetModel::WAN),
             ));
+            if !m.queue_waits.is_empty() {
+                out.push_str(&format!(
+                    "{name}: queue wait p50={:.3}s p95={:.3}s p99={:.3}s over {} requests\n",
+                    m.percentile_queue_wait_s(0.50),
+                    m.percentile_queue_wait_s(0.95),
+                    m.percentile_queue_wait_s(0.99),
+                    m.queue_waits.len(),
+                ));
+            }
         }
         out
     }
@@ -217,6 +250,24 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.record(&fake_run(1.0, 1_000_000));
         assert!(m.modeled_total_s(&NetModel::WAN) > m.modeled_total_s(&NetModel::LAN));
+    }
+
+    #[test]
+    fn queue_wait_percentiles_and_report() {
+        let mut reg = MetricsRegistry::default();
+        reg.record("cipherprune", &fake_run(1.0, 10));
+        for i in 1..=100 {
+            reg.record_queue_wait("cipherprune", i as f64 / 100.0);
+        }
+        let m = reg.get("cipherprune").unwrap();
+        assert!((m.percentile_queue_wait_s(0.50) - 0.50).abs() < 0.02);
+        assert!((m.percentile_queue_wait_s(0.95) - 0.95).abs() < 0.02);
+        assert!((m.percentile_queue_wait_s(0.99) - 0.99).abs() < 0.02);
+        assert!(reg.report().contains("queue wait p50="));
+        // no waits recorded → the report omits the line instead of printing zeros
+        let mut quiet = MetricsRegistry::default();
+        quiet.record("iron", &fake_run(1.0, 10));
+        assert!(!quiet.report().contains("queue wait"));
     }
 
     #[test]

@@ -175,7 +175,7 @@ pub mod session;
 pub mod types;
 
 pub use crate::gates::preproc::{PoolStats, PreprocDemand, PreprocReport};
-pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use batcher::{bucket_for, Batch, BatchPolicy, Batcher, RejectReason};
 pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;
 pub use pipeline::{BlockRun, PipelineSpec};

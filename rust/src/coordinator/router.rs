@@ -24,7 +24,7 @@ use crate::net::TransportSpec;
 use crate::nn::{ModelWeights, ThresholdSchedule};
 use crate::util::WorkerPool;
 
-use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::batcher::{Batch, BatchPolicy, Batcher, RejectReason};
 use super::engine::{EngineConfig, PreparedModel};
 use super::metrics::MetricsRegistry;
 use super::pipeline::BlockRun;
@@ -216,14 +216,20 @@ impl Router {
     }
 
     /// Submit a request (queued until a batch releases).
-    /// Err = rejected: too long for the policy, or its id is already in
-    /// flight. Duplicate ids would corrupt latency accounting and response
-    /// ordering, and they key the aligned-truncation nonces — uniqueness is
-    /// part of the privacy contract (see `gates::Mpc::align_begin`).
-    pub fn submit(&mut self, req: InferenceRequest) -> Result<(), InferenceRequest> {
+    /// Err = rejected: the request comes back by value with the typed
+    /// [`RejectReason`] — empty, too long for the policy, or its id already
+    /// in flight — so a serving front door can map the cause to a wire
+    /// error code. Duplicate ids would corrupt latency accounting and
+    /// response ordering, and they key the aligned-truncation nonces —
+    /// uniqueness is part of the privacy contract (see
+    /// `gates::Mpc::align_begin`).
+    pub fn submit(
+        &mut self,
+        req: InferenceRequest,
+    ) -> Result<(), (InferenceRequest, RejectReason)> {
         let id = req.id;
         if self.submitted.iter().any(|(i, _)| *i == id) {
-            return Err(req);
+            return Err((req, RejectReason::DuplicateId));
         }
         self.batcher.push(req)?;
         self.submitted.push((id, Instant::now()));
@@ -233,6 +239,18 @@ impl Router {
     fn run_batch(&mut self, batch: Batch) -> Vec<Response> {
         let bucket = batch.bucket;
         let workers = self.cfg.workers.max(1);
+        // queue wait = submit → dispatch (this instant): the saturation
+        // signal wall time alone hides — a loaded server shows flat walls
+        // but growing waits
+        let dispatched = Instant::now();
+        for r in &batch.requests {
+            if let Some((_, t)) = self.submitted.iter().find(|(i, _)| *i == r.id) {
+                self.metrics.record_queue_wait(
+                    r.engine.name(),
+                    dispatched.duration_since(*t).as_secs_f64(),
+                );
+            }
+        }
         // no bucket padding: the pipeline strips pads anyway (mask-aware),
         // so jobs travel at their submitted length
         let jobs: Vec<(u64, EngineKind, Vec<usize>)> = batch
@@ -457,6 +475,11 @@ mod tests {
         let m = r.metrics.get("cipherprune").unwrap();
         assert_eq!(m.runs, 3);
         assert_eq!(m.requests, 3);
+        assert_eq!(
+            m.queue_waits.len(),
+            3,
+            "every dispatched request records its enqueue→dispatch wait"
+        );
         // 3 requests, 1 model prep, ≤ workers session setups
         assert_eq!(r.metrics.model_preps, 1);
         assert!(r.metrics.session_setups <= 2);
@@ -471,7 +494,9 @@ mod tests {
             ids: vec![1; 100],
             engine: EngineKind::CipherPrune,
         };
-        assert!(r.submit(bad).is_err());
+        let (back, why) = r.submit(bad).unwrap_err();
+        assert_eq!(back.id, 7);
+        assert_eq!(why, RejectReason::TooLong);
     }
 
     #[test]
@@ -481,7 +506,12 @@ mod tests {
         reqs[1].id = reqs[0].id; // duplicate
         assert!(r.submit(reqs.remove(0)).is_ok());
         let dup = reqs.remove(0);
-        assert!(r.submit(dup).is_err(), "duplicate in-flight id must be rejected");
+        let (_, why) = r.submit(dup).unwrap_err();
+        assert_eq!(
+            why,
+            RejectReason::DuplicateId,
+            "duplicate in-flight id must be rejected with the typed reason"
+        );
         assert_eq!(r.pending(), 1);
         // after the original completes, the id is free again
         let resp = r.flush();

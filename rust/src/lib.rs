@@ -8,7 +8,7 @@
 //! - substrates: [`util`], [`fixed`], [`net`], [`party`], [`ot`], [`gates`], [`he`]
 //! - the paper's protocols: [`protocols`] (Π_prune, Π_mask, Π_reduce, Π_SoftMax, …)
 //! - baselines: [`baselines`] (BOLT W.E. bitonic sort, IRON, 3PC cost models)
-//! - model + serving: [`nn`], [`coordinator`]
+//! - model + serving: [`nn`], [`coordinator`], [`serving`] (network front door)
 //! - AOT XLA execution: [`runtime`] (PJRT CPU client over `artifacts/*.hlo.txt`)
 
 pub mod baselines;
@@ -22,6 +22,7 @@ pub mod ot;
 pub mod party;
 pub mod protocols;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 pub use fixed::{Fix, Ring};

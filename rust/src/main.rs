@@ -5,6 +5,12 @@
 //!              decisions, per-protocol traffic, and modeled LAN/WAN time.
 //! - `serve`  — serving demo: router + length-bucketed dynamic batcher over
 //!              a synthetic workload; prints the metrics report.
+//! - `serve-clients` — network front door: accept many concurrent client
+//!              connections (framed wire protocol, see `serving::wire`),
+//!              apply admission control/backpressure, and serve them from
+//!              N independent session shards. A second listener answers
+//!              `GET /metrics` with Prometheus text. Clients use
+//!              `serving::ServingClient` (or `bench_e2e --loadgen`).
 //! - `party`  — run ONE party as its own OS process over real TCP
 //!              (`--role p0 --listen addr` / `--role p1 --connect addr`);
 //!              both processes load the same model and run the same
@@ -17,6 +23,7 @@
 //!   cipherprune run --model tiny --transport tcp      # loopback TCP pair
 //!   cipherprune run --model bert-base --scale 8 --engine bolt --seq 128
 //!   cipherprune serve --model tiny --requests 8 --engine cipherprune
+//!   cipherprune serve-clients --model tiny --listen 127.0.0.1:7450 --shards 2
 //!   cipherprune party --role p0 --listen 127.0.0.1:7441 --model tiny
 //!   cipherprune party --role p1 --connect 127.0.0.1:7441 --model tiny
 //!   cipherprune oracle
@@ -34,6 +41,7 @@
 
 use std::collections::HashMap;
 use std::io::Write as _;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -45,6 +53,7 @@ use cipherprune::net::{new_transcript, Chan, NetModel, TcpTransport, TransportSp
 use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
 use cipherprune::party::PartyId;
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
+use cipherprune::serving::{ServeConfig, Server};
 use cipherprune::util::bench::{fmt_bytes, fmt_duration, Table};
 
 fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -316,6 +325,87 @@ fn cmd_serve(kv: HashMap<String, String>) {
     );
 }
 
+/// Network serving front door: accept client connections until
+/// `--max-requests` requests are settled (0 = run until killed). The
+/// "listening on ADDR" line is printed (and flushed) the moment the sockets
+/// are live and accepting — drivers wait for it before connecting, the same
+/// contract `party --listen` follows.
+fn cmd_serve_clients(kv: HashMap<String, String>) {
+    let (cfg, weights) = load_model(&kv);
+    let he_n = opt_usize(&kv, "he-n", cipherprune::he::params::N);
+    let policy = BatchPolicy {
+        max_batch: opt_usize(&kv, "max-batch", 4),
+        linger: std::time::Duration::from_millis(opt_usize(&kv, "linger-ms", 20) as u64),
+        min_bucket: 8,
+        max_tokens: cfg.max_seq,
+    };
+    let mut serve_cfg = ServeConfig {
+        shards: opt_usize(&kv, "shards", 2),
+        policy,
+        he_n,
+        schedule: Some(schedule_for(&cfg)),
+        threads: kv.get("threads").and_then(|v| v.parse().ok()),
+        transport: transport_for(&kv),
+        max_queue: opt_usize(&kv, "max-queue", 256),
+        max_inflight_per_conn: opt_usize(&kv, "max-inflight", 32),
+        prewarm: Vec::new(),
+    };
+    if kv.contains_key("prewarm") {
+        let engine = kv
+            .get("engine")
+            .and_then(|e| EngineKind::by_name(e))
+            .unwrap_or(EngineKind::CipherPrune);
+        let seq = opt_usize(&kv, "seq", 16.min(cfg.max_seq));
+        serve_cfg.prewarm = vec![(engine, vec![seq; serve_cfg.policy.max_batch.max(1)])];
+    }
+    let max_requests = opt_usize(&kv, "max-requests", 0) as u64;
+
+    let t_prep = std::time::Instant::now();
+    let model = Arc::new(PreparedModel::prepare(Arc::new(weights)));
+    println!(
+        "prepared {} in {} ({} shards)",
+        cfg.name,
+        fmt_duration(t_prep.elapsed().as_secs_f64()),
+        serve_cfg.shards
+    );
+    let listen = kv.get("listen").map(String::as_str).unwrap_or("127.0.0.1:0");
+    let metrics = kv.get("metrics").map(String::as_str).unwrap_or("127.0.0.1:0");
+    let mut server = Server::start(model, serve_cfg, listen, metrics).unwrap_or_else(|e| {
+        eprintln!("serve-clients: {e:#}");
+        std::process::exit(1);
+    });
+    // the harness contract shared with `party`: publish the live addresses
+    // on stdout and flush, so a driver can connect the moment they appear
+    println!("listening on {}", server.addr());
+    println!("metrics on http://{}/metrics", server.metrics_addr());
+    std::io::stdout().flush().ok();
+
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if max_requests > 0 {
+            let s = server.stats();
+            let settled = s.completed.load(Ordering::SeqCst)
+                + s.failed.load(Ordering::SeqCst)
+                + s.cancelled.load(Ordering::SeqCst);
+            if settled >= max_requests {
+                break;
+            }
+        }
+    }
+    server.shutdown();
+    let s = server.stats();
+    println!(
+        "served: accepted={} completed={} failed={} cancelled={} shed_overloaded={} shed_rejected={}",
+        s.accepted.load(Ordering::SeqCst),
+        s.completed.load(Ordering::SeqCst),
+        s.failed.load(Ordering::SeqCst),
+        s.cancelled.load(Ordering::SeqCst),
+        s.shed_overloaded.load(Ordering::SeqCst),
+        s.shed_rejected.load(Ordering::SeqCst),
+    );
+    print!("{}", server.registry().lock().expect("registry lock").report());
+}
+
 /// Run ONE party of the two-party protocol as this OS process, over real
 /// TCP. Both processes must be started with identical model/engine/seed/
 /// workload flags (the handshake verifies this before any protocol round)
@@ -509,11 +599,14 @@ fn main() {
     match pos.first().map(String::as_str) {
         Some("run") => cmd_run(kv),
         Some("serve") => cmd_serve(kv),
+        Some("serve-clients") => cmd_serve_clients(kv),
         Some("party") => cmd_party(kv),
         Some("oracle") => cmd_oracle(kv),
         Some("info") | None => cmd_info(),
         Some(other) => {
-            eprintln!("unknown subcommand '{other}' — try run|serve|party|oracle|info");
+            eprintln!(
+                "unknown subcommand '{other}' — try run|serve|serve-clients|party|oracle|info"
+            );
             std::process::exit(2);
         }
     }

@@ -64,7 +64,7 @@
 pub mod tcp;
 pub mod transport;
 
-pub use tcp::TcpTransport;
+pub use tcp::{read_frame, write_frame, TcpTransport};
 pub use transport::{CutTransport, MemTransport, SimTransport, Transport};
 
 use std::cell::RefCell;

@@ -36,6 +36,32 @@ fn io_err(e: io::Error) -> NetError {
     }
 }
 
+/// Read one `u32 LE length ‖ payload` frame from any byte stream. A clean
+/// EOF at a frame boundary (and any mid-frame truncation) surfaces as
+/// [`NetError::Disconnected`]. Shared by [`TcpTransport`] and the serving
+/// front door (`crate::serving`), so both speak the identical framing.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, NetError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes).map_err(io_err)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(NetError::Frame(format!("bad frame length {len}")));
+    }
+    let mut frame = vec![0u8; len];
+    r.read_exact(&mut frame).map_err(io_err)?;
+    Ok(frame)
+}
+
+/// Write one `u32 LE length ‖ payload` frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<(), NetError> {
+    if frame.len() > MAX_FRAME {
+        return Err(NetError::Frame(format!("frame too large: {} bytes", frame.len())));
+    }
+    w.write_all(&(frame.len() as u32).to_le_bytes()).map_err(io_err)?;
+    w.write_all(frame).map_err(io_err)?;
+    w.flush().map_err(io_err)
+}
+
 /// One endpoint of a framed TCP link.
 pub struct TcpTransport {
     reader: BufReader<TcpStream>,
@@ -52,10 +78,7 @@ impl TcpTransport {
         let writer = std::thread::spawn(move || {
             let mut w = BufWriter::new(write_half);
             while let Ok(frame) = wrx.recv() {
-                if w.write_all(&(frame.len() as u32).to_le_bytes()).is_err()
-                    || w.write_all(&frame).is_err()
-                    || w.flush().is_err()
-                {
+                if write_frame(&mut w, &frame).is_err() {
                     // peer gone: drain silently; the reader side reports it
                     return;
                 }
@@ -129,15 +152,7 @@ impl Transport for TcpTransport {
     }
 
     fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
-        let mut len_bytes = [0u8; 4];
-        self.reader.read_exact(&mut len_bytes).map_err(io_err)?;
-        let len = u32::from_le_bytes(len_bytes) as usize;
-        if len == 0 || len > MAX_FRAME {
-            return Err(NetError::Frame(format!("bad frame length {len}")));
-        }
-        let mut frame = vec![0u8; len];
-        self.reader.read_exact(&mut frame).map_err(io_err)?;
-        Ok(frame)
+        read_frame(&mut self.reader)
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,73 @@
+//! Client library for the serving front door.
+//!
+//! [`ServingClient`] speaks the [`super::wire`] protocol over the standard
+//! framed TCP link ([`crate::net::TcpTransport`]). Responses come back in
+//! *completion* order, not submission order — a client pipelining several
+//! requests must correlate by id ([`call`](ServingClient::call) does this
+//! for the one-at-a-time case; [`recv`](ServingClient::recv) exposes the
+//! raw stream for load generators with many requests in flight).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::net::{NetError, TcpTransport, Transport};
+
+use super::wire::{decode_response, encode_request, WireRequest, WireResponse};
+
+/// One client connection to a serving front door.
+pub struct ServingClient {
+    link: TcpTransport,
+    /// Responses read while waiting for a different id (pipelined peers).
+    stashed: HashMap<u64, WireResponse>,
+}
+
+impl ServingClient {
+    pub fn connect(addr: &str) -> std::io::Result<ServingClient> {
+        Ok(ServingClient { link: TcpTransport::connect(addr)?, stashed: HashMap::new() })
+    }
+
+    /// Connect with retries — lets a client start while the server is still
+    /// binding (mirrors [`TcpTransport::connect_retry`]).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> std::io::Result<ServingClient> {
+        Ok(ServingClient {
+            link: TcpTransport::connect_retry(addr, timeout)?,
+            stashed: HashMap::new(),
+        })
+    }
+
+    /// Fire one request without waiting for its response (pipelining).
+    pub fn send(&mut self, req: &WireRequest) -> Result<(), NetError> {
+        self.link.send_frame(encode_request(req))
+    }
+
+    /// Next response from the server, in completion order.
+    pub fn recv(&mut self) -> Result<WireResponse, NetError> {
+        if let Some(&id) = self.stashed.keys().next() {
+            return Ok(self.stashed.remove(&id).expect("key just observed"));
+        }
+        let frame = self.link.recv_frame()?;
+        decode_response(&frame).map_err(NetError::Frame)
+    }
+
+    /// The response to the specific id, stashing any other ids that arrive
+    /// first so their own waiters still see them.
+    pub fn recv_for(&mut self, id: u64) -> Result<WireResponse, NetError> {
+        if let Some(r) = self.stashed.remove(&id) {
+            return Ok(r);
+        }
+        loop {
+            let frame = self.link.recv_frame()?;
+            let resp = decode_response(&frame).map_err(NetError::Frame)?;
+            if resp.id() == id {
+                return Ok(resp);
+            }
+            self.stashed.insert(resp.id(), resp);
+        }
+    }
+
+    /// Send one request and wait for its response.
+    pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse, NetError> {
+        self.send(req)?;
+        self.recv_for(req.id)
+    }
+}

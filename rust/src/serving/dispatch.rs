@@ -1,0 +1,502 @@
+//! Sharded session backend behind the serving front door.
+//!
+//! The dispatcher owns N independent *shards*. Each shard is one thread
+//! with its own length-bucketed [`Batcher`] and its own per-kind
+//! [`Session`]s (each a live P0/P1 two-party pair), so shards share
+//! nothing and never contend on crypto state. Connections route jobs by
+//! `(engine kind, length bucket)` through [`shard_for`] — a pure function,
+//! so the same request shape always lands on the same shard and therefore
+//! the same session seed, which is what makes served responses bit-identical
+//! to a direct [`Session::infer`] against [`shard_seed`].
+//!
+//! Shard loop contract:
+//! - sleep until the batcher's [`next_deadline`](Batcher::next_deadline)
+//!   (or a new arrival) — no busy-polling, linger promises kept;
+//! - jobs whose connection died before dispatch are dropped (counted as
+//!   cancelled), so a severed client cannot occupy batch slots;
+//! - a batch failure answers *those* jobs with `Failed` and evicts the
+//!   poisoned session — the next batch of that kind gets a fresh session
+//!   (next seed in the shard's sequence) and the shard thread never dies;
+//! - idle ticks refill the sessions' correlated-randomness pools
+//!   ([`Session::refill`]) so bursts pay online cost only.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pipeline::normalize_blocks;
+use crate::coordinator::{
+    bucket_for, BatchPolicy, Batcher, BlockRun, EngineConfig, EngineKind, InferenceRequest,
+    MetricsRegistry, PreparedModel, Session,
+};
+
+use super::server::{ServeConfig, ServerStats};
+use super::wire::{RejectCode, WireResponse};
+
+/// How long an idle shard sleeps between maintenance ticks when nothing is
+/// queued (pool refills happen on these ticks).
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// Which shard serves `(kind, bucket)`. Pure and total: the front door, the
+/// shards, and the bit-identity tests all agree on placement without
+/// coordination. Spreads kinds across shards (the ×31 keeps distinct kinds
+/// from aliasing on small shard counts) and distinct buckets of one kind
+/// across shards too.
+pub fn shard_for(kind: EngineKind, bucket: usize, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    (kind.ordinal() as usize * 31 + bucket) % n_shards
+}
+
+/// Session seed for the `seq`-th session of `kind` on `shard`. Deterministic
+/// so a test can build the *same* session out-of-band and expect bit-equal
+/// logits: the first session a shard creates for a kind uses `seq = 0`, and
+/// each eviction (poisoned session replaced) advances `seq` by one.
+pub fn shard_seed(shard: usize, kind: EngineKind, seq: u64) -> u64 {
+    (0x5EAF_u64 ^ (kind.ordinal() << 16) ^ ((shard as u64) << 40)).wrapping_mul(seq + 1)
+}
+
+/// One admitted request in flight between a connection and a shard.
+pub struct Job {
+    /// Client-chosen request id (scoped to its connection).
+    pub id: u64,
+    /// Client-chosen alignment nonce (content-mixed downstream).
+    pub nonce: u64,
+    pub kind: EngineKind,
+    pub ids: Vec<usize>,
+    /// Admission time — queue wait is measured from here to dispatch.
+    pub enqueued: Instant,
+    /// Cleared when the owning connection goes away; the shard then drops
+    /// the job instead of spending a batch slot on it.
+    pub alive: Arc<std::sync::atomic::AtomicBool>,
+    /// The connection's in-flight id set (shared with admission control);
+    /// the shard removes the id once the job is answered or cancelled.
+    pub inflight: Arc<Mutex<std::collections::HashSet<u64>>>,
+    /// Where the response goes (the connection's writer queue).
+    pub reply: Sender<WireResponse>,
+}
+
+impl Job {
+    /// Settle the job's admission bookkeeping: free the connection's
+    /// in-flight slot and the global queue-depth gauge.
+    fn settle(&self, stats: &ServerStats) {
+        self.inflight.lock().expect("inflight set lock").remove(&self.id);
+        stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The connections' routing view of the shard set: clone one per
+/// connection thread. Placement is [`shard_for`] over the *normalized*
+/// batch policy, matching what each shard's own batcher computes.
+#[derive(Clone)]
+pub struct RouteMap {
+    senders: Vec<Sender<Job>>,
+    policy: BatchPolicy,
+}
+
+impl RouteMap {
+    pub fn n_shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Route an admitted job to its shard. `Err` returns the job only when
+    /// the shard set is shutting down (its receiver is gone).
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        let shard = shard_for(job.kind, bucket_for(job.ids.len(), &self.policy), self.n_shards());
+        self.senders[shard].send(job).map_err(|e| e.0)
+    }
+}
+
+/// Handle owning the shard threads. Dropping it closes every shard's queue;
+/// shards drain what is already admitted (answering each job) and exit, and
+/// the drop blocks until they have.
+pub struct Dispatch {
+    senders: Vec<Sender<Job>>,
+    shards: Vec<JoinHandle<()>>,
+}
+
+impl Dispatch {
+    /// Spawn the shard threads and return the handle plus the router the
+    /// connections use. `stats`/`registry` are shared with the front door.
+    pub fn start(
+        model: Arc<PreparedModel>,
+        cfg: &ServeConfig,
+        stats: Arc<ServerStats>,
+        registry: Arc<Mutex<MetricsRegistry>>,
+    ) -> (Dispatch, RouteMap) {
+        let n = cfg.shards.max(1);
+        let policy = cfg.policy.normalized();
+        let mut senders = Vec::with_capacity(n);
+        let mut shards = Vec::with_capacity(n);
+        for shard in 0..n {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let model = model.clone();
+            let cfg = cfg.clone();
+            let stats = stats.clone();
+            let registry = registry.clone();
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("shard-{shard}"))
+                    .spawn(move || shard_loop(shard, model, cfg, rx, stats, registry))
+                    .expect("spawn shard thread"),
+            );
+        }
+        (Dispatch { senders: senders.clone(), shards }, RouteMap { senders, policy })
+    }
+}
+
+impl Drop for Dispatch {
+    fn drop(&mut self) {
+        // RouteMap clones in connection threads must already be gone (the
+        // server joins connections first); dropping the master senders
+        // disconnects the shard queues, which drain and exit.
+        self.senders.clear();
+        for h in self.shards.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-kind live session plus the seed sequence number that created it.
+struct ShardSession {
+    session: Session,
+    seq: u64,
+}
+
+struct Shard {
+    shard: usize,
+    model: Arc<PreparedModel>,
+    cfg: ServeConfig,
+    stats: Arc<ServerStats>,
+    registry: Arc<Mutex<MetricsRegistry>>,
+    batcher: Batcher,
+    /// Shard-local serial → job. The batcher keys requests by the *serial*,
+    /// not the client id: client ids are only unique per connection.
+    jobs: HashMap<u64, Job>,
+    next_serial: u64,
+    sessions: HashMap<EngineKind, ShardSession>,
+    /// Next seed sequence number per kind (advances on every session build).
+    next_seq: HashMap<EngineKind, u64>,
+}
+
+fn shard_loop(
+    shard: usize,
+    model: Arc<PreparedModel>,
+    cfg: ServeConfig,
+    rx: Receiver<Job>,
+    stats: Arc<ServerStats>,
+    registry: Arc<Mutex<MetricsRegistry>>,
+) {
+    let batcher = Batcher::new(cfg.policy);
+    let mut s = Shard {
+        shard,
+        model,
+        cfg,
+        stats,
+        registry,
+        batcher,
+        jobs: HashMap::new(),
+        next_serial: 0,
+        sessions: HashMap::new(),
+        next_seq: HashMap::new(),
+    };
+    s.prewarm();
+    loop {
+        // drain arrivals without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(job) => s.enqueue(job),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return s.drain_and_exit(),
+            }
+        }
+        // release everything currently ready
+        let now = Instant::now();
+        while let Some(batch) = s.batcher.next_batch(now) {
+            s.run_batch(batch);
+        }
+        // sleep until the next linger deadline or the next arrival
+        let wait = match s.batcher.next_deadline() {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => IDLE_TICK,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(job) => s.enqueue(job),
+            Err(RecvTimeoutError::Timeout) => {
+                if s.batcher.pending() == 0 {
+                    s.maintain();
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return s.drain_and_exit(),
+        }
+    }
+}
+
+impl Shard {
+    fn enqueue(&mut self, job: Job) {
+        self.next_serial += 1;
+        let serial = self.next_serial;
+        let req = InferenceRequest { id: serial, ids: job.ids.clone(), engine: job.kind };
+        match self.batcher.push(req) {
+            Ok(_) => {
+                self.jobs.insert(serial, job);
+            }
+            // the front door already rejected these shapes; defensive only
+            Err((_, reason)) => {
+                let code = RejectCode::from_reason(reason).unwrap_or(RejectCode::Malformed);
+                self.stats.shed_rejected.fetch_add(1, Ordering::SeqCst);
+                job.settle(&self.stats);
+                let _ = job.reply.send(WireResponse::Rejected {
+                    id: job.id,
+                    code,
+                    detail: reason.as_str().to_string(),
+                });
+            }
+        }
+    }
+
+    /// Shutdown path: everything already admitted still gets an answer.
+    fn drain_and_exit(&mut self) {
+        for batch in self.batcher.drain_all() {
+            self.run_batch(batch);
+        }
+    }
+
+    fn prewarm(&mut self) {
+        let prewarm = std::mem::take(&mut self.cfg.prewarm);
+        for (kind, lens) in &prewarm {
+            // only warm shapes this shard would actually serve
+            let lens: Vec<usize> = lens
+                .iter()
+                .copied()
+                .filter(|&l| {
+                    let b = bucket_for(l.max(1), self.batcher.policy());
+                    shard_for(*kind, b, self.cfg.shards.max(1)) == self.shard
+                })
+                .collect();
+            if lens.is_empty() {
+                continue;
+            }
+            let t0 = Instant::now();
+            match self.session_for(*kind) {
+                Ok(sess) => {
+                    if let Err(e) = sess.session.preprocess(&lens) {
+                        eprintln!("shard {}: prewarm {} failed: {e:#}", self.shard, kind.name());
+                    }
+                    let mut reg = self.registry.lock().expect("registry lock");
+                    reg.record_offline(kind.name(), t0.elapsed().as_secs_f64());
+                }
+                Err(e) => eprintln!("shard {}: prewarm {} setup: {e:#}", self.shard, kind.name()),
+            }
+        }
+    }
+
+    /// Idle-tick maintenance: top every healthy session's randomness pools
+    /// back up (mirrors `Router::maintain`).
+    fn maintain(&mut self) {
+        for (kind, ss) in self.sessions.iter_mut() {
+            if ss.session.poisoned().is_some() {
+                continue;
+            }
+            let t0 = Instant::now();
+            match ss.session.refill() {
+                Ok(d) => {
+                    if !d.is_empty() {
+                        let mut reg = self.registry.lock().expect("registry lock");
+                        reg.record_offline(kind.name(), t0.elapsed().as_secs_f64());
+                    }
+                }
+                Err(_) => {
+                    // poisoned now; the next batch of this kind evicts it
+                    self.registry.lock().expect("registry lock").refill_failures += 1;
+                }
+            }
+        }
+    }
+
+    fn engine_cfg(&self, kind: EngineKind, seed: u64) -> EngineConfig {
+        let mut ec = EngineConfig::new(kind)
+            .he_n(self.cfg.he_n)
+            .seed(seed)
+            .transport(self.cfg.transport.clone());
+        if let Some(t) = self.cfg.threads {
+            ec = ec.threads(t);
+        }
+        if let Some(s) = &self.cfg.schedule {
+            ec = ec.schedule(s.clone());
+        }
+        ec
+    }
+
+    /// Get or (re)build this shard's session for `kind`. Seeds follow
+    /// [`shard_seed`]'s deterministic sequence.
+    fn session_for(&mut self, kind: EngineKind) -> anyhow::Result<&mut ShardSession> {
+        if !self.sessions.contains_key(&kind) {
+            let seq = *self.next_seq.get(&kind).unwrap_or(&0);
+            let ec = self.engine_cfg(kind, shard_seed(self.shard, kind, seq));
+            let session = Session::start(self.model.clone(), ec)?;
+            self.next_seq.insert(kind, seq + 1);
+            self.registry.lock().expect("registry lock").session_setups += 1;
+            self.sessions.insert(kind, ShardSession { session, seq });
+        }
+        Ok(self.sessions.get_mut(&kind).expect("just inserted"))
+    }
+
+    fn run_batch(&mut self, batch: crate::coordinator::Batch) {
+        // map serials back to jobs, dropping those whose connection died
+        let mut live: Vec<Job> = Vec::with_capacity(batch.requests.len());
+        for r in &batch.requests {
+            let Some(job) = self.jobs.remove(&r.id) else { continue };
+            if !job.alive.load(Ordering::SeqCst) {
+                self.stats.cancelled.fetch_add(1, Ordering::SeqCst);
+                job.settle(&self.stats);
+                continue;
+            }
+            live.push(job);
+        }
+        if live.is_empty() {
+            return;
+        }
+        // group by kind (a bucket can hold several kinds)
+        let mut by_kind: Vec<(EngineKind, Vec<Job>)> = Vec::new();
+        for job in live {
+            match by_kind.iter_mut().find(|(k, _)| *k == job.kind) {
+                Some((_, v)) => v.push(job),
+                None => by_kind.push((job.kind, vec![job])),
+            }
+        }
+        for (kind, jobs) in by_kind {
+            self.run_kind_group(kind, jobs);
+        }
+    }
+
+    fn run_kind_group(&mut self, kind: EngineKind, jobs: Vec<Job>) {
+        // queue wait is admission → dispatch, measured here where the batch
+        // actually starts executing
+        let dispatched = Instant::now();
+        let mut waits = Vec::with_capacity(jobs.len());
+        {
+            let mut reg = self.registry.lock().expect("registry lock");
+            for job in &jobs {
+                let w = dispatched.duration_since(job.enqueued).as_secs_f64();
+                reg.record_queue_wait(kind.name(), w);
+                self.stats.record_queue_wait(w);
+                waits.push(w);
+            }
+        }
+        // two jobs with the same (nonce, content) may sit in one batch
+        // (different connections can pick the same nonce); infer_batch
+        // rejects duplicate effective nonces, so partition into waves of
+        // unique effective nonces and run each wave as one fused batch
+        let blocks: Vec<BlockRun> = jobs
+            .iter()
+            .map(|j| BlockRun { nonce: j.nonce, ids: j.ids.clone() })
+            .collect();
+        let effective: Vec<u64> = normalize_blocks(&blocks).iter().map(|b| b.nonce).collect();
+        let mut waves: Vec<Vec<usize>> = Vec::new(); // indices into jobs
+        for (i, n) in effective.iter().enumerate() {
+            match waves.iter_mut().find(|w| w.iter().all(|&j| effective[j] != *n)) {
+                Some(w) => w.push(i),
+                None => waves.push(vec![i]),
+            }
+        }
+        for wave in waves {
+            let wave_blocks: Vec<BlockRun> = wave.iter().map(|&i| blocks[i].clone()).collect();
+            let result = match self.session_for(kind) {
+                Ok(ss) => ss.session.infer_batch(&wave_blocks),
+                Err(e) => Err(e.context("building shard session")),
+            };
+            match result {
+                Ok(results) => {
+                    // batch-level metrics recorded ONCE (shared wall/traffic)
+                    if let Some(first) = results.first() {
+                        let mut reg = self.registry.lock().expect("registry lock");
+                        reg.record(kind.name(), first);
+                    }
+                    for (&i, r) in wave.iter().zip(results) {
+                        let job = &jobs[i];
+                        // settle the books BEFORE the reply goes out: a
+                        // client that scrapes /metrics right after its
+                        // response must see consistent counters
+                        self.stats.completed.fetch_add(1, Ordering::SeqCst);
+                        job.settle(&self.stats);
+                        let _ = job.reply.send(WireResponse::Result {
+                            id: job.id,
+                            batch_size: r.batch_size as u32,
+                            queue_wait_s: waits[i],
+                            logits: r.logits,
+                        });
+                    }
+                }
+                Err(e) => {
+                    // fail THESE requests; evict the session if poisoned so
+                    // the next batch gets a fresh one — the shard lives on
+                    let detail = format!("{e:#}");
+                    for &i in &wave {
+                        let job = &jobs[i];
+                        self.stats.failed.fetch_add(1, Ordering::SeqCst);
+                        job.settle(&self.stats);
+                        let _ = job.reply.send(WireResponse::Failed {
+                            id: job.id,
+                            detail: detail.clone(),
+                        });
+                    }
+                    {
+                        let mut reg = self.registry.lock().expect("registry lock");
+                        reg.failures += wave.len() as u64;
+                    }
+                    if let Some(ss) = self.sessions.get(&kind) {
+                        if ss.session.poisoned().is_some() {
+                            self.sessions.remove(&kind);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_placement_is_stable_and_in_range() {
+        for kind in EngineKind::all() {
+            for bucket in [16usize, 32, 64, 128, 512] {
+                for n in [1usize, 2, 3, 8] {
+                    let s = shard_for(kind, bucket, n);
+                    assert!(s < n);
+                    assert_eq!(s, shard_for(kind, bucket, n), "pure function");
+                }
+            }
+        }
+        // single shard always routes to 0
+        assert_eq!(shard_for(EngineKind::CipherPrune, 512, 1), 0);
+    }
+
+    #[test]
+    fn shard_seeds_are_distinct_across_shards_kinds_and_generations() {
+        let mut seen = std::collections::HashSet::new();
+        for shard in 0..4 {
+            for kind in EngineKind::all() {
+                for seq in 0..3 {
+                    assert!(
+                        seen.insert(shard_seed(shard, kind, seq)),
+                        "seed collision at shard {shard} kind {} seq {seq}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Client-facing serving front door: a concurrent network server over the
+//! framed wire protocol, admission control and backpressure in front of the
+//! batching machinery, and a sharded session backend.
+//!
+//! ```text
+//!  clients ──TCP──► front door ──► dispatcher ──► shard 0 ─ P0 ⇄ P1
+//!  (many)          (admission,    (kind/bucket    shard 1 ─ P0 ⇄ P1
+//!                   backpressure)  placement)       …
+//!           ◄─typed responses─┘                  shard N-1 ─ P0 ⇄ P1
+//! ```
+//!
+//! # The admission / backpressure / shedding contract
+//!
+//! - **Every frame gets a typed answer.** A request is either admitted (and
+//!   eventually answered with `Result`, `Failed`, or silently dropped only
+//!   if *its own* connection died) or immediately shed with `Overloaded`
+//!   (queue full — retryable) or `Rejected` (a [`RejectCode`] names the
+//!   cause: malformed, unknown engine, empty, too long, duplicate id,
+//!   per-connection cap). Clients never hang on a shed request.
+//! - **Backpressure is bounded and explicit.** Admitted-but-unfinished work
+//!   is capped by `max_queue` globally and `max_inflight_per_conn` per
+//!   connection; beyond either bound the server sheds instead of queueing.
+//!   Reads are per-connection threads, responses go through per-connection
+//!   writer queues — a slow client never blocks shards or other clients.
+//! - **Failure stays request-scoped.** A backend error answers exactly the
+//!   affected requests with `Failed` and evicts the poisoned session; a
+//!   severed connection cancels its queued jobs at dispatch time. Neither
+//!   poisons other connections, shards, or the process.
+//! - **Served results are bit-identical to direct inference.** Placement
+//!   ([`shard_for`]) and session seeding ([`shard_seed`]) are deterministic
+//!   pure functions, so for any admitted request the response logits equal
+//!   a direct [`Session`](crate::coordinator::Session) run with the same
+//!   (nonce, content) under the seed those functions name.
+//!
+//! Observability: a second listener answers `GET /metrics` with the
+//! Prometheus text exposition — serving counters (accepted / completed /
+//! shed / cancelled), the queue-depth gauge, a queue-wait histogram, and
+//! the per-engine run counters from [`MetricsRegistry`].
+//!
+//! [`MetricsRegistry`]: crate::coordinator::MetricsRegistry
+//!
+//! Entry points: `cipherprune serve-clients` (binary), [`Server::start`]
+//! (library), [`ServingClient`] (callers), `bench_e2e --loadgen` (load
+//! generator).
+
+pub mod client;
+pub mod dispatch;
+pub mod server;
+pub mod wire;
+
+pub use client::ServingClient;
+pub use dispatch::{shard_for, shard_seed, Dispatch, Job, RouteMap};
+pub use server::{ServeConfig, Server, ServerStats, QUEUE_WAIT_BUCKETS};
+pub use wire::{
+    decode_request, decode_response, encode_request, encode_response, DecodeError, RejectCode,
+    WireRequest, WireResponse,
+};

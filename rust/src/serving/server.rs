@@ -1,0 +1,629 @@
+//! Concurrent network front door: accepts many client connections, applies
+//! admission control, and feeds admitted jobs to the sharded backend
+//! ([`super::dispatch`]).
+//!
+//! # Admission control and backpressure
+//!
+//! Every request frame is judged *before* it can queue (in this order, so a
+//! client sees the most actionable cause):
+//!
+//! 1. undecodable / unknown engine → `Rejected(Malformed | UnknownEngine)`;
+//! 2. empty token list → `Rejected(EmptyInput)`;
+//! 3. longer than the batch policy's `max_tokens` → `Rejected(TooLong)`;
+//! 4. id already in flight on this connection → `Rejected(DuplicateId)`;
+//! 5. per-connection in-flight cap reached → `Rejected(TooManyInFlight)`;
+//! 6. global queue at `max_queue` → `Overloaded` (the *retryable* shed —
+//!    nothing about the request is wrong, the server is momentarily full).
+//!
+//! Shedding is graceful by construction: a rejected or shed request gets a
+//! typed response on its own connection and nothing else changes — other
+//! connections, queued work, and the process are untouched. A connection
+//! that disappears mid-flight cancels its queued jobs (the shard drops them
+//! at dispatch) without poisoning any session.
+
+use std::collections::HashSet;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::coordinator::{BatchPolicy, EngineKind, MetricsRegistry, PreparedModel};
+use crate::net::TransportSpec;
+use crate::net::{read_frame, write_frame};
+use crate::nn::ThresholdSchedule;
+
+use super::dispatch::{Dispatch, Job, RouteMap};
+use super::wire::{decode_request, encode_response, RejectCode, WireResponse};
+
+/// Poll interval of the (non-blocking) accept loops while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Everything the serving stack needs to stand up: backend shape (shards,
+/// engine parameters) plus front-door limits (queue bound, per-connection
+/// cap).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Independent session shards (threads); ≥ 1.
+    pub shards: usize,
+    /// Batch policy every shard's batcher runs (normalized at use).
+    pub policy: BatchPolicy,
+    /// BFV ring degree for the shard sessions.
+    pub he_n: usize,
+    /// Explicit θ/β schedule (None = per-kind default).
+    pub schedule: Option<ThresholdSchedule>,
+    /// Worker threads per party (None = size from host).
+    pub threads: Option<usize>,
+    /// Channel backend for each shard's P0/P1 link.
+    pub transport: TransportSpec,
+    /// Global bound on admitted-but-unfinished requests; at the bound new
+    /// requests shed with `Overloaded`.
+    pub max_queue: usize,
+    /// Per-connection in-flight cap; above it requests shed with
+    /// `Rejected(TooManyInFlight)`.
+    pub max_inflight_per_conn: usize,
+    /// Shapes to prewarm at startup: each shard builds the kind's session
+    /// and preprocesses pools for the lengths it would serve.
+    pub prewarm: Vec<(EngineKind, Vec<usize>)>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 2,
+            policy: BatchPolicy::default(),
+            he_n: crate::he::params::N,
+            schedule: None,
+            threads: None,
+            transport: TransportSpec::Mem,
+            max_queue: 256,
+            max_inflight_per_conn: 32,
+            prewarm: Vec::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Test-sized HE ring (fast; keeps all protocol structure).
+    pub fn for_tests() -> Self {
+        ServeConfig { he_n: 128, ..Default::default() }
+    }
+}
+
+/// Upper edges of the queue-wait histogram (seconds); one +Inf bucket on top.
+pub const QUEUE_WAIT_BUCKETS: [f64; 8] = [0.001, 0.005, 0.025, 0.1, 0.5, 1.0, 2.5, 5.0];
+
+/// Lock-free serving counters, shared by the front door, the shards, and
+/// the `/metrics` endpoint. All counters are cumulative since start except
+/// `queue_depth`, the admitted-but-unfinished gauge.
+#[derive(Default)]
+pub struct ServerStats {
+    /// Client connections ever accepted.
+    pub connections: AtomicU64,
+    /// Requests past admission control (the complement of the sheds).
+    pub accepted: AtomicU64,
+    /// Requests answered with a `Result`.
+    pub completed: AtomicU64,
+    /// Requests answered with `Failed` (backend error).
+    pub failed: AtomicU64,
+    /// Admitted requests dropped because their connection went away.
+    pub cancelled: AtomicU64,
+    /// Requests shed with `Overloaded` (queue at capacity).
+    pub shed_overloaded: AtomicU64,
+    /// Requests answered with a typed `Rejected`.
+    pub shed_rejected: AtomicU64,
+    /// Gauge: admitted requests not yet completed/failed/cancelled.
+    pub queue_depth: AtomicU64,
+    /// Queue-wait histogram: per-bucket increments for
+    /// [`QUEUE_WAIT_BUCKETS`] plus one overflow (+Inf) bucket, with
+    /// sum/count in microseconds for the Prometheus `_sum`/`_count` pair.
+    qw_buckets: [AtomicU64; 9],
+    qw_sum_micros: AtomicU64,
+    qw_count: AtomicU64,
+}
+
+impl ServerStats {
+    /// Record one enqueue→dispatch queue wait into the histogram.
+    pub fn record_queue_wait(&self, wait_s: f64) {
+        let idx = QUEUE_WAIT_BUCKETS
+            .iter()
+            .position(|&le| wait_s <= le)
+            .unwrap_or(QUEUE_WAIT_BUCKETS.len());
+        self.qw_buckets[idx].fetch_add(1, Ordering::SeqCst);
+        self.qw_sum_micros.fetch_add((wait_s * 1e6).max(0.0) as u64, Ordering::SeqCst);
+        self.qw_count.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Render the Prometheus text exposition (version 0.0.4): serving
+    /// counters, the queue-depth gauge, the queue-wait histogram (cumulative
+    /// buckets, as the format requires), and the engine registry's run
+    /// counters.
+    pub fn render_prometheus(&self, registry: &MetricsRegistry) -> String {
+        let mut out = String::new();
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter(
+            &mut out,
+            "cipherprune_connections_total",
+            "Client connections accepted.",
+            self.connections.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_requests_accepted_total",
+            "Requests admitted past admission control.",
+            self.accepted.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_requests_completed_total",
+            "Requests answered with a result.",
+            self.completed.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_requests_failed_total",
+            "Requests answered with a backend failure.",
+            self.failed.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_requests_cancelled_total",
+            "Admitted requests dropped because their connection went away.",
+            self.cancelled.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_shed_overloaded_total",
+            "Requests shed with Overloaded (queue at capacity).",
+            self.shed_overloaded.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_shed_rejected_total",
+            "Requests refused with a typed rejection.",
+            self.shed_rejected.load(Ordering::SeqCst),
+        );
+        out.push_str(&format!(
+            "# HELP cipherprune_queue_depth Admitted requests not yet finished.\n\
+             # TYPE cipherprune_queue_depth gauge\n\
+             cipherprune_queue_depth {}\n",
+            self.queue_depth.load(Ordering::SeqCst)
+        ));
+        out.push_str(
+            "# HELP cipherprune_queue_wait_seconds Request queue wait (admission to dispatch).\n\
+             # TYPE cipherprune_queue_wait_seconds histogram\n",
+        );
+        let mut cum = 0u64;
+        for (i, le) in QUEUE_WAIT_BUCKETS.iter().enumerate() {
+            cum += self.qw_buckets[i].load(Ordering::SeqCst);
+            let line = format!("cipherprune_queue_wait_seconds_bucket{{le=\"{le}\"}} {cum}\n");
+            out.push_str(&line);
+        }
+        cum += self.qw_buckets[QUEUE_WAIT_BUCKETS.len()].load(Ordering::SeqCst);
+        out.push_str(&format!("cipherprune_queue_wait_seconds_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!(
+            "cipherprune_queue_wait_seconds_sum {}\n",
+            self.qw_sum_micros.load(Ordering::SeqCst) as f64 / 1e6
+        ));
+        out.push_str(&format!(
+            "cipherprune_queue_wait_seconds_count {}\n",
+            self.qw_count.load(Ordering::SeqCst)
+        ));
+        counter(
+            &mut out,
+            "cipherprune_model_preps_total",
+            "One-time model weight encodings.",
+            registry.model_preps,
+        );
+        counter(
+            &mut out,
+            "cipherprune_session_setups_total",
+            "Two-party session setups (keygen + base OTs).",
+            registry.session_setups,
+        );
+        counter(
+            &mut out,
+            "cipherprune_refill_failures_total",
+            "Background pool refills that failed.",
+            registry.refill_failures,
+        );
+        out.push_str(
+            "# HELP cipherprune_engine_runs_total Pipeline runs per engine (fused batches count once).\n\
+             # TYPE cipherprune_engine_runs_total counter\n",
+        );
+        for (name, m) in &registry.engines {
+            out.push_str(&format!(
+                "cipherprune_engine_runs_total{{engine=\"{name}\"}} {}\n",
+                m.runs
+            ));
+        }
+        out.push_str(
+            "# HELP cipherprune_engine_requests_total Requests served per engine.\n\
+             # TYPE cipherprune_engine_requests_total counter\n",
+        );
+        for (name, m) in &registry.engines {
+            out.push_str(&format!(
+                "cipherprune_engine_requests_total{{engine=\"{name}\"}} {}\n",
+                m.requests
+            ));
+        }
+        out
+    }
+}
+
+/// The serving front door. [`start`](Self::start) binds both listeners and
+/// returns once the address is live; [`shutdown`](Self::shutdown) (also on
+/// drop) tears everything down in order — connections first, then the
+/// shards, so every admitted request is settled (answered or counted
+/// cancelled) before the process moves on.
+pub struct Server {
+    addr: SocketAddr,
+    metrics_addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    registry: Arc<Mutex<MetricsRegistry>>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept_handle: Option<JoinHandle<()>>,
+    metrics_handle: Option<JoinHandle<()>>,
+    dispatch: Option<Dispatch>,
+}
+
+impl Server {
+    /// Bind `addr` (client traffic) and `metrics_addr` (Prometheus text
+    /// endpoint) — both support port 0 — start the shard backend, and begin
+    /// accepting. The model must already be prepared; preparation is
+    /// counted once in the registry.
+    pub fn start(
+        model: Arc<PreparedModel>,
+        cfg: ServeConfig,
+        addr: &str,
+        metrics_addr: &str,
+    ) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let m_listener = TcpListener::bind(metrics_addr)
+            .with_context(|| format!("binding metrics {metrics_addr}"))?;
+        let m_local = m_listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        m_listener.set_nonblocking(true)?;
+
+        let stats = Arc::new(ServerStats::default());
+        let mut reg = MetricsRegistry::default();
+        reg.model_preps = 1;
+        let registry = Arc::new(Mutex::new(reg));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let conn_handles = Arc::new(Mutex::new(Vec::new()));
+
+        let (dispatch, route) = Dispatch::start(model, &cfg, stats.clone(), registry.clone());
+
+        let accept_handle = {
+            let stats = stats.clone();
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            let conn_handles = conn_handles.clone();
+            let policy = route.policy().normalized();
+            let max_queue = cfg.max_queue;
+            let max_inflight = cfg.max_inflight_per_conn.max(1);
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || loop {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            stats.connections.fetch_add(1, Ordering::SeqCst);
+                            if let Ok(clone) = stream.try_clone() {
+                                conns.lock().expect("conns lock").push(clone);
+                            }
+                            let route = route.clone();
+                            let stats = stats.clone();
+                            let h = std::thread::Builder::new()
+                                .name("serve-conn".into())
+                                .spawn(move || {
+                                    connection_loop(
+                                        stream, route, stats, policy, max_queue, max_inflight,
+                                    )
+                                })
+                                .expect("spawn connection thread");
+                            conn_handles.lock().expect("handles lock").push(h);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if shutdown.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(_) => return,
+                    }
+                })?
+        };
+
+        let metrics_handle = {
+            let stats = stats.clone();
+            let registry = registry.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("serve-metrics".into())
+                .spawn(move || metrics_loop(m_listener, stats, registry, shutdown))?
+        };
+
+        Ok(Server {
+            addr: local,
+            metrics_addr: m_local,
+            stats,
+            registry,
+            shutdown,
+            conns,
+            conn_handles,
+            accept_handle: Some(accept_handle),
+            metrics_handle: Some(metrics_handle),
+            dispatch: Some(dispatch),
+        })
+    }
+
+    /// The bound client-traffic address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The bound metrics address.
+    pub fn metrics_addr(&self) -> SocketAddr {
+        self.metrics_addr
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn registry(&self) -> &Arc<Mutex<MetricsRegistry>> {
+        &self.registry
+    }
+
+    /// Tear down in settlement order: stop accepting, sever every client
+    /// connection (unblocking its reader), join the connection threads (so
+    /// every `alive` flag is final), then drop the shard backend — its
+    /// drain answers or cancels everything still queued. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for s in self.conns.lock().expect("conns lock").iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // second pass for connections accepted while the flag was being set
+        // (the accept thread may have admitted one after the sever above)
+        for s in self.conns.lock().expect("conns lock").iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles = std::mem::take(&mut *self.conn_handles.lock().expect("handles lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+        // dropping Dispatch disconnects the shard queues; shards drain
+        // (cancelling dead-connection jobs) and are joined inside the drop
+        self.dispatch.take();
+        if let Some(h) = self.metrics_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One client connection: a blocking reader (this thread) that admits or
+/// sheds each frame, plus a writer thread that serializes responses from
+/// the shards and the admission path onto the socket. The writer is fed by
+/// an unbounded queue, so neither shards nor admission ever block on a slow
+/// client. The writer thread is deliberately *not* joined here: it exits
+/// when the last response sender drops (shards settle this connection's
+/// jobs during their drain), which may be after the reader is gone.
+fn connection_loop(
+    stream: TcpStream,
+    route: RouteMap,
+    stats: Arc<ServerStats>,
+    policy: BatchPolicy,
+    max_queue: usize,
+    max_inflight: usize,
+) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (reply_tx, reply_rx) = channel::<WireResponse>();
+    let writer = std::thread::Builder::new().name("serve-conn-writer".into()).spawn(move || {
+        let mut w = std::io::BufWriter::new(write_half);
+        while let Ok(resp) = reply_rx.recv() {
+            // client gone: keep draining so senders never see the difference
+            // (the queue is unbounded; sends cannot block)
+            let _ = write_frame(&mut w, &encode_response(&resp));
+        }
+    });
+    if writer.is_err() {
+        return;
+    }
+
+    let alive = Arc::new(AtomicBool::new(true));
+    let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break, // disconnect or framing error: teardown
+        };
+        // count before replying: a client that scrapes /metrics right after
+        // its rejection must see the shed counter already advanced
+        let reject = |id: u64, code: RejectCode, detail: String| {
+            stats.shed_rejected.fetch_add(1, Ordering::SeqCst);
+            let _ = reply_tx.send(WireResponse::Rejected { id, code, detail });
+        };
+        let req = match decode_request(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                reject(e.id.unwrap_or(0), e.code, e.detail);
+                continue;
+            }
+        };
+        // admission control, most-actionable cause first
+        if req.ids.is_empty() {
+            reject(req.id, RejectCode::EmptyInput, RejectCode::EmptyInput.as_str().into());
+            continue;
+        }
+        if req.ids.len() > policy.max_tokens {
+            reject(
+                req.id,
+                RejectCode::TooLong,
+                format!("{} tokens > max_tokens {}", req.ids.len(), policy.max_tokens),
+            );
+            continue;
+        }
+        {
+            let mut set = inflight.lock().expect("inflight lock");
+            if set.contains(&req.id) {
+                drop(set);
+                reject(req.id, RejectCode::DuplicateId, RejectCode::DuplicateId.as_str().into());
+                continue;
+            }
+            if set.len() >= max_inflight {
+                drop(set);
+                reject(
+                    req.id,
+                    RejectCode::TooManyInFlight,
+                    format!("connection cap {max_inflight} reached"),
+                );
+                continue;
+            }
+            let depth = stats.queue_depth.load(Ordering::SeqCst);
+            if depth >= max_queue as u64 {
+                drop(set);
+                stats.shed_overloaded.fetch_add(1, Ordering::SeqCst);
+                let _ = reply_tx
+                    .send(WireResponse::Overloaded { id: req.id, queue_depth: depth as u32 });
+                continue;
+            }
+            set.insert(req.id);
+            stats.queue_depth.fetch_add(1, Ordering::SeqCst);
+        }
+        stats.accepted.fetch_add(1, Ordering::SeqCst);
+        let job = Job {
+            id: req.id,
+            nonce: req.nonce,
+            kind: req.engine,
+            ids: req.ids,
+            enqueued: Instant::now(),
+            alive: alive.clone(),
+            inflight: inflight.clone(),
+            reply: reply_tx.clone(),
+        };
+        if let Err(job) = route.submit(job) {
+            // shard set is shutting down; settle what admission took
+            job.settle(&stats);
+            let _ = reply_tx.send(WireResponse::Failed {
+                id: job.id,
+                detail: "server shutting down".into(),
+            });
+        }
+    }
+    // teardown: queued jobs of this connection become cancellable; the
+    // shards settle them (and only then does the writer thread exit)
+    alive.store(false, Ordering::SeqCst);
+}
+
+/// Minimal plaintext-exposition HTTP endpoint: answers `GET /metrics` with
+/// the Prometheus text format; anything else gets 404. One request per
+/// connection, served serially — metrics scrapes are rare and tiny.
+fn metrics_loop(
+    listener: TcpListener,
+    stats: Arc<ServerStats>,
+    registry: Arc<Mutex<MetricsRegistry>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    use std::io::{Read, Write};
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+                // read the request head (first chunk is enough for GET)
+                let mut buf = [0u8; 1024];
+                let n = stream.read(&mut buf).unwrap_or(0);
+                let head = String::from_utf8_lossy(&buf[..n]);
+                let (status, body) = if head.starts_with("GET /metrics") {
+                    let body = {
+                        let reg = registry.lock().expect("registry lock");
+                        stats.render_prometheus(&reg)
+                    };
+                    ("200 OK", body)
+                } else {
+                    ("404 Not Found", "not found\n".to_string())
+                };
+                let resp = format!(
+                    "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_wait_histogram_buckets_are_cumulative() {
+        let s = ServerStats::default();
+        s.record_queue_wait(0.0005); // le=0.001
+        s.record_queue_wait(0.003); // le=0.005
+        s.record_queue_wait(0.05); // le=0.1
+        s.record_queue_wait(60.0); // +Inf
+        let reg = MetricsRegistry::default();
+        let text = s.render_prometheus(&reg);
+        assert!(text.contains("cipherprune_queue_wait_seconds_bucket{le=\"0.001\"} 1\n"));
+        assert!(text.contains("cipherprune_queue_wait_seconds_bucket{le=\"0.005\"} 2\n"));
+        assert!(text.contains("cipherprune_queue_wait_seconds_bucket{le=\"0.1\"} 3\n"));
+        assert!(text.contains("cipherprune_queue_wait_seconds_bucket{le=\"5\"} 3\n"));
+        assert!(text.contains("cipherprune_queue_wait_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("cipherprune_queue_wait_seconds_count 4\n"));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_parseable_shape() {
+        let s = ServerStats::default();
+        s.connections.fetch_add(3, Ordering::SeqCst);
+        s.queue_depth.fetch_add(2, Ordering::SeqCst);
+        s.shed_overloaded.fetch_add(1, Ordering::SeqCst);
+        let mut reg = MetricsRegistry::default();
+        reg.model_preps = 1;
+        let text = s.render_prometheus(&reg);
+        // every non-comment line is `name{labels} value` or `name value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+        assert!(text.contains("cipherprune_queue_depth 2"));
+        assert!(text.contains("cipherprune_shed_overloaded_total 1"));
+        assert!(text.contains("cipherprune_connections_total 3"));
+    }
+}

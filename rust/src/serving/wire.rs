@@ -1,0 +1,409 @@
+//! Typed client⇄server messages of the serving front door.
+//!
+//! Transport framing is exactly the party link's: each message travels as
+//! one `u32 LE length ‖ payload` frame ([`crate::net::read_frame`] /
+//! [`crate::net::write_frame`] — the same helpers `TcpTransport` is built
+//! on), so a [`crate::net::TcpTransport`] endpoint can carry this protocol
+//! directly. Inside a frame everything is little-endian and
+//! self-describing by a leading tag byte.
+//!
+//! Request (tag `0x01`):
+//! `[tag u8 ‖ id u64 ‖ engine u8 (ordinal) ‖ nonce u64 ‖ n u32 ‖ ids u32×n]`
+//!
+//! Responses:
+//! - `0x81` Result   — `[id ‖ batch_size u32 ‖ queue_wait f64 ‖ n u32 ‖ logits f64×n]`
+//! - `0x82` Overloaded — `[id ‖ queue_depth u32]`; retryable shed: the
+//!   bounded queue was full at admission, nothing was enqueued.
+//! - `0x83` Rejected — `[id ‖ code u8 ‖ detail str]`; non-retryable as sent:
+//!   the request itself violates a limit ([`RejectCode`] says which).
+//! - `0x84` Failed   — `[id ‖ detail str]`; accepted but its execution
+//!   failed (backend session error) — the connection stays usable.
+//!
+//! Strings are `u32 LE length ‖ UTF-8 bytes`. Floats travel as
+//! `f64::to_bits` so responses are bit-exact — the serving contract is that
+//! an accepted response's logits equal a direct `Session::infer` of the
+//! same (nonce, content) on the same shard session, bit for bit.
+
+use crate::coordinator::{EngineKind, RejectReason};
+
+/// Tag bytes (one per message kind).
+const TAG_REQUEST: u8 = 0x01;
+const TAG_RESULT: u8 = 0x81;
+const TAG_OVERLOADED: u8 = 0x82;
+const TAG_REJECTED: u8 = 0x83;
+const TAG_FAILED: u8 = 0x84;
+
+/// Why a request was refused, as a stable wire code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectCode {
+    /// More in-flight requests than the per-connection cap allows.
+    TooManyInFlight = 1,
+    /// The id is already in flight on this connection.
+    DuplicateId = 2,
+    /// Empty token list — nothing to run.
+    EmptyInput = 3,
+    /// Longer than the batch policy's `max_tokens` admission cap.
+    TooLong = 4,
+    /// The engine ordinal names no known engine kind.
+    UnknownEngine = 5,
+    /// The frame could not be decoded as a request.
+    Malformed = 6,
+}
+
+impl RejectCode {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(b: u8) -> Option<RejectCode> {
+        Some(match b {
+            1 => RejectCode::TooManyInFlight,
+            2 => RejectCode::DuplicateId,
+            3 => RejectCode::EmptyInput,
+            4 => RejectCode::TooLong,
+            5 => RejectCode::UnknownEngine,
+            6 => RejectCode::Malformed,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectCode::TooManyInFlight => "too many in-flight requests",
+            RejectCode::DuplicateId => "duplicate request id",
+            RejectCode::EmptyInput => "empty input",
+            RejectCode::TooLong => "request exceeds max_tokens",
+            RejectCode::UnknownEngine => "unknown engine kind",
+            RejectCode::Malformed => "malformed request frame",
+        }
+    }
+
+    /// Map a coordinator-level admission reason to its wire code
+    /// ([`RejectReason::QueueFull`] is not a *rejection* on the wire — it
+    /// ships as the retryable `Overloaded` response instead).
+    pub fn from_reason(r: RejectReason) -> Option<RejectCode> {
+        Some(match r {
+            RejectReason::EmptyInput => RejectCode::EmptyInput,
+            RejectReason::TooLong => RejectCode::TooLong,
+            RejectReason::DuplicateId => RejectCode::DuplicateId,
+            RejectReason::QueueFull => return None,
+        })
+    }
+}
+
+/// One client request: `id` correlates the eventual response on this
+/// connection (responses may interleave across in-flight requests), `nonce`
+/// keys the aligned-truncation streams exactly as in
+/// [`BlockRun`](crate::coordinator::BlockRun).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub engine: EngineKind,
+    pub nonce: u64,
+    pub ids: Vec<usize>,
+}
+
+/// Server → client messages. See the module docs for the shed semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    Result { id: u64, batch_size: u32, queue_wait_s: f64, logits: Vec<f64> },
+    Overloaded { id: u64, queue_depth: u32 },
+    Rejected { id: u64, code: RejectCode, detail: String },
+    Failed { id: u64, detail: String },
+}
+
+impl WireResponse {
+    /// The request id this response answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Result { id, .. }
+            | WireResponse::Overloaded { id, .. }
+            | WireResponse::Rejected { id, .. }
+            | WireResponse::Failed { id, .. } => *id,
+        }
+    }
+}
+
+/// Decode failure: enough context for the server to answer with a typed
+/// rejection (the id, when the frame got far enough to carry one).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    pub id: Option<u64>,
+    pub code: RejectCode,
+    pub detail: String,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad UTF-8: {e}"))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!("{} trailing bytes", self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn encode_request(r: &WireRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8 + 1 + 8 + 4 + 4 * r.ids.len());
+    out.push(TAG_REQUEST);
+    out.extend_from_slice(&r.id.to_le_bytes());
+    out.push(r.engine.ordinal() as u8);
+    out.extend_from_slice(&r.nonce.to_le_bytes());
+    out.extend_from_slice(&(r.ids.len() as u32).to_le_bytes());
+    for &id in &r.ids {
+        out.extend_from_slice(&(id as u32).to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_request(frame: &[u8]) -> Result<WireRequest, DecodeError> {
+    let malformed = |id: Option<u64>, detail: String| DecodeError {
+        id,
+        code: RejectCode::Malformed,
+        detail,
+    };
+    let mut c = Cursor::new(frame);
+    let tag = c.u8().map_err(|e| malformed(None, e))?;
+    if tag != TAG_REQUEST {
+        return Err(malformed(None, format!("unexpected tag {tag:#04x}")));
+    }
+    let id = c.u64().map_err(|e| malformed(None, e))?;
+    let ord = c.u8().map_err(|e| malformed(Some(id), e))?;
+    let engine = EngineKind::all()
+        .into_iter()
+        .find(|k| k.ordinal() == ord as u64)
+        .ok_or(DecodeError {
+            id: Some(id),
+            code: RejectCode::UnknownEngine,
+            detail: format!("engine ordinal {ord}"),
+        })?;
+    let nonce = c.u64().map_err(|e| malformed(Some(id), e))?;
+    let n = c.u32().map_err(|e| malformed(Some(id), e))? as usize;
+    let mut ids = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        ids.push(c.u32().map_err(|e| malformed(Some(id), e))? as usize);
+    }
+    c.done().map_err(|e| malformed(Some(id), e))?;
+    Ok(WireRequest { id, engine, nonce, ids })
+}
+
+pub fn encode_response(r: &WireResponse) -> Vec<u8> {
+    let mut out = Vec::new();
+    match r {
+        WireResponse::Result { id, batch_size, queue_wait_s, logits } => {
+            out.push(TAG_RESULT);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&batch_size.to_le_bytes());
+            out.extend_from_slice(&queue_wait_s.to_bits().to_le_bytes());
+            out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+            for &l in logits {
+                out.extend_from_slice(&l.to_bits().to_le_bytes());
+            }
+        }
+        WireResponse::Overloaded { id, queue_depth } => {
+            out.push(TAG_OVERLOADED);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&queue_depth.to_le_bytes());
+        }
+        WireResponse::Rejected { id, code, detail } => {
+            out.push(TAG_REJECTED);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.push(code.as_u8());
+            put_string(&mut out, detail);
+        }
+        WireResponse::Failed { id, detail } => {
+            out.push(TAG_FAILED);
+            out.extend_from_slice(&id.to_le_bytes());
+            put_string(&mut out, detail);
+        }
+    }
+    out
+}
+
+pub fn decode_response(frame: &[u8]) -> Result<WireResponse, String> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u8()?;
+    let resp = match tag {
+        TAG_RESULT => {
+            let id = c.u64()?;
+            let batch_size = c.u32()?;
+            let queue_wait_s = c.f64()?;
+            let n = c.u32()? as usize;
+            let mut logits = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                logits.push(c.f64()?);
+            }
+            WireResponse::Result { id, batch_size, queue_wait_s, logits }
+        }
+        TAG_OVERLOADED => WireResponse::Overloaded { id: c.u64()?, queue_depth: c.u32()? },
+        TAG_REJECTED => {
+            let id = c.u64()?;
+            let code = c.u8()?;
+            let code = RejectCode::from_u8(code)
+                .ok_or_else(|| format!("unknown reject code {code}"))?;
+            WireResponse::Rejected { id, code, detail: c.string()? }
+        }
+        TAG_FAILED => WireResponse::Failed { id: c.u64()?, detail: c.string()? },
+        other => return Err(format!("unexpected response tag {other:#04x}")),
+    };
+    c.done()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips() {
+        let r = WireRequest {
+            id: 42,
+            engine: EngineKind::CipherPrune,
+            nonce: 0xDEAD_BEEF,
+            ids: vec![3, 1, 4, 1, 5],
+        };
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+        let empty = WireRequest { id: 1, engine: EngineKind::BoltNoWe, nonce: 0, ids: vec![] };
+        assert_eq!(decode_request(&encode_request(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let cases = vec![
+            WireResponse::Result {
+                id: 7,
+                batch_size: 3,
+                queue_wait_s: 0.125,
+                logits: vec![-1.5, 2.25, f64::MIN_POSITIVE],
+            },
+            WireResponse::Overloaded { id: 8, queue_depth: 512 },
+            WireResponse::Rejected {
+                id: 9,
+                code: RejectCode::TooLong,
+                detail: "request exceeds max_tokens".into(),
+            },
+            WireResponse::Failed { id: 10, detail: "P1 session worker died".into() },
+        ];
+        for r in cases {
+            assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn malformed_frames_reject_with_context() {
+        // empty frame
+        let e = decode_request(&[]).unwrap_err();
+        assert_eq!(e.code, RejectCode::Malformed);
+        assert_eq!(e.id, None);
+        // bad tag
+        let e = decode_request(&[0x7F, 0, 0]).unwrap_err();
+        assert_eq!(e.code, RejectCode::Malformed);
+        // unknown engine carries the id so the server can answer it
+        let mut f = encode_request(&WireRequest {
+            id: 33,
+            engine: EngineKind::CipherPrune,
+            nonce: 0,
+            ids: vec![1],
+        });
+        f[9] = 0xEE; // engine ordinal byte
+        let e = decode_request(&f).unwrap_err();
+        assert_eq!(e.code, RejectCode::UnknownEngine);
+        assert_eq!(e.id, Some(33));
+        // truncated ids
+        let mut t = encode_request(&WireRequest {
+            id: 5,
+            engine: EngineKind::CipherPrune,
+            nonce: 0,
+            ids: vec![1, 2, 3],
+        });
+        t.truncate(t.len() - 2);
+        assert_eq!(decode_request(&t).unwrap_err().code, RejectCode::Malformed);
+        // trailing garbage
+        let mut g = encode_request(&WireRequest {
+            id: 5,
+            engine: EngineKind::CipherPrune,
+            nonce: 0,
+            ids: vec![1],
+        });
+        g.push(0);
+        assert_eq!(decode_request(&g).unwrap_err().code, RejectCode::Malformed);
+        // response side
+        assert!(decode_response(&[0x00]).is_err());
+    }
+
+    #[test]
+    fn reject_codes_roundtrip_and_map_from_reasons() {
+        for code in [
+            RejectCode::TooManyInFlight,
+            RejectCode::DuplicateId,
+            RejectCode::EmptyInput,
+            RejectCode::TooLong,
+            RejectCode::UnknownEngine,
+            RejectCode::Malformed,
+        ] {
+            assert_eq!(RejectCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(RejectCode::from_u8(0), None);
+        assert_eq!(
+            RejectCode::from_reason(RejectReason::TooLong),
+            Some(RejectCode::TooLong)
+        );
+        assert_eq!(
+            RejectCode::from_reason(RejectReason::DuplicateId),
+            Some(RejectCode::DuplicateId)
+        );
+        assert_eq!(
+            RejectCode::from_reason(RejectReason::QueueFull),
+            None,
+            "queue-full sheds as the retryable Overloaded response"
+        );
+    }
+}

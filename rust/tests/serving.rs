@@ -1,0 +1,392 @@
+//! End-to-end tests of the serving front door (`cipherprune::serving`):
+//! many concurrent clients over real loopback TCP against ≥ 2 session
+//! shards, with the three contract pillars pinned:
+//!
+//! 1. **Bit-identity** — every accepted response's logits equal a direct
+//!    `Session::infer` of the same (nonce, content) under the deterministic
+//!    shard seed (`shard_for`/`shard_seed` name the session out-of-band).
+//! 2. **Typed shedding** — admission control answers every refused request
+//!    with a typed `Overloaded`/`Rejected`, the process stays alive, and a
+//!    client never hangs on a shed request.
+//! 3. **Isolation** — a connection severed mid-load cancels its own queued
+//!    work and nothing else; other clients' requests complete normally.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cipherprune::coordinator::{
+    bucket_for, BatchPolicy, BlockRun, EngineConfig, EngineKind, PreparedModel, Session,
+};
+use cipherprune::net::Transport;
+use cipherprune::nn::{real_len, ModelConfig, ModelWeights, Workload};
+use cipherprune::serving::{
+    decode_response, encode_request, shard_for, shard_seed, RejectCode, ServeConfig, Server,
+    ServingClient, WireRequest, WireResponse,
+};
+
+fn tiny_model() -> Arc<PreparedModel> {
+    let w = Arc::new(ModelWeights::salient(&ModelConfig::tiny(), 42));
+    Arc::new(PreparedModel::prepare(w))
+}
+
+fn sample_ids(seed: u64) -> Vec<usize> {
+    let cfg = ModelConfig::tiny();
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, seed)[0].ids.clone();
+    let real = real_len(&ids);
+    ids[..real].to_vec()
+}
+
+fn test_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, linger: Duration::from_millis(10), min_bucket: 8, max_tokens: 32 }
+}
+
+fn fetch_metrics(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect metrics");
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").expect("send GET");
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("read metrics");
+    body
+}
+
+/// 64 concurrent clients over loopback TCP, two shards, two engine kinds,
+/// three length classes: every accepted response is bit-identical to a
+/// direct `Session::infer` with the same (nonce, content) on a session
+/// seeded by `shard_seed`. Several clients deliberately share one
+/// (nonce, content) class, forcing the shards to split same-nonce waves.
+/// Finishes with a parse of the Prometheus endpoint.
+#[test]
+fn loopback_fleet_is_bit_identical_to_direct_inference() {
+    let model = tiny_model();
+    let policy = test_policy();
+    let n_shards = 2;
+    let cfg = ServeConfig { shards: n_shards, policy, ..ServeConfig::for_tests() };
+    let mut server = Server::start(model.clone(), cfg, "127.0.0.1:0", "127.0.0.1:0")
+        .expect("server start");
+    let addr = server.addr().to_string();
+
+    // 8 request classes over 2 kinds and 3 lengths; 64 clients = 8 per class
+    let base = sample_ids(17);
+    let long: Vec<usize> = base.iter().chain(&base).chain(&base).copied().take(12).collect();
+    let classes: Vec<(EngineKind, u64, Vec<usize>)> = (0..8u64)
+        .map(|c| {
+            let kind = if c % 2 == 0 { EngineKind::CipherPrune } else { EngineKind::BoltNoWe };
+            let ids = match c % 3 {
+                0 => base[..4.min(base.len())].to_vec(),
+                1 => base.clone(),
+                _ => long.clone(),
+            };
+            (kind, 500 + c, ids)
+        })
+        .collect();
+
+    let n_clients = 64;
+    let mut handles = Vec::new();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        let (kind, nonce, ids) = classes[i % classes.len()].clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5))
+                .expect("client connect");
+            let req = WireRequest { id: 1 + i as u64, engine: kind, nonce, ids };
+            let resp = c.call(&req).expect("serving call");
+            (req, resp)
+        }));
+    }
+
+    // direct reference runs: one session per (shard, kind), seeded exactly
+    // as the shard seeds its first session for that kind
+    let mut reference: HashMap<(usize, EngineKind), Session> = HashMap::new();
+    let mut expect: HashMap<u64, Vec<f64>> = HashMap::new();
+    for (kind, nonce, ids) in &classes {
+        let shard = shard_for(*kind, bucket_for(ids.len(), &policy), n_shards);
+        let sess = reference.entry((shard, *kind)).or_insert_with(|| {
+            let ec = EngineConfig::for_tests(*kind).seed(shard_seed(shard, *kind, 0));
+            Session::start(model.clone(), ec).expect("reference session")
+        });
+        let r = sess
+            .infer_batch(&[BlockRun { nonce: *nonce, ids: ids.clone() }])
+            .expect("reference infer")
+            .pop()
+            .unwrap();
+        expect.insert(*nonce, r.logits);
+    }
+
+    let mut served = 0;
+    for h in handles {
+        let (req, resp) = h.join().expect("client thread");
+        match resp {
+            WireResponse::Result { id, logits, .. } => {
+                assert_eq!(id, req.id);
+                assert_eq!(
+                    logits,
+                    expect[&req.nonce],
+                    "served logits must be bit-identical to direct inference \
+                     (kind {:?}, nonce {})",
+                    req.engine,
+                    req.nonce
+                );
+                served += 1;
+            }
+            other => panic!("expected a Result, got {other:?}"),
+        }
+    }
+    assert_eq!(served, n_clients);
+
+    // Prometheus endpoint: parseable text exposition with the serving gauges
+    let body = fetch_metrics(server.metrics_addr());
+    assert!(body.starts_with("HTTP/1.1 200 OK"));
+    let text = body.split("\r\n\r\n").nth(1).expect("body after headers");
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').expect("metric line");
+        assert!(value.parse::<f64>().is_ok(), "unparseable metric line {line:?}");
+    }
+    assert!(text.contains("cipherprune_queue_depth 0"), "all work settled");
+    assert!(text.contains("cipherprune_shed_overloaded_total 0"));
+    assert!(text.contains(&format!("cipherprune_requests_completed_total {n_clients}")));
+    assert!(text.contains("cipherprune_engine_requests_total{engine=\"cipherprune\"} 32"));
+    assert!(text.contains("cipherprune_engine_requests_total{engine=\"bolt-no-we\"} 32"));
+
+    let stats = server.stats();
+    assert_eq!(stats.completed.load(Ordering::SeqCst), n_clients as u64);
+    assert_eq!(stats.failed.load(Ordering::SeqCst), 0);
+    assert_eq!(stats.cancelled.load(Ordering::SeqCst), 0);
+    server.shutdown();
+}
+
+/// A full queue sheds with the retryable `Overloaded` (and the server keeps
+/// answering afterwards — shed ≠ dead); every malformed or limit-violating
+/// request gets its typed `Rejected`; a request left queued at shutdown is
+/// cancelled, not leaked.
+#[test]
+fn overload_and_rejects_are_typed_and_never_hang() {
+    let model = tiny_model();
+
+    // max_queue 0: every well-formed request sheds as Overloaded
+    let cfg = ServeConfig {
+        shards: 1,
+        policy: test_policy(),
+        max_queue: 0,
+        ..ServeConfig::for_tests()
+    };
+    let mut server = Server::start(model.clone(), cfg, "127.0.0.1:0", "127.0.0.1:0")
+        .expect("server start");
+    let addr = server.addr().to_string();
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
+    for id in 1..=3u64 {
+        let req = WireRequest {
+            id,
+            engine: EngineKind::CipherPrune,
+            nonce: id,
+            ids: sample_ids(17),
+        };
+        match c.call(&req).expect("call") {
+            WireResponse::Overloaded { id: rid, .. } => assert_eq!(rid, id),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(server.stats().shed_overloaded.load(Ordering::SeqCst), 3);
+    let body = fetch_metrics(server.metrics_addr());
+    assert!(body.contains("cipherprune_shed_overloaded_total 3"), "shed counter exported");
+    server.shutdown();
+
+    // per-request rejects: long linger + max_batch 8 parks the one admitted
+    // request, so every subsequent violation is judged against live state
+    let cfg = ServeConfig {
+        shards: 1,
+        policy: BatchPolicy {
+            max_batch: 8,
+            linger: Duration::from_secs(60),
+            min_bucket: 8,
+            max_tokens: 32,
+        },
+        max_queue: 64,
+        max_inflight_per_conn: 1,
+        ..ServeConfig::for_tests()
+    };
+    let mut server = Server::start(model, cfg, "127.0.0.1:0", "127.0.0.1:0").expect("server");
+    let addr = server.addr().to_string();
+
+    let ids = sample_ids(17);
+    let mk = |id: u64, ids: Vec<usize>| WireRequest {
+        id,
+        engine: EngineKind::CipherPrune,
+        nonce: id,
+        ids,
+    };
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
+    // id 1 admits and parks in the batcher (long linger, bucket not full)
+    c.send(&mk(1, ids.clone())).expect("send");
+    let expect_reject = |c: &mut ServingClient, req: &WireRequest, want: RejectCode| {
+        match c.call(req).expect("call") {
+            WireResponse::Rejected { id, code, detail } => {
+                assert_eq!(id, req.id);
+                assert_eq!(code, want, "unexpected reject cause: {detail}");
+                assert!(!detail.is_empty());
+            }
+            other => panic!("expected Rejected({want:?}), got {other:?}"),
+        }
+    };
+    expect_reject(&mut c, &mk(1, ids.clone()), RejectCode::DuplicateId);
+    expect_reject(&mut c, &mk(2, ids.clone()), RejectCode::TooManyInFlight);
+    expect_reject(&mut c, &mk(3, vec![]), RejectCode::EmptyInput);
+    expect_reject(&mut c, &mk(4, vec![1; 100]), RejectCode::TooLong);
+
+    // wire-level garbage over a raw transport: typed rejects, no hang
+    let mut raw = cipherprune::net::TcpTransport::connect_retry(&addr, Duration::from_secs(5))
+        .expect("raw connect");
+    let mut bad_engine = encode_request(&mk(9, ids.clone()));
+    bad_engine[9] = 0xEE; // engine ordinal byte
+    raw.send_frame(bad_engine).expect("send");
+    match decode_response(&raw.recv_frame().expect("recv")).expect("decode") {
+        WireResponse::Rejected { id, code, .. } => {
+            assert_eq!((id, code), (9, RejectCode::UnknownEngine));
+        }
+        other => panic!("expected Rejected(UnknownEngine), got {other:?}"),
+    }
+    raw.send_frame(vec![0x7F, 1, 2, 3]).expect("send");
+    match decode_response(&raw.recv_frame().expect("recv")).expect("decode") {
+        WireResponse::Rejected { code, .. } => assert_eq!(code, RejectCode::Malformed),
+        other => panic!("expected Rejected(Malformed), got {other:?}"),
+    }
+    assert_eq!(server.stats().shed_rejected.load(Ordering::SeqCst), 6);
+
+    // the parked request is still queued; teardown must cancel it cleanly
+    drop(c);
+    drop(raw);
+    server.shutdown();
+    let stats = server.stats();
+    assert_eq!(stats.accepted.load(Ordering::SeqCst), 1);
+    assert_eq!(stats.cancelled.load(Ordering::SeqCst), 1, "queued work cancelled at teardown");
+    assert_eq!(stats.queue_depth.load(Ordering::SeqCst), 0);
+}
+
+/// A client that vanishes with work in flight neither hangs the server nor
+/// contaminates other connections: its queued job is cancelled at dispatch,
+/// and a later client on the same shard gets a normal, bit-identical result.
+#[test]
+fn severed_connection_cancels_own_work_only() {
+    let model = tiny_model();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        linger: Duration::from_millis(150),
+        min_bucket: 8,
+        max_tokens: 32,
+    };
+    let cfg = ServeConfig { shards: 1, policy, ..ServeConfig::for_tests() };
+    let mut server = Server::start(model.clone(), cfg, "127.0.0.1:0", "127.0.0.1:0")
+        .expect("server start");
+    let addr = server.addr().to_string();
+    let ids = sample_ids(17);
+    let kind = EngineKind::CipherPrune;
+
+    // A: send then vanish before the linger releases the batch
+    {
+        let mut a = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("A");
+        a.send(&WireRequest { id: 1, engine: kind, nonce: 71, ids: ids.clone() }).expect("send");
+        // dropped here: connection severed with the job still queued
+    }
+    std::thread::sleep(Duration::from_millis(30));
+
+    // B: same shard, same bucket — must be served normally
+    let mut b = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("B");
+    let resp = b
+        .call(&WireRequest { id: 2, engine: kind, nonce: 72, ids: ids.clone() })
+        .expect("B call");
+    let WireResponse::Result { id, logits, .. } = resp else {
+        panic!("B expected a Result, got {resp:?}");
+    };
+    assert_eq!(id, 2);
+    let mut reference =
+        Session::start(model, EngineConfig::for_tests(kind).seed(shard_seed(0, kind, 0)))
+            .expect("reference session");
+    let want = reference
+        .infer_batch(&[BlockRun { nonce: 72, ids }])
+        .expect("reference infer")
+        .pop()
+        .unwrap();
+    assert_eq!(logits, want.logits, "survivor's result is unaffected by the severed peer");
+
+    server.shutdown();
+    let stats = server.stats();
+    assert_eq!(stats.cancelled.load(Ordering::SeqCst), 1, "A's job cancelled, nothing else");
+    assert_eq!(stats.completed.load(Ordering::SeqCst), 1);
+    assert_eq!(stats.failed.load(Ordering::SeqCst), 0);
+    assert_eq!(stats.queue_depth.load(Ordering::SeqCst), 0);
+}
+
+/// The `serve-clients` subcommand end-to-end as an OS process: announce the
+/// bound addresses, serve real clients, exit 0 after `--max-requests`.
+#[test]
+fn serve_clients_subcommand_over_loopback() {
+    let bin = env!("CARGO_BIN_EXE_cipherprune");
+    let mut child = Command::new(bin)
+        .args([
+            "serve-clients",
+            "--model",
+            "tiny",
+            "--he-n",
+            "128",
+            "--listen",
+            "127.0.0.1:0",
+            "--metrics",
+            "127.0.0.1:0",
+            "--shards",
+            "2",
+            "--linger-ms",
+            "5",
+            "--threads",
+            "1",
+            "--max-requests",
+            "2",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve-clients");
+    let mut stdout = BufReader::new(child.stdout.take().expect("stdout"));
+    let mut addr = String::new();
+    for _ in 0..50 {
+        let mut line = String::new();
+        if stdout.read_line(&mut line).expect("read stdout") == 0 {
+            break;
+        }
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+    assert!(!addr.is_empty(), "server must announce its listen address");
+
+    let ids = sample_ids(17);
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+    for id in 1..=2u64 {
+        let req = WireRequest {
+            id,
+            engine: EngineKind::CipherPrune,
+            nonce: 90 + id,
+            ids: ids.clone(),
+        };
+        match c.call(&req).expect("call") {
+            WireResponse::Result { id: rid, logits, .. } => {
+                assert_eq!(rid, id);
+                assert!(!logits.is_empty());
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+    }
+    drop(c);
+
+    let status = child.wait().expect("wait serve-clients");
+    let mut rest = String::new();
+    stdout.read_to_string(&mut rest).expect("drain stdout");
+    assert!(status.success(), "serve-clients must exit 0; tail: {rest}");
+    assert!(rest.contains("completed=2"), "summary line reports the served requests: {rest}");
+}

@@ -428,6 +428,7 @@ fn run_loadgen(n_clients: usize, shards: usize, host: usize, out_path: &str) {
                         id: r + 1,
                         engine: kind,
                         nonce: 1 + c as u64 * REQS_PER_CLIENT + r,
+                        deadline_ms: 0,
                         ids: ids.clone(),
                     };
                     match client.call(&req).expect("serving call") {

@@ -234,7 +234,7 @@ mod tests {
     use crate::coordinator::types::EngineKind;
 
     fn req(id: u64, len: usize) -> InferenceRequest {
-        InferenceRequest { id, ids: vec![1; len], engine: EngineKind::CipherPrune }
+        InferenceRequest::new(id, vec![1; len], EngineKind::CipherPrune)
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //!   Taylor SoftMax rows and degree-2 GELU.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::fixed::{Fix, RingMat};
 use crate::gates::TripleMode;
@@ -83,6 +83,17 @@ pub struct EngineConfig {
     /// Sessions can also preprocess/refill explicitly at any time
     /// (`Session::preprocess`/`Session::refill`).
     pub preprocess_shape: Option<Vec<usize>>,
+    /// Stall watchdog bound. When set, (a) every party-link receive is
+    /// bounded (`Chan::set_recv_timeout`), so a party thread parked on a
+    /// hung-but-connected peer unwedges with a typed `NetError::Timeout`
+    /// instead of hanging forever, and (b) `Session::infer_batch` /
+    /// preprocessing stop waiting for a party reply once the bound (plus
+    /// margin) elapses, poison the session, and fail the batch — feeding the
+    /// coordinator's evict-and-retry path. `None` (default) keeps the
+    /// historical block-until-reply behavior. Size it well above the longest
+    /// legitimate gap between frames (compute-heavy phases send nothing for
+    /// a while); it bounds *silence*, not request latency.
+    pub stall_timeout: Option<Duration>,
 }
 
 impl EngineConfig {
@@ -98,6 +109,7 @@ impl EngineConfig {
             transport: TransportSpec::Mem,
             coalesce: true,
             preprocess_shape: None,
+            stall_timeout: None,
         }
     }
 
@@ -153,6 +165,12 @@ impl EngineConfig {
     /// token counts (see [`EngineConfig::preprocess_shape`]).
     pub fn preprocess_for(mut self, lens: &[usize]) -> Self {
         self.preprocess_shape = Some(lens.to_vec());
+        self
+    }
+
+    /// Arm the stall watchdog (see [`EngineConfig::stall_timeout`]).
+    pub fn stall_timeout(mut self, d: Duration) -> Self {
+        self.stall_timeout = Some(d);
         self
     }
 

@@ -123,6 +123,16 @@ pub struct MetricsRegistry {
     /// be replaced — with its banked randomness lost — on the next batch).
     /// Healthy serving keeps this at zero.
     pub refill_failures: u64,
+    /// Waves replayed on a fresh session after their first session was
+    /// poisoned mid-batch (deterministic retry: logits are a function of
+    /// (nonce, content), so the replay is bit-identical to a first-try run).
+    pub retries: u64,
+    /// Retried waves that then completed (the difference to `retries` ended
+    /// up in `failures`).
+    pub retry_successes: u64,
+    /// Requests dropped at dispatch because their deadline had already
+    /// passed — answered as expired without burning a session run.
+    pub expired: u64,
 }
 
 impl MetricsRegistry {
@@ -158,6 +168,15 @@ impl MetricsRegistry {
         }
         if self.refill_failures > 0 {
             out.push_str(&format!("failed pool refills: {}\n", self.refill_failures));
+        }
+        if self.retries > 0 {
+            out.push_str(&format!(
+                "retried waves: {} ({} recovered)\n",
+                self.retries, self.retry_successes
+            ));
+        }
+        if self.expired > 0 {
+            out.push_str(&format!("expired requests: {}\n", self.expired));
         }
         for (name, m) in &self.engines {
             out.push_str(&format!(

@@ -15,6 +15,13 @@
 //! ring-encoded exactly once ([`PreparedModel`], at construction) and each
 //! engine kind's two-party setup runs once per worker slot, so repeated
 //! requests pay only the online protocol.
+//!
+//! Lifecycle hardening: a request whose [`deadline`](InferenceRequest::deadline)
+//! passed while it queued is answered as expired at dispatch, before any
+//! session run is spent on it. A slot whose session is poisoned mid-batch
+//! (link cut or stall watchdog) has its stride replayed ONCE on a fresh
+//! session — safe because logits are a deterministic function of
+//! (nonce, content), so a replay is bit-identical to a first-try run.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -243,7 +250,32 @@ impl Router {
         // signal wall time alone hides — a loaded server shows flat walls
         // but growing waits
         let dispatched = Instant::now();
-        for r in &batch.requests {
+        // deadline sweep: a request whose drop-dead time passed while it
+        // queued is answered as expired HERE — the last instant before a
+        // session run would be spent on it
+        let mut requests = batch.requests;
+        let mut out: Vec<Response> = Vec::new();
+        requests.retain(|r| {
+            if !r.expired_at(dispatched) {
+                return true;
+            }
+            self.metrics.expired += 1;
+            let latency_s = self
+                .submitted
+                .iter()
+                .find(|(i, _)| *i == r.id)
+                .map(|(_, t)| dispatched.duration_since(*t).as_secs_f64())
+                .unwrap_or(0.0);
+            self.submitted.retain(|(i, _)| *i != r.id);
+            out.push(Response {
+                id: r.id,
+                result: Err("deadline expired before dispatch".to_string()),
+                bucket,
+                latency_s,
+            });
+            false
+        });
+        for r in &requests {
             if let Some((_, t)) = self.submitted.iter().find(|(i, _)| *i == r.id) {
                 self.metrics.record_queue_wait(
                     r.engine.name(),
@@ -253,11 +285,8 @@ impl Router {
         }
         // no bucket padding: the pipeline strips pads anyway (mask-aware),
         // so jobs travel at their submitted length
-        let jobs: Vec<(u64, EngineKind, Vec<usize>)> = batch
-            .requests
-            .into_iter()
-            .map(|r| (r.id, r.engine, r.ids))
-            .collect();
+        let jobs: Vec<(u64, EngineKind, Vec<usize>)> =
+            requests.into_iter().map(|r| (r.id, r.engine, r.ids)).collect();
         // group job indices by engine kind
         let mut groups: HashMap<EngineKind, Vec<usize>> = HashMap::new();
         for (i, (_, kind, _)) in jobs.iter().enumerate() {
@@ -303,7 +332,7 @@ impl Router {
         // one weight-ciphertext pass instead of one per request). A slot
         // failure fails only its own stride's requests.
         let jobs_ref = &jobs;
-        let slot_results: Vec<(Vec<usize>, Result<Vec<RunResult>, String>)> =
+        let mut slot_results: Vec<(Vec<usize>, Result<Vec<RunResult>, String>)> =
             std::thread::scope(|s| {
                 let mut handles = Vec::new();
                 for (kind, pool) in self.sessions.iter_mut() {
@@ -339,6 +368,44 @@ impl Router {
                     .map(|h| h.join().expect("engine session panicked"))
                     .collect()
             });
+        // deterministic retry: a stride whose session was poisoned mid-run
+        // is replayed ONCE on a fresh session with the SAME (nonce, ids)
+        // items — logits are a deterministic function of those, so a
+        // successful replay is indistinguishable from a first-try result.
+        // The scope above has joined, so every session is idle again.
+        for (mine, rs) in slot_results.iter_mut() {
+            let first_err = match rs {
+                Ok(_) => continue,
+                Err(e) => e.clone(),
+            };
+            let kind = jobs[mine[0]].1;
+            self.metrics.retries += 1;
+            // evict the poisoned session; grow back to one live session
+            // (reusing a healthy sibling slot when one survived)
+            if let Some(pool) = self.sessions.get_mut(&kind) {
+                pool.retain(|s| s.poisoned().is_none());
+            }
+            if let Err(e) = self.grow_pool(kind, 1) {
+                *rs = Err(format!("{first_err}; retry setup failed: {e}"));
+                continue;
+            }
+            let items: Vec<BlockRun> = mine
+                .iter()
+                .map(|&i| BlockRun { nonce: jobs[i].0, ids: jobs[i].2.clone() })
+                .collect();
+            let sess = self
+                .sessions
+                .get_mut(&kind)
+                .and_then(|p| p.last_mut())
+                .expect("grow_pool left one live session");
+            match sess.infer_batch(&items) {
+                Ok(replayed) => {
+                    self.metrics.retry_successes += 1;
+                    *rs = Ok(replayed);
+                }
+                Err(e) => *rs = Err(format!("{first_err}; retry failed: {e:#}")),
+            }
+        }
         let mut results: Vec<Option<Result<RunResult, String>>> =
             jobs.iter().map(|_| None).collect();
         for (mine, rs) in slot_results {
@@ -362,28 +429,26 @@ impl Router {
             }
         }
         let now = Instant::now();
-        jobs.into_iter()
-            .zip(results)
-            .map(|((id, kind, _), result)| {
-                let result = result.unwrap_or_else(|| {
-                    Err(setup_errors
-                        .get(&kind)
-                        .cloned()
-                        .unwrap_or_else(|| "no live session for this engine kind".to_string()))
-                });
-                if result.is_err() {
-                    self.metrics.failures += 1;
-                }
-                let latency_s = self
-                    .submitted
-                    .iter()
-                    .find(|(i, _)| *i == id)
-                    .map(|(_, t)| now.duration_since(*t).as_secs_f64())
-                    .unwrap_or(0.0);
-                self.submitted.retain(|(i, _)| *i != id);
-                Response { id, result, bucket, latency_s }
-            })
-            .collect()
+        out.extend(jobs.into_iter().zip(results).map(|((id, kind, _), result)| {
+            let result = result.unwrap_or_else(|| {
+                Err(setup_errors
+                    .get(&kind)
+                    .cloned()
+                    .unwrap_or_else(|| "no live session for this engine kind".to_string()))
+            });
+            if result.is_err() {
+                self.metrics.failures += 1;
+            }
+            let latency_s = self
+                .submitted
+                .iter()
+                .find(|(i, _)| *i == id)
+                .map(|(_, t)| now.duration_since(*t).as_secs_f64())
+                .unwrap_or(0.0);
+            self.submitted.retain(|(i, _)| *i != id);
+            Response { id, result, bucket, latency_s }
+        }));
+        out
     }
 
     /// Release and execute at most one ready batch; with nothing ready, use
@@ -455,7 +520,7 @@ mod tests {
         wl.batch(n, 99)
             .into_iter()
             .enumerate()
-            .map(|(i, s)| InferenceRequest { id: i as u64, ids: s.ids, engine })
+            .map(|(i, s)| InferenceRequest::new(i as u64, s.ids, engine))
             .collect()
     }
 
@@ -489,11 +554,7 @@ mod tests {
     #[test]
     fn rejects_overlong_requests() {
         let mut r = mk_router(2);
-        let bad = InferenceRequest {
-            id: 7,
-            ids: vec![1; 100],
-            engine: EngineKind::CipherPrune,
-        };
+        let bad = InferenceRequest::new(7, vec![1; 100], EngineKind::CipherPrune);
         let (back, why) = r.submit(bad).unwrap_err();
         assert_eq!(back.id, 7);
         assert_eq!(why, RejectReason::TooLong);
@@ -557,6 +618,32 @@ mod tests {
         assert_eq!(m.runs, 1, "one fused pipeline run");
         assert_eq!(m.requests, 3);
         assert!(m.amortized_wall_s() <= m.mean_wall_s());
+    }
+
+    /// A request whose deadline passed while it queued is answered as
+    /// expired at dispatch — no session run is spent on it, `expired` counts
+    /// it, and the surviving request in the same batch is unaffected.
+    #[test]
+    fn expired_requests_drop_before_dispatch() {
+        let mut r = mk_router(8); // nothing releases until flush
+        let mut reqs = mk_reqs(2, EngineKind::CipherPrune);
+        reqs[0].deadline = Some(Instant::now()); // already past by dispatch
+        for q in reqs {
+            r.submit(q).unwrap();
+        }
+        let mut resp = r.flush();
+        resp.sort_by_key(|x| x.id);
+        assert_eq!(resp.len(), 2);
+        let err = resp[0].result.as_ref().unwrap_err();
+        assert!(err.contains("deadline expired"), "typed expiry, got: {err}");
+        assert!(resp[1].result.is_ok(), "live request still served");
+        assert_eq!(r.metrics.expired, 1);
+        assert_eq!(r.metrics.failures, 0, "expiry is its own counter, not a failure");
+        let m = r.metrics.get("cipherprune").unwrap();
+        assert_eq!(m.requests, 1, "only the live request reached a session");
+        assert_eq!(m.queue_waits.len(), 1, "expired requests record no dispatch wait");
+        // the expired id is free for resubmission
+        assert!(r.submit(mk_reqs(1, EngineKind::CipherPrune).remove(0)).is_ok());
     }
 
     #[test]

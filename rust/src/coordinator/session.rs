@@ -48,13 +48,23 @@
 //! failing party tears down its channel endpoint (unblocking the peer) and
 //! the session is *poisoned*: later requests fail fast instead of touching
 //! half-dead protocol state.
+//!
+//! A peer that *stalls* without disconnecting (hung process, held delivery)
+//! errors nothing by itself — historically an infinite hang. With
+//! [`EngineConfig::stall_timeout`](super::engine::EngineConfig::stall_timeout)
+//! set, the per-session watchdog covers it at two levels: every party-link
+//! receive is bounded (`Chan::set_recv_timeout`, surfacing the typed
+//! `NetError::Timeout`), and the reply wait in `infer_batch`/preprocessing
+//! carries a generous backstop cap. Either trip cancels the run, poisons the
+//! session, and fails the batch — which is exactly what the coordinator's
+//! evict-and-retry path consumes.
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
@@ -81,6 +91,40 @@ enum PartyJob {
 enum PartyReply {
     Batch(Box<BatchPartyOut>),
     Preproc(Box<PreprocReport>),
+}
+
+/// Outcome of waiting for one party reply under the stall watchdog.
+enum Wait {
+    Reply(anyhow::Result<PartyReply>),
+    /// The worker thread is gone (its reply sender dropped).
+    Dead,
+    /// Watchdog backstop expired with the worker still silent.
+    Stalled(Duration),
+}
+
+/// Wait for one party reply. With a stall bound configured, the *link-level*
+/// recv timeout ([`Chan::set_recv_timeout`]) is the real watchdog: a party
+/// parked on a hung peer unwedges within one bound and its typed error
+/// arrives here moments later. The cap applied on top is a deliberately
+/// generous backstop for a party wedged somewhere the link clock cannot see
+/// — generous because legitimate *compute* time per batch is unbounded by
+/// the link bound (many sub-bound round trips), and a spurious trip would
+/// poison a healthy session.
+fn wait_reply(rx: &Receiver<anyhow::Result<PartyReply>>, watchdog: Option<Duration>) -> Wait {
+    match watchdog {
+        None => match rx.recv() {
+            Ok(r) => Wait::Reply(r),
+            Err(_) => Wait::Dead,
+        },
+        Some(d) => {
+            let cap = d * 20 + Duration::from_secs(30);
+            match rx.recv_timeout(cap) {
+                Ok(r) => Wait::Reply(r),
+                Err(RecvTimeoutError::Disconnected) => Wait::Dead,
+                Err(RecvTimeoutError::Timeout) => Wait::Stalled(cap),
+            }
+        }
+    }
 }
 
 fn spawn_party(
@@ -227,6 +271,11 @@ impl Session {
         let (mut ca, mut cb, transcript) = chans;
         ca.set_coalesce(cfg.coalesce);
         cb.set_coalesce(cfg.coalesce);
+        // arm the link-level half of the stall watchdog: a party blocked on
+        // a hung-but-connected peer errors out after the bound instead of
+        // hanging its thread (and this session's drop-join) forever
+        ca.set_recv_timeout(cfg.stall_timeout);
+        cb.set_recv_timeout(cfg.stall_timeout);
         let t0 = Instant::now();
         let (jtx0, jrx0) = channel();
         let (jtx1, jrx1) = channel();
@@ -395,16 +444,20 @@ impl Session {
                 first_err.get_or_insert(format!("P{i} session worker is gone"));
                 continue;
             }
-            match tp.out_rx[i].recv() {
-                Ok(Ok(PartyReply::Batch(out))) => outs[i] = Some(out),
-                Ok(Ok(PartyReply::Preproc(_))) => {
+            match wait_reply(&tp.out_rx[i], self.cfg.stall_timeout) {
+                Wait::Reply(Ok(PartyReply::Batch(out))) => outs[i] = Some(out),
+                Wait::Reply(Ok(PartyReply::Preproc(_))) => {
                     first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
                 }
-                Ok(Err(e)) => {
+                Wait::Reply(Err(e)) => {
                     first_err.get_or_insert(format!("P{i}: {e:#}"));
                 }
-                Err(_) => {
+                Wait::Dead => {
                     first_err.get_or_insert(format!("P{i} session worker died mid-batch"));
+                }
+                Wait::Stalled(cap) => {
+                    first_err
+                        .get_or_insert(format!("P{i} watchdog: no reply within {cap:?}"));
                 }
             }
         }
@@ -520,16 +573,20 @@ impl Session {
                 first_err.get_or_insert(format!("P{i} session worker is gone"));
                 continue;
             }
-            match tp.out_rx[i].recv() {
-                Ok(Ok(PartyReply::Preproc(report))) => self.last_reports[i] = *report,
-                Ok(Ok(PartyReply::Batch(_))) => {
+            match wait_reply(&tp.out_rx[i], self.cfg.stall_timeout) {
+                Wait::Reply(Ok(PartyReply::Preproc(report))) => self.last_reports[i] = *report,
+                Wait::Reply(Ok(PartyReply::Batch(_))) => {
                     first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
                 }
-                Ok(Err(e)) => {
+                Wait::Reply(Err(e)) => {
                     first_err.get_or_insert(format!("P{i}: {e:#}"));
                 }
-                Err(_) => {
+                Wait::Dead => {
                     first_err.get_or_insert(format!("P{i} session worker died preprocessing"));
+                }
+                Wait::Stalled(cap) => {
+                    first_err
+                        .get_or_insert(format!("P{i} watchdog: no reply within {cap:?}"));
                 }
             }
         }

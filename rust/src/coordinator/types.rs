@@ -1,5 +1,7 @@
 //! Request/response and result types of the serving coordinator.
 
+use std::time::Instant;
+
 use crate::net::PhaseStats;
 
 /// The engine variants the coordinator can dispatch to — the paper's
@@ -85,6 +87,30 @@ pub struct InferenceRequest {
     pub id: u64,
     pub ids: Vec<usize>,
     pub engine: EngineKind,
+    /// Drop-dead time: a request still queued when this instant passes is
+    /// answered as expired *before* burning a session run (checked at
+    /// dispatch, where the batch is about to be spent on it). `None` = no
+    /// deadline. Resolved from the wire's relative `deadline_ms` at
+    /// admission.
+    pub deadline: Option<Instant>,
+}
+
+impl InferenceRequest {
+    /// A request without a deadline (the historical shape).
+    pub fn new(id: u64, ids: Vec<usize>, engine: EngineKind) -> InferenceRequest {
+        InferenceRequest { id, ids, engine, deadline: None }
+    }
+
+    /// Builder-style deadline attachment.
+    pub fn with_deadline(mut self, deadline: Instant) -> InferenceRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Whether the deadline (if any) has passed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Per-layer decision statistics (Fig. 19, Table 3).

@@ -276,10 +276,10 @@ fn cmd_serve(kv: HashMap<String, String>) {
     let wl_l = Workload::qnli_like(&cfg, (seq * 2).min(cfg.max_seq));
     let mut reqs: Vec<InferenceRequest> = Vec::new();
     for (i, s) in wl_s.batch(n_req / 2, 11).into_iter().enumerate() {
-        reqs.push(InferenceRequest { id: i as u64, ids: s.ids, engine });
+        reqs.push(InferenceRequest::new(i as u64, s.ids, engine));
     }
     for (i, s) in wl_l.batch(n_req - n_req / 2, 12).into_iter().enumerate() {
-        reqs.push(InferenceRequest { id: (n_req / 2 + i) as u64, ids: s.ids, engine });
+        reqs.push(InferenceRequest::new((n_req / 2 + i) as u64, s.ids, engine));
     }
     if kv.contains_key("prewarm") {
         // offline prewarm: set up + preprocess the sessions before traffic,
@@ -348,6 +348,11 @@ fn cmd_serve_clients(kv: HashMap<String, String>) {
         transport: transport_for(&kv),
         max_queue: opt_usize(&kv, "max-queue", 256),
         max_inflight_per_conn: opt_usize(&kv, "max-inflight", 32),
+        max_writer_queue: opt_usize(&kv, "max-writer-queue", 1024),
+        stall_timeout: kv
+            .get("stall-timeout-ms")
+            .and_then(|v| v.parse().ok())
+            .map(Duration::from_millis),
         prewarm: Vec::new(),
     };
     if kv.contains_key("prewarm") {

@@ -65,12 +65,16 @@ pub mod tcp;
 pub mod transport;
 
 pub use tcp::{read_frame, write_frame, TcpTransport};
-pub use transport::{CutTransport, MemTransport, SimTransport, Transport};
+pub use transport::{
+    ChaosSpec, CutTransport, FaultPlan, FaultState, FaultTransport, MemTransport, SimTransport,
+    Transport,
+};
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Largest single logical message. Bounded below the `u32` inner length
 /// prefix AND below `TcpTransport`'s frame cap (2 GiB), so an over-long
@@ -97,6 +101,11 @@ pub enum NetError {
     Io(String),
     /// Malformed wire data (bad frame length, truncated message framing).
     Frame(String),
+    /// No frame within the channel's recv bound: the peer is hung but still
+    /// connected (the stall a watchdog must escape — nothing below the bound
+    /// would ever error). Sticky like the other variants: a stalled link is
+    /// treated as dead from the first missed bound on.
+    Timeout(Duration),
 }
 
 impl fmt::Display for NetError {
@@ -105,6 +114,7 @@ impl fmt::Display for NetError {
             NetError::Disconnected => write!(f, "peer disconnected"),
             NetError::Io(e) => write!(f, "transport I/O error: {e}"),
             NetError::Frame(e) => write!(f, "wire framing error: {e}"),
+            NetError::Timeout(d) => write!(f, "link stalled: no frame within {d:?}"),
         }
     }
 }
@@ -153,6 +163,10 @@ pub enum TransportSpec {
     Sim(NetModel),
     /// Real TCP over an ephemeral loopback port.
     TcpLoopback,
+    /// In-memory duplex under seeded fault injection: every link built from
+    /// this spec draws the next [`FaultPlan`] (cut / stall / flip-then-heal /
+    /// benign) from the spec's shared stream — the chaos-harness substrate.
+    Chaos(ChaosSpec),
 }
 
 impl Default for TransportSpec {
@@ -162,13 +176,16 @@ impl Default for TransportSpec {
 }
 
 impl TransportSpec {
-    /// Parse a CLI name: `mem`, `tcp`, `sim`/`sim-lan`, `sim-wan`.
+    /// Parse a CLI name: `mem`, `tcp`, `sim`/`sim-lan`, `sim-wan`, `chaos`
+    /// (fault injection with a fixed default seed; chaos campaigns that need
+    /// a specific seed construct [`TransportSpec::Chaos`] directly).
     pub fn by_name(s: &str) -> Option<TransportSpec> {
         match s {
             "mem" => Some(TransportSpec::Mem),
             "tcp" => Some(TransportSpec::TcpLoopback),
             "sim" | "sim-lan" => Some(TransportSpec::Sim(NetModel::LAN)),
             "sim-wan" => Some(TransportSpec::Sim(NetModel::WAN)),
+            "chaos" => Some(TransportSpec::Chaos(ChaosSpec::new(0xC4A05))),
             _ => None,
         }
     }
@@ -178,6 +195,7 @@ impl TransportSpec {
             TransportSpec::Mem => "mem".to_string(),
             TransportSpec::Sim(m) => format!("sim:{}", m.name),
             TransportSpec::TcpLoopback => "tcp".to_string(),
+            TransportSpec::Chaos(c) => format!("chaos:{:#x}", c.seed),
         }
     }
 }
@@ -319,6 +337,9 @@ pub struct Chan {
     /// operation reports the same error (a drained-but-unsent buffer must
     /// not make a later flush look successful).
     dead: Option<NetError>,
+    /// Upper bound on any single receive: an empty wait past it becomes the
+    /// sticky [`NetError::Timeout`]. `None` (default) blocks indefinitely.
+    recv_bound: Option<Duration>,
     /// Running content digest of this endpoint's sends, folded lock-free per
     /// message and mirrored into `Transcript::content[endpoint]` at commit.
     content: u64,
@@ -346,6 +367,7 @@ impl Chan {
                 msgs: 0,
             }),
             dead: None,
+            recv_bound: None,
             content: DIGEST_INIT,
             sent_bytes: 0,
             sent_msgs: 0,
@@ -386,6 +408,10 @@ impl Chan {
             TransportSpec::Mem => Ok(Self::pair()),
             TransportSpec::Sim(m) => Ok(Self::sim_pair(*m)),
             TransportSpec::TcpLoopback => Self::tcp_loopback_pair(),
+            TransportSpec::Chaos(c) => {
+                let (ta, tb) = c.mem_pair();
+                Ok(Self::pair_from(Box::new(ta), Box::new(tb)))
+            }
         }
     }
 
@@ -393,6 +419,16 @@ impl Chan {
     /// is its own frame/flight; bytes, msgs, and digests are unaffected.
     pub fn set_coalesce(&mut self, on: bool) {
         self.coalesce = on;
+    }
+
+    /// Bound every subsequent receive: if no frame arrives within `d`, the
+    /// operation fails with the sticky [`NetError::Timeout`]. `None`
+    /// (default) keeps the historical block-forever behavior. This is the
+    /// link-level half of the session stall watchdog — it guarantees a party
+    /// thread parked on a hung-but-connected peer unwedges, reports a typed
+    /// error, and exits instead of hanging `Session::drop`'s join forever.
+    pub fn set_recv_timeout(&mut self, d: Option<Duration>) {
+        self.recv_bound = d;
     }
 
     /// Backend name of the underlying transport.
@@ -539,13 +575,25 @@ impl Chan {
             if let Some(m) = self.rq.pop_front() {
                 return Ok(m);
             }
-            let frame = match self.t.recv_frame() {
+            let frame = match self.recv_frame_bounded() {
                 Ok(f) => f,
                 Err(e) => return Err(self.fail(e)),
             };
             if let Err(e) = self.split_frame(&frame) {
                 return Err(self.fail(e));
             }
+        }
+    }
+
+    /// One transport receive under the configured recv bound; an empty
+    /// bounded wait is promoted to [`NetError::Timeout`].
+    fn recv_frame_bounded(&mut self) -> Result<Vec<u8>, NetError> {
+        match self.recv_bound {
+            None => self.t.recv_frame(),
+            Some(d) => match self.t.recv_frame_timeout(d)? {
+                Some(f) => Ok(f),
+                None => Err(NetError::Timeout(d)),
+            },
         }
     }
 
@@ -814,11 +862,25 @@ mod tests {
 
     #[test]
     fn transport_spec_names_roundtrip() {
-        for name in ["mem", "tcp", "sim", "sim-wan"] {
+        for name in ["mem", "tcp", "sim", "sim-wan", "chaos"] {
             assert!(TransportSpec::by_name(name).is_some(), "{name}");
         }
         assert_eq!(TransportSpec::by_name("mem"), Some(TransportSpec::Mem));
         assert_eq!(TransportSpec::by_name("carrier-pigeon"), None);
         assert_eq!(TransportSpec::Sim(NetModel::WAN).label(), "sim:WAN");
+        assert_eq!(TransportSpec::Chaos(ChaosSpec::new(0xAB)).label(), "chaos:0xab");
+    }
+
+    #[test]
+    fn recv_timeout_is_a_sticky_typed_error() {
+        let (mut a, mut b, _t) = Chan::pair();
+        a.set_recv_timeout(Some(Duration::from_millis(20)));
+        let e = a.try_recv_bytes().unwrap_err();
+        assert!(matches!(e, NetError::Timeout(_)), "{e}");
+        // sticky: the stall latched the link dead; a frame arriving later
+        // must not resurrect it mid-protocol
+        b.send_bytes(&[1]);
+        b.flush();
+        assert_eq!(a.try_recv_bytes().unwrap_err(), e);
     }
 }

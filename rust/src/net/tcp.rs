@@ -155,6 +155,44 @@ impl Transport for TcpTransport {
         read_frame(&mut self.reader)
     }
 
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>, NetError> {
+        // Implemented with a socket read timeout around the same framing as
+        // `read_frame`. The bound applies per read(2): an empty wait on the
+        // header is the clean `Ok(None)`; a stall *mid-frame* leaves the
+        // byte stream desynchronized, so it surfaces as a hard I/O error
+        // instead. (`Chan` latches the link dead on either outcome — no
+        // caller ever resumes reading a desynchronized stream.)
+        fn timed_out(e: &io::Error) -> bool {
+            matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+        }
+        self.reader
+            .get_ref()
+            .set_read_timeout(Some(timeout))
+            .map_err(NetError::from_io)?;
+        let mut len_bytes = [0u8; 4];
+        let out = match self.reader.read_exact(&mut len_bytes) {
+            Err(e) if timed_out(&e) => Ok(None),
+            Err(e) => Err(io_err(e)),
+            Ok(()) => {
+                let len = u32::from_le_bytes(len_bytes) as usize;
+                if len == 0 || len > MAX_FRAME {
+                    Err(NetError::Frame(format!("bad frame length {len}")))
+                } else {
+                    let mut frame = vec![0u8; len];
+                    match self.reader.read_exact(&mut frame) {
+                        Ok(()) => Ok(Some(frame)),
+                        Err(e) if timed_out(&e) => {
+                            Err(NetError::Io("link stalled mid-frame".to_string()))
+                        }
+                        Err(e) => Err(io_err(e)),
+                    }
+                }
+            }
+        };
+        let _ = self.reader.get_ref().set_read_timeout(None);
+        out
+    }
+
     fn name(&self) -> &'static str {
         "tcp"
     }
@@ -204,6 +242,20 @@ mod tests {
             assert_eq!(b.recv_frame().unwrap(), vec![i; 100]);
         }
         assert_eq!(b.recv_frame().unwrap_err(), NetError::Disconnected);
+    }
+
+    #[test]
+    fn recv_timeout_returns_none_without_killing_the_link() {
+        let (mut a, mut b) = TcpTransport::loopback_pair().expect("loopback pair");
+        assert_eq!(b.recv_frame_timeout(Duration::from_millis(30)).unwrap(), None);
+        a.send_frame(vec![4, 2]).unwrap();
+        assert_eq!(
+            b.recv_frame_timeout(Duration::from_secs(5)).unwrap(),
+            Some(vec![4, 2])
+        );
+        // the bounded path restored blocking mode for the plain recv
+        a.send_frame(vec![7]).unwrap();
+        assert_eq!(b.recv_frame().unwrap(), vec![7]);
     }
 
     #[test]

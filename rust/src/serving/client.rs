@@ -8,7 +8,7 @@
 //! raw stream for load generators with many requests in flight).
 
 use std::collections::HashMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::net::{NetError, TcpTransport, Transport};
 
@@ -69,5 +69,49 @@ impl ServingClient {
     pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse, NetError> {
         self.send(req)?;
         self.recv_for(req.id)
+    }
+
+    /// [`call`](Self::call), retrying `Overloaded` sheds with jittered
+    /// exponential backoff until `total` has elapsed.
+    ///
+    /// `Overloaded` is the one *retryable* shed: nothing was enqueued, so an
+    /// unchanged resend (same id, same nonce) is safe — the server never
+    /// admitted the first copy. Waits double from `base`; each is jittered
+    /// to 50–150% by a deterministic hash of (id, attempt), so a fleet of
+    /// clients shed at the same instant decorrelates instead of
+    /// re-stampeding. Any other response returns immediately, and when the
+    /// budget runs out the last `Overloaded` is returned — the caller
+    /// always sees a typed outcome. Transport errors abort the loop.
+    pub fn call_with_retry(
+        &mut self,
+        req: &WireRequest,
+        base: Duration,
+        total: Duration,
+    ) -> Result<WireResponse, NetError> {
+        let deadline = Instant::now() + total;
+        let mut attempt: u32 = 0;
+        loop {
+            let resp = self.call(req)?;
+            if !matches!(resp, WireResponse::Overloaded { .. }) {
+                return Ok(resp);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(resp);
+            }
+            // exponential base, shift capped so it can never overflow
+            let exp = base.saturating_mul(1u32 << attempt.min(10));
+            // 50–150% jitter from a deterministic LCG over (id, attempt):
+            // no clock reads, no rand dependency, stable in tests
+            let h = req
+                .id
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(attempt as u64)
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let jittered = exp.mul_f64(0.5 + (h >> 32) as f64 / u32::MAX as f64);
+            std::thread::sleep(jittered.min(deadline - now));
+            attempt += 1;
+        }
     }
 }

@@ -13,10 +13,14 @@
 //! - sleep until the batcher's [`next_deadline`](Batcher::next_deadline)
 //!   (or a new arrival) — no busy-polling, linger promises kept;
 //! - jobs whose connection died before dispatch are dropped (counted as
-//!   cancelled), so a severed client cannot occupy batch slots;
-//! - a batch failure answers *those* jobs with `Failed` and evicts the
-//!   poisoned session — the next batch of that kind gets a fresh session
-//!   (next seed in the shard's sequence) and the shard thread never dies;
+//!   cancelled), and jobs whose deadline ran out are answered `Expired` —
+//!   both *before* a batch slot or session run is spent on them;
+//! - a wave failure (session poisoned mid-batch by a link cut or the stall
+//!   watchdog) evicts the session and replays the SAME wave ONCE on a fresh
+//!   one (next seed in the shard's sequence) — logits are deterministic in
+//!   (nonce, content), so the replay is bit-identical to a first-try run;
+//!   only a second failure answers those jobs `Failed`. The shard thread
+//!   never dies;
 //! - idle ticks refill the sessions' correlated-randomness pools
 //!   ([`Session::refill`]) so bursts pay online cost only.
 
@@ -33,7 +37,7 @@ use crate::coordinator::{
     MetricsRegistry, PreparedModel, Session,
 };
 
-use super::server::{ServeConfig, ServerStats};
+use super::server::{ReplyHandle, ServeConfig, ServerStats};
 use super::wire::{RejectCode, WireResponse};
 
 /// How long an idle shard sleeps between maintenance ticks when nothing is
@@ -70,20 +74,24 @@ pub struct Job {
     pub ids: Vec<usize>,
     /// Admission time — queue wait is measured from here to dispatch.
     pub enqueued: Instant,
+    /// Drop-dead time resolved at admission (`None` = no deadline): past it
+    /// the shard answers `Expired` at dispatch instead of spending a
+    /// session run.
+    pub deadline: Option<Instant>,
     /// Cleared when the owning connection goes away; the shard then drops
     /// the job instead of spending a batch slot on it.
     pub alive: Arc<std::sync::atomic::AtomicBool>,
     /// The connection's in-flight id set (shared with admission control);
     /// the shard removes the id once the job is answered or cancelled.
     pub inflight: Arc<Mutex<std::collections::HashSet<u64>>>,
-    /// Where the response goes (the connection's writer queue).
-    pub reply: Sender<WireResponse>,
+    /// Where the response goes (the connection's bounded writer queue).
+    pub reply: ReplyHandle,
 }
 
 impl Job {
     /// Settle the job's admission bookkeeping: free the connection's
     /// in-flight slot and the global queue-depth gauge.
-    fn settle(&self, stats: &ServerStats) {
+    pub(crate) fn settle(&self, stats: &ServerStats) {
         self.inflight.lock().expect("inflight set lock").remove(&self.id);
         stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
     }
@@ -245,7 +253,7 @@ impl Shard {
     fn enqueue(&mut self, job: Job) {
         self.next_serial += 1;
         let serial = self.next_serial;
-        let req = InferenceRequest { id: serial, ids: job.ids.clone(), engine: job.kind };
+        let req = InferenceRequest::new(serial, job.ids.clone(), job.kind);
         match self.batcher.push(req) {
             Ok(_) => {
                 self.jobs.insert(serial, job);
@@ -255,7 +263,7 @@ impl Shard {
                 let code = RejectCode::from_reason(reason).unwrap_or(RejectCode::Malformed);
                 self.stats.shed_rejected.fetch_add(1, Ordering::SeqCst);
                 job.settle(&self.stats);
-                let _ = job.reply.send(WireResponse::Rejected {
+                job.reply.send(WireResponse::Rejected {
                     id: job.id,
                     code,
                     detail: reason.as_str().to_string(),
@@ -334,6 +342,9 @@ impl Shard {
         if let Some(s) = &self.cfg.schedule {
             ec = ec.schedule(s.clone());
         }
+        if let Some(d) = self.cfg.stall_timeout {
+            ec = ec.stall_timeout(d);
+        }
         ec
     }
 
@@ -352,13 +363,26 @@ impl Shard {
     }
 
     fn run_batch(&mut self, batch: crate::coordinator::Batch) {
-        // map serials back to jobs, dropping those whose connection died
+        // map serials back to jobs, dropping dead connections and expired
+        // deadlines — this is the last instant before a session run would
+        // be spent on them
+        let now = Instant::now();
         let mut live: Vec<Job> = Vec::with_capacity(batch.requests.len());
         for r in &batch.requests {
             let Some(job) = self.jobs.remove(&r.id) else { continue };
             if !job.alive.load(Ordering::SeqCst) {
                 self.stats.cancelled.fetch_add(1, Ordering::SeqCst);
                 job.settle(&self.stats);
+                continue;
+            }
+            if job.deadline.is_some_and(|d| now >= d) {
+                self.stats.expired.fetch_add(1, Ordering::SeqCst);
+                self.registry.lock().expect("registry lock").expired += 1;
+                job.settle(&self.stats);
+                job.reply.send(WireResponse::Expired {
+                    id: job.id,
+                    detail: "deadline expired before dispatch".into(),
+                });
                 continue;
             }
             live.push(job);
@@ -415,6 +439,30 @@ impl Shard {
                 Ok(ss) => ss.session.infer_batch(&wave_blocks),
                 Err(e) => Err(e.context("building shard session")),
             };
+            let result = match result {
+                Ok(r) => Ok(r),
+                Err(first) => {
+                    // deterministic one-shot retry: evict the poisoned
+                    // session and replay the SAME (nonce, ids) wave on a
+                    // fresh one (next seed in the shard's sequence). Logits
+                    // are deterministic in (nonce, content), so a successful
+                    // replay is bit-identical to what the first session
+                    // would have produced — the client never sees the fault.
+                    self.evict_if_poisoned(kind);
+                    self.registry.lock().expect("registry lock").retries += 1;
+                    let retried = match self.session_for(kind) {
+                        Ok(ss) => ss.session.infer_batch(&wave_blocks),
+                        Err(e) => Err(e.context("building replacement session")),
+                    };
+                    match retried {
+                        Ok(r) => {
+                            self.registry.lock().expect("registry lock").retry_successes += 1;
+                            Ok(r)
+                        }
+                        Err(e) => Err(anyhow::anyhow!("{first:#}; retry failed: {e:#}")),
+                    }
+                }
+            };
             match result {
                 Ok(results) => {
                     // batch-level metrics recorded ONCE (shared wall/traffic)
@@ -429,7 +477,7 @@ impl Shard {
                         // response must see consistent counters
                         self.stats.completed.fetch_add(1, Ordering::SeqCst);
                         job.settle(&self.stats);
-                        let _ = job.reply.send(WireResponse::Result {
+                        job.reply.send(WireResponse::Result {
                             id: job.id,
                             batch_size: r.batch_size as u32,
                             queue_wait_s: waits[i],
@@ -438,14 +486,15 @@ impl Shard {
                     }
                 }
                 Err(e) => {
-                    // fail THESE requests; evict the session if poisoned so
-                    // the next batch gets a fresh one — the shard lives on
+                    // the retry failed too: fail THESE requests; evict the
+                    // replacement if it is poisoned as well — the shard
+                    // lives on
                     let detail = format!("{e:#}");
                     for &i in &wave {
                         let job = &jobs[i];
                         self.stats.failed.fetch_add(1, Ordering::SeqCst);
                         job.settle(&self.stats);
-                        let _ = job.reply.send(WireResponse::Failed {
+                        job.reply.send(WireResponse::Failed {
                             id: job.id,
                             detail: detail.clone(),
                         });
@@ -454,12 +503,19 @@ impl Shard {
                         let mut reg = self.registry.lock().expect("registry lock");
                         reg.failures += wave.len() as u64;
                     }
-                    if let Some(ss) = self.sessions.get(&kind) {
-                        if ss.session.poisoned().is_some() {
-                            self.sessions.remove(&kind);
-                        }
-                    }
+                    self.evict_if_poisoned(kind);
                 }
+            }
+        }
+    }
+
+    /// Drop `kind`'s session if its link is poisoned, so the next
+    /// [`session_for`](Self::session_for) builds a replacement on the next
+    /// seed in the shard's sequence.
+    fn evict_if_poisoned(&mut self, kind: EngineKind) {
+        if let Some(ss) = self.sessions.get(&kind) {
+            if ss.session.poisoned().is_some() {
+                self.sessions.remove(&kind);
             }
         }
     }

@@ -12,20 +12,27 @@
 //! # The admission / backpressure / shedding contract
 //!
 //! - **Every frame gets a typed answer.** A request is either admitted (and
-//!   eventually answered with `Result`, `Failed`, or silently dropped only
-//!   if *its own* connection died) or immediately shed with `Overloaded`
-//!   (queue full — retryable) or `Rejected` (a [`RejectCode`] names the
-//!   cause: malformed, unknown engine, empty, too long, duplicate id,
+//!   eventually answered with `Result`, `Failed`, `Expired` — its
+//!   `deadline_ms` ran out while queued — or silently dropped only if *its
+//!   own* connection died) or immediately shed with `Overloaded` (queue
+//!   full — retryable) or `Rejected` (a [`RejectCode`] names the cause:
+//!   malformed, unknown engine, empty, too long, duplicate id,
 //!   per-connection cap). Clients never hang on a shed request.
 //! - **Backpressure is bounded and explicit.** Admitted-but-unfinished work
 //!   is capped by `max_queue` globally and `max_inflight_per_conn` per
 //!   connection; beyond either bound the server sheds instead of queueing.
-//!   Reads are per-connection threads, responses go through per-connection
-//!   writer queues — a slow client never blocks shards or other clients.
-//! - **Failure stays request-scoped.** A backend error answers exactly the
-//!   affected requests with `Failed` and evicts the poisoned session; a
-//!   severed connection cancels its queued jobs at dispatch time. Neither
-//!   poisons other connections, shards, or the process.
+//!   Reads are per-connection threads, responses go through *bounded*
+//!   per-connection writer queues — a slow client never blocks shards or
+//!   other clients, and one that stops draining entirely is disconnected
+//!   when its queue fills.
+//! - **Failure stays request-scoped — and is retried once first.** A
+//!   session poisoned mid-batch (link cut, or a hung peer tripping the
+//!   `stall_timeout` watchdog) has its wave replayed ONCE on a fresh
+//!   session; logits are deterministic in (nonce, content), so the replay
+//!   is bit-identical and the client never sees the fault. Only a second
+//!   failure answers exactly the affected requests with `Failed`. A severed
+//!   connection cancels its queued jobs at dispatch time. Neither poisons
+//!   other connections, shards, or the process.
 //! - **Served results are bit-identical to direct inference.** Placement
 //!   ([`shard_for`]) and session seeding ([`shard_seed`]) are deterministic
 //!   pure functions, so for any admitted request the response logits equal
@@ -50,7 +57,7 @@ pub mod wire;
 
 pub use client::ServingClient;
 pub use dispatch::{shard_for, shard_seed, Dispatch, Job, RouteMap};
-pub use server::{ServeConfig, Server, ServerStats, QUEUE_WAIT_BUCKETS};
+pub use server::{ReplyHandle, ServeConfig, Server, ServerStats, QUEUE_WAIT_BUCKETS};
 pub use wire::{
     decode_request, decode_response, encode_request, encode_response, DecodeError, RejectCode,
     WireRequest, WireResponse,

@@ -20,11 +20,20 @@
 //! connections, queued work, and the process are untouched. A connection
 //! that disappears mid-flight cancels its queued jobs (the shard drops them
 //! at dispatch) without poisoning any session.
+//!
+//! Two more lifecycle outcomes exist past admission: `Expired` — the
+//! request's `deadline_ms` ran out while it queued, so it is dropped at
+//! dispatch without spending a session run — and `Failed` only after a
+//! transparent one-shot retry (a session poisoned mid-batch has its wave
+//! replayed once on a fresh session; logits are deterministic in
+//! (nonce, content), so the replay is bit-identical). A client that stops
+//! draining its responses is disconnected when its bounded writer queue
+//! fills ([`ReplyHandle`]) — shards never block on a slow socket.
 
 use std::collections::HashSet;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -65,6 +74,17 @@ pub struct ServeConfig {
     /// Per-connection in-flight cap; above it requests shed with
     /// `Rejected(TooManyInFlight)`.
     pub max_inflight_per_conn: usize,
+    /// Per-connection writer-queue bound (responses awaiting the socket).
+    /// A client that falls this far behind is disconnected
+    /// ([`ServerStats::writer_overflow_disconnects`]) — bounding the queue
+    /// is what keeps shards from ever blocking on a slow client.
+    pub max_writer_queue: usize,
+    /// Stall watchdog for the shard party links
+    /// ([`EngineConfig::stall_timeout`](crate::coordinator::EngineConfig)):
+    /// a hung-but-connected peer trips a typed timeout instead of wedging
+    /// the shard forever; the poisoned session then feeds the retry path.
+    /// `None` keeps the historical block-until-reply behavior.
+    pub stall_timeout: Option<Duration>,
     /// Shapes to prewarm at startup: each shard builds the kind's session
     /// and preprocesses pools for the lengths it would serve.
     pub prewarm: Vec<(EngineKind, Vec<usize>)>,
@@ -81,6 +101,8 @@ impl Default for ServeConfig {
             transport: TransportSpec::Mem,
             max_queue: 256,
             max_inflight_per_conn: 32,
+            max_writer_queue: 1024,
+            stall_timeout: None,
             prewarm: Vec::new(),
         }
     }
@@ -115,6 +137,12 @@ pub struct ServerStats {
     pub shed_overloaded: AtomicU64,
     /// Requests answered with a typed `Rejected`.
     pub shed_rejected: AtomicU64,
+    /// Requests answered `Expired`: their deadline ran out while queued, so
+    /// the shard dropped them at dispatch without spending a session run.
+    pub expired: AtomicU64,
+    /// Connections severed because their bounded writer queue overflowed
+    /// (the client stopped draining responses).
+    pub writer_overflow_disconnects: AtomicU64,
     /// Gauge: admitted requests not yet completed/failed/cancelled.
     pub queue_depth: AtomicU64,
     /// Queue-wait histogram: per-bucket increments for
@@ -188,6 +216,18 @@ impl ServerStats {
             "Requests refused with a typed rejection.",
             self.shed_rejected.load(Ordering::SeqCst),
         );
+        counter(
+            &mut out,
+            "cipherprune_requests_expired_total",
+            "Requests whose deadline ran out while queued (dropped at dispatch).",
+            self.expired.load(Ordering::SeqCst),
+        );
+        counter(
+            &mut out,
+            "cipherprune_writer_overflow_disconnects_total",
+            "Connections severed because their writer queue overflowed.",
+            self.writer_overflow_disconnects.load(Ordering::SeqCst),
+        );
         out.push_str(&format!(
             "# HELP cipherprune_queue_depth Admitted requests not yet finished.\n\
              # TYPE cipherprune_queue_depth gauge\n\
@@ -231,6 +271,18 @@ impl ServerStats {
             "cipherprune_refill_failures_total",
             "Background pool refills that failed.",
             registry.refill_failures,
+        );
+        counter(
+            &mut out,
+            "cipherprune_retries_total",
+            "Waves replayed on a fresh session after mid-batch poison.",
+            registry.retries,
+        );
+        counter(
+            &mut out,
+            "cipherprune_retry_successes_total",
+            "Replayed waves that completed.",
+            registry.retry_successes,
         );
         out.push_str(
             "# HELP cipherprune_engine_runs_total Pipeline runs per engine (fused batches count once).\n\
@@ -311,6 +363,7 @@ impl Server {
             let policy = route.policy().normalized();
             let max_queue = cfg.max_queue;
             let max_inflight = cfg.max_inflight_per_conn.max(1);
+            let writer_cap = cfg.max_writer_queue.max(1);
             std::thread::Builder::new()
                 .name("serve-accept".into())
                 .spawn(move || loop {
@@ -327,6 +380,7 @@ impl Server {
                                 .spawn(move || {
                                     connection_loop(
                                         stream, route, stats, policy, max_queue, max_inflight,
+                                        writer_cap,
                                     )
                                 })
                                 .expect("spawn connection thread");
@@ -422,13 +476,46 @@ impl Drop for Server {
     }
 }
 
+/// Cloneable handle onto one connection's writer queue. The queue is
+/// BOUNDED and [`send`](Self::send) never blocks — shards must not wait on
+/// a slow client. When the queue is full the connection is severed instead:
+/// the client stopped draining responses, so every later answer would be
+/// undeliverable anyway. Severing wakes the blocking reader (teardown), so
+/// the connection's remaining jobs settle as cancelled.
+#[derive(Clone)]
+pub struct ReplyHandle {
+    tx: SyncSender<WireResponse>,
+    alive: Arc<AtomicBool>,
+    stream: Arc<TcpStream>,
+    stats: Arc<ServerStats>,
+}
+
+impl ReplyHandle {
+    /// Queue one response. On a full queue: count the overflow once, mark
+    /// the connection dead, sever the socket, and drop the response.
+    pub fn send(&self, resp: WireResponse) {
+        match self.tx.try_send(resp) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                if self.alive.swap(false, Ordering::SeqCst) {
+                    self.stats.writer_overflow_disconnects.fetch_add(1, Ordering::SeqCst);
+                }
+                let _ = self.stream.shutdown(Shutdown::Both);
+            }
+            // writer already gone (connection torn down): nothing to deliver
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+}
+
 /// One client connection: a blocking reader (this thread) that admits or
 /// sheds each frame, plus a writer thread that serializes responses from
-/// the shards and the admission path onto the socket. The writer is fed by
-/// an unbounded queue, so neither shards nor admission ever block on a slow
-/// client. The writer thread is deliberately *not* joined here: it exits
-/// when the last response sender drops (shards settle this connection's
-/// jobs during their drain), which may be after the reader is gone.
+/// the shards and the admission path onto the socket. The writer is fed
+/// through the bounded [`ReplyHandle`] queue, so neither shards nor
+/// admission ever block on a slow client. The writer thread is deliberately
+/// *not* joined here: it exits when the last response sender drops (shards
+/// settle this connection's jobs during their drain), which may be after
+/// the reader is gone.
 fn connection_loop(
     stream: TcpStream,
     route: RouteMap,
@@ -436,15 +523,24 @@ fn connection_loop(
     policy: BatchPolicy,
     max_queue: usize,
     max_inflight: usize,
+    writer_cap: usize,
 ) {
     let _ = stream.set_nodelay(true);
     let Ok(write_half) = stream.try_clone() else { return };
-    let (reply_tx, reply_rx) = channel::<WireResponse>();
+    let Ok(sever_half) = stream.try_clone() else { return };
+    let alive = Arc::new(AtomicBool::new(true));
+    let (reply_tx, reply_rx) = sync_channel::<WireResponse>(writer_cap);
+    let reply = ReplyHandle {
+        tx: reply_tx,
+        alive: alive.clone(),
+        stream: Arc::new(sever_half),
+        stats: stats.clone(),
+    };
     let writer = std::thread::Builder::new().name("serve-conn-writer".into()).spawn(move || {
         let mut w = std::io::BufWriter::new(write_half);
         while let Ok(resp) = reply_rx.recv() {
             // client gone: keep draining so senders never see the difference
-            // (the queue is unbounded; sends cannot block)
+            // (sends are try_send and can never block on this thread)
             let _ = write_frame(&mut w, &encode_response(&resp));
         }
     });
@@ -452,7 +548,6 @@ fn connection_loop(
         return;
     }
 
-    let alive = Arc::new(AtomicBool::new(true));
     let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
     let mut reader = std::io::BufReader::new(stream);
     loop {
@@ -464,7 +559,7 @@ fn connection_loop(
         // its rejection must see the shed counter already advanced
         let reject = |id: u64, code: RejectCode, detail: String| {
             stats.shed_rejected.fetch_add(1, Ordering::SeqCst);
-            let _ = reply_tx.send(WireResponse::Rejected { id, code, detail });
+            reply.send(WireResponse::Rejected { id, code, detail });
         };
         let req = match decode_request(&frame) {
             Ok(r) => r,
@@ -506,28 +601,32 @@ fn connection_loop(
             if depth >= max_queue as u64 {
                 drop(set);
                 stats.shed_overloaded.fetch_add(1, Ordering::SeqCst);
-                let _ = reply_tx
-                    .send(WireResponse::Overloaded { id: req.id, queue_depth: depth as u32 });
+                reply.send(WireResponse::Overloaded { id: req.id, queue_depth: depth as u32 });
                 continue;
             }
             set.insert(req.id);
             stats.queue_depth.fetch_add(1, Ordering::SeqCst);
         }
         stats.accepted.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
         let job = Job {
             id: req.id,
             nonce: req.nonce,
             kind: req.engine,
             ids: req.ids,
-            enqueued: Instant::now(),
+            enqueued: now,
+            // the wire deadline is relative to THIS admission instant (the
+            // two clocks never need to agree); 0 = no deadline
+            deadline: (req.deadline_ms > 0)
+                .then(|| now + Duration::from_millis(req.deadline_ms)),
             alive: alive.clone(),
             inflight: inflight.clone(),
-            reply: reply_tx.clone(),
+            reply: reply.clone(),
         };
         if let Err(job) = route.submit(job) {
             // shard set is shutting down; settle what admission took
             job.settle(&stats);
-            let _ = reply_tx.send(WireResponse::Failed {
+            reply.send(WireResponse::Failed {
                 id: job.id,
                 detail: "server shutting down".into(),
             });

@@ -8,7 +8,12 @@
 //! self-describing by a leading tag byte.
 //!
 //! Request (tag `0x01`):
-//! `[tag u8 ‖ id u64 ‖ engine u8 (ordinal) ‖ nonce u64 ‖ n u32 ‖ ids u32×n]`
+//! `[tag u8 ‖ id u64 ‖ engine u8 (ordinal) ‖ nonce u64 ‖ deadline_ms u64 ‖ n u32 ‖ ids u32×n]`
+//!
+//! `deadline_ms` is the client's drop-dead budget relative to the server's
+//! admission instant (0 = none): a request still queued when it runs out is
+//! answered `Expired` instead of burning a session run. Relative — not an
+//! absolute timestamp — so the two machines need no clock agreement.
 //!
 //! Responses:
 //! - `0x81` Result   — `[id ‖ batch_size u32 ‖ queue_wait f64 ‖ n u32 ‖ logits f64×n]`
@@ -18,6 +23,9 @@
 //!   the request itself violates a limit ([`RejectCode`] says which).
 //! - `0x84` Failed   — `[id ‖ detail str]`; accepted but its execution
 //!   failed (backend session error) — the connection stays usable.
+//! - `0x85` Expired  — `[id ‖ detail str]`; accepted but its `deadline_ms`
+//!   ran out while it queued — dropped at dispatch, no session run spent.
+//!   Retryable (with a fresh budget): nothing was executed.
 //!
 //! Strings are `u32 LE length ‖ UTF-8 bytes`. Floats travel as
 //! `f64::to_bits` so responses are bit-exact — the serving contract is that
@@ -32,6 +40,7 @@ const TAG_RESULT: u8 = 0x81;
 const TAG_OVERLOADED: u8 = 0x82;
 const TAG_REJECTED: u8 = 0x83;
 const TAG_FAILED: u8 = 0x84;
+const TAG_EXPIRED: u8 = 0x85;
 
 /// Why a request was refused, as a stable wire code.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +109,9 @@ pub struct WireRequest {
     pub id: u64,
     pub engine: EngineKind,
     pub nonce: u64,
+    /// Drop-dead budget in milliseconds, relative to server admission
+    /// (0 = no deadline). See the module docs for the `Expired` contract.
+    pub deadline_ms: u64,
     pub ids: Vec<usize>,
 }
 
@@ -110,6 +122,7 @@ pub enum WireResponse {
     Overloaded { id: u64, queue_depth: u32 },
     Rejected { id: u64, code: RejectCode, detail: String },
     Failed { id: u64, detail: String },
+    Expired { id: u64, detail: String },
 }
 
 impl WireResponse {
@@ -119,7 +132,8 @@ impl WireResponse {
             WireResponse::Result { id, .. }
             | WireResponse::Overloaded { id, .. }
             | WireResponse::Rejected { id, .. }
-            | WireResponse::Failed { id, .. } => *id,
+            | WireResponse::Failed { id, .. }
+            | WireResponse::Expired { id, .. } => *id,
         }
     }
 }
@@ -192,11 +206,12 @@ fn put_string(out: &mut Vec<u8>, s: &str) {
 }
 
 pub fn encode_request(r: &WireRequest) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 8 + 1 + 8 + 4 + 4 * r.ids.len());
+    let mut out = Vec::with_capacity(1 + 8 + 1 + 8 + 8 + 4 + 4 * r.ids.len());
     out.push(TAG_REQUEST);
     out.extend_from_slice(&r.id.to_le_bytes());
     out.push(r.engine.ordinal() as u8);
     out.extend_from_slice(&r.nonce.to_le_bytes());
+    out.extend_from_slice(&r.deadline_ms.to_le_bytes());
     out.extend_from_slice(&(r.ids.len() as u32).to_le_bytes());
     for &id in &r.ids {
         out.extend_from_slice(&(id as u32).to_le_bytes());
@@ -226,13 +241,14 @@ pub fn decode_request(frame: &[u8]) -> Result<WireRequest, DecodeError> {
             detail: format!("engine ordinal {ord}"),
         })?;
     let nonce = c.u64().map_err(|e| malformed(Some(id), e))?;
+    let deadline_ms = c.u64().map_err(|e| malformed(Some(id), e))?;
     let n = c.u32().map_err(|e| malformed(Some(id), e))? as usize;
     let mut ids = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
         ids.push(c.u32().map_err(|e| malformed(Some(id), e))? as usize);
     }
     c.done().map_err(|e| malformed(Some(id), e))?;
-    Ok(WireRequest { id, engine, nonce, ids })
+    Ok(WireRequest { id, engine, nonce, deadline_ms, ids })
 }
 
 pub fn encode_response(r: &WireResponse) -> Vec<u8> {
@@ -264,6 +280,11 @@ pub fn encode_response(r: &WireResponse) -> Vec<u8> {
             out.extend_from_slice(&id.to_le_bytes());
             put_string(&mut out, detail);
         }
+        WireResponse::Expired { id, detail } => {
+            out.push(TAG_EXPIRED);
+            out.extend_from_slice(&id.to_le_bytes());
+            put_string(&mut out, detail);
+        }
     }
     out
 }
@@ -292,6 +313,7 @@ pub fn decode_response(frame: &[u8]) -> Result<WireResponse, String> {
             WireResponse::Rejected { id, code, detail: c.string()? }
         }
         TAG_FAILED => WireResponse::Failed { id: c.u64()?, detail: c.string()? },
+        TAG_EXPIRED => WireResponse::Expired { id: c.u64()?, detail: c.string()? },
         other => return Err(format!("unexpected response tag {other:#04x}")),
     };
     c.done()?;
@@ -308,10 +330,17 @@ mod tests {
             id: 42,
             engine: EngineKind::CipherPrune,
             nonce: 0xDEAD_BEEF,
+            deadline_ms: 2_500,
             ids: vec![3, 1, 4, 1, 5],
         };
         assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
-        let empty = WireRequest { id: 1, engine: EngineKind::BoltNoWe, nonce: 0, ids: vec![] };
+        let empty = WireRequest {
+            id: 1,
+            engine: EngineKind::BoltNoWe,
+            nonce: 0,
+            deadline_ms: 0,
+            ids: vec![],
+        };
         assert_eq!(decode_request(&encode_request(&empty)).unwrap(), empty);
     }
 
@@ -331,6 +360,7 @@ mod tests {
                 detail: "request exceeds max_tokens".into(),
             },
             WireResponse::Failed { id: 10, detail: "P1 session worker died".into() },
+            WireResponse::Expired { id: 11, detail: "deadline expired before dispatch".into() },
         ];
         for r in cases {
             assert_eq!(decode_response(&encode_response(&r)).unwrap(), r);
@@ -351,6 +381,7 @@ mod tests {
             id: 33,
             engine: EngineKind::CipherPrune,
             nonce: 0,
+            deadline_ms: 0,
             ids: vec![1],
         });
         f[9] = 0xEE; // engine ordinal byte
@@ -362,6 +393,7 @@ mod tests {
             id: 5,
             engine: EngineKind::CipherPrune,
             nonce: 0,
+            deadline_ms: 0,
             ids: vec![1, 2, 3],
         });
         t.truncate(t.len() - 2);
@@ -371,6 +403,7 @@ mod tests {
             id: 5,
             engine: EngineKind::CipherPrune,
             nonce: 0,
+            deadline_ms: 0,
             ids: vec![1],
         });
         g.push(0);

@@ -152,11 +152,7 @@ fn router_fused_equals_router_solo() {
         wl.batch(3, 99)
             .into_iter()
             .enumerate()
-            .map(|(i, s)| InferenceRequest {
-                id: i as u64,
-                ids: s.ids,
-                engine: EngineKind::CipherPrune,
-            })
+            .map(|(i, s)| InferenceRequest::new(i as u64, s.ids, EngineKind::CipherPrune))
             .collect()
     };
     let mk_router = |max_batch: usize| -> Router {

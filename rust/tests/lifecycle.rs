@@ -1,0 +1,314 @@
+//! Request-lifecycle hardening, pinned deterministically:
+//!
+//! - **Stall watchdog** — a peer that hangs *without* disconnecting (the
+//!   failure mode nothing below a recv bound would ever surface) trips the
+//!   session watchdog: the run fails typed, the session poisons, and drop
+//!   still joins the party threads.
+//! - **Mid-wave cut + replay** — a link severed mid-batch poisons the
+//!   session, and a *fresh* session (different seed) replaying the same
+//!   (nonce, content) wave produces bit-identical logits — the determinism
+//!   the dispatcher's one-shot retry stands on.
+//! - **Deadlines** — a request whose `deadline_ms` runs out while queued is
+//!   answered `Expired` at dispatch without burning a session run, and its
+//!   id is free for a fresh attempt.
+//! - **Client backoff** — `call_with_retry` keeps retrying `Overloaded`
+//!   sheds until its budget runs out, then still returns a typed response.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cipherprune::coordinator::{
+    BatchPolicy, BlockRun, EngineConfig, EngineKind, PreparedModel, Session,
+};
+use cipherprune::net::{
+    new_transcript, Chan, FaultPlan, FaultTransport, MemTransport, NetError, Transport,
+};
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::serving::{ServeConfig, Server, ServingClient, WireRequest, WireResponse};
+
+fn tiny() -> (Arc<ModelWeights>, Vec<usize>) {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, 17)[0].ids.clone();
+    (w, ids)
+}
+
+/// A transport whose delivery the test can hold: sends still land in the
+/// inner queue, receives see nothing — the peer looks hung but connected.
+struct HoldSwitch {
+    inner: Box<dyn Transport>,
+    hold: Arc<AtomicBool>,
+}
+
+impl Transport for HoldSwitch {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        self.inner.send_frame(frame)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        while self.hold.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.inner.recv_frame()
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>, NetError> {
+        if self.hold.load(Ordering::SeqCst) {
+            std::thread::sleep(timeout);
+            return Ok(None);
+        }
+        self.inner.recv_frame_timeout(timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "hold"
+    }
+}
+
+/// A peer that stalls (hangs without disconnecting) trips the watchdog: the
+/// request fails with the typed stall error instead of hanging forever, the
+/// session poisons, and `drop` still joins the party threads — which is the
+/// test finishing at all.
+#[test]
+fn stalled_peer_trips_watchdog_and_poisons_session() {
+    let (w, ids) = tiny();
+    let model = Arc::new(PreparedModel::prepare(w));
+    let (ta, tb) = MemTransport::pair();
+    let hold = Arc::new(AtomicBool::new(false));
+    let ha = HoldSwitch { inner: Box::new(ta), hold: hold.clone() };
+    let hb = HoldSwitch { inner: Box::new(tb), hold: hold.clone() };
+    let t = new_transcript();
+    let ca = Chan::over(Box::new(ha), 0, t.clone());
+    let cb = Chan::over(Box::new(hb), 1, t.clone());
+    let ec = EngineConfig::for_tests(EngineKind::CipherPrune)
+        .stall_timeout(Duration::from_millis(200));
+    let mut s = Session::start_over(model, ec, (ca, cb, t)).expect("session start");
+
+    let ok = s.infer(&ids).expect("healthy link serves the request");
+    assert_eq!(ok.logits.len(), 2);
+    assert!(s.poisoned().is_none());
+
+    hold.store(true, Ordering::SeqCst);
+    let t0 = Instant::now();
+    let err = s.infer(&ids).expect_err("a stalled peer must trip the watchdog");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("stalled") || msg.contains("watchdog"),
+        "typed stall error surfaced: {msg}"
+    );
+    assert!(s.poisoned().is_some(), "the stall poisons the session");
+    assert!(t0.elapsed() < Duration::from_secs(30), "watchdog fired, not a hang");
+
+    let again = s.infer(&ids).expect_err("poisoned session fails fast");
+    assert!(format!("{again:#}").contains("poisoned"));
+    // drop joins both party threads; the recv bound guarantees they exit
+    // even though the hold is still engaged
+    drop(s);
+}
+
+/// Counts send attempts across both endpoints — the same frame clock
+/// [`FaultTransport`] drives its triggers with, so a calibration run can
+/// name a trigger that provably lands mid-wave.
+struct CountingTransport {
+    inner: Box<dyn Transport>,
+    sends: Arc<AtomicU64>,
+}
+
+impl Transport for CountingTransport {
+    fn send_frame(&mut self, frame: Vec<u8>) -> Result<(), NetError> {
+        self.sends.fetch_add(1, Ordering::SeqCst);
+        self.inner.send_frame(frame)
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {
+        self.inner.recv_frame()
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>, NetError> {
+        self.inner.recv_frame_timeout(timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+fn start_counted(model: Arc<PreparedModel>, ec: EngineConfig) -> (Session, Arc<AtomicU64>) {
+    let (ta, tb) = MemTransport::pair();
+    let sends = Arc::new(AtomicU64::new(0));
+    let ca_t = CountingTransport { inner: Box::new(ta), sends: sends.clone() };
+    let cb_t = CountingTransport { inner: Box::new(tb), sends: sends.clone() };
+    let t = new_transcript();
+    let ca = Chan::over(Box::new(ca_t), 0, t.clone());
+    let cb = Chan::over(Box::new(cb_t), 1, t.clone());
+    let s = Session::start_over(model, ec, (ca, cb, t)).expect("counted session start");
+    (s, sends)
+}
+
+/// A link severed provably *mid-wave* (trigger calibrated between the
+/// setup and end-of-wave frame counts of an identical fault-free run)
+/// poisons the session — and a fresh session under a *different* seed
+/// replays the same (nonce, content) wave bit-identically. That replay
+/// determinism is exactly what the dispatcher's one-shot retry relies on:
+/// alignment streams are keyed by (nonce, content), not by session seed.
+#[test]
+fn cut_mid_wave_poisons_and_fresh_session_replay_is_bit_identical() {
+    let (w, ids) = tiny();
+    let model = Arc::new(PreparedModel::prepare(w));
+    let kind = EngineKind::CipherPrune;
+    let wave = vec![BlockRun { nonce: 404, ids: ids.clone() }];
+    let ec = || EngineConfig::for_tests(kind).seed(0xD0D0);
+
+    // calibration: the protocol is deterministic, so a second session with
+    // the same config crosses the same frame counts at the same points
+    let (mut cal, sends) = start_counted(model.clone(), ec());
+    let setup_frames = sends.load(Ordering::SeqCst);
+    let reference = cal.infer_batch(&wave).expect("fault-free reference").pop().unwrap();
+    let total_frames = sends.load(Ordering::SeqCst);
+    assert!(total_frames > setup_frames, "a wave must cross frames to cut mid-wave");
+    drop(cal);
+
+    // same config under a plan that severs the link halfway into the wave
+    let trigger = setup_frames + (total_frames - setup_frames) / 2;
+    let (fa, fb) = FaultTransport::mem_pair(FaultPlan::cut(trigger));
+    let t = new_transcript();
+    let ca = Chan::over(Box::new(fa), 0, t.clone());
+    let cb = Chan::over(Box::new(fb), 1, t.clone());
+    let mut s = Session::start_over(model.clone(), ec(), (ca, cb, t))
+        .expect("setup completes before the calibrated trigger");
+    let err = s.infer_batch(&wave).expect_err("the cut lands mid-wave");
+    assert!(format!("{err:#}").contains("disconnected"), "typed cut error: {err:#}");
+    assert!(s.poisoned().is_some(), "a mid-wave cut poisons the session");
+    drop(s);
+
+    // the retry path: a fresh session on a DIFFERENT seed replays the wave
+    let mut fresh = Session::start(model, ec().seed(0xF4E54)).expect("replacement session");
+    let replayed = fresh.infer_batch(&wave).expect("replay succeeds").pop().unwrap();
+    assert_eq!(
+        replayed.logits,
+        reference.logits,
+        "replay on a fresh session is bit-identical to the fault-free transcript"
+    );
+}
+
+fn serve_tiny(cfg: ServeConfig) -> (Server, String) {
+    let w = Arc::new(ModelWeights::salient(&ModelConfig::tiny(), 42));
+    let model = Arc::new(PreparedModel::prepare(w));
+    let server = Server::start(model, cfg, "127.0.0.1:0", "127.0.0.1:0").expect("server start");
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+fn fetch_metrics(addr: std::net::SocketAddr) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("connect metrics");
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").expect("send GET");
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("read metrics");
+    body
+}
+
+/// A request whose relative deadline runs out while it lingers in the
+/// batcher is answered with the typed `Expired` — no session run is spent
+/// on it — and its id is immediately free for a fresh attempt.
+#[test]
+fn expired_deadline_answers_typed_and_frees_the_id() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        linger: Duration::from_millis(150),
+        min_bucket: 8,
+        max_tokens: 32,
+    };
+    let (mut server, addr) =
+        serve_tiny(ServeConfig { shards: 1, policy, ..ServeConfig::for_tests() });
+    let ids = tiny().1;
+
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
+    // 1 ms deadline vs 150 ms linger: expired long before dispatch
+    let req = WireRequest {
+        id: 7,
+        engine: EngineKind::CipherPrune,
+        nonce: 61,
+        deadline_ms: 1,
+        ids: ids.clone(),
+    };
+    match c.call(&req).expect("call") {
+        WireResponse::Expired { id, detail } => {
+            assert_eq!(id, 7);
+            assert!(detail.contains("deadline"), "{detail}");
+        }
+        other => panic!("expected Expired, got {other:?}"),
+    }
+    assert_eq!(server.stats().expired.load(Ordering::SeqCst), 1);
+    assert_eq!(server.stats().failed.load(Ordering::SeqCst), 0, "expiry is not a failure");
+
+    // the id settled — a fresh attempt with budget reuses it and completes
+    let retry = WireRequest { deadline_ms: 0, ..req };
+    match c.call(&retry).expect("call") {
+        WireResponse::Result { id, logits, .. } => {
+            assert_eq!(id, 7);
+            assert!(!logits.is_empty());
+        }
+        other => panic!("expected Result on the fresh attempt, got {other:?}"),
+    }
+
+    let body = fetch_metrics(server.metrics_addr());
+    assert!(body.contains("cipherprune_requests_expired_total 1"), "expired counter exported");
+    server.shutdown();
+    assert_eq!(server.stats().completed.load(Ordering::SeqCst), 1);
+}
+
+/// `call_with_retry` rides out `Overloaded` sheds with backoff and still
+/// returns a typed response when the budget runs out; against a healthy
+/// server it returns the first `Result` without spending the budget.
+#[test]
+fn call_with_retry_backs_off_overloaded_until_budget() {
+    // max_queue 0: every admission sheds, so the retry loop runs dry
+    let (mut server, addr) = serve_tiny(ServeConfig {
+        shards: 1,
+        policy: BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(10),
+            min_bucket: 8,
+            max_tokens: 32,
+        },
+        max_queue: 0,
+        ..ServeConfig::for_tests()
+    });
+    let ids = tiny().1;
+    let req = WireRequest {
+        id: 1,
+        engine: EngineKind::CipherPrune,
+        nonce: 31,
+        deadline_ms: 0,
+        ids: ids.clone(),
+    };
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
+    let resp = c
+        .call_with_retry(&req, Duration::from_millis(5), Duration::from_millis(120))
+        .expect("typed response even at budget exhaustion");
+    assert!(matches!(resp, WireResponse::Overloaded { .. }), "got {resp:?}");
+    let sheds = server.stats().shed_overloaded.load(Ordering::SeqCst);
+    assert!(sheds >= 2, "the budget bought retries, not a single attempt (sheds: {sheds})");
+    server.shutdown();
+
+    // healthy server: first attempt answers, no shed counted
+    let (mut server, addr) = serve_tiny(ServeConfig {
+        shards: 1,
+        policy: BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(10),
+            min_bucket: 8,
+            max_tokens: 32,
+        },
+        ..ServeConfig::for_tests()
+    });
+    let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
+    let resp = c
+        .call_with_retry(&req, Duration::from_millis(5), Duration::from_secs(5))
+        .expect("call");
+    assert!(matches!(resp, WireResponse::Result { .. }), "got {resp:?}");
+    assert_eq!(server.stats().shed_overloaded.load(Ordering::SeqCst), 0);
+    server.shutdown();
+}

@@ -35,12 +35,8 @@ fn batcher_never_loses_or_duplicates_requests() {
             };
             let mut b = Batcher::new(policy);
             for (i, &l) in lens.iter().enumerate() {
-                b.push(InferenceRequest {
-                    id: i as u64,
-                    ids: vec![1; l],
-                    engine: EngineKind::CipherPrune,
-                })
-                .map_err(|_| format!("rejected legal len {l}"))?;
+                b.push(InferenceRequest::new(i as u64, vec![1; l], EngineKind::CipherPrune))
+                    .map_err(|_| format!("rejected legal len {l}"))?;
             }
             let mut seen = vec![false; lens.len()];
             let mut batches: Vec<Batch> = Vec::new();
@@ -99,12 +95,7 @@ fn batcher_preserves_fifo_within_bucket() {
             };
             let mut b = Batcher::new(policy);
             for (i, &l) in lens.iter().enumerate() {
-                b.push(InferenceRequest {
-                    id: i as u64,
-                    ids: vec![1; l],
-                    engine: EngineKind::Bolt,
-                })
-                .unwrap();
+                b.push(InferenceRequest::new(i as u64, vec![1; l], EngineKind::Bolt)).unwrap();
             }
             let mut last = None;
             while let Some(batch) = b.next_batch(Instant::now()) {
@@ -325,17 +316,19 @@ fn router_answers_every_request_exactly_once() {
         |rng| {
             let n = gen_range(rng, 1, 5);
             (0..n)
-                .map(|i| InferenceRequest {
-                    id: i as u64,
-                    ids: Workload::qnli_like(&ModelConfig::tiny(), gen_range(rng, 6, 12))
-                        .batch(1, rng.next_u64())[0]
-                        .ids
-                        .clone(),
-                    engine: if rng.next_u64() & 1 == 0 {
-                        EngineKind::CipherPrune
-                    } else {
-                        EngineKind::BoltNoWe
-                    },
+                .map(|i| {
+                    InferenceRequest::new(
+                        i as u64,
+                        Workload::qnli_like(&ModelConfig::tiny(), gen_range(rng, 6, 12))
+                            .batch(1, rng.next_u64())[0]
+                            .ids
+                            .clone(),
+                        if rng.next_u64() & 1 == 0 {
+                            EngineKind::CipherPrune
+                        } else {
+                            EngineKind::BoltNoWe
+                        },
+                    )
                 })
                 .collect::<Vec<_>>()
         },

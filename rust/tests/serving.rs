@@ -92,7 +92,7 @@ fn loopback_fleet_is_bit_identical_to_direct_inference() {
         handles.push(std::thread::spawn(move || {
             let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5))
                 .expect("client connect");
-            let req = WireRequest { id: 1 + i as u64, engine: kind, nonce, ids };
+            let req = WireRequest { id: 1 + i as u64, engine: kind, nonce, deadline_ms: 0, ids };
             let resp = c.call(&req).expect("serving call");
             (req, resp)
         }));
@@ -185,6 +185,7 @@ fn overload_and_rejects_are_typed_and_never_hang() {
             id,
             engine: EngineKind::CipherPrune,
             nonce: id,
+            deadline_ms: 0,
             ids: sample_ids(17),
         };
         match c.call(&req).expect("call") {
@@ -219,6 +220,7 @@ fn overload_and_rejects_are_typed_and_never_hang() {
         id,
         engine: EngineKind::CipherPrune,
         nonce: id,
+        deadline_ms: 0,
         ids,
     };
     let mut c = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("connect");
@@ -290,7 +292,8 @@ fn severed_connection_cancels_own_work_only() {
     // A: send then vanish before the linger releases the batch
     {
         let mut a = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("A");
-        a.send(&WireRequest { id: 1, engine: kind, nonce: 71, ids: ids.clone() }).expect("send");
+        a.send(&WireRequest { id: 1, engine: kind, nonce: 71, deadline_ms: 0, ids: ids.clone() })
+            .expect("send");
         // dropped here: connection severed with the job still queued
     }
     std::thread::sleep(Duration::from_millis(30));
@@ -298,7 +301,7 @@ fn severed_connection_cancels_own_work_only() {
     // B: same shard, same bucket — must be served normally
     let mut b = ServingClient::connect_retry(&addr, Duration::from_secs(5)).expect("B");
     let resp = b
-        .call(&WireRequest { id: 2, engine: kind, nonce: 72, ids: ids.clone() })
+        .call(&WireRequest { id: 2, engine: kind, nonce: 72, deadline_ms: 0, ids: ids.clone() })
         .expect("B call");
     let WireResponse::Result { id, logits, .. } = resp else {
         panic!("B expected a Result, got {resp:?}");
@@ -372,6 +375,7 @@ fn serve_clients_subcommand_over_loopback() {
             id,
             engine: EngineKind::CipherPrune,
             nonce: 90 + id,
+            deadline_ms: 0,
             ids: ids.clone(),
         };
         match c.call(&req).expect("call") {

@@ -121,13 +121,7 @@ fn router_prepares_model_once_across_requests() {
     let cfg = ModelConfig::tiny();
     let wl = Workload::qnli_like(&cfg, 8);
     for (i, s) in wl.batch(2, 5).into_iter().enumerate() {
-        router
-            .submit(InferenceRequest {
-                id: i as u64,
-                ids: s.ids,
-                engine: EngineKind::CipherPrune,
-            })
-            .unwrap();
+        router.submit(InferenceRequest::new(i as u64, s.ids, EngineKind::CipherPrune)).unwrap();
         let resp = router.step();
         assert_eq!(resp.len(), 1, "max_batch=1, linger=0 → immediate release");
     }

@@ -1,0 +1,10 @@
+// must-FIRE: the P0 arm sends then receives, the P1 arm only receives —
+// once frames coalesce this deadlocks (P1 waits on a send P0 never flushes).
+pub fn unbalanced(ctx: &mut Ctx, xs: &[u64]) -> Vec<u64> {
+    if ctx.is_p0() {
+        ctx.ch.send_u64s(xs);
+        ctx.ch.recv_u64s()
+    } else {
+        ctx.ch.recv_u64s()
+    }
+}

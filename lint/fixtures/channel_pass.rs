@@ -1,0 +1,20 @@
+// must-PASS: send/recv sequences mirror position by position, and a
+// symmetric exchange pairs with itself.
+pub fn mirrored(ctx: &mut Ctx, xs: &[u64]) -> Vec<u64> {
+    if ctx.is_p0() {
+        ctx.ch.send_u64s(xs);
+        ctx.ch.recv_u64s()
+    } else {
+        let got = ctx.ch.recv_u64s();
+        ctx.ch.send_u64s(xs);
+        got
+    }
+}
+
+pub fn symmetric(ctx: &mut Ctx, xs: &[u64]) -> Vec<u64> {
+    if ctx.is_p0() {
+        ctx.ch.exchange_u64s(xs)
+    } else {
+        ctx.ch.exchange_u64s(xs)
+    }
+}

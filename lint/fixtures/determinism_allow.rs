@@ -1,0 +1,5 @@
+// must-PASS via marker: the finding fires but is suppressed with a reason.
+pub fn stamp() -> std::time::Instant {
+    // mpc-lint: allow(determinism) reason="telemetry only; never serialized"
+    std::time::Instant::now()
+}

@@ -1,0 +1,14 @@
+// must-FIRE: wall clock, ambient RNG, and hash-order iteration in a
+// transcript-affecting module (linted as protocols/fixture.rs).
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn leaky(xs: &[u64]) -> u64 {
+    let t0 = Instant::now();
+    let mut m: HashMap<u64, u64> = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    let r: u64 = rand::thread_rng().gen();
+    t0.elapsed().as_nanos() as u64 ^ r ^ m.values().sum::<u64>()
+}

@@ -1,0 +1,10 @@
+// must-PASS: ordered map, no clocks, no ambient RNG.
+use std::collections::BTreeMap;
+
+pub fn stable(xs: &[u64]) -> u64 {
+    let mut m: BTreeMap<u64, u64> = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m.values().sum()
+}

@@ -1,0 +1,5 @@
+// must-FIRE (rule `marker`): a suppression without a written reason.
+pub fn f(v: Option<u64>) -> u64 {
+    // mpc-lint: allow(panic)
+    v.unwrap_or(0)
+}

@@ -1,0 +1,7 @@
+// must-FIRE twice: a panicking macro and an unwrap on a decode path.
+pub fn decode(b: &[u8]) -> u64 {
+    if b.len() < 8 {
+        panic!("short frame");
+    }
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}

@@ -1,0 +1,9 @@
+// must-PASS: the same decode surfaces a typed error instead of panicking.
+pub fn decode(b: &[u8]) -> Result<u64, NetError> {
+    if b.len() < 8 {
+        return Err(NetError::Frame(format!("short u64: {} bytes", b.len())));
+    }
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[..8]);
+    Ok(u64::from_le_bytes(w))
+}

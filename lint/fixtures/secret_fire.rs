@@ -1,0 +1,11 @@
+// must-FIRE twice: a branch condition and an index expression both depend
+// on an unopened comparison share.
+pub fn branch_on_share(e: &mut Mpc, x: &[Ring]) -> Vec<u64> {
+    let m = e.cmp_gt_const(x, 7);
+    if m[0] == 1 {
+        return vec![];
+    }
+    let mut out = vec![0u64; 4];
+    out[m[0] as usize] = 1;
+    out
+}

@@ -1,0 +1,12 @@
+// must-PASS: shape projections of shares are public, and a value that
+// flowed through `open` may drive control flow.
+pub fn branch_on_opened(e: &mut Mpc, x: &[Ring]) -> Vec<u64> {
+    let n = x.len();
+    let m = e.cmp_gt_const(x, 7);
+    assert_eq!(m.len(), n);
+    let opened = e.open(&m);
+    if opened[0] == 1 && n > 0 {
+        return vec![0; n];
+    }
+    m
+}

@@ -1,0 +1,13 @@
+// must-PASS: tests may unwrap freely — `#[cfg(test)]` items are skipped.
+pub fn shift(v: u64) -> u64 {
+    v.rotate_left(1)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_freely() {
+        let v: Option<u64> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

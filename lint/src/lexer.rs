@@ -1,0 +1,297 @@
+//! A minimal Rust lexer: just enough token structure for the four rule
+//! families (identifiers, punctuation, literals, lifetimes), with comments
+//! collected per-line so allow-markers can be matched to findings.
+//!
+//! Deliberately NOT a full parser: the rules only need token order and
+//! matched delimiters, and a hand-rolled lexer keeps the crate free of
+//! external dependencies (see lint/Cargo.toml).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// line number → comments that START on that line (line and block).
+    pub comments: BTreeMap<usize, Vec<String>>,
+}
+
+fn span(cs: &[char], a: usize, b: usize) -> String {
+    cs[a..b.min(cs.len())].iter().collect()
+}
+
+/// `r"…"` / `r#"…"#` / `br#"…"#` opener at `i`: returns (body start, hashes).
+fn raw_string_open(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) == Some(&'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn hashes_at(cs: &[char], mut j: usize) -> usize {
+    let mut n = 0;
+    while cs.get(j) == Some(&'#') {
+        n += 1;
+        j += 1;
+    }
+    n
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let mut j = i;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.entry(line).or_default().push(span(&cs, i, j));
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let ln0 = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            comments.entry(ln0).or_default().push(span(&cs, i, j));
+            i = j;
+            continue;
+        }
+        // raw string literal
+        if let Some((body, hashes)) = raw_string_open(&cs, i) {
+            let mut j = body;
+            while j < n {
+                if cs[j] == '"' && hashes_at(&cs, j + 1) >= hashes {
+                    j = j + 1 + hashes;
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lit, text: span(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        // string literal (and byte string)
+        if c == '"' || (c == 'b' && cs.get(i + 1) == Some(&'"')) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lit, text: span(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if j == i + 2 && cs.get(j) == Some(&'\'') {
+                    toks.push(Tok { kind: TokKind::Lit, text: span(&cs, i, j + 1), line });
+                    i = j + 1;
+                } else {
+                    toks.push(Tok { kind: TokKind::Lifetime, text: span(&cs, i, j), line });
+                    i = j;
+                }
+                continue;
+            }
+            let mut j = i + 1;
+            if cs.get(j) == Some(&'\\') {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && cs[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lit, text: span(&cs, i, j + 1), line });
+            i = j + 1;
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: span(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        // numeric literal (`.` continues only into a fraction, so `0..n`
+        // and `8.div_ceil(x)` stay separate tokens)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut seen_dot = false;
+            while j < n {
+                let ch = cs[j];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    j += 1;
+                    continue;
+                }
+                if ch == '.'
+                    && !seen_dot
+                    && j + 1 < n
+                    && cs[j + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok { kind: TokKind::Lit, text: span(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    Lexed { toks, comments }
+}
+
+/// For each opening delimiter token index, the index of its matching close.
+pub fn match_spans(toks: &[Tok]) -> Vec<Option<usize>> {
+    let mut m = vec![None; toks.len()];
+    let mut stack: Vec<usize> = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => stack.push(k),
+                ")" | "]" | "}" => {
+                    if let Some(o) = stack.pop() {
+                        m[o] = Some(k);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    m
+}
+
+/// Token spans of `#[cfg(test)]` items and `#[test]` functions: rules skip
+/// these (tests may unwrap, time, and branch freely).
+pub fn test_regions(toks: &[Tok], matches: &[Option<usize>]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct
+            && t.text == "#"
+            && k + 1 < toks.len()
+            && toks[k + 1].text == "["
+        {
+            if let Some(close) = matches[k + 1] {
+                let inner: Vec<&str> = toks[k + 2..close]
+                    .iter()
+                    .filter(|x| x.kind == TokKind::Ident)
+                    .map(|x| x.text.as_str())
+                    .collect();
+                let is_test = inner.contains(&"test")
+                    && (inner.first() == Some(&"cfg") || inner == ["test"]);
+                if is_test {
+                    // skip to the end of the next item: the body `{…}`, or
+                    // a `;` for a body-less item
+                    let mut j = close + 1;
+                    while j < toks.len() {
+                        let x = &toks[j];
+                        if x.kind == TokKind::Punct && x.text == ";" {
+                            break;
+                        }
+                        if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[") {
+                            j = matches[j].unwrap_or(j) + 1;
+                            continue;
+                        }
+                        if x.kind == TokKind::Punct && x.text == "{" {
+                            regions.push((k, matches[j].unwrap_or(toks.len() - 1)));
+                            break;
+                        }
+                        j += 1;
+                    }
+                    k = j;
+                }
+            }
+        }
+        k += 1;
+    }
+    regions
+}
+
+pub fn in_regions(k: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= k && k <= b)
+}

@@ -1,0 +1,132 @@
+//! `mpc-lint` — repo-specific static analysis for the CipherPrune tree.
+//!
+//! Four rule families, each guarding an invariant the protocol stack sells
+//! (see README "Machine-checked invariants"):
+//!
+//! - **determinism**: no wall clocks, ambient RNG, or hash-order iteration
+//!   in transcript-affecting modules (`protocols/`, `gates/`, `ot/`, `he/`,
+//!   `coordinator/pipeline.rs`; hash-order also `coordinator/router.rs`) —
+//!   logits and wire digests must be bit-identical run to run.
+//! - **channel**: role-branched `if is_p0() { … } else { … }` blocks must
+//!   mirror their send/recv sequences — the coalescing-liveness argument,
+//!   machine-checked instead of hand-traced.
+//! - **secret**: `if`/`while`/`match`/`assert!` conditions and index
+//!   expressions in `protocols/`+`gates/` must not depend on share-typed
+//!   values unless they flowed through `open`/`open_bits` — 2PC control
+//!   flow and memory access must be input-independent.
+//! - **panic**: no `unwrap()`/`expect()`/panicking macros in `net/` and
+//!   `serving/` — a malformed frame disconnects one client, it never kills
+//!   a server thread.
+//!
+//! Suppressions are explicit and justified:
+//! `// mpc-lint: allow(<rule>) reason="..."` on the finding's line or in
+//! the comment block directly above it. A marker without a reason is
+//! itself a finding (rule `marker`).
+
+pub mod lexer;
+pub mod marker;
+pub mod report;
+pub mod rules;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use report::Finding;
+pub use rules::Rule;
+
+const TRANSCRIPT_SCOPE: &[&str] = &["protocols/", "gates/", "ot/", "he/"];
+const CHANNEL_SCOPE: &[&str] = &["protocols/", "gates/", "ot/", "he/", "party/", "coordinator/"];
+const SECRET_SCOPE: &[&str] = &["protocols/", "gates/"];
+const PANIC_SCOPE: &[&str] = &["net/", "serving/"];
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Lint one file's source. `rel` is its path relative to the linted root
+/// (`/`-separated) — it selects which rules apply.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let matches = lexer::match_spans(&lexed.toks);
+    let tregions = lexer::test_regions(&lexed.toks, &matches);
+    let markers = marker::collect(&lexed.comments);
+
+    let mut raw: Vec<rules::RawFinding> = Vec::new();
+    if in_scope(rel, TRANSCRIPT_SCOPE) || rel == "coordinator/pipeline.rs" {
+        rules::determinism_time_rng(&lexed.toks, &tregions, &mut raw);
+        rules::determinism_hash_iter(&lexed.toks, &tregions, &mut raw);
+    } else if rel == "coordinator/router.rs" {
+        rules::determinism_hash_iter(&lexed.toks, &tregions, &mut raw);
+    }
+    if in_scope(rel, CHANNEL_SCOPE) {
+        rules::channel_discipline(&lexed.toks, &matches, &tregions, &mut raw);
+    }
+    if in_scope(rel, SECRET_SCOPE) {
+        rules::secret_independence(&lexed.toks, &matches, &tregions, &mut raw);
+    }
+    if in_scope(rel, PANIC_SCOPE) {
+        rules::panic_hygiene(&lexed.toks, &tregions, &mut raw);
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for (line, rule) in &markers.bad {
+        findings.push(Finding {
+            rule: Rule::Marker,
+            path: rel.to_string(),
+            line: *line,
+            msg: format!("allow({}) without a reason=\"...\"", rule),
+            allowed: false,
+        });
+    }
+    for f in raw {
+        let allowed = markers.allowed(f.rule.as_str(), f.line, &lexed.comments);
+        findings.push(Finding {
+            rule: f.rule,
+            path: rel.to_string(),
+            line: f.line,
+            msg: f.msg,
+            allowed,
+        });
+    }
+    // one finding per (rule, line): a line with two `HashMap` tokens is one
+    // problem, not two
+    findings.sort_by(|a, b| {
+        (a.line, a.rule.as_str(), &a.msg).cmp(&(b.line, b.rule.as_str(), &b.msg))
+    });
+    findings.dedup_by(|a, b| a.rule == b.rule && a.line == b.line && a.path == b.path);
+    findings
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<Vec<_>, io::Error>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (deterministic order), returning all
+/// findings with paths relative to `root`.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut findings = Vec::new();
+    for f in &files {
+        let rel: String = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(f)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}

@@ -1,0 +1,60 @@
+//! CLI: `cargo run -p mpc-lint [-- [--json <path>] [root]]`.
+//!
+//! Lints every `.rs` file under `root` (default `rust/src`, i.e. the main
+//! crate when run from the workspace root), prints findings, and exits
+//! non-zero if any unallowed finding remains — the CI gate.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: mpc-lint [--json <path>] [root]   (default root: rust/src)");
+                return ExitCode::SUCCESS;
+            }
+            _ => root = PathBuf::from(a),
+        }
+    }
+    if !root.is_dir() {
+        eprintln!("mpc-lint: root {:?} is not a directory (run from the workspace root)", root);
+        return ExitCode::from(2);
+    }
+    let findings = match mpc_lint::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("mpc-lint: {}", e);
+            return ExitCode::from(2);
+        }
+    };
+    let mut sorted = findings;
+    sorted.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    for f in &sorted {
+        println!("{}", f.render());
+    }
+    let unallowed = sorted.iter().filter(|f| !f.allowed).count();
+    let allowed = sorted.len() - unallowed;
+    println!("mpc-lint: {} unallowed finding(s), {} allowed", unallowed, allowed);
+    if let Some(p) = json_out {
+        if let Err(e) = std::fs::write(&p, mpc_lint::report::to_json(&sorted)) {
+            eprintln!("mpc-lint: writing {:?}: {}", p, e);
+            return ExitCode::from(2);
+        }
+    }
+    if unallowed > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,81 @@
+//! Allow-marker parsing: `// mpc-lint: allow(<rule>) reason="..."`.
+//!
+//! A marker suppresses findings of `<rule>` on its own line, or — when the
+//! marker sits in a comment block — on the first code line directly below
+//! that block. The `reason` is mandatory: a marker without one is itself
+//! reported (rule `marker`), so every suppression in the tree carries a
+//! written justification.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+pub struct Markers {
+    /// line → rules allowed on that line.
+    pub allow: BTreeMap<usize, BTreeSet<String>>,
+    /// markers missing their `reason="…"` (line, rule).
+    pub bad: Vec<(usize, String)>,
+}
+
+/// Every `mpc-lint: allow(rule) [reason="…"]` occurrence in one comment.
+fn parse_comment(s: &str) -> Vec<(String, Option<String>)> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(p) = rest.find("mpc-lint:") {
+        rest = &rest[p + "mpc-lint:".len()..];
+        let t = rest.trim_start();
+        let Some(t) = t.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(cp) = t.find(')') else {
+            continue;
+        };
+        let rule = t[..cp].trim().to_string();
+        let after = t[cp + 1..].trim_start();
+        let reason = after
+            .strip_prefix("reason=\"")
+            .and_then(|r| r.find('"').map(|q| r[..q].to_string()))
+            .filter(|r| !r.trim().is_empty());
+        out.push((rule, reason));
+        rest = &t[cp + 1..];
+    }
+    out
+}
+
+pub fn collect(comments: &BTreeMap<usize, Vec<String>>) -> Markers {
+    let mut allow: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    for (&line, texts) in comments {
+        for text in texts {
+            for (rule, reason) in parse_comment(text) {
+                if reason.is_some() {
+                    allow.entry(line).or_default().insert(rule);
+                } else {
+                    bad.push((line, rule));
+                }
+            }
+        }
+    }
+    Markers { allow, bad }
+}
+
+impl Markers {
+    /// Is `rule` allowed at `line` — by a marker on the same line, or by one
+    /// in the run of comment lines directly above it?
+    pub fn allowed(
+        &self,
+        rule: &str,
+        line: usize,
+        comments: &BTreeMap<usize, Vec<String>>,
+    ) -> bool {
+        if self.allow.get(&line).is_some_and(|r| r.contains(rule)) {
+            return true;
+        }
+        let mut ln = line.saturating_sub(1);
+        while ln > 0 && (comments.contains_key(&ln) || self.allow.contains_key(&ln)) {
+            if self.allow.get(&ln).is_some_and(|r| r.contains(rule)) {
+                return true;
+            }
+            ln -= 1;
+        }
+        false
+    }
+}

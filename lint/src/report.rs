@@ -1,0 +1,72 @@
+//! Findings and the machine-readable report (hand-rolled JSON — the crate
+//! is dependency-free by policy, see Cargo.toml).
+
+use crate::rules::Rule;
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    /// path relative to the linted root, `/`-separated.
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+    /// true when an allow-marker with a reason covers this finding.
+    pub allowed: bool,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "{} [{}] {}:{}: {}",
+            if self.allowed { "allowed" } else { "FINDING" },
+            self.rule.as_str(),
+            self.path,
+            self.line,
+            self.msg
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The full report as a JSON document:
+/// `{"unallowed": N, "allowed": M, "findings": [{rule, path, line, msg, allowed}…]}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let unallowed = findings.iter().filter(|f| !f.allowed).count();
+    let allowed = findings.len() - unallowed;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"unallowed\": {},\n  \"allowed\": {},\n  \"findings\": [",
+        unallowed, allowed
+    ));
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \
+             \"msg\": \"{}\", \"allowed\": {}}}",
+            f.rule.as_str(),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.msg),
+            f.allowed
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}

@@ -1,0 +1,820 @@
+//! The four rule families. Each rule walks the token stream of one file
+//! (with its delimiter matches and test-region spans) and pushes findings;
+//! allow-marker filtering happens in the driver (`lib.rs`), so rules report
+//! every hit.
+//!
+//! The rules are token-structural on purpose: every invariant they encode
+//! (wire determinism, send⇔recv mirroring, secret-independent control flow,
+//! panic-free connection paths) is visible at token/brace level, which keeps
+//! the checker dependency-free and trivially auditable.
+
+use crate::lexer::{in_regions, Tok, TokKind};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    Determinism,
+    Channel,
+    Secret,
+    Panic,
+    Marker,
+}
+
+impl Rule {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Rule::Determinism => "determinism",
+            Rule::Channel => "channel",
+            Rule::Secret => "secret",
+            Rule::Panic => "panic",
+            Rule::Marker => "marker",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    pub rule: Rule,
+    pub line: usize,
+    pub msg: String,
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+// ------------------------------------------------------------ determinism
+
+/// Ambient RNG entry points; the repo's seeded `Xoshiro256`/`AesPrg` are the
+/// sanctioned sources.
+const AMBIENT_RNG: &[&str] = &["thread_rng", "OsRng", "from_entropy", "getrandom"];
+
+/// Wall-clock reads whose values could leak into the transcript.
+pub fn determinism_time_rng(
+    toks: &[Tok],
+    tregions: &[(usize, usize)],
+    out: &mut Vec<RawFinding>,
+) {
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_regions(k, tregions) {
+            continue;
+        }
+        if t.text == "Instant"
+            && toks.get(k + 1).is_some_and(|x| is_punct(x, ":"))
+            && toks.get(k + 2).is_some_and(|x| is_punct(x, ":"))
+            && toks.get(k + 3).is_some_and(|x| is_ident(x, "now"))
+        {
+            out.push(RawFinding {
+                rule: Rule::Determinism,
+                line: t.line,
+                msg: "Instant::now in a transcript-affecting module".to_string(),
+            });
+        } else if t.text == "SystemTime" {
+            out.push(RawFinding {
+                rule: Rule::Determinism,
+                line: t.line,
+                msg: "SystemTime in a transcript-affecting module".to_string(),
+            });
+        } else if AMBIENT_RNG.contains(&t.text.as_str()) {
+            out.push(RawFinding {
+                rule: Rule::Determinism,
+                line: t.line,
+                msg: format!("ambient RNG `{}`", t.text),
+            });
+        }
+    }
+}
+
+/// `HashMap`/`HashSet` anywhere in a determinism-scoped module: their
+/// iteration order is seeded per-process, so any loop over one can reorder
+/// scheduling, reports, or (worst case) wire traffic between runs.
+pub fn determinism_hash_iter(
+    toks: &[Tok],
+    tregions: &[(usize, usize)],
+    out: &mut Vec<RawFinding>,
+) {
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && !in_regions(k, tregions)
+        {
+            out.push(RawFinding {
+                rule: Rule::Determinism,
+                line: t.line,
+                msg: format!(
+                    "{} in a determinism-scoped module (iteration order is \
+                     nondeterministic); use BTreeMap/BTreeSet or sorted keys",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- channel
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Dir {
+    Send,
+    Recv,
+    Exch,
+}
+
+impl Dir {
+    fn mirror(self) -> Dir {
+        match self {
+            Dir::Send => Dir::Recv,
+            Dir::Recv => Dir::Send,
+            Dir::Exch => Dir::Exch,
+        }
+    }
+}
+
+/// Classify a called identifier as a communication op and name its payload
+/// so `cot_send_wide` pairs with `cot_recv_wide` but not with `cot_recv`.
+fn classify_comm(name: &str) -> Option<(Dir, String)> {
+    match name {
+        // raw transport ops are direction-symmetric plumbing, not protocol
+        "send_frame" | "recv_frame" | "recv_frame_timeout" => None,
+        "send_vec" => Some((Dir::Send, "bytes".to_string())),
+        "share_input" => Some((Dir::Send, "shares".to_string())),
+        "recv_shares" => Some((Dir::Recv, "shares".to_string())),
+        "evaluate_and_mask" => Some((Dir::Send, "he_result".to_string())),
+        "recv_and_decrypt" => Some((Dir::Recv, "he_result".to_string())),
+        "exchange_u64s" => Some((Dir::Exch, "u64s".to_string())),
+        _ if name.contains("send") => Some((Dir::Send, payload(name, "send"))),
+        _ if name.contains("recv") => Some((Dir::Recv, payload(name, "recv"))),
+        _ => None,
+    }
+}
+
+fn payload(name: &str, verb: &str) -> String {
+    name.replace(verb, "").trim_matches('_').replace("__", "_")
+}
+
+/// Is the `if` condition a pure role test (`…is_p0()`, bare `p0`,
+/// `evaluating`)? Returns `Some(negated)`.
+fn role_condition(cond: &[&Tok]) -> Option<bool> {
+    let mut neg = 0usize;
+    let mut ts = cond;
+    while ts.first().is_some_and(|t| is_punct(t, "!")) {
+        neg += 1;
+        ts = &ts[1..];
+    }
+    if ts.is_empty() {
+        return None;
+    }
+    let idents: Vec<&str> =
+        ts.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+    let only_call_chain = ts.iter().all(|t| {
+        t.kind == TokKind::Ident || matches!(t.text.as_str(), "." | "(" | ")")
+    });
+    if idents.last() == Some(&"is_p0")
+        && ts.len() >= 2
+        && is_punct(ts[ts.len() - 2], "(")
+        && is_punct(ts[ts.len() - 1], ")")
+        && only_call_chain
+    {
+        return Some(neg % 2 == 1);
+    }
+    if ts.len() == 1
+        && ts[0].kind == TokKind::Ident
+        && matches!(ts[0].text.as_str(), "p0" | "evaluating" | "is_p0")
+    {
+        return Some(neg % 2 == 1);
+    }
+    None
+}
+
+/// Communication calls in `toks[a..=b]`, in order.
+fn comm_seq(toks: &[Tok], a: usize, b: usize) -> Vec<(Dir, String, usize)> {
+    let mut seq = Vec::new();
+    let mut k = a;
+    while k <= b && k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Ident && k + 1 <= b && is_punct(&toks[k + 1], "(") {
+            if let Some((d, p)) = classify_comm(&t.text) {
+                seq.push((d, p, t.line));
+            }
+        }
+        k += 1;
+    }
+    seq
+}
+
+fn fmt_seq(seq: &[(Dir, String, usize)]) -> String {
+    let parts: Vec<String> = seq.iter().map(|(d, p, _)| format!("{:?}:{}", d, p)).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+/// Role-branched comm sequences must mirror: every send in the P0 arm pairs
+/// a recv of the same payload at the same position in the P1 arm (and vice
+/// versa); symmetric exchanges pair with themselves. This is the coalescing
+/// liveness argument — a non-mirrored pair deadlocks once frames coalesce.
+pub fn channel_discipline(
+    toks: &[Tok],
+    matches: &[Option<usize>],
+    tregions: &[(usize, usize)],
+    out: &mut Vec<RawFinding>,
+) {
+    for (k, t) in toks.iter().enumerate() {
+        if !is_ident(t, "if") || in_regions(k, tregions) {
+            continue;
+        }
+        if toks.get(k + 1).is_some_and(|x| is_ident(x, "let")) {
+            continue;
+        }
+        // condition tokens up to the `{` at delimiter depth 0
+        let mut j = k + 1;
+        let mut cond: Vec<&Tok> = Vec::new();
+        while j < toks.len() {
+            let x = &toks[j];
+            if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[") {
+                let Some(end) = matches[j] else { break };
+                for c in &toks[j..=end] {
+                    cond.push(c);
+                }
+                j = end + 1;
+                continue;
+            }
+            if is_punct(x, "{") {
+                break;
+            }
+            cond.push(x);
+            j += 1;
+        }
+        if j >= toks.len() {
+            continue;
+        }
+        let Some(negated) = role_condition(&cond) else { continue };
+        let then_open = j;
+        let Some(then_close) = matches[then_open] else { continue };
+        // else arm?
+        let mut arm2: Option<(usize, usize)> = None;
+        let e = then_close + 1;
+        if toks.get(e).is_some_and(|x| is_ident(x, "else")) {
+            if toks.get(e + 1).is_some_and(|x| is_ident(x, "if")) {
+                continue; // chained role branch: out of scope, rare
+            }
+            if toks.get(e + 1).is_some_and(|x| is_punct(x, "{")) {
+                if let Some(c2) = matches[e + 1] {
+                    arm2 = Some((e + 1, c2));
+                }
+            }
+        }
+        let seq_then = comm_seq(toks, then_open + 1, then_close.saturating_sub(1));
+        let seq_else = match arm2 {
+            Some((o, c)) => comm_seq(toks, o + 1, c.saturating_sub(1)),
+            None => Vec::new(),
+        };
+        if seq_then.is_empty() && seq_else.is_empty() {
+            continue;
+        }
+        if arm2.is_none() {
+            out.push(RawFinding {
+                rule: Rule::Channel,
+                line: t.line,
+                msg: format!(
+                    "role-branched send/recv without a mirroring else arm: {}",
+                    fmt_seq(&seq_then)
+                ),
+            });
+            continue;
+        }
+        let (p0_seq, p1_seq) = if negated {
+            (&seq_else, &seq_then)
+        } else {
+            (&seq_then, &seq_else)
+        };
+        let mut ok = p0_seq.len() == p1_seq.len();
+        if ok {
+            for ((d0, pay0, _), (d1, pay1, _)) in p0_seq.iter().zip(p1_seq.iter()) {
+                if *d1 != d0.mirror() || pay0 != pay1 {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            out.push(RawFinding {
+                rule: Rule::Channel,
+                line: t.line,
+                msg: format!(
+                    "role arms do not mirror: P0={} P1={}",
+                    fmt_seq(p0_seq),
+                    fmt_seq(p1_seq)
+                ),
+            });
+        }
+    }
+}
+
+// ----------------------------------------------------------------- secret
+
+/// Gate/protocol calls whose results are secret shares.
+const SHARE_SOURCES: &[&str] = &[
+    "share_input",
+    "recv_shares",
+    "triples",
+    "mul_vec",
+    "square_vec",
+    "and_bits",
+    "not_bits",
+    "xor_bits",
+    "b2a",
+    "mux",
+    "mux_wide",
+    "select",
+    "trunc_vec",
+    "mul_trunc_vec",
+    "scale_const_trunc",
+    "millionaires",
+    "millionaires_bits",
+    "msb",
+    "msb_bits",
+    "cmp_gt_const",
+    "cmp_gt_consts",
+    "cmp_gt",
+    "is_nonneg",
+    "cot_send",
+    "cot_recv",
+    "cot_send_wide",
+    "cot_recv_wide",
+    "otk_recv_flat",
+    "rot_send",
+    "rot_recv",
+];
+
+/// The sanctioned reveal APIs: a value that flowed through these is public.
+const SANITIZERS: &[&str] = &["open", "open_bits"];
+
+/// Structure-only projections of a share container — its shape is public
+/// (lengths are public by protocol design, PR 3), only elements are secret.
+const PUBLIC_PROJ: &[&str] = &["len", "is_empty", "rows", "cols", "capacity"];
+
+/// Share-carrying types for parameter tainting.
+const SHARE_TYPES: &[&str] = &["Ring", "RingMat"];
+
+/// At `toks[k]` (an ident): does a `[…]*.proj` suffix make the use public?
+/// Returns (is_public, index after the projection).
+fn publicly_projected(toks: &[Tok], k: usize, b: usize) -> (bool, usize) {
+    let mut j = k + 1;
+    while j <= b && is_punct(&toks[j], "[") {
+        let mut depth = 0i64;
+        while j <= b {
+            if is_punct(&toks[j], "[") {
+                depth += 1;
+            } else if is_punct(&toks[j], "]") {
+                depth -= 1;
+            }
+            j += 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if depth != 0 {
+            return (false, j);
+        }
+    }
+    if j + 1 <= b
+        && is_punct(&toks[j], ".")
+        && toks[j + 1].kind == TokKind::Ident
+        && PUBLIC_PROJ.contains(&toks[j + 1].text.as_str())
+    {
+        return (true, j + 2);
+    }
+    (false, k + 1)
+}
+
+/// First use of a tainted local in `toks[a..=b]` that is not a public
+/// projection (and not a field access `x.tainted`).
+fn tainted_use<'a>(
+    toks: &'a [Tok],
+    a: usize,
+    b: usize,
+    tainted: &std::collections::BTreeSet<String>,
+) -> Option<(usize, &'a str)> {
+    let mut k = a;
+    while k <= b && k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Ident && tainted.contains(&t.text) {
+            if k > a && is_punct(&toks[k - 1], ".") {
+                k += 1;
+                continue;
+            }
+            let (public, next) = publicly_projected(toks, k, b);
+            if public {
+                k = next;
+                continue;
+            }
+            return Some((t.line, &t.text));
+        }
+        k += 1;
+    }
+    None
+}
+
+/// All `fn` items: (name, param span (open..close), body span (open..close)).
+fn find_fns(
+    toks: &[Tok],
+    matches: &[Option<usize>],
+) -> Vec<(String, (usize, usize), (usize, usize))> {
+    let mut fns = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if !is_ident(t, "fn") || k + 1 >= toks.len() {
+            continue;
+        }
+        let name = toks[k + 1].text.clone();
+        let mut j = k + 2;
+        // generics
+        if j < toks.len() && is_punct(&toks[j], "<") {
+            let mut depth = 0i64;
+            while j < toks.len() {
+                if is_punct(&toks[j], "<") {
+                    depth += 1;
+                } else if is_punct(&toks[j], ">") {
+                    depth -= 1;
+                }
+                if depth == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            j += 1;
+        }
+        if j >= toks.len() || !is_punct(&toks[j], "(") {
+            continue;
+        }
+        let Some(pclose) = matches[j] else { continue };
+        let params = (j, pclose);
+        // body `{` (skipping the return type); a `;` means no body
+        let mut b = pclose + 1;
+        let mut body = None;
+        while b < toks.len() {
+            let x = &toks[b];
+            if is_punct(x, ";") {
+                break;
+            }
+            if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[") {
+                b = matches[b].map(|e| e + 1).unwrap_or(b + 1);
+                continue;
+            }
+            if is_punct(x, "{") {
+                if let Some(c) = matches[b] {
+                    body = Some((b, c));
+                }
+                break;
+            }
+            b += 1;
+        }
+        if let Some(body) = body {
+            fns.push((name, params, body));
+        }
+    }
+    fns
+}
+
+/// Parameter names whose declared type mentions a share type.
+fn param_taints(
+    toks: &[Tok],
+    matches: &[Option<usize>],
+    pspan: (usize, usize),
+) -> std::collections::BTreeSet<String> {
+    let (a, b) = pspan;
+    let mut names = std::collections::BTreeSet::new();
+    // split on top-level commas
+    let mut parts: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut k = a + 1;
+    while k < b {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct && (t.text == "(" || t.text == "[" || t.text == "{") {
+            let end = matches[k].unwrap_or(k);
+            for idx in k..=end.min(b.saturating_sub(1)) {
+                cur.push(idx);
+            }
+            k = end + 1;
+            continue;
+        }
+        if is_punct(t, "<") {
+            let mut depth = 0i64;
+            while k < b {
+                if is_punct(&toks[k], "<") {
+                    depth += 1;
+                } else if is_punct(&toks[k], ">") {
+                    depth -= 1;
+                }
+                cur.push(k);
+                k += 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            continue;
+        }
+        if is_punct(t, ",") {
+            parts.push(std::mem::take(&mut cur));
+            k += 1;
+            continue;
+        }
+        cur.push(k);
+        k += 1;
+    }
+    if !cur.is_empty() {
+        parts.push(cur);
+    }
+    for p in parts {
+        let Some(ci) = p.iter().position(|&i| is_punct(&toks[i], ":")) else {
+            continue;
+        };
+        let name = p[..ci]
+            .iter()
+            .rev()
+            .map(|&i| &toks[i])
+            .find(|t| t.kind == TokKind::Ident && t.text != "mut" && t.text != "ref");
+        let ty_has_share = p[ci..].iter().any(|&i| {
+            toks[i].kind == TokKind::Ident && SHARE_TYPES.contains(&toks[i].text.as_str())
+        });
+        if let (Some(n), true) = (name, ty_has_share) {
+            names.insert(n.text.clone());
+        }
+    }
+    names
+}
+
+const ASSERT_MACROS: &[&str] =
+    &["assert", "assert_eq", "assert_ne", "debug_assert", "debug_assert_eq", "debug_assert_ne"];
+
+/// Flow-insensitive taint pass per function: share-typed params and results
+/// of share-producing calls are tainted; `open`/`open_bits` sanitize; any
+/// `if`/`while`/`match`/`assert!` condition or index expression over a
+/// tainted local is a secret-dependent control/access pattern.
+pub fn secret_independence(
+    toks: &[Tok],
+    matches: &[Option<usize>],
+    tregions: &[(usize, usize)],
+    out: &mut Vec<RawFinding>,
+) {
+    for (name, pspan, (bo, bc)) in find_fns(toks, matches) {
+        if in_regions(bo, tregions) {
+            continue;
+        }
+        let mut tainted = param_taints(toks, matches, pspan);
+        let mut k = bo + 1;
+        while k < bc {
+            let t = &toks[k];
+            if in_regions(k, tregions) {
+                k += 1;
+                continue;
+            }
+            if is_ident(t, "let") {
+                k = secret_handle_let(toks, matches, k, bc, &mut tainted);
+                continue;
+            }
+            if is_ident(t, "if") || is_ident(t, "while") {
+                if toks.get(k + 1).is_some_and(|x| is_ident(x, "let")) {
+                    k += 2;
+                    continue;
+                }
+                let mut j = k + 1;
+                let mut cond: Option<(usize, usize)> = None;
+                while j < bc {
+                    let x = &toks[j];
+                    if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[") {
+                        j = matches[j].map(|e| e + 1).unwrap_or(j + 1);
+                        continue;
+                    }
+                    if is_punct(x, "{") {
+                        cond = Some((k + 1, j.saturating_sub(1)));
+                        break;
+                    }
+                    j += 1;
+                }
+                if let Some((ca, cb)) = cond {
+                    if let Some((line, id)) = tainted_use(toks, ca, cb, &tainted) {
+                        out.push(RawFinding {
+                            rule: Rule::Secret,
+                            line,
+                            msg: format!(
+                                "`{}` condition depends on share-typed `{}` (fn {}); \
+                                 open/reveal it first",
+                                t.text, id, name
+                            ),
+                        });
+                    }
+                }
+                k += 1;
+                continue;
+            }
+            if is_ident(t, "match") {
+                let mut j = k + 1;
+                while j < bc {
+                    let x = &toks[j];
+                    if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[") {
+                        j = matches[j].map(|e| e + 1).unwrap_or(j + 1);
+                        continue;
+                    }
+                    if is_punct(x, "{") {
+                        break;
+                    }
+                    j += 1;
+                }
+                if let Some((line, id)) = tainted_use(toks, k + 1, j.saturating_sub(1), &tainted)
+                {
+                    out.push(RawFinding {
+                        rule: Rule::Secret,
+                        line,
+                        msg: format!(
+                            "`match` scrutinee depends on share-typed `{}` (fn {})",
+                            id, name
+                        ),
+                    });
+                }
+                k += 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident
+                && ASSERT_MACROS.contains(&t.text.as_str())
+                && toks.get(k + 1).is_some_and(|x| is_punct(x, "!"))
+                && toks.get(k + 2).is_some_and(|x| {
+                    x.kind == TokKind::Punct && (x.text == "(" || x.text == "[")
+                })
+            {
+                let g = k + 2;
+                if let Some(end) = matches[g] {
+                    if let Some((line, id)) =
+                        tainted_use(toks, g + 1, end.saturating_sub(1), &tainted)
+                    {
+                        out.push(RawFinding {
+                            rule: Rule::Secret,
+                            line,
+                            msg: format!(
+                                "assertion depends on share-typed `{}` (fn {})",
+                                id, name
+                            ),
+                        });
+                    }
+                    k = end + 1;
+                    continue;
+                }
+            }
+            if is_punct(t, "[") && k > bo + 1 && toks[k - 1].kind == TokKind::Ident {
+                if let Some(end) = matches[k] {
+                    if let Some((line, id)) =
+                        tainted_use(toks, k + 1, end.saturating_sub(1), &tainted)
+                    {
+                        out.push(RawFinding {
+                            rule: Rule::Secret,
+                            line,
+                            msg: format!(
+                                "index depends on share-typed `{}` (fn {}) — a \
+                                 secret-dependent access pattern",
+                                id, name
+                            ),
+                        });
+                    }
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+/// One `let` statement: update the taint set, return the index after it.
+fn secret_handle_let(
+    toks: &[Tok],
+    matches: &[Option<usize>],
+    k: usize,
+    bc: usize,
+    tainted: &mut std::collections::BTreeSet<String>,
+) -> usize {
+    // pattern: everything up to a single `=` (not `==`) or `;`
+    let mut j = k + 1;
+    while j < bc {
+        let x = &toks[j];
+        if is_punct(x, "=") && !toks.get(j + 1).is_some_and(|n| is_punct(n, "=")) {
+            break;
+        }
+        if is_punct(x, ";") {
+            break;
+        }
+        j += 1;
+    }
+    if j >= bc || is_punct(&toks[j], ";") {
+        return j + 1;
+    }
+    // binding idents: snake_case names outside type-annotation position
+    let mut binds: Vec<String> = Vec::new();
+    let mut in_ty = false;
+    for x in &toks[k + 1..j] {
+        if is_punct(x, ":") {
+            in_ty = true;
+        }
+        if x.kind == TokKind::Punct && matches!(x.text.as_str(), "," | "(" | "{" | "|") {
+            in_ty = false;
+        }
+        if x.kind == TokKind::Ident
+            && !in_ty
+            && x.text.chars().next().is_some_and(|c| c.is_lowercase())
+            && !matches!(x.text.as_str(), "mut" | "ref" | "if" | "let")
+        {
+            binds.push(x.text.clone());
+        }
+    }
+    // rhs: from after `=` to the `;` at delimiter depth 0
+    let rhs_start = j + 1;
+    let mut r = rhs_start;
+    while r < bc {
+        let x = &toks[r];
+        if x.kind == TokKind::Punct && (x.text == "(" || x.text == "[" || x.text == "{") {
+            r = matches[r].map(|e| e + 1).unwrap_or(r + 1);
+            continue;
+        }
+        if is_punct(x, ";") {
+            break;
+        }
+        r += 1;
+    }
+    let rhs_end = r.saturating_sub(1);
+    let mut is_sanitized = false;
+    let mut is_source = false;
+    let mut uses_taint = false;
+    let mut i = rhs_start;
+    while i <= rhs_end && i < toks.len() {
+        let x = &toks[i];
+        if x.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let is_call = toks.get(i + 1).is_some_and(|n| is_punct(n, "("));
+        if is_call && SANITIZERS.contains(&x.text.as_str()) {
+            is_sanitized = true;
+        } else if is_call && SHARE_SOURCES.contains(&x.text.as_str()) {
+            is_source = true;
+        } else if tainted.contains(&x.text) {
+            let field_access = i > rhs_start && is_punct(&toks[i - 1], ".");
+            if !field_access {
+                let (public, _) = publicly_projected(toks, i, rhs_end);
+                if !public {
+                    uses_taint = true;
+                }
+            }
+        }
+        i += 1;
+    }
+    if is_sanitized {
+        for b in &binds {
+            tainted.remove(b);
+        }
+    } else if is_source || uses_taint {
+        for b in binds {
+            tainted.insert(b);
+        }
+    } else {
+        for b in &binds {
+            tainted.remove(b);
+        }
+    }
+    r + 1
+}
+
+// ------------------------------------------------------------------ panic
+
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+/// `unwrap()`/`expect()`/panicking macros in connection-path modules: a
+/// malformed frame or poisoned lock must surface as a typed error, never
+/// kill a reader/writer/shard thread.
+pub fn panic_hygiene(toks: &[Tok], tregions: &[(usize, usize)], out: &mut Vec<RawFinding>) {
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_regions(k, tregions) {
+            continue;
+        }
+        if (t.text == "unwrap" || t.text == "expect")
+            && k > 0
+            && is_punct(&toks[k - 1], ".")
+            && toks.get(k + 1).is_some_and(|x| is_punct(x, "("))
+        {
+            out.push(RawFinding {
+                rule: Rule::Panic,
+                line: t.line,
+                msg: format!(
+                    ".{}() in a connection-path module; surface a typed \
+                     NetError/RejectCode instead",
+                    t.text
+                ),
+            });
+        } else if PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(k + 1).is_some_and(|x| is_punct(x, "!"))
+        {
+            out.push(RawFinding {
+                rule: Rule::Panic,
+                line: t.line,
+                msg: format!("{}! in a connection-path module", t.text),
+            });
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Self-tests over the fixture corpus: every rule family has at least one
+//! must-fire and one must-pass snippet, the allow-marker path is exercised
+//! both with and without a reason, scoping is honored, and the real tree
+//! stays clean.
+
+use std::path::Path;
+
+use mpc_lint::{lint_source, Finding, Rule};
+
+fn lint_fixture(rel: &str, file: &str) -> Vec<Finding> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(file);
+    let src = std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading fixture {:?}: {}", p, e));
+    lint_source(rel, &src)
+}
+
+fn count(fs: &[Finding], rule: Rule, allowed: bool) -> usize {
+    fs.iter().filter(|f| f.rule == rule && f.allowed == allowed).count()
+}
+
+fn unallowed(fs: &[Finding]) -> usize {
+    fs.iter().filter(|f| !f.allowed).count()
+}
+
+#[test]
+fn determinism_fires_on_clock_rng_and_hash() {
+    let fs = lint_fixture("protocols/fixture.rs", "determinism_fire.rs");
+    assert_eq!(count(&fs, Rule::Determinism, false), 4, "{:#?}", fs);
+    let lines: Vec<usize> = fs.iter().map(|f| f.line).collect();
+    assert!(lines.contains(&7), "Instant::now site: {:?}", lines);
+    assert!(lines.contains(&12), "thread_rng site: {:?}", lines);
+}
+
+#[test]
+fn determinism_passes_on_btreemap() {
+    let fs = lint_fixture("protocols/fixture.rs", "determinism_pass.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn determinism_marker_with_reason_allows() {
+    let fs = lint_fixture("protocols/fixture.rs", "determinism_allow.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+    assert_eq!(count(&fs, Rule::Determinism, true), 1, "{:#?}", fs);
+}
+
+#[test]
+fn channel_fires_on_unmirrored_arms() {
+    let fs = lint_fixture("protocols/fixture.rs", "channel_fire.rs");
+    assert_eq!(count(&fs, Rule::Channel, false), 1, "{:#?}", fs);
+    assert!(fs.iter().any(|f| f.msg.contains("do not mirror")), "{:#?}", fs);
+}
+
+#[test]
+fn channel_passes_on_mirrored_and_symmetric_arms() {
+    let fs = lint_fixture("protocols/fixture.rs", "channel_pass.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn secret_fires_on_share_branch_and_index() {
+    let fs = lint_fixture("gates/fixture.rs", "secret_fire.rs");
+    assert_eq!(count(&fs, Rule::Secret, false), 2, "{:#?}", fs);
+    assert!(fs.iter().any(|f| f.msg.contains("condition depends")), "{:#?}", fs);
+    assert!(fs.iter().any(|f| f.msg.contains("index depends")), "{:#?}", fs);
+}
+
+#[test]
+fn secret_passes_on_opened_values_and_shape_projections() {
+    let fs = lint_fixture("gates/fixture.rs", "secret_pass.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn panic_fires_on_unwrap_and_macro() {
+    let fs = lint_fixture("net/fixture.rs", "panic_fire.rs");
+    assert_eq!(count(&fs, Rule::Panic, false), 2, "{:#?}", fs);
+}
+
+#[test]
+fn panic_passes_on_typed_errors() {
+    let fs = lint_fixture("net/fixture.rs", "panic_pass.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn panic_rule_respects_module_scope() {
+    // the same unwrap-heavy code is fine outside net/ + serving/
+    let fs = lint_fixture("protocols/fixture.rs", "panic_fire.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn cfg_test_regions_are_skipped() {
+    let fs = lint_fixture("net/fixture.rs", "test_region_pass.rs");
+    assert_eq!(unallowed(&fs), 0, "{:#?}", fs);
+}
+
+#[test]
+fn marker_without_reason_is_a_finding() {
+    let fs = lint_fixture("net/fixture.rs", "marker_bad.rs");
+    assert_eq!(count(&fs, Rule::Marker, false), 1, "{:#?}", fs);
+}
+
+#[test]
+fn json_report_is_well_formed() {
+    let fs = lint_fixture("net/fixture.rs", "panic_fire.rs");
+    let j = mpc_lint::report::to_json(&fs);
+    assert!(j.contains("\"unallowed\": 2"), "{}", j);
+    assert!(j.contains("\"rule\": \"panic\""), "{}", j);
+    assert!(j.trim_end().ends_with('}'), "{}", j);
+}
+
+/// The gate itself: the real tree must carry zero unallowed findings, so
+/// tier-1 `cargo test` enforces the invariants, not just the CI lint job.
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("rust").join("src");
+    let fs = mpc_lint::lint_tree(&root).expect("lint rust/src");
+    let bad: Vec<String> = fs.iter().filter(|f| !f.allowed).map(|f| f.render()).collect();
+    assert!(bad.is_empty(), "unallowed findings in rust/src:\n{}", bad.join("\n"));
+}

@@ -164,6 +164,17 @@
 //! `net::NetError` → `anyhow::Error` through [`Session::infer`] and the
 //! router, which poisons and later replaces the affected session) — never
 //! the serving process.
+//!
+//! # Machine-checked invariants
+//!
+//! Two of this module's contracts are enforced statically by `mpc-lint`
+//! (`lint/` in the workspace; see the README's *Machine-checked
+//! invariants* section): [`pipeline`] and `router` are in the
+//! `determinism` scope — no hash-ordered containers, and in the pipeline
+//! no wall-clock or ambient RNG — so batch scheduling and the layer-pass
+//! transcript stay run-to-run stable. CI fails on any unallowed finding;
+//! genuine exceptions (e.g. the pipeline's latency telemetry) carry an
+//! inline `// mpc-lint: allow(<rule>) reason="…"` marker.
 
 pub mod batcher;
 pub mod engine;

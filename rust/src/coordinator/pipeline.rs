@@ -76,6 +76,7 @@ pub struct PhaseClock {
 
 impl PhaseClock {
     pub fn new(active: bool) -> Self {
+        // mpc-lint: allow(determinism) reason="wall-clock telemetry only; never on the wire"
         PhaseClock { t: Instant::now(), acc: Vec::new(), active }
     }
 
@@ -83,6 +84,7 @@ impl PhaseClock {
         if self.active {
             self.acc.push((label, self.t.elapsed().as_secs_f64()));
         }
+        // mpc-lint: allow(determinism) reason="wall-clock telemetry only; never on the wire"
         self.t = Instant::now();
     }
 
@@ -527,6 +529,7 @@ impl LayerPass for PrunePass {
 
     fn run(&self, e: &mut Engine2P, rc: &RunCtx<'_>, st: &mut LayerState) {
         let li = st.li;
+        // mpc-lint: allow(determinism) reason="prune-pass latency telemetry; never on the wire"
         let tprune = Instant::now();
         match self.sel {
             PruneSel::Progressive => {

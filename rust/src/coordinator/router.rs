@@ -23,7 +23,7 @@
 //! session — safe because logits are a deterministic function of
 //! (nonce, content), so a replay is bit-identical to a first-try run.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -100,13 +100,13 @@ pub struct Router {
     pub metrics: MetricsRegistry,
     submitted: Vec<(u64, Instant)>,
     /// engine kind → up to `workers` live sessions, reused across batches.
-    sessions: HashMap<EngineKind, Vec<Session>>,
+    sessions: BTreeMap<EngineKind, Vec<Session>>,
     /// engine kind → sessions EVER started for it. Seeds derive from this
     /// monotonic counter, not the live pool size, so a replacement started
     /// after a poisoned session was evicted can never repeat the seed of a
     /// still-live session (concurrent sessions must not share dealer/OT
     /// randomness streams).
-    setups_by_kind: HashMap<EngineKind, u64>,
+    setups_by_kind: BTreeMap<EngineKind, u64>,
 }
 
 impl Router {
@@ -121,8 +121,8 @@ impl Router {
             batcher,
             metrics,
             submitted: Vec::new(),
-            sessions: HashMap::new(),
-            setups_by_kind: HashMap::new(),
+            sessions: BTreeMap::new(),
+            setups_by_kind: BTreeMap::new(),
         }
     }
 
@@ -287,8 +287,10 @@ impl Router {
         // so jobs travel at their submitted length
         let jobs: Vec<(u64, EngineKind, Vec<usize>)> =
             requests.into_iter().map(|r| (r.id, r.engine, r.ids)).collect();
-        // group job indices by engine kind
-        let mut groups: HashMap<EngineKind, Vec<usize>> = HashMap::new();
+        // group job indices by engine kind (BTreeMap: slot allocation,
+        // session growth, and failure reports walk kinds in a fixed order,
+        // so scheduling is run-to-run stable — mpc-lint `determinism`)
+        let mut groups: BTreeMap<EngineKind, Vec<usize>> = BTreeMap::new();
         for (i, (_, kind, _)) in jobs.iter().enumerate() {
             groups.entry(*kind).or_default().push(i);
         }
@@ -301,7 +303,7 @@ impl Router {
         let mut extra = workers % n_kinds;
         let mut order: Vec<EngineKind> = groups.keys().copied().collect();
         order.sort_by_key(|k| std::cmp::Reverse(groups[k].len()));
-        let mut alloc: HashMap<EngineKind, usize> = HashMap::new();
+        let mut alloc: BTreeMap<EngineKind, usize> = BTreeMap::new();
         for kind in order {
             let bonus = if extra > 0 {
                 extra -= 1;
@@ -321,7 +323,7 @@ impl Router {
         // per slot, then the sessions persist across batches); a setup
         // failure (e.g. the transport cannot be built) stops growing that
         // pool and, if the pool stays empty, fails the kind's requests
-        let mut setup_errors: HashMap<EngineKind, String> = HashMap::new();
+        let mut setup_errors: BTreeMap<EngineKind, String> = BTreeMap::new();
         for (kind, &want) in &alloc {
             if let Err(e) = self.grow_pool(*kind, want) {
                 setup_errors.insert(*kind, e);

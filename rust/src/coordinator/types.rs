@@ -6,7 +6,7 @@ use crate::net::PhaseStats;
 
 /// The engine variants the coordinator can dispatch to — the paper's
 /// comparison set (Tables 1–2).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum EngineKind {
     /// Plaintext oracle (no crypto; reference + XLA runtime path).
     Plaintext,

@@ -33,7 +33,7 @@
 //! preprocessed and on-demand sessions produce bit-identical logits and
 //! prune/reduce decisions — pinned by `tests/preproc.rs`.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::fixed::Ring;
 
@@ -170,7 +170,7 @@ pub struct PreprocStore {
     pub triple_stats: PoolStats,
     /// Pre-expanded canonical pads keyed by `(block nonce, op counter)`.
     /// P1-only (P0 receives the reshare difference, it never draws pads).
-    pub(crate) pads: HashMap<(u64, u64), Vec<Ring>>,
+    pub(crate) pads: BTreeMap<(u64, u64), Vec<Ring>>,
     pub pad_stats: PoolStats,
     /// Truncation trace of the latest aligned run — per block slot, the
     /// `(op counter, element count)` sequence. The next batch with the same

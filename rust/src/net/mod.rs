@@ -76,6 +76,8 @@ use std::fmt;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::util::lock_live;
+
 /// Largest single logical message. Bounded below the `u32` inner length
 /// prefix AND below `TcpTransport`'s frame cap (2 GiB), so an over-long
 /// message fails identically on every backend instead of only on TCP.
@@ -223,7 +225,9 @@ impl PhaseStats {
 pub fn content_mix(mut h: u64, data: &[u8]) -> u64 {
     let mut chunks = data.chunks_exact(8);
     for c in &mut chunks {
-        h ^= u64::from_le_bytes(c.try_into().unwrap());
+        let mut w = [0u8; 8];
+        w.copy_from_slice(c);
+        h ^= u64::from_le_bytes(w);
         h = h.wrapping_mul(0x100_0000_01b3);
     }
     for &b in chunks.remainder() {
@@ -455,7 +459,7 @@ impl Chan {
         if a.phase == phase {
             return;
         }
-        let mut t = self.transcript.lock().unwrap();
+        let mut t = lock_live(&self.transcript);
         if a.bytes > 0 || a.msgs > 0 {
             let p = t.phases.entry(a.phase.clone()).or_default();
             p.bytes += a.bytes;
@@ -487,7 +491,7 @@ impl Chan {
         if a.bytes == 0 && a.msgs == 0 && flights == 0 {
             return;
         }
-        let mut t = self.transcript.lock().unwrap();
+        let mut t = lock_live(&self.transcript);
         let p = t.phases.entry(a.phase.clone()).or_default();
         p.bytes += a.bytes;
         p.msgs += a.msgs;
@@ -614,7 +618,9 @@ impl Chan {
             if off + 4 > frame.len() {
                 return Err(NetError::Frame("truncated message header".to_string()));
             }
-            let len = u32::from_le_bytes(frame[off..off + 4].try_into().unwrap()) as usize;
+            let mut lenb = [0u8; 4];
+            lenb.copy_from_slice(&frame[off..off + 4]);
+            let len = u32::from_le_bytes(lenb) as usize;
             off += 4;
             if off + len > frame.len() {
                 return Err(NetError::Frame("truncated message body".to_string()));
@@ -633,7 +639,12 @@ impl Chan {
 
     pub fn recv_u64(&mut self) -> u64 {
         let b = self.recv_bytes();
-        u64::from_le_bytes(b[..8].try_into().expect("short u64 message"))
+        if b.len() < 8 {
+            raise(NetError::Frame(format!("short u64 message: {} bytes", b.len())));
+        }
+        let mut w = [0u8; 8];
+        w.copy_from_slice(&b[..8]);
+        u64::from_le_bytes(w)
     }
 
     pub fn send_u64s(&mut self, vs: &[u64]) {
@@ -646,9 +657,15 @@ impl Chan {
 
     pub fn recv_u64s(&mut self) -> Vec<u64> {
         let b = self.recv_bytes();
-        assert_eq!(b.len() % 8, 0, "misaligned u64 message");
+        if b.len() % 8 != 0 {
+            raise(NetError::Frame(format!("misaligned u64 message: {} bytes", b.len())));
+        }
         b.chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| {
+                let mut w = [0u8; 8];
+                w.copy_from_slice(c);
+                u64::from_le_bytes(w)
+            })
             .collect()
     }
 
@@ -672,13 +689,13 @@ impl Chan {
     /// Snapshot of the shared transcript (pending stats committed first).
     pub fn transcript_snapshot(&self) -> Vec<(String, PhaseStats)> {
         self.commit_pending(0);
-        let t = self.transcript.lock().unwrap();
+        let t = lock_live(&self.transcript);
         t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     pub fn total_stats(&self) -> PhaseStats {
         self.commit_pending(0);
-        self.transcript.lock().unwrap().total()
+        lock_live(&self.transcript).total()
     }
 }
 

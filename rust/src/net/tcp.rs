@@ -134,7 +134,8 @@ impl TcpTransport {
         let (listener, addr) = Self::bind("127.0.0.1:0")?;
         let connector = std::thread::spawn(move || TcpStream::connect(addr));
         let (server, _) = listener.accept()?;
-        let client = connector.join().expect("connector thread panicked")?;
+        let client =
+            connector.join().map_err(|_| io::Error::other("connector thread panicked"))??;
         Ok((Self::from_stream(server)?, Self::from_stream(client)?))
     }
 }
@@ -144,11 +145,10 @@ impl Transport for TcpTransport {
         if frame.len() > MAX_FRAME {
             return Err(NetError::Frame(format!("frame too large: {} bytes", frame.len())));
         }
-        self.wtx
-            .as_ref()
-            .expect("writer queue present until drop")
-            .send(frame)
-            .map_err(|_| NetError::Disconnected)
+        match self.wtx.as_ref() {
+            Some(q) => q.send(frame).map_err(|_| NetError::Disconnected),
+            None => Err(NetError::Disconnected),
+        }
     }
 
     fn recv_frame(&mut self) -> Result<Vec<u8>, NetError> {

@@ -26,6 +26,8 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::lock_live;
+
 use super::{NetError, NetModel};
 
 /// One endpoint's view of a duplex frame pipe.
@@ -330,7 +332,7 @@ impl FaultState {
         let n = self.frames.load(Ordering::SeqCst);
         if let Some(s) = self.plan.stall_after_frames {
             if n >= s {
-                let mut u = self.stall_until.lock().expect("fault state lock");
+                let mut u = lock_live(&self.stall_until);
                 if u.is_none() {
                     *u = Some(Instant::now() + self.plan.stall);
                 }
@@ -351,7 +353,7 @@ impl FaultState {
 
     /// The armed stall deadline, if any (delivery holds until then).
     fn stall_deadline(&self) -> Option<Instant> {
-        *self.stall_until.lock().expect("fault state lock")
+        *lock_live(&self.stall_until)
     }
 }
 

@@ -97,6 +97,7 @@ impl Engine2P {
             let mut next = Vec::new();
             let mut it = level.into_iter();
             while let (Some(a), b) = (it.next(), it.next()) {
+                // mpc-lint: allow(secret) reason="Some/None arity is the public factor-count parity"
                 match b {
                     Some(b) => {
                         // batch the multiply

@@ -13,6 +13,19 @@
 //! - [`mask`] — Π_mask (Fig. 14): mask binding, secure count, O(mn) oblivious
 //!   swaps, truncation.
 //! - [`reduce`] — encrypted polynomial reduction mask (§3.3).
+//!
+//! # Machine-checked invariants
+//!
+//! This module sits in the strictest `mpc-lint` scopes (`lint/` in the
+//! workspace; see the README's *Machine-checked invariants* section):
+//! `determinism` (no hash-ordered containers, wall-clock, or ambient RNG —
+//! transcripts must be bit-identical run to run), `channel` (role-branched
+//! send/recv sequences must mirror between P0 and P1, or both parties
+//! deadlock), and `secret` (no `if`/`match`/`assert!`/indexing on
+//! share-typed values — a share is uniform noise until `open`ed, and
+//! branching on one is both a correctness bug and a timing leak). CI fails
+//! on any unallowed finding; real exceptions carry an inline
+//! `// mpc-lint: allow(<rule>) reason="…"` marker.
 
 pub mod gelu;
 pub mod layernorm;

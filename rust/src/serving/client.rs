@@ -42,8 +42,10 @@ impl ServingClient {
 
     /// Next response from the server, in completion order.
     pub fn recv(&mut self) -> Result<WireResponse, NetError> {
-        if let Some(&id) = self.stashed.keys().next() {
-            return Ok(self.stashed.remove(&id).expect("key just observed"));
+        if let Some(id) = self.stashed.keys().next().copied() {
+            if let Some(r) = self.stashed.remove(&id) {
+                return Ok(r);
+            }
         }
         let frame = self.link.recv_frame()?;
         decode_response(&frame).map_err(NetError::Frame)

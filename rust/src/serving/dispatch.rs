@@ -36,6 +36,7 @@ use crate::coordinator::{
     bucket_for, BatchPolicy, Batcher, BlockRun, EngineConfig, EngineKind, InferenceRequest,
     MetricsRegistry, PreparedModel, Session,
 };
+use crate::util::lock_live;
 
 use super::server::{ReplyHandle, ServeConfig, ServerStats};
 use super::wire::{RejectCode, WireResponse};
@@ -92,7 +93,7 @@ impl Job {
     /// Settle the job's admission bookkeeping: free the connection's
     /// in-flight slot and the global queue-depth gauge.
     pub(crate) fn settle(&self, stats: &ServerStats) {
-        self.inflight.lock().expect("inflight set lock").remove(&self.id);
+        lock_live(&self.inflight).remove(&self.id);
         stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
     }
 }
@@ -155,6 +156,8 @@ impl Dispatch {
                 std::thread::Builder::new()
                     .name(format!("shard-{shard}"))
                     .spawn(move || shard_loop(shard, model, cfg, rx, stats, registry))
+                    // startup path: shards spawn before any connection exists
+                    // mpc-lint: allow(panic) reason="unrecoverable OS spawn failure at startup"
                     .expect("spawn shard thread"),
             );
         }
@@ -300,7 +303,7 @@ impl Shard {
                     if let Err(e) = sess.session.preprocess(&lens) {
                         eprintln!("shard {}: prewarm {} failed: {e:#}", self.shard, kind.name());
                     }
-                    let mut reg = self.registry.lock().expect("registry lock");
+                    let mut reg = lock_live(&self.registry);
                     reg.record_offline(kind.name(), t0.elapsed().as_secs_f64());
                 }
                 Err(e) => eprintln!("shard {}: prewarm {} setup: {e:#}", self.shard, kind.name()),
@@ -319,13 +322,13 @@ impl Shard {
             match ss.session.refill() {
                 Ok(d) => {
                     if !d.is_empty() {
-                        let mut reg = self.registry.lock().expect("registry lock");
+                        let mut reg = lock_live(&self.registry);
                         reg.record_offline(kind.name(), t0.elapsed().as_secs_f64());
                     }
                 }
                 Err(_) => {
                     // poisoned now; the next batch of this kind evicts it
-                    self.registry.lock().expect("registry lock").refill_failures += 1;
+                    lock_live(&self.registry).refill_failures += 1;
                 }
             }
         }
@@ -356,10 +359,12 @@ impl Shard {
             let ec = self.engine_cfg(kind, shard_seed(self.shard, kind, seq));
             let session = Session::start(self.model.clone(), ec)?;
             self.next_seq.insert(kind, seq + 1);
-            self.registry.lock().expect("registry lock").session_setups += 1;
+            lock_live(&self.registry).session_setups += 1;
             self.sessions.insert(kind, ShardSession { session, seq });
         }
-        Ok(self.sessions.get_mut(&kind).expect("just inserted"))
+        self.sessions
+            .get_mut(&kind)
+            .ok_or_else(|| anyhow::anyhow!("session for {kind:?} missing after insert"))
     }
 
     fn run_batch(&mut self, batch: crate::coordinator::Batch) {
@@ -377,7 +382,7 @@ impl Shard {
             }
             if job.deadline.is_some_and(|d| now >= d) {
                 self.stats.expired.fetch_add(1, Ordering::SeqCst);
-                self.registry.lock().expect("registry lock").expired += 1;
+                lock_live(&self.registry).expired += 1;
                 job.settle(&self.stats);
                 job.reply.send(WireResponse::Expired {
                     id: job.id,
@@ -409,7 +414,7 @@ impl Shard {
         let dispatched = Instant::now();
         let mut waits = Vec::with_capacity(jobs.len());
         {
-            let mut reg = self.registry.lock().expect("registry lock");
+            let mut reg = lock_live(&self.registry);
             for job in &jobs {
                 let w = dispatched.duration_since(job.enqueued).as_secs_f64();
                 reg.record_queue_wait(kind.name(), w);
@@ -449,14 +454,14 @@ impl Shard {
                     // replay is bit-identical to what the first session
                     // would have produced — the client never sees the fault.
                     self.evict_if_poisoned(kind);
-                    self.registry.lock().expect("registry lock").retries += 1;
+                    lock_live(&self.registry).retries += 1;
                     let retried = match self.session_for(kind) {
                         Ok(ss) => ss.session.infer_batch(&wave_blocks),
                         Err(e) => Err(e.context("building replacement session")),
                     };
                     match retried {
                         Ok(r) => {
-                            self.registry.lock().expect("registry lock").retry_successes += 1;
+                            lock_live(&self.registry).retry_successes += 1;
                             Ok(r)
                         }
                         Err(e) => Err(anyhow::anyhow!("{first:#}; retry failed: {e:#}")),
@@ -467,7 +472,7 @@ impl Shard {
                 Ok(results) => {
                     // batch-level metrics recorded ONCE (shared wall/traffic)
                     if let Some(first) = results.first() {
-                        let mut reg = self.registry.lock().expect("registry lock");
+                        let mut reg = lock_live(&self.registry);
                         reg.record(kind.name(), first);
                     }
                     for (&i, r) in wave.iter().zip(results) {
@@ -500,7 +505,7 @@ impl Shard {
                         });
                     }
                     {
-                        let mut reg = self.registry.lock().expect("registry lock");
+                        let mut reg = lock_live(&self.registry);
                         reg.failures += wave.len() as u64;
                     }
                     self.evict_if_poisoned(kind);

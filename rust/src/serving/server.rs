@@ -44,6 +44,7 @@ use crate::coordinator::{BatchPolicy, EngineKind, MetricsRegistry, PreparedModel
 use crate::net::TransportSpec;
 use crate::net::{read_frame, write_frame};
 use crate::nn::ThresholdSchedule;
+use crate::util::lock_live;
 
 use super::dispatch::{Dispatch, Job, RouteMap};
 use super::wire::{decode_request, encode_response, RejectCode, WireResponse};
@@ -371,20 +372,25 @@ impl Server {
                         Ok((stream, _peer)) => {
                             stats.connections.fetch_add(1, Ordering::SeqCst);
                             if let Ok(clone) = stream.try_clone() {
-                                conns.lock().expect("conns lock").push(clone);
+                                lock_live(&conns).push(clone);
                             }
                             let route = route.clone();
                             let stats = stats.clone();
-                            let h = std::thread::Builder::new()
+                            let spawned = std::thread::Builder::new()
                                 .name("serve-conn".into())
                                 .spawn(move || {
                                     connection_loop(
                                         stream, route, stats, policy, max_queue, max_inflight,
                                         writer_cap,
                                     )
-                                })
-                                .expect("spawn connection thread");
-                            conn_handles.lock().expect("handles lock").push(h);
+                                });
+                            // a failed OS thread spawn sheds this one
+                            // connection (dropping the closure drops the
+                            // stream, so the client sees a disconnect)
+                            // instead of killing the accept loop
+                            if let Ok(h) = spawned {
+                                lock_live(&conn_handles).push(h);
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             if shutdown.load(Ordering::SeqCst) {
@@ -446,7 +452,7 @@ impl Server {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return;
         }
-        for s in self.conns.lock().expect("conns lock").iter() {
+        for s in lock_live(&self.conns).iter() {
             let _ = s.shutdown(Shutdown::Both);
         }
         if let Some(h) = self.accept_handle.take() {
@@ -454,10 +460,10 @@ impl Server {
         }
         // second pass for connections accepted while the flag was being set
         // (the accept thread may have admitted one after the sever above)
-        for s in self.conns.lock().expect("conns lock").iter() {
+        for s in lock_live(&self.conns).iter() {
             let _ = s.shutdown(Shutdown::Both);
         }
-        let handles = std::mem::take(&mut *self.conn_handles.lock().expect("handles lock"));
+        let handles = std::mem::take(&mut *lock_live(&self.conn_handles));
         for h in handles {
             let _ = h.join();
         }
@@ -582,7 +588,7 @@ fn connection_loop(
             continue;
         }
         {
-            let mut set = inflight.lock().expect("inflight lock");
+            let mut set = lock_live(&inflight);
             if set.contains(&req.id) {
                 drop(set);
                 reject(req.id, RejectCode::DuplicateId, RejectCode::DuplicateId.as_str().into());
@@ -657,7 +663,7 @@ fn metrics_loop(
                 let head = String::from_utf8_lossy(&buf[..n]);
                 let (status, body) = if head.starts_with("GET /metrics") {
                     let body = {
-                        let reg = registry.lock().expect("registry lock");
+                        let reg = lock_live(&registry);
                         stats.render_prometheus(&reg)
                     };
                     ("200 OK", body)

@@ -6,8 +6,10 @@ pub mod json;
 pub mod pool;
 pub mod propcheck;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use pool::WorkerPool;
 pub use propcheck::{gen_range, propcheck};
 pub use rng::{AesPrg, CrHash, Xoshiro256};
+pub use sync::lock_live;

@@ -1,0 +1,18 @@
+//! Poison-tolerant locking for connection-path code.
+//!
+//! `net/` and `serving/` are panic-free zones (enforced by `mpc-lint`'s
+//! `panic` rule): a reader or writer thread must never die on `.lock()
+//! .unwrap()` just because some *other* thread panicked while holding the
+//! mutex. Every mutex guarded by [`lock_live`] protects state that stays
+//! structurally valid at any instruction boundary (counters, maps of
+//! sender handles, metric registries — all updated in single statements),
+//! so recovering the guard from a poisoned lock is sound: the worst a
+//! panicked peer can leave behind is a value from before its last
+//! completed statement, never a torn one.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_live<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

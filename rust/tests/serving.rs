@@ -270,6 +270,79 @@ fn overload_and_rejects_are_typed_and_never_hang() {
     assert_eq!(stats.queue_depth.load(Ordering::SeqCst), 0);
 }
 
+/// Regression for the typed decode paths: frames truncated mid-field, a
+/// token count that lies about the payload, and trailing garbage must all
+/// come back as `Rejected(Malformed)` — carrying the request id whenever
+/// the header survived far enough to decode one — and the same connection
+/// must keep answering afterwards. Before the decode paths were typed, any
+/// of these killed the reader thread with an unwrap panic.
+#[test]
+fn truncated_frames_reject_typed_and_connection_survives() {
+    let model = tiny_model();
+    let cfg = ServeConfig { shards: 1, policy: test_policy(), ..ServeConfig::for_tests() };
+    let mut server = Server::start(model, cfg, "127.0.0.1:0", "127.0.0.1:0").expect("server");
+    let addr = server.addr().to_string();
+
+    let mut raw = cipherprune::net::TcpTransport::connect_retry(&addr, Duration::from_secs(5))
+        .expect("raw connect");
+    let good = encode_request(&WireRequest {
+        id: 42,
+        engine: EngineKind::CipherPrune,
+        nonce: 7,
+        deadline_ms: 0,
+        ids: sample_ids(23),
+    });
+    // layout: tag(1) ‖ id(8) ‖ engine(1) ‖ nonce(8) ‖ deadline(8) ‖ n(4) ‖ ids
+    let n_off = 1 + 8 + 1 + 8 + 8;
+
+    let mut expect_malformed = |frame: Vec<u8>, want_id: u64, what: &str| {
+        raw.send_frame(frame).expect("send");
+        match decode_response(&raw.recv_frame().expect("recv")).expect("decode") {
+            WireResponse::Rejected { id, code, detail } => {
+                assert_eq!(code, RejectCode::Malformed, "{what}: {detail}");
+                assert_eq!(id, want_id, "{what}: reject should echo the decoded id");
+                assert!(!detail.is_empty(), "{what}: detail must name the decode failure");
+            }
+            other => panic!("{what}: expected Rejected(Malformed), got {other:?}"),
+        }
+    };
+
+    // header cut mid-id: no id decodes, so the reject answers with id 0
+    expect_malformed(good[..5].to_vec(), 0, "mid-id truncation");
+    // body cut mid-token-list: the id survived, so the reject carries it
+    expect_malformed(good[..good.len() - 2].to_vec(), 42, "mid-ids truncation");
+    // header cut mid-deadline: id survived, later field missing
+    expect_malformed(good[..n_off - 3].to_vec(), 42, "mid-deadline truncation");
+    // count field claims far more tokens than the frame holds
+    let mut lying = good.clone();
+    lying[n_off..n_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    expect_malformed(lying, 42, "lying token count");
+    // trailing bytes after a complete request
+    let mut trailing = good.clone();
+    trailing.push(0xAB);
+    expect_malformed(trailing, 42, "trailing garbage");
+
+    // the reader thread survived all five: the same connection still gets
+    // typed application-level answers
+    raw.send_frame(encode_request(&WireRequest {
+        id: 5,
+        engine: EngineKind::CipherPrune,
+        nonce: 1,
+        deadline_ms: 0,
+        ids: vec![],
+    }))
+    .expect("send");
+    match decode_response(&raw.recv_frame().expect("recv")).expect("decode") {
+        WireResponse::Rejected { id, code, .. } => {
+            assert_eq!((id, code), (5, RejectCode::EmptyInput));
+        }
+        other => panic!("expected Rejected(EmptyInput), got {other:?}"),
+    }
+    assert_eq!(server.stats().shed_rejected.load(Ordering::SeqCst), 6);
+    drop(raw);
+    server.shutdown();
+}
+
 /// A client that vanishes with work in flight neither hangs the server nor
 /// contaminates other connections: its queued job is cancelled at dispatch,
 /// and a later client on the same shard gets a normal, bit-identical result.

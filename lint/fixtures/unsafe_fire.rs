@@ -1,0 +1,9 @@
+// must-FIRE twice: an `unsafe` block and an `unsafe fn`, both outside the
+// allow-listed SIMD kernel modules.
+pub fn read_first(v: &[u64]) -> u64 {
+    unsafe { *v.as_ptr() }
+}
+
+pub unsafe fn add_wild(p: *const u64, q: *const u64) -> u64 {
+    (*p).wrapping_add(*q)
+}

@@ -1,0 +1,16 @@
+// must-PASS when linted at the allow-listed rels (he/simd.rs, ot/simd.rs):
+// a scoped opt-out plus an intrinsics-style unsafe kernel, the shape the
+// real SIMD modules take. (`unsafe_code` in the attribute lexes as one
+// ident distinct from `unsafe`, so it never fires anywhere.)
+#![allow(unsafe_code)]
+
+pub fn try_kernel(v: &mut [u64]) -> bool {
+    unsafe { kernel(v) };
+    true
+}
+
+unsafe fn kernel(v: &mut [u64]) {
+    for x in v.iter_mut() {
+        *x = x.wrapping_mul(3);
+    }
+}

@@ -1,6 +1,6 @@
 //! `mpc-lint` — repo-specific static analysis for the CipherPrune tree.
 //!
-//! Four rule families, each guarding an invariant the protocol stack sells
+//! Five rule families, each guarding an invariant the protocol stack sells
 //! (see README "Machine-checked invariants"):
 //!
 //! - **determinism**: no wall clocks, ambient RNG, or hash-order iteration
@@ -17,6 +17,9 @@
 //! - **panic**: no `unwrap()`/`expect()`/panicking macros in `net/` and
 //!   `serving/` — a malformed frame disconnects one client, it never kills
 //!   a server thread.
+//! - **unsafe**: `unsafe` appears nowhere outside the two allow-listed SIMD
+//!   kernel modules (`he/simd.rs`, `ot/simd.rs`), which carry the crate's
+//!   only scoped `#![allow(unsafe_code)]` and a documented safety contract.
 //!
 //! Suppressions are explicit and justified:
 //! `// mpc-lint: allow(<rule>) reason="..."` on the finding's line or in
@@ -38,6 +41,11 @@ const TRANSCRIPT_SCOPE: &[&str] = &["protocols/", "gates/", "ot/", "he/"];
 const CHANNEL_SCOPE: &[&str] = &["protocols/", "gates/", "ot/", "he/", "party/", "coordinator/"];
 const SECRET_SCOPE: &[&str] = &["protocols/", "gates/"];
 const PANIC_SCOPE: &[&str] = &["net/", "serving/"];
+
+/// The only files allowed to contain `unsafe`: the reviewed AVX2 kernel
+/// modules, which opt in via a scoped `#![allow(unsafe_code)]` against the
+/// crate-level `unsafe_code = "deny"` and document their safety contract.
+const UNSAFE_ALLOWED: &[&str] = &["he/simd.rs", "ot/simd.rs"];
 
 fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| rel.starts_with(p))
@@ -66,6 +74,9 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     }
     if in_scope(rel, PANIC_SCOPE) {
         rules::panic_hygiene(&lexed.toks, &tregions, &mut raw);
+    }
+    if !UNSAFE_ALLOWED.contains(&rel) {
+        rules::unsafe_confinement(&lexed.toks, &mut raw);
     }
 
     let mut findings: Vec<Finding> = Vec::new();

@@ -1,12 +1,13 @@
-//! The four rule families. Each rule walks the token stream of one file
+//! The five rule families. Each rule walks the token stream of one file
 //! (with its delimiter matches and test-region spans) and pushes findings;
 //! allow-marker filtering happens in the driver (`lib.rs`), so rules report
 //! every hit.
 //!
 //! The rules are token-structural on purpose: every invariant they encode
 //! (wire determinism, send⇔recv mirroring, secret-independent control flow,
-//! panic-free connection paths) is visible at token/brace level, which keeps
-//! the checker dependency-free and trivially auditable.
+//! panic-free connection paths, unsafe confinement) is visible at
+//! token/brace level, which keeps the checker dependency-free and trivially
+//! auditable.
 
 use crate::lexer::{in_regions, Tok, TokKind};
 
@@ -16,6 +17,7 @@ pub enum Rule {
     Channel,
     Secret,
     Panic,
+    Unsafe,
     Marker,
 }
 
@@ -26,6 +28,7 @@ impl Rule {
             Rule::Channel => "channel",
             Rule::Secret => "secret",
             Rule::Panic => "panic",
+            Rule::Unsafe => "unsafe",
             Rule::Marker => "marker",
         }
     }
@@ -814,6 +817,29 @@ pub fn panic_hygiene(toks: &[Tok], tregions: &[(usize, usize)], out: &mut Vec<Ra
                 rule: Rule::Panic,
                 line: t.line,
                 msg: format!("{}! in a connection-path module", t.text),
+            });
+        }
+    }
+}
+
+// ----------------------------------------------------------------- unsafe
+
+/// `unsafe` anywhere outside the allow-listed SIMD kernel modules. The crate
+/// sets `unsafe_code = "deny"` (Cargo.toml) and the two kernel files opt out
+/// with a scoped `#![allow(unsafe_code)]`; this rule closes the loop by
+/// making new opt-outs visible to the lint gate, not just to code review.
+/// No test-region exemption: test code has no more business with `unsafe`
+/// than production code does. (`unsafe_code` inside the allow attribute
+/// lexes as a single distinct ident, so it does not fire.)
+pub fn unsafe_confinement(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for t in toks {
+        if is_ident(t, "unsafe") {
+            out.push(RawFinding {
+                rule: Rule::Unsafe,
+                line: t.line,
+                msg: "`unsafe` outside the allow-listed SIMD kernel modules \
+                      (he/simd.rs, ot/simd.rs); keep unsafe confined there"
+                    .to_string(),
             });
         }
     }

@@ -91,6 +91,31 @@ fn panic_rule_respects_module_scope() {
 }
 
 #[test]
+fn unsafe_fires_on_block_and_fn_everywhere() {
+    // the unsafe rule is not scoped to a module family: it applies to every
+    // rel outside the allow list, including modules no other rule covers
+    for rel in ["util/fixture.rs", "he/ntt.rs", "net/fixture.rs"] {
+        let fs = lint_fixture(rel, "unsafe_fire.rs");
+        assert_eq!(count(&fs, Rule::Unsafe, false), 2, "rel={}: {:#?}", rel, fs);
+    }
+}
+
+#[test]
+fn unsafe_passes_in_allow_listed_simd_modules() {
+    for rel in ["he/simd.rs", "ot/simd.rs"] {
+        let fs = lint_fixture(rel, "unsafe_pass.rs");
+        assert_eq!(unallowed(&fs), 0, "rel={}: {:#?}", rel, fs);
+        let fs = lint_fixture(rel, "unsafe_fire.rs");
+        assert_eq!(unallowed(&fs), 0, "rel={}: {:#?}", rel, fs);
+    }
+    // the same opt-out fixture outside the allow list fires on its two
+    // `unsafe` tokens (the `#![allow(unsafe_code)]` attribute itself does
+    // not fire: `unsafe_code` lexes as one distinct ident)
+    let fs = lint_fixture("util/fixture.rs", "unsafe_pass.rs");
+    assert_eq!(count(&fs, Rule::Unsafe, false), 2, "{:#?}", fs);
+}
+
+#[test]
 fn cfg_test_regions_are_skipped() {
     let fs = lint_fixture("net/fixture.rs", "test_region_pass.rs");
     assert_eq!(unallowed(&fs), 0, "{:#?}", fs);

@@ -1,0 +1,326 @@
+//! bench_kernels — microbenchmarks for the vectorized crypto inner loops
+//! (the PR-9 SIMD layer): forward/inverse NTT, the lazy Shoup
+//! multiply-accumulate, the per-prime CRT-lift multiply, AES-PRG expansion,
+//! and the IKNP 64×64 bit transpose, each at N = 4096 and 8192, scalar vs
+//! AVX2. Before timing, every kernel pair is asserted bit-identical on the
+//! bench inputs — the dispatch contract, not just a perf claim.
+//!
+//! Writes `BENCH_kernels.json`: the host's AVX2 detection result, the
+//! dispatch decision the library would take, and per-kernel scalar/SIMD
+//! stats with the median-based speedup. PRG expansion has no scalar/SIMD
+//! A/B (the `aes` crate uses AES-NI transparently); its record is
+//! throughput only.
+//!
+//! Usage:
+//!   cargo run --release --bin bench_kernels                  # full iters
+//!   cargo run --release --bin bench_kernels -- --smoke       # CI-sized
+//!   cargo run --release --bin bench_kernels -- --out path/to.json
+//!
+//! PERF: single-threaded by design — these are per-core kernel numbers;
+//! the worker pool scales them across cores (bench_e2e measures that).
+
+use cipherprune::he::ntt::{mul_mod, mul_mod_shoup, mul_mod_shoup_lazy, shoup, NttTable};
+use cipherprune::he::params::{PRIMES, PSI_16384};
+use cipherprune::he::simd;
+use cipherprune::ot::{simd as ot_simd, transpose64_scalar};
+use cipherprune::util::bench::{bench, fmt_duration, BenchStats};
+use cipherprune::util::{AesPrg, Json, Xoshiro256};
+
+/// Primitive 2n-th root for PRIMES[0], derived from the 16384-th root.
+fn table(n: usize) -> NttTable {
+    let q = PRIMES[0];
+    let mut psi = PSI_16384[0];
+    let mut order = 16384usize;
+    while order > 2 * n {
+        psi = mul_mod(psi, psi, q);
+        order /= 2;
+    }
+    NttTable::new(q, n, psi)
+}
+
+struct KernelRecord {
+    name: String,
+    n: usize,
+    scalar: BenchStats,
+    simd: Option<BenchStats>,
+}
+
+impl KernelRecord {
+    fn speedup(&self) -> Option<f64> {
+        self.simd.as_ref().map(|s| self.scalar.median_s / s.median_s)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("n", self.n.into()),
+            ("scalar", self.scalar.to_json()),
+            (
+                "simd",
+                match &self.simd {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "speedup",
+                match self.speedup() {
+                    Some(x) => x.into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn print(&self) {
+        match (&self.simd, self.speedup()) {
+            (Some(s), Some(x)) => println!(
+                "  {:<24} n={:<5} scalar {:>10}  simd {:>10}  speedup {:.2}x",
+                self.name,
+                self.n,
+                fmt_duration(self.scalar.median_s),
+                fmt_duration(s.median_s),
+                x
+            ),
+            _ => println!(
+                "  {:<24} n={:<5} scalar {:>10}  (no AVX2 — scalar only)",
+                self.name,
+                self.n,
+                fmt_duration(self.scalar.median_s)
+            ),
+        }
+    }
+}
+
+/// Scalar/SIMD pair over the same input-regeneration closure. `prep` fills
+/// the working buffer; `scalar`/`vector` run one pass over it. The identity
+/// of the two passes is asserted before timing.
+fn ab_bench<P, S, V>(
+    name: &str,
+    n: usize,
+    iters: usize,
+    avx2: bool,
+    mut prep: P,
+    mut scalar: S,
+    mut vector: V,
+) -> KernelRecord
+where
+    P: FnMut(u64) -> Vec<u64>,
+    S: FnMut(&mut [u64]),
+    V: FnMut(&mut [u64]) -> bool,
+{
+    if avx2 {
+        // bit-identity on the bench inputs before timing anything
+        for seed in 0..3u64 {
+            let mut a = prep(seed);
+            let mut b = a.clone();
+            scalar(&mut a);
+            assert!(vector(&mut b), "AVX2 kernel refused despite detection");
+            assert_eq!(a, b, "{name}: scalar/SIMD outputs differ (seed {seed})");
+        }
+    }
+    let mut buf = prep(17);
+    let s = bench(&format!("{name}/scalar"), 2, iters, || scalar(&mut buf));
+    let v = if avx2 {
+        let mut buf = prep(17);
+        Some(bench(&format!("{name}/simd"), 2, iters, || {
+            vector(&mut buf);
+        }))
+    } else {
+        None
+    };
+    KernelRecord { name: name.to_string(), n, scalar: s, simd: v }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_kernels.json".to_string());
+    let iters = if smoke { 5 } else { 40 };
+    let avx2 = simd::avx2_available();
+    let dispatch = if simd::enabled() { "simd" } else { "scalar" };
+    println!(
+        "kernel dispatch: avx2_detected={avx2} decision={dispatch} (CIPHERPRUNE_SIMD={})",
+        std::env::var("CIPHERPRUNE_SIMD").unwrap_or_else(|_| "<unset>".into())
+    );
+
+    let q = PRIMES[0];
+    let mut records: Vec<KernelRecord> = Vec::new();
+    for &n in &[4096usize, 8192] {
+        let tb = table(n);
+
+        // forward NTT (inputs < q: the canonical entry state)
+        records.push(ab_bench(
+            "ntt_forward",
+            n,
+            iters,
+            avx2,
+            |seed| {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                (0..n).map(|_| rng.below(q)).collect()
+            },
+            |a| tb.forward_with(a, false),
+            |a| {
+                tb.forward_with(a, true);
+                true
+            },
+        ));
+
+        // inverse NTT (inputs < q, as after a forward pass)
+        records.push(ab_bench(
+            "ntt_inverse",
+            n,
+            iters,
+            avx2,
+            |seed| {
+                let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xA5);
+                (0..n).map(|_| rng.below(q)).collect()
+            },
+            |a| tb.inverse_with(a, false),
+            |a| {
+                tb.inverse_with(a, true);
+                true
+            },
+        ));
+
+        // lazy Shoup multiply-accumulate (the mul_pt_accumulate_lazy inner
+        // loop): dst in [0, 2q), operands < q, 4-step chain per pass
+        {
+            let mut rng = Xoshiro256::seed_from_u64(7);
+            let src: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let w: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+            let wp: Vec<u64> = w.iter().map(|&x| shoup(x, q)).collect();
+            let chain = 4;
+            records.push(ab_bench(
+                "mul_acc_lazy",
+                n,
+                iters,
+                avx2,
+                |seed| {
+                    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5A);
+                    (0..n).map(|_| rng.below(2 * q)).collect()
+                },
+                |dst| {
+                    let two_q = 2 * q;
+                    for _ in 0..chain {
+                        for j in 0..dst.len() {
+                            let p = mul_mod_shoup_lazy(src[j], w[j], wp[j], q);
+                            let s = dst[j] + p;
+                            dst[j] = if s >= two_q { s - two_q } else { s };
+                        }
+                    }
+                },
+                |dst| {
+                    for _ in 0..chain {
+                        if !simd::try_mul_acc_lazy(dst, &src, &w, &wp, q) {
+                            return false;
+                        }
+                    }
+                    true
+                },
+            ));
+        }
+
+        // per-prime CRT-lift multiply (decrypt_with): strict Shoup by a
+        // broadcast constant, inputs < q
+        {
+            let y = {
+                let mut rng = Xoshiro256::seed_from_u64(11);
+                rng.below(q)
+            };
+            let yp = shoup(y, q);
+            records.push(ab_bench(
+                "crt_lift_mul",
+                n,
+                iters,
+                avx2,
+                |seed| {
+                    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC3);
+                    (0..n).map(|_| rng.below(q)).collect()
+                },
+                |vals| {
+                    for v in vals.iter_mut() {
+                        *v = mul_mod_shoup(*v, y, yp, q);
+                    }
+                },
+                |vals| simd::try_mul_shoup_const(vals, y, yp, q),
+            ));
+        }
+
+        // IKNP bit transpose: n/64 independent 64×64 blocks per pass
+        {
+            let blocks = n / 64;
+            records.push(ab_bench(
+                "transpose64",
+                n,
+                iters,
+                avx2,
+                |seed| {
+                    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x3C);
+                    (0..n).map(|_| rng.next_u64()).collect()
+                },
+                |a| {
+                    for b in 0..blocks {
+                        let blk: &mut [u64; 64] =
+                            (&mut a[b * 64..(b + 1) * 64]).try_into().unwrap();
+                        transpose64_scalar(blk);
+                    }
+                },
+                |a| {
+                    for b in 0..blocks {
+                        let blk: &mut [u64; 64] =
+                            (&mut a[b * 64..(b + 1) * 64]).try_into().unwrap();
+                        if !ot_simd::try_transpose64(blk) {
+                            return false;
+                        }
+                    }
+                    true
+                },
+            ));
+        }
+
+        // AES-PRG expansion throughput (AES-NI via the `aes` crate — no
+        // scalar/SIMD A/B; recorded so regressions in the bulk CTR path
+        // show up next to the kernels it feeds)
+        {
+            let mut prg = AesPrg::from_u64_seed(99);
+            let mut buf = vec![0u64; n];
+            let stats =
+                bench(&format!("prg_expand/n{n}"), 2, iters, || prg.fill_u64(&mut buf));
+            let gbps = (n as f64 * 8.0) / stats.median_s / 1e9;
+            println!(
+                "  {:<24} n={:<5} {:>10}  ({:.2} GB/s)",
+                "prg_expand",
+                n,
+                fmt_duration(stats.median_s),
+                gbps
+            );
+            records.push(KernelRecord {
+                name: "prg_expand".to_string(),
+                n,
+                scalar: stats,
+                simd: None,
+            });
+        }
+    }
+
+    println!();
+    for r in records.iter().filter(|r| r.name != "prg_expand") {
+        r.print();
+    }
+
+    let report = Json::obj(vec![
+        ("bench", "kernels".into()),
+        ("smoke", smoke.into()),
+        ("avx2_detected", avx2.into()),
+        ("dispatch", dispatch.into()),
+        ("kernels", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write(&out_path, report.to_string_pretty()).expect("write report");
+    println!("wrote {out_path}");
+}

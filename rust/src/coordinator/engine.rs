@@ -94,6 +94,13 @@ pub struct EngineConfig {
     /// legitimate gap between frames (compute-heavy phases send nothing for
     /// a while); it bounds *silence*, not request latency.
     pub stall_timeout: Option<Duration>,
+    /// Kernel-dispatch override for the vectorized crypto inner loops
+    /// (see [`crate::he::simd`]). `None` (default) resolves from the
+    /// `CIPHERPRUNE_SIMD` env var + AVX2 feature detection; `Some(false)`
+    /// forces scalar; `Some(true)` asks for AVX2 (clamped to hardware
+    /// support). SIMD and scalar produce bit-identical ciphertexts, OT
+    /// rows, transcripts, and digests — this only changes throughput.
+    pub simd: Option<bool>,
 }
 
 impl EngineConfig {
@@ -110,6 +117,7 @@ impl EngineConfig {
             coalesce: true,
             preprocess_shape: None,
             stall_timeout: None,
+            simd: None,
         }
     }
 
@@ -172,6 +180,21 @@ impl EngineConfig {
     pub fn stall_timeout(mut self, d: Duration) -> Self {
         self.stall_timeout = Some(d);
         self
+    }
+
+    /// Force the kernel-dispatch decision (see [`EngineConfig::simd`]).
+    pub fn simd(mut self, on: bool) -> Self {
+        self.simd = Some(on);
+        self
+    }
+
+    /// Apply this config's kernel-dispatch override to the process-wide
+    /// switch (a no-op for `None`, which keeps the env/feature-detected
+    /// default). Called at session start and by [`run_inference`].
+    pub fn apply_simd(&self) {
+        if let Some(on) = self.simd {
+            crate::he::simd::set_enabled(on);
+        }
     }
 
     /// The worker pool this configuration resolves to.
@@ -309,6 +332,7 @@ pub fn run_inference(
     if cfg.kind == EngineKind::Plaintext {
         return run_plaintext(weights, ids);
     }
+    cfg.apply_simd();
     let mut ids: Vec<usize> = crate::nn::workload::strip_padding(ids).to_vec();
     if ids.is_empty() {
         // empty input degenerates to one pad token, like the session path

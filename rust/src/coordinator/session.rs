@@ -269,6 +269,7 @@ impl Session {
             return Ok(Self::oracle(cfg, model));
         }
         let (mut ca, mut cb, transcript) = chans;
+        cfg.apply_simd();
         ca.set_coalesce(cfg.coalesce);
         cb.set_coalesce(cfg.coalesce);
         // arm the link-level half of the stall watchdog: a party blocked on

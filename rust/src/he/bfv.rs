@@ -29,6 +29,10 @@ pub struct BfvContext {
     /// CRT lift constants: M_i = q / q_i (u128) and y_i = M_i^{-1} mod q_i.
     crt_m: [u128; NPRIMES],
     crt_y: [u64; NPRIMES],
+    /// Shoup companions of y_i — `mul_mod_shoup(x, y_i, y_i', q_i)` equals
+    /// `mul_mod(x, y_i, q_i)` bit-for-bit, and is what the vectorized CRT
+    /// lift uses.
+    crt_y_shoup: [u64; NPRIMES],
 }
 
 pub type Ctx = Arc<BfvContext>;
@@ -66,6 +70,7 @@ impl BfvContext {
         // CRT constants
         let mut crt_m = [0u128; NPRIMES];
         let mut crt_y = [0u64; NPRIMES];
+        let mut crt_y_shoup = [0u64; NPRIMES];
         for i in 0..NPRIMES {
             let others: Vec<u64> =
                 (0..NPRIMES).filter(|&j| j != i).map(|j| PRIMES[j]).collect();
@@ -73,6 +78,7 @@ impl BfvContext {
             crt_m[i] = m;
             let m_mod = (m % PRIMES[i] as u128) as u64;
             crt_y[i] = super::ntt::inv_mod(m_mod, PRIMES[i]);
+            crt_y_shoup[i] = shoup(crt_y[i], PRIMES[i]);
         }
         Arc::new(BfvContext {
             n,
@@ -83,6 +89,7 @@ impl BfvContext {
             delta_mod,
             crt_m,
             crt_y,
+            crt_y_shoup,
         })
     }
 
@@ -357,24 +364,54 @@ pub fn decrypt_with(
     ct: &Ciphertext,
     pool: WorkerPool,
 ) -> Vec<u64> {
+    let mut scratch = RnsPoly::zero(ctx, true);
+    decrypt_with_scratch(ctx, sk, ct, pool, &mut scratch)
+}
+
+/// [`decrypt_with`] reusing a caller-provided scratch polynomial for the
+/// intermediate c0 + c1·s — batched decrypt loops (one scratch per worker)
+/// avoid an NPRIMES×N allocation per ciphertext. `scratch` contents are
+/// overwritten; its shape must match `ctx`.
+pub fn decrypt_with_scratch(
+    ctx: &BfvContext,
+    sk: &SecretKey,
+    ct: &Ciphertext,
+    pool: WorkerPool,
+    scratch: &mut RnsPoly,
+) -> Vec<u64> {
     assert!(ct.c0.ntt && ct.c1.ntt);
-    // x = c0 + c1·s per prime, then inverse NTT
-    let mut x = ct.c0.clone();
-    pool.sized_for(NPRIMES, 1).par_for_each_mut(&mut x.res, |i, r| {
+    assert_eq!(scratch.res.len(), NPRIMES);
+    let use_simd = super::simd::enabled();
+    // x = c0 + c1·s per prime (written into scratch), then inverse NTT
+    scratch.ntt = true;
+    pool.sized_for(NPRIMES, 1).par_for_each_mut(&mut scratch.res, |i, r| {
+        assert_eq!(r.len(), ctx.n);
         let q = PRIMES[i];
+        let c0 = &ct.c0.res[i];
+        let c1 = &ct.c1.res[i];
+        let s = &sk.s_ntt.res[i];
         for (j, v) in r.iter_mut().enumerate() {
-            let cs = mul_mod(ct.c1.res[i][j], sk.s_ntt.res[i][j], q);
-            *v = add_mod(*v, cs, q);
+            *v = add_mod(c0[j], mul_mod(c1[j], s[j], q), q);
         }
     });
-    x.inverse_ntt_with(ctx, pool);
-    // CRT-lift each coefficient and round: m = round(x·2^64 / q) mod 2^64
+    scratch.inverse_ntt_with(ctx, pool);
+    // per-prime CRT-lift terms x_i·y_i mod q_i, in place — strict Shoup by
+    // the broadcast constant y_i, bit-identical to mul_mod (vectorizable)
+    pool.sized_for(NPRIMES, 1).par_for_each_mut(&mut scratch.res, |i, r| {
+        let q = PRIMES[i];
+        let (y, yp) = (ctx.crt_y[i], ctx.crt_y_shoup[i]);
+        if !(use_simd && super::simd::try_mul_shoup_const(r, y, yp, q)) {
+            for v in r.iter_mut() {
+                *v = mul_mod_shoup(*v, y, yp, q);
+            }
+        }
+    });
+    // accumulate the lift and round: m = round(x·2^64 / q) mod 2^64
+    let terms = &scratch.res;
     pool.sized_for(ctx.n, 1024).par_map(ctx.n, |j| {
         let mut acc: U192 = [0, 0, 0];
-        for i in 0..NPRIMES {
-            let xi = x.res[i][j];
-            let term = mul_mod(xi, ctx.crt_y[i], PRIMES[i]);
-            let prod = mul_u128_u64(ctx.crt_m[i], term);
+        for (i, t) in terms.iter().enumerate() {
+            let prod = mul_u128_u64(ctx.crt_m[i], t[j]);
             acc = super::bigint::u192_add(acc, prod);
         }
         let lifted = u192_mod_small(acc, ctx.q_big);
@@ -413,24 +450,35 @@ impl Ciphertext {
     /// ops, and (transcript-determinism!) serialization all require canonical
     /// residues.
     pub fn mul_pt_accumulate_lazy(&mut self, ct: &Ciphertext, pt: &PtNtt) {
+        self.mul_pt_accumulate_lazy_with(ct, pt, crate::he::simd::enabled());
+    }
+
+    /// [`mul_pt_accumulate_lazy`](Self::mul_pt_accumulate_lazy) with the
+    /// dispatch decision forced (tests/benches). Both paths keep the same
+    /// lazy [0, 2q) bounds and produce bit-identical residues.
+    pub fn mul_pt_accumulate_lazy_with(
+        &mut self,
+        ct: &Ciphertext,
+        pt: &PtNtt,
+        use_simd: bool,
+    ) {
         assert!(self.c0.ntt && ct.c0.ntt);
         for i in 0..NPRIMES {
             let q = PRIMES[i];
             let two_q = 2 * q;
             let (pv, ps) = (&pt.vals[i], &pt.shoup[i]);
-            let dst0 = &mut self.c0.res[i];
-            let src0 = &ct.c0.res[i];
-            for j in 0..dst0.len() {
-                let p = super::ntt::mul_mod_shoup_lazy(src0[j], pv[j], ps[j], q);
-                let s = dst0[j] + p;
-                dst0[j] = if s >= two_q { s - two_q } else { s };
-            }
-            let dst1 = &mut self.c1.res[i];
-            let src1 = &ct.c1.res[i];
-            for j in 0..dst1.len() {
-                let p = super::ntt::mul_mod_shoup_lazy(src1[j], pv[j], ps[j], q);
-                let s = dst1[j] + p;
-                dst1[j] = if s >= two_q { s - two_q } else { s };
+            for (dst, src) in [
+                (&mut self.c0.res[i], &ct.c0.res[i]),
+                (&mut self.c1.res[i], &ct.c1.res[i]),
+            ] {
+                if use_simd && super::simd::try_mul_acc_lazy(dst, src, pv, ps, q) {
+                    continue;
+                }
+                for j in 0..dst.len() {
+                    let p = super::ntt::mul_mod_shoup_lazy(src[j], pv[j], ps[j], q);
+                    let s = dst[j] + p;
+                    dst[j] = if s >= two_q { s - two_q } else { s };
+                }
             }
         }
     }

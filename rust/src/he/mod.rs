@@ -1,12 +1,34 @@
 //! Homomorphic-encryption substrate: BFV over RNS with negacyclic NTT, plus
 //! the coefficient-packed matrix-multiplication encoding used by the linear
 //! layers (IRON-style; see DESIGN.md for the BOLT BSGS substitution note).
+//!
+//! # Vectorized kernels
+//!
+//! The per-coefficient inner loops — the Harvey NTT butterflies
+//! (`ntt::NttTable::{forward, inverse}`), the lazy Shoup multiply-accumulate
+//! (`Ciphertext::mul_pt_accumulate_lazy`, and through the NTT dispatch the
+//! `PtNtt` weight encoding), and the per-prime CRT-lift terms in
+//! `decrypt_with` — have AVX2 implementations in [`simd`], selected at
+//! runtime via `is_x86_feature_detected!("avx2")` and overridable with the
+//! `CIPHERPRUNE_SIMD` env var or `EngineConfig::simd`. The scalar code is
+//! kept verbatim as the portable fallback and bit-identity reference: both
+//! paths use the same lazy-reduction bounds and final reductions, so
+//! ciphertexts, transcripts, and digests are identical either way.
+//!
+//! `unsafe` is confined to [`simd`] (and its OT sibling `crate::ot::simd`)
+//! behind a scoped `#![allow(unsafe_code)]` with a documented safety
+//! contract — the crate denies `unsafe_code` everywhere else and mpc-lint's
+//! `unsafe` rule enforces the confinement.
 
 pub mod bfv;
 pub mod bigint;
 pub mod matmul;
 pub mod ntt;
 pub mod params;
+pub mod simd;
 
-pub use bfv::{decrypt, decrypt_with, encrypt, BfvContext, Ciphertext, Ctx, PtNtt, SecretKey};
+pub use bfv::{
+    decrypt, decrypt_with, decrypt_with_scratch, encrypt, BfvContext, Ciphertext, Ctx, PtNtt,
+    SecretKey,
+};
 pub use matmul::MatmulPlan;

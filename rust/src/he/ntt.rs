@@ -81,18 +81,21 @@ fn bit_reverse(x: usize, bits: u32) -> usize {
 }
 
 /// NTT context for one prime modulus and ring degree N (power of two).
+///
+/// Tables are `pub(crate)` so `he::simd` can read them — the vectorized
+/// butterflies consume the same twiddles as the scalar ones.
 pub struct NttTable {
     pub q: u64,
     pub n: usize,
-    log_n: u32,
+    pub(crate) log_n: u32,
     /// ψ^bitrev(i) and Shoup companions (forward).
-    psi_rev: Vec<u64>,
-    psi_rev_shoup: Vec<u64>,
+    pub(crate) psi_rev: Vec<u64>,
+    pub(crate) psi_rev_shoup: Vec<u64>,
     /// ψ^{-bitrev(i)} and companions (inverse).
-    ipsi_rev: Vec<u64>,
-    ipsi_rev_shoup: Vec<u64>,
-    n_inv: u64,
-    n_inv_shoup: u64,
+    pub(crate) ipsi_rev: Vec<u64>,
+    pub(crate) ipsi_rev_shoup: Vec<u64>,
+    pub(crate) n_inv: u64,
+    pub(crate) n_inv_shoup: u64,
 }
 
 impl NttTable {
@@ -140,13 +143,24 @@ impl NttTable {
     /// In-place forward negacyclic NTT (coefficient → evaluation order).
     /// Harvey lazy-reduction form: intermediate values live in [0, 4q);
     /// one reduction pass at the end brings them back below q.
+    ///
+    /// Dispatches to the AVX2 kernel when [`crate::he::simd::enabled`];
+    /// both paths are bit-identical.
     pub fn forward(&self, a: &mut [u64]) {
+        self.forward_with(a, super::simd::enabled());
+    }
+
+    /// [`Self::forward`] with the dispatch decision forced (tests/benches).
+    pub fn forward_with(&self, a: &mut [u64], use_simd: bool) {
         debug_assert_eq!(a.len(), self.n);
+        if use_simd && super::simd::try_forward(self, a) {
+            return;
+        }
         let q = self.q;
         let two_q = 2 * q;
         let mut t = self.n;
         let mut m = 1usize;
-        while m < self.n {
+        for _ in 0..self.log_n {
             t >>= 1;
             for i in 0..m {
                 let w = self.psi_rev[m + i];
@@ -174,13 +188,23 @@ impl NttTable {
             }
             *x = v;
         }
-        let _ = self.log_n;
     }
 
     /// In-place inverse negacyclic NTT (Harvey lazy form: sums reduced to
     /// [0, 2q) per level; the final n⁻¹ Shoup multiply restores < q).
+    ///
+    /// Dispatches to the AVX2 kernel when [`crate::he::simd::enabled`];
+    /// both paths are bit-identical.
     pub fn inverse(&self, a: &mut [u64]) {
+        self.inverse_with(a, super::simd::enabled());
+    }
+
+    /// [`Self::inverse`] with the dispatch decision forced (tests/benches).
+    pub fn inverse_with(&self, a: &mut [u64], use_simd: bool) {
         debug_assert_eq!(a.len(), self.n);
+        if use_simd && super::simd::try_inverse(self, a) {
+            return;
+        }
         let q = self.q;
         let two_q = 2 * q;
         let mut t = 1usize;

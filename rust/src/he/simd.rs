@@ -1,0 +1,463 @@
+//! Vectorized (AVX2) implementations of the HE-side crypto inner loops,
+//! with runtime dispatch and a bit-identity contract against the scalar
+//! code they accelerate.
+//!
+//! # Kernels
+//!
+//! - [`try_forward`] / [`try_inverse`] — the Harvey lazy-reduction NTT
+//!   butterflies of [`NttTable::forward`]/[`NttTable::inverse`], 4 u64
+//!   lanes wide. Levels whose butterfly span `t` is ≥ 4 run vectorized
+//!   (one broadcast twiddle per group, `_mm256_mul_epu32`-based Shoup
+//!   multiply); the last/first two levels and any tail run the scalar
+//!   formulas verbatim. One vectorized reduction pass at the end, exactly
+//!   like the scalar code.
+//! - [`try_mul_acc_lazy`] — the element-wise lazy Shoup
+//!   multiply-accumulate of `Ciphertext::mul_pt_accumulate_lazy`
+//!   (residues stay in [0, 2q), one conditional 2q subtraction).
+//! - [`try_mul_shoup_const`] — element-wise *strict* Shoup multiply by one
+//!   broadcast constant: the per-prime CRT-lift term `x_i · y_i mod q_i`
+//!   inside `decrypt_with`.
+//!
+//! # Dispatch
+//!
+//! [`enabled`] is the process-wide policy switch consulted by the default
+//! entry points (`NttTable::forward`, `mul_pt_accumulate_lazy`, `decrypt`,
+//! `ot::transpose64`). It resolves once from the `CIPHERPRUNE_SIMD`
+//! environment variable (`off`/`0`/`false` forces scalar; anything else —
+//! and the unset default — uses AVX2 when the CPU has it), mirroring the
+//! `THREADS`/`CIPHERPRUNE_THREADS` pool override. [`set_enabled`] /
+//! [`set_auto`] override it programmatically (`EngineConfig::simd` plumbs
+//! through here). The `try_*` kernels themselves gate only on hardware
+//! support, so tests and benches can force either path in-process through
+//! the `*_with(…, use_simd)` twins regardless of the global policy.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel computes the *same* arithmetic as its scalar reference —
+//! same lazy-reduction bounds, same wrapping multiplies, same final
+//! conditional subtractions — so outputs are bit-identical, not merely
+//! congruent. Ciphertexts, OT rows, transcripts, and digests therefore do
+//! not depend on the dispatch decision; `tests/simd.rs` pins this on
+//! randomized inputs, adversarial boundary vectors (q−1, 2q−1, 4q−1), and
+//! a full `Session::infer` transcript digest with SIMD forced on vs off.
+//!
+//! # Safety
+//!
+//! This module (with its OT sibling `ot::simd`) is the only place in the
+//! crate allowed to contain `unsafe` — the crate denies `unsafe_code` and
+//! `mpc-lint`'s `unsafe` rule enforces the confinement. The contract for
+//! every unsafe block here:
+//!
+//! - intrinsics are only reached behind `is_x86_feature_detected!("avx2")`
+//!   (checked once, cached), so `#[target_feature(enable = "avx2")]`
+//!   functions never execute on CPUs without AVX2;
+//! - all loads/stores are unaligned-tolerant (`loadu`/`storeu`) on
+//!   in-bounds slice ranges: every pointer is derived from a slice whose
+//!   length is checked by the caller loop (`j + 4 <= len`), and
+//!   overlapping ranges never occur (butterfly halves are disjoint by
+//!   `t ≥ 4`);
+//! - value ranges are the scalar code's: operands stay < 4q < 2^62, so
+//!   the signed `_mm256_cmpgt_epi64` comparisons are exact for these
+//!   unsigned values and 64-bit adds cannot overflow into the sign bit.
+#![allow(unsafe_code)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::ntt::NttTable;
+
+const MODE_UNSET: u8 = 0;
+const MODE_ON: u8 = 1;
+const MODE_OFF: u8 = 2;
+
+/// Process-wide dispatch mode. 0 = not yet resolved, 1 = SIMD, 2 = scalar.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Does this CPU (and build target) support the AVX2 kernels?
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn resolve_from_env() -> bool {
+    match std::env::var("CIPHERPRUNE_SIMD").ok().as_deref().map(str::trim) {
+        Some("off") | Some("0") | Some("false") => false,
+        _ => avx2_available(),
+    }
+}
+
+/// The dispatch decision the default entry points use. Resolved once from
+/// `CIPHERPRUNE_SIMD` + feature detection; overridable via [`set_enabled`].
+/// `true` never escapes on hardware without AVX2.
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => {
+            let on = resolve_from_env();
+            MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the dispatch decision (process-wide). `true` is clamped to
+/// hardware support — forcing SIMD on a non-AVX2 host selects scalar.
+/// Outputs are bit-identical either way; only throughput changes.
+pub fn set_enabled(on: bool) {
+    let m = if on && avx2_available() { MODE_ON } else { MODE_OFF };
+    MODE.store(m, Ordering::Relaxed);
+}
+
+/// Drop any override: the next [`enabled`] re-resolves from the
+/// environment + feature detection.
+pub fn set_auto() {
+    MODE.store(MODE_UNSET, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------- kernels
+//
+// Each `try_*` runs the AVX2 kernel and returns `true`, or returns `false`
+// without touching the data when the hardware (or build target) lacks
+// AVX2 — the caller then runs its scalar path.
+
+/// Vectorized forward negacyclic NTT (Harvey lazy form). Bit-identical to
+/// `NttTable::forward`'s scalar body.
+pub fn try_forward(tb: &NttTable, a: &mut [u64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            debug_assert_eq!(a.len(), tb.n);
+            // SAFETY: AVX2 presence checked above; slice bounds and value
+            // ranges per the module safety contract.
+            unsafe { avx2::forward(tb, a) };
+            return true;
+        }
+    }
+    let _ = (tb, a);
+    false
+}
+
+/// Vectorized inverse negacyclic NTT. Bit-identical to
+/// `NttTable::inverse`'s scalar body.
+pub fn try_inverse(tb: &NttTable, a: &mut [u64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            debug_assert_eq!(a.len(), tb.n);
+            // SAFETY: as in `try_forward`.
+            unsafe { avx2::inverse(tb, a) };
+            return true;
+        }
+    }
+    let _ = (tb, a);
+    false
+}
+
+/// Vectorized lazy Shoup multiply-accumulate:
+/// `dst[j] = (dst[j] + mul_mod_shoup_lazy(src[j], w[j], wp[j], q)) csub 2q`,
+/// with `dst` residues in [0, 2q) before and after. Bit-identical to the
+/// scalar loop in `Ciphertext::mul_pt_accumulate_lazy`.
+pub fn try_mul_acc_lazy(dst: &mut [u64], src: &[u64], w: &[u64], wp: &[u64], q: u64) -> bool {
+    assert_eq!(dst.len(), src.len());
+    assert_eq!(dst.len(), w.len());
+    assert_eq!(dst.len(), wp.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: AVX2 checked; equal slice lengths asserted above.
+            unsafe { avx2::mul_acc_lazy(dst, src, w, wp, q) };
+            return true;
+        }
+    }
+    let _ = (dst, src, w, wp, q);
+    false
+}
+
+/// Vectorized strict Shoup multiply by a broadcast constant, in place:
+/// `vals[j] = mul_mod_shoup(vals[j], w, wp, q)` (canonical result < q).
+/// Used for the per-prime CRT-lift terms in `decrypt_with`.
+pub fn try_mul_shoup_const(vals: &mut [u64], w: u64, wp: u64, q: u64) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: AVX2 checked; in-place loads/stores on one slice.
+            unsafe { avx2::mul_shoup_const(vals, w, wp, q) };
+            return true;
+        }
+    }
+    let _ = (vals, w, wp, q);
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The intrinsics bodies. Everything here upholds the module-level
+    //! safety contract; each `#[target_feature]` function is only called
+    //! from the `try_*` wrappers after the AVX2 check.
+
+    use std::arch::x86_64::*;
+
+    use crate::he::ntt::{mul_mod_shoup, mul_mod_shoup_lazy, NttTable};
+
+    /// High 64 bits of the 64×64 unsigned product, per lane
+    /// (`_mm256_mul_epu32` schoolbook: ll/lh/hl/hh + carry fold).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mulhi_u64(a: __m256i, b: __m256i) -> __m256i {
+        let lo32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+        let a_hi = _mm256_srli_epi64(a, 32);
+        let b_hi = _mm256_srli_epi64(b, 32);
+        let ll = _mm256_mul_epu32(a, b);
+        let lh = _mm256_mul_epu32(a, b_hi);
+        let hl = _mm256_mul_epu32(a_hi, b);
+        let hh = _mm256_mul_epu32(a_hi, b_hi);
+        // cross ≤ (2^32−1) + 2·(2^32−1) < 2^34: no lane overflow
+        let cross = _mm256_add_epi64(
+            _mm256_add_epi64(_mm256_srli_epi64(ll, 32), _mm256_and_si256(lh, lo32)),
+            _mm256_and_si256(hl, lo32),
+        );
+        _mm256_add_epi64(
+            _mm256_add_epi64(hh, _mm256_srli_epi64(lh, 32)),
+            _mm256_add_epi64(_mm256_srli_epi64(hl, 32), _mm256_srli_epi64(cross, 32)),
+        )
+    }
+
+    /// Low 64 bits of the 64×64 product, per lane (wrapping — matches
+    /// `u64::wrapping_mul`).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mullo_u64(a: __m256i, b: __m256i) -> __m256i {
+        let b_hi = _mm256_srli_epi64(b, 32);
+        let a_hi = _mm256_srli_epi64(a, 32);
+        let ll = _mm256_mul_epu32(a, b);
+        let lh = _mm256_mul_epu32(a, b_hi);
+        let hl = _mm256_mul_epu32(a_hi, b);
+        _mm256_add_epi64(ll, _mm256_slli_epi64(_mm256_add_epi64(lh, hl), 32))
+    }
+
+    /// Lane-wise `mul_mod_shoup_lazy(a, w, wp, q)`: result in [0, 2q),
+    /// wrapping arithmetic identical to the scalar helper.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_shoup_lazy_vec(a: __m256i, w: __m256i, wp: __m256i, q: __m256i) -> __m256i {
+        let hi = mulhi_u64(a, wp);
+        _mm256_sub_epi64(mullo_u64(a, w), mullo_u64(hi, q))
+    }
+
+    /// Lane-wise `if v >= bound { v - amount } else { v }` where
+    /// `bound = amount` and all values < 2^62 (signed compare is exact).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csub(v: __m256i, bound_m1: __m256i, amount: __m256i) -> __m256i {
+        let mask = _mm256_cmpgt_epi64(v, bound_m1);
+        _mm256_sub_epi64(v, _mm256_and_si256(mask, amount))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn forward(tb: &NttTable, a: &mut [u64]) {
+        let q = tb.q;
+        let two_q = 2 * q;
+        let qv = _mm256_set1_epi64x(q as i64);
+        let two_qv = _mm256_set1_epi64x(two_q as i64);
+        let two_q_m1 = _mm256_set1_epi64x((two_q - 1) as i64);
+        let q_m1 = _mm256_set1_epi64x((q - 1) as i64);
+        let mut t = tb.n;
+        let mut m = 1usize;
+        for _ in 0..tb.log_n {
+            t >>= 1;
+            if t >= 4 {
+                for i in 0..m {
+                    let w = tb.psi_rev[m + i];
+                    let wp = tb.psi_rev_shoup[m + i];
+                    let wv = _mm256_set1_epi64x(w as i64);
+                    let wpv = _mm256_set1_epi64x(wp as i64);
+                    let j1 = 2 * i * t;
+                    let mut j = j1;
+                    while j < j1 + t {
+                        let pu = a.as_mut_ptr().add(j) as *mut __m256i;
+                        let pv = a.as_mut_ptr().add(j + t) as *mut __m256i;
+                        let u0 = _mm256_loadu_si256(pu as *const __m256i);
+                        let lo = _mm256_loadu_si256(pv as *const __m256i);
+                        let u = csub(u0, two_q_m1, two_qv); // < 2q
+                        let v = mul_shoup_lazy_vec(lo, wv, wpv, qv); // < 2q
+                        _mm256_storeu_si256(pu, _mm256_add_epi64(u, v));
+                        _mm256_storeu_si256(
+                            pv,
+                            _mm256_sub_epi64(_mm256_add_epi64(u, two_qv), v),
+                        );
+                        j += 4;
+                    }
+                }
+            } else {
+                // last two levels (t < 4): scalar butterflies, same formulas
+                for i in 0..m {
+                    let w = tb.psi_rev[m + i];
+                    let wp = tb.psi_rev_shoup[m + i];
+                    let j1 = 2 * i * t;
+                    for j in j1..j1 + t {
+                        let mut u = a[j];
+                        if u >= two_q {
+                            u -= two_q;
+                        }
+                        let v = mul_mod_shoup_lazy(a[j + t], w, wp, q);
+                        a[j] = u + v;
+                        a[j + t] = u + two_q - v;
+                    }
+                }
+            }
+            m <<= 1;
+        }
+        // final reduction [0, 4q) → [0, q)
+        let mut j = 0usize;
+        while j + 4 <= a.len() {
+            let p = a.as_mut_ptr().add(j) as *mut __m256i;
+            let mut v = _mm256_loadu_si256(p as *const __m256i);
+            v = csub(v, two_q_m1, two_qv);
+            v = csub(v, q_m1, qv);
+            _mm256_storeu_si256(p, v);
+            j += 4;
+        }
+        while j < a.len() {
+            let mut v = a[j];
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            a[j] = v;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn inverse(tb: &NttTable, a: &mut [u64]) {
+        let q = tb.q;
+        let two_q = 2 * q;
+        let qv = _mm256_set1_epi64x(q as i64);
+        let two_qv = _mm256_set1_epi64x(two_q as i64);
+        let two_q_m1 = _mm256_set1_epi64x((two_q - 1) as i64);
+        let q_m1 = _mm256_set1_epi64x((q - 1) as i64);
+        let mut t = 1usize;
+        let mut m = tb.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            if t >= 4 {
+                for i in 0..h {
+                    let w = tb.ipsi_rev[h + i];
+                    let wp = tb.ipsi_rev_shoup[h + i];
+                    let wv = _mm256_set1_epi64x(w as i64);
+                    let wpv = _mm256_set1_epi64x(wp as i64);
+                    let mut j = j1;
+                    while j < j1 + t {
+                        let pu = a.as_mut_ptr().add(j) as *mut __m256i;
+                        let pv = a.as_mut_ptr().add(j + t) as *mut __m256i;
+                        let u = _mm256_loadu_si256(pu as *const __m256i); // < 2q
+                        let v = _mm256_loadu_si256(pv as *const __m256i); // < 2q
+                        let s = csub(_mm256_add_epi64(u, v), two_q_m1, two_qv);
+                        _mm256_storeu_si256(pu, s);
+                        // u − v + 2q < 4q; lazy twiddle multiply → < 2q
+                        let d = _mm256_sub_epi64(_mm256_add_epi64(u, two_qv), v);
+                        _mm256_storeu_si256(pv, mul_shoup_lazy_vec(d, wv, wpv, qv));
+                        j += 4;
+                    }
+                    j1 += 2 * t;
+                }
+            } else {
+                // first two levels (t < 4): scalar butterflies, same formulas
+                for i in 0..h {
+                    let w = tb.ipsi_rev[h + i];
+                    let wp = tb.ipsi_rev_shoup[h + i];
+                    for j in j1..j1 + t {
+                        let u = a[j];
+                        let v = a[j + t];
+                        let mut s = u + v;
+                        if s >= two_q {
+                            s -= two_q;
+                        }
+                        a[j] = s;
+                        a[j + t] = mul_mod_shoup_lazy(u + two_q - v, w, wp, q);
+                    }
+                    j1 += 2 * t;
+                }
+            }
+            t <<= 1;
+            m = h;
+        }
+        // final strict n⁻¹ Shoup multiply → canonical [0, q)
+        let niv = _mm256_set1_epi64x(tb.n_inv as i64);
+        let nisv = _mm256_set1_epi64x(tb.n_inv_shoup as i64);
+        let mut j = 0usize;
+        while j + 4 <= a.len() {
+            let p = a.as_mut_ptr().add(j) as *mut __m256i;
+            let v = _mm256_loadu_si256(p as *const __m256i);
+            let r = csub(mul_shoup_lazy_vec(v, niv, nisv, qv), q_m1, qv);
+            _mm256_storeu_si256(p, r);
+            j += 4;
+        }
+        while j < a.len() {
+            a[j] = mul_mod_shoup(a[j], tb.n_inv, tb.n_inv_shoup, q);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_acc_lazy(dst: &mut [u64], src: &[u64], w: &[u64], wp: &[u64], q: u64) {
+        let two_q = 2 * q;
+        let qv = _mm256_set1_epi64x(q as i64);
+        let two_qv = _mm256_set1_epi64x(two_q as i64);
+        let two_q_m1 = _mm256_set1_epi64x((two_q - 1) as i64);
+        let n = dst.len();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let ps = src.as_ptr().add(j) as *const __m256i;
+            let pw = w.as_ptr().add(j) as *const __m256i;
+            let pp = wp.as_ptr().add(j) as *const __m256i;
+            let pd = dst.as_mut_ptr().add(j) as *mut __m256i;
+            let p = mul_shoup_lazy_vec(
+                _mm256_loadu_si256(ps),
+                _mm256_loadu_si256(pw),
+                _mm256_loadu_si256(pp),
+                qv,
+            ); // < 2q
+            let d = _mm256_loadu_si256(pd as *const __m256i); // < 2q
+            let s = csub(_mm256_add_epi64(d, p), two_q_m1, two_qv);
+            _mm256_storeu_si256(pd, s);
+            j += 4;
+        }
+        while j < n {
+            let p = mul_mod_shoup_lazy(src[j], w[j], wp[j], q);
+            let s = dst[j] + p;
+            dst[j] = if s >= two_q { s - two_q } else { s };
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_shoup_const(vals: &mut [u64], w: u64, wp: u64, q: u64) {
+        let qv = _mm256_set1_epi64x(q as i64);
+        let q_m1 = _mm256_set1_epi64x((q - 1) as i64);
+        let wv = _mm256_set1_epi64x(w as i64);
+        let wpv = _mm256_set1_epi64x(wp as i64);
+        let n = vals.len();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let p = vals.as_mut_ptr().add(j) as *mut __m256i;
+            let v = _mm256_loadu_si256(p as *const __m256i);
+            let r = csub(mul_shoup_lazy_vec(v, wv, wpv, qv), q_m1, qv);
+            _mm256_storeu_si256(p, r);
+            j += 4;
+        }
+        while j < n {
+            vals[j] = mul_mod_shoup(vals[j], w, wp, q);
+            j += 1;
+        }
+    }
+}

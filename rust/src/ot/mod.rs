@@ -23,6 +23,22 @@
 //! all PRG/transpose/hash work. Both parties fill and drain in lockstep, so
 //! the pool-vs-inline branch always agrees; an empty or undersized pool
 //! falls back to the inline extension unchanged (the pre-split wire format).
+//!
+//! # Vectorized kernels
+//!
+//! The 64×64 bit-matrix transpose at the heart of the IKNP extension
+//! ([`transpose64`]) has an AVX2 implementation in [`simd`], dispatched at
+//! runtime (`is_x86_feature_detected!("avx2")`, overridable via
+//! `CIPHERPRUNE_SIMD` / `EngineConfig::simd` — see `crate::he::simd`). The
+//! scalar network is kept verbatim as [`transpose64_scalar`]; both paths
+//! run the same XOR-swap network and emit identical bits, so OT rows and
+//! transcripts do not depend on the dispatch decision. The AES-PRG
+//! expansion feeding it is already hardware-accelerated (AES-NI via the
+//! `aes` crate) and pipelined by the bulk `fill_u64` path. `unsafe` is
+//! confined to [`simd`] (with `crate::he::simd`) under a documented safety
+//! contract, enforced by mpc-lint's `unsafe` rule.
+
+pub mod simd;
 
 use crate::gates::preproc::RotPools;
 use crate::net::Chan;
@@ -38,7 +54,19 @@ pub const KAPPA: usize = 128;
 const PAR_MIN_OT: usize = 8192;
 
 /// Transpose a 64×64 bit matrix held as 64 u64 rows (Hacker's Delight 7-3).
+///
+/// Dispatches to the AVX2 kernel ([`simd::try_transpose64`]) when
+/// [`crate::he::simd::enabled`]; the scalar network below is the portable
+/// fallback and bit-identity reference — both produce the same bits.
 pub fn transpose64(a: &mut [u64; 64]) {
+    if crate::he::simd::enabled() && simd::try_transpose64(a) {
+        return;
+    }
+    transpose64_scalar(a);
+}
+
+/// The scalar transpose network (kept verbatim; see [`transpose64`]).
+pub fn transpose64_scalar(a: &mut [u64; 64]) {
     let mut j = 32;
     let mut m: u64 = 0x0000_0000_FFFF_FFFF;
     while j != 0 {

@@ -1,0 +1,125 @@
+//! Vectorized (AVX2) 64×64 bit-matrix transpose for the IKNP extension,
+//! bit-identical to `ot::transpose64_scalar`.
+//!
+//! The scalar code is the classic recursive block-swap network (Hacker's
+//! Delight 7-3): for `j ∈ {32, 16, 8, 4, 2, 1}` it XOR-swaps the
+//! off-diagonal `j×j` sub-blocks using `t = (a[k] ^ (a[k+j] >> j)) & m`.
+//! Within one level every `(k, k+j)` pair is disjoint, so the pairs can be
+//! processed in any order — the AVX2 version computes four `t` values per
+//! instruction and produces the exact same bits:
+//!
+//! - `j ≥ 4`: the `k` indices (bit `j` clear) come in runs of `j ≥ 4`
+//!   consecutive rows, so a 4-lane load of `a[k..k+4]` pairs with an
+//!   aligned load of `a[k+j..k+j+4]` directly.
+//! - `j = 2`: inside an aligned 4-row block, lanes 0–1 are the `k` roles
+//!   and lanes 2–3 their partners. A cross-lane permute
+//!   (`_mm256_permute4x64_epi64` with `[2,3,0,1]`) brings the partners
+//!   down, `t` is masked to the `k` lanes, and a second permute sends
+//!   `t << 2` back up — one register, no second load.
+//! - `j = 1`: same scheme with lanes 0/2 as `k` roles and permute
+//!   `[1,0,3,2]`.
+//!
+//! # Safety
+//!
+//! This module (with `he::simd`) is the only place in the crate allowed to
+//! contain `unsafe`; `mpc-lint` enforces the confinement. Contract: the
+//! AVX2 body only runs behind `is_x86_feature_detected!("avx2")`
+//! ([`crate::he::simd::avx2_available`]); all loads/stores are `loadu`/
+//! `storeu` on in-bounds ranges of the fixed `[u64; 64]` (indices ≤ 60+4);
+//! within a level the loaded ranges never alias a range stored earlier in
+//! that level's loop for a different pair.
+#![allow(unsafe_code)]
+
+/// Run the AVX2 transpose in place and return `true`, or return `false`
+/// untouched when the CPU (or build target) lacks AVX2. Output is
+/// bit-identical to `transpose64_scalar`.
+pub fn try_transpose64(a: &mut [u64; 64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::he::simd::avx2_available() {
+            // SAFETY: AVX2 presence checked above; bounds per module contract.
+            unsafe { avx2::transpose64(a) };
+            return true;
+        }
+    }
+    let _ = a;
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn transpose64(a: &mut [u64; 64]) {
+        // j ≥ 4: k-runs are ≥ 4 consecutive rows — direct paired loads.
+        let mut j = 32usize;
+        let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+        while j >= 4 {
+            let mv = _mm256_set1_epi64x(m as i64);
+            // runtime shift count → the srl/sll (vector-count) forms
+            let jc = _mm_cvtsi64_si128(j as i64);
+            let mut k = 0usize;
+            while k < 64 {
+                let mut off = 0usize;
+                while off < j {
+                    let pk = a.as_mut_ptr().add(k + off) as *mut __m256i;
+                    let pj = a.as_mut_ptr().add(k + off + j) as *mut __m256i;
+                    let vk = _mm256_loadu_si256(pk as *const __m256i);
+                    let vj = _mm256_loadu_si256(pj as *const __m256i);
+                    let t = _mm256_and_si256(
+                        _mm256_xor_si256(vk, _mm256_srl_epi64(vj, jc)),
+                        mv,
+                    );
+                    _mm256_storeu_si256(pk, _mm256_xor_si256(vk, t));
+                    _mm256_storeu_si256(pj, _mm256_xor_si256(vj, _mm256_sll_epi64(t, jc)));
+                    off += 4;
+                }
+                k += 2 * j;
+            }
+            j >>= 1;
+            m ^= m << j;
+        }
+        // j = 2: lanes {0,1} are k-roles, partners in lanes {2,3}.
+        {
+            let mv = _mm256_set1_epi64x(m as i64); // 0x3333…
+            let lane01 = _mm256_set_epi64x(0, 0, -1, -1);
+            let mut k = 0usize;
+            while k < 64 {
+                let p = a.as_mut_ptr().add(k) as *mut __m256i;
+                let v = _mm256_loadu_si256(p as *const __m256i);
+                let part = _mm256_permute4x64_epi64(v, 0x4E); // [2,3,0,1]
+                let tfull = _mm256_and_si256(
+                    _mm256_xor_si256(v, _mm256_srli_epi64(part, 2)),
+                    mv,
+                );
+                let tlow = _mm256_and_si256(tfull, lane01);
+                let tswap = _mm256_permute4x64_epi64(tlow, 0x4E);
+                let upd = _mm256_or_si256(tlow, _mm256_slli_epi64(tswap, 2));
+                _mm256_storeu_si256(p, _mm256_xor_si256(v, upd));
+                k += 4;
+            }
+            m ^= m << 1;
+        }
+        // j = 1: lanes {0,2} are k-roles, partners in lanes {1,3}.
+        {
+            let mv = _mm256_set1_epi64x(m as i64); // 0x5555…
+            let lane02 = _mm256_set_epi64x(0, -1, 0, -1);
+            let mut k = 0usize;
+            while k < 64 {
+                let p = a.as_mut_ptr().add(k) as *mut __m256i;
+                let v = _mm256_loadu_si256(p as *const __m256i);
+                let part = _mm256_permute4x64_epi64(v, 0xB1); // [1,0,3,2]
+                let tfull = _mm256_and_si256(
+                    _mm256_xor_si256(v, _mm256_srli_epi64(part, 1)),
+                    mv,
+                );
+                let tlow = _mm256_and_si256(tfull, lane02);
+                let tswap = _mm256_permute4x64_epi64(tlow, 0xB1);
+                let upd = _mm256_or_si256(tlow, _mm256_slli_epi64(tswap, 1));
+                _mm256_storeu_si256(p, _mm256_xor_si256(v, upd));
+                k += 4;
+            }
+        }
+    }
+}

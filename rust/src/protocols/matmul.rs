@@ -15,9 +15,9 @@
 
 use super::Engine2P;
 use crate::fixed::RingMat;
-use crate::he::bfv::{decrypt, decrypt_with, encrypt, Ciphertext};
+use crate::he::bfv::{decrypt_with, decrypt_with_scratch, encrypt, Ciphertext, RnsPoly};
 use crate::he::{MatmulPlan, PtNtt};
-use crate::util::Xoshiro256;
+use crate::util::{WorkerPool, Xoshiro256};
 
 /// Cap on the row-tile dimension: bounds the transient NTT-cached weight-tile
 /// memory (tile count = k·m·nw/N) while staying close to the comm optimum.
@@ -128,9 +128,15 @@ fn recv_and_decrypt(e: &mut Engine2P, plan: &MatmulPlan) -> RingMat {
     let (he, sk) = (&e.he, &e.sk);
     let chunks: Vec<&[u64]> = wire.chunks_exact(per).collect();
     let coeffs: Vec<Vec<u64>> = if n_out > 1 {
-        e.pool.sized_for(n_out, 1).par_map(n_out, |t| {
-            decrypt(he, sk, &Ciphertext::from_wire(he, chunks[t]))
-        })
+        // one c0+c1·s scratch per worker, reused across its ciphertexts
+        e.pool.sized_for(n_out, 1).par_map_with(
+            n_out,
+            || RnsPoly::zero(he, true),
+            |scratch, t| {
+                let ct = Ciphertext::from_wire(he, chunks[t]);
+                decrypt_with_scratch(he, sk, &ct, WorkerPool::single(), scratch)
+            },
+        )
     } else {
         vec![decrypt_with(he, sk, &Ciphertext::from_wire(he, chunks[0]), e.pool)]
     };

@@ -1,0 +1,285 @@
+//! Scalar ≡ SIMD bit-identity: the AVX2 kernels in `he::simd` / `ot::simd`
+//! must produce byte-for-byte the same outputs as the scalar reference code
+//! they replace — same lazy-reduction bounds, same final reductions — so
+//! ciphertexts, OT rows, transcripts, and digests never depend on the
+//! dispatch decision.
+//!
+//! The kernel-level tests force both paths explicitly through the
+//! `*_with(…, use_simd)` twins and `try_*` entry points, which gate on
+//! hardware support only — they stay meaningful even under the
+//! `CIPHERPRUNE_SIMD=off` CI job (the env var controls the *default*
+//! dispatch, not a forced path). On a host without AVX2 the `try_*` calls
+//! return `false` and the identity tests pass vacuously (the portable
+//! fallback IS the reference). Inputs include adversarial vectors at the
+//! lazy-reduction boundaries (q−1, 2q−1, 4q−1 pre-reduction) — the values
+//! where an off-by-one in the vectorized conditional subtractions or the
+//! `mul_epu32` carry folding would show.
+//!
+//! The one test that toggles the process-wide dispatch switch
+//! (`session_digest_pinned_across_dispatch`) is safe to run concurrently
+//! with the rest of the binary precisely because of the property under
+//! test: both settings compute identical bits.
+
+use std::sync::Arc;
+
+use cipherprune::coordinator::{EngineConfig, EngineKind, PreparedModel, Session};
+use cipherprune::he::bfv::{
+    decrypt, decrypt_with_scratch, encrypt, BfvContext, Ciphertext, Ctx, PtNtt, RnsPoly,
+    SecretKey,
+};
+use cipherprune::he::ntt::{mul_mod, mul_mod_shoup, mul_mod_shoup_lazy, shoup, NttTable};
+use cipherprune::he::params::{NPRIMES, PRIMES, PSI_16384};
+use cipherprune::he::simd;
+use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::ot::{simd as ot_simd, transpose64_scalar};
+use cipherprune::util::{WorkerPool, Xoshiro256};
+
+/// NTT table for prime `i`, ring degree `n` (primitive 2n-th root derived
+/// from the 16384-th root by squaring).
+fn table(i: usize, n: usize) -> NttTable {
+    let q = PRIMES[i];
+    let mut psi = PSI_16384[i];
+    let mut order = 16384usize;
+    while order > 2 * n {
+        psi = mul_mod(psi, psi, q);
+        order /= 2;
+    }
+    NttTable::new(q, n, psi)
+}
+
+/// Adversarial forward-NTT input: boundary values of the lazy [0, 4q)
+/// domain up front, the rest uniform in [0, 4q).
+fn adversarial_4q(q: u64, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut a: Vec<u64> = (0..n).map(|_| rng.below(4 * q)).collect();
+    a[0] = q - 1;
+    a[1] = 2 * q - 1;
+    a[2] = 4 * q - 1;
+    a[3] = 0;
+    a
+}
+
+#[test]
+fn forward_ntt_identity_all_primes() {
+    if !simd::avx2_available() {
+        return; // scalar is the only path — nothing to compare
+    }
+    for i in 0..NPRIMES {
+        let tb = table(i, 256);
+        let q = tb.q;
+        for seed in 0..4u64 {
+            // canonical inputs (< q) and lazy-domain inputs (< 4q)
+            let mut rng = Xoshiro256::seed_from_u64(100 + seed);
+            let inputs = [
+                (0..256).map(|_| rng.below(q)).collect::<Vec<u64>>(),
+                adversarial_4q(q, 256, 200 + seed),
+            ];
+            for a0 in inputs {
+                let mut scalar = a0.clone();
+                let mut vector = a0.clone();
+                tb.forward_with(&mut scalar, false);
+                assert!(simd::try_forward(&tb, &mut vector));
+                assert_eq!(scalar, vector, "prime {i} seed {seed}");
+                assert!(scalar.iter().all(|&v| v < q), "not canonical");
+            }
+        }
+    }
+}
+
+#[test]
+fn inverse_ntt_identity_all_primes() {
+    if !simd::avx2_available() {
+        return;
+    }
+    for i in 0..NPRIMES {
+        let tb = table(i, 256);
+        let q = tb.q;
+        for seed in 0..4u64 {
+            // inverse accepts the lazy [0, 2q) domain; pin its boundaries
+            let mut rng = Xoshiro256::seed_from_u64(300 + seed);
+            let mut a0: Vec<u64> = (0..256).map(|_| rng.below(2 * q)).collect();
+            a0[0] = q - 1;
+            a0[1] = 2 * q - 1;
+            a0[2] = 0;
+            let mut scalar = a0.clone();
+            let mut vector = a0;
+            tb.inverse_with(&mut scalar, false);
+            assert!(simd::try_inverse(&tb, &mut vector));
+            assert_eq!(scalar, vector, "prime {i} seed {seed}");
+            assert!(scalar.iter().all(|&v| v < q), "not canonical");
+        }
+    }
+}
+
+#[test]
+fn ntt_roundtrip_under_forced_simd() {
+    let tb = table(0, 512);
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let orig: Vec<u64> = (0..512).map(|_| rng.below(tb.q)).collect();
+    let mut a = orig.clone();
+    // forced-simd entry points fall back to scalar off-AVX2 hosts, so the
+    // roundtrip contract holds everywhere
+    tb.forward_with(&mut a, true);
+    assert_ne!(a, orig);
+    tb.inverse_with(&mut a, true);
+    assert_eq!(a, orig);
+}
+
+#[test]
+fn mul_acc_lazy_identity_with_boundaries() {
+    if !simd::avx2_available() {
+        return;
+    }
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        let two_q = 2 * q;
+        let n = 259; // deliberately not a multiple of 4: exercises the tail
+        let mut rng = Xoshiro256::seed_from_u64(400 + i as u64);
+        let mut dst0: Vec<u64> = (0..n).map(|_| rng.below(two_q)).collect();
+        let src: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        let mut w: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        // boundary lane values: dst at the top of [0, 2q), operands at q−1
+        dst0[0] = two_q - 1;
+        dst0[1] = two_q - 1;
+        w[1] = q - 1;
+        let wp: Vec<u64> = w.iter().map(|&x| shoup(x, q)).collect();
+        let mut vector = dst0.clone();
+        assert!(simd::try_mul_acc_lazy(&mut vector, &src, &w, &wp, q));
+        // scalar reference: the exact mul_pt_accumulate_lazy formula
+        let mut scalar = dst0;
+        for j in 0..n {
+            let p = mul_mod_shoup_lazy(src[j], w[j], wp[j], q);
+            let s = scalar[j] + p;
+            scalar[j] = if s >= two_q { s - two_q } else { s };
+        }
+        assert_eq!(scalar, vector, "prime {i}");
+        assert!(vector.iter().all(|&v| v < two_q), "lazy bound violated");
+    }
+}
+
+#[test]
+fn mul_shoup_const_identity_matches_mul_mod() {
+    if !simd::avx2_available() {
+        return;
+    }
+    for i in 0..NPRIMES {
+        let q = PRIMES[i];
+        let n = 261; // tail lanes again
+        let mut rng = Xoshiro256::seed_from_u64(500 + i as u64);
+        let mut vals: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        vals[0] = q - 1;
+        vals[1] = 0;
+        let y = rng.below(q);
+        let yp = shoup(y, q);
+        let expect: Vec<u64> = vals.iter().map(|&x| mul_mod(x, y, q)).collect();
+        let strict: Vec<u64> =
+            vals.iter().map(|&x| mul_mod_shoup(x, y, yp, q)).collect();
+        assert_eq!(expect, strict, "Shoup ≠ plain mul_mod (prime {i})");
+        assert!(simd::try_mul_shoup_const(&mut vals, y, yp, q));
+        assert_eq!(vals, expect, "prime {i}");
+    }
+}
+
+#[test]
+fn ciphertext_ops_identical_under_both_dispatches() {
+    // end-to-end HE identity through the real entry points, both dispatch
+    // decisions forced per call (no global toggles): encode, a lazy
+    // accumulate chain, and decrypt
+    fn setup(n: usize) -> (Ctx, SecretKey, Xoshiro256) {
+        let ctx = BfvContext::new(n);
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let sk = SecretKey::gen(&ctx, &mut rng);
+        (ctx, sk, rng)
+    }
+    let (ctx, sk, mut rng) = setup(256);
+    let mut acc_scalar = Ciphertext::zero_like(&ctx);
+    let mut acc_simd = Ciphertext::zero_like(&ctx);
+    for step in 0..3 {
+        let m: Vec<u64> = (0..ctx.n).map(|_| rng.next_u64()).collect();
+        let mut w = vec![0u64; ctx.n];
+        for wi in w.iter_mut().take(8) {
+            *wi = ((rng.next_u64() % 16384) as i64 - 8192) as u64;
+        }
+        w[step] = w[step].wrapping_add(1);
+        let ct = encrypt(&ctx, &sk, &m, &mut rng);
+        let pt = PtNtt::encode(&ctx, &w);
+        acc_scalar.mul_pt_accumulate_lazy_with(&ct, &pt, false);
+        acc_simd.mul_pt_accumulate_lazy_with(&ct, &pt, true);
+    }
+    acc_scalar.normalize();
+    acc_simd.normalize();
+    assert_eq!(acc_scalar.c0, acc_simd.c0, "c0 residues");
+    assert_eq!(acc_scalar.c1, acc_simd.c1, "c1 residues");
+    // decrypt honors the global switch inside decrypt_with_scratch; force
+    // both settings and compare (restoring auto after)
+    simd::set_enabled(false);
+    let mut scratch = RnsPoly::zero(&ctx, true);
+    let plain = decrypt_with_scratch(&ctx, &sk, &acc_scalar, WorkerPool::single(), &mut scratch);
+    simd::set_enabled(true);
+    let vec_path = decrypt(&ctx, &sk, &acc_simd);
+    simd::set_auto();
+    assert_eq!(plain, vec_path, "decrypted coefficients");
+}
+
+#[test]
+fn transpose64_identity_and_roundtrip() {
+    let mut rng = Xoshiro256::seed_from_u64(600);
+    for trial in 0..8 {
+        let mut a = [0u64; 64];
+        for v in a.iter_mut() {
+            *v = rng.next_u64();
+        }
+        // boundary patterns on the first trials
+        if trial == 0 {
+            a = [u64::MAX; 64];
+        } else if trial == 1 {
+            a = [0u64; 64];
+            a[0] = 1; // single bit walks to (63, 63) under the row-reversal map
+        }
+        let orig = a;
+        let mut scalar = a;
+        transpose64_scalar(&mut scalar);
+        if ot_simd::try_transpose64(&mut a) {
+            assert_eq!(scalar, a, "trial {trial}");
+            // transpose is an involution under the (r,c)→(63−c,63−r) map
+            assert!(ot_simd::try_transpose64(&mut a));
+            assert_eq!(a, orig, "roundtrip, trial {trial}");
+        } else {
+            // no AVX2: the dispatching entry point must still be scalar
+            let mut b = orig;
+            cipherprune::ot::transpose64(&mut b);
+            assert_eq!(scalar, b, "trial {trial}");
+        }
+    }
+}
+
+/// The whole stack, both dispatch decisions: a full `Session::infer` with
+/// SIMD forced off vs forced on must produce identical logits AND an
+/// identical wire-content transcript digest. This is the PR's headline
+/// contract — vectorization is invisible to the protocol. (On a non-AVX2
+/// host `.simd(true)` clamps to scalar and the comparison is trivially
+/// true, which is exactly the portable claim.)
+#[test]
+fn session_digest_pinned_across_dispatch() {
+    let cfg = ModelConfig::tiny();
+    let w = Arc::new(ModelWeights::salient(&cfg, 42));
+    let ids = Workload::qnli_like(&cfg, 8).batch(1, 17)[0].ids.clone();
+
+    let mut baseline: Option<(Vec<f64>, u64, [u64; 2])> = None;
+    for &on in &[false, true] {
+        let ec = EngineConfig::for_tests(EngineKind::CipherPrune).simd(on);
+        let model = Arc::new(PreparedModel::prepare(w.clone()));
+        let mut session = Session::start(model, ec).expect("session start");
+        let r = session.infer(&ids).expect("infer");
+        let cur = (r.logits.clone(), r.total_stats().bytes, session.transcript_digest());
+        match &baseline {
+            None => baseline = Some(cur),
+            Some(b) => {
+                assert_eq!(b.0, cur.0, "logits differ with simd={on}");
+                assert_eq!(b.1, cur.1, "request bytes differ with simd={on}");
+                assert_eq!(b.2, cur.2, "transcript digest differs with simd={on}");
+            }
+        }
+    }
+    simd::set_auto();
+}

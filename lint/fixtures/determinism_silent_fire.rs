@@ -1,0 +1,13 @@
+// must-FIRE: a hash container in the silent-OT extension path (linted as
+// ot/silent.rs). Noisy-row bookkeeping iterated in hash order would make
+// the correction stream — and with it the transcript digest — differ run
+// to run, breaking spill/dealer bit-identity.
+use std::collections::HashMap;
+
+pub fn noisy_rows(idx: &[u32]) -> Vec<(u32, u64)> {
+    let mut m: HashMap<u32, u64> = HashMap::new();
+    for &i in idx {
+        *m.entry(i / 256).or_insert(0) += 1;
+    }
+    m.into_iter().map(|(k, v)| (k, v)).collect()
+}

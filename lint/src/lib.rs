@@ -4,8 +4,10 @@
 //! (see README "Machine-checked invariants"):
 //!
 //! - **determinism**: no wall clocks, ambient RNG, or hash-order iteration
-//!   in transcript-affecting modules (`protocols/`, `gates/`, `ot/`, `he/`,
-//!   `coordinator/pipeline.rs`; hash-order also `coordinator/router.rs`) —
+//!   in transcript-affecting modules (`protocols/`, `gates/`, `ot/`, `he/`
+//!   — including the silent-OT extension `ot/silent.rs` — plus
+//!   `coordinator/pipeline.rs` and the trusted-dealer streams in
+//!   `coordinator/dealer.rs`; hash-order also `coordinator/router.rs`) —
 //!   logits and wire digests must be bit-identical run to run.
 //! - **channel**: role-branched `if is_p0() { … } else { … }` blocks must
 //!   mirror their send/recv sequences — the coalescing-liveness argument,
@@ -60,7 +62,10 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     let markers = marker::collect(&lexed.comments);
 
     let mut raw: Vec<rules::RawFinding> = Vec::new();
-    if in_scope(rel, TRANSCRIPT_SCOPE) || rel == "coordinator/pipeline.rs" {
+    if in_scope(rel, TRANSCRIPT_SCOPE)
+        || rel == "coordinator/pipeline.rs"
+        || rel == "coordinator/dealer.rs"
+    {
         rules::determinism_time_rng(&lexed.toks, &tregions, &mut raw);
         rules::determinism_hash_iter(&lexed.toks, &tregions, &mut raw);
     } else if rel == "coordinator/router.rs" {

@@ -32,6 +32,21 @@ fn determinism_fires_on_clock_rng_and_hash() {
 }
 
 #[test]
+fn determinism_fires_on_hash_container_in_silent_ot() {
+    // the silent-OT extension sits on the transcript-affecting `ot/` scope:
+    // hash-order iteration there would scramble the noisy-row correction
+    // stream and break spill/dealer bit-identity
+    // three HashMap tokens: the use declaration, the binding type, ::new()
+    let fs = lint_fixture("ot/silent.rs", "determinism_silent_fire.rs");
+    assert_eq!(count(&fs, Rule::Determinism, false), 3, "{:#?}", fs);
+    assert!(
+        fs.iter().any(|f| f.msg.contains("HashMap")),
+        "expected a HashMap hash-order finding: {:#?}",
+        fs
+    );
+}
+
+#[test]
 fn determinism_passes_on_btreemap() {
     let fs = lint_fixture("protocols/fixture.rs", "determinism_pass.rs");
     assert_eq!(unallowed(&fs), 0, "{:#?}", fs);

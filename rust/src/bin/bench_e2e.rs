@@ -6,15 +6,20 @@
 //! PR-5 **offline/online phase split**: the same request on a session whose
 //! correlated-randomness pools were preprocessed vs one generating
 //! everything on demand, asserting bit-identical logits and recording
-//! `offline_wall_s` / `online_wall_s` / the on-demand baseline. Writes
-//! `BENCH_pr5.json` so successive PRs can track online-phase wall time.
+//! `offline_wall_s` / `online_wall_s` / the on-demand baseline, and the
+//! PR-10 **offline-bandwidth A/B**: identical ROT pool fills under the
+//! IKNP and silent extension backends, recording the exact offline bytes
+//! each put on the party link and asserting the ≥8× silent reduction
+//! in-bench (the smoke sweep IS the offline-bytes tripwire). Writes
+//! `BENCH_pr10.json` so successive PRs can track the trajectory.
 //!
 //! Headline records:
 //! - single-thread vs multi-thread `Session::infer` on the longest
 //!   configured sequence (the PR-2 worker-pool record),
 //! - B = 1 vs B = 4 fused amortization on the CipherPrune engine (PR-3),
 //! - coalesced vs uncoalesced total flights (PR-4 transport-layer record),
-//! - preprocessed online wall vs on-demand wall (PR-5 phase-split record).
+//! - preprocessed online wall vs on-demand wall (PR-5 phase-split record),
+//! - IKNP vs silent offline bytes for one ROT demand (PR-10 record).
 //!
 //! Usage:
 //!   cargo run --release --bin bench_e2e                        # full sweep
@@ -51,12 +56,13 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use cipherprune::coordinator::{
-    BatchPolicy, BlockRun, EngineConfig, EngineKind, PreparedModel, Session,
+    BatchPolicy, BlockRun, EngineConfig, EngineKind, PreparedModel, PreprocDemand, Session,
 };
 use cipherprune::net::TransportSpec;
 use cipherprune::nn::{ModelConfig, ModelWeights, Workload};
+use cipherprune::ot::ExtMode;
 use cipherprune::serving::{ServeConfig, Server, ServingClient, WireRequest, WireResponse};
-use cipherprune::util::bench::fmt_duration;
+use cipherprune::util::bench::{fmt_bytes, fmt_duration};
 use cipherprune::util::{Json, WorkerPool};
 
 fn digest_hex(d: [u64; 2]) -> String {
@@ -255,6 +261,85 @@ fn measure_phase_split(
         online_bytes_preproc: pp_bytes,
         online_bytes_ondemand: od_bytes,
     }
+}
+
+/// PR-10 offline-bandwidth record: fill an identical ROT demand under each
+/// extension backend and record the exact bytes the party link carried in
+/// the `preproc` phase. Wire counts are host-independent, so the tripwire
+/// pins them — and the ≥8× silent-vs-IKNP reduction is asserted right
+/// here, so the CI smoke sweep trips on an offline-bandwidth regression
+/// even with no baseline file available.
+struct OfflineRecord {
+    ext: &'static str,
+    rots_per_dir: u64,
+    offline_bytes: u64,
+    offline_wall_s: f64,
+}
+
+impl OfflineRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ext", self.ext.into()),
+            ("rots_per_dir", self.rots_per_dir.into()),
+            ("offline_bytes", self.offline_bytes.into()),
+            ("offline_wall_s", self.offline_wall_s.into()),
+        ])
+    }
+}
+
+fn measure_offline(
+    model: &Arc<PreparedModel>,
+    he_n: usize,
+    rots_per_dir: u64,
+    transport: &TransportSpec,
+) -> Vec<OfflineRecord> {
+    let demand = PreprocDemand {
+        triples: 0,
+        rot_p0s: rots_per_dir,
+        rot_p1s: rots_per_dir,
+        pad_words: 0,
+    };
+    let records: Vec<OfflineRecord> = ExtMode::ALL
+        .into_iter()
+        .map(|ext| {
+            let ec = EngineConfig::new(EngineKind::CipherPrune)
+                .he_n(he_n)
+                .transport(transport.clone())
+                .ext_mode(ext);
+            let mut s = Session::start(model.clone(), ec).expect("session setup");
+            s.preprocess_with(&demand).expect("offline fill");
+            let offline_bytes = s
+                .phase_stats()
+                .iter()
+                .filter(|(name, _)| name.starts_with("preproc"))
+                .map(|(_, st)| st.bytes)
+                .sum();
+            let rec = OfflineRecord {
+                ext: ext.name(),
+                rots_per_dir,
+                offline_bytes,
+                offline_wall_s: s.offline_wall_s(),
+            };
+            println!(
+                "  ext {:<8} {:>8} ROTs/dir  offline {:>12}  in {}",
+                rec.ext,
+                rots_per_dir,
+                fmt_bytes(rec.offline_bytes as f64),
+                fmt_duration(rec.offline_wall_s),
+            );
+            rec
+        })
+        .collect();
+    let by = |name: &str| {
+        records.iter().find(|r| r.ext == name).map(|r| r.offline_bytes).unwrap_or(0)
+    };
+    let (iknp, silent) = (by("iknp"), by("silent"));
+    assert!(
+        silent > 0 && silent * 8 <= iknp,
+        "offline-bytes tripwire: silent fill must carry ≤ 1/8 of IKNP's bytes \
+         (silent {silent} vs iknp {iknp})"
+    );
+    records
 }
 
 /// One request with coalescing on vs off: identical bytes/msgs/digests, and
@@ -491,7 +576,7 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_pr5.json".to_string());
+        .unwrap_or_else(|| "BENCH_pr10.json".to_string());
     let check_against = args
         .iter()
         .position(|a| a == "--check-against")
@@ -607,6 +692,12 @@ fn main() {
         &transport,
     );
 
+    // offline-bandwidth A/B (the PR-10 record; the ≥8× assertion inside is
+    // the CI smoke tripwire for offline bytes)
+    println!("\noffline ROT fill (IKNP vs silent extension):");
+    let rots_per_dir: u64 = if smoke { 1 << 14 } else { 1 << 16 };
+    let offline = measure_offline(&model, he_n, rots_per_dir, &transport);
+
     // headline 1: single-thread vs host pool on the longest CipherPrune config
     let top_seq = *seqs.iter().max().unwrap();
     let pick = |threads: usize| {
@@ -665,8 +756,21 @@ fn main() {
         fmt_duration(phase_split.offline_wall_s),
     );
 
+    // headline 5: offline bytes per extension mode
+    let off = |name: &str| {
+        offline.iter().find(|r| r.ext == name).map(|r| r.offline_bytes).unwrap_or(0)
+    };
+    let (off_iknp, off_silent) = (off("iknp"), off("silent"));
+    let off_ratio =
+        if off_silent > 0 { off_iknp as f64 / off_silent as f64 } else { 1.0 };
+    println!(
+        "offline bytes for {rots_per_dir} ROTs/dir: iknp {} → silent {} ({off_ratio:.1}x less offline traffic)",
+        fmt_bytes(off_iknp as f64),
+        fmt_bytes(off_silent as f64),
+    );
+
     let report = Json::obj(vec![
-        ("bench", "bench_e2e_pr5".into()),
+        ("bench", "bench_e2e_pr10".into()),
         ("smoke", smoke.into()),
         ("model", cfg.name.as_str().into()),
         ("host_threads", host.into()),
@@ -674,6 +778,7 @@ fn main() {
         ("prepare_s", prepare_s.into()),
         ("runs", Json::Arr(runs.iter().map(RunRecord::to_json).collect())),
         ("fused", Json::Arr(fused.iter().map(FusedRecord::to_json).collect())),
+        ("offline", Json::Arr(offline.iter().map(OfflineRecord::to_json).collect())),
         (
             "coalescing",
             Json::obj(vec![
@@ -838,6 +943,33 @@ fn check_regressions(report: &Json, baseline_path: &str) -> Vec<String> {
         );
         if bb != cb {
             failures.push(format!("fused {bkey:?}: online bytes drifted {bb:?} -> {cb:?}"));
+        }
+    }
+    // offline: exact wire bytes per extension mode (host-independent — any
+    // drift means the offline protocol changed; a regression in the silent
+    // mode's count is precisely what this tripwire exists to catch).
+    // Baselines from before the offline sweep have no records here and
+    // simply gate nothing.
+    let off_key = |r: &Json| -> (String, u64) {
+        (
+            r.get("ext").and_then(Json::as_str).unwrap_or("?").to_string(),
+            r.get("rots_per_dir").and_then(Json::as_u64).unwrap_or(0),
+        )
+    };
+    let base_off = base.get("offline").and_then(Json::as_arr).unwrap_or(&[]);
+    let cur_off = report.get("offline").and_then(Json::as_arr).unwrap_or(&[]);
+    for b in base_off {
+        let k = off_key(b);
+        let Some(c) = cur_off.iter().find(|c| off_key(c) == k) else {
+            failures.push(format!("offline record {k:?} missing from current sweep"));
+            continue;
+        };
+        let (bb, cb) = (
+            b.get("offline_bytes").and_then(Json::as_u64),
+            c.get("offline_bytes").and_then(Json::as_u64),
+        );
+        if bb != cb {
+            failures.push(format!("offline {k:?}: offline bytes drifted {bb:?} -> {cb:?}"));
         }
     }
     failures

@@ -24,6 +24,7 @@
 //! - **CipherPrune** — ditto + Π_reduce with β: reduced tokens get n=3
 //!   Taylor SoftMax rows and degree-2 GELU.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,6 +32,7 @@ use crate::fixed::{Fix, RingMat};
 use crate::gates::TripleMode;
 use crate::net::{Chan, TransportSpec};
 use crate::nn::{ModelConfig, ModelWeights, ThresholdSchedule};
+use crate::ot::ExtMode;
 use crate::party::run2_owned_sym_over;
 use crate::protocols::Engine2P;
 use crate::util::WorkerPool;
@@ -53,6 +55,23 @@ pub struct EngineConfig {
     pub he_n: usize,
     /// Beaver-triple generation mode.
     pub triple_mode: TripleMode,
+    /// OT-extension mode for the offline ROT-pool fills: classic IKNP
+    /// (default) or the silent/correlated extension, which cuts offline
+    /// ROT-fill traffic by ~128× (see [`crate::ot::silent`]). Online inline
+    /// fallback always runs IKNP; this only selects how pools fill.
+    pub ext_mode: ExtMode,
+    /// When set, `Session::start` downloads its preprocessing pools from a
+    /// trusted-dealer process at this address instead of running the
+    /// two-party offline protocol (see [`super::dealer`]). Offline
+    /// party-link traffic drops to zero. Only meaningful together with
+    /// [`EngineConfig::preprocess_shape`].
+    pub dealer: Option<String>,
+    /// When set, filled pools spill to / load from versioned files in this
+    /// directory ([`crate::gates::preproc::PreprocSnapshot`]): a session
+    /// whose spill exists skips its offline fill entirely (load is
+    /// bit-identical to the fill that produced the spill). Corrupt or
+    /// mismatched files degrade to a live fill, never a panic.
+    pub preproc_dir: Option<PathBuf>,
     /// Session seed (shares, keys, base OTs).
     pub seed: u64,
     /// PWL segment count for the IRON engine's LUT non-linears. 128 is
@@ -110,6 +129,9 @@ impl EngineConfig {
             schedule: None,
             he_n: crate::he::params::N,
             triple_mode: TripleMode::Ot,
+            ext_mode: ExtMode::default(),
+            dealer: None,
+            preproc_dir: None,
             seed: 0xC1F4E9,
             iron_segments: 128,
             threads: None,
@@ -138,6 +160,27 @@ impl EngineConfig {
 
     pub fn triple_mode(mut self, mode: TripleMode) -> Self {
         self.triple_mode = mode;
+        self
+    }
+
+    /// Select the OT-extension mode for pool fills (see
+    /// [`EngineConfig::ext_mode`]).
+    pub fn ext_mode(mut self, mode: ExtMode) -> Self {
+        self.ext_mode = mode;
+        self
+    }
+
+    /// Download preprocessing from a trusted dealer at `addr` (see
+    /// [`EngineConfig::dealer`]).
+    pub fn dealer(mut self, addr: &str) -> Self {
+        self.dealer = Some(addr.to_string());
+        self
+    }
+
+    /// Spill/load preprocessing pools under `dir` (see
+    /// [`EngineConfig::preproc_dir`]).
+    pub fn preproc_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.preproc_dir = Some(dir.into());
         self
     }
 
@@ -349,6 +392,7 @@ pub fn run_inference(
     let (p0, _p1, transcript) = run2_owned_sym_over(cfg.seed, (ca, cb, chan_t), |ctx| {
         let mut e =
             Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, fix, cfg.resolved_pool());
+        e.mpc.ot.ext_mode = cfg.ext_mode;
         let spec = PipelineSpec::for_kind(cfg.kind, cfg);
         let rc = RunCtx {
             cfg,

@@ -159,6 +159,13 @@
 //!    `--role p1 --connect …`): each process drives one endpoint through
 //!    [`remote::run_party`] against one [`PreparedModel`], with a config
 //!    handshake pinning model/seed/stream equality before the first round.
+//! 4. **Three processes** (`cipherprune dealer` + both parties with
+//!    `--dealer host:port`): a trusted-dealer process ([`dealer`]) streams
+//!    schedule-sized triple/ROT pool shares to both parties, turning the
+//!    offline phase into a pure download — zero offline party-link traffic.
+//!    Trust caveat: the dealer sees correlated randomness only, never
+//!    inputs or anything request-dependent, and must not collude with
+//!    either party (the classic Beaver helper model).
 //!
 //! A transport failure anywhere fails the *request* (typed
 //! `net::NetError` → `anyhow::Error` through [`Session::infer`] and the
@@ -177,6 +184,7 @@
 //! inline `// mpc-lint: allow(<rule>) reason="…"` marker.
 
 pub mod batcher;
+pub mod dealer;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
@@ -187,6 +195,7 @@ pub mod types;
 
 pub use crate::gates::preproc::{PoolStats, PreprocDemand, PreprocReport};
 pub use batcher::{bucket_for, Batch, BatchPolicy, Batcher, RejectReason};
+pub use dealer::{serve_pair as dealer_serve_pair, DealerReport};
 pub use engine::{run_inference, EngineConfig, PreparedModel, RingWeights};
 pub use metrics::MetricsRegistry;
 pub use pipeline::{BlockRun, PipelineSpec};

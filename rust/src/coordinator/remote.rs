@@ -43,7 +43,7 @@ const HS_FIELDS: [&str; 8] = [
     "session seed",
     "engine kind",
     "he_n",
-    "protocol parameters (schedule/triples/segments)",
+    "protocol parameters (schedule/triples/ext/dealer/preproc-dir/segments)",
     "request stream",
     "role",
 ];
@@ -89,9 +89,12 @@ fn stream_hash(batches: &[Vec<BlockRun>]) -> u64 {
 }
 
 /// Everything else protocol-shaping: the resolved θ/β schedule (artifact
-/// files can differ between machines!), the triple mode, LUT segments, and
-/// the preprocessing shape — an offline fill is a two-party protocol, so
-/// one process preprocessing while the other does not would desync the MPC.
+/// files can differ between machines!), the triple mode, the OT-extension
+/// mode, the dealer/spill topology bits, LUT segments, and the
+/// preprocessing shape — an offline fill is a two-party protocol, so one
+/// process preprocessing (or silent-filling, or downloading from a dealer,
+/// or negotiating a spill load) while the other does not would desync the
+/// MPC.
 fn params_hash(model: &PreparedModel, cfg: &EngineConfig) -> u64 {
     let mut h = Sha256::new();
     let sched = cfg.resolved_schedule(model.weights.config.n_layers);
@@ -99,6 +102,9 @@ fn params_hash(model: &PreparedModel, cfg: &EngineConfig) -> u64 {
         h.update(v.to_bits().to_le_bytes());
     }
     h.update(((cfg.triple_mode == crate::gates::TripleMode::Dealer) as u64).to_le_bytes());
+    h.update((cfg.ext_mode as u64).to_le_bytes());
+    h.update((cfg.dealer.is_some() as u64).to_le_bytes());
+    h.update((cfg.preproc_dir.is_some() as u64).to_le_bytes());
     h.update((cfg.iron_segments as u64).to_le_bytes());
     match &cfg.preprocess_shape {
         None => h.update(0u64.to_le_bytes()),
@@ -186,13 +192,46 @@ pub fn run_party(
         let ctx = PartyCtx::new(role, chan, cfg.seed);
         let mut e =
             Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, model.fix, cfg.resolved_pool());
+        e.mpc.ot.ext_mode = cfg.ext_mode;
         let spec = PipelineSpec::for_kind(cfg.kind, cfg);
         let schedule = cfg.resolved_schedule(model.weights.config.n_layers);
         // offline phase, when configured: both processes run it (the
-        // handshake hashed the shape, so they agree) before the first batch
+        // handshake hashed the shape and the topology bits, so they agree)
+        // before the first batch
         if let Some(lens) = &cfg.preprocess_shape {
             let demand = spec.preproc_demand(&model.weights.config, lens);
-            e.mpc.preprocess(&demand);
+            let mut loaded = false;
+            if let Some(dir) = &cfg.preproc_dir {
+                // each process decodes its own spill (corrupt or absent →
+                // None → live fill), then both negotiate: load iff BOTH
+                // hold a valid spill, so the pools always move in lockstep
+                let mine = crate::gates::preproc::PreprocSnapshot::load(
+                    dir,
+                    role.index() as u32,
+                    cfg.seed,
+                )
+                .ok()
+                .flatten();
+                e.mpc.ctx.ch.set_phase("preproc");
+                let theirs = e.mpc.ctx.ch.exchange_u64s(&[mine.is_some() as u64]);
+                if theirs.first() == Some(&1) {
+                    if let Some(snap) = mine {
+                        e.mpc.import_preproc(snap);
+                        loaded = true;
+                    }
+                }
+            }
+            if !loaded {
+                match &cfg.dealer {
+                    Some(addr) => super::dealer::download_preproc(&mut e.mpc, addr, &demand)
+                        .context("downloading preprocessing from the dealer")?,
+                    None => e.mpc.preprocess(&demand),
+                }
+                if let Some(dir) = &cfg.preproc_dir {
+                    // spill for the next run; a failed write is not fatal
+                    let _ = e.mpc.export_preproc().save(dir);
+                }
+            }
         }
         let mut outs = Vec::with_capacity(normalized.len());
         for blocks in &normalized {

@@ -24,11 +24,13 @@
 //! (nonce, content), so a replay is bit-identical to a first-try run.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::net::TransportSpec;
 use crate::nn::{ModelWeights, ThresholdSchedule};
+use crate::ot::ExtMode;
 use crate::util::WorkerPool;
 
 use super::batcher::{Batch, BatchPolicy, Batcher, RejectReason};
@@ -59,6 +61,16 @@ pub struct RouterConfig {
     /// loopback TCP). Results are backend-independent; see
     /// [`EngineConfig::transport`](super::engine::EngineConfig).
     pub transport: TransportSpec,
+    /// OT-extension mode for every session's offline ROT-pool fills (see
+    /// [`EngineConfig::ext_mode`](super::engine::EngineConfig::ext_mode)).
+    pub ext_mode: ExtMode,
+    /// Trusted-dealer address for session preprocessing downloads (see
+    /// [`EngineConfig::dealer`](super::engine::EngineConfig::dealer)).
+    pub dealer: Option<String>,
+    /// Pool spill/load directory (see
+    /// [`EngineConfig::preproc_dir`](super::engine::EngineConfig::preproc_dir)).
+    /// Sessions have distinct seeds, so they spill to distinct files.
+    pub preproc_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -70,6 +82,9 @@ impl Default for RouterConfig {
             schedule: None,
             threads: None,
             transport: TransportSpec::Mem,
+            ext_mode: ExtMode::default(),
+            dealer: None,
+            preproc_dir: None,
         }
     }
 }
@@ -148,6 +163,13 @@ impl Router {
         let threads = self.cfg.threads.unwrap_or_else(|| {
             (WorkerPool::auto().threads() / (2 * self.cfg.workers.max(1))).max(1)
         });
+        ec = ec.ext_mode(self.cfg.ext_mode);
+        if let Some(addr) = &self.cfg.dealer {
+            ec = ec.dealer(addr);
+        }
+        if let Some(dir) = &self.cfg.preproc_dir {
+            ec = ec.preproc_dir(dir.clone());
+        }
         ec.threads(threads).transport(self.cfg.transport.clone())
     }
 
@@ -512,6 +534,7 @@ mod tests {
                 schedule: None,
                 threads: None,
                 transport: TransportSpec::Mem,
+                ..Default::default()
             },
         )
     }
@@ -604,6 +627,7 @@ mod tests {
                 schedule: None,
                 threads: None,
                 transport: TransportSpec::Mem,
+                ..Default::default()
             },
         );
         for q in mk_reqs(3, EngineKind::CipherPrune) {

@@ -61,6 +61,7 @@
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -68,7 +69,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::gates::preproc::{PreprocDemand, PreprocReport};
+use crate::gates::preproc::{PreprocDemand, PreprocReport, PreprocSnapshot};
 use crate::net::{panic_to_error, Chan, PhaseStats, SharedTranscript};
 use crate::party::{PartyCtx, PartyId};
 use crate::protocols::Engine2P;
@@ -80,17 +81,28 @@ use super::pipeline::{
 };
 use super::types::{EngineKind, LayerStat, RunResult};
 
-/// Work dispatched to a party thread: an online fused batch, or an offline
-/// preprocessing phase filling the correlated-randomness pools.
+/// Work dispatched to a party thread: an online fused batch, an offline
+/// preprocessing phase filling the correlated-randomness pools, or a pool
+/// spill/import against the persistence layer
+/// ([`crate::gates::preproc::PreprocSnapshot`]).
 enum PartyJob {
     Infer(Vec<BlockRun>),
     Preprocess(PreprocDemand),
+    /// Spill the current pool contents to a versioned file under the dir.
+    Spill(PathBuf),
+    /// Import a pre-decoded snapshot into the pools. The session decodes
+    /// both parties' files *before* dispatching, so the parties can never
+    /// end up with mismatched pools when one file is corrupt.
+    Import(Box<PreprocSnapshot>),
 }
 
 /// What a party thread sends back per job.
 enum PartyReply {
     Batch(Box<BatchPartyOut>),
     Preproc(Box<PreprocReport>),
+    /// Spill/import outcome. Errors are values, not panics: a failed spill
+    /// leaves the live pools intact, so it must NOT poison the session.
+    Pool(Result<Box<PreprocReport>, String>),
 }
 
 /// Outcome of waiting for one party reply under the stall watchdog.
@@ -142,7 +154,15 @@ fn spawn_party(
         // through `ready_tx` instead of killing the process.
         let setup = catch_unwind(AssertUnwindSafe(|| {
             let ctx = PartyCtx::new(id, ch, cfg.seed);
-            Engine2P::with_pool(ctx, cfg.triple_mode, cfg.he_n, model.fix, cfg.resolved_pool())
+            let mut e = Engine2P::with_pool(
+                ctx,
+                cfg.triple_mode,
+                cfg.he_n,
+                model.fix,
+                cfg.resolved_pool(),
+            );
+            e.mpc.ot.ext_mode = cfg.ext_mode;
+            e
         }));
         let mut e = match setup {
             Ok(e) => {
@@ -168,8 +188,29 @@ fn spawn_party(
                     PartyReply::Batch(Box::new(run_pipeline_batch(&mut e, &rc, &spec, &blocks)))
                 }
                 PartyJob::Preprocess(demand) => {
-                    e.mpc.preprocess(&demand);
+                    match &cfg.dealer {
+                        // trusted-dealer topology: the offline phase is a
+                        // pure download over the party's own dealer link —
+                        // zero offline traffic on the party link. A dealer
+                        // failure panics into this job's catch_unwind and
+                        // poisons the session like any transport failure.
+                        Some(addr) => super::dealer::download_preproc(&mut e.mpc, addr, &demand)
+                            .expect("dealer download failed"),
+                        None => e.mpc.preprocess(&demand),
+                    }
                     PartyReply::Preproc(Box::new(e.mpc.preproc_report()))
+                }
+                PartyJob::Spill(dir) => {
+                    let snap = e.mpc.export_preproc();
+                    PartyReply::Pool(
+                        snap.save(&dir)
+                            .map(|_| Box::new(e.mpc.preproc_report()))
+                            .map_err(|err| err.to_string()),
+                    )
+                }
+                PartyJob::Import(snap) => {
+                    e.mpc.import_preproc(*snap);
+                    PartyReply::Pool(Ok(Box::new(e.mpc.preproc_report())))
                 }
             }));
             match out {
@@ -325,11 +366,25 @@ impl Session {
             refill_mark: (0, 0, 0),
         };
         // schedule-sized preprocessing at session start, when configured —
-        // the first request then pays online cost only
+        // the first request then pays online cost only. With a spill dir, a
+        // matching pair of spill files replaces the fill entirely (load is
+        // bit-identical to the fill that produced the spill); corrupt or
+        // absent files degrade to a live fill, which is then spilled for the
+        // next session.
         if let Some(lens) = session.cfg.preprocess_shape.clone() {
-            session
-                .preprocess(&lens)
-                .context("preprocessing at session start")?;
+            let dir = session.cfg.preproc_dir.clone();
+            let loaded = match &dir {
+                Some(d) => session.load_preproc(d).unwrap_or(false),
+                None => false,
+            };
+            if !loaded {
+                session
+                    .preprocess(&lens)
+                    .context("preprocessing at session start")?;
+                if let Some(d) = &dir {
+                    session.spill_preproc(d).context("spilling preprocessed pools")?;
+                }
+            }
         }
         Ok(session)
     }
@@ -447,7 +502,7 @@ impl Session {
             }
             match wait_reply(&tp.out_rx[i], self.cfg.stall_timeout) {
                 Wait::Reply(Ok(PartyReply::Batch(out))) => outs[i] = Some(out),
-                Wait::Reply(Ok(PartyReply::Preproc(_))) => {
+                Wait::Reply(Ok(_)) => {
                     first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
                 }
                 Wait::Reply(Err(e)) => {
@@ -576,7 +631,7 @@ impl Session {
             }
             match wait_reply(&tp.out_rx[i], self.cfg.stall_timeout) {
                 Wait::Reply(Ok(PartyReply::Preproc(report))) => self.last_reports[i] = *report,
-                Wait::Reply(Ok(PartyReply::Batch(_))) => {
+                Wait::Reply(Ok(_)) => {
                     first_err.get_or_insert(format!("P{i} sent a mismatched reply"));
                 }
                 Wait::Reply(Err(e)) => {
@@ -603,6 +658,114 @@ impl Session {
         };
         self.offline_wall_s += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Dispatch one pool job (spill/import) to both parties and collect the
+    /// outcomes. Pool jobs are channel-free (pure local filesystem / memory
+    /// work), so an error here is a *value* and must NOT poison the session
+    /// — the live pools are intact either way. Worker death still poisons.
+    fn pool_job(&mut self, jobs: [PartyJob; 2], what: &str) -> anyhow::Result<()> {
+        let Some(tp) = self.inner.as_mut() else {
+            return Ok(()); // plaintext oracle: no pools
+        };
+        if let Some(msg) = &tp.poisoned {
+            anyhow::bail!("session poisoned by an earlier failure: {msg}");
+        }
+        let mut jobs = jobs.into_iter();
+        let sent = [
+            tp.job_tx[0].send(jobs.next().expect("two jobs")).is_ok(),
+            tp.job_tx[1].send(jobs.next().expect("two jobs")).is_ok(),
+        ];
+        let mut soft_err: Option<String> = None;
+        let mut hard_err: Option<String> = None;
+        for (i, &was_sent) in sent.iter().enumerate() {
+            if !was_sent {
+                hard_err.get_or_insert(format!("P{i} session worker is gone"));
+                continue;
+            }
+            match wait_reply(&tp.out_rx[i], self.cfg.stall_timeout) {
+                Wait::Reply(Ok(PartyReply::Pool(Ok(report)))) => {
+                    self.last_reports[i] = *report;
+                }
+                Wait::Reply(Ok(PartyReply::Pool(Err(msg)))) => {
+                    soft_err.get_or_insert(format!("P{i}: {msg}"));
+                }
+                Wait::Reply(Ok(_)) => {
+                    hard_err.get_or_insert(format!("P{i} sent a mismatched reply"));
+                }
+                Wait::Reply(Err(e)) => {
+                    hard_err.get_or_insert(format!("P{i}: {e:#}"));
+                }
+                Wait::Dead => {
+                    hard_err.get_or_insert(format!("P{i} session worker died in {what}"));
+                }
+                Wait::Stalled(cap) => {
+                    hard_err.get_or_insert(format!("P{i} watchdog: no reply within {cap:?}"));
+                }
+            }
+        }
+        if let Some(msg) = hard_err {
+            tp.poisoned = Some(msg.clone());
+            anyhow::bail!("{what} failed: {msg}");
+        }
+        if let Some(msg) = soft_err {
+            anyhow::bail!("{what} failed: {msg}");
+        }
+        Ok(())
+    }
+
+    /// Spill both parties' current pool contents to versioned files under
+    /// `dir` (see [`crate::gates::preproc::PreprocSnapshot`]); the live
+    /// pools keep serving. A failed spill is an error value — the session
+    /// stays healthy. No-op for the plaintext oracle.
+    pub fn spill_preproc(&mut self, dir: &Path) -> anyhow::Result<()> {
+        self.pool_job(
+            [PartyJob::Spill(dir.to_path_buf()), PartyJob::Spill(dir.to_path_buf())],
+            "pool spill",
+        )
+    }
+
+    /// Load both parties' spilled pools from `dir` into the live pools.
+    /// Returns `Ok(false)` when either party's file is absent (nothing is
+    /// imported — pools must move in lockstep). Both files are decoded and
+    /// validated *before* either party imports, so a corrupt file surfaces
+    /// as a typed [`SpillError`](crate::gates::preproc::SpillError) inside
+    /// the returned error and can never leave the parties mismatched.
+    pub fn load_preproc(&mut self, dir: &Path) -> anyhow::Result<bool> {
+        if self.inner.is_none() {
+            return Ok(false); // plaintext oracle: no pools
+        }
+        let mut snaps = Vec::with_capacity(2);
+        for party in 0..2u32 {
+            match PreprocSnapshot::load(dir, party, self.cfg.seed) {
+                Ok(Some(s)) => snaps.push(s),
+                Ok(None) => return Ok(false),
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("loading P{party} preproc spill")))
+                }
+            }
+        }
+        let p1 = snaps.pop().expect("two snapshots");
+        let p0 = snaps.pop().expect("two snapshots");
+        self.pool_job(
+            [PartyJob::Import(Box::new(p0)), PartyJob::Import(Box::new(p1))],
+            "pool load",
+        )?;
+        Ok(true)
+    }
+
+    /// Cumulative per-phase traffic of the session's party link (setup +
+    /// offline + online so far). The bench uses the `preproc` entry to
+    /// compare offline bytes across extension modes.
+    pub fn phase_stats(&self) -> Vec<(String, PhaseStats)> {
+        self.inner
+            .as_ref()
+            .map(|tp| {
+                let t = tp.transcript.lock().unwrap();
+                t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+            })
+            .unwrap_or_default()
     }
 
     /// Drain-based refill (the background-warmth hook): regenerate exactly

@@ -32,8 +32,23 @@
 //! the *identical* value the inline path would compute (canonical pads), so
 //! preprocessed and on-demand sessions produce bit-identical logits and
 //! prune/reduce decisions — pinned by `tests/preproc.rs`.
+//!
+//! # Persistence
+//!
+//! Filled pools can be **spilled to disk and reloaded** so restarts and
+//! prewarmed shards skip re-running preprocessing: [`PreprocSnapshot`]
+//! captures one party's triples + both ROT pools (pads are nonce-keyed and
+//! therefore never spilled) in a versioned binary file —
+//! `preproc-p{party}-{seed:016x}.bin` under `--preproc-dir` — with a
+//! magic+version header, the (party, session-seed) binding, and a trailing
+//! FNV-1a checksum. Corruption surfaces as the typed [`SpillError`], never
+//! a panic; a missing file is `Ok(None)` so callers fall back to a live
+//! fill. `Mpc::export_preproc`/`import_preproc` move pool contents in and
+//! out; a loaded session drains bit-identically to the session that spilled
+//! (pinned by `tests/silent_ot.rs`).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
 
 use crate::fixed::Ring;
 
@@ -203,6 +218,239 @@ impl PreprocReport {
     }
 }
 
+// ------------------------------------------------------------- persistence
+
+/// File magic of a pool spill (`b"CPPR.sp1"` little-endian).
+pub const SPILL_MAGIC: u64 = u64::from_le_bytes(*b"CPPR.sp1");
+/// Format version; bump on any layout change.
+pub const SPILL_VERSION: u32 = 1;
+
+/// Typed failure of a spill-file load or store — corruption is a value,
+/// never a panic, so a bad `--preproc-dir` file degrades to a live fill.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpillError {
+    /// Underlying filesystem failure (message of the `io::Error`).
+    Io(String),
+    /// The file does not start with [`SPILL_MAGIC`].
+    BadMagic { found: u64 },
+    /// Unsupported [`SPILL_VERSION`].
+    BadVersion { found: u32 },
+    /// The file ends before its declared contents do.
+    Truncated { need: usize, have: usize },
+    /// The trailing FNV-1a checksum does not match the contents.
+    Checksum { stored: u64, computed: u64 },
+    /// The file was spilled by the other party.
+    PartyMismatch { found: u32, want: u32 },
+    /// The file was spilled under a different session seed.
+    SeedMismatch { found: u64, want: u64 },
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::Io(m) => write!(f, "spill i/o: {m}"),
+            SpillError::BadMagic { found } => {
+                write!(f, "spill magic {found:#018x} (want {SPILL_MAGIC:#018x})")
+            }
+            SpillError::BadVersion { found } => {
+                write!(f, "spill version {found} (want {SPILL_VERSION})")
+            }
+            SpillError::Truncated { need, have } => {
+                write!(f, "spill truncated: need {need} bytes, have {have}")
+            }
+            SpillError::Checksum { stored, computed } => {
+                write!(f, "spill checksum {stored:#018x} != computed {computed:#018x}")
+            }
+            SpillError::PartyMismatch { found, want } => {
+                write!(f, "spill is for party {found}, loading as party {want}")
+            }
+            SpillError::SeedMismatch { found, want } => {
+                write!(f, "spill seed {found:#x} != session seed {want:#x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+/// FNV-1a over the serialized bytes (same constants as the wire-content
+/// digest in `net` — cheap, deterministic, dependency-free).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One party's spillable pool contents: Beaver triples and both ROT pools,
+/// bound to the `(party, session seed)` that generated them. Pads are
+/// nonce-keyed (per request) and are deliberately not part of a snapshot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PreprocSnapshot {
+    pub party: u32,
+    pub seed: u64,
+    pub triples: Vec<(Ring, Ring, Ring)>,
+    pub rot_send: Vec<(u128, u128)>,
+    pub rot_recv: Vec<(bool, u128)>,
+}
+
+fn push_u128(buf: &mut Vec<u8>, v: u128) {
+    buf.extend_from_slice(&(v as u64).to_le_bytes());
+    buf.extend_from_slice(&((v >> 64) as u64).to_le_bytes());
+}
+
+/// Little-endian field readers over a byte cursor; every read is
+/// bounds-checked into [`SpillError::Truncated`].
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SpillError> {
+        if self.b.len() - self.at < n {
+            return Err(SpillError::Truncated { need: self.at + n, have: self.b.len() });
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, SpillError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("sized")))
+    }
+
+    fn u64(&mut self) -> Result<u64, SpillError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("sized")))
+    }
+
+    fn u128(&mut self) -> Result<u128, SpillError> {
+        let lo = self.u64()? as u128;
+        let hi = self.u64()? as u128;
+        Ok(lo | (hi << 64))
+    }
+}
+
+impl PreprocSnapshot {
+    /// Canonical spill file name for a `(party, seed)` binding.
+    pub fn file_name(party: u32, seed: u64) -> String {
+        format!("preproc-p{party}-{seed:016x}.bin")
+    }
+
+    /// Serialize: header, triples, ROT pairs, ROT singles, FNV-1a trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(
+            64 + self.triples.len() * 24 + self.rot_send.len() * 32 + self.rot_recv.len() * 17,
+        );
+        buf.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.party.to_le_bytes());
+        buf.extend_from_slice(&self.seed.to_le_bytes());
+        buf.extend_from_slice(&(self.triples.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.rot_send.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.rot_recv.len() as u64).to_le_bytes());
+        for &(a, b, c) in &self.triples {
+            buf.extend_from_slice(&a.to_le_bytes());
+            buf.extend_from_slice(&b.to_le_bytes());
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        for &(m0, m1) in &self.rot_send {
+            push_u128(&mut buf, m0);
+            push_u128(&mut buf, m1);
+        }
+        for &(c, m) in &self.rot_recv {
+            buf.push(c as u8);
+            push_u128(&mut buf, m);
+        }
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    /// Parse + verify a spill file image (magic, version, bounds, checksum).
+    /// The `(party, seed)` binding is checked by [`load`](Self::load), not
+    /// here, so tools can inspect any valid file.
+    pub fn decode(bytes: &[u8]) -> Result<PreprocSnapshot, SpillError> {
+        if bytes.len() < 8 + 8 {
+            return Err(SpillError::Truncated { need: 16, have: bytes.len() });
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("sized"));
+        let mut c = Cursor { b: body, at: 0 };
+        let magic = c.u64()?;
+        if magic != SPILL_MAGIC {
+            return Err(SpillError::BadMagic { found: magic });
+        }
+        let version = c.u32()?;
+        if version != SPILL_VERSION {
+            return Err(SpillError::BadVersion { found: version });
+        }
+        let party = c.u32()?;
+        let seed = c.u64()?;
+        let n_triples = c.u64()? as usize;
+        let n_send = c.u64()? as usize;
+        let n_recv = c.u64()? as usize;
+        // verify the checksum before trusting the counts with allocations
+        let computed = fnv1a(body);
+        if stored != computed {
+            return Err(SpillError::Checksum { stored, computed });
+        }
+        let mut triples = Vec::with_capacity(n_triples);
+        for _ in 0..n_triples {
+            triples.push((c.u64()?, c.u64()?, c.u64()?));
+        }
+        let mut rot_send = Vec::with_capacity(n_send);
+        for _ in 0..n_send {
+            rot_send.push((c.u128()?, c.u128()?));
+        }
+        let mut rot_recv = Vec::with_capacity(n_recv);
+        for _ in 0..n_recv {
+            let ch = c.take(1)?[0] != 0;
+            rot_recv.push((ch, c.u128()?));
+        }
+        if c.at != body.len() {
+            // trailing garbage would silently change the checksum domain of
+            // a rewrite — reject it as corruption
+            return Err(SpillError::Truncated { need: c.at, have: body.len() });
+        }
+        Ok(PreprocSnapshot { party, seed, triples, rot_send, rot_recv })
+    }
+
+    /// Write atomically (`.tmp` + rename) under `dir`; returns the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf, SpillError> {
+        let io = |e: std::io::Error| SpillError::Io(e.to_string());
+        std::fs::create_dir_all(dir).map_err(io)?;
+        let path = dir.join(Self::file_name(self.party, self.seed));
+        let tmp = dir.join(format!("{}.tmp", Self::file_name(self.party, self.seed)));
+        std::fs::write(&tmp, self.encode()).map_err(io)?;
+        std::fs::rename(&tmp, &path).map_err(io)?;
+        Ok(path)
+    }
+
+    /// Load the spill bound to `(party, seed)` from `dir`. `Ok(None)` when
+    /// no such file exists (callers fall back to a live fill); any present
+    /// but unusable file is a typed error.
+    pub fn load(dir: &Path, party: u32, seed: u64) -> Result<Option<PreprocSnapshot>, SpillError> {
+        let path = dir.join(Self::file_name(party, seed));
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(SpillError::Io(e.to_string())),
+        };
+        let snap = Self::decode(&bytes)?;
+        if snap.party != party {
+            return Err(SpillError::PartyMismatch { found: snap.party, want: party });
+        }
+        if snap.seed != seed {
+            return Err(SpillError::SeedMismatch { found: snap.seed, want: seed });
+        }
+        Ok(Some(snap))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::tests::run_mpc;
@@ -360,5 +608,93 @@ mod tests {
         assert_eq!(r1.pads.inline, vals.len() as u64);
         assert_eq!(r1.pads.drained, vals.len() as u64);
         assert_eq!(r1.pads.filled, vals.len() as u64);
+    }
+
+    fn sample_snapshot() -> PreprocSnapshot {
+        PreprocSnapshot {
+            party: 1,
+            seed: 0xC1F4_E9,
+            triples: vec![(1, 2, 3), (u64::MAX, 0, 7)],
+            rot_send: vec![(5u128 << 70, 9), (0, u128::MAX)],
+            rot_recv: vec![(true, 42), (false, 1u128 << 127)],
+        }
+    }
+
+    #[test]
+    fn snapshot_encode_decode_roundtrip() {
+        let s = sample_snapshot();
+        let bytes = s.encode();
+        assert_eq!(PreprocSnapshot::decode(&bytes).expect("decode"), s);
+        // empty snapshot is also a valid file
+        let e = PreprocSnapshot { party: 0, seed: 1, ..Default::default() };
+        assert_eq!(PreprocSnapshot::decode(&e.encode()).expect("decode"), e);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_corruption_typed() {
+        let s = sample_snapshot();
+        let good = s.encode();
+        // magic
+        let mut b = good.clone();
+        b[0] ^= 0xFF;
+        assert!(matches!(
+            PreprocSnapshot::decode(&b),
+            Err(SpillError::BadMagic { .. })
+        ));
+        // version (re-checksum so the version check is what fires)
+        let mut b = good.clone();
+        b[8] = 99;
+        let body_len = b.len() - 8;
+        let sum = fnv1a(&b[..body_len]).to_le_bytes();
+        b[body_len..].copy_from_slice(&sum);
+        assert!(matches!(
+            PreprocSnapshot::decode(&b),
+            Err(SpillError::BadVersion { found: 99 })
+        ));
+        // flipped payload byte → checksum
+        let mut b = good.clone();
+        let mid = b.len() / 2;
+        b[mid] ^= 1;
+        assert!(matches!(
+            PreprocSnapshot::decode(&b),
+            Err(SpillError::Checksum { .. })
+        ));
+        // truncation
+        assert!(matches!(
+            PreprocSnapshot::decode(&good[..10]),
+            Err(SpillError::Truncated { .. })
+        ));
+        let msg = format!("{}", SpillError::Io("nope".into()));
+        assert!(msg.contains("nope"));
+    }
+
+    #[test]
+    fn snapshot_save_load_checks_binding() {
+        let dir = std::env::temp_dir().join(format!(
+            "cipherprune-spill-test-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let s = sample_snapshot();
+        let path = s.save(&dir).expect("save");
+        assert!(path.ends_with(PreprocSnapshot::file_name(1, 0xC1F4_E9)));
+        assert_eq!(
+            PreprocSnapshot::load(&dir, 1, 0xC1F4_E9).expect("load"),
+            Some(s.clone())
+        );
+        // missing file is None, wrong binding is a typed error
+        assert_eq!(PreprocSnapshot::load(&dir, 0, 0xC1F4_E9).expect("absent"), None);
+        let other = PreprocSnapshot { party: 0, ..s };
+        other.save(&dir).expect("save other party");
+        // load(party 0) now finds party 0's own file — rewrite it with a
+        // wrong inner party to hit the binding check
+        let evil = PreprocSnapshot { party: 1, seed: 0xC1F4_E9, ..Default::default() };
+        std::fs::write(dir.join(PreprocSnapshot::file_name(0, 0xC1F4_E9)), evil.encode())
+            .expect("overwrite");
+        assert!(matches!(
+            PreprocSnapshot::load(&dir, 0, 0xC1F4_E9),
+            Err(SpillError::PartyMismatch { found: 1, want: 0 })
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -15,6 +15,11 @@
 //!              (`--role p0 --listen addr` / `--role p1 --connect addr`);
 //!              both processes load the same model and run the same
 //!              deterministic request stream, pinned by a config handshake.
+//! - `dealer` — trusted-dealer third process: serve one (or `--rounds N`)
+//!              preprocessing downloads to a P0+P1 pair (`party --dealer`),
+//!              making the parties' offline phase a pure download. The
+//!              dealer sees only correlated randomness — never inputs,
+//!              weights, or outputs.
 //! - `oracle` — execute the AOT XLA artifact (plaintext path) on an input.
 //! - `info`   — model presets and artifact status.
 //!
@@ -26,6 +31,8 @@
 //!   cipherprune serve-clients --model tiny --listen 127.0.0.1:7450 --shards 2
 //!   cipherprune party --role p0 --listen 127.0.0.1:7441 --model tiny
 //!   cipherprune party --role p1 --connect 127.0.0.1:7441 --model tiny
+//!   cipherprune dealer --listen 127.0.0.1:7442
+//!   cipherprune party --role p0 --listen 127.0.0.1:7441 --dealer 127.0.0.1:7442
 //!   cipherprune oracle
 //!
 //! `run` and `serve` take `--transport mem|tcp|sim|sim-wan` (in-process
@@ -38,6 +45,13 @@
 //! the per-party worker pool for the HE/OT hot paths (default: host-sized,
 //! `THREADS` env overridable). Outputs and transcripts are identical at any
 //! setting; see the coordinator docs ("Performance model") and `bench_e2e`.
+//!
+//! Offline-bandwidth knobs (run/serve/serve-clients/party): `--ext
+//! iknp|silent` picks the OT-extension backend for pool fills; `party
+//! --dealer HOST:PORT` downloads pools from a `cipherprune dealer` process
+//! instead of generating them over the party link; `--preproc-dir DIR`
+//! (run/serve/party) spills filled pools to disk and reloads them on the
+//! next same-seed run. Logits are bit-identical across every combination.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -51,6 +65,7 @@ use cipherprune::coordinator::{
 };
 use cipherprune::net::{new_transcript, Chan, NetModel, TcpTransport, TransportSpec};
 use cipherprune::nn::{ModelConfig, ModelWeights, ThresholdSchedule, Workload};
+use cipherprune::ot::ExtMode;
 use cipherprune::party::PartyId;
 use cipherprune::runtime::{artifact, TensorF32, XlaRuntime};
 use cipherprune::serving::{ServeConfig, Server};
@@ -115,6 +130,14 @@ fn transport_for(kv: &HashMap<String, String>) -> TransportSpec {
     })
 }
 
+fn ext_for(kv: &HashMap<String, String>) -> ExtMode {
+    let name = kv.get("ext").map(String::as_str).unwrap_or("iknp");
+    ExtMode::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown extension mode '{name}' — use iknp|silent");
+        std::process::exit(2);
+    })
+}
+
 fn cmd_run(kv: HashMap<String, String>) {
     let (cfg, weights) = load_model(&kv);
     let engine = kv
@@ -152,9 +175,15 @@ fn cmd_run(kv: HashMap<String, String>) {
             .he_n(he_n)
             .schedule(schedule_for(&cfg))
             .transport(transport.clone())
+            .ext_mode(ext_for(&kv))
             .coalesce(!kv.contains_key("uncoalesced"));
         if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
             ec = ec.threads(t);
+        }
+        if let Some(dir) = kv.get("preproc-dir") {
+            // spill dir implies the offline/online split: pools must be
+            // filled at session start for there to be anything to persist
+            ec = ec.preproc_dir(dir.clone()).preprocess_for(&[sample.ids.len()]);
         }
         if kv.contains_key("preprocess") {
             // offline/online split: pregenerate this request's correlated
@@ -269,6 +298,9 @@ fn cmd_serve(kv: HashMap<String, String>) {
             schedule: Some(schedule_for(&cfg)),
             threads: kv.get("threads").and_then(|v| v.parse().ok()),
             transport: transport_for(&kv),
+            ext_mode: ext_for(&kv),
+            dealer: kv.get("dealer").cloned(),
+            preproc_dir: kv.get("preproc-dir").map(std::path::PathBuf::from),
         },
     );
     // mixed-length workload: half short, half long
@@ -354,6 +386,7 @@ fn cmd_serve_clients(kv: HashMap<String, String>) {
             .and_then(|v| v.parse().ok())
             .map(Duration::from_millis),
         prewarm: Vec::new(),
+        ext_mode: ext_for(&kv),
     };
     if kv.contains_key("prewarm") {
         let engine = kv
@@ -500,9 +533,26 @@ fn cmd_party(kv: HashMap<String, String>) {
         .he_n(he_n)
         .seed(seed)
         .schedule(schedule_for(&cfg))
+        .ext_mode(ext_for(&kv))
         .coalesce(!kv.contains_key("uncoalesced"));
     if let Some(t) = kv.get("threads").and_then(|v| v.parse().ok()) {
         ec = ec.threads(t);
+    }
+    // --preprocess runs the offline fill up front (sized for one batch —
+    // the worst case of this stream; later batches refill inline);
+    // --dealer and --preproc-dir need filled pools to download/persist,
+    // so either implies it. Both processes must pass matching flags: the
+    // handshake hashes the shape and the topology bits.
+    if kv.contains_key("preprocess") || kv.contains_key("dealer") || kv.contains_key("preproc-dir")
+    {
+        let lens: Vec<usize> = batches[0].iter().map(|b| b.ids.len()).collect();
+        ec = ec.preprocess_for(&lens);
+    }
+    if let Some(addr) = kv.get("dealer") {
+        ec = ec.dealer(addr);
+    }
+    if let Some(dir) = kv.get("preproc-dir") {
+        ec = ec.preproc_dir(dir.clone());
     }
 
     match run_party(role, chan, &model, &ec, &batches) {
@@ -529,6 +579,40 @@ fn cmd_party(kv: HashMap<String, String>) {
         Err(e) => {
             eprintln!("party failed: {e:#}");
             std::process::exit(1);
+        }
+    }
+}
+
+/// Trusted-dealer third process: accept a P0+P1 pair and stream them
+/// schedule-sized pool shares (see `coordinator::dealer` for the wire
+/// protocol and trust model — the dealer sees only correlated randomness,
+/// never inputs, weights, or outputs). Follows the same stdout contract as
+/// `party --listen`: the "dealer listening on ADDR" line is flushed the
+/// moment the socket accepts, so drivers can wait for it before starting
+/// the parties.
+fn cmd_dealer(kv: HashMap<String, String>) {
+    let addr = kv.get("listen").map(String::as_str).unwrap_or("127.0.0.1:7442");
+    let rounds = opt_usize(&kv, "rounds", 1).max(1);
+    let (listener, local) = TcpTransport::bind(addr).unwrap_or_else(|e| {
+        eprintln!("dealer: cannot listen on {addr}: {e}");
+        std::process::exit(1);
+    });
+    println!("dealer listening on {local}");
+    std::io::stdout().flush().ok();
+    for round in 0..rounds {
+        match cipherprune::coordinator::dealer_serve_pair(&listener) {
+            Ok(r) => println!(
+                "dealer round {round}: seed {:016x} — {} triples, {}+{} rots, {} streamed",
+                r.seed,
+                r.triples,
+                r.rot_p0s,
+                r.rot_p1s,
+                fmt_bytes(r.bytes as f64),
+            ),
+            Err(e) => {
+                eprintln!("dealer: {e:#}");
+                std::process::exit(1);
+            }
         }
     }
 }
@@ -606,11 +690,12 @@ fn main() {
         Some("serve") => cmd_serve(kv),
         Some("serve-clients") => cmd_serve_clients(kv),
         Some("party") => cmd_party(kv),
+        Some("dealer") => cmd_dealer(kv),
         Some("oracle") => cmd_oracle(kv),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!(
-                "unknown subcommand '{other}' — try run|serve|serve-clients|party|oracle|info"
+                "unknown subcommand '{other}' — try run|serve|serve-clients|party|dealer|oracle|info"
             );
             std::process::exit(2);
         }

@@ -678,6 +678,29 @@ impl Chan {
         self.recv_u64s()
     }
 
+    /// Send u128s as lo/hi u64 halves (ROT messages, pool streams).
+    pub fn send_u128s(&mut self, vs: &[u128]) {
+        let mut buf = Vec::with_capacity(vs.len() * 16);
+        for v in vs {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send_vec(buf);
+    }
+
+    pub fn recv_u128s(&mut self) -> Vec<u128> {
+        let b = self.recv_bytes();
+        if b.len() % 16 != 0 {
+            raise(NetError::Frame(format!("misaligned u128 message: {} bytes", b.len())));
+        }
+        b.chunks_exact(16)
+            .map(|c| {
+                let mut w = [0u8; 16];
+                w.copy_from_slice(c);
+                u128::from_le_bytes(w)
+            })
+            .collect()
+    }
+
     pub fn send_bits(&mut self, bits: &[u8]) {
         self.send_bytes(bits);
     }
@@ -742,6 +765,19 @@ mod tests {
         });
         a.send_u64s(&[7, u64::MAX]);
         assert_eq!(a.recv_u64(), 42);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn typed_u128s() {
+        let (mut a, mut b, _t) = Chan::pair();
+        let h = thread::spawn(move || {
+            let v = b.recv_u128s();
+            assert_eq!(v, vec![7, u128::MAX, 1 << 100]);
+            b.send_u64(1);
+        });
+        a.send_u128s(&[7, u128::MAX, 1 << 100]);
+        assert_eq!(a.recv_u64(), 1);
         h.join().unwrap();
     }
 

@@ -24,6 +24,16 @@
 //! the pool-vs-inline branch always agrees; an empty or undersized pool
 //! falls back to the inline extension unchanged (the pre-split wire format).
 //!
+//! *How* the pools are filled is selectable per engine via
+//! [`ExtMode`]: `Iknp` (default) runs the chunked inline extension below —
+//! 16 offline bytes per ROT — while `Silent` runs the PCG-style
+//! seed-exchange + local-expansion protocol of [`silent`] (~⅛ byte per
+//! ROT; see its module docs for the protocol and its dealer-grade trust
+//! model). The mode changes offline traffic only: pool entry shapes, the
+//! derandomized drain wire format, and the inline online fallback are
+//! identical in both modes, so full-session logits and decisions are
+//! bit-identical across modes.
+//!
 //! # Vectorized kernels
 //!
 //! The 64×64 bit-matrix transpose at the heart of the IKNP extension
@@ -38,7 +48,10 @@
 //! confined to [`simd`] (with `crate::he::simd`) under a documented safety
 //! contract, enforced by mpc-lint's `unsafe` rule.
 
+pub mod silent;
 pub mod simd;
+
+pub use silent::ExtMode;
 
 use crate::gates::preproc::RotPools;
 use crate::net::Chan;
@@ -169,6 +182,12 @@ pub struct OtCtx {
     pool: WorkerPool,
     /// Preprocessed random-OT pools, one per extension direction.
     pub(crate) pools: RotPools,
+    /// Which extension backend [`fill_rot_send`](Self::fill_rot_send)/
+    /// [`fill_rot_recv`](Self::fill_rot_recv) run. Offline-only: the online
+    /// drain and the inline fallback are mode-independent.
+    pub ext_mode: ExtMode,
+    /// Silent-extension state (nonce + correction streams; see [`silent`]).
+    silent: silent::SilentState,
 }
 
 impl OtCtx {
@@ -223,6 +242,8 @@ impl OtCtx {
             tweak: 0,
             pool: WorkerPool::auto(),
             pools: RotPools::default(),
+            ext_mode: ExtMode::default(),
+            silent: silent::SilentState::setup(ctx),
         }
     }
 
@@ -389,13 +410,17 @@ impl OtCtx {
     /// on both parties (it does — it is a compile-time constant).
     const FILL_CHUNK: usize = 1 << 16;
 
-    /// Offline phase, extension-sender side: run the inline extension for
-    /// `n` instances and bank the `(m0, m1)` pairs in the send pool.
+    /// Offline phase, extension-sender side: run the configured extension
+    /// ([`ExtMode`]) for `n` instances and bank the `(m0, m1)` pairs in the
+    /// send pool.
     pub fn fill_rot_send(&mut self, ch: &mut Chan, n: usize) {
         let mut left = n;
         while left > 0 {
             let c = left.min(Self::FILL_CHUNK);
-            let ms = self.rot_send_inline(ch, c);
+            let ms = match self.ext_mode {
+                ExtMode::Iknp => self.rot_send_inline(ch, c),
+                ExtMode::Silent => self.silent_send_chunk(ch, c),
+            };
             self.pools.send.extend(ms);
             left -= c;
         }
@@ -414,9 +439,17 @@ impl OtCtx {
             for i in 0..c {
                 set_bit(&mut cb, i, get_bit(rand_choices, off + i));
             }
-            let ms = self.rot_recv_inline(ch, &cb, c);
-            for (i, m) in ms.into_iter().enumerate() {
-                self.pools.recv.push_back((get_bit(&cb, i), m));
+            match self.ext_mode {
+                ExtMode::Iknp => {
+                    let ms = self.rot_recv_inline(ch, &cb, c);
+                    for (i, m) in ms.into_iter().enumerate() {
+                        self.pools.recv.push_back((get_bit(&cb, i), m));
+                    }
+                }
+                ExtMode::Silent => {
+                    let ms = self.silent_recv_chunk(ch, &cb, c);
+                    self.pools.recv.extend(ms);
+                }
             }
             off += c;
         }

@@ -68,13 +68,13 @@ impl PartyCtx {
     /// same purpose get *identical* streams; protocols split them into
     /// per-party halves deterministically.
     pub fn dealer_prg(&self, purpose: &str) -> AesPrg {
-        let mut h = Sha256::new();
-        h.update(self.dealer_seed.to_le_bytes());
-        h.update(purpose.as_bytes());
-        let d = h.finalize();
-        let mut seed = [0u8; 16];
-        seed.copy_from_slice(&d[..16]);
-        AesPrg::new(seed)
+        dealer_prg_from_seed(self.dealer_seed, purpose)
+    }
+
+    /// The shared session/dealer seed this context was built with (folded
+    /// into config handshakes and the pool-spill file binding).
+    pub fn session_seed(&self) -> u64 {
+        self.dealer_seed
     }
 
     /// 16-byte seed for a party-*private* purpose-labelled stream: unlike
@@ -98,6 +98,20 @@ impl PartyCtx {
     pub fn is_p0(&self) -> bool {
         self.id == PartyId::P0
     }
+}
+
+/// [`PartyCtx::dealer_prg`] without a context: the standalone trusted-dealer
+/// process (`coordinator::dealer`) uses this to fabricate the *exact* streams
+/// both parties derive locally — dealer-streamed pool shares are therefore
+/// bit-identical to locally fabricated dealer-mode material.
+pub fn dealer_prg_from_seed(seed: u64, purpose: &str) -> AesPrg {
+    let mut h = Sha256::new();
+    h.update(seed.to_le_bytes());
+    h.update(purpose.as_bytes());
+    let d = h.finalize();
+    let mut s = [0u8; 16];
+    s.copy_from_slice(&d[..16]);
+    AesPrg::new(s)
 }
 
 /// Run a two-party protocol: `f0` as server P0, `f1` as client P1.

@@ -338,7 +338,8 @@ impl Shard {
         let mut ec = EngineConfig::new(kind)
             .he_n(self.cfg.he_n)
             .seed(seed)
-            .transport(self.cfg.transport.clone());
+            .transport(self.cfg.transport.clone())
+            .ext_mode(self.cfg.ext_mode);
         if let Some(t) = self.cfg.threads {
             ec = ec.threads(t);
         }

@@ -89,6 +89,10 @@ pub struct ServeConfig {
     /// Shapes to prewarm at startup: each shard builds the kind's session
     /// and preprocesses pools for the lengths it would serve.
     pub prewarm: Vec<(EngineKind, Vec<usize>)>,
+    /// OT-extension backend for every shard session's pool fills (the
+    /// dealer/`preproc-dir` topology knobs stay on [`EngineConfig`]/party —
+    /// the in-process front door always self-preprocesses).
+    pub ext_mode: crate::ot::ExtMode,
 }
 
 impl Default for ServeConfig {
@@ -105,6 +109,7 @@ impl Default for ServeConfig {
             max_writer_queue: 1024,
             stall_timeout: None,
             prewarm: Vec::new(),
+            ext_mode: crate::ot::ExtMode::default(),
         }
     }
 }

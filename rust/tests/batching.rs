@@ -170,6 +170,7 @@ fn router_fused_equals_router_solo() {
                 schedule: None,
                 threads: None,
                 transport: TransportSpec::Mem,
+                ..Default::default()
             },
         )
     };

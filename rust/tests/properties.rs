@@ -347,6 +347,7 @@ fn router_answers_every_request_exactly_once() {
                     schedule: None,
                     threads: None,
                     transport: TransportSpec::Mem,
+                    ..Default::default()
                 },
             );
             let n = reqs.len();

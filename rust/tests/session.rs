@@ -116,6 +116,7 @@ fn router_prepares_model_once_across_requests() {
             schedule: None,
             threads: None,
             transport: TransportSpec::Mem,
+            ..Default::default()
         },
     );
     let cfg = ModelConfig::tiny();

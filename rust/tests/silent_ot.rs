@@ -1,0 +1,311 @@
+//! Offline-bandwidth stack, end to end: the silent-OT extension, the
+//! trusted-dealer download, and the persistent pool spill must all be
+//! *invisible* to the online protocol — identical logits and prune/reduce
+//! decisions across every {ExtMode} × {TripleMode} × {fresh, spilled}
+//! combination, with the silent extension crushing offline ROT bytes and
+//! the spill format failing typed (never panicking) on corruption.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cipherprune::coordinator::{
+    dealer_serve_pair, BlockRun, EngineConfig, EngineKind, PreparedModel, PreprocDemand,
+    Session,
+};
+use cipherprune::gates::preproc::{PreprocSnapshot, SpillError};
+use cipherprune::gates::TripleMode;
+use cipherprune::net::{TcpTransport, TransportSpec};
+use cipherprune::ot::ExtMode;
+
+fn setup() -> (Arc<PreparedModel>, Vec<BlockRun>) {
+    let cfg = cipherprune::nn::ModelConfig::tiny();
+    let w = Arc::new(cipherprune::nn::ModelWeights::salient(&cfg, 42));
+    let model = Arc::new(PreparedModel::prepare(w));
+    let items: Vec<BlockRun> = cipherprune::nn::Workload::qnli_like(&cfg, 12)
+        .batch(2, 7)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| BlockRun { nonce: 1 + i as u64, ids: s.ids })
+        .collect();
+    (model, items)
+}
+
+fn ec() -> EngineConfig {
+    EngineConfig::for_tests(EngineKind::CipherPrune)
+}
+
+/// Fresh scratch directory under the system tempdir (unique per test tag;
+/// removed by the test on success).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cipherprune-silent-ot-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn decisions(r: &cipherprune::coordinator::RunResult) -> Vec<(usize, usize)> {
+    r.layer_stats.iter().map(|l| (l.n_kept, l.n_high)).collect()
+}
+
+/// The headline matrix: every way of obtaining correlated randomness —
+/// IKNP or silent extension, OT-generated or dealer-mode triples, freshly
+/// filled or spilled-to-disk-and-reloaded pools — serves the same batch
+/// with bit-identical logits and pruning decisions.
+#[test]
+fn mode_combos_serve_bit_identical_results() {
+    let (model, items) = setup();
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    let mut base = Session::start(model.clone(), ec()).expect("baseline session");
+    let want = base.infer_batch(&items).expect("baseline infer");
+
+    for ext in ExtMode::ALL {
+        for tm in [TripleMode::Ot, TripleMode::Dealer] {
+            for spilled in [false, true] {
+                let tag = format!("{ext:?}-{tm:?}-spilled={spilled}");
+                let cfg = ec().ext_mode(ext).triple_mode(tm);
+                let mut s =
+                    Session::start(model.clone(), cfg.clone()).expect("session");
+                s.preprocess(&lens).expect("preprocess");
+                if spilled {
+                    let dir = scratch(&tag.replace('=', "-"));
+                    s.spill_preproc(&dir).expect("spill");
+                    // a brand-new session loads the spill instead of filling
+                    s = Session::start(model.clone(), cfg).expect("reload session");
+                    assert!(
+                        s.load_preproc(&dir).expect("load"),
+                        "{tag}: both spill files must load"
+                    );
+                    let _ = std::fs::remove_dir_all(&dir);
+                }
+                let got = s.infer_batch(&items).expect("infer");
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.logits, g.logits, "{tag}: logits must be bit-identical");
+                    assert_eq!(decisions(w), decisions(g), "{tag}: decisions must match");
+                }
+                let [p0, _] = s.preproc_reports();
+                assert_eq!(p0.triples.inline, 0, "{tag}: pools must cover the run");
+                assert!(p0.triples.drained > 0, "{tag}: the run must drain the pools");
+            }
+        }
+    }
+}
+
+/// Pool sizes {1, 2, max} per extension mode: undersized pools serve what
+/// they can and fall back inline mid-batch without changing a single bit
+/// of the output; the full dry-run demand covers the run exactly.
+#[test]
+fn undersized_pools_fall_back_inline_per_mode() {
+    let (model, items) = setup();
+    let one = vec![items[0].clone()];
+    let mut base = Session::start(model.clone(), ec()).expect("baseline");
+    let want = base.infer_batch(&one).expect("baseline infer");
+
+    for ext in ExtMode::ALL {
+        let full = {
+            let s = Session::start(model.clone(), ec().ext_mode(ext)).expect("probe");
+            s.preproc_demand(&[one[0].ids.len()])
+        };
+        let tiny = |k: u64| PreprocDemand {
+            triples: k,
+            rot_p0s: k,
+            rot_p1s: k,
+            pad_words: 0,
+        };
+        for (label, demand) in
+            [("1", tiny(1)), ("2", tiny(2)), ("max", full.clone())]
+        {
+            let mut s =
+                Session::start(model.clone(), ec().ext_mode(ext)).expect("session");
+            s.preprocess_with(&demand).expect("preprocess");
+            let got = s.infer_batch(&one).expect("infer");
+            assert_eq!(
+                want[0].logits, got[0].logits,
+                "{ext:?} pool size {label}: fallback must stay bit-identical"
+            );
+            let [p0, _] = s.preproc_reports();
+            assert_eq!(p0.triples.filled, demand.triples, "{ext:?} {label}: fill == demand");
+            assert_eq!(p0.rot_send.filled, demand.rot_p0s);
+            if label == "max" {
+                assert_eq!(p0.triples.inline, 0, "{ext:?}: dry-run demand covers the run");
+                assert_eq!(p0.rot_send.inline, 0);
+            } else {
+                assert!(
+                    p0.triples.inline > 0,
+                    "{ext:?} {label}: an undersized pool must fall back inline"
+                );
+            }
+        }
+    }
+}
+
+/// The point of the silent extension: offline ROT bytes on the party link
+/// drop by well over the 8× the bench tripwire demands (the seed-exchange
+/// plus sparse-correction traffic replaces the dense IKNP u-matrix).
+#[test]
+fn silent_extension_crushes_offline_rot_bytes() {
+    let (model, _) = setup();
+    let rots = PreprocDemand { triples: 0, rot_p0s: 1 << 14, rot_p1s: 1 << 14, pad_words: 0 };
+    let offline_bytes = |ext: ExtMode| -> u64 {
+        let mut s = Session::start(model.clone(), ec().ext_mode(ext)).expect("session");
+        s.preprocess_with(&rots).expect("preprocess");
+        s.phase_stats()
+            .iter()
+            .filter(|(name, _)| name.starts_with("preproc"))
+            .map(|(_, st)| st.bytes)
+            .sum()
+    };
+    let iknp = offline_bytes(ExtMode::Iknp);
+    let silent = offline_bytes(ExtMode::Silent);
+    assert!(iknp > 0 && silent > 0, "both fills must communicate ({iknp} / {silent})");
+    assert!(
+        silent * 8 <= iknp,
+        "silent fill must cut offline ROT bytes ≥8×: silent {silent} vs iknp {iknp}"
+    );
+}
+
+/// Transport invariance of both extension backends at a fixed config: the
+/// whole offline+online wire content (per-endpoint digests) is identical
+/// on mem and real loopback TCP.
+#[test]
+fn pool_fills_are_transport_invariant_per_mode() {
+    let (model, items) = setup();
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    for ext in ExtMode::ALL {
+        let run = |transport: TransportSpec| {
+            let cfg = ec().ext_mode(ext).transport(transport);
+            let mut s = Session::start(model.clone(), cfg).expect("session");
+            s.preprocess(&lens).expect("preprocess");
+            let rs = s.infer_batch(&items).expect("infer");
+            let logits: Vec<Vec<f64>> = rs.iter().map(|r| r.logits.clone()).collect();
+            (logits, s.transcript_digest())
+        };
+        let mem = run(TransportSpec::Mem);
+        let tcp = run(TransportSpec::TcpLoopback);
+        assert_eq!(mem.0, tcp.0, "{ext:?}: logits must not depend on the transport");
+        assert_eq!(mem.1, tcp.1, "{ext:?}: wire content must not depend on the transport");
+    }
+}
+
+/// Spill → load → drain bit-identity: a reloaded session holds exactly the
+/// pool entries the spilling session held, so its run drains the same
+/// counts and reproduces the same bits.
+#[test]
+fn spill_load_drain_is_bit_identical() {
+    let (model, items) = setup();
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+    let dir = scratch("roundtrip");
+
+    let mut a = Session::start(model.clone(), ec()).expect("session A");
+    a.preprocess(&lens).expect("preprocess");
+    a.spill_preproc(&dir).expect("spill");
+    let want = a.infer_batch(&items).expect("infer A");
+    let [a0, _] = a.preproc_reports();
+
+    let mut b = Session::start(model.clone(), ec()).expect("session B");
+    assert!(b.load_preproc(&dir).expect("load"), "spill files must load");
+    {
+        let [b0, _] = b.preproc_reports();
+        assert_eq!(b0.triples_avail, a0.triples.filled, "load banks the full spill");
+        assert_eq!(b0.rot_send_avail, a0.rot_send.filled);
+        assert_eq!(b0.rot_recv_avail, a0.rot_recv.filled);
+    }
+    let got = b.infer_batch(&items).expect("infer B");
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.logits, g.logits, "reloaded pools must reproduce the run");
+        assert_eq!(w.total_stats().bytes, g.total_stats().bytes);
+    }
+    let [b0, _] = b.preproc_reports();
+    assert_eq!(b0.triples.drained, a0.triples.drained, "identical drains");
+    assert_eq!(b0.rot_send.drained, a0.rot_send.drained);
+    assert_eq!(b0.triples.inline, 0, "the loaded pools cover the run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupted or truncated spill file surfaces as a typed [`SpillError`]
+/// inside the session error — no panic, nothing imported (the parties'
+/// pools stay in lockstep), and the session keeps serving.
+#[test]
+fn corrupt_spill_is_a_typed_error_not_a_panic() {
+    let (model, items) = setup();
+    let one = vec![items[0].clone()];
+    let lens = vec![one[0].ids.len()];
+    let dir = scratch("corrupt");
+
+    let mut a = Session::start(model.clone(), ec()).expect("session A");
+    a.preprocess(&lens).expect("preprocess");
+    a.spill_preproc(&dir).expect("spill");
+    let want = a.infer_batch(&one).expect("infer A");
+
+    let p0_file = dir.join(PreprocSnapshot::file_name(0, a.config().seed));
+    let clean = std::fs::read(&p0_file).expect("spill file");
+
+    // bit-flip in the body → checksum failure
+    let mut evil = clean.clone();
+    let mid = evil.len() / 2;
+    evil[mid] ^= 0x40;
+    std::fs::write(&p0_file, &evil).expect("write corrupt");
+    let mut b = Session::start(model.clone(), ec()).expect("session B");
+    let err = b.load_preproc(&dir).expect_err("corrupt spill must be an error");
+    assert!(
+        matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Checksum { .. })),
+        "typed checksum error, got: {err:#}"
+    );
+
+    // truncation → typed truncation/checksum error, still no panic
+    std::fs::write(&p0_file, &clean[..clean.len() / 3]).expect("write truncated");
+    let err = b.load_preproc(&dir).expect_err("truncated spill must be an error");
+    assert!(err.downcast_ref::<SpillError>().is_some(), "typed error, got: {err:#}");
+
+    // nothing was imported and the session still serves, bit-identically
+    let [b0, _] = b.preproc_reports();
+    assert_eq!(b0.triples_avail, 0, "a failed load must import nothing");
+    let got = b.infer_batch(&one).expect("infer after failed load");
+    assert_eq!(want[0].logits, got[0].logits);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Trusted-dealer topology in-process: a dealer thread streams both
+/// parties' pool shares over real TCP, the session's offline phase becomes
+/// a pure download (zero preproc bytes on the party link), and the online
+/// run is bit-identical to a self-preprocessed session's.
+#[test]
+fn dealer_download_matches_self_preprocessed_run() {
+    let (model, items) = setup();
+    let lens: Vec<usize> = items.iter().map(|b| b.ids.len()).collect();
+
+    let mut sp = Session::start(model.clone(), ec()).expect("self-preproc session");
+    let demand = sp.preprocess(&lens).expect("preprocess");
+    let want = sp.infer_batch(&items).expect("infer");
+
+    let (listener, addr) = TcpTransport::bind("127.0.0.1:0").expect("dealer bind");
+    let dealer = std::thread::spawn(move || dealer_serve_pair(&listener));
+
+    let cfg = ec().dealer(&addr.to_string());
+    let mut s = Session::start(model.clone(), cfg).expect("dealer session");
+    s.preprocess(&lens).expect("dealer download");
+    let report = dealer.join().expect("dealer thread").expect("dealer serve");
+    assert_eq!(report.triples, demand.triples, "dealer streamed the full demand");
+    assert_eq!(report.rot_p0s, demand.rot_p0s);
+    assert_eq!(report.rot_p1s, demand.rot_p1s);
+    assert!(report.bytes > 0);
+
+    // the party link itself carried no offline fill traffic — the offline
+    // phase was a pure download on the dealer links
+    let preproc_on_link: u64 = s
+        .phase_stats()
+        .iter()
+        .filter(|(name, _)| name.starts_with("preproc"))
+        .map(|(_, st)| st.bytes)
+        .sum();
+    assert_eq!(preproc_on_link, 0, "dealer offline must not touch the party link");
+
+    let got = s.infer_batch(&items).expect("infer");
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.logits, g.logits, "dealer pools must reproduce the run");
+        assert_eq!(decisions(w), decisions(g));
+    }
+    let [p0, _] = s.preproc_reports();
+    assert_eq!(p0.triples.inline, 0, "the download covered the whole run");
+    assert!(p0.triples.drained > 0);
+}
